@@ -1,0 +1,62 @@
+//! Paper Figs. 2 + 3 — the motivating study.
+//!
+//! Latency (Fig. 2) and normalised memory overhead (Fig. 3) of FG, PKG,
+//! SG, D-C and W-C on the Amazon-Movie-like workload at 16/32/64/128
+//! workers, with D-C/W-C tested at both "top-100" and "top-1000" key
+//! capacities (the paper's D-C100 / D-C1000 / W-C100 / W-C1000 series).
+//!
+//! Paper shape to reproduce: FG/PKG p99 latency blows up with skew;
+//! D-C100/W-C100 improve latency but their memory approaches SG as
+//! workers scale; SG memory overhead grows ~linearly with workers.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use fish::coordinator::SchemeKind;
+use fish::report::{ns, ratio, Table};
+use support::*;
+
+fn main() {
+    println!("=== Paper Figs. 2 & 3: motivating study (AM-like workload) ===\n");
+
+    let mut lat = Table::new(
+        "Fig. 2 — latency (avg / p99) by scheme and worker count",
+        &["workers", "scheme", "avg", "p99"],
+    );
+    let mut mem = Table::new(
+        "Fig. 3 — memory overhead normalised to FG",
+        &["workers", "scheme", "entries", "vs FG"],
+    );
+
+    for &w in &WORKER_SCALES {
+        // (label, scheme, key capacity)
+        let series: [(&str, SchemeKind, usize); 7] = [
+            ("fg", SchemeKind::Field, 1000),
+            ("pkg", SchemeKind::Pkg, 1000),
+            ("sg", SchemeKind::Shuffle, 1000),
+            ("dc100", SchemeKind::DChoices, 100),
+            ("dc1000", SchemeKind::DChoices, 1000),
+            ("wc100", SchemeKind::WChoices, 100),
+            ("wc1000", SchemeKind::WChoices, 1000),
+        ];
+        for (label, kind, cap) in series {
+            let mut cfg = base_config("am", w, 1.5);
+            cfg.key_capacity = cap;
+            let r = run_scheme(cfg, kind);
+            lat.row(&[
+                w.to_string(),
+                label.into(),
+                ns(r.latency.mean() as u64),
+                ns(r.latency.quantile(0.99)),
+            ]);
+            mem.row(&[
+                w.to_string(),
+                label.into(),
+                r.entries.to_string(),
+                ratio(r.memory_normalized),
+            ]);
+        }
+    }
+    finish(&lat, "fig02_latency");
+    finish(&mem, "fig03_memory");
+}

@@ -1,0 +1,39 @@
+//! Paper Fig. 9 — execution time of PKG, D-C, W-C and FISH on the
+//! real-world-like AM and MT workloads, normalised to SG, at
+//! 16/32/64/128 workers.
+//!
+//! Paper shape: FISH ≈ SG (worst case 1.07x); PKG degrades steeply with
+//! worker count (up to 8.32x on MT); D-C/W-C sit between and also
+//! degrade with scale.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use fish::coordinator::SchemeKind;
+use fish::report::{ratio, Table};
+use support::*;
+
+fn main() {
+    println!("=== Paper Fig. 9: execution time vs SG (real-world-like) ===\n");
+    for workload in ["am", "mt"] {
+        let mut t = Table::new(
+            &format!("Fig. 9 ({workload}) — execution time normalised to SG"),
+            &["workers", "pkg", "dc", "wc", "fish"],
+        );
+        for &w in &WORKER_SCALES {
+            let cfg = base_config(workload, w, 1.5);
+            let mut cells = vec![w.to_string()];
+            for kind in [
+                SchemeKind::Pkg,
+                SchemeKind::DChoices,
+                SchemeKind::WChoices,
+                SchemeKind::Fish,
+            ] {
+                let (_r, vs_sg) = run_vs_sg(&cfg, kind);
+                cells.push(ratio(vs_sg));
+            }
+            t.row(&cells);
+        }
+        finish(&t, &format!("fig09_{workload}"));
+    }
+}

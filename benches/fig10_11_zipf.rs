@@ -1,0 +1,51 @@
+//! Paper Figs. 10 + 11 — execution time (vs SG) and memory overhead
+//! (vs FG) on the synthetic time-evolving Zipf dataset, sweeping the
+//! skew exponent z and the worker count.
+//!
+//! Paper shape: the scheme gap widens with workers; PKG worst; D-C/W-C
+//! degrade with skew (up to 13.57x / 12.05x vs FISH); FISH stays within
+//! 1.32x of SG while its memory stays within 1.11–2.61x of FG (SG's
+//! memory reaches 15–88x).
+
+#[path = "support/mod.rs"]
+mod support;
+
+use fish::coordinator::SchemeKind;
+use fish::report::{ratio, Table};
+use support::*;
+
+fn main() {
+    println!("=== Paper Figs. 10 & 11: ZF skew sweep ===\n");
+    let mut exec = Table::new(
+        "Fig. 10 — execution time normalised to SG",
+        &["z", "workers", "pkg", "dc", "wc", "fish"],
+    );
+    let mut mem = Table::new(
+        "Fig. 11 — memory overhead normalised to FG",
+        &["z", "workers", "sg", "pkg", "dc", "wc", "fish"],
+    );
+
+    for &z in &z_values() {
+        for &w in &WORKER_SCALES {
+            let cfg = base_config("zf", w, z);
+            let mut exec_cells = vec![format!("{z:.1}"), w.to_string()];
+            let mut mem_cells = vec![format!("{z:.1}"), w.to_string()];
+            let sg = run_scheme(cfg.clone(), SchemeKind::Shuffle);
+            mem_cells.push(ratio(sg.memory_normalized));
+            for kind in [
+                SchemeKind::Pkg,
+                SchemeKind::DChoices,
+                SchemeKind::WChoices,
+                SchemeKind::Fish,
+            ] {
+                let r = run_scheme(cfg.clone(), kind);
+                exec_cells.push(ratio(r.makespan as f64 / sg.makespan.max(1) as f64));
+                mem_cells.push(ratio(r.memory_normalized));
+            }
+            exec.row(&exec_cells);
+            mem.row(&mem_cells);
+        }
+    }
+    finish(&exec, "fig10_zipf_exec");
+    finish(&mem, "fig11_zipf_memory");
+}

@@ -1,0 +1,43 @@
+//! Paper Fig. 12 — choosing the decay factor α.
+//!
+//! Execution time and memory overhead as a function of skew for
+//! α ∈ {0, 0.2, 0.5, 0.8, 1.0} at several worker counts.
+//!
+//! Paper shape: α = 1 (no decay — lifetime counting) blows up execution
+//! time as skew rises (up to 12.14x vs α = 0.2); α = 0 (forget
+//! everything) costs memory on low-skew data (≈2.65x vs α = 0.2);
+//! α = 0.2 is the sweet spot.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use fish::coordinator::SchemeKind;
+use fish::report::{ratio, Table};
+use support::*;
+
+fn main() {
+    println!("=== Paper Fig. 12: decay factor sweep ===\n");
+    let alphas = [0.0, 0.2, 0.5, 0.8, 1.0];
+    let mut t = Table::new(
+        "Fig. 12 — execution (vs SG) and memory (vs FG) per alpha",
+        &["workers", "z", "alpha", "exec vs SG", "mem vs FG"],
+    );
+    for &w in &[16usize, 128] {
+        for &z in &z_values() {
+            let sg = run_scheme(base_config("zf", w, z), SchemeKind::Shuffle);
+            for &alpha in &alphas {
+                let mut cfg = base_config("zf", w, z);
+                cfg.alpha = alpha;
+                let r = run_scheme(cfg, SchemeKind::Fish);
+                t.row(&[
+                    w.to_string(),
+                    format!("{z:.1}"),
+                    format!("{alpha:.1}"),
+                    ratio(r.makespan as f64 / sg.makespan.max(1) as f64),
+                    ratio(r.memory_normalized),
+                ]);
+            }
+        }
+    }
+    finish(&t, "fig12_alpha");
+}

@@ -1,0 +1,43 @@
+//! Paper Fig. 13 — choosing the hot-key threshold θ.
+//!
+//! θ ∈ {2/n, 1/2n, 1/4n, 1/8n} (expressed via the numerator: 2, 0.5,
+//! 0.25, 0.125) across skew and worker counts.
+//!
+//! Paper shape: only θ = 2/n shows significant load imbalance; smaller
+//! thresholds are equivalent on latency while 1/8n costs extra memory at
+//! large n and low skew → the paper picks 1/4n.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use fish::coordinator::SchemeKind;
+use fish::report::{ratio, Table};
+use support::*;
+
+fn main() {
+    println!("=== Paper Fig. 13: hot-key threshold sweep ===\n");
+    let thetas: [(f64, &str); 4] =
+        [(2.0, "2/n"), (0.5, "1/2n"), (0.25, "1/4n"), (0.125, "1/8n")];
+    let mut t = Table::new(
+        "Fig. 13 — execution (vs SG) and memory (vs FG) per theta",
+        &["workers", "z", "theta", "exec vs SG", "mem vs FG"],
+    );
+    for &w in &[16usize, 128] {
+        for &z in &z_values() {
+            let sg = run_scheme(base_config("zf", w, z), SchemeKind::Shuffle);
+            for &(num, label) in &thetas {
+                let mut cfg = base_config("zf", w, z);
+                cfg.theta_num = num;
+                let r = run_scheme(cfg, SchemeKind::Fish);
+                t.row(&[
+                    w.to_string(),
+                    format!("{z:.1}"),
+                    label.into(),
+                    ratio(r.makespan as f64 / sg.makespan.max(1) as f64),
+                    ratio(r.memory_normalized),
+                ]);
+            }
+        }
+    }
+    finish(&t, "fig13_theta");
+}

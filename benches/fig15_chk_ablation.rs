@@ -1,0 +1,59 @@
+//! Paper Fig. 15 — effectiveness of hot-key classification (CHK).
+//!
+//! FISH's frequency-proportional ladder (CHK) vs the same pipeline with
+//! W-C-style classification (every hot key on all workers) and D-C-style
+//! (same fixed d for every hot key).
+//!
+//! Paper shape: w/W-C inflates memory (FISH saves 25–45% at 64/128
+//! workers); w/D-C can use slightly less memory but pays execution time.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use fish::coordinator::fish::ChkMode;
+use fish::coordinator::{Fish, Grouper, SchemeKind};
+use fish::engine::{sim::Simulator, Topology};
+use fish::report::{ratio, Table};
+use support::*;
+
+fn run_mode(cfg: &fish::config::Config, mode: Option<ChkMode>) -> fish::engine::SimResult {
+    let topology = Topology::from_config(cfg);
+    let sources: Vec<Box<dyn Grouper>> = (0..cfg.sources)
+        .map(|s| -> Box<dyn Grouper> {
+            match mode {
+                None => fish::coordinator::make_kind(SchemeKind::Fish, cfg, s),
+                Some(m) => Box::new(Fish::from_config(cfg, s).with_chk_mode(m)),
+            }
+        })
+        .collect();
+    let mut sim = Simulator::new(topology, sources, cfg.interarrival_ns);
+    let mut gen = fish::workload::by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
+    sim.run(gen.as_mut())
+}
+
+fn main() {
+    println!("=== Paper Fig. 15: CHK ablation ===\n");
+    let mut t = Table::new(
+        "Fig. 15 — memory (vs CHK) and execution (vs SG) per strategy",
+        &["workers", "z", "strategy", "mem vs CHK", "exec vs SG"],
+    );
+    for &w in &[64usize, 128] {
+        for &z in &z_values() {
+            let cfg = base_config("zf", w, z);
+            let sg = run_scheme(cfg.clone(), SchemeKind::Shuffle);
+            let chk = run_mode(&cfg, None);
+            let wc = run_mode(&cfg, Some(ChkMode::AllWorkers));
+            let dc = run_mode(&cfg, Some(ChkMode::FixedD(4)));
+            for (label, r) in [("chk", &chk), ("w/W-C", &wc), ("w/D-C", &dc)] {
+                t.row(&[
+                    w.to_string(),
+                    format!("{z:.1}"),
+                    label.into(),
+                    ratio(r.entries as f64 / chk.entries.max(1) as f64),
+                    ratio(r.makespan as f64 / sg.makespan.max(1) as f64),
+                ]);
+            }
+        }
+    }
+    finish(&t, "fig15_chk");
+}

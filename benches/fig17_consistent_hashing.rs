@@ -1,0 +1,67 @@
+//! Paper Fig. 17 — effectiveness of consistent hashing under worker
+//! churn.
+//!
+//! A worker is added (a) or removed (b) at the halfway point; FISH with
+//! the consistent-hash ring vs FISH with modulo hashing, across skew.
+//!
+//! Paper shape: without CH, low-skew streams pay ≈2x the memory overhead
+//! (every key-to-worker mapping shifts); high-skew streams pay less
+//! because hot keys were already replicated on many workers.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use fish::coordinator::fish::CandidateMode;
+use fish::coordinator::{Fish, Grouper};
+use fish::engine::{sim::Simulator, ChurnEvent, Topology};
+use fish::report::{ratio, Table};
+use support::*;
+
+fn run_mode(
+    cfg: &fish::config::Config,
+    mode: CandidateMode,
+    churn: Vec<(usize, ChurnEvent)>,
+) -> fish::engine::SimResult {
+    let topology =
+        Topology::from_config(cfg).with_churn(churn, cfg.service_ns as f64);
+    let sources: Vec<Box<dyn Grouper>> = (0..cfg.sources)
+        .map(|s| Box::new(Fish::from_config(cfg, s).with_mode(mode)) as Box<dyn Grouper>)
+        .collect();
+    let mut sim = Simulator::new(topology, sources, cfg.interarrival_ns);
+    let mut gen = fish::workload::by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
+    sim.run(gen.as_mut())
+}
+
+fn main() {
+    println!("=== Paper Fig. 17: consistent hashing under churn ===\n");
+    let mut t = Table::new(
+        "Fig. 17 — memory entries with/without CH (churn at 50%)",
+        &["scenario", "z", "w/ CH", "w/o CH", "w/o / w/", "migrated w/CH", "migrated w/o"],
+    );
+    for (scenario, mk) in [
+        ("add", Box::new(|cfg: &fish::config::Config| {
+            vec![(cfg.tuples / 2, ChurnEvent::Add(cfg.workers))]
+        }) as Box<dyn Fn(&fish::config::Config) -> Vec<(usize, ChurnEvent)>>),
+        ("remove", Box::new(|cfg: &fish::config::Config| {
+            vec![(cfg.tuples / 2, ChurnEvent::Remove(cfg.workers / 2))]
+        })),
+    ] {
+        for &z in &z_values() {
+            let mut cfg = base_config("zf", 32, z);
+            cfg.tuples = (sim_tuples() / 2).max(100_000);
+            let churn = mk(&cfg);
+            let ch = run_mode(&cfg, CandidateMode::ConsistentHash, churn.clone());
+            let nch = run_mode(&cfg, CandidateMode::ModuloHash, churn);
+            t.row(&[
+                scenario.into(),
+                format!("{z:.1}"),
+                ch.entries.to_string(),
+                nch.entries.to_string(),
+                ratio(nch.entries as f64 / ch.entries.max(1) as f64),
+                ch.churn_migrations.to_string(),
+                nch.churn_migrations.to_string(),
+            ]);
+        }
+    }
+    finish(&t, "fig17_ch");
+}

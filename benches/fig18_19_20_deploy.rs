@@ -1,0 +1,115 @@
+//! Paper Figs. 18 + 19 + 20 — the "practical deployment on Apache
+//! Storm" experiments, on our threaded runtime engine (the Storm
+//! stand-in): 128 workers, MT-like and AM-like workloads.
+//!
+//! * Fig. 18 — end-to-end latency (avg / p50 / p95 / p99) per scheme.
+//! * Fig. 19 — throughput per scheme.
+//! * Fig. 20 — FISH memory overhead relative to SG across skew.
+//!
+//! Paper shape: FG lowest throughput & worst tail; FISH ≈ SG on both
+//! latency and throughput (paper: −87.12% avg / −76.34% p99 vs W-C,
+//! 1.32x W-C throughput) at a few percent of SG's memory.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use fish::coordinator::{make_kind, Grouper, SchemeKind};
+use fish::engine::rt::{run, RtOptions};
+use fish::report::{f2, ns, ratio, Table};
+use std::sync::Arc;
+use support::*;
+
+fn main() {
+    println!("=== Paper Figs. 18-20: practical deployment (threaded runtime) ===\n");
+    // scaled: 8 sources, 64 workers (paper: 32 x 128; thread budget)
+    let sources_n = 8;
+    let workers = 64;
+    let tuples = 150_000 * scale();
+
+    let mut lat = Table::new(
+        "Fig. 18 — end-to-end latency per scheme",
+        &["workload", "scheme", "avg", "p50", "p95", "p99"],
+    );
+    let mut thr = Table::new(
+        "Fig. 19 — throughput per scheme",
+        &["workload", "scheme", "tuples/s", "vs SG"],
+    );
+
+    for workload in ["mt", "am"] {
+        let mut cfg = base_config(workload, workers, 1.5);
+        cfg.tuples = tuples;
+        cfg.sources = sources_n;
+        cfg.service_ns = 1_500;
+        cfg.interval = 2_000_000; // 2ms HWA interval on the wall clock
+        let mut gen = fish::workload::by_name(workload, tuples, 1.5, cfg.seed);
+        let trace = Arc::new(fish::workload::materialise(gen.as_mut(), 0));
+        let opts = RtOptions {
+            queue_depth: 1024,
+            per_tuple_ns: vec![cfg.service_ns as f64],
+            interarrival_ns: 0,
+        };
+        let mut sg_thr = None;
+        for kind in SchemeKind::all() {
+            let sources: Vec<Box<dyn Grouper>> =
+                (0..sources_n).map(|s| make_kind(kind, &cfg, s)).collect();
+            let r = run(&trace, sources, workers, &opts);
+            let (mean, p50, p95, p99) = r.latency.summary();
+            if kind == SchemeKind::Shuffle {
+                sg_thr = Some(r.throughput);
+            }
+            lat.row(&[
+                workload.into(),
+                kind.name().into(),
+                ns(mean as u64),
+                ns(p50),
+                ns(p95),
+                ns(p99),
+            ]);
+            thr.row(&[
+                workload.into(),
+                kind.name().into(),
+                format!("{:.0}", r.throughput),
+                sg_thr
+                    .map(|t| ratio(r.throughput / t))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    finish(&lat, "fig18_latency");
+    finish(&thr, "fig19_throughput");
+
+    // Fig. 20: FISH memory relative to SG across skew (runtime state)
+    let mut mem = Table::new(
+        "Fig. 20 — FISH memory overhead relative to SG (ZF)",
+        &["z", "fish entries", "sg entries", "fish/sg %"],
+    );
+    for &z in &z_values() {
+        let mut cfg = base_config("zf", workers, z);
+        cfg.tuples = tuples;
+        cfg.sources = sources_n;
+        let mut gen = fish::workload::by_name("zf", tuples, z, cfg.seed);
+        let trace = Arc::new(fish::workload::materialise(gen.as_mut(), 0));
+        let opts = RtOptions {
+            queue_depth: 1024,
+            per_tuple_ns: vec![500.0],
+            interarrival_ns: 0,
+        };
+        let fish_r = {
+            let s: Vec<Box<dyn Grouper>> =
+                (0..sources_n).map(|i| make_kind(SchemeKind::Fish, &cfg, i)).collect();
+            run(&trace, s, workers, &opts)
+        };
+        let sg_r = {
+            let s: Vec<Box<dyn Grouper>> =
+                (0..sources_n).map(|i| make_kind(SchemeKind::Shuffle, &cfg, i)).collect();
+            run(&trace, s, workers, &opts)
+        };
+        mem.row(&[
+            format!("{z:.1}"),
+            fish_r.entries.to_string(),
+            sg_r.entries.to_string(),
+            f2(100.0 * fish_r.entries as f64 / sg_r.entries.max(1) as f64),
+        ]);
+    }
+    finish(&mem, "fig20_memory_vs_sg");
+}

@@ -1,0 +1,106 @@
+//! Hot-path micro-benchmarks (the §Perf workhorse, not a paper figure).
+//!
+//! * `route()` ns/op for every grouping scheme (the L3 per-tuple cost).
+//! * identifier throughput: native Alg. 1 vs the XLA count-min path
+//!   (AOT Pallas kernel via PJRT), amortised per tuple.
+//!
+//! Methodology: warm up, then N timed iterations over a pre-generated
+//! key stream; report ns/op and Mops. Used to drive the EXPERIMENTS.md
+//! §Perf before/after log.
+
+#[path = "support/mod.rs"]
+mod support;
+
+use fish::config::Config;
+use fish::coordinator::fish::{EpochIdentifier, Identifier};
+use fish::coordinator::{make_kind, ClusterView, SchemeKind};
+use fish::report::{f2, Table};
+use std::time::Instant;
+
+fn bench_route(kind: SchemeKind, workers: usize, keys: &[u64]) -> f64 {
+    let mut cfg = Config::default();
+    cfg.workers = workers;
+    let mut g = make_kind(kind, &cfg, 0);
+    let worker_ids: Vec<usize> = (0..workers).collect();
+    let times = vec![1_000.0; workers];
+    // warmup
+    for (i, &k) in keys.iter().take(keys.len() / 10).enumerate() {
+        let view = ClusterView {
+            now: i as u64,
+            workers: &worker_ids,
+            per_tuple_time: &times,
+            n_slots: workers,
+        };
+        std::hint::black_box(g.route(k, &view));
+    }
+    let start = Instant::now();
+    for (i, &k) in keys.iter().enumerate() {
+        let view = ClusterView {
+            now: i as u64 * 100,
+            workers: &worker_ids,
+            per_tuple_time: &times,
+            n_slots: workers,
+        };
+        std::hint::black_box(g.route(k, &view));
+    }
+    start.elapsed().as_nanos() as f64 / keys.len() as f64
+}
+
+fn bench_identifier_native(keys: &[u64], epoch: usize, cap: usize) -> f64 {
+    let mut id = EpochIdentifier::new(cap, epoch, 0.2);
+    let start = Instant::now();
+    for &k in keys {
+        id.observe(k);
+        std::hint::black_box(id.estimate(k));
+    }
+    start.elapsed().as_nanos() as f64 / keys.len() as f64
+}
+
+fn bench_identifier_xla(keys: &[u64], cap: usize) -> Option<f64> {
+    let mut id = fish::runtime::XlaIdentifier::new("artifacts", cap, 1024, 0.2).ok()?;
+    // warmup: one epoch to compile-hot the path
+    for &k in keys.iter().take(id.epoch_len()) {
+        id.observe(k);
+    }
+    let start = Instant::now();
+    for &k in keys {
+        id.observe(k);
+        std::hint::black_box(id.estimate(k));
+    }
+    Some(start.elapsed().as_nanos() as f64 / keys.len() as f64)
+}
+
+fn main() {
+    println!("=== hot-path micro-benchmarks ===\n");
+    let n = 400_000 * support::scale();
+    let mut gen = fish::workload::by_name("zf", n, 1.5, 3);
+    let keys: Vec<u64> = (0..n).map(|i| gen.key_at(i)).collect();
+
+    let mut t = Table::new("route() cost per scheme", &["scheme", "workers", "ns/op", "Mops"]);
+    for kind in SchemeKind::all() {
+        for &w in &[16usize, 128] {
+            let ns = bench_route(kind, w, &keys);
+            t.row(&[
+                kind.name().into(),
+                w.to_string(),
+                f2(ns),
+                f2(1_000.0 / ns),
+            ]);
+        }
+    }
+    support::finish(&t, "hotpath_route");
+
+    let mut t2 = Table::new(
+        "identifier cost per tuple (observe + estimate)",
+        &["backend", "ns/op", "Mops"],
+    );
+    let native = bench_identifier_native(&keys, 1000, 1000);
+    t2.row(&["native (Alg. 1)".into(), f2(native), f2(1_000.0 / native)]);
+    match bench_identifier_xla(&keys[..(100_000.min(keys.len()))], 1000) {
+        Some(xla) => {
+            t2.row(&["xla-cms (PJRT)".into(), f2(xla), f2(1_000.0 / xla)]);
+        }
+        None => println!("[xla-cms skipped: run `make artifacts` first]"),
+    }
+    support::finish(&t2, "hotpath_identifier");
+}

@@ -1,0 +1,81 @@
+//! Shared support for the figure-reproduction benches.
+//!
+//! Every bench is a `harness = false` binary: it runs the experiment grid
+//! for one paper figure, prints the same rows/series the paper reports,
+//! and saves a CSV under `bench_out/` (override via `FISH_BENCH_OUT`).
+//!
+//! Scale: defaults are sized to finish the whole `cargo bench` suite in
+//! minutes on a laptop. `FISH_BENCH_SCALE=4` multiplies tuple counts
+//! (the paper's full 50M-tuple runs ≈ scale 100).
+
+use fish::config::Config;
+use fish::coordinator::SchemeKind;
+use fish::engine::sim::{run_config, SimResult};
+
+/// Worker scales used across the paper's figures.
+pub const WORKER_SCALES: [usize; 4] = [16, 32, 64, 128];
+
+/// Zipf exponents (paper: 1.0..=2.0; we sample the ends and middle by
+/// default — `FISH_BENCH_FULL_Z=1` runs all eleven).
+pub fn z_values() -> Vec<f64> {
+    if std::env::var("FISH_BENCH_FULL_Z").is_ok() {
+        (0..=10).map(|i| 1.0 + i as f64 * 0.1).collect()
+    } else {
+        vec![1.0, 1.5, 2.0]
+    }
+}
+
+/// Tuple-count scale factor.
+pub fn scale() -> usize {
+    std::env::var("FISH_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Baseline tuple count for simulator benches.
+pub fn sim_tuples() -> usize {
+    200_000 * scale()
+}
+
+/// A base config tuned so arrivals keep `workers` busy without
+/// unbounded queue growth (arrival rate ≈ aggregate service rate).
+pub fn base_config(workload: &str, workers: usize, z: f64) -> Config {
+    let mut cfg = Config::default();
+    cfg.workload = workload.into();
+    cfg.tuples = sim_tuples();
+    cfg.zipf_z = z;
+    cfg.workers = workers;
+    cfg.sources = 4;
+    cfg.service_ns = 1_000;
+    cfg.interarrival_ns = (cfg.service_ns / workers as u64).max(1);
+    // K_max proportional to the key space, as in the paper (1000 counters
+    // over 0.1–0.39M keys ≈ 0.3–1%); our scaled streams have ~2–100k keys.
+    cfg.key_capacity = 200;
+    cfg
+}
+
+/// Run one scheme on a config.
+pub fn run_scheme(mut cfg: Config, kind: SchemeKind) -> SimResult {
+    cfg.scheme = kind;
+    run_config(&cfg)
+}
+
+/// Run SG alongside `kind` and return (result, exec-time ratio vs SG) —
+/// the normalisation the paper uses in Figs. 9, 10.
+pub fn run_vs_sg(cfg: &Config, kind: SchemeKind) -> (SimResult, f64) {
+    let sg = run_scheme(cfg.clone(), SchemeKind::Shuffle);
+    let r = run_scheme(cfg.clone(), kind);
+    let ratio = r.makespan as f64 / sg.makespan.max(1) as f64;
+    (r, ratio)
+}
+
+/// Save + print helper: prints the table and writes `bench_out/<name>.csv`.
+pub fn finish(table: &fish::report::Table, name: &str) {
+    table.print();
+    let path = fish::report::bench_out().join(format!("{name}.csv"));
+    match table.save_csv(&path) {
+        Ok(()) => println!("[saved {}]\n", path.display()),
+        Err(e) => eprintln!("[csv save failed: {e}]\n"),
+    }
+}

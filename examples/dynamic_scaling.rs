@@ -1,0 +1,98 @@
+//! Dynamic worker churn (paper §5 + §6.5): remove and add workers
+//! mid-stream and watch consistent hashing keep state migration small.
+//!
+//! ```bash
+//! cargo run --release --example dynamic_scaling
+//! ```
+
+use fish::config::Config;
+use fish::coordinator::fish::CandidateMode;
+use fish::coordinator::{Fish, Grouper};
+use fish::engine::{sim::Simulator, ChurnEvent, Topology};
+use fish::report::{ratio, Table};
+
+fn run_mode(mode: CandidateMode, churn: Vec<(usize, ChurnEvent)>, cfg: &Config) -> (usize, usize) {
+    let topology = Topology::from_config(cfg).with_churn(churn, cfg.service_ns as f64);
+    let sources: Vec<Box<dyn Grouper>> = (0..cfg.sources)
+        .map(|s| Box::new(Fish::from_config(cfg, s).with_mode(mode)) as Box<dyn Grouper>)
+        .collect();
+    let mut sim = Simulator::new(topology, sources, cfg.interarrival_ns);
+    let mut gen = fish::workload::by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
+    let r = sim.run(gen.as_mut());
+    (r.entries, r.churn_migrations)
+}
+
+fn main() {
+    let mut cfg = Config::default();
+    cfg.workload = "zf".into();
+    cfg.tuples = 300_000;
+    cfg.zipf_z = 1.2;
+    cfg.workers = 32;
+    cfg.sources = 4;
+    cfg.interarrival_ns = cfg.service_ns / cfg.workers as u64 + 1;
+
+    println!(
+        "dynamic scaling: {} tuples, {} workers, churn at the halfway point\n",
+        cfg.tuples, cfg.workers
+    );
+
+    let mut table = Table::new(
+        "consistent hashing vs modulo hashing under churn (paper Fig. 17)",
+        &["scenario", "candidates", "state entries", "vs CH", "migrated entries"],
+    );
+
+    for (scenario, churn) in [
+        ("remove 1 worker", vec![(150_000usize, ChurnEvent::Remove(7))]),
+        ("add 1 worker", vec![(150_000usize, ChurnEvent::Add(32))]),
+    ] {
+        let (ch_entries, ch_migrated) = run_mode(CandidateMode::ConsistentHash, churn.clone(), &cfg);
+        let (mod_entries, mod_migrated) = run_mode(CandidateMode::ModuloHash, churn.clone(), &cfg);
+        table.row(&[
+            scenario.into(),
+            "consistent-hash".into(),
+            ch_entries.to_string(),
+            ratio(1.0),
+            ch_migrated.to_string(),
+        ]);
+        table.row(&[
+            scenario.into(),
+            "modulo-hash".into(),
+            mod_entries.to_string(),
+            ratio(mod_entries as f64 / ch_entries as f64),
+            mod_migrated.to_string(),
+        ]);
+    }
+    table.print();
+
+    println!(
+        "\nExpected shape: modulo hashing reshuffles (almost) every key-to-worker\n\
+         mapping on churn, inflating replicated state (paper: ~2x for low skew);\n\
+         consistent hashing only remaps the arcs adjacent to the changed worker."
+    );
+
+    // ---- explicit state migration (rust/src/state) ---------------------
+    // Demonstrate the §5 machinery directly: build worker state under CH
+    // placement, kill a worker, compute + apply the migration plan.
+    use fish::hashring::HashRing;
+    use fish::state::{MigrationPlan, StateStore};
+
+    let mut ring = HashRing::new(&(0..cfg.workers).collect::<Vec<_>>(), cfg.vnodes);
+    let mut store = StateStore::new();
+    let mut gen = fish::workload::by_name("zf", 100_000, 1.2, cfg.seed);
+    for i in 0..100_000 {
+        let k = gen.key_at(i);
+        store.record(k, ring.owner(k).unwrap());
+    }
+    let victim = 7;
+    let stranded = store.entries_on(victim);
+    let grand = store.grand_total();
+    ring.remove_worker(victim);
+    let plan = MigrationPlan::compute(&store, &[victim], |k, _| ring.owner(k));
+    plan.apply(&mut store);
+    println!(
+        "\nstate migration after losing worker {victim}: {} entries moved \
+         (exactly the stranded {stranded}), aggregates conserved: {}",
+        plan.cost(),
+        store.grand_total() == grand
+    );
+}

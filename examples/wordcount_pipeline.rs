@@ -1,0 +1,114 @@
+//! End-to-end driver (DESIGN.md §"End-to-end validation"): the full
+//! three-layer system on a real small workload.
+//!
+//! * Layer 1/2: if `artifacts/` is built, FISH runs its frequency
+//!   statistics on the AOT-compiled Pallas count-min kernel via PJRT
+//!   (`--identifier xla-cms`); otherwise it falls back to the native
+//!   identifier.
+//! * Layer 3: the threaded runtime engine (our Storm stand-in) streams a
+//!   real word-count workload — a time-evolving corpus synthesised from
+//!   an embedded vocabulary with news-cycle catchphrase bursts — through
+//!   32 sources × 64 workers with bounded-queue backpressure, and
+//!   reports the paper's §6.6 metrics: latency percentiles, throughput,
+//!   and memory overhead vs Shuffle Grouping.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example wordcount_pipeline
+//! ```
+
+use fish::config::Config;
+use fish::coordinator::{make_kind, Grouper, SchemeKind};
+use fish::engine::rt::{run, RtOptions};
+use fish::report::{ns, ratio, Table};
+use fish::workload::{materialise, Trace};
+use std::sync::Arc;
+
+fn build_sources(cfg: &Config, kind: SchemeKind, use_xla: bool) -> Vec<Box<dyn Grouper>> {
+    (0..cfg.sources)
+        .map(|s| -> Box<dyn Grouper> {
+            if kind == SchemeKind::Fish && use_xla {
+                match fish::runtime::make_fish_xla(cfg) {
+                    Ok(f) => return Box::new(f),
+                    Err(e) => eprintln!("[wordcount] xla identifier unavailable ({e}); native fallback"),
+                }
+            }
+            make_kind(kind, cfg, s)
+        })
+        .collect()
+}
+
+fn main() {
+    // a real small workload: MemeTracker-like word stream, 400k tuples
+    let tuples = 400_000;
+    let mut cfg = Config::default();
+    cfg.workload = "mt".into();
+    cfg.tuples = tuples;
+    cfg.sources = 8; // scaled from the paper's 32 (thread budget)
+    cfg.workers = 64;
+    cfg.service_ns = 2_000;
+    cfg.interval = 2_000_000; // HWA re-estimation every 2ms wall clock
+    cfg.interarrival_ns = 0; // as fast as possible
+
+    let use_xla = std::path::Path::new("artifacts/manifest.txt").exists();
+    println!(
+        "wordcount pipeline: {} tuples (mt workload), {} sources x {} workers, identifier={}",
+        tuples,
+        cfg.sources,
+        cfg.workers,
+        if use_xla { "xla-cms (AOT Pallas CMS via PJRT)" } else { "native (artifacts not built)" }
+    );
+
+    let mut gen = fish::workload::by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
+    let trace: Arc<Trace> = Arc::new(materialise(gen.as_mut(), 0));
+    println!("trace: {} tuples over {} distinct words\n", trace.len(), trace.key_space());
+
+    let opts = RtOptions {
+        queue_depth: 1024,
+        per_tuple_ns: vec![cfg.service_ns as f64],
+        interarrival_ns: 0,
+    };
+
+    let mut table = Table::new(
+        "practical deployment (threaded runtime, paper Figs. 18-20)",
+        &["scheme", "throughput", "mean", "p50", "p95", "p99", "mem vs FG"],
+    );
+    let mut sg_mem = None;
+    let mut fish_row = None;
+    for kind in [
+        SchemeKind::Field,
+        SchemeKind::Pkg,
+        SchemeKind::Shuffle,
+        SchemeKind::DChoices,
+        SchemeKind::WChoices,
+        SchemeKind::Fish,
+    ] {
+        let sources = build_sources(&cfg, kind, use_xla);
+        let r = run(&trace, sources, cfg.workers, &opts);
+        let (mean, p50, p95, p99) = r.latency.summary();
+        if kind == SchemeKind::Shuffle {
+            sg_mem = Some(r.memory_normalized());
+        }
+        if kind == SchemeKind::Fish {
+            fish_row = Some((r.throughput, r.memory_normalized()));
+        }
+        table.row(&[
+            kind.name().to_string(),
+            format!("{:.0}/s", r.throughput),
+            ns(mean as u64),
+            ns(p50),
+            ns(p95),
+            ns(p99),
+            ratio(r.memory_normalized()),
+        ]);
+    }
+    table.print();
+
+    if let (Some((thr, fish_mem)), Some(sg)) = (fish_row, sg_mem) {
+        println!(
+            "\nheadline: FISH throughput {:.0}/s at {:.1}% of SG's memory overhead",
+            thr,
+            100.0 * (fish_mem - 1.0).max(0.0) / (sg - 1.0).max(1e-9)
+        );
+    }
+    println!("(record of this run lives in EXPERIMENTS.md §End-to-end)");
+}

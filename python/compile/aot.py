@@ -1,0 +1,63 @@
+"""AOT entry point: lower every model variant to HLO *text* artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 Rust crate links) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and
+round-trips cleanly — see /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+Writes  artifacts/<variant>.hlo.txt plus artifacts/manifest.txt with the
+shapes the Rust runtime validates against at load time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-file mode: also write the n1024 "
+                         "variant to this exact path")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, n, c, depth, width, tile in model.VARIANTS:
+        fn, example = model.make_variant(n, c, depth, width, tile)
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(
+            f"{name} n={n} c={c} depth={depth} width={width} tile={tile}")
+        print(f"wrote {path} ({len(text)} chars)")
+        if args.out and name == "epoch_stats_n1024":
+            with open(args.out, "w") as f:
+                f.write(text)
+            print(f"wrote {args.out}")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Layer-1 Pallas kernel: count-min-sketch epoch update + candidate query.
+
+The FISH coordinator identifies recent hot keys by maintaining per-epoch
+frequency statistics.  The compute hot-spot is a histogram / sketch update
+over an epoch of ``N`` key ids.  On a GPU one would scatter-add with
+shared-memory atomics; TPUs have neither atomics nor warp shuffles, so the
+kernel recasts the scatter-add as a **one-hot matmul on the MXU**:
+
+    row_d += ones(1, N) @ onehot(h_d(keys), W)            # (1,W)
+
+The one-hot slab for a key tile lives in VMEM (BlockSpec-tiled along N);
+the MXU performs the reduction.  Queries use the transpose of the same
+trick: ``est = onehot(h_d(cands), W) @ row_d.T`` gathers row counts, and
+the count-min estimate is the min over the D hash rows.
+
+All ``pallas_call``s use ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is both the correctness
+path (pytest vs ``ref.py``) and what gets lowered into the AOT HLO
+artifact consumed by the Rust runtime.  DESIGN.md §6 records the VMEM /
+MXU estimates for a real-TPU deployment.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Multiply-shift hash constants (odd 32-bit), one (a, b) pair per CMS row.
+# Keep in sync with rust/src/sketch/countmin.rs.
+HASH_A = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F, 0x165667B1, 0xD3A2646D)
+HASH_B = (0x68E31DA4, 0xB5297A4D, 0x1B56C4E9, 0x8F14ACD5, 0xCA6B27D9, 0x5F356495)
+
+
+def row_hash(keys: jax.Array, row: int, width: int) -> jax.Array:
+    """Bucket index of each key for CMS row ``row`` (width a power of two).
+
+    uint32 multiply-shift: h(k) = ((a*k + b) >> (32 - log2 W)).  Matches the
+    Rust implementation bit-for-bit so the coordinator can swap between the
+    native and XLA identifiers without re-learning sketch contents.
+    """
+    shift = 32 - (width - 1).bit_length()
+    k = keys.astype(jnp.uint32)
+    h = k * jnp.uint32(HASH_A[row]) + jnp.uint32(HASH_B[row])
+    return (h >> jnp.uint32(shift)).astype(jnp.int32)
+
+
+def _update_kernel(keys_ref, sketch_ref, out_ref, *, depth: int, width: int,
+                   tile: int):
+    """Grid step ``i`` accumulates key tile ``i`` into all D sketch rows."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = sketch_ref[...]
+
+    keys = keys_ref[...]  # (tile,) int32 — current BlockSpec tile
+    ones = jnp.ones((1, tile), dtype=jnp.float32)
+    for d in range(depth):
+        buckets = row_hash(keys, d, width)  # (tile,)
+        onehot = (buckets[:, None] == jnp.arange(width, dtype=jnp.int32)[None, :])
+        onehot = onehot.astype(jnp.float32)  # (tile, W) VMEM slab
+        # MXU reduction: (1,tile) @ (tile,W) -> (1,W)
+        row_add = jnp.dot(ones, onehot, preferred_element_type=jnp.float32)
+        out_ref[d, :] = out_ref[d, :] + row_add[0]
+
+
+def cms_update(sketch: jax.Array, keys: jax.Array, *, tile: int = 128) -> jax.Array:
+    """Add one epoch of ``keys`` (int32[N]) into ``sketch`` (f32[D,W]).
+
+    N must be a multiple of ``tile``; the AOT path pads epochs with the
+    sentinel key -1 which hashes like any other key — the Rust side masks
+    sentinels out by subtracting the pad count, see model.epoch_stats.
+    """
+    depth, width = sketch.shape
+    n = keys.shape[0]
+    assert n % tile == 0, f"epoch {n} not a multiple of tile {tile}"
+    grid = n // tile
+    kernel = functools.partial(_update_kernel, depth=depth, width=width, tile=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),       # key tile i
+            pl.BlockSpec((depth, width), lambda i: (0, 0)),  # whole sketch
+        ],
+        out_specs=pl.BlockSpec((depth, width), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((depth, width), jnp.float32),
+        interpret=True,
+    )(keys, sketch)
+
+
+def _query_kernel(cands_ref, sketch_ref, out_ref, *, depth: int, width: int):
+    cands = cands_ref[...]  # (C,)
+    c = cands.shape[0]
+    est = jnp.full((c,), jnp.inf, dtype=jnp.float32)
+    for d in range(depth):
+        buckets = row_hash(cands, d, width)  # (C,)
+        onehot = (buckets[:, None] == jnp.arange(width, dtype=jnp.int32)[None, :])
+        onehot = onehot.astype(jnp.float32)  # (C, W)
+        # gather row counts via MXU: (C,W) @ (W,1) -> (C,1)
+        got = jnp.dot(onehot, sketch_ref[d, :][:, None],
+                      preferred_element_type=jnp.float32)
+        est = jnp.minimum(est, got[:, 0])
+    out_ref[...] = est
+
+
+def cms_query(sketch: jax.Array, cands: jax.Array) -> jax.Array:
+    """Count-min estimate (min over rows) for candidate keys int32[C]."""
+    depth, width = sketch.shape
+    c = cands.shape[0]
+    kernel = functools.partial(_query_kernel, depth=depth, width=width)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.float32),
+        interpret=True,
+    )(cands, sketch)
+
+
+def cms_decay(sketch: jax.Array, alpha: jax.Array) -> jax.Array:
+    """Inter-epoch hotness decay: every counter ×= alpha (paper Alg. 1)."""
+
+    def kernel(sketch_ref, alpha_ref, out_ref):
+        out_ref[...] = sketch_ref[...] * alpha_ref[0]
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(sketch.shape, jnp.float32),
+        interpret=True,
+    )(sketch, alpha)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the Pallas CMS kernels (no pallas, no tricks).
+
+pytest compares every kernel in cms.py against these; hypothesis sweeps
+shapes, dtypes and key distributions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .cms import HASH_A, HASH_B
+
+
+def row_hash_ref(keys: jax.Array, row: int, width: int) -> jax.Array:
+    shift = 32 - (width - 1).bit_length()
+    k = keys.astype(jnp.uint32)
+    h = k * jnp.uint32(HASH_A[row]) + jnp.uint32(HASH_B[row])
+    return (h >> jnp.uint32(shift)).astype(jnp.int32)
+
+
+def cms_update_ref(sketch: jax.Array, keys: jax.Array) -> jax.Array:
+    depth, width = sketch.shape
+    out = sketch
+    for d in range(depth):
+        buckets = row_hash_ref(keys, d, width)
+        hist = jnp.zeros((width,), jnp.float32).at[buckets].add(1.0)
+        out = out.at[d, :].add(hist)
+    return out
+
+
+def cms_query_ref(sketch: jax.Array, cands: jax.Array) -> jax.Array:
+    depth, width = sketch.shape
+    est = jnp.full((cands.shape[0],), jnp.inf, jnp.float32)
+    for d in range(depth):
+        buckets = row_hash_ref(cands, d, width)
+        est = jnp.minimum(est, sketch[d, buckets])
+    return est
+
+
+def cms_decay_ref(sketch: jax.Array, alpha: jax.Array) -> jax.Array:
+    return sketch * alpha[0]
+
+
+def epoch_stats_ref(sketch, keys, cands, alpha):
+    """Reference for model.epoch_stats: decay -> update -> query."""
+    decayed = cms_decay_ref(sketch, alpha)
+    updated = cms_update_ref(decayed, keys)
+    est = cms_query_ref(updated, cands)
+    total = jnp.asarray(keys.shape[0], jnp.float32)
+    return updated, est, total

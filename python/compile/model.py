@@ -1,0 +1,55 @@
+"""Layer-2 JAX model: the FISH per-epoch frequency-statistics pipeline.
+
+One jitted function per (epoch size, sketch geometry) variant:
+
+    epoch_stats(sketch, keys, cands, alpha)
+        -> (new_sketch, cand_estimates, epoch_total)
+
+Semantics (paper Alg. 1, epoch granularity):
+  1. inter-epoch hotness decay: sketch *= alpha      (L1 cms_decay)
+  2. intra-epoch counting: sketch += histogram(keys) (L1 cms_update)
+  3. classification input: estimates for the candidate keys the
+     coordinator is tracking                          (L1 cms_query)
+
+The Rust coordinator pads short epochs with the sentinel key -1 and
+corrects estimates on its side.  Lowered once by aot.py to HLO text;
+never imported at request time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cms
+
+# (name, epoch N, candidates C, depth D, width W, tile)
+VARIANTS = (
+    ("epoch_stats_n256", 256, 64, 4, 2048, 128),
+    ("epoch_stats_n1024", 1024, 128, 4, 2048, 128),
+    ("epoch_stats_n4096", 4096, 256, 4, 4096, 128),
+)
+
+
+def epoch_stats(sketch, keys, cands, alpha, *, tile=128):
+    """decay -> update -> query; shapes are static per AOT variant."""
+    decayed = cms.cms_decay(sketch, alpha)
+    updated = cms.cms_update(decayed, keys, tile=tile)
+    est = cms.cms_query(updated, cands)
+    total = jnp.asarray(keys.shape[0], jnp.float32)
+    return updated, est, total
+
+
+def make_variant(n: int, c: int, depth: int, width: int, tile: int):
+    """Return (fn, example_args) for jax.jit(...).lower()."""
+
+    def fn(sketch, keys, cands, alpha):
+        return epoch_stats(sketch, keys, cands, alpha, tile=tile)
+
+    args = (
+        jax.ShapeDtypeStruct((depth, width), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((c,), jnp.int32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )
+    return fn, args

@@ -1,0 +1,120 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+hypothesis sweeps epoch sizes, sketch geometries and key distributions;
+every pallas kernel (interpret=True) must match the pure-jnp oracle.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cms, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+GEOMS = [(1, 256), (2, 512), (4, 2048), (6, 1024)]
+
+
+def rand_keys(rng, n, lo=-1, hi=2**31 - 1):
+    return jnp.asarray(rng.integers(lo, hi, size=n, dtype=np.int64),
+                       dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------- row_hash
+@given(st.integers(0, 5), st.sampled_from([64, 256, 1024, 4096]),
+       st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_row_hash_matches_ref(row, width, seed):
+    rng = np.random.default_rng(seed)
+    keys = rand_keys(rng, 37)
+    got = cms.row_hash(keys, row, width)
+    want = ref.row_hash_ref(keys, row, width)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(jnp.max(got)) < width and int(jnp.min(got)) >= 0
+
+
+def test_row_hash_rust_vector():
+    """Pinned vector shared with rust/src/sketch/countmin.rs tests."""
+    keys = jnp.asarray([0, 1, 42, 123456, -1], dtype=jnp.int32)
+    got = np.asarray(cms.row_hash(keys, 0, 2048))
+    a, b = cms.HASH_A[0], cms.HASH_B[0]
+    want = [((a * int(k) + b) % 2**32) >> 21 for k in
+            np.asarray(keys, dtype=np.uint32)]
+    np.testing.assert_array_equal(got, np.asarray(want, dtype=np.int32))
+
+
+# -------------------------------------------------------------- cms_update
+@pytest.mark.parametrize("depth,width", GEOMS)
+@pytest.mark.parametrize("n", [128, 256, 1024])
+def test_update_matches_ref(depth, width, n):
+    rng = np.random.default_rng(depth * 1000 + n)
+    sketch = jnp.asarray(rng.random((depth, width)), dtype=jnp.float32)
+    keys = rand_keys(rng, n)
+    got = cms.cms_update(sketch, keys)
+    want = ref.cms_update_ref(sketch, keys)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=1e-4)
+
+
+@given(st.integers(1, 8), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_update_mass_conservation(tiles, seed):
+    """Sum of each row increases by exactly N (every key lands once/row)."""
+    rng = np.random.default_rng(seed)
+    n = 128 * tiles
+    sketch = jnp.zeros((4, 1024), jnp.float32)
+    keys = rand_keys(rng, n)
+    got = cms.cms_update(sketch, keys)
+    np.testing.assert_allclose(np.asarray(got).sum(axis=1), n, atol=1e-3)
+
+
+def test_update_skewed_keys():
+    """Heavy repetition (the FISH hot-key case) accumulates correctly."""
+    keys = jnp.asarray([7] * 200 + [11] * 56, dtype=jnp.int32)
+    sketch = jnp.zeros((4, 2048), jnp.float32)
+    got = cms.cms_update(sketch, keys)
+    est = cms.cms_query(got, jnp.asarray([7, 11], jnp.int32))
+    assert float(est[0]) >= 200.0  # CMS overestimates, never under
+    assert float(est[1]) >= 56.0
+
+
+def test_update_rejects_ragged_epoch():
+    with pytest.raises(AssertionError):
+        cms.cms_update(jnp.zeros((4, 2048), jnp.float32),
+                       jnp.zeros((100,), jnp.int32))
+
+
+# --------------------------------------------------------------- cms_query
+@pytest.mark.parametrize("depth,width", GEOMS)
+def test_query_matches_ref(depth, width):
+    rng = np.random.default_rng(99)
+    sketch = jnp.asarray(rng.random((depth, width)) * 100, dtype=jnp.float32)
+    cands = rand_keys(rng, 64)
+    got = cms.cms_query(sketch, cands)
+    want = ref.cms_query_ref(sketch, cands)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_query_never_underestimates(seed):
+    rng = np.random.default_rng(seed)
+    keys = rand_keys(rng, 256, lo=0, hi=50)  # heavy collisions
+    sketch = cms.cms_update(jnp.zeros((4, 256), jnp.float32), keys)
+    uniq, counts = np.unique(np.asarray(keys), return_counts=True)
+    est = cms.cms_query(sketch, jnp.asarray(uniq, jnp.int32))
+    assert np.all(np.asarray(est) >= counts - 1e-3)
+
+
+# --------------------------------------------------------------- cms_decay
+@given(st.floats(0.0, 1.0), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_decay_matches_ref(alpha, seed):
+    rng = np.random.default_rng(seed)
+    sketch = jnp.asarray(rng.random((4, 512)) * 10, dtype=jnp.float32)
+    a = jnp.asarray([alpha], jnp.float32)
+    got = cms.cms_decay(sketch, a)
+    want = ref.cms_decay_ref(sketch, a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)

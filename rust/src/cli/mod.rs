@@ -1,0 +1,203 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Supports `--flag value`, `--flag=value`, bare `--switch`, positionals
+//! and subcommands. The `fish` binary and every bench/example share it.
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Parsed arguments: subcommand, flags, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (if declared as a subcommand position).
+    pub command: Option<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+    /// Remaining positional tokens.
+    pub positionals: Vec<String>,
+}
+
+/// CLI parse error.
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "cli error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `with_command` treats the first
+    /// positional as a subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, with_command: bool) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // `--`: everything after is positional
+                    out.positionals.extend(it);
+                    break;
+                }
+                if let Some(eq) = stripped.find('=') {
+                    out.flags
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.switches.push(stripped.to_string());
+                }
+            } else if with_command && out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(with_command: bool) -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1), with_command)
+    }
+
+    /// Raw flag value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Bare switch present?
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    /// Typed flag with default.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: cannot parse '{v}'"))),
+        }
+    }
+
+    /// Typed required flag.
+    pub fn require<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError> {
+        let v = self
+            .flags
+            .get(name)
+            .ok_or_else(|| CliError(format!("missing required --{name}")))?;
+        v.parse()
+            .map_err(|_| CliError(format!("--{name}: cannot parse '{v}'")))
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Result<Vec<T>, CliError>
+    where
+        T: Clone,
+    {
+        match self.flags.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| CliError(format!("--{name}: cannot parse '{p}'")))
+                })
+                .collect(),
+        }
+    }
+
+    /// Apply recognised flags onto a [`crate::config::Config`]; unknown
+    /// flags are ignored (they may belong to the caller).
+    pub fn apply_to_config(&self, cfg: &mut crate::config::Config) -> Result<(), CliError> {
+        use crate::config::Value;
+        let map_err = |e: crate::config::ConfigError| CliError(e.to_string());
+        for (k, v) in &self.flags {
+            let value = match k.as_str() {
+                "scheme" | "workload" | "identifier" | "artifacts_dir" => Value::Str(v.clone()),
+                "tuples" | "sources" | "workers" | "key_capacity" | "epoch" | "d_min"
+                | "interval" | "vnodes" | "seed" | "service_ns" | "interarrival_ns" => {
+                    Value::Int(v.parse().map_err(|_| CliError(format!("--{k}: bad int '{v}'")))?)
+                }
+                "zipf_z" | "alpha" | "theta_num" => {
+                    Value::Float(v.parse().map_err(|_| CliError(format!("--{k}: bad float '{v}'")))?)
+                }
+                "capacities" => {
+                    let items: Result<Vec<Value>, CliError> = v
+                        .split(',')
+                        .map(|p| {
+                            p.trim()
+                                .parse::<f64>()
+                                .map(Value::Float)
+                                .map_err(|_| CliError(format!("--capacities: bad float '{p}'")))
+                        })
+                        .collect();
+                    Value::Array(items?)
+                }
+                _ => continue,
+            };
+            cfg.set(k, &value).map_err(map_err)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, cmd: bool) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), cmd).unwrap()
+    }
+
+    #[test]
+    fn subcommand_flags_positionals() {
+        // NB: a bare switch followed by a non-flag token would consume it
+        // as a value (`--fast input.bin`), so switches go last or use `=`.
+        let a = parse("run input.bin --workers 64 --fast", true);
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.get("workers"), Some("64"));
+        assert!(a.has("fast"));
+        assert_eq!(a.positionals, vec!["input.bin"]);
+    }
+
+    #[test]
+    fn equals_form_and_typed() {
+        let a = parse("--alpha=0.3 --workers=8", false);
+        assert_eq!(a.get_or("alpha", 0.0).unwrap(), 0.3);
+        assert_eq!(a.get_or::<usize>("workers", 1).unwrap(), 8);
+        assert_eq!(a.get_or("missing", 7u32).unwrap(), 7);
+        assert!(a.require::<u32>("nope").is_err());
+        assert!(a.get_or::<u32>("alpha", 0).is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse("--capacities 1.0,2.0,2.0", false);
+        let caps: Vec<f64> = a.get_list("capacities", &[1.0]).unwrap();
+        assert_eq!(caps, vec![1.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn config_overrides() {
+        let mut cfg = crate::config::Config::default();
+        let a = parse("--scheme wc --workers 128 --alpha 0.5 --capacities 1,2", false);
+        a.apply_to_config(&mut cfg).unwrap();
+        assert_eq!(cfg.workers, 128);
+        assert_eq!(cfg.alpha, 0.5);
+        assert_eq!(cfg.capacities, vec![1.0, 2.0]);
+        assert_eq!(cfg.scheme, crate::coordinator::SchemeKind::WChoices);
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse("-- --not-a-flag", false);
+        assert_eq!(a.positionals, vec!["--not-a-flag"]);
+    }
+}

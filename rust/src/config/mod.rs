@@ -1,0 +1,270 @@
+//! Configuration system (TOML-subset, hand-rolled — no serde offline).
+//!
+//! Supports the subset real deployments need: `[section]` headers,
+//! `key = value` with string / integer / float / bool / string-array
+//! values, `#` comments. CLI flags override file values (see [`crate::cli`]).
+
+mod parser;
+
+pub use parser::{ConfigError, ConfigFile, Value};
+
+use crate::coordinator::SchemeKind;
+
+/// Fully-resolved experiment configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Grouping scheme under test.
+    pub scheme: SchemeKind,
+    /// Workload name: `zf`, `mt` or `am`.
+    pub workload: String,
+    /// Number of tuples to stream.
+    pub tuples: usize,
+    /// Zipf exponent for `zf`.
+    pub zipf_z: f64,
+    /// Number of sources.
+    pub sources: usize,
+    /// Number of workers.
+    pub workers: usize,
+    /// Worker capacity multipliers (cycled if shorter than `workers`);
+    /// 1.0 = baseline; 2.0 = twice as fast.
+    pub capacities: Vec<f64>,
+    /// FISH / D-C / W-C: max tracked keys `K_max`.
+    pub key_capacity: usize,
+    /// FISH: epoch size `N_epoch` in tuples.
+    pub epoch: usize,
+    /// FISH: decay factor `α`.
+    pub alpha: f64,
+    /// Hot-key threshold numerator: θ = `theta_num / workers`
+    /// (paper default 1/4 → θ = 1/(4n)).
+    pub theta_num: f64,
+    /// FISH: minimum workers per hot key `d_min`.
+    pub d_min: usize,
+    /// FISH: HWA estimation interval `T` (virtual ticks / ns).
+    pub interval: u64,
+    /// Virtual nodes per worker on the consistent-hash ring.
+    pub vnodes: usize,
+    /// PRNG seed.
+    pub seed: u64,
+    /// Mean per-tuple service time in ns (runtime engine) / ticks (sim).
+    pub service_ns: u64,
+    /// Mean tuple inter-arrival in ns per source.
+    pub interarrival_ns: u64,
+    /// Identifier backend: `native` (pure Rust Alg. 1) or `xla-cms`
+    /// (AOT Pallas epoch_stats via PJRT).
+    pub identifier: String,
+    /// Directory holding the AOT artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            scheme: SchemeKind::Fish,
+            workload: "zf".into(),
+            tuples: 1_000_000,
+            zipf_z: 1.5,
+            sources: 4,
+            workers: 32,
+            capacities: vec![1.0],
+            key_capacity: 1000,
+            epoch: 1000,
+            alpha: 0.2,
+            theta_num: 0.25,
+            d_min: 2,
+            interval: 10_000_000, // 10ms in ns (paper: 10s at cluster scale)
+            vnodes: 64,
+            seed: 42,
+            service_ns: 1_000,
+            interarrival_ns: 100,
+            identifier: "native".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl Config {
+    /// Per-worker capacity vector of length `workers` (cycling the
+    /// configured multipliers).
+    pub fn capacity_vec(&self) -> Vec<f64> {
+        (0..self.workers)
+            .map(|w| self.capacities[w % self.capacities.len()])
+            .collect()
+    }
+
+    /// Hot-key threshold θ (fraction of total stream frequency).
+    pub fn theta(&self) -> f64 {
+        self.theta_num / self.workers as f64
+    }
+
+    /// Load from a config file, then apply `overrides` (flag, value) pairs.
+    pub fn from_file(path: &str) -> Result<Config, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::Io(format!("{path}: {e}")))?;
+        let file = ConfigFile::parse(&text)?;
+        let mut cfg = Config::default();
+        cfg.apply_file(&file)?;
+        Ok(cfg)
+    }
+
+    /// Apply a parsed file onto this config.
+    pub fn apply_file(&mut self, f: &ConfigFile) -> Result<(), ConfigError> {
+        for (section, key, value) in f.entries() {
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            self.set(&full, value)?;
+        }
+        Ok(())
+    }
+
+    /// Set a single dotted key from a parsed [`Value`].
+    pub fn set(&mut self, key: &str, v: &Value) -> Result<(), ConfigError> {
+        let err = |what: &str| ConfigError::Type(format!("{key}: expected {what}, got {v:?}"));
+        match key {
+            "scheme" | "run.scheme" => {
+                self.scheme = v
+                    .as_str()
+                    .ok_or_else(|| err("string"))?
+                    .parse()
+                    .map_err(ConfigError::Type)?;
+            }
+            "workload" | "run.workload" => {
+                self.workload = v.as_str().ok_or_else(|| err("string"))?.to_string()
+            }
+            "tuples" | "run.tuples" => self.tuples = v.as_int().ok_or_else(|| err("int"))? as usize,
+            "zipf_z" | "run.zipf_z" => self.zipf_z = v.as_float().ok_or_else(|| err("float"))?,
+            "sources" | "topology.sources" => {
+                self.sources = v.as_int().ok_or_else(|| err("int"))? as usize
+            }
+            "workers" | "topology.workers" => {
+                self.workers = v.as_int().ok_or_else(|| err("int"))? as usize
+            }
+            "capacities" | "topology.capacities" => {
+                let arr = v.as_array().ok_or_else(|| err("array"))?;
+                let mut caps = Vec::new();
+                for item in arr {
+                    caps.push(item.as_float().ok_or_else(|| err("float array"))?);
+                }
+                if caps.is_empty() {
+                    return Err(ConfigError::Type("capacities: empty".into()));
+                }
+                self.capacities = caps;
+            }
+            "key_capacity" | "fish.key_capacity" => {
+                self.key_capacity = v.as_int().ok_or_else(|| err("int"))? as usize
+            }
+            "epoch" | "fish.epoch" => self.epoch = v.as_int().ok_or_else(|| err("int"))? as usize,
+            "alpha" | "fish.alpha" => self.alpha = v.as_float().ok_or_else(|| err("float"))?,
+            "theta_num" | "fish.theta_num" => {
+                self.theta_num = v.as_float().ok_or_else(|| err("float"))?
+            }
+            "d_min" | "fish.d_min" => self.d_min = v.as_int().ok_or_else(|| err("int"))? as usize,
+            "interval" | "fish.interval" => {
+                self.interval = v.as_int().ok_or_else(|| err("int"))? as u64
+            }
+            "vnodes" | "fish.vnodes" => self.vnodes = v.as_int().ok_or_else(|| err("int"))? as usize,
+            "identifier" | "fish.identifier" => {
+                self.identifier = v.as_str().ok_or_else(|| err("string"))?.to_string()
+            }
+            "seed" | "run.seed" => self.seed = v.as_int().ok_or_else(|| err("int"))? as u64,
+            "service_ns" | "topology.service_ns" => {
+                self.service_ns = v.as_int().ok_or_else(|| err("int"))? as u64
+            }
+            "interarrival_ns" | "topology.interarrival_ns" => {
+                self.interarrival_ns = v.as_int().ok_or_else(|| err("int"))? as u64
+            }
+            "artifacts_dir" | "run.artifacts_dir" => {
+                self.artifacts_dir = v.as_str().ok_or_else(|| err("string"))?.to_string()
+            }
+            other => return Err(ConfigError::UnknownKey(other.to_string())),
+        }
+        Ok(())
+    }
+
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.workers == 0 {
+            return Err(ConfigError::Type("workers must be > 0".into()));
+        }
+        if self.sources == 0 {
+            return Err(ConfigError::Type("sources must be > 0".into()));
+        }
+        if self.epoch == 0 {
+            return Err(ConfigError::Type("epoch must be > 0".into()));
+        }
+        if !(0.0..=1.0).contains(&self.alpha) {
+            return Err(ConfigError::Type("alpha must be in [0,1]".into()));
+        }
+        if self.capacities.iter().any(|&c| c <= 0.0) {
+            return Err(ConfigError::Type("capacities must be positive".into()));
+        }
+        if self.identifier != "native" && self.identifier != "xla-cms" {
+            return Err(ConfigError::Type(format!(
+                "identifier must be native|xla-cms, got {}",
+                self.identifier
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_roundtrip() {
+        let text = r#"
+# experiment
+[run]
+scheme = "fish"
+workload = "zf"
+tuples = 500000
+zipf_z = 1.4
+
+[topology]
+workers = 64
+capacities = [1.0, 2.0]
+
+[fish]
+alpha = 0.3
+epoch = 2000
+"#;
+        let f = ConfigFile::parse(text).unwrap();
+        let mut cfg = Config::default();
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.workers, 64);
+        assert_eq!(cfg.tuples, 500_000);
+        assert_eq!(cfg.alpha, 0.3);
+        assert_eq!(cfg.epoch, 2000);
+        assert_eq!(cfg.capacity_vec()[..4], [1.0, 2.0, 1.0, 2.0]);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let f = ConfigFile::parse("bogus = 1").unwrap();
+        let mut cfg = Config::default();
+        assert!(matches!(cfg.apply_file(&f), Err(ConfigError::UnknownKey(_))));
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut cfg = Config::default();
+        cfg.alpha = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg.alpha = 0.2;
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn theta_follows_paper_formula() {
+        let mut cfg = Config::default();
+        cfg.workers = 128;
+        cfg.theta_num = 0.25;
+        assert!((cfg.theta() - 0.25 / 128.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,216 @@
+//! Minimal TOML-subset parser: sections, scalars, flat arrays, comments.
+
+use std::fmt;
+
+/// A parsed configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer literal.
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// `true` / `false`.
+    Bool(bool),
+    /// Flat array of values.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// As string slice, if `Str`.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As integer (exact `Int` only).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// As float (`Float` or lossless `Int`).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As array slice.
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Parse one scalar/array token.
+    pub fn parse_token(tok: &str) -> Result<Value, ConfigError> {
+        let tok = tok.trim();
+        if tok.starts_with('"') && tok.ends_with('"') && tok.len() >= 2 {
+            return Ok(Value::Str(tok[1..tok.len() - 1].to_string()));
+        }
+        if tok == "true" {
+            return Ok(Value::Bool(true));
+        }
+        if tok == "false" {
+            return Ok(Value::Bool(false));
+        }
+        if tok.starts_with('[') && tok.ends_with(']') {
+            let inner = &tok[1..tok.len() - 1];
+            let mut items = Vec::new();
+            if !inner.trim().is_empty() {
+                for part in inner.split(',') {
+                    items.push(Value::parse_token(part)?);
+                }
+            }
+            return Ok(Value::Array(items));
+        }
+        if let Ok(i) = tok.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = tok.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        Err(ConfigError::Parse(format!("cannot parse value '{tok}'")))
+    }
+}
+
+/// Errors from parsing or applying configuration.
+#[derive(Debug)]
+pub enum ConfigError {
+    /// File read failure.
+    Io(String),
+    /// Syntax error.
+    Parse(String),
+    /// Type mismatch applying a value.
+    Type(String),
+    /// Key not recognised by [`super::Config::set`].
+    UnknownKey(String),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Io(m) => write!(f, "config io error: {m}"),
+            ConfigError::Parse(m) => write!(f, "config parse error: {m}"),
+            ConfigError::Type(m) => write!(f, "config type error: {m}"),
+            ConfigError::UnknownKey(k) => write!(f, "unknown config key: {k}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// A parsed config file: ordered (section, key, value) triples.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigFile {
+    entries: Vec<(String, String, Value)>,
+}
+
+impl ConfigFile {
+    /// Parse the TOML-subset text.
+    pub fn parse(text: &str) -> Result<ConfigFile, ConfigError> {
+        let mut section = String::new();
+        let mut entries = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                // only strip comments outside quotes (good enough: our
+                // string values never contain '#')
+                Some(i) if !raw[..i].contains('"') || raw[..i].matches('"').count() % 2 == 0 => {
+                    &raw[..i]
+                }
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| {
+                ConfigError::Parse(format!("line {}: expected 'key = value'", lineno + 1))
+            })?;
+            let key = line[..eq].trim().to_string();
+            if key.is_empty() {
+                return Err(ConfigError::Parse(format!("line {}: empty key", lineno + 1)));
+            }
+            let value = Value::parse_token(&line[eq + 1..])?;
+            entries.push((section.clone(), key, value));
+        }
+        Ok(ConfigFile { entries })
+    }
+
+    /// Ordered entries.
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str, &Value)> {
+        self.entries.iter().map(|(s, k, v)| (s.as_str(), k.as_str(), v))
+    }
+
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries
+            .iter()
+            .rev()
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_arrays() {
+        assert_eq!(Value::parse_token("42").unwrap(), Value::Int(42));
+        assert_eq!(Value::parse_token("-1").unwrap(), Value::Int(-1));
+        assert_eq!(Value::parse_token("1.5").unwrap(), Value::Float(1.5));
+        assert_eq!(Value::parse_token("true").unwrap(), Value::Bool(true));
+        assert_eq!(
+            Value::parse_token("\"abc\"").unwrap(),
+            Value::Str("abc".into())
+        );
+        assert_eq!(
+            Value::parse_token("[1, 2.5]").unwrap(),
+            Value::Array(vec![Value::Int(1), Value::Float(2.5)])
+        );
+        assert_eq!(Value::parse_token("[]").unwrap(), Value::Array(vec![]));
+        assert!(Value::parse_token("@nope").is_err());
+    }
+
+    #[test]
+    fn sections_and_comments() {
+        let f = ConfigFile::parse(
+            "top = 1\n[a]\nx = 2 # trailing\n# whole line\n[b]\nx = \"s\"\n",
+        )
+        .unwrap();
+        assert_eq!(f.get("", "top"), Some(&Value::Int(1)));
+        assert_eq!(f.get("a", "x"), Some(&Value::Int(2)));
+        assert_eq!(f.get("b", "x"), Some(&Value::Str("s".into())));
+        assert_eq!(f.get("a", "missing"), None);
+    }
+
+    #[test]
+    fn syntax_errors_reported() {
+        assert!(ConfigFile::parse("novalue").is_err());
+        assert!(ConfigFile::parse("= 3").is_err());
+        assert!(ConfigFile::parse("k = @").is_err());
+    }
+}

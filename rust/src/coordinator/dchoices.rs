@@ -1,0 +1,199 @@
+//! D-Choices (D-C) — Nasir et al., ICDE 2016 [15].
+//!
+//! Lifetime SpaceSaving heavy-hitter detection (no decay — this is
+//! exactly the "entire processing lifetime" view the FISH paper critiques
+//! for time-evolving data). Keys whose *lifetime* relative frequency
+//! exceeds θ are spread over `d` hash choices (one `d` for the whole head
+//! set, per the original scheme); all other keys use PKG's two choices.
+//! Among candidates the source picks the one with the fewest locally-sent
+//! tuples (greedy-d).
+
+use super::{ClusterView, Grouper, SchemeKind};
+use crate::sketch::SpaceSaving;
+use crate::util::hash::hash_to;
+use crate::{Key, WorkerId};
+
+/// Shared head-key machinery for D-C and W-C.
+#[derive(Debug, Clone)]
+pub(crate) struct HeavyHitters {
+    pub sketch: SpaceSaving,
+    pub theta: f64,
+    pub total: f64,
+}
+
+impl HeavyHitters {
+    pub fn new(key_capacity: usize, theta: f64) -> Self {
+        HeavyHitters { sketch: SpaceSaving::new(key_capacity), theta, total: 0.0 }
+    }
+
+    /// Observe and report whether `key` is currently a lifetime heavy
+    /// hitter (relative frequency > θ).
+    #[inline]
+    pub fn observe_is_hot(&mut self, key: Key) -> bool {
+        self.sketch.observe(key);
+        self.total += 1.0;
+        self.sketch.estimate(key) > self.theta * self.total
+    }
+
+    /// Relative frequency of the hottest tracked key.
+    pub fn top_rel(&self) -> f64 {
+        if self.total == 0.0 {
+            0.0
+        } else {
+            self.sketch.top_count() / self.total
+        }
+    }
+}
+
+/// D-Choices grouper.
+#[derive(Debug, Clone)]
+pub struct DChoices {
+    hh: HeavyHitters,
+    sent: Vec<u64>,
+    seed: u64,
+}
+
+impl DChoices {
+    /// `key_capacity` = the scheme's "maximum set of keys" (the paper's
+    /// motivating study tests 100 and 1000); `theta` the hot threshold.
+    pub fn new(n_slots: usize, key_capacity: usize, theta: f64, seed: u64) -> Self {
+        DChoices {
+            hh: HeavyHitters::new(key_capacity, theta),
+            sent: vec![0; n_slots],
+            seed,
+        }
+    }
+
+    /// The single `d` used for every head key: smallest d such that the
+    /// hottest key's per-worker share `f_top/d` drops under θ (the load
+    /// level at which PKG-style balance is provable), clamped to
+    /// `[2, |workers|]`. Matches the original scheme's "one d for the
+    /// whole head, derived from the key distribution".
+    pub(crate) fn head_d(top_rel: f64, theta: f64, n_workers: usize) -> usize {
+        let cap = n_workers.max(1);
+        if top_rel <= theta {
+            return 2.min(cap);
+        }
+        ((top_rel / theta).ceil() as usize).max(2).min(cap)
+    }
+
+    #[inline]
+    pub(crate) fn pick_least_sent(
+        sent: &[u64],
+        key: Key,
+        seed: u64,
+        workers: &[WorkerId],
+        d: usize,
+    ) -> WorkerId {
+        // d hash-family candidates (distinct family seeds; collisions just
+        // reduce the effective choice count, as in the original papers).
+        let mut best = workers[hash_to(key, seed ^ 1, workers.len())];
+        for i in 2..=d as u64 {
+            let c = workers[hash_to(key, seed ^ i, workers.len())];
+            if sent[c] < sent[best] {
+                best = c;
+            }
+        }
+        best
+    }
+}
+
+impl Grouper for DChoices {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::DChoices
+    }
+
+    #[inline]
+    fn route(&mut self, key: Key, view: &ClusterView<'_>) -> WorkerId {
+        if self.sent.len() < view.n_slots {
+            self.sent.resize(view.n_slots, 0);
+        }
+        let hot = self.hh.observe_is_hot(key);
+        let d = if hot {
+            Self::head_d(self.hh.top_rel(), self.hh.theta, view.workers.len())
+        } else {
+            2
+        };
+        let w = Self::pick_least_sent(&self.sent, key, self.seed, view.workers, d);
+        self.sent[w] += 1;
+        w
+    }
+
+    fn on_membership_change(&mut self, view: &ClusterView<'_>) {
+        if self.sent.len() < view.n_slots {
+            self.sent.resize(view.n_slots, 0);
+        }
+    }
+
+    fn tracked_entries(&self) -> usize {
+        self.hh.sketch.entries()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view<'a>(workers: &'a [usize], times: &'a [f64]) -> ClusterView<'a> {
+        ClusterView { now: 0, workers, per_tuple_time: times, n_slots: times.len() }
+    }
+
+    #[test]
+    fn head_d_formula() {
+        assert_eq!(DChoices::head_d(0.001, 0.01, 64), 2);
+        assert_eq!(DChoices::head_d(0.10, 0.01, 64), 10);
+        assert_eq!(DChoices::head_d(0.9, 0.001, 64), 64); // clamped
+    }
+
+    #[test]
+    fn hot_key_uses_more_than_two_workers() {
+        let workers: Vec<usize> = (0..32).collect();
+        let times = vec![1.0; 32];
+        let v = view(&workers, &times);
+        let mut g = DChoices::new(32, 100, 2.0 / 32.0, 7);
+        let mut seen = std::collections::HashSet::new();
+        let mut rng = crate::util::Rng::new(3);
+        for _ in 0..50_000 {
+            // 50% hot key 0, rest uniform tail
+            let k = if rng.gen_bool(0.5) { 0 } else { 1 + rng.gen_range(10_000) };
+            let w = g.route(k, &v);
+            if k == 0 {
+                seen.insert(w);
+            }
+        }
+        assert!(seen.len() > 2, "hot key only used {} workers", seen.len());
+    }
+
+    #[test]
+    fn cold_keys_stay_on_two() {
+        let workers: Vec<usize> = (0..16).collect();
+        let times = vec![1.0; 16];
+        let v = view(&workers, &times);
+        let mut g = DChoices::new(16, 100, 2.0 / 16.0, 7);
+        let mut per_key: std::collections::HashMap<u64, std::collections::HashSet<usize>> =
+            Default::default();
+        let mut rng = crate::util::Rng::new(5);
+        for _ in 0..40_000 {
+            let k = rng.gen_range(5_000); // no key is hot
+            let w = g.route(k, &v);
+            per_key.entry(k).or_default().insert(w);
+        }
+        let over = per_key.values().filter(|s| s.len() > 2).count();
+        // SpaceSaving noise can transiently flag a few keys; the bulk
+        // must stay on ≤ 2 workers.
+        assert!(over < per_key.len() / 20, "{over}/{} keys exceeded 2", per_key.len());
+    }
+
+    #[test]
+    fn tracked_entries_bounded_by_capacity() {
+        let workers: Vec<usize> = (0..8).collect();
+        let times = vec![1.0; 8];
+        let v = view(&workers, &times);
+        let mut g = DChoices::new(8, 100, 0.01, 1);
+        let mut rng = crate::util::Rng::new(9);
+        for _ in 0..20_000 {
+            g.route(rng.gen_range(1_000_000), &v);
+        }
+        assert!(g.tracked_entries() <= 100);
+    }
+}

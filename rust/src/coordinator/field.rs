@@ -1,0 +1,64 @@
+//! Field Grouping (FG): key-hash routing.
+//!
+//! One worker per key — memory-optimal (no replication) but badly
+//! imbalanced on skewed streams (paper Fig. 2): a single hot key pins its
+//! whole load on one worker.
+
+use super::{ClusterView, Grouper, SchemeKind};
+use crate::util::hash::hash_to;
+use crate::{Key, WorkerId};
+
+/// Hash-by-key grouper: `worker = H(key) mod |workers|`.
+#[derive(Debug, Clone, Default)]
+pub struct FieldGrouping;
+
+impl FieldGrouping {
+    /// Stateless; nothing to configure.
+    pub fn new() -> Self {
+        FieldGrouping
+    }
+}
+
+impl Grouper for FieldGrouping {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Field
+    }
+
+    #[inline]
+    fn route(&mut self, key: Key, view: &ClusterView<'_>) -> WorkerId {
+        view.workers[hash_to(key, 0xF1E1D, view.workers.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_key_same_worker() {
+        let workers: Vec<usize> = (0..16).collect();
+        let times = vec![1.0; 16];
+        let v = ClusterView { now: 0, workers: &workers, per_tuple_time: &times, n_slots: 16 };
+        let mut g = FieldGrouping::new();
+        for k in 0..1000u64 {
+            let w1 = g.route(k, &v);
+            let w2 = g.route(k, &v);
+            assert_eq!(w1, w2);
+        }
+    }
+
+    #[test]
+    fn keys_spread_across_workers() {
+        let workers: Vec<usize> = (0..16).collect();
+        let times = vec![1.0; 16];
+        let v = ClusterView { now: 0, workers: &workers, per_tuple_time: &times, n_slots: 16 };
+        let mut g = FieldGrouping::new();
+        let mut counts = [0usize; 16];
+        for k in 0..16_000u64 {
+            counts[g.route(k, &v)] += 1;
+        }
+        for &c in &counts {
+            assert!((700..1300).contains(&c), "count {c}");
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Identifier baselines from the paper's §2.4 taxonomy, used by the
+//! identifier-ablation bench to reproduce the §4.1 efficiency argument:
+//!
+//! * [`TupleDecayIdentifier`] — classic time-aware counting ([16]–[18]):
+//!   per-**tuple** decay of every tracked counter. Accurate, but each
+//!   update touches all `K_max` counters — the "large amount of
+//!   computation" FISH's epoch-level decay removes (the paper claims
+//!   three orders of magnitude fewer decay updates at `N_epoch = 1000`).
+//! * [`WindowIdentifier`] — sliding-window counting ([19]–[23]): exact
+//!   recent frequencies, but memory is linear in the window length.
+//!
+//! Both implement [`Identifier`], so they drop into FISH unchanged.
+
+use super::epoch::Identifier;
+use crate::sketch::{SlidingWindow, SpaceSaving};
+use crate::Key;
+
+/// Time-aware counting with per-tuple decay (the paper's computational
+/// strawman). Counters live in a SpaceSaving set like Alg. 1, but the
+/// decay multiplier applies on **every tuple** instead of every epoch.
+#[derive(Debug, Clone)]
+pub struct TupleDecayIdentifier {
+    sketch: SpaceSaving,
+    /// per-tuple decay factor, calibrated so that after `N_epoch` tuples
+    /// the aggregate decay equals the epoch identifier's α:
+    /// `alpha_tuple = α^(1/N_epoch)`.
+    alpha_tuple: f64,
+    total: f64,
+    /// Decay multiplications performed (the §4.1 cost metric).
+    pub decay_ops: u64,
+}
+
+impl TupleDecayIdentifier {
+    /// Calibrated against an epoch identifier with (`alpha`, `epoch_len`).
+    pub fn new(key_capacity: usize, alpha: f64, epoch_len: usize) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "per-tuple calibration needs alpha in (0,1]");
+        TupleDecayIdentifier {
+            sketch: SpaceSaving::new(key_capacity),
+            alpha_tuple: alpha.powf(1.0 / epoch_len as f64),
+            total: 0.0,
+            decay_ops: 0,
+        }
+    }
+}
+
+impl Identifier for TupleDecayIdentifier {
+    fn observe(&mut self, key: Key) {
+        // tuple-level time-aware update: decay EVERY counter, then count.
+        self.sketch.decay(self.alpha_tuple);
+        self.decay_ops += self.sketch.len() as u64;
+        self.total = self.total * self.alpha_tuple + 1.0;
+        self.sketch.observe(key);
+    }
+
+    fn estimate(&self, key: Key) -> f64 {
+        self.sketch.estimate(key)
+    }
+
+    fn f_top(&self) -> f64 {
+        self.sketch.top_count()
+    }
+
+    fn total(&self) -> f64 {
+        self.total
+    }
+
+    fn entries(&self) -> usize {
+        self.sketch.entries()
+    }
+
+    fn epochs(&self) -> u64 {
+        0 // no epochs: decay is continuous
+    }
+}
+
+/// Sliding-window identification (exact recent counts, linear memory).
+#[derive(Debug, Clone)]
+pub struct WindowIdentifier {
+    window: SlidingWindow,
+}
+
+impl WindowIdentifier {
+    /// Window of `window` tuples (the paper's baselines need windows of
+    /// epoch-scale length or larger for comparable recency).
+    pub fn new(window: usize) -> Self {
+        WindowIdentifier { window: SlidingWindow::new(window) }
+    }
+}
+
+impl Identifier for WindowIdentifier {
+    fn observe(&mut self, key: Key) {
+        self.window.observe(key);
+    }
+
+    fn estimate(&self, key: Key) -> f64 {
+        self.window.count(key) as f64
+    }
+
+    fn f_top(&self) -> f64 {
+        self.window.top_count() as f64
+    }
+
+    fn total(&self) -> f64 {
+        self.window.len() as f64
+    }
+
+    fn entries(&self) -> usize {
+        self.window.entries()
+    }
+
+    fn epochs(&self) -> u64 {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fish::EpochIdentifier;
+
+    #[test]
+    fn tuple_decay_tracks_epoch_identifier() {
+        // calibrated decays should agree on relative hotness
+        let mut epoch = EpochIdentifier::new(64, 100, 0.2);
+        let mut tuple = TupleDecayIdentifier::new(64, 0.2, 100);
+        let mut rng = crate::util::Rng::new(1);
+        for _ in 0..5_000 {
+            let k = if rng.gen_bool(0.3) { 1 } else { 10 + rng.gen_range(500) };
+            epoch.observe(k);
+            tuple.observe(k);
+        }
+        let rel_e = epoch.estimate(1) / epoch.total();
+        let rel_t = tuple.estimate(1) / tuple.total();
+        assert!((rel_e - rel_t).abs() < 0.1, "epoch {rel_e} vs tuple {rel_t}");
+    }
+
+    #[test]
+    fn tuple_decay_costs_orders_of_magnitude_more() {
+        // the paper's §4.1 claim: epoch-level decay cuts decay updates by
+        // ~N_epoch/1 (three orders of magnitude at N_epoch = 1000).
+        let cap = 100;
+        let n = 50_000;
+        let mut tuple = TupleDecayIdentifier::new(cap, 0.2, 1_000);
+        let mut rng = crate::util::Rng::new(2);
+        for _ in 0..n {
+            tuple.observe(rng.gen_range(10_000));
+        }
+        // epoch identifier: one decay pass (≤ cap multiplications) per epoch
+        let epoch_ops = (n as u64 / 1_000) * cap as u64;
+        assert!(
+            tuple.decay_ops > epoch_ops * 500,
+            "tuple {} vs epoch {} decay ops",
+            tuple.decay_ops,
+            epoch_ops
+        );
+    }
+
+    #[test]
+    fn window_is_exact_but_memory_hungry() {
+        let mut wid = WindowIdentifier::new(10_000);
+        let mut eid = EpochIdentifier::new(100, 1_000, 0.2);
+        let mut rng = crate::util::Rng::new(3);
+        for _ in 0..20_000 {
+            let k = rng.gen_range(5_000);
+            wid.observe(k);
+            eid.observe(k);
+        }
+        assert!(wid.entries() > eid.entries() * 20, "window {} vs epoch {}", wid.entries(), eid.entries());
+    }
+
+    #[test]
+    fn both_work_inside_fish() {
+        use crate::coordinator::{ClusterView, Grouper};
+        for id in [
+            Box::new(TupleDecayIdentifier::new(64, 0.2, 100)) as Box<dyn Identifier>,
+            Box::new(WindowIdentifier::new(1_000)),
+        ] {
+            let workers: Vec<usize> = (0..8).collect();
+            let mut fish =
+                crate::coordinator::Fish::new(id, 0.25 / 8.0, 2, 1_000, 32, &workers);
+            let times = vec![1.0; 8];
+            for i in 0..2_000u64 {
+                let view = ClusterView {
+                    now: i,
+                    workers: &workers,
+                    per_tuple_time: &times,
+                    n_slots: 8,
+                };
+                let w = fish.route(i % 50, &view);
+                assert!(w < 8);
+            }
+        }
+    }
+}

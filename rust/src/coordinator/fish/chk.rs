@@ -1,0 +1,198 @@
+//! Classification of Hot Key (CHK) — paper Algorithm 2.
+//!
+//! Maps a key's recent frequency to a candidate-worker count:
+//!
+//! ```text
+//! if f_k > θ·total:
+//!     index = ⌊log2(f_top / f_k)⌋
+//!     d     = W_num / 2^index          (halving ladder: hotter → wider)
+//!     d     = max(d, d_min)
+//!     M_k   = max(M_k, d)              (monotone per-key memo)
+//!     return M_k
+//! else:
+//!     return 2                         (PKG-style for the cold tail)
+//! ```
+//!
+//! The memo `M` prevents assignment thrashing when a hot key's frequency
+//! oscillates: the candidate set only widens, never narrows, so worker
+//! state built for that key stays useful (paper §4.1.2). `M` evicts
+//! entries whose keys have stayed cold for `MEMO_TTL_EPOCHS`-worth of
+//! classifications to keep control-plane memory bounded.
+
+use crate::Key;
+use std::collections::HashMap;
+
+/// Classification strategy — [`ChkMode::Ladder`] is the paper's Alg. 2;
+/// the other two are the Fig. 15 ablation baselines ("w/W-C", "w/D-C").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChkMode {
+    /// Frequency-proportional halving ladder (the paper's CHK).
+    Ladder,
+    /// Every hot key gets the whole cluster (W-Choices-style).
+    AllWorkers,
+    /// Every hot key gets the same fixed `d` (D-Choices-style).
+    FixedD(usize),
+}
+
+/// Hot-key classifier with the monotone assignment memo.
+#[derive(Debug, Clone)]
+pub struct Chk {
+    theta: f64,
+    d_min: usize,
+    mode: ChkMode,
+    /// M: key → (assigned d, last-hot stamp).
+    memo: HashMap<Key, (usize, u64)>,
+    /// Classification counter used as the memo staleness clock.
+    clock: u64,
+    /// Sweep period for expiring cold memo entries.
+    sweep_every: u64,
+}
+
+/// Cold entries older than this many classifications are evicted.
+const MEMO_TTL: u64 = 2_000_000;
+
+impl Chk {
+    /// `theta` = hot threshold (relative frequency), `d_min` = minimum
+    /// worker count for a hot key.
+    pub fn new(theta: f64, d_min: usize) -> Self {
+        assert!(theta > 0.0, "theta must be positive");
+        assert!(d_min >= 1);
+        Chk {
+            theta,
+            d_min,
+            mode: ChkMode::Ladder,
+            memo: HashMap::new(),
+            clock: 0,
+            sweep_every: MEMO_TTL,
+        }
+    }
+
+    /// Switch classification strategy (Fig. 15 ablation).
+    pub fn with_mode(mut self, mode: ChkMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Configured threshold θ.
+    pub fn theta(&self) -> f64 {
+        self.theta
+    }
+
+    /// Classify: returns the candidate-worker count `d` for this tuple.
+    ///
+    /// `f_k` / `f_top` are the key's and the hottest key's decayed
+    /// frequencies; `total` the decayed stream mass; `n_workers` = W_num.
+    pub fn classify(
+        &mut self,
+        key: Key,
+        f_k: f64,
+        f_top: f64,
+        total: f64,
+        n_workers: usize,
+    ) -> usize {
+        self.clock += 1;
+        if self.clock % self.sweep_every == 0 {
+            let horizon = self.clock.saturating_sub(MEMO_TTL);
+            self.memo.retain(|_, (_, stamp)| *stamp >= horizon);
+        }
+        if total <= 0.0 || f_k <= self.theta * total {
+            return 2;
+        }
+        let d = match self.mode {
+            ChkMode::Ladder => {
+                // Alg. 2 lines 3–4: halving ladder from the hottest key.
+                let ratio =
+                    if f_k > 0.0 { (f_top / f_k).max(1.0) } else { f64::INFINITY };
+                let index = ratio.log2().floor() as u32;
+                (n_workers >> index.min(63)).max(self.d_min).min(n_workers.max(1))
+            }
+            ChkMode::AllWorkers => n_workers.max(1),
+            ChkMode::FixedD(d) => d.clamp(2, n_workers.max(1)),
+        };
+        // Alg. 2 lines 7–10: monotone memo.
+        let entry = self.memo.entry(key).or_insert((0, self.clock));
+        entry.1 = self.clock;
+        if entry.0 < d {
+            entry.0 = d;
+        }
+        entry.0
+    }
+
+    /// Number of memoised hot keys (control-plane memory metric).
+    pub fn memo_entries(&self) -> usize {
+        self.memo.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_key_gets_two() {
+        let mut chk = Chk::new(0.01, 2);
+        assert_eq!(chk.classify(1, 5.0, 100.0, 10_000.0, 64), 2);
+        assert_eq!(chk.memo_entries(), 0);
+    }
+
+    #[test]
+    fn hottest_key_gets_all_workers() {
+        let mut chk = Chk::new(0.01, 2);
+        // f_k == f_top → index 0 → d = W
+        assert_eq!(chk.classify(1, 500.0, 500.0, 1_000.0, 64), 64);
+    }
+
+    #[test]
+    fn halving_ladder() {
+        let mut chk = Chk::new(0.001, 2);
+        let total = 10_000.0;
+        let f_top = 1_000.0;
+        // f_top/f_k = 2 → index 1 → 64/2 = 32
+        assert_eq!(chk.classify(10, 500.0, f_top, total, 64), 32);
+        // f_top/f_k = 4 → index 2 → 16
+        assert_eq!(chk.classify(11, 250.0, f_top, total, 64), 16);
+        // f_top/f_k = 8.x → index 3 → 8
+        assert_eq!(chk.classify(12, 120.0, f_top, total, 64), 8);
+    }
+
+    #[test]
+    fn d_min_floor_applies() {
+        let mut chk = Chk::new(0.0001, 4);
+        let d = chk.classify(9, 3.0, 3_000.0, 10_000.0, 64);
+        assert!(d >= 4, "d={d}");
+    }
+
+    #[test]
+    fn memo_is_monotone() {
+        let mut chk = Chk::new(0.001, 2);
+        let total = 10_000.0;
+        let wide = chk.classify(5, 1_000.0, 1_000.0, total, 64);
+        assert_eq!(wide, 64);
+        // frequency collapses but stays hot: memo keeps d at 64
+        let later = chk.classify(5, 20.0, 1_000.0, total, 64);
+        assert_eq!(later, 64);
+        // cold now: back to 2 (memo bypassed, not shrunk)
+        let cold = chk.classify(5, 0.5, 1_000.0, total, 64);
+        assert_eq!(cold, 2);
+        // hot again: memo remembered 64
+        assert_eq!(chk.classify(5, 15.0, 1_000.0, total, 64), 64);
+    }
+
+    #[test]
+    fn memo_expires_stale_keys() {
+        let mut chk = Chk::new(0.001, 2);
+        chk.sweep_every = 10; // accelerate for the test
+        chk.classify(5, 100.0, 100.0, 1_000.0, 8);
+        assert_eq!(chk.memo_entries(), 1);
+        for i in 0..(MEMO_TTL + 20) {
+            chk.classify(1_000 + i, 0.1, 100.0, 1_000.0, 8); // cold churn
+        }
+        assert_eq!(chk.memo_entries(), 0, "stale memo entry not evicted");
+    }
+
+    #[test]
+    fn empty_stream_is_safe() {
+        let mut chk = Chk::new(0.01, 2);
+        assert_eq!(chk.classify(1, 0.0, 0.0, 0.0, 8), 2);
+    }
+}

@@ -1,0 +1,195 @@
+//! Epoch-based recent hot-key identification — paper Algorithm 1.
+//!
+//! Intra-epoch: SpaceSaving counting over a bounded key set `K`
+//! (`K_max` entries; ReplaceMin on overflow). Inter-epoch: once every
+//! `N_epoch` tuples, every counter is multiplied by the decay factor `α`
+//! — epoch-level (not tuple-level) time-aware decay, which is the
+//! paper's computational-overhead win over classic time-aware counting.
+//!
+//! [`Identifier`] abstracts the backend so the XLA-accelerated
+//! count-min variant ([`crate::runtime::XlaIdentifier`]) can slot into
+//! [`super::Fish`] unchanged.
+
+use crate::sketch::SpaceSaving;
+use crate::Key;
+
+/// Frequency-statistics backend consumed by FISH.
+pub trait Identifier: Send {
+    /// Count one occurrence (handles epoch boundaries internally).
+    fn observe(&mut self, key: Key);
+    /// Decayed frequency estimate of `key` (0 when untracked).
+    fn estimate(&self, key: Key) -> f64;
+    /// Highest tracked frequency (`f_top` in Alg. 2).
+    fn f_top(&self) -> f64;
+    /// Total decayed mass (denominator for relative frequencies).
+    fn total(&self) -> f64;
+    /// Internal tracked entries (control-plane memory metric).
+    fn entries(&self) -> usize;
+    /// Completed epochs so far (diagnostics / ablation).
+    fn epochs(&self) -> u64;
+}
+
+/// The native Algorithm-1 identifier.
+#[derive(Debug, Clone)]
+pub struct EpochIdentifier {
+    sketch: SpaceSaving,
+    epoch_len: usize,
+    alpha: f64,
+    counter: usize,
+    epochs: u64,
+    /// decayed total mass: decays with the same α so relative
+    /// frequencies stay calibrated.
+    total: f64,
+}
+
+impl EpochIdentifier {
+    /// `key_capacity` = `K_max`, `epoch_len` = `N_epoch`, `alpha` = `α`.
+    pub fn new(key_capacity: usize, epoch_len: usize, alpha: f64) -> Self {
+        assert!(epoch_len > 0, "epoch length must be positive");
+        assert!((0.0..=1.0).contains(&alpha), "alpha must be in [0,1]");
+        EpochIdentifier {
+            sketch: SpaceSaving::new(key_capacity),
+            epoch_len,
+            alpha,
+            counter: 0,
+            epochs: 0,
+            total: 0.0,
+        }
+    }
+
+    /// A "no epoch" ablation variant (paper Fig. 14 `w/o epoch`):
+    /// lifetime counting, never decayed — equivalent to α = 1 with an
+    /// infinite epoch.
+    pub fn lifetime(key_capacity: usize) -> Self {
+        EpochIdentifier::new(key_capacity, usize::MAX, 1.0)
+    }
+
+    /// Configured decay factor.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Configured epoch length.
+    pub fn epoch_len(&self) -> usize {
+        self.epoch_len
+    }
+}
+
+impl Identifier for EpochIdentifier {
+    fn observe(&mut self, key: Key) {
+        // Inter-epoch decaying (Alg. 1 lines 4–7)
+        if self.counter == self.epoch_len {
+            self.sketch.decay(self.alpha);
+            self.total *= self.alpha;
+            self.counter = 0;
+            self.epochs += 1;
+        }
+        // Intra-epoch counting (Alg. 1 lines 8–17)
+        self.sketch.observe(key);
+        self.total += 1.0;
+        self.counter += 1;
+    }
+
+    fn estimate(&self, key: Key) -> f64 {
+        self.sketch.estimate(key)
+    }
+
+    fn f_top(&self) -> f64 {
+        self.sketch.top_count() // O(1): maintained incrementally
+    }
+
+    fn total(&self) -> f64 {
+        self.total
+    }
+
+    fn entries(&self) -> usize {
+        self.sketch.entries()
+    }
+
+    fn epochs(&self) -> u64 {
+        self.epochs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn decays_once_per_epoch() {
+        let mut id = EpochIdentifier::new(16, 10, 0.5);
+        for _ in 0..10 {
+            id.observe(1);
+        }
+        assert_eq!(id.estimate(1), 10.0);
+        assert_eq!(id.epochs(), 0);
+        id.observe(1); // crosses the boundary: decay then count
+        assert_eq!(id.epochs(), 1);
+        assert_eq!(id.estimate(1), 6.0); // 10*0.5 + 1
+        assert!((id.total() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recent_hot_key_overtakes_stale_one() {
+        // the defining behaviour for time-evolving streams: a formerly
+        // hot key's mass decays away while the new hot key rises.
+        let mut id = EpochIdentifier::new(64, 100, 0.2);
+        for _ in 0..1_000 {
+            id.observe(1); // old hot key
+        }
+        let old_peak = id.estimate(1);
+        for _ in 0..500 {
+            id.observe(2); // new hot key
+        }
+        assert!(id.estimate(2) > id.estimate(1));
+        assert!(id.estimate(1) < old_peak * 0.01);
+        assert_eq!(id.f_top(), id.estimate(2));
+    }
+
+    #[test]
+    fn lifetime_variant_never_decays() {
+        let mut id = EpochIdentifier::lifetime(16);
+        for _ in 0..100_000 {
+            id.observe(3);
+        }
+        assert_eq!(id.estimate(3), 100_000.0);
+        assert_eq!(id.epochs(), 0);
+    }
+
+    #[test]
+    fn relative_frequency_stays_calibrated() {
+        // estimate/total of a steady 30% key should hover near 0.3
+        // regardless of decay.
+        let mut id = EpochIdentifier::new(128, 1_000, 0.2);
+        let mut rng = Rng::new(8);
+        for _ in 0..50_000 {
+            let k = if rng.gen_bool(0.3) { 7 } else { 100 + rng.gen_range(50) };
+            id.observe(k);
+        }
+        let rel = id.estimate(7) / id.total();
+        assert!((rel - 0.3).abs() < 0.05, "relative {rel}");
+    }
+
+    #[test]
+    fn alpha_zero_forgets_everything_each_epoch() {
+        let mut id = EpochIdentifier::new(16, 10, 0.0);
+        for _ in 0..10 {
+            id.observe(1);
+        }
+        id.observe(2); // boundary: all history dropped
+        assert_eq!(id.estimate(1), 0.0);
+        assert_eq!(id.estimate(2), 1.0);
+        assert!((id.total() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn entries_bounded() {
+        let mut id = EpochIdentifier::new(32, 1000, 0.2);
+        let mut rng = Rng::new(10);
+        for _ in 0..100_000 {
+            id.observe(rng.gen_range(1_000_000));
+        }
+        assert!(id.entries() <= 32);
+    }
+}

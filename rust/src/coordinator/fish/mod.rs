@@ -1,0 +1,348 @@
+//! FISH — the paper's grouping scheme (Sections 4 and 5).
+//!
+//! Pipeline per tuple:
+//!
+//! 1. [`epoch`] — epoch-based recent hot-key identification (Alg. 1):
+//!    feed the key to the intra-epoch counter; at epoch boundaries apply
+//!    inter-epoch hotness decay.
+//! 2. [`chk`] — Classification of Hot Key (Alg. 2): map the key's recent
+//!    frequency to a candidate-worker count `d` (2 for non-hot keys).
+//! 3. candidate materialisation — the first `d` distinct workers
+//!    clockwise on the consistent-hash ring (§5), so worker churn only
+//!    perturbs adjacent candidate sets.
+//! 4. [`assign`] — Heuristic Worker Assignment (Alg. 3): pick the
+//!    candidate with the smallest inferred waiting time `C_w · P_w`,
+//!    with per-interval backlog re-estimation (Eq. 1) instead of
+//!    source↔worker communication.
+
+pub mod assign;
+pub mod baselines;
+pub mod chk;
+pub mod epoch;
+
+pub use assign::Hwa;
+pub use baselines::{TupleDecayIdentifier, WindowIdentifier};
+pub use chk::{Chk, ChkMode};
+pub use epoch::{EpochIdentifier, Identifier};
+
+use super::{ClusterView, Grouper, SchemeKind};
+use crate::config::Config;
+use crate::hashring::HashRing;
+use crate::{Key, WorkerId};
+
+/// How FISH materialises a key's `d` candidate workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CandidateMode {
+    /// Consistent-hash ring walk (paper §5) — churn-stable.
+    ConsistentHash,
+    /// Plain `HASH(key, i) mod n` family — the §5 strawman whose
+    /// mappings all shift on membership change (Fig. 17 "w/o CH").
+    ModuloHash,
+}
+
+/// The FISH grouper.
+pub struct Fish {
+    identifier: Box<dyn Identifier>,
+    chk: Chk,
+    hwa: Hwa,
+    ring: HashRing,
+    mode: CandidateMode,
+    /// Fig. 16 ablation: assign by local sent-counts instead of HWA.
+    count_based: bool,
+    /// Local sent-count per worker (used by the ablation path).
+    sent: Vec<u64>,
+    /// Scratch candidate buffer (avoids per-tuple allocation).
+    cand_buf: Vec<WorkerId>,
+    /// Hot-key candidate cache: key → (d, candidates). Hot keys repeat
+    /// on almost every tuple and their ring walk is O(d²); the cache
+    /// collapses that to a lookup (§Perf). Cleared on membership change.
+    cand_cache: std::collections::HashMap<Key, (usize, Vec<WorkerId>)>,
+}
+
+impl Fish {
+    /// Build from an explicit identifier backend (native or XLA).
+    pub fn new(
+        identifier: Box<dyn Identifier>,
+        theta: f64,
+        d_min: usize,
+        interval: u64,
+        vnodes: usize,
+        workers: &[WorkerId],
+    ) -> Self {
+        Fish {
+            identifier,
+            chk: Chk::new(theta, d_min),
+            hwa: Hwa::new(interval),
+            ring: HashRing::new(workers, vnodes),
+            mode: CandidateMode::ConsistentHash,
+            count_based: false,
+            sent: Vec::new(),
+            cand_buf: Vec::with_capacity(16),
+            cand_cache: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Switch the candidate materialisation strategy (Fig. 17 ablation).
+    pub fn with_mode(mut self, mode: CandidateMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Swap the classification strategy (Fig. 15 ablation: "w/W-C",
+    /// "w/D-C" hot-key handling inside the FISH pipeline).
+    pub fn with_chk_mode(mut self, mode: chk::ChkMode) -> Self {
+        self.chk = Chk::new(self.chk.theta(), 2).with_mode(mode);
+        self
+    }
+
+    /// Disable HWA (Fig. 16 ablation): candidates are picked by local
+    /// assigned-tuple counts, the prior work's strategy.
+    pub fn with_count_based_assignment(mut self) -> Self {
+        self.count_based = true;
+        self
+    }
+
+    /// Build with the native (pure-Rust Alg. 1) identifier from `cfg`.
+    pub fn from_config(cfg: &Config, _source: usize) -> Self {
+        let identifier: Box<dyn Identifier> =
+            Box::new(EpochIdentifier::new(cfg.key_capacity, cfg.epoch, cfg.alpha));
+        let workers: Vec<WorkerId> = (0..cfg.workers).collect();
+        Fish::new(
+            identifier,
+            cfg.theta(),
+            cfg.d_min,
+            cfg.interval,
+            cfg.vnodes,
+            &workers,
+        )
+    }
+
+    /// Access the identifier (ablation benches swap estimates out).
+    pub fn identifier(&self) -> &dyn Identifier {
+        self.identifier.as_ref()
+    }
+
+    /// Access the CHK memo table size (for memory reporting).
+    pub fn memo_entries(&self) -> usize {
+        self.chk.memo_entries()
+    }
+}
+
+impl Grouper for Fish {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Fish
+    }
+
+    fn route(&mut self, key: Key, view: &ClusterView<'_>) -> WorkerId {
+        // 1. recent hot-key identification (Alg. 1)
+        self.identifier.observe(key);
+
+        // 2. classification (Alg. 2)
+        let f_k = self.identifier.estimate(key);
+        let f_top = self.identifier.f_top();
+        let total = self.identifier.total();
+        let d = self.chk.classify(key, f_k, f_top, total, view.workers.len());
+
+        // 3. candidates via consistent hashing (§5)
+        self.cand_buf.clear();
+        if d >= view.workers.len() {
+            self.cand_buf.extend_from_slice(view.workers);
+        } else {
+            match self.mode {
+                CandidateMode::ConsistentHash => {
+                    if d > 2 {
+                        // hot key: serve the walk from the cache
+                        match self.cand_cache.get(&key) {
+                            Some((cd, v)) if *cd == d => {
+                                self.cand_buf.extend_from_slice(v);
+                            }
+                            _ => {
+                                self.ring.candidates_into(key, d, &mut self.cand_buf);
+                                if self.cand_cache.len() > 8_192 {
+                                    self.cand_cache.clear(); // bound memory
+                                }
+                                self.cand_cache.insert(key, (d, self.cand_buf.clone()));
+                            }
+                        }
+                    } else {
+                        self.ring.candidates_into(key, d, &mut self.cand_buf);
+                    }
+                }
+                CandidateMode::ModuloHash => {
+                    // hash-family mod n: every mapping shifts when n does.
+                    for i in 0..d as u64 {
+                        let w = view.workers
+                            [crate::util::hash::hash_to(key, 0xC0DE ^ i, view.workers.len())];
+                        if !self.cand_buf.contains(&w) {
+                            self.cand_buf.push(w);
+                        }
+                    }
+                }
+            }
+        }
+
+        // 4. heuristic worker assignment (Alg. 3) — or the count-based
+        //    strategy of prior work under the Fig. 16 ablation.
+        if self.count_based {
+            if self.sent.len() < view.n_slots {
+                self.sent.resize(view.n_slots, 0);
+            }
+            let w = *self
+                .cand_buf
+                .iter()
+                .min_by_key(|&&w| self.sent[w])
+                .expect("non-empty candidates");
+            self.sent[w] += 1;
+            w
+        } else {
+            self.hwa.select(&self.cand_buf, view)
+        }
+    }
+
+    fn on_membership_change(&mut self, view: &ClusterView<'_>) {
+        // reconcile the ring with the live worker set; consistent hashing
+        // keeps unaffected candidate sets stable (paper Fig. 8).
+        let current: Vec<WorkerId> = self.ring.workers().to_vec();
+        for w in &current {
+            if !view.workers.contains(w) {
+                self.ring.remove_worker(*w);
+            }
+        }
+        for w in view.workers {
+            if !current.contains(w) {
+                self.ring.add_worker(*w);
+            }
+        }
+        self.cand_cache.clear(); // ring moved: cached walks are stale
+        self.hwa.ensure_slots(view.n_slots);
+    }
+
+    fn tracked_entries(&self) -> usize {
+        self.identifier.entries() + self.chk.memo_entries()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Imbalance;
+    use crate::util::Rng;
+
+    fn view<'a>(workers: &'a [usize], times: &'a [f64], now: u64) -> ClusterView<'a> {
+        ClusterView { now, workers, per_tuple_time: times, n_slots: times.len() }
+    }
+
+    fn default_fish(workers: usize) -> Fish {
+        let mut cfg = Config::default();
+        cfg.workers = workers;
+        Fish::from_config(&cfg, 0)
+    }
+
+    #[test]
+    fn hot_key_fans_out_cold_key_stays_narrow() {
+        let n = 32;
+        let workers: Vec<usize> = (0..n).collect();
+        let times = vec![1.0; n];
+        let mut fish = default_fish(n);
+        let mut rng = Rng::new(1);
+        let mut hot_workers = std::collections::HashSet::new();
+        let mut cold_workers: std::collections::HashMap<u64, std::collections::HashSet<usize>> =
+            Default::default();
+        for i in 0..60_000u64 {
+            let v = view(&workers, &times, i);
+            let k = if rng.gen_bool(0.4) { 0 } else { 1 + rng.gen_range(20_000) };
+            let w = fish.route(k, &v);
+            if k == 0 {
+                hot_workers.insert(w);
+            } else {
+                cold_workers.entry(k).or_default().insert(w);
+            }
+        }
+        assert!(hot_workers.len() > 4, "hot key fan-out {}", hot_workers.len());
+        let wide = cold_workers.values().filter(|s| s.len() > 2).count();
+        assert!(
+            wide < cold_workers.len() / 10,
+            "{wide}/{} cold keys exceeded 2 workers",
+            cold_workers.len()
+        );
+    }
+
+    #[test]
+    fn balances_single_hot_key() {
+        let n = 8;
+        let workers: Vec<usize> = (0..n).collect();
+        let times = vec![1.0; n];
+        let mut fish = default_fish(n);
+        let mut counts = vec![0u64; n];
+        for i in 0..50_000u64 {
+            let v = view(&workers, &times, i);
+            counts[fish.route(99, &v)] += 1;
+        }
+        let imb = Imbalance::of_counts(&counts);
+        assert!(imb.relative < 0.35, "imbalance {}", imb.relative);
+    }
+
+    #[test]
+    fn adapts_to_hot_set_drift() {
+        // After the hot key changes, the new hot key must fan out too —
+        // the whole point of epoch-based identification.
+        let n = 16;
+        let workers: Vec<usize> = (0..n).collect();
+        let times = vec![1.0; n];
+        let mut fish = default_fish(n);
+        let mut rng = Rng::new(4);
+        for i in 0..30_000u64 {
+            let v = view(&workers, &times, i);
+            let k = if rng.gen_bool(0.4) { 5 } else { 100 + rng.gen_range(10_000) };
+            fish.route(k, &v);
+        }
+        // phase 2: key 7 becomes hot
+        let mut fanout = std::collections::HashSet::new();
+        for i in 30_000..70_000u64 {
+            let v = view(&workers, &times, i);
+            let k = if rng.gen_bool(0.4) { 7 } else { 100 + rng.gen_range(10_000) };
+            let w = fish.route(k, &v);
+            if k == 7 && i > 40_000 {
+                fanout.insert(w);
+            }
+        }
+        assert!(fanout.len() > 3, "new hot key fan-out {}", fanout.len());
+    }
+
+    #[test]
+    fn membership_change_keeps_routing_total() {
+        let workers: Vec<usize> = (0..8).collect();
+        let times = vec![1.0; 8];
+        let mut fish = default_fish(8);
+        for i in 0..5_000u64 {
+            let v = view(&workers, &times, i);
+            fish.route(i % 100, &v);
+        }
+        // worker 3 dies
+        let alive: Vec<usize> = (0..8).filter(|&w| w != 3).collect();
+        let v = view(&alive, &times, 5_000);
+        fish.on_membership_change(&v);
+        for i in 0..5_000u64 {
+            let v = view(&alive, &times, 5_000 + i);
+            let w = fish.route(i % 100, &v);
+            assert_ne!(w, 3, "routed to dead worker");
+        }
+    }
+
+    #[test]
+    fn tracked_entries_bounded() {
+        let workers: Vec<usize> = (0..16).collect();
+        let times = vec![1.0; 16];
+        let mut cfg = Config::default();
+        cfg.workers = 16;
+        cfg.key_capacity = 256;
+        let mut fish = Fish::from_config(&cfg, 0);
+        let mut rng = Rng::new(6);
+        for i in 0..100_000u64 {
+            let v = view(&workers, &times, i);
+            fish.route(rng.gen_range(1_000_000), &v);
+        }
+        // identifier bounded by K_max; memo only holds hot keys
+        assert!(fish.tracked_entries() < 256 + 1_000);
+    }
+}

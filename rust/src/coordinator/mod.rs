@@ -1,0 +1,197 @@
+//! The Layer-3 coordination contribution: stream grouping schemes.
+//!
+//! A [`Grouper`] runs at each *source* and decides, per tuple, which
+//! worker processes it. The engines (simulator and runtime) drive one
+//! grouper instance per source — exactly like Storm, where grouping
+//! state is local to the emitting task and no source↔worker state
+//! synchronisation happens on the data path.
+//!
+//! Implemented schemes (paper §2.2): [`shuffle`] SG, [`field`] FG,
+//! [`pkg`] PKG, [`dchoices`] D-C, [`wchoices`] W-C, and [`fish`] FISH.
+
+pub mod dchoices;
+pub mod field;
+pub mod fish;
+pub mod pkg;
+pub mod rebalance;
+pub mod shuffle;
+pub mod wchoices;
+
+pub use dchoices::DChoices;
+pub use field::FieldGrouping;
+pub use fish::Fish;
+pub use pkg::PartialKeyGrouping;
+pub use rebalance::RebalanceGrouping;
+pub use shuffle::ShuffleGrouping;
+pub use wchoices::WChoices;
+
+use crate::config::Config;
+use crate::{Key, WorkerId};
+use std::str::FromStr;
+
+/// What a source can see of the cluster when routing (no communication
+/// with workers — this is the point of the paper's heuristic inference).
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterView<'a> {
+    /// Current time (ns in the runtime engine, virtual ticks in the sim).
+    pub now: u64,
+    /// Alive worker ids, ascending.
+    pub workers: &'a [WorkerId],
+    /// `P_w`: sampled mean per-tuple processing time, indexed by worker id.
+    /// Entries for dead workers may be stale; index only via `workers`.
+    pub per_tuple_time: &'a [f64],
+    /// Array sizing: `max worker id + 1`.
+    pub n_slots: usize,
+}
+
+/// A stream grouping scheme instance (one per source).
+pub trait Grouper: Send {
+    /// Scheme identity (for reports).
+    fn kind(&self) -> SchemeKind;
+
+    /// Route one tuple: pick the worker that will process `key`.
+    fn route(&mut self, key: Key, view: &ClusterView<'_>) -> WorkerId;
+
+    /// Worker-set membership changed (scale up/down, failure). Default:
+    /// schemes that derive placement purely from `view.workers` need no
+    /// bookkeeping.
+    fn on_membership_change(&mut self, _view: &ClusterView<'_>) {}
+
+    /// Tracked internal entries (counters, memos) — the *control-plane*
+    /// memory of the scheme, reported alongside state replication.
+    fn tracked_entries(&self) -> usize {
+        0
+    }
+}
+
+/// Enumeration of all schemes (CLI / config selection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchemeKind {
+    /// Shuffle grouping — round robin.
+    Shuffle,
+    /// Field grouping — hash by key.
+    Field,
+    /// Partial-key grouping — power of two choices.
+    Pkg,
+    /// D-Choices — lifetime heavy hitters on d workers.
+    DChoices,
+    /// W-Choices — lifetime heavy hitters on all workers.
+    WChoices,
+    /// FISH — epoch-based identification + CHK + heuristic assignment.
+    Fish,
+    /// Operator-migration baseline (related-work §7, not in the paper's
+    /// evaluated set — excluded from [`SchemeKind::all`]).
+    Rebalance,
+}
+
+impl SchemeKind {
+    /// Short name used in figures and CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchemeKind::Shuffle => "sg",
+            SchemeKind::Field => "fg",
+            SchemeKind::Pkg => "pkg",
+            SchemeKind::DChoices => "dc",
+            SchemeKind::WChoices => "wc",
+            SchemeKind::Fish => "fish",
+            SchemeKind::Rebalance => "rebalance",
+        }
+    }
+
+    /// All schemes, figure order.
+    pub fn all() -> [SchemeKind; 6] {
+        [
+            SchemeKind::Field,
+            SchemeKind::Pkg,
+            SchemeKind::Shuffle,
+            SchemeKind::DChoices,
+            SchemeKind::WChoices,
+            SchemeKind::Fish,
+        ]
+    }
+}
+
+impl FromStr for SchemeKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "sg" | "shuffle" => Ok(SchemeKind::Shuffle),
+            "fg" | "field" => Ok(SchemeKind::Field),
+            "pkg" => Ok(SchemeKind::Pkg),
+            "dc" | "d-choices" | "dchoices" => Ok(SchemeKind::DChoices),
+            "wc" | "w-choices" | "wchoices" => Ok(SchemeKind::WChoices),
+            "fish" => Ok(SchemeKind::Fish),
+            "rebalance" => Ok(SchemeKind::Rebalance),
+            other => Err(format!(
+                "unknown scheme '{other}' (sg|fg|pkg|dc|wc|fish|rebalance)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for SchemeKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Build a grouper for `cfg.scheme`, seeded per `source` so independent
+/// sources make decorrelated random choices (as independent Storm tasks
+/// would). The FISH identifier backend follows `cfg.identifier`
+/// (`native` here; `xla-cms` is constructed by [`crate::runtime`] since
+/// it needs a PJRT client).
+pub fn make_scheme(cfg: &Config, source: usize) -> Box<dyn Grouper> {
+    make_kind(cfg.scheme, cfg, source)
+}
+
+/// Build a specific scheme kind with `cfg`'s parameters.
+pub fn make_kind(kind: SchemeKind, cfg: &Config, source: usize) -> Box<dyn Grouper> {
+    let seed = cfg.seed ^ (source as u64).wrapping_mul(0xA076_1D64_78BD_642F);
+    match kind {
+        SchemeKind::Shuffle => Box::new(ShuffleGrouping::new(source)),
+        SchemeKind::Field => Box::new(FieldGrouping::new()),
+        SchemeKind::Pkg => Box::new(PartialKeyGrouping::new(cfg.workers)),
+        SchemeKind::DChoices => Box::new(DChoices::new(
+            cfg.workers,
+            cfg.key_capacity,
+            cfg.theta(),
+            seed,
+        )),
+        SchemeKind::WChoices => Box::new(WChoices::new(
+            cfg.workers,
+            cfg.key_capacity,
+            cfg.theta(),
+            seed,
+        )),
+        SchemeKind::Fish => Box::new(Fish::from_config(cfg, source)),
+        SchemeKind::Rebalance => Box::new(RebalanceGrouping::new(
+            cfg.workers,
+            cfg.key_capacity,
+            (cfg.epoch as u64).max(1),
+            0.2,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_names_roundtrip() {
+        for k in SchemeKind::all() {
+            assert_eq!(k.name().parse::<SchemeKind>().unwrap(), k);
+        }
+        assert!("bogus".parse::<SchemeKind>().is_err());
+    }
+
+    #[test]
+    fn factory_builds_every_scheme() {
+        let cfg = Config::default();
+        for k in SchemeKind::all() {
+            let g = make_kind(k, &cfg, 0);
+            assert_eq!(g.kind(), k);
+        }
+    }
+}

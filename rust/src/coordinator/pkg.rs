@@ -1,0 +1,118 @@
+//! Partial Key Grouping (PKG) — Nasir et al., ICDE 2015 [14].
+//!
+//! Each key hashes to exactly two candidate workers (two independent hash
+//! family members); the tuple goes to whichever candidate this source has
+//! sent fewer tuples so far (power of two choices on *local* counts — no
+//! worker communication). Bounds replication at 2 entries/key but cannot
+//! rebalance a single ultra-hot key across more than two workers
+//! (paper Fig. 2: latency blows up at scale).
+
+use super::{ClusterView, Grouper, SchemeKind};
+use crate::util::hash::hash_to;
+use crate::{Key, WorkerId};
+
+/// Power-of-two-choices grouper with local load counts.
+#[derive(Debug, Clone)]
+pub struct PartialKeyGrouping {
+    /// Tuples this source has sent to each worker id.
+    sent: Vec<u64>,
+}
+
+impl PartialKeyGrouping {
+    /// `n_slots` sizes the local counter array (max worker id + 1).
+    pub fn new(n_slots: usize) -> Self {
+        PartialKeyGrouping { sent: vec![0; n_slots] }
+    }
+
+    #[inline]
+    fn ensure_slots(&mut self, n: usize) {
+        if self.sent.len() < n {
+            self.sent.resize(n, 0);
+        }
+    }
+
+    /// The two candidate workers for `key` among `workers`.
+    #[inline]
+    pub fn choices(key: Key, workers: &[WorkerId]) -> (WorkerId, WorkerId) {
+        let a = workers[hash_to(key, 1, workers.len())];
+        let b = workers[hash_to(key, 2, workers.len())];
+        (a, b)
+    }
+}
+
+impl Grouper for PartialKeyGrouping {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Pkg
+    }
+
+    #[inline]
+    fn route(&mut self, key: Key, view: &ClusterView<'_>) -> WorkerId {
+        self.ensure_slots(view.n_slots);
+        let (a, b) = Self::choices(key, view.workers);
+        let w = if self.sent[a] <= self.sent[b] { a } else { b };
+        self.sent[w] += 1;
+        w
+    }
+
+    fn on_membership_change(&mut self, view: &ClusterView<'_>) {
+        self.ensure_slots(view.n_slots);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view<'a>(workers: &'a [usize], times: &'a [f64]) -> ClusterView<'a> {
+        ClusterView { now: 0, workers, per_tuple_time: times, n_slots: times.len() }
+    }
+
+    #[test]
+    fn at_most_two_workers_per_key() {
+        let workers: Vec<usize> = (0..16).collect();
+        let times = vec![1.0; 16];
+        let v = view(&workers, &times);
+        let mut g = PartialKeyGrouping::new(16);
+        for k in 0..200u64 {
+            let mut seen = std::collections::HashSet::new();
+            for _ in 0..50 {
+                seen.insert(g.route(k, &v));
+            }
+            assert!(seen.len() <= 2, "key {k} hit {} workers", seen.len());
+        }
+    }
+
+    #[test]
+    fn uniform_keys_balance_well() {
+        let workers: Vec<usize> = (0..8).collect();
+        let times = vec![1.0; 8];
+        let v = view(&workers, &times);
+        let mut g = PartialKeyGrouping::new(8);
+        let mut counts = [0u64; 8];
+        let mut rng = crate::util::Rng::new(1);
+        for _ in 0..80_000 {
+            counts[g.route(rng.gen_range(10_000), &v)] += 1;
+        }
+        let imb = crate::metrics::Imbalance::of_counts(&counts);
+        assert!(imb.relative < 0.05, "relative imbalance {}", imb.relative);
+    }
+
+    #[test]
+    fn single_hot_key_splits_evenly_between_its_two() {
+        let workers: Vec<usize> = (0..8).collect();
+        let times = vec![1.0; 8];
+        let v = view(&workers, &times);
+        let mut g = PartialKeyGrouping::new(8);
+        let (a, b) = PartialKeyGrouping::choices(7, &workers);
+        let mut counts = [0u64; 8];
+        for _ in 0..10_000 {
+            counts[g.route(7, &v)] += 1;
+        }
+        if a == b {
+            assert_eq!(counts[a], 10_000);
+        } else {
+            assert_eq!(counts[a] + counts[b], 10_000);
+            assert!((counts[a] as i64 - counts[b] as i64).abs() <= 1);
+        }
+    }
+}

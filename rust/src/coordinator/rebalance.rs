@@ -1,0 +1,204 @@
+//! Rebalance grouping — the operator-migration family of §7 ([7]–[13]):
+//! key-hash routing plus a reactive rebalancing routine.
+//!
+//! Every `check_every` tuples the source inspects its local per-worker
+//! load; if `max/mean − 1` exceeds `imbalance_threshold`, the hottest
+//! keys of the most loaded worker are remapped to the least loaded one
+//! through an explicit **routing table**. This reproduces the two costs
+//! the paper's related-work critique names: the routing table's memory
+//! footprint grows with the number of remapped keys, and every migration
+//! implies moving the key's state between workers.
+//!
+//! Not part of the paper's evaluated scheme set; included as the §7
+//! comparison baseline (`--scheme rebalance`).
+
+use super::{ClusterView, Grouper, SchemeKind};
+use crate::sketch::SpaceSaving;
+use crate::util::hash::hash_to;
+use crate::{Key, WorkerId};
+use std::collections::HashMap;
+
+/// FG + reactive key migration.
+pub struct RebalanceGrouping {
+    /// Explicit overrides: key → worker (the routing table).
+    routing: HashMap<Key, WorkerId>,
+    /// Local per-worker tuple counts.
+    sent: Vec<u64>,
+    /// Hot-key tracker to pick migration victims.
+    hot: SpaceSaving,
+    check_every: u64,
+    imbalance_threshold: f64,
+    tuples: u64,
+    /// Migrations performed (state-move cost metric).
+    pub migrations: u64,
+}
+
+impl RebalanceGrouping {
+    /// `check_every` tuples between imbalance checks;
+    /// `imbalance_threshold` on `max/mean − 1`.
+    pub fn new(n_slots: usize, key_capacity: usize, check_every: u64, imbalance_threshold: f64) -> Self {
+        assert!(check_every > 0);
+        RebalanceGrouping {
+            routing: HashMap::new(),
+            sent: vec![0; n_slots],
+            hot: SpaceSaving::new(key_capacity),
+            check_every,
+            imbalance_threshold,
+            tuples: 0,
+            migrations: 0,
+        }
+    }
+
+    fn base_route(&self, key: Key, workers: &[WorkerId]) -> WorkerId {
+        workers[hash_to(key, 0xF1E1D, workers.len())]
+    }
+
+    /// Reactive rebalance: move the most loaded worker's hottest keys to
+    /// the least loaded worker.
+    fn maybe_rebalance(&mut self, view: &ClusterView<'_>) {
+        let loads: Vec<(WorkerId, u64)> =
+            view.workers.iter().map(|&w| (w, self.sent[w])).collect();
+        let total: u64 = loads.iter().map(|(_, l)| l).sum();
+        if total == 0 {
+            return;
+        }
+        let mean = total as f64 / loads.len() as f64;
+        let (max_w, max_l) = *loads.iter().max_by_key(|(_, l)| *l).unwrap();
+        if max_l as f64 / mean - 1.0 <= self.imbalance_threshold {
+            return;
+        }
+        let (min_w, _) = *loads.iter().min_by_key(|(_, l)| *l).unwrap();
+        // migrate the hottest keys currently mapped to max_w
+        let candidates: Vec<Key> = self
+            .hot
+            .top_n(8)
+            .into_iter()
+            .map(|(k, _)| k)
+            .filter(|&k| {
+                self.routing
+                    .get(&k)
+                    .copied()
+                    .unwrap_or_else(|| self.base_route(k, view.workers))
+                    == max_w
+            })
+            .collect();
+        for k in candidates {
+            self.routing.insert(k, min_w);
+            self.migrations += 1;
+        }
+    }
+}
+
+impl Grouper for RebalanceGrouping {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Rebalance
+    }
+
+    fn route(&mut self, key: Key, view: &ClusterView<'_>) -> WorkerId {
+        if self.sent.len() < view.n_slots {
+            self.sent.resize(view.n_slots, 0);
+        }
+        self.hot.observe(key);
+        self.tuples += 1;
+        if self.tuples % self.check_every == 0 {
+            self.maybe_rebalance(view);
+        }
+        let mut w = self
+            .routing
+            .get(&key)
+            .copied()
+            .unwrap_or_else(|| self.base_route(key, view.workers));
+        if !view.workers.contains(&w) {
+            // mapped worker died: fall back to base route and repair
+            w = self.base_route(key, view.workers);
+            self.routing.remove(&key);
+        }
+        self.sent[w] += 1;
+        w
+    }
+
+    fn on_membership_change(&mut self, view: &ClusterView<'_>) {
+        if self.sent.len() < view.n_slots {
+            self.sent.resize(view.n_slots, 0);
+        }
+        // drop overrides that point at dead workers
+        let alive: std::collections::HashSet<WorkerId> =
+            view.workers.iter().copied().collect();
+        self.routing.retain(|_, w| alive.contains(w));
+    }
+
+    fn tracked_entries(&self) -> usize {
+        // the §7 critique: the routing table is control-plane memory that
+        // grows with migrated keys
+        self.routing.len() + self.hot.entries()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view<'a>(workers: &'a [usize], times: &'a [f64]) -> ClusterView<'a> {
+        ClusterView { now: 0, workers, per_tuple_time: times, n_slots: times.len() }
+    }
+
+    #[test]
+    fn migrates_hot_key_off_overloaded_worker() {
+        let workers: Vec<usize> = (0..4).collect();
+        let times = vec![1.0; 4];
+        let v = view(&workers, &times);
+        let mut g = RebalanceGrouping::new(4, 64, 1_000, 0.5);
+        let hot_key = 7u64;
+        let home = g.base_route(hot_key, &workers);
+        let mut rng = crate::util::Rng::new(2);
+        let mut late_routes = Vec::new();
+        for i in 0..30_000 {
+            let k = if rng.gen_bool(0.6) { hot_key } else { rng.gen_range(10_000) };
+            let w = g.route(k, &v);
+            if i > 20_000 && k == hot_key {
+                late_routes.push(w);
+            }
+        }
+        assert!(g.migrations > 0, "no rebalance happened");
+        assert!(
+            late_routes.iter().any(|&w| w != home),
+            "hot key never migrated off worker {home}"
+        );
+    }
+
+    #[test]
+    fn routing_table_repairs_after_worker_death() {
+        let workers: Vec<usize> = (0..4).collect();
+        let times = vec![1.0; 4];
+        let v = view(&workers, &times);
+        let mut g = RebalanceGrouping::new(4, 64, 100, 0.1);
+        let mut rng = crate::util::Rng::new(5);
+        for _ in 0..5_000 {
+            let k = if rng.gen_bool(0.5) { 3 } else { rng.gen_range(1_000) };
+            g.route(k, &v);
+        }
+        let alive = [0usize, 1, 2];
+        let v2 = view(&alive, &times);
+        g.on_membership_change(&v2);
+        for i in 0..2_000u64 {
+            let w = g.route(i % 50, &v2);
+            assert!(w != 3, "routed to dead worker");
+        }
+    }
+
+    #[test]
+    fn control_memory_grows_with_migrations() {
+        let workers: Vec<usize> = (0..8).collect();
+        let times = vec![1.0; 8];
+        let v = view(&workers, &times);
+        let mut g = RebalanceGrouping::new(8, 256, 500, 0.05);
+        let mut rng = crate::util::Rng::new(7);
+        for _ in 0..50_000 {
+            // rotating hot keys force repeated migrations
+            let k = if rng.gen_bool(0.5) { rng.gen_range(5) } else { rng.gen_range(100_000) };
+            g.route(k, &v);
+        }
+        assert!(g.tracked_entries() > 0);
+        assert!(g.migrations >= 1);
+    }
+}

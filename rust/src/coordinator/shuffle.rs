@@ -1,0 +1,74 @@
+//! Shuffle Grouping (SG): round-robin tuple distribution.
+//!
+//! The latency-optimal baseline — perfectly even load, but every worker
+//! ends up holding state for (almost) every key, so memory overhead grows
+//! linearly with the worker count (paper Fig. 3).
+
+use super::{ClusterView, Grouper, SchemeKind};
+use crate::{Key, WorkerId};
+
+/// Round-robin grouper. Each source starts at a different offset so
+/// multiple sources don't synchronise their bursts onto the same worker.
+#[derive(Debug, Clone)]
+pub struct ShuffleGrouping {
+    next: usize,
+}
+
+impl ShuffleGrouping {
+    /// `source` staggers the starting offset.
+    pub fn new(source: usize) -> Self {
+        ShuffleGrouping { next: source }
+    }
+}
+
+impl Grouper for ShuffleGrouping {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Shuffle
+    }
+
+    #[inline]
+    fn route(&mut self, _key: Key, view: &ClusterView<'_>) -> WorkerId {
+        let w = view.workers[self.next % view.workers.len()];
+        self.next = (self.next + 1) % view.workers.len();
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view<'a>(workers: &'a [usize], times: &'a [f64]) -> ClusterView<'a> {
+        ClusterView { now: 0, workers, per_tuple_time: times, n_slots: times.len() }
+    }
+
+    #[test]
+    fn perfectly_even() {
+        let workers: Vec<usize> = (0..8).collect();
+        let times = vec![1.0; 8];
+        let v = view(&workers, &times);
+        let mut g = ShuffleGrouping::new(0);
+        let mut counts = [0usize; 8];
+        for k in 0..8_000u64 {
+            counts[g.route(k, &v)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 1000));
+    }
+
+    #[test]
+    fn survives_membership_change() {
+        let mut g = ShuffleGrouping::new(5);
+        let workers: Vec<usize> = (0..4).collect();
+        let times = vec![1.0; 4];
+        let v = view(&workers, &times);
+        for k in 0..100 {
+            assert!(g.route(k, &v) < 4);
+        }
+        let fewer = [0usize, 2];
+        let v2 = view(&fewer, &times);
+        for k in 0..100 {
+            let w = g.route(k, &v2);
+            assert!(w == 0 || w == 2);
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! W-Choices (W-C) — Nasir et al., ICDE 2016 [15].
+//!
+//! Like D-Choices but head keys may go to *any* worker (d = |workers|).
+//! Best-in-class load balance among the lifetime schemes, at the price of
+//! replicating every detected-hot key's state on the entire cluster —
+//! the memory-scalability failure mode the FISH paper measures in Fig. 3.
+
+use super::dchoices::{DChoices, HeavyHitters};
+use super::{ClusterView, Grouper, SchemeKind};
+use crate::{Key, WorkerId};
+
+/// W-Choices grouper.
+#[derive(Debug, Clone)]
+pub struct WChoices {
+    hh: HeavyHitters,
+    sent: Vec<u64>,
+    seed: u64,
+}
+
+impl WChoices {
+    /// See [`DChoices::new`] for the parameters.
+    pub fn new(n_slots: usize, key_capacity: usize, theta: f64, seed: u64) -> Self {
+        WChoices {
+            hh: HeavyHitters::new(key_capacity, theta),
+            sent: vec![0; n_slots],
+            seed,
+        }
+    }
+}
+
+impl Grouper for WChoices {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::WChoices
+    }
+
+    #[inline]
+    fn route(&mut self, key: Key, view: &ClusterView<'_>) -> WorkerId {
+        if self.sent.len() < view.n_slots {
+            self.sent.resize(view.n_slots, 0);
+        }
+        let hot = self.hh.observe_is_hot(key);
+        let w = if hot {
+            // entire worker set: least locally-loaded
+            *view
+                .workers
+                .iter()
+                .min_by_key(|&&w| self.sent[w])
+                .expect("non-empty worker set")
+        } else {
+            DChoices::pick_least_sent(&self.sent, key, self.seed, view.workers, 2)
+        };
+        self.sent[w] += 1;
+        w
+    }
+
+    fn on_membership_change(&mut self, view: &ClusterView<'_>) {
+        if self.sent.len() < view.n_slots {
+            self.sent.resize(view.n_slots, 0);
+        }
+    }
+
+    fn tracked_entries(&self) -> usize {
+        self.hh.sketch.entries()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view<'a>(workers: &'a [usize], times: &'a [f64]) -> ClusterView<'a> {
+        ClusterView { now: 0, workers, per_tuple_time: times, n_slots: times.len() }
+    }
+
+    #[test]
+    fn hot_key_spreads_to_all_workers() {
+        let workers: Vec<usize> = (0..16).collect();
+        let times = vec![1.0; 16];
+        let v = view(&workers, &times);
+        let mut g = WChoices::new(16, 100, 2.0 / 16.0, 1);
+        let mut seen = std::collections::HashSet::new();
+        let mut rng = crate::util::Rng::new(2);
+        for _ in 0..30_000 {
+            let k = if rng.gen_bool(0.6) { 0 } else { 1 + rng.gen_range(5_000) };
+            let w = g.route(k, &v);
+            if k == 0 {
+                seen.insert(w);
+            }
+        }
+        assert_eq!(seen.len(), 16, "hot key should reach all workers");
+    }
+
+    #[test]
+    fn hot_load_is_balanced() {
+        let workers: Vec<usize> = (0..8).collect();
+        let times = vec![1.0; 8];
+        let v = view(&workers, &times);
+        let mut g = WChoices::new(8, 10, 0.05, 3);
+        let mut counts = [0u64; 8];
+        for _ in 0..40_000 {
+            counts[g.route(42, &v)] += 1; // single ultra-hot key
+        }
+        let imb = crate::metrics::Imbalance::of_counts(&counts);
+        assert!(imb.relative < 0.02, "imbalance {}", imb.relative);
+    }
+}

@@ -1,0 +1,20 @@
+//! The DSPE substrate (the paper runs on Apache Storm; we build the
+//! equivalent from scratch — DESIGN.md §5).
+//!
+//! * [`sim`] — deterministic discrete-event simulator: virtual clock,
+//!   per-worker FIFO queues, heterogeneous capacities, worker churn.
+//!   Reproduces the paper's simulation experiments (Figs. 2–17) exactly
+//!   and repeatably.
+//! * [`rt`] — the "practical deployment" (paper §6.6): a real
+//!   multithreaded pipeline — source threads route through the grouping
+//!   scheme into bounded per-worker channels (backpressure), worker
+//!   threads run the actual word-count aggregation — measuring
+//!   wall-clock latency percentiles and throughput (Figs. 18–20).
+//! * [`topology`] — shared cluster description + churn scripting.
+
+pub mod rt;
+pub mod sim;
+pub mod topology;
+
+pub use sim::{SimResult, Simulator};
+pub use topology::{ChurnEvent, Topology};

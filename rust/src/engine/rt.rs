@@ -1,0 +1,299 @@
+//! The "practical deployment" engine — our Apache-Storm stand-in
+//! (paper §6.6, Figs. 18–20).
+//!
+//! Real threads, real queues, real clocks:
+//!
+//! * one thread per **source**: pulls its round-robin share of the trace,
+//!   routes each tuple through its own grouping-scheme instance, and
+//!   sends into the chosen worker's **bounded** channel (blocking send =
+//!   backpressure, exactly like Storm's max.spout.pending).
+//! * one thread per **worker**: drains its channel, updates its
+//!   word-count state (a real per-key `HashMap` — its final size *is*
+//!   the memory-overhead metric), optionally burns `P_w` of CPU per
+//!   tuple to model operator cost / heterogeneity, and records the
+//!   end-to-end latency (source-emit → processing-complete) in a local
+//!   histogram.
+//!
+//! No source↔worker communication happens besides the data channels —
+//! FISH's worker-state inference gets no hidden help.
+
+use crate::coordinator::{ClusterView, Grouper};
+use crate::metrics::Histogram;
+use crate::workload::Trace;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+/// One in-flight tuple.
+struct Msg {
+    key: crate::Key,
+    /// ns since pipeline start, from the source's emit clock.
+    emit_ns: u64,
+}
+
+/// Result of a runtime deployment run.
+#[derive(Debug, Clone)]
+pub struct RtResult {
+    /// End-to-end tuple latency (ns).
+    pub latency: Histogram,
+    /// Tuples processed per worker.
+    pub worker_counts: Vec<u64>,
+    /// Distinct keys held per worker (state size).
+    pub worker_state: Vec<usize>,
+    /// Total wall-clock duration (ns).
+    pub wall_ns: u64,
+    /// Overall throughput (tuples/sec).
+    pub throughput: f64,
+    /// Total state entries across workers.
+    pub entries: usize,
+    /// Distinct keys overall.
+    pub distinct_keys: usize,
+}
+
+impl RtResult {
+    /// Memory overhead normalised to FG (= 1 entry/key).
+    pub fn memory_normalized(&self) -> f64 {
+        if self.distinct_keys == 0 {
+            1.0
+        } else {
+            self.entries as f64 / self.distinct_keys as f64
+        }
+    }
+}
+
+/// Runtime engine configuration (decoupled from [`crate::config::Config`]
+/// so benches can drive it directly).
+#[derive(Debug, Clone)]
+pub struct RtOptions {
+    /// Bounded channel depth per worker (backpressure knob).
+    pub queue_depth: usize,
+    /// Per-tuple CPU burn per worker id (ns); empty = no burn.
+    pub per_tuple_ns: Vec<f64>,
+    /// Pace sources to this inter-arrival gap (ns); 0 = as fast as possible.
+    pub interarrival_ns: u64,
+}
+
+impl Default for RtOptions {
+    fn default() -> Self {
+        RtOptions { queue_depth: 1024, per_tuple_ns: Vec::new(), interarrival_ns: 0 }
+    }
+}
+
+/// Spin-burn approximately `ns` nanoseconds of CPU (models operator cost;
+/// sleep granularity is far too coarse at µs scales).
+#[inline]
+fn burn(ns: f64) {
+    if ns <= 0.0 {
+        return;
+    }
+    let start = Instant::now();
+    while (start.elapsed().as_nanos() as f64) < ns {
+        std::hint::spin_loop();
+    }
+}
+
+/// Run `trace` through `sources` grouper instances onto `n_workers`
+/// worker threads.
+pub fn run(
+    trace: &Arc<Trace>,
+    mut sources: Vec<Box<dyn Grouper>>,
+    n_workers: usize,
+    opts: &RtOptions,
+) -> RtResult {
+    assert!(!sources.is_empty() && n_workers > 0);
+    let per_tuple: Vec<f64> = if opts.per_tuple_ns.is_empty() {
+        vec![0.0; n_workers]
+    } else {
+        (0..n_workers)
+            .map(|w| opts.per_tuple_ns[w % opts.per_tuple_ns.len()])
+            .collect()
+    };
+
+    let mut senders: Vec<SyncSender<Msg>> = Vec::with_capacity(n_workers);
+    let mut receivers: Vec<Receiver<Msg>> = Vec::with_capacity(n_workers);
+    for _ in 0..n_workers {
+        let (tx, rx) = sync_channel::<Msg>(opts.queue_depth);
+        senders.push(tx);
+        receivers.push(rx);
+    }
+
+    let epoch = Instant::now();
+
+    // ---- workers -------------------------------------------------------
+    let mut worker_handles = Vec::with_capacity(n_workers);
+    for (w, rx) in receivers.into_iter().enumerate() {
+        let cost = per_tuple[w];
+        worker_handles.push(thread::spawn(move || {
+            let mut hist = Histogram::new();
+            let mut count = 0u64;
+            let mut state: std::collections::HashMap<crate::Key, u64> =
+                std::collections::HashMap::new();
+            while let Ok(msg) = rx.recv() {
+                // the actual operator: word count
+                *state.entry(msg.key).or_insert(0) += 1;
+                burn(cost);
+                let done_ns = epoch.elapsed().as_nanos() as u64;
+                hist.record(done_ns.saturating_sub(msg.emit_ns));
+                count += 1;
+            }
+            (hist, count, state.len())
+        }));
+    }
+
+    // ---- sources -------------------------------------------------------
+    let workers_list: Vec<usize> = (0..n_workers).collect();
+    let n_sources = sources.len();
+    let mut source_handles = Vec::with_capacity(n_sources);
+    for (s, mut grouper) in sources.drain(..).enumerate() {
+        let txs: Vec<SyncSender<Msg>> = senders.clone();
+        let trace = Arc::clone(trace);
+        let workers_list = workers_list.clone();
+        let per_tuple = per_tuple.clone();
+        let gap = opts.interarrival_ns * n_sources as u64;
+        source_handles.push(thread::spawn(move || {
+            let mut i = s;
+            let n = trace.len();
+            let mut next_emit = (s as u64) * gap / n_sources.max(1) as u64;
+            while i < n {
+                let t = trace.tuples()[i];
+                if gap > 0 {
+                    // pace the stream
+                    while (epoch.elapsed().as_nanos() as u64) < next_emit {
+                        std::hint::spin_loop();
+                    }
+                    next_emit += gap;
+                }
+                let now = epoch.elapsed().as_nanos() as u64;
+                let view = ClusterView {
+                    now,
+                    workers: &workers_list,
+                    per_tuple_time: &per_tuple,
+                    n_slots: per_tuple.len(),
+                };
+                let w = grouper.route(t.key, &view);
+                let msg = Msg { key: t.key, emit_ns: now };
+                if txs[w].send(msg).is_err() {
+                    break; // worker gone (shutdown)
+                }
+                i += n_sources;
+            }
+        }));
+    }
+
+    for h in source_handles {
+        h.join().expect("source thread panicked");
+    }
+    drop(senders); // close channels → workers drain and exit
+
+    let mut latency = Histogram::new();
+    let mut counts = Vec::with_capacity(n_workers);
+    let mut states = Vec::with_capacity(n_workers);
+    for h in worker_handles {
+        let (hist, count, state_len) = h.join().expect("worker thread panicked");
+        latency.merge(&hist);
+        counts.push(count);
+        states.push(state_len);
+    }
+    let wall_ns = epoch.elapsed().as_nanos() as u64;
+    let total: u64 = counts.iter().sum();
+    let entries: usize = states.iter().sum();
+    // distinct keys = key_space actually touched; recompute from trace
+    let mut seen = std::collections::HashSet::new();
+    for t in trace.tuples() {
+        seen.insert(t.key);
+    }
+
+    RtResult {
+        latency,
+        worker_counts: counts,
+        worker_state: states,
+        wall_ns,
+        throughput: total as f64 / (wall_ns as f64 / 1e9),
+        entries,
+        distinct_keys: seen.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::{make_kind, SchemeKind};
+    use crate::workload::{materialise, by_name};
+
+    fn small_trace() -> Arc<Trace> {
+        let mut gen = by_name("zf", 20_000, 1.5, 7);
+        Arc::new(materialise(gen.as_mut(), 0))
+    }
+
+    fn run_scheme(kind: SchemeKind, workers: usize, trace: &Arc<Trace>) -> RtResult {
+        let mut cfg = Config::default();
+        cfg.workers = workers;
+        cfg.scheme = kind;
+        cfg.interval = 2_000_000; // 2ms HWA interval at wall-clock scale
+        let sources: Vec<Box<dyn Grouper>> =
+            (0..2).map(|s| make_kind(kind, &cfg, s)).collect();
+        run(trace, sources, workers, &RtOptions::default())
+    }
+
+    #[test]
+    fn processes_every_tuple_exactly_once() {
+        let trace = small_trace();
+        for kind in [SchemeKind::Shuffle, SchemeKind::Field, SchemeKind::Fish] {
+            let r = run_scheme(kind, 4, &trace);
+            assert_eq!(r.worker_counts.iter().sum::<u64>(), 20_000, "{kind}");
+            assert!(r.throughput > 0.0);
+            assert_eq!(r.latency.count(), 20_000);
+        }
+    }
+
+    #[test]
+    fn fg_state_is_partitioned_sg_state_is_replicated() {
+        let trace = small_trace();
+        let fg = run_scheme(SchemeKind::Field, 8, &trace);
+        let sg = run_scheme(SchemeKind::Shuffle, 8, &trace);
+        assert_eq!(fg.entries, fg.distinct_keys);
+        assert!((fg.memory_normalized() - 1.0).abs() < 1e-9);
+        assert!(
+            sg.memory_normalized() > 1.5 * fg.memory_normalized(),
+            "SG {}",
+            sg.memory_normalized()
+        );
+    }
+
+    #[test]
+    fn backpressure_bounds_queues() {
+        // tiny queues must not deadlock or drop tuples
+        let trace = small_trace();
+        let mut cfg = Config::default();
+        cfg.workers = 4;
+        cfg.scheme = SchemeKind::Shuffle;
+        let sources: Vec<Box<dyn Grouper>> =
+            (0..2).map(|s| make_kind(SchemeKind::Shuffle, &cfg, s)).collect();
+        let opts = RtOptions { queue_depth: 2, ..Default::default() };
+        let r = run(&trace, sources, 4, &opts);
+        assert_eq!(r.worker_counts.iter().sum::<u64>(), 20_000);
+    }
+
+    #[test]
+    fn heterogeneous_burn_shifts_load_under_fish() {
+        let trace = small_trace();
+        let mut cfg = Config::default();
+        cfg.workers = 4;
+        cfg.scheme = SchemeKind::Fish;
+        cfg.interval = 1_000_000;
+        let sources: Vec<Box<dyn Grouper>> =
+            (0..2).map(|s| make_kind(SchemeKind::Fish, &cfg, s)).collect();
+        let opts = RtOptions {
+            queue_depth: 256,
+            per_tuple_ns: vec![4_000.0, 4_000.0, 1_000.0, 1_000.0],
+            interarrival_ns: 0,
+        };
+        let r = run(&trace, sources, 4, &opts);
+        assert_eq!(r.worker_counts.iter().sum::<u64>(), 20_000);
+        let slow = r.worker_counts[0] + r.worker_counts[1];
+        let fast = r.worker_counts[2] + r.worker_counts[3];
+        assert!(fast > slow, "fast workers should absorb more: {fast} vs {slow}");
+    }
+}

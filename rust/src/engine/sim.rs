@@ -1,0 +1,266 @@
+//! Deterministic discrete-event DSPE simulator.
+//!
+//! Model (paper §6.1 "Simulation Settings"): tuples arrive at the
+//! sources via shuffle grouping (round-robin over sources), each source
+//! routes through its own grouping-scheme instance, and each worker is a
+//! FIFO queue with a fixed per-tuple service time `P_w` (heterogeneous
+//! capacities = different `P_w`). Virtual time advances with tuple
+//! arrivals (`interarrival_ns` apart); a tuple's completion is
+//!
+//! ```text
+//! done_w ← max(done_w, arrival) + P_w        latency = done_w − arrival
+//! ```
+//!
+//! Outputs: the paper's three metrics — *execution time* (makespan =
+//! when the last worker drains, Figs. 9–16), *latency* distribution
+//! (Fig. 2), and *memory overhead* (distinct (key, worker) state entries,
+//! Figs. 3, 11–17) — plus imbalance diagnostics.
+
+use super::topology::Topology;
+use crate::coordinator::{ClusterView, Grouper};
+use crate::metrics::{Histogram, Imbalance, MemoryTracker};
+use crate::workload::Generator;
+use crate::WorkerId;
+
+/// Everything a simulation run produces.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Per-tuple queueing latency (virtual ns).
+    pub latency: Histogram,
+    /// Virtual time at which the last worker finished.
+    pub makespan: u64,
+    /// Tuples processed per worker id.
+    pub worker_counts: Vec<u64>,
+    /// Busy time per worker id (virtual ns).
+    pub worker_busy: Vec<f64>,
+    /// State-replication accounting.
+    pub entries: usize,
+    /// Distinct keys observed (FG-optimal entry count).
+    pub distinct_keys: usize,
+    /// Memory overhead normalised to FG.
+    pub memory_normalized: f64,
+    /// Control-plane entries tracked by the groupers (sketches, memos).
+    pub control_entries: usize,
+    /// Tuples simulated.
+    pub tuples: usize,
+    /// State entries that resided on workers removed by churn and thus
+    /// had to migrate (Fig. 17 cost component).
+    pub churn_migrations: usize,
+}
+
+impl SimResult {
+    /// Load imbalance over worker busy-time.
+    pub fn imbalance(&self) -> Imbalance {
+        let busy: Vec<f64> = self
+            .worker_busy
+            .iter()
+            .copied()
+            .filter(|&b| b > 0.0 || true)
+            .collect();
+        Imbalance::of(&busy)
+    }
+
+    /// Mean latency in virtual ns.
+    pub fn mean_latency(&self) -> f64 {
+        self.latency.mean()
+    }
+}
+
+/// The simulator: drives one workload through one scheme.
+pub struct Simulator {
+    topology: Topology,
+    sources: Vec<Box<dyn Grouper>>,
+    interarrival_ns: u64,
+}
+
+impl Simulator {
+    /// `sources` — one grouper per source (they route independently,
+    /// exactly like Storm tasks).
+    pub fn new(topology: Topology, sources: Vec<Box<dyn Grouper>>, interarrival_ns: u64) -> Self {
+        assert!(!sources.is_empty());
+        Simulator { topology, sources, interarrival_ns }
+    }
+
+    /// Run `gen` to completion.
+    pub fn run(&mut self, gen: &mut (dyn Generator + Send)) -> SimResult {
+        let n = gen.len();
+        let n_slots = self.topology.n_slots();
+        let mut done: Vec<u64> = vec![0; n_slots]; // worker available-at
+        let mut counts: Vec<u64> = vec![0; n_slots];
+        let mut busy: Vec<f64> = vec![0.0; n_slots];
+        let mut latency = Histogram::new();
+        let mut memory = MemoryTracker::new();
+        let mut churn_migrations = 0usize;
+        let n_sources = self.sources.len();
+
+        for i in 0..n {
+            // scripted churn (paper §6.5)
+            if self.topology.pending_churn() > 0 && self.topology.apply_churn(i) {
+                let view = ClusterView {
+                    now: i as u64 * self.interarrival_ns,
+                    workers: self.topology.workers(),
+                    per_tuple_time: self.topology.per_tuple_time(),
+                    n_slots: self.topology.n_slots(),
+                };
+                for s in self.sources.iter_mut() {
+                    s.on_membership_change(&view);
+                }
+                // entries stranded on now-dead workers must migrate
+                let alive: std::collections::HashSet<WorkerId> =
+                    self.topology.workers().iter().copied().collect();
+                churn_migrations += memory.entries_on(|w| !alive.contains(&w));
+            }
+
+            let key = gen.key_at(i);
+            let arrival = i as u64 * self.interarrival_ns;
+            let src = i % n_sources;
+            let view = ClusterView {
+                now: arrival,
+                workers: self.topology.workers(),
+                per_tuple_time: self.topology.per_tuple_time(),
+                n_slots,
+            };
+            let w = self.sources[src].route(key, &view);
+            debug_assert!(self.topology.workers().contains(&w), "routed to dead worker {w}");
+
+            let p = self.topology.per_tuple_time()[w];
+            let start = done[w].max(arrival);
+            let finish = start + p as u64;
+            latency.record(finish - arrival);
+            done[w] = finish;
+            counts[w] += 1;
+            busy[w] += p;
+            memory.touch(key, w);
+        }
+
+        let makespan = done.iter().copied().max().unwrap_or(0);
+        SimResult {
+            latency,
+            makespan,
+            worker_counts: counts,
+            worker_busy: busy,
+            entries: memory.entries(),
+            distinct_keys: memory.distinct_keys(),
+            memory_normalized: memory.normalized(),
+            control_entries: self.sources.iter().map(|s| s.tracked_entries()).sum(),
+            tuples: n,
+            churn_migrations,
+        }
+    }
+}
+
+/// Convenience: run one (scheme, workload) pair from a [`Config`].
+pub fn run_config(cfg: &crate::config::Config) -> SimResult {
+    let topology = Topology::from_config(cfg);
+    let sources: Vec<Box<dyn Grouper>> = (0..cfg.sources)
+        .map(|s| crate::coordinator::make_scheme(cfg, s))
+        .collect();
+    let mut sim = Simulator::new(topology, sources, cfg.interarrival_ns);
+    let mut gen = crate::workload::by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
+    sim.run(gen.as_mut())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::SchemeKind;
+
+    fn run(kind: SchemeKind, workers: usize, tuples: usize, z: f64) -> SimResult {
+        let mut cfg = Config::default();
+        cfg.scheme = kind;
+        cfg.workers = workers;
+        cfg.tuples = tuples;
+        cfg.zipf_z = z;
+        cfg.sources = 2;
+        // arrival rate ≈ service rate × workers: contention without overload
+        cfg.service_ns = 1_000;
+        cfg.interarrival_ns = 1_000 / workers as u64 + 20;
+        run_config(&cfg)
+    }
+
+    #[test]
+    fn sg_balances_fg_does_not_on_skew() {
+        let sg = run(SchemeKind::Shuffle, 16, 60_000, 1.8);
+        let fg = run(SchemeKind::Field, 16, 60_000, 1.8);
+        assert!(sg.imbalance().relative < 0.05, "SG imbalance {}", sg.imbalance().relative);
+        assert!(
+            fg.imbalance().relative > 1.0,
+            "FG should be badly imbalanced, got {}",
+            fg.imbalance().relative
+        );
+        assert!(fg.makespan > sg.makespan);
+    }
+
+    #[test]
+    fn fg_is_memory_optimal_sg_is_not() {
+        let sg = run(SchemeKind::Shuffle, 16, 100_000, 1.6);
+        let fg = run(SchemeKind::Field, 16, 100_000, 1.6);
+        assert!((fg.memory_normalized - 1.0).abs() < 1e-9);
+        // bounded below by the repeated-key mass; singletons keep the
+        // normalised value well under the 16x worst case at this scale.
+        assert!(sg.memory_normalized > 2.5, "SG normalized {}", sg.memory_normalized);
+    }
+
+    #[test]
+    fn fish_close_to_sg_latency_and_fg_memory() {
+        // The paper's headline: FISH ≈ SG execution time at ≈ FG memory.
+        let sg = run(SchemeKind::Shuffle, 16, 80_000, 1.6);
+        let fg = run(SchemeKind::Field, 16, 80_000, 1.6);
+        let fish = run(SchemeKind::Fish, 16, 80_000, 1.6);
+        let exec_ratio = fish.makespan as f64 / sg.makespan as f64;
+        assert!(exec_ratio < 1.6, "FISH/SG makespan {exec_ratio}");
+        assert!(fish.makespan < fg.makespan, "FISH should beat FG");
+        // compare replication *overhead above FG-optimal* (mem − 1):
+        // FISH must stay within a third of SG's overhead.
+        let fish_over = fish.memory_normalized - 1.0;
+        let sg_over = sg.memory_normalized - 1.0;
+        assert!(
+            fish_over < sg_over / 3.0,
+            "FISH overhead {fish_over} vs SG {sg_over}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(SchemeKind::Fish, 8, 20_000, 1.4);
+        let b = run(SchemeKind::Fish, 8, 20_000, 1.4);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.worker_counts, b.worker_counts);
+        assert_eq!(a.entries, b.entries);
+    }
+
+    #[test]
+    fn all_schemes_route_every_tuple() {
+        for kind in SchemeKind::all() {
+            let r = run(kind, 8, 10_000, 1.5);
+            assert_eq!(r.worker_counts.iter().sum::<u64>(), 10_000, "{kind}");
+            assert_eq!(r.tuples, 10_000);
+            assert!(r.makespan > 0);
+        }
+    }
+
+    #[test]
+    fn churn_mid_stream_keeps_invariants() {
+        use crate::engine::topology::ChurnEvent;
+        let mut cfg = Config::default();
+        cfg.scheme = SchemeKind::Fish;
+        cfg.workers = 8;
+        cfg.tuples = 30_000;
+        cfg.sources = 2;
+        cfg.interarrival_ns = 150;
+        let topology = Topology::from_config(&cfg).with_churn(
+            vec![(10_000, ChurnEvent::Remove(3)), (20_000, ChurnEvent::Add(8))],
+            cfg.service_ns as f64,
+        );
+        let sources: Vec<Box<dyn Grouper>> = (0..cfg.sources)
+            .map(|s| crate::coordinator::make_scheme(&cfg, s))
+            .collect();
+        let mut sim = Simulator::new(topology, sources, cfg.interarrival_ns);
+        let mut gen = crate::workload::by_name("zf", cfg.tuples, 1.5, cfg.seed);
+        let r = sim.run(gen.as_mut());
+        assert_eq!(r.worker_counts.iter().sum::<u64>(), 30_000);
+        // worker 8 only exists after tuple 20k; worker 3 stops at 10k
+        assert!(r.worker_counts[8] > 0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Cluster topology: worker set, capacities, and scripted churn.
+
+use crate::config::Config;
+use crate::WorkerId;
+
+/// A scripted worker-set change (paper §6.5's dynamic scenario).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnEvent {
+    /// Bring a new worker online.
+    Add(WorkerId),
+    /// Remove (crash/decommission) a worker.
+    Remove(WorkerId),
+}
+
+/// The cluster as the engines see it.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// Alive worker ids, ascending.
+    workers: Vec<WorkerId>,
+    /// `P_w`: per-tuple processing time, indexed by worker id (slots for
+    /// workers that may join later are pre-sized).
+    per_tuple_time: Vec<f64>,
+    /// Scripted churn: (tuple index, event), ascending by index.
+    churn: Vec<(usize, ChurnEvent)>,
+    next_churn: usize,
+}
+
+impl Topology {
+    /// Homogeneous-or-cycled capacities from `cfg` (capacity `c` means
+    /// per-tuple time `service_ns / c`).
+    pub fn from_config(cfg: &Config) -> Self {
+        let caps = cfg.capacity_vec();
+        let per_tuple_time: Vec<f64> =
+            caps.iter().map(|&c| cfg.service_ns as f64 / c).collect();
+        Topology {
+            workers: (0..cfg.workers).collect(),
+            per_tuple_time,
+            churn: Vec::new(),
+            next_churn: 0,
+        }
+    }
+
+    /// Explicit construction (tests, ablations).
+    pub fn new(workers: Vec<WorkerId>, per_tuple_time: Vec<f64>) -> Self {
+        assert!(workers.iter().all(|&w| w < per_tuple_time.len()));
+        Topology { workers, per_tuple_time, churn: Vec::new(), next_churn: 0 }
+    }
+
+    /// Script churn events (must be sorted by tuple index). Added workers
+    /// get `per_tuple_time` extended with `time` if their id is new.
+    pub fn with_churn(mut self, churn: Vec<(usize, ChurnEvent)>, new_worker_time: f64) -> Self {
+        for &(_, ev) in &churn {
+            if let ChurnEvent::Add(w) = ev {
+                if w >= self.per_tuple_time.len() {
+                    self.per_tuple_time.resize(w + 1, new_worker_time);
+                } else {
+                    self.per_tuple_time[w] = new_worker_time;
+                }
+            }
+        }
+        debug_assert!(churn.windows(2).all(|p| p[0].0 <= p[1].0));
+        self.churn = churn;
+        self
+    }
+
+    /// Alive workers.
+    pub fn workers(&self) -> &[WorkerId] {
+        &self.workers
+    }
+
+    /// `P_w` table (index by worker id).
+    pub fn per_tuple_time(&self) -> &[f64] {
+        &self.per_tuple_time
+    }
+
+    /// Array sizing for per-worker state.
+    pub fn n_slots(&self) -> usize {
+        self.per_tuple_time.len()
+    }
+
+    /// Apply any churn events due at `tuple_idx`; returns true if the
+    /// membership changed (callers must notify groupers).
+    pub fn apply_churn(&mut self, tuple_idx: usize) -> bool {
+        let mut changed = false;
+        while self.next_churn < self.churn.len() && self.churn[self.next_churn].0 <= tuple_idx {
+            match self.churn[self.next_churn].1 {
+                ChurnEvent::Add(w) => {
+                    if !self.workers.contains(&w) {
+                        self.workers.push(w);
+                        self.workers.sort_unstable();
+                        changed = true;
+                    }
+                }
+                ChurnEvent::Remove(w) => {
+                    let before = self.workers.len();
+                    self.workers.retain(|&x| x != w);
+                    changed |= self.workers.len() != before;
+                }
+            }
+            self.next_churn += 1;
+        }
+        changed
+    }
+
+    /// Remaining scripted events.
+    pub fn pending_churn(&self) -> usize {
+        self.churn.len() - self.next_churn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_config_cycles_capacities() {
+        let mut cfg = Config::default();
+        cfg.workers = 4;
+        cfg.service_ns = 1_000;
+        cfg.capacities = vec![1.0, 2.0];
+        let t = Topology::from_config(&cfg);
+        assert_eq!(t.per_tuple_time(), &[1_000.0, 500.0, 1_000.0, 500.0]);
+        assert_eq!(t.workers(), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn churn_applies_in_order() {
+        let mut t = Topology::new(vec![0, 1, 2], vec![1.0; 3]).with_churn(
+            vec![(100, ChurnEvent::Remove(1)), (200, ChurnEvent::Add(3))],
+            2.0,
+        );
+        assert!(!t.apply_churn(50));
+        assert!(t.apply_churn(150));
+        assert_eq!(t.workers(), &[0, 2]);
+        assert!(t.apply_churn(250));
+        assert_eq!(t.workers(), &[0, 2, 3]);
+        assert_eq!(t.per_tuple_time()[3], 2.0);
+        assert_eq!(t.pending_churn(), 0);
+    }
+
+    #[test]
+    fn duplicate_ops_are_idempotent() {
+        let mut t = Topology::new(vec![0, 1], vec![1.0; 2]).with_churn(
+            vec![(10, ChurnEvent::Remove(1)), (20, ChurnEvent::Remove(1))],
+            1.0,
+        );
+        assert!(t.apply_churn(15));
+        assert!(!t.apply_churn(25)); // already gone: no change
+        assert_eq!(t.workers(), &[0]);
+    }
+}

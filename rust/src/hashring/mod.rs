@@ -1,0 +1,5 @@
+//! Consistent hashing with virtual nodes (paper §5).
+
+pub mod ring;
+
+pub use ring::HashRing;

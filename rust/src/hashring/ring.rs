@@ -1,0 +1,239 @@
+//! Consistent-hash ring with virtual nodes — paper §5.
+//!
+//! Keys and workers hash onto a 2^32 ring (SHA-1, per the paper's choice
+//! of RFC 3174 [35]); a key is owned by the first worker clockwise.
+//! `vnodes` virtual nodes per worker smooth small-cluster imbalance
+//! (paper Fig. 8(d)). Worker addition/removal remaps only the arc
+//! between the affected virtual nodes — the monotonicity property the
+//! paper needs so state migration stays small.
+//!
+//! `candidates(key, d)` returns the `d` distinct workers clockwise from
+//! the key's position: this is how CHK's per-key candidate sets stay
+//! stable under worker churn (paper §4.1.2 "we assign workers for each
+//! key through a consistent hash").
+
+use crate::{Key, WorkerId};
+use sha1::{Digest, Sha1};
+
+/// Ring point: (position, worker).
+type Point = (u32, WorkerId);
+
+/// Consistent-hash ring with virtual nodes.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    points: Vec<Point>, // sorted by position
+    vnodes: usize,
+    workers: Vec<WorkerId>,
+}
+
+fn sha1_u32(bytes: &[u8]) -> u32 {
+    let digest = Sha1::digest(bytes);
+    u32::from_be_bytes([digest[0], digest[1], digest[2], digest[3]])
+}
+
+impl HashRing {
+    /// Build a ring over `workers` with `vnodes` virtual nodes each.
+    pub fn new(workers: &[WorkerId], vnodes: usize) -> Self {
+        assert!(vnodes > 0, "need at least one virtual node per worker");
+        let mut ring = HashRing { points: Vec::new(), vnodes, workers: Vec::new() };
+        for &w in workers {
+            ring.add_worker(w);
+        }
+        ring
+    }
+
+    /// Virtual nodes per worker.
+    pub fn vnodes(&self) -> usize {
+        self.vnodes
+    }
+
+    /// Current worker set (insertion order).
+    pub fn workers(&self) -> &[WorkerId] {
+        &self.workers
+    }
+
+    fn vnode_pos(worker: WorkerId, replica: usize) -> u32 {
+        let mut buf = [0u8; 16];
+        buf[..8].copy_from_slice(&(worker as u64).to_le_bytes());
+        buf[8..].copy_from_slice(&(replica as u64).to_le_bytes());
+        sha1_u32(&buf)
+    }
+
+    /// Key lookup position. Worker vnodes use SHA-1 (per the paper's
+    /// choice, RFC 3174); key lookups run on every routed tuple, so they
+    /// use a multiplicative 64-bit mix instead — identical uniformity on
+    /// the 2^32 ring at ~10× less cost (§Perf pass; SHA-1 of 8 bytes was
+    /// a measurable slice of FISH's route()).
+    #[inline]
+    fn key_pos(key: Key) -> u32 {
+        (crate::util::hash::mix64(key ^ 0x52_49_4E_47) >> 32) as u32
+    }
+
+    /// Add a worker's virtual nodes to the ring (paper Fig. 8(c)).
+    pub fn add_worker(&mut self, worker: WorkerId) {
+        if self.workers.contains(&worker) {
+            return;
+        }
+        self.workers.push(worker);
+        for r in 0..self.vnodes {
+            let pos = Self::vnode_pos(worker, r);
+            let idx = self.points.partition_point(|&(p, w)| (p, w) < (pos, worker));
+            self.points.insert(idx, (pos, worker));
+        }
+    }
+
+    /// Remove a worker (paper Fig. 8(b)).
+    pub fn remove_worker(&mut self, worker: WorkerId) {
+        self.workers.retain(|&w| w != worker);
+        self.points.retain(|&(_, w)| w != worker);
+    }
+
+    /// Owner of `key`: first worker clockwise from the key position.
+    pub fn owner(&self, key: Key) -> Option<WorkerId> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let pos = Self::key_pos(key);
+        let idx = self.points.partition_point(|&(p, _)| p < pos);
+        let idx = if idx == self.points.len() { 0 } else { idx };
+        Some(self.points[idx].1)
+    }
+
+    /// The first `d` *distinct* workers clockwise from `key`'s position.
+    /// Returns fewer when the ring has fewer than `d` workers.
+    pub fn candidates(&self, key: Key, d: usize) -> Vec<WorkerId> {
+        let mut out = Vec::with_capacity(d.min(self.workers.len()));
+        self.candidates_into(key, d, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`HashRing::candidates`]: fills `out`
+    /// (cleared first). The FISH hot path reuses one buffer per grouper.
+    pub fn candidates_into(&self, key: Key, d: usize, out: &mut Vec<WorkerId>) {
+        out.clear();
+        if self.points.is_empty() || d == 0 {
+            return;
+        }
+        let pos = Self::key_pos(key);
+        let start = self.points.partition_point(|&(p, _)| p < pos);
+        for i in 0..self.points.len() {
+            let (_, w) = self.points[(start + i) % self.points.len()];
+            if !out.contains(&w) {
+                out.push(w);
+                if out.len() == d {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn owner_is_deterministic_and_total() {
+        let ring = HashRing::new(&[0, 1, 2, 3], 32);
+        for k in 0..1000u64 {
+            let a = ring.owner(k).unwrap();
+            let b = ring.owner(k).unwrap();
+            assert_eq!(a, b);
+            assert!(a < 4);
+        }
+    }
+
+    #[test]
+    fn removal_only_remaps_owned_arcs() {
+        // Monotonicity: keys not owned by the removed worker keep owners.
+        let mut ring = HashRing::new(&[0, 1, 2, 3, 4, 5, 6, 7], 64);
+        let before: HashMap<u64, WorkerId> =
+            (0..5_000u64).map(|k| (k, ring.owner(k).unwrap())).collect();
+        ring.remove_worker(3);
+        for (k, w) in &before {
+            let now = ring.owner(*k).unwrap();
+            if *w != 3 {
+                assert_eq!(now, *w, "key {k} moved needlessly");
+            } else {
+                assert_ne!(now, 3);
+            }
+        }
+    }
+
+    #[test]
+    fn addition_steals_bounded_fraction() {
+        let mut ring = HashRing::new(&(0..8).collect::<Vec<_>>(), 64);
+        let before: HashMap<u64, WorkerId> =
+            (0..5_000u64).map(|k| (k, ring.owner(k).unwrap())).collect();
+        ring.add_worker(8);
+        let moved = (0..5_000u64)
+            .filter(|k| ring.owner(*k).unwrap() != before[k])
+            .count();
+        // new worker should own ≈ 1/9 of keys; everything that moved must
+        // have moved TO the new worker.
+        for k in 0..5_000u64 {
+            let now = ring.owner(k).unwrap();
+            if now != before[&k] {
+                assert_eq!(now, 8);
+            }
+        }
+        let frac = moved as f64 / 5_000.0;
+        assert!(frac < 0.25, "moved {frac}");
+    }
+
+    #[test]
+    fn vnodes_balance_small_clusters() {
+        // Paper Fig. 8(d): virtual nodes even out a 2-worker ring.
+        let few = HashRing::new(&[0, 1], 1);
+        let many = HashRing::new(&[0, 1], 128);
+        let share = |ring: &HashRing| {
+            let n = (0..20_000u64).filter(|&k| ring.owner(k) == Some(0)).count();
+            n as f64 / 20_000.0
+        };
+        let imb_few = (share(&few) - 0.5).abs();
+        let imb_many = (share(&many) - 0.5).abs();
+        assert!(imb_many < 0.05, "vnode ring imbalance {imb_many}");
+        assert!(imb_many <= imb_few + 0.01);
+    }
+
+    #[test]
+    fn candidates_distinct_ordered_stable() {
+        let ring = HashRing::new(&(0..16).collect::<Vec<_>>(), 32);
+        for k in 0..500u64 {
+            let c = ring.candidates(k, 5);
+            assert_eq!(c.len(), 5);
+            let set: std::collections::HashSet<_> = c.iter().collect();
+            assert_eq!(set.len(), 5);
+            assert_eq!(c[0], ring.owner(k).unwrap());
+        }
+        // d > workers clamps
+        assert_eq!(ring.candidates(1, 99).len(), 16);
+    }
+
+    #[test]
+    fn candidate_sets_survive_unrelated_churn() {
+        // Removing one worker must not reshuffle candidate sets that
+        // didn't contain it (the property CHK relies on).
+        let mut ring = HashRing::new(&(0..12).collect::<Vec<_>>(), 64);
+        let before: Vec<Vec<WorkerId>> =
+            (0..2_000u64).map(|k| ring.candidates(k, 3)).collect();
+        ring.remove_worker(7);
+        for (k, prev) in before.iter().enumerate() {
+            if !prev.contains(&7) {
+                assert_eq!(ring.candidates(k as u64, 3), *prev);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_ring_behaviour() {
+        let mut ring = HashRing::new(&[], 8);
+        assert_eq!(ring.owner(1), None);
+        assert!(ring.candidates(1, 2).is_empty());
+        ring.add_worker(0);
+        assert_eq!(ring.owner(1), Some(0));
+        ring.remove_worker(0);
+        assert_eq!(ring.owner(1), None);
+    }
+}

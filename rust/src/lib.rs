@@ -1,0 +1,50 @@
+//! # FISH — Efficient Time-Evolving Stream Processing at Scale
+//!
+//! A from-scratch reproduction of the FISH grouping scheme (Yu Huang,
+//! 2018) and the distributed-stream-processing substrate it runs on, as
+//! the Layer-3 coordinator of a Rust + JAX + Pallas stack.
+//!
+//! The library is organised as:
+//!
+//! * [`workload`] — time-evolving stream generators (Zipf per the paper's
+//!   §6.1 spec, MemeTracker-like and Amazon-Movie-like synthetic traces).
+//! * [`sketch`] — frequency statistics: SpaceSaving (paper Alg. 1
+//!   intra-epoch counter set) and a count-min sketch bit-compatible with
+//!   the Pallas kernel in `python/compile/kernels/cms.py`.
+//! * [`hashring`] — consistent hashing with virtual nodes (paper §5).
+//! * [`coordinator`] — the grouping schemes: Shuffle, Field, Partial-Key,
+//!   D-Choices, W-Choices and FISH (epoch identification + CHK + HWA).
+//! * [`engine`] — the DSPE substrate: a deterministic discrete-event
+//!   simulator (paper Figs. 2–17) and a real multithreaded runtime with
+//!   bounded-queue backpressure (the Apache-Storm stand-in, Figs. 18–20).
+//! * [`runtime`] — PJRT bridge: loads the AOT-compiled `epoch_stats` HLO
+//!   artifacts and runs them from the coordinator hot path.
+//! * [`metrics`], [`config`], [`cli`], [`report`], [`testing`], [`util`]
+//!   — supporting substrates (hand-rolled: the build is offline).
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod hashring;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod sketch;
+pub mod state;
+pub mod testing;
+pub mod util;
+pub mod workload;
+
+/// A stream key. Keys are interned to dense ids by the workload layer;
+/// the coordinator never sees raw strings on the hot path.
+pub type Key = u64;
+
+/// Index of a worker (downstream operator instance).
+pub type WorkerId = usize;
+
+/// Index of a source (upstream operator instance).
+pub type SourceId = usize;

@@ -1,0 +1,192 @@
+//! `fish` — leader entrypoint / CLI.
+//!
+//! ```text
+//! fish sim     --scheme fish --workload zf --workers 64 ...   simulator run
+//! fish deploy  --scheme fish --workload mt --workers 32 ...   threaded runtime run
+//! fish compare --workload zf --workers 16,32,64,128           all schemes side by side
+//! fish info                                                   artifact + platform info
+//! ```
+//!
+//! Every flag mirrors a [`fish::config::Config`] field; `--config
+//! path.toml` loads a file first, flags override.
+
+use fish::cli::Args;
+use fish::config::Config;
+use fish::coordinator::{Grouper, SchemeKind};
+use fish::engine::{sim, Topology};
+use fish::report::{f2, ns, ratio, Table};
+use std::sync::Arc;
+
+fn load_config(args: &Args) -> anyhow::Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    args.apply_to_config(&mut cfg)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Build per-source groupers, honouring `--identifier xla-cms` for FISH.
+fn build_sources(cfg: &Config) -> anyhow::Result<Vec<Box<dyn Grouper>>> {
+    if cfg.scheme == SchemeKind::Fish && cfg.identifier == "xla-cms" {
+        eprintln!("[fish] XLA identifier: PJRT CPU service per source (artifacts: {})", cfg.artifacts_dir);
+        (0..cfg.sources)
+            .map(|_| {
+                fish::runtime::make_fish_xla(cfg).map(|f| Box::new(f) as Box<dyn Grouper>)
+            })
+            .collect()
+    } else {
+        Ok((0..cfg.sources).map(|s| fish::coordinator::make_scheme(cfg, s)).collect())
+    }
+}
+
+fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let topology = Topology::from_config(&cfg);
+    let sources = build_sources(&cfg)?;
+    let mut simulator = sim::Simulator::new(topology, sources, cfg.interarrival_ns);
+    let mut gen = fish::workload::by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
+    let start = std::time::Instant::now();
+    let r = simulator.run(gen.as_mut());
+    let wall = start.elapsed();
+
+    let (mean, p50, p95, p99) = r.latency.summary();
+    let mut t = Table::new(
+        &format!(
+            "sim: {} on {} ({} tuples, {} workers)",
+            cfg.scheme, cfg.workload, r.tuples, cfg.workers
+        ),
+        &["metric", "value"],
+    );
+    t.row(&["makespan".into(), ns(r.makespan)]);
+    t.row(&["latency mean".into(), ns(mean as u64)]);
+    t.row(&["latency p50".into(), ns(p50)]);
+    t.row(&["latency p95".into(), ns(p95)]);
+    t.row(&["latency p99".into(), ns(p99)]);
+    t.row(&["imbalance max/mean-1".into(), f2(r.imbalance().relative)]);
+    t.row(&["state entries".into(), r.entries.to_string()]);
+    t.row(&["distinct keys".into(), r.distinct_keys.to_string()]);
+    t.row(&["memory vs FG".into(), ratio(r.memory_normalized)]);
+    t.row(&["control entries".into(), r.control_entries.to_string()]);
+    t.row(&["wall time".into(), format!("{wall:.2?}")]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_deploy(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let mut gen = fish::workload::by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
+    let trace = Arc::new(fish::workload::materialise(gen.as_mut(), cfg.interarrival_ns));
+    let sources = build_sources(&cfg)?;
+    let opts = fish::engine::rt::RtOptions {
+        queue_depth: 1024,
+        per_tuple_ns: cfg
+            .capacity_vec()
+            .iter()
+            .map(|&c| cfg.service_ns as f64 / c)
+            .collect(),
+        interarrival_ns: cfg.interarrival_ns,
+    };
+    let r = fish::engine::rt::run(&trace, sources, cfg.workers, &opts);
+    let (mean, p50, p95, p99) = r.latency.summary();
+    let mut t = Table::new(
+        &format!(
+            "deploy: {} on {} ({} tuples, {} sources, {} workers)",
+            cfg.scheme, cfg.workload, trace.len(), cfg.sources, cfg.workers
+        ),
+        &["metric", "value"],
+    );
+    t.row(&["throughput".into(), format!("{:.0} tuples/s", r.throughput)]);
+    t.row(&["latency mean".into(), ns(mean as u64)]);
+    t.row(&["latency p50".into(), ns(p50)]);
+    t.row(&["latency p95".into(), ns(p95)]);
+    t.row(&["latency p99".into(), ns(p99)]);
+    t.row(&["state entries".into(), r.entries.to_string()]);
+    t.row(&["memory vs FG".into(), ratio(r.memory_normalized())]);
+    t.row(&["wall time".into(), ns(r.wall_ns)]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    let base = load_config(args)?;
+    let worker_counts: Vec<usize> = args
+        .get_list("worker-counts", &[16usize, 32, 64, 128])
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut t = Table::new(
+        &format!("compare on {} ({} tuples)", base.workload, base.tuples),
+        &["workers", "scheme", "exec (vs SG)", "p99", "mem (vs FG)"],
+    );
+    for &w in &worker_counts {
+        let mut sg_makespan = 0u64;
+        for kind in SchemeKind::all() {
+            let mut cfg = base.clone();
+            cfg.scheme = kind;
+            cfg.workers = w;
+            cfg.interarrival_ns = (cfg.service_ns / w as u64).max(1);
+            let r = sim::run_config(&cfg);
+            if kind == SchemeKind::Shuffle {
+                sg_makespan = r.makespan;
+            }
+            let exec = if sg_makespan > 0 {
+                ratio(r.makespan as f64 / sg_makespan as f64)
+            } else {
+                "-".into()
+            };
+            t.row(&[
+                w.to_string(),
+                kind.name().into(),
+                exec,
+                ns(r.latency.quantile(0.99)),
+                ratio(r.memory_normalized),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    println!("fish {} — FISH grouping for time-evolving streams", env!("CARGO_PKG_VERSION"));
+    match fish::runtime::Runtime::new(&cfg.artifacts_dir) {
+        Ok(rt) => {
+            println!("PJRT platform : {}", rt.platform());
+            for v in rt.variants() {
+                println!(
+                    "artifact      : {} (N={}, C={}, sketch {}x{})",
+                    v.name, v.n, v.c, v.depth, v.width
+                );
+            }
+        }
+        Err(e) => println!("artifacts     : unavailable ({e}) — run `make artifacts`"),
+    }
+    println!("schemes       : sg fg pkg dc wc fish");
+    println!("workloads     : zf (synthetic Zipf), mt (MemeTracker-like), am (AmazonMovie-like)");
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: fish <sim|deploy|compare|info> [--config file.toml] [--scheme S] \
+         [--workload zf|mt|am] [--tuples N] [--workers N] [--zipf_z Z] \
+         [--identifier native|xla-cms] [--seed N] ..."
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(true).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        usage()
+    });
+    match args.command.as_deref() {
+        Some("sim") => cmd_sim(&args),
+        Some("deploy") => cmd_deploy(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("info") => cmd_info(&args),
+        _ => usage(),
+    }
+}

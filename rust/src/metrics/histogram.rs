@@ -1,0 +1,200 @@
+//! Log-bucketed latency histogram (HdrHistogram-style, hand-rolled).
+//!
+//! Values are u64 (nanoseconds in the runtime engine, virtual ticks in the
+//! simulator). Buckets have ≤ ~2% relative width: 64 linear sub-buckets
+//! per power of two, so percentile queries are accurate enough for the
+//! p50/p95/p99 figures while the recorder is a branch-free O(1) insert.
+
+/// Log-bucketed histogram of non-negative u64 samples.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    max: u64,
+    min: u64,
+}
+
+const SUB_BITS: u32 = 6; // 64 sub-buckets per octave
+const SUB: u64 = 1 << SUB_BITS;
+
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v < SUB {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as u64;
+    let shift = msb - SUB_BITS as u64;
+    let sub = (v >> shift) - SUB; // position within octave, [0, SUB)
+    ((msb - SUB_BITS as u64 + 1) * SUB + sub) as usize
+}
+
+#[inline]
+fn bucket_low(b: usize) -> u64 {
+    let b = b as u64;
+    if b < SUB {
+        return b;
+    }
+    let octave = (b / SUB) - 1 + SUB_BITS as u64;
+    let sub = b % SUB;
+    (SUB + sub) << (octave - SUB_BITS as u64)
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; ((64 - SUB_BITS as usize) + 1) * SUB as usize],
+            total: 0,
+            sum: 0,
+            max: 0,
+            min: u64::MAX,
+        }
+    }
+
+    /// Record one sample.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.max = self.max.max(v);
+        self.min = self.min.min(v);
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+        self.min = self.min.min(other.min);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Arithmetic mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Maximum recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        if self.total == 0 { 0 } else { self.max }
+    }
+
+    /// Minimum recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.total == 0 { 0 } else { self.min }
+    }
+
+    /// Value at quantile `q ∈ [0, 1]` (lower bucket bound; 0 when empty).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= rank {
+                return bucket_low(b).max(self.min).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// (mean, p50, p95, p99) convenience tuple.
+    pub fn summary(&self) -> (f64, u64, u64, u64) {
+        (self.mean(), self.quantile(0.50), self.quantile(0.95), self.quantile(0.99))
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_roundtrip_bounds() {
+        for v in [0u64, 1, 63, 64, 65, 100, 1_000, 123_456, u32::MAX as u64, 1 << 40] {
+            let b = bucket_of(v);
+            let lo = bucket_low(b);
+            let hi = bucket_low(b + 1);
+            assert!(lo <= v && v < hi, "v={v} lo={lo} hi={hi}");
+        }
+    }
+
+    #[test]
+    fn exact_under_64() {
+        let mut h = Histogram::new();
+        for v in 0..64u64 {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(1.0), 63);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 63);
+        assert!((h.mean() - 31.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_within_bucket_error() {
+        let mut h = Histogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        for (q, want) in [(0.5, 50_000.0), (0.95, 95_000.0), (0.99, 99_000.0)] {
+            let got = h.quantile(q) as f64;
+            assert!(
+                (got - want).abs() / want < 0.03,
+                "q={q}: got {got} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_equals_combined() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        let mut rng = crate::util::Rng::new(1);
+        for _ in 0..10_000 {
+            let v = rng.gen_range(1_000_000);
+            a.record(v);
+            c.record(v);
+        }
+        for _ in 0..10_000 {
+            let v = rng.gen_range(500);
+            b.record(v);
+            c.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.quantile(0.99), c.quantile(0.99));
+        assert_eq!(a.max(), c.max());
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0);
+    }
+}

@@ -1,0 +1,65 @@
+//! Load-imbalance statistics over per-worker load vectors.
+
+/// Summary of a per-worker load distribution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Imbalance {
+    /// Maximum worker load.
+    pub max: f64,
+    /// Mean worker load.
+    pub mean: f64,
+    /// `max/mean − 1` — 0 when perfectly balanced (the PKG papers' metric).
+    pub relative: f64,
+    /// Coefficient of variation (σ/μ).
+    pub cv: f64,
+}
+
+impl Imbalance {
+    /// Compute imbalance over worker loads (`loads[w]` = work on worker w).
+    pub fn of(loads: &[f64]) -> Imbalance {
+        if loads.is_empty() {
+            return Imbalance { max: 0.0, mean: 0.0, relative: 0.0, cv: 0.0 };
+        }
+        let n = loads.len() as f64;
+        let mean = loads.iter().sum::<f64>() / n;
+        let max = loads.iter().copied().fold(f64::MIN, f64::max);
+        let var = loads.iter().map(|l| (l - mean).powi(2)).sum::<f64>() / n;
+        let (relative, cv) = if mean > 0.0 {
+            (max / mean - 1.0, var.sqrt() / mean)
+        } else {
+            (0.0, 0.0)
+        };
+        Imbalance { max, mean, relative, cv }
+    }
+
+    /// Compute over integer tuple counts.
+    pub fn of_counts(counts: &[u64]) -> Imbalance {
+        let loads: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+        Imbalance::of(&loads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_is_zero() {
+        let i = Imbalance::of(&[5.0, 5.0, 5.0, 5.0]);
+        assert_eq!(i.relative, 0.0);
+        assert_eq!(i.cv, 0.0);
+        assert_eq!(i.max, 5.0);
+    }
+
+    #[test]
+    fn skewed_detected() {
+        let i = Imbalance::of(&[10.0, 0.0, 0.0, 0.0]);
+        assert!((i.relative - 3.0).abs() < 1e-12); // max/mean = 10/2.5
+        assert!(i.cv > 1.0);
+    }
+
+    #[test]
+    fn empty_and_zero_are_safe() {
+        assert_eq!(Imbalance::of(&[]).relative, 0.0);
+        assert_eq!(Imbalance::of(&[0.0, 0.0]).relative, 0.0);
+    }
+}

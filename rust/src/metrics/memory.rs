@@ -1,0 +1,114 @@
+//! Memory-overhead accounting — the paper's scalability metric.
+//!
+//! In key-grouped stream processing each worker keeps per-key state (the
+//! word-count partials). Replicating a key across `m` workers costs `m`
+//! state entries; the paper's "memory overhead" is the total number of
+//! (key, worker) state entries across the cluster, normalised to FG
+//! (= exactly one entry per distinct key).
+
+use crate::{Key, WorkerId};
+use std::collections::HashSet;
+
+/// Tracks which (key, worker) pairs hold state.
+#[derive(Debug, Clone)]
+pub struct MemoryTracker {
+    pairs: HashSet<(Key, WorkerId)>,
+    distinct_keys: HashSet<Key>,
+}
+
+impl MemoryTracker {
+    /// Empty tracker.
+    pub fn new() -> Self {
+        MemoryTracker { pairs: HashSet::new(), distinct_keys: HashSet::new() }
+    }
+
+    /// Record that `worker` processed (and therefore holds state for) `key`.
+    #[inline]
+    pub fn touch(&mut self, key: Key, worker: WorkerId) {
+        self.pairs.insert((key, worker));
+        self.distinct_keys.insert(key);
+    }
+
+    /// Total state entries across all workers.
+    pub fn entries(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Distinct keys seen (the FG-optimal entry count).
+    pub fn distinct_keys(&self) -> usize {
+        self.distinct_keys.len()
+    }
+
+    /// Overhead normalised to FG: `entries / distinct_keys` (1.0 = optimal).
+    pub fn normalized(&self) -> f64 {
+        if self.distinct_keys.is_empty() {
+            1.0
+        } else {
+            self.pairs.len() as f64 / self.distinct_keys.len() as f64
+        }
+    }
+
+    /// Entries currently held on workers matching `pred`.
+    pub fn entries_on(&self, pred: impl Fn(WorkerId) -> bool) -> usize {
+        self.pairs.iter().filter(|(_, w)| pred(*w)).count()
+    }
+
+    /// State entries migrated when worker set changes: entries whose worker
+    /// no longer owns the key under `new_owner`. Used by the consistent-
+    /// hashing churn experiment (paper Fig. 17).
+    pub fn remap_cost(&self, new_owner: impl Fn(Key) -> Option<WorkerId>) -> usize {
+        self.pairs
+            .iter()
+            .filter(|(k, w)| new_owner(*k).map(|nw| nw != *w).unwrap_or(true))
+            .count()
+    }
+}
+
+impl Default for MemoryTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fg_like_assignment_is_optimal() {
+        let mut m = MemoryTracker::new();
+        for k in 0..100u64 {
+            m.touch(k, (k % 8) as usize);
+            m.touch(k, (k % 8) as usize); // idempotent
+        }
+        assert_eq!(m.entries(), 100);
+        assert_eq!(m.distinct_keys(), 100);
+        assert!((m.normalized() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sg_like_assignment_replicates() {
+        let mut m = MemoryTracker::new();
+        for k in 0..10u64 {
+            for w in 0..8usize {
+                m.touch(k, w);
+            }
+        }
+        assert_eq!(m.entries(), 80);
+        assert!((m.normalized() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn remap_cost_counts_moved_entries() {
+        let mut m = MemoryTracker::new();
+        for k in 0..10u64 {
+            m.touch(k, 0);
+        }
+        // all keys move to worker 1 => all 10 entries remap
+        assert_eq!(m.remap_cost(|_| Some(1)), 10);
+        // nobody moves
+        assert_eq!(m.remap_cost(|_| Some(0)), 0);
+        // owner unknown counts as a move
+        assert_eq!(m.remap_cost(|_| None), 10);
+    }
+}

@@ -1,0 +1,10 @@
+//! Measurement substrates: latency histograms, memory accounting,
+//! imbalance statistics.
+
+pub mod histogram;
+pub mod imbalance;
+pub mod memory;
+
+pub use histogram::Histogram;
+pub use imbalance::Imbalance;
+pub use memory::MemoryTracker;

@@ -1,0 +1,171 @@
+//! Experiment reporting: aligned console tables + CSV files.
+//!
+//! Every bench target prints the paper's rows with this module and drops
+//! a CSV under `bench_out/` so EXPERIMENTS.md can reference raw series.
+
+use std::io::Write;
+use std::path::Path;
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with column headers.
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append one row (must match header arity).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: format heterogeneous cells.
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let v: Vec<String> = cells.iter().map(|c| format!("{c}")).collect();
+        self.row(&v)
+    }
+
+    /// Render to a string with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Write CSV (headers + rows) to `path`, creating parent dirs.
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            let esc: Vec<String> = row
+                .iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect();
+            writeln!(f, "{}", esc.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+/// Format a float with 2 decimals (most figure cells).
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Format a ratio as `N.NNx`.
+pub fn ratio(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+/// Format nanoseconds human-readably.
+pub fn ns(v: u64) -> String {
+    if v >= 1_000_000_000 {
+        format!("{:.2}s", v as f64 / 1e9)
+    } else if v >= 1_000_000 {
+        format!("{:.2}ms", v as f64 / 1e6)
+    } else if v >= 1_000 {
+        format!("{:.2}us", v as f64 / 1e3)
+    } else {
+        format!("{v}ns")
+    }
+}
+
+/// Standard output directory for bench CSVs.
+pub fn bench_out() -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        std::env::var("FISH_BENCH_OUT").unwrap_or_else(|_| "bench_out".to_string()),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_and_counts() {
+        let mut t = Table::new("demo", &["scheme", "latency"]);
+        t.row(&["fish".into(), "1.07x".into()]);
+        t.row(&["w-choices-long".into(), "13.57x".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.lines().count() == 5);
+        // columns aligned: both data lines end at same width
+        let lines: Vec<&str> = s.lines().skip(3).collect();
+        assert_eq!(lines[0].split_whitespace().count(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(&["va,l\"ue".into()]);
+        let dir = std::env::temp_dir().join("fish_report_test");
+        let p = dir.join("t.csv");
+        t.save_csv(&p).unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(body, "a\n\"va,l\"\"ue\"\n");
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f2(1.234), "1.23");
+        assert_eq!(ratio(2.0), "2.00x");
+        assert_eq!(ns(500), "500ns");
+        assert_eq!(ns(1_500), "1.50us");
+        assert_eq!(ns(2_000_000), "2.00ms");
+        assert_eq!(ns(3_000_000_000), "3.00s");
+    }
+}

@@ -1,0 +1,193 @@
+//! PJRT client wrapper: artifact discovery, compilation, execution.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape metadata of one AOT variant (parsed from `manifest.txt`, kept in
+/// sync with `python/compile/model.py::VARIANTS`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VariantSpec {
+    /// Artifact stem, e.g. `epoch_stats_n1024`.
+    pub name: String,
+    /// Epoch size N (keys per update call).
+    pub n: usize,
+    /// Candidate count C (queries per call).
+    pub c: usize,
+    /// Sketch depth D.
+    pub depth: usize,
+    /// Sketch width W.
+    pub width: usize,
+}
+
+impl VariantSpec {
+    /// Parse one manifest line: `name n=.. c=.. depth=.. width=.. tile=..`.
+    pub fn parse(line: &str) -> Result<VariantSpec> {
+        let mut parts = line.split_whitespace();
+        let name = parts.next().ok_or_else(|| anyhow!("empty manifest line"))?.to_string();
+        let mut n = None;
+        let mut c = None;
+        let mut depth = None;
+        let mut width = None;
+        for kv in parts {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad manifest token '{kv}'"))?;
+            let v: usize = v.parse().with_context(|| format!("manifest value '{kv}'"))?;
+            match k {
+                "n" => n = Some(v),
+                "c" => c = Some(v),
+                "depth" => depth = Some(v),
+                "width" => width = Some(v),
+                "tile" => {}
+                other => bail!("unknown manifest key '{other}'"),
+            }
+        }
+        Ok(VariantSpec {
+            name,
+            n: n.ok_or_else(|| anyhow!("manifest missing n"))?,
+            c: c.ok_or_else(|| anyhow!("manifest missing c"))?,
+            depth: depth.ok_or_else(|| anyhow!("manifest missing depth"))?,
+            width: width.ok_or_else(|| anyhow!("manifest missing width"))?,
+        })
+    }
+}
+
+/// A compiled `epoch_stats` executable plus its shapes.
+pub struct EpochStatsExe {
+    /// Shape metadata.
+    pub spec: VariantSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl EpochStatsExe {
+    /// Run one epoch: decay by `alpha`, add `keys` (len == spec.n; pad
+    /// with the sentinel key `PAD_KEY`), query `cands` (len == spec.c).
+    /// Returns (new sketch rows, candidate estimates, epoch total).
+    pub fn run(
+        &self,
+        sketch: &[f32],
+        keys: &[i32],
+        cands: &[i32],
+        alpha: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let spec = &self.spec;
+        if sketch.len() != spec.depth * spec.width {
+            bail!("sketch len {} != {}x{}", sketch.len(), spec.depth, spec.width);
+        }
+        if keys.len() != spec.n {
+            bail!("keys len {} != n {}", keys.len(), spec.n);
+        }
+        if cands.len() != spec.c {
+            bail!("cands len {} != c {}", cands.len(), spec.c);
+        }
+        let sketch_lit = xla::Literal::vec1(sketch)
+            .reshape(&[spec.depth as i64, spec.width as i64])?;
+        let keys_lit = xla::Literal::vec1(keys);
+        let cands_lit = xla::Literal::vec1(cands);
+        let alpha_lit = xla::Literal::vec1(&[alpha]);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[sketch_lit, keys_lit, cands_lit, alpha_lit])?[0][0]
+            .to_literal_sync()?;
+        // lowered with return_tuple=True → 3-tuple
+        let elems = result.to_tuple()?;
+        if elems.len() != 3 {
+            bail!("expected 3 outputs, got {}", elems.len());
+        }
+        let new_sketch = elems[0].to_vec::<f32>()?;
+        let est = elems[1].to_vec::<f32>()?;
+        let total = elems[2].to_vec::<f32>()?;
+        Ok((new_sketch, est, total.first().copied().unwrap_or(0.0)))
+    }
+}
+
+/// The PJRT runtime: owns the client and the compiled variants.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    variants: Vec<VariantSpec>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = artifacts_dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {} (run `make artifacts`)", manifest.display()))?;
+        let variants = text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(VariantSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        if variants.is_empty() {
+            bail!("no variants in {}", manifest.display());
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, artifacts_dir, variants })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Available variant specs.
+    pub fn variants(&self) -> &[VariantSpec] {
+        &self.variants
+    }
+
+    /// The variant whose epoch size `n` best matches (exact, else the
+    /// smallest n ≥ requested, else the largest available).
+    pub fn pick_variant(&self, n_epoch: usize) -> &VariantSpec {
+        self.variants
+            .iter()
+            .filter(|v| v.n >= n_epoch)
+            .min_by_key(|v| v.n)
+            .unwrap_or_else(|| self.variants.iter().max_by_key(|v| v.n).unwrap())
+    }
+
+    /// Compile (HLO text → PJRT executable) one variant by name.
+    pub fn compile(&self, name: &str) -> Result<EpochStatsExe> {
+        let spec = self
+            .variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| anyhow!("unknown variant '{name}'"))?
+            .clone();
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        Ok(EpochStatsExe { spec, exe })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_line_parses() {
+        let v = VariantSpec::parse("epoch_stats_n1024 n=1024 c=128 depth=4 width=2048 tile=128")
+            .unwrap();
+        assert_eq!(v.n, 1024);
+        assert_eq!(v.c, 128);
+        assert_eq!(v.depth, 4);
+        assert_eq!(v.width, 2048);
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(VariantSpec::parse("").is_err());
+        assert!(VariantSpec::parse("x n=1 c=2 depth=3").is_err()); // missing width
+        assert!(VariantSpec::parse("x n=abc c=2 depth=3 width=4").is_err());
+        assert!(VariantSpec::parse("x bogus=1 n=1 c=1 depth=1 width=2").is_err());
+    }
+}

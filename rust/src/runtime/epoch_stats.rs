@@ -1,0 +1,219 @@
+//! Buffered epoch state machine around the compiled `epoch_stats` kernel.
+//!
+//! Accumulates keys until a full epoch (the artifact's static `N`), then
+//! fires one PJRT execution: decay → CMS update → candidate query. The
+//! sketch lives on the Rust side between calls (`Vec<f32>` row-major,
+//! bit-compatible with [`crate::sketch::CountMin`]).
+
+use super::client::EpochStatsExe;
+use anyhow::Result;
+use crate::Key;
+
+/// Epoch-buffered CMS state driven by the XLA executable.
+pub struct EpochStatsState {
+    exe: EpochStatsExe,
+    sketch: Vec<f32>,
+    buffer: Vec<i32>,
+    alpha: f32,
+    /// Decayed total mass (maintained analytically: ×α then +N per epoch).
+    total_mass: f64,
+    /// Completed epochs.
+    epochs: u64,
+}
+
+impl EpochStatsState {
+    /// Fresh state for one compiled variant.
+    pub fn new(exe: EpochStatsExe, alpha: f32) -> Self {
+        let size = exe.spec.depth * exe.spec.width;
+        let n = exe.spec.n;
+        EpochStatsState {
+            exe,
+            sketch: vec![0.0; size],
+            buffer: Vec::with_capacity(n),
+            alpha,
+            total_mass: 0.0,
+            epochs: 0,
+        }
+    }
+
+    /// Epoch size `N` of the underlying artifact.
+    pub fn epoch_len(&self) -> usize {
+        self.exe.spec.n
+    }
+
+    /// Candidate query capacity `C` of the artifact.
+    pub fn cand_capacity(&self) -> usize {
+        self.exe.spec.c
+    }
+
+    /// Completed epochs.
+    pub fn epochs(&self) -> u64 {
+        self.epochs
+    }
+
+    /// Decayed total mass.
+    pub fn total_mass(&self) -> f64 {
+        self.total_mass
+    }
+
+    /// Raw sketch rows (row-major D×W).
+    pub fn sketch(&self) -> &[f32] {
+        &self.sketch
+    }
+
+    /// Keys buffered in the current (incomplete) epoch.
+    pub fn pending(&self) -> usize {
+        self.buffer.len()
+    }
+
+    /// Ingest a whole epoch batch at once (the service-thread entry
+    /// point): buffers `keys` (≤ remaining capacity) and flushes.
+    pub fn ingest_batch(&mut self, keys: &[i32], cands: &[Key]) -> Result<Vec<(Key, f32)>> {
+        assert!(
+            self.buffer.len() + keys.len() <= self.epoch_len(),
+            "batch overflows the epoch: {} + {} > {}",
+            self.buffer.len(),
+            keys.len(),
+            self.epoch_len()
+        );
+        self.buffer.extend_from_slice(keys);
+        self.flush(cands)
+    }
+
+    /// Buffer one key. When the buffer reaches `N`, runs the kernel with
+    /// `cands` (padded/truncated to `C`) and returns `Some(estimates)`
+    /// aligned with the *first* `min(cands.len(), C)` candidates.
+    pub fn observe(&mut self, key: Key, cands: &[Key]) -> Result<Option<Vec<(Key, f32)>>> {
+        self.buffer.push(key as u32 as i32);
+        if self.buffer.len() < self.epoch_len() {
+            return Ok(None);
+        }
+        self.flush(cands).map(Some)
+    }
+
+    /// Force an epoch boundary now (used at stream end). The buffered
+    /// prefix is padded with a repeat of the last key's *sentinel-free*
+    /// content: we pad by repeating `PAD`, a reserved id whose CMS mass
+    /// never gets queried; CMS overestimation from pad collisions is
+    /// bounded exactly like any other collision.
+    pub fn flush(&mut self, cands: &[Key]) -> Result<Vec<(Key, f32)>> {
+        const PAD: i32 = -1;
+        let n = self.epoch_len();
+        let pad_count = n - self.buffer.len();
+        self.buffer.resize(n, PAD);
+
+        let c = self.cand_capacity();
+        let mut cand_ids: Vec<i32> = cands
+            .iter()
+            .take(c)
+            .map(|&k| k as u32 as i32)
+            .collect();
+        let real_cands = cand_ids.len();
+        cand_ids.resize(c, PAD);
+
+        let (new_sketch, est, total) =
+            self.exe
+                .run(&self.sketch, &self.buffer, &cand_ids, self.alpha)?;
+        self.sketch = new_sketch;
+        self.total_mass = self.total_mass * self.alpha as f64 + (n - pad_count) as f64;
+        self.epochs += 1;
+        self.buffer.clear();
+        debug_assert_eq!(total as usize, n);
+
+        Ok(cands
+            .iter()
+            .take(real_cands)
+            .copied()
+            .zip(est.into_iter())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Requires `make artifacts`; skipped gracefully when absent so
+    //! `cargo test` works on a fresh checkout.
+    use super::super::client::Runtime;
+    use super::*;
+    use crate::sketch::CountMin;
+
+    fn runtime() -> Option<Runtime> {
+        Runtime::new("artifacts").ok()
+    }
+
+    #[test]
+    fn xla_epoch_matches_native_countmin() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let spec = rt.pick_variant(256).clone();
+        let exe = rt.compile(&spec.name).unwrap();
+        let mut state = EpochStatsState::new(exe, 0.5);
+        let mut native = CountMin::new(spec.depth, spec.width);
+
+        let mut rng = crate::util::Rng::new(11);
+        let keys: Vec<Key> = (0..spec.n).map(|_| rng.gen_range(500)).collect();
+        let cands: Vec<Key> = (0..8).collect();
+
+        let mut result = None;
+        for &k in &keys {
+            native.add(k);
+            result = state.observe(k, &cands).unwrap();
+        }
+        let est = result.expect("epoch should have fired");
+        // α applies to the PRE-epoch sketch (all zeros) so counts match 1:1
+        for (k, e) in est {
+            let want = native.estimate(k);
+            assert!(
+                (e - want).abs() < 1e-3,
+                "key {k}: xla {e} vs native {want}"
+            );
+        }
+        assert_eq!(state.epochs(), 1);
+        assert_eq!(state.total_mass(), spec.n as f64);
+    }
+
+    #[test]
+    fn decay_applies_between_epochs() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let spec = rt.pick_variant(256).clone();
+        let exe = rt.compile(&spec.name).unwrap();
+        let mut state = EpochStatsState::new(exe, 0.5);
+        let cands: Vec<Key> = vec![7];
+        // epoch 1: key 7 every tuple
+        for _ in 0..spec.n {
+            state.observe(7, &cands).unwrap();
+        }
+        // epoch 2: key 7 again every tuple → estimate ≈ N·0.5 + N
+        let mut last = None;
+        for _ in 0..spec.n {
+            last = state.observe(7, &cands).unwrap();
+        }
+        let est = last.unwrap()[0].1;
+        let want = spec.n as f32 * 1.5;
+        assert!((est - want).abs() / want < 0.01, "est {est} want {want}");
+        assert_eq!(state.epochs(), 2);
+    }
+
+    #[test]
+    fn flush_pads_partial_epoch() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let spec = rt.pick_variant(256).clone();
+        let exe = rt.compile(&spec.name).unwrap();
+        let mut state = EpochStatsState::new(exe, 1.0);
+        for _ in 0..10 {
+            state.observe(3, &[3]).unwrap();
+        }
+        let est = state.flush(&[3]).unwrap();
+        assert!(est[0].1 >= 10.0); // CMS never underestimates
+        assert_eq!(state.total_mass(), 10.0); // pads excluded from mass
+        assert_eq!(state.pending(), 0);
+    }
+}

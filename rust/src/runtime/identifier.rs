@@ -1,0 +1,200 @@
+//! [`XlaIdentifier`]: FISH's recent-hot-key identification running on the
+//! AOT-compiled Pallas count-min kernel.
+//!
+//! Division of labour:
+//! * **membership** (which keys are worth tracking) — a small native
+//!   SpaceSaving set, exactly Alg. 1's `K`;
+//! * **counts** — the CMS sketch updated once per epoch by the XLA
+//!   executable via [`super::XlaEpochService`] (decay ×α + histogram add
+//!   + candidate query in one fused module, running on its own thread
+//!   because PJRT handles are `!Send`);
+//! * **intra-epoch freshness** — a per-epoch exact partial count so
+//!   estimates do not go stale between kernel firings.
+//!
+//! `estimate(k) = CMS(k, last boundary) + partial(k, since boundary)` —
+//! an upper-bound estimator exactly like the native path's SpaceSaving
+//! counts (both only ever *over*-estimate).
+
+use super::service::XlaEpochService;
+use crate::coordinator::fish::Identifier;
+use crate::sketch::SpaceSaving;
+use crate::Key;
+use std::collections::HashMap;
+
+/// XLA-backed identifier (swap-in for [`crate::coordinator::fish::EpochIdentifier`]).
+pub struct XlaIdentifier {
+    service: XlaEpochService,
+    buffer: Vec<i32>,
+    /// Candidate membership — Alg. 1's bounded K set.
+    membership: SpaceSaving,
+    /// Boundary estimates for the queried candidates.
+    cms_est: HashMap<Key, f64>,
+    /// Exact counts within the current (incomplete) epoch.
+    partial: HashMap<Key, f64>,
+    f_top: f64,
+    total_mass: f64,
+    epochs: u64,
+}
+
+impl XlaIdentifier {
+    /// Spawn a service against `artifacts_dir` and build the identifier.
+    /// `key_capacity` = K_max, `epoch_hint` picks the artifact (the
+    /// actual epoch length is the artifact's static N), `alpha` = α.
+    pub fn new(
+        artifacts_dir: &str,
+        key_capacity: usize,
+        epoch_hint: usize,
+        alpha: f64,
+    ) -> anyhow::Result<Self> {
+        let service = XlaEpochService::spawn(artifacts_dir, epoch_hint, alpha)?;
+        let n = service.spec().epoch_len;
+        Ok(XlaIdentifier {
+            service,
+            buffer: Vec::with_capacity(n),
+            membership: SpaceSaving::new(key_capacity),
+            cms_est: HashMap::new(),
+            partial: HashMap::new(),
+            f_top: 0.0,
+            total_mass: 0.0,
+            epochs: 0,
+        })
+    }
+
+    /// The artifact's static epoch length.
+    pub fn epoch_len(&self) -> usize {
+        self.service.spec().epoch_len
+    }
+}
+
+impl Identifier for XlaIdentifier {
+    fn observe(&mut self, key: Key) {
+        self.membership.observe(key);
+        *self.partial.entry(key).or_insert(0.0) += 1.0;
+        self.buffer.push(key as u32 as i32);
+
+        if self.buffer.len() < self.epoch_len() {
+            return;
+        }
+        // epoch boundary: one fused XLA call (decay + update + query)
+        let cands: Vec<Key> = self
+            .membership
+            .top_n(self.service.spec().cand_capacity)
+            .into_iter()
+            .map(|(k, _)| k)
+            .collect();
+        let keys = std::mem::take(&mut self.buffer);
+        match self.service.run_epoch(keys, cands) {
+            Ok(reply) => {
+                self.cms_est.clear();
+                self.f_top = 0.0;
+                for (k, e) in reply.est {
+                    let e = e as f64;
+                    self.cms_est.insert(k, e);
+                    if e > self.f_top {
+                        self.f_top = e;
+                    }
+                }
+                self.total_mass = reply.total_mass;
+                self.epochs = reply.epochs;
+                self.partial.clear();
+            }
+            Err(e) => {
+                // PJRT failure is unrecoverable mid-stream; surface loudly.
+                panic!("XLA epoch_stats execution failed: {e:#}");
+            }
+        }
+    }
+
+    fn estimate(&self, key: Key) -> f64 {
+        self.cms_est.get(&key).copied().unwrap_or(0.0)
+            + self.partial.get(&key).copied().unwrap_or(0.0)
+    }
+
+    fn f_top(&self) -> f64 {
+        // boundary top plus the largest intra-epoch riser
+        let partial_top = self
+            .partial
+            .iter()
+            .map(|(k, v)| v + self.cms_est.get(k).copied().unwrap_or(0.0))
+            .fold(0.0, f64::max);
+        self.f_top.max(partial_top)
+    }
+
+    fn total(&self) -> f64 {
+        self.total_mass + self.buffer.len() as f64
+    }
+
+    fn entries(&self) -> usize {
+        self.membership.entries() + self.cms_est.len() + self.partial.len()
+    }
+
+    fn epochs(&self) -> u64 {
+        self.epochs
+    }
+}
+
+/// Build a FISH grouper with the XLA identifier from `cfg`
+/// (`--identifier xla-cms` path).
+pub fn make_fish_xla(cfg: &crate::config::Config) -> anyhow::Result<crate::coordinator::Fish> {
+    let id = XlaIdentifier::new(&cfg.artifacts_dir, cfg.key_capacity, cfg.epoch, cfg.alpha)?;
+    let workers: Vec<crate::WorkerId> = (0..cfg.workers).collect();
+    Ok(crate::coordinator::Fish::new(
+        Box::new(id),
+        cfg.theta(),
+        cfg.d_min,
+        cfg.interval,
+        cfg.vnodes,
+        &workers,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn available() -> bool {
+        std::path::Path::new("artifacts/manifest.txt").exists()
+    }
+
+    #[test]
+    fn xla_identifier_tracks_hot_key() {
+        if !available() {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let mut id = XlaIdentifier::new("artifacts", 64, 256, 0.5).unwrap();
+        let mut rng = crate::util::Rng::new(5);
+        for _ in 0..1_500 {
+            let k = if rng.gen_bool(0.4) { 9 } else { 100 + rng.gen_range(5_000) };
+            id.observe(k);
+        }
+        assert!(id.epochs() >= 4);
+        let rel = id.estimate(9) / id.total();
+        assert!(rel > 0.2, "hot key relative estimate {rel}");
+        assert!(id.f_top() >= id.estimate(9));
+    }
+
+    #[test]
+    fn xla_identifier_decays_stale_keys() {
+        if !available() {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let mut id = XlaIdentifier::new("artifacts", 64, 256, 0.2).unwrap();
+        for _ in 0..1_024 {
+            id.observe(1);
+        }
+        let peak = id.estimate(1);
+        for _ in 0..2_048 {
+            id.observe(2);
+        }
+        assert!(id.estimate(2) > id.estimate(1));
+        assert!(id.estimate(1) < peak * 0.2, "stale key did not decay");
+    }
+
+    #[test]
+    fn identifier_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<XlaIdentifier>();
+    }
+}

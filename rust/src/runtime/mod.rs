@@ -1,0 +1,25 @@
+//! PJRT bridge: load and execute the AOT-compiled `epoch_stats` HLO
+//! artifacts from the coordinator hot path.
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); this
+//! module makes the Rust binary self-contained afterwards:
+//!
+//! ```text
+//! PjRtClient::cpu() → HloModuleProto::from_text_file(artifacts/…)
+//!                   → client.compile() → exe.execute(...)  per epoch
+//! ```
+//!
+//! [`XlaIdentifier`] implements [`crate::coordinator::fish::Identifier`]
+//! on top of the compiled kernel, so `--identifier xla-cms` swaps FISH's
+//! frequency statistics onto the Pallas count-min path without touching
+//! the rest of the coordinator.
+
+pub mod client;
+pub mod epoch_stats;
+pub mod identifier;
+pub mod service;
+
+pub use client::{EpochStatsExe, Runtime, VariantSpec};
+pub use epoch_stats::EpochStatsState;
+pub use identifier::{make_fish_xla, XlaIdentifier};
+pub use service::{EpochReply, ServiceSpec, XlaEpochService};

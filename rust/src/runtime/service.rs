@@ -1,0 +1,169 @@
+//! XLA epoch-stats service thread.
+//!
+//! PJRT handles (`PjRtClient`, `PjRtLoadedExecutable`) are `!Send`, but
+//! groupers must be `Send` (the runtime engine moves them into source
+//! threads). So the compiled executable lives on a dedicated service
+//! thread that owns the whole [`super::EpochStatsState`]; identifiers
+//! talk to it over channels. One service per identifier — the request
+//! rate is one round-trip per epoch (every `N` tuples), so the channel
+//! hop is far off the per-tuple hot path.
+
+use super::client::Runtime;
+use super::epoch_stats::EpochStatsState;
+use crate::Key;
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// One epoch batch for the service.
+struct Request {
+    keys: Vec<i32>,
+    cands: Vec<Key>,
+    reply: Sender<Result<EpochReply>>,
+}
+
+/// Service response at an epoch boundary.
+#[derive(Debug, Clone)]
+pub struct EpochReply {
+    /// (candidate, CMS estimate) aligned to the request's candidates.
+    pub est: Vec<(Key, f32)>,
+    /// Decayed total mass after this epoch.
+    pub total_mass: f64,
+    /// Completed epochs.
+    pub epochs: u64,
+}
+
+/// Static shape info the identifier needs up front.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceSpec {
+    /// Epoch length `N` of the compiled artifact.
+    pub epoch_len: usize,
+    /// Candidate capacity `C`.
+    pub cand_capacity: usize,
+}
+
+/// Handle to a running epoch-stats service thread.
+pub struct XlaEpochService {
+    tx: Sender<Request>,
+    spec: ServiceSpec,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl XlaEpochService {
+    /// Spawn the service: builds the PJRT client, compiles the variant
+    /// picked by `epoch_hint`, then serves epoch batches until dropped.
+    pub fn spawn(artifacts_dir: &str, epoch_hint: usize, alpha: f64) -> Result<XlaEpochService> {
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<ServiceSpec>>();
+        let dir = artifacts_dir.to_string();
+        let handle = std::thread::Builder::new()
+            .name("xla-epoch-stats".into())
+            .spawn(move || service_main(dir, epoch_hint, alpha, rx, ready_tx))
+            .map_err(|e| anyhow!("spawning xla service: {e}"))?;
+        let spec = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("xla service died during startup"))??;
+        Ok(XlaEpochService { tx, spec, handle: Some(handle) })
+    }
+
+    /// Artifact shape info.
+    pub fn spec(&self) -> ServiceSpec {
+        self.spec
+    }
+
+    /// Synchronously process one epoch batch (pads internally if short).
+    pub fn run_epoch(&self, keys: Vec<i32>, cands: Vec<Key>) -> Result<EpochReply> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Request { keys, cands, reply: reply_tx })
+            .map_err(|_| anyhow!("xla service is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("xla service dropped the reply"))?
+    }
+}
+
+impl Drop for XlaEpochService {
+    fn drop(&mut self) {
+        // closing tx ends the service loop
+        let (dead_tx, _) = channel();
+        let _ = std::mem::replace(&mut self.tx, dead_tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn service_main(
+    dir: String,
+    epoch_hint: usize,
+    alpha: f64,
+    rx: Receiver<Request>,
+    ready: Sender<Result<ServiceSpec>>,
+) {
+    let state = (|| -> Result<EpochStatsState> {
+        let rt = Runtime::new(&dir)?;
+        let spec = rt.pick_variant(epoch_hint).clone();
+        let exe = rt.compile(&spec.name)?;
+        Ok(EpochStatsState::new(exe, alpha as f32))
+    })();
+    let mut state = match state {
+        Ok(s) => {
+            let _ = ready.send(Ok(ServiceSpec {
+                epoch_len: s.epoch_len(),
+                cand_capacity: s.cand_capacity(),
+            }));
+            s
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        let result = run_one(&mut state, req.keys, &req.cands);
+        let _ = req.reply.send(result);
+    }
+}
+
+fn run_one(state: &mut EpochStatsState, keys: Vec<i32>, cands: &[Key]) -> Result<EpochReply> {
+    let est = state.ingest_batch(&keys, cands)?;
+    Ok(EpochReply {
+        est,
+        total_mass: state.total_mass(),
+        epochs: state.epochs(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_roundtrip_and_decay() {
+        let Ok(svc) = XlaEpochService::spawn("artifacts", 256, 0.5) else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let n = svc.spec().epoch_len;
+        let keys: Vec<i32> = vec![7; n];
+        let r1 = svc.run_epoch(keys.clone(), vec![7]).unwrap();
+        assert_eq!(r1.epochs, 1);
+        assert!((r1.est[0].1 - n as f32).abs() < 1e-2);
+        let r2 = svc.run_epoch(keys, vec![7]).unwrap();
+        assert!((r2.est[0].1 - 1.5 * n as f32).abs() / (1.5 * n as f32) < 0.01);
+        assert_eq!(r2.epochs, 2);
+    }
+
+    #[test]
+    fn service_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<XlaEpochService>();
+    }
+
+    #[test]
+    fn spawn_fails_cleanly_without_artifacts() {
+        let err = XlaEpochService::spawn("/nonexistent/dir", 256, 0.5);
+        assert!(err.is_err());
+    }
+}

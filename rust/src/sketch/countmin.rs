@@ -1,0 +1,179 @@
+//! Count-min sketch, bit-compatible with the Pallas kernel.
+//!
+//! The hash family (uint32 multiply-shift, constants `HASH_A`/`HASH_B`)
+//! matches `python/compile/kernels/cms.py` **exactly**, so the Rust
+//! native path and the AOT XLA path can be swapped without re-learning
+//! sketch state — `rust/tests/integration_runtime.rs` asserts bit
+//! equality between the two.
+
+use crate::Key;
+
+/// Multiply-shift constants — keep in sync with cms.py.
+pub const HASH_A: [u32; 6] = [
+    0x9E37_79B1, 0x85EB_CA77, 0xC2B2_AE3D, 0x27D4_EB2F, 0x1656_67B1, 0xD3A2_646D,
+];
+/// Additive constants — keep in sync with cms.py.
+pub const HASH_B: [u32; 6] = [
+    0x68E3_1DA4, 0xB529_7A4D, 0x1B56_C4E9, 0x8F14_ACD5, 0xCA6B_27D9, 0x5F35_6495,
+];
+
+/// Count-min sketch with f32 counters (matches the kernel dtype).
+#[derive(Debug, Clone)]
+pub struct CountMin {
+    depth: usize,
+    width: usize,
+    shift: u32,
+    rows: Vec<f32>, // depth × width, row-major
+}
+
+impl CountMin {
+    /// `depth` ≤ 6 hash rows, `width` a power of two.
+    pub fn new(depth: usize, width: usize) -> Self {
+        assert!(depth >= 1 && depth <= HASH_A.len(), "depth 1..=6");
+        assert!(width.is_power_of_two() && width >= 2, "width must be a power of two");
+        CountMin {
+            depth,
+            width,
+            shift: 32 - width.trailing_zeros(),
+            rows: vec![0.0; depth * width],
+        }
+    }
+
+    /// Number of hash rows.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Buckets per row.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Bucket of `key` in `row` — identical to cms.row_hash (the key is
+    /// truncated to its low 32 bits exactly like the int32 kernel input).
+    #[inline]
+    pub fn bucket(&self, key: Key, row: usize) -> usize {
+        let k = key as u32;
+        let h = k.wrapping_mul(HASH_A[row]).wrapping_add(HASH_B[row]);
+        (h >> self.shift) as usize
+    }
+
+    /// Add one occurrence of `key`.
+    #[inline]
+    pub fn add(&mut self, key: Key) {
+        for d in 0..self.depth {
+            let b = self.bucket(key, d);
+            self.rows[d * self.width + b] += 1.0;
+        }
+    }
+
+    /// Count-min estimate (min over rows). Never underestimates.
+    #[inline]
+    pub fn estimate(&self, key: Key) -> f32 {
+        let mut est = f32::INFINITY;
+        for d in 0..self.depth {
+            let b = self.bucket(key, d);
+            est = est.min(self.rows[d * self.width + b]);
+        }
+        est
+    }
+
+    /// Multiply every counter by `alpha` (inter-epoch decay).
+    pub fn decay(&mut self, alpha: f32) {
+        for c in self.rows.iter_mut() {
+            *c *= alpha;
+        }
+    }
+
+    /// Reset all counters to zero.
+    pub fn clear(&mut self) {
+        self.rows.iter_mut().for_each(|c| *c = 0.0);
+    }
+
+    /// Raw row-major counters (runtime interchange with the XLA path).
+    pub fn rows(&self) -> &[f32] {
+        &self.rows
+    }
+
+    /// Replace the counters wholesale (after an XLA epoch_stats call).
+    pub fn set_rows(&mut self, rows: Vec<f32>) {
+        assert_eq!(rows.len(), self.depth * self.width);
+        self.rows = rows;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinned_hash_vector_matches_python() {
+        // Same vector as python/tests/test_kernel.py::test_row_hash_rust_vector
+        let cm = CountMin::new(1, 2048);
+        let keys: [i32; 5] = [0, 1, 42, 123_456, -1];
+        let expect: Vec<usize> = keys
+            .iter()
+            .map(|&k| {
+                let k = k as u32 as u64;
+                (((HASH_A[0] as u64 * k + HASH_B[0] as u64) % (1u64 << 32)) >> 21) as usize
+            })
+            .collect();
+        for (i, &k) in keys.iter().enumerate() {
+            assert_eq!(cm.bucket(k as u32 as Key, 0), expect[i]);
+        }
+    }
+
+    #[test]
+    fn never_underestimates() {
+        let mut cm = CountMin::new(4, 256);
+        let mut truth = std::collections::HashMap::new();
+        let mut rng = crate::util::Rng::new(2);
+        for _ in 0..20_000 {
+            let k = rng.gen_range(64); // heavy collisions on 256 buckets
+            *truth.entry(k).or_insert(0u32) += 1;
+            cm.add(k);
+        }
+        for (&k, &c) in &truth {
+            assert!(cm.estimate(k) >= c as f32);
+        }
+    }
+
+    #[test]
+    fn exact_when_sparse() {
+        let mut cm = CountMin::new(4, 4096);
+        for _ in 0..100 {
+            cm.add(7);
+        }
+        cm.add(9);
+        assert_eq!(cm.estimate(7), 100.0);
+        assert_eq!(cm.estimate(9), 1.0);
+    }
+
+    #[test]
+    fn decay_and_clear() {
+        let mut cm = CountMin::new(2, 64);
+        for _ in 0..10 {
+            cm.add(1);
+        }
+        cm.decay(0.5);
+        assert_eq!(cm.estimate(1), 5.0);
+        cm.clear();
+        assert_eq!(cm.estimate(1), 0.0);
+    }
+
+    #[test]
+    fn rows_roundtrip() {
+        let mut cm = CountMin::new(2, 64);
+        cm.add(3);
+        let rows = cm.rows().to_vec();
+        let mut cm2 = CountMin::new(2, 64);
+        cm2.set_rows(rows);
+        assert_eq!(cm2.estimate(3), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_pow2_width() {
+        let _ = CountMin::new(2, 100);
+    }
+}

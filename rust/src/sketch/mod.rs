@@ -1,0 +1,15 @@
+//! Frequency-statistics substrates.
+//!
+//! * [`spacesaving`] — the bounded counter set of paper Alg. 1 (intra-epoch
+//!   counting with ReplaceMin + inter-epoch decay).
+//! * [`countmin`] — a count-min sketch bit-compatible with the Pallas
+//!   kernel (`python/compile/kernels/cms.py`), used by the XLA-backed
+//!   identifier and by tests that cross-check the two layers.
+
+pub mod countmin;
+pub mod spacesaving;
+pub mod window;
+
+pub use countmin::CountMin;
+pub use spacesaving::SpaceSaving;
+pub use window::SlidingWindow;

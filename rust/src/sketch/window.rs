@@ -1,0 +1,134 @@
+//! Sliding-window exact frequency counter — the baseline family the
+//! paper critiques in §2.4 ([19]–[23]): accurate recent counts, but the
+//! window contents must be buffered, so memory grows linearly with the
+//! window size.
+//!
+//! Used by the identifier-ablation bench to reproduce the paper's
+//! accuracy/memory trade-off argument, and as a ground-truth oracle for
+//! recent-frequency accuracy tests (a window IS the definition of
+//! "recent frequency").
+
+use crate::Key;
+use std::collections::{HashMap, VecDeque};
+
+/// Exact counts over the last `window` tuples.
+#[derive(Debug, Clone)]
+pub struct SlidingWindow {
+    window: usize,
+    buf: VecDeque<Key>,
+    counts: HashMap<Key, u64>,
+}
+
+impl SlidingWindow {
+    /// Counter over the trailing `window` tuples.
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0);
+        SlidingWindow {
+            window,
+            buf: VecDeque::with_capacity(window),
+            counts: HashMap::new(),
+        }
+    }
+
+    /// Window length.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Observe one key, evicting the tuple that falls out of the window.
+    pub fn observe(&mut self, key: Key) {
+        if self.buf.len() == self.window {
+            let old = self.buf.pop_front().expect("non-empty window");
+            match self.counts.get_mut(&old) {
+                Some(c) if *c > 1 => *c -= 1,
+                Some(_) => {
+                    self.counts.remove(&old);
+                }
+                None => unreachable!("window key missing from counts"),
+            }
+        }
+        self.buf.push_back(key);
+        *self.counts.entry(key).or_insert(0) += 1;
+    }
+
+    /// Exact count of `key` within the window.
+    pub fn count(&self, key: Key) -> u64 {
+        self.counts.get(&key).copied().unwrap_or(0)
+    }
+
+    /// Highest in-window count.
+    pub fn top_count(&self) -> u64 {
+        self.counts.values().copied().max().unwrap_or(0)
+    }
+
+    /// Tuples currently buffered.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True before any tuple arrives.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Memory footprint in entries: the buffered tuples *plus* the count
+    /// map — the linear cost the paper's §2.4 critique is about.
+    pub fn entries(&self) -> usize {
+        self.buf.len() + self.counts.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_within_window() {
+        let mut w = SlidingWindow::new(5);
+        for k in [1u64, 2, 1, 3, 1] {
+            w.observe(k);
+        }
+        assert_eq!(w.count(1), 3);
+        assert_eq!(w.count(2), 1);
+        assert_eq!(w.top_count(), 3);
+    }
+
+    #[test]
+    fn eviction_is_exact() {
+        let mut w = SlidingWindow::new(3);
+        for k in [1u64, 1, 1, 2, 2, 2] {
+            w.observe(k);
+        }
+        assert_eq!(w.count(1), 0, "old key fully evicted");
+        assert_eq!(w.count(2), 3);
+        assert_eq!(w.len(), 3);
+    }
+
+    #[test]
+    fn memory_linear_in_window() {
+        let mut small = SlidingWindow::new(100);
+        let mut big = SlidingWindow::new(10_000);
+        let mut rng = crate::util::Rng::new(1);
+        for _ in 0..20_000 {
+            let k = rng.gen_range(1_000);
+            small.observe(k);
+            big.observe(k);
+        }
+        assert!(big.entries() > small.entries() * 20);
+    }
+
+    #[test]
+    fn matches_naive_recount() {
+        let mut w = SlidingWindow::new(50);
+        let mut hist: Vec<Key> = Vec::new();
+        let mut rng = crate::util::Rng::new(3);
+        for _ in 0..2_000 {
+            let k = rng.gen_range(20);
+            w.observe(k);
+            hist.push(k);
+            let start = hist.len().saturating_sub(50);
+            let naive = hist[start..].iter().filter(|&&x| x == 7).count() as u64;
+            assert_eq!(w.count(7), naive);
+        }
+    }
+}

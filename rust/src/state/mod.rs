@@ -1,0 +1,217 @@
+//! Worker key-state management and churn-time migration (paper §5).
+//!
+//! Each worker holds per-key aggregation state (word-count partials).
+//! When the worker set changes, state stranded on removed workers — and,
+//! for non-consistent mappings, state whose owner moved — must be
+//! migrated. [`StateStore`] tracks the cluster's state placement;
+//! [`MigrationPlan`] computes and applies the minimal move set for a
+//! mapping change, and its size is the §6.5 migration-cost metric.
+
+use crate::{Key, WorkerId};
+use std::collections::HashMap;
+
+/// Per-worker key state (aggregation partials).
+#[derive(Debug, Clone, Default)]
+pub struct StateStore {
+    /// worker → key → partial aggregate.
+    shards: HashMap<WorkerId, HashMap<Key, u64>>,
+}
+
+impl StateStore {
+    /// Empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Account one tuple of `key` processed on `worker`.
+    pub fn record(&mut self, key: Key, worker: WorkerId) {
+        *self.shards.entry(worker).or_default().entry(key).or_insert(0) += 1;
+    }
+
+    /// Partial aggregate of `key` on `worker`.
+    pub fn get(&self, key: Key, worker: WorkerId) -> u64 {
+        self.shards
+            .get(&worker)
+            .and_then(|m| m.get(&key))
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Total aggregate of `key` across all workers (the merged answer a
+    /// top-k sink would read).
+    pub fn total(&self, key: Key) -> u64 {
+        self.shards.values().filter_map(|m| m.get(&key)).sum()
+    }
+
+    /// Total state entries across the cluster (the memory metric).
+    pub fn entries(&self) -> usize {
+        self.shards.values().map(|m| m.len()).sum()
+    }
+
+    /// Entries held by `worker`.
+    pub fn entries_on(&self, worker: WorkerId) -> usize {
+        self.shards.get(&worker).map(|m| m.len()).unwrap_or(0)
+    }
+
+    /// Workers currently holding state.
+    pub fn workers(&self) -> impl Iterator<Item = WorkerId> + '_ {
+        self.shards.keys().copied()
+    }
+
+    /// Grand total across all keys and workers (conservation checks).
+    pub fn grand_total(&self) -> u64 {
+        self.shards.values().flat_map(|m| m.values()).sum()
+    }
+}
+
+/// One state move: `key`'s partial on `from` relocates to `to`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Move {
+    /// The key whose state moves.
+    pub key: Key,
+    /// Source worker.
+    pub from: WorkerId,
+    /// Destination worker.
+    pub to: WorkerId,
+}
+
+/// A computed migration: the moves required so every key's state lives
+/// only on workers that can still receive that key's tuples.
+#[derive(Debug, Clone, Default)]
+pub struct MigrationPlan {
+    /// Moves in application order.
+    pub moves: Vec<Move>,
+}
+
+impl MigrationPlan {
+    /// Plan the migration after a membership change.
+    ///
+    /// `placement(key, from)` returns the worker that should now own the
+    /// state `from` held for `key` — typically the consistent-hash
+    /// successor for FISH, or `H(key) mod n` for modulo schemes. State
+    /// already correctly placed yields no move.
+    pub fn compute(
+        store: &StateStore,
+        dead: &[WorkerId],
+        placement: impl Fn(Key, WorkerId) -> Option<WorkerId>,
+    ) -> MigrationPlan {
+        let mut moves = Vec::new();
+        for &from in dead {
+            if let Some(shard) = store.shards.get(&from) {
+                for &key in shard.keys() {
+                    if let Some(to) = placement(key, from) {
+                        if to != from {
+                            moves.push(Move { key, from, to });
+                        }
+                    }
+                }
+            }
+        }
+        MigrationPlan { moves }
+    }
+
+    /// Entries that must cross the network (the Fig. 17 cost).
+    pub fn cost(&self) -> usize {
+        self.moves.len()
+    }
+
+    /// Apply to the store: merge each moved partial into the target.
+    pub fn apply(&self, store: &mut StateStore) {
+        for m in &self.moves {
+            let value = store
+                .shards
+                .get_mut(&m.from)
+                .and_then(|s| s.remove(&m.key));
+            if let Some(v) = value {
+                *store
+                    .shards
+                    .entry(m.to)
+                    .or_default()
+                    .entry(m.key)
+                    .or_insert(0) += v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashring::HashRing;
+
+    fn store_with(pairs: &[(Key, WorkerId, u64)]) -> StateStore {
+        let mut s = StateStore::new();
+        for &(k, w, n) in pairs {
+            for _ in 0..n {
+                s.record(k, w);
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn record_and_totals() {
+        let s = store_with(&[(1, 0, 3), (1, 1, 2), (2, 0, 1)]);
+        assert_eq!(s.get(1, 0), 3);
+        assert_eq!(s.total(1), 5);
+        assert_eq!(s.entries(), 3);
+        assert_eq!(s.entries_on(0), 2);
+        assert_eq!(s.grand_total(), 6);
+    }
+
+    #[test]
+    fn plan_moves_only_dead_worker_state() {
+        let s = store_with(&[(1, 0, 3), (2, 1, 4), (3, 1, 1)]);
+        let plan = MigrationPlan::compute(&s, &[1], |_k, _| Some(2));
+        assert_eq!(plan.cost(), 2);
+        assert!(plan.moves.iter().all(|m| m.from == 1 && m.to == 2));
+    }
+
+    #[test]
+    fn apply_conserves_aggregates() {
+        let mut s = store_with(&[(1, 0, 3), (1, 1, 2), (2, 1, 7)]);
+        let before_total_1 = s.total(1);
+        let before_grand = s.grand_total();
+        let plan = MigrationPlan::compute(&s, &[1], |_k, _| Some(0));
+        plan.apply(&mut s);
+        assert_eq!(s.total(1), before_total_1, "key-1 aggregate conserved");
+        assert_eq!(s.grand_total(), before_grand);
+        assert_eq!(s.entries_on(1), 0, "dead worker drained");
+        assert_eq!(s.get(1, 0), 5, "partials merged");
+    }
+
+    #[test]
+    fn consistent_hash_placement_yields_small_plans() {
+        // CH successor placement should move exactly the dead worker's
+        // entries and nothing else — while a mod-n replacement would
+        // reshuffle everything (that cost shows up in Fig. 17).
+        let workers: Vec<WorkerId> = (0..8).collect();
+        let mut ring = HashRing::new(&workers, 64);
+        let mut s = StateStore::new();
+        let mut rng = crate::util::Rng::new(4);
+        for _ in 0..5_000 {
+            let k = rng.gen_range(500);
+            let w = ring.owner(k).unwrap();
+            s.record(k, w);
+        }
+        let victim = 3;
+        ring.remove_worker(victim);
+        let moved = MigrationPlan::compute(&s, &[victim], |k, _| ring.owner(k));
+        assert_eq!(moved.cost(), s.entries_on(victim));
+        let mut s2 = s.clone();
+        moved.apply(&mut s2);
+        assert_eq!(s2.entries_on(victim), 0);
+        assert_eq!(s2.grand_total(), s.grand_total());
+        // every migrated key landed on its CH successor
+        for m in &moved.moves {
+            assert_eq!(Some(m.to), ring.owner(m.key));
+        }
+    }
+
+    #[test]
+    fn empty_plan_for_healthy_cluster() {
+        let s = store_with(&[(1, 0, 1)]);
+        let plan = MigrationPlan::compute(&s, &[], |_, w| Some(w));
+        assert_eq!(plan.cost(), 0);
+    }
+}

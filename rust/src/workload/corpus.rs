@@ -1,0 +1,331 @@
+//! Synthetic stand-ins for the paper's real-world datasets (DESIGN.md §5).
+//!
+//! * **MemeTrackerLike** — the MT dataset is a keyword stream from
+//!   blog/news quotes: Zipf-skewed word frequencies whose *catchphrase*
+//!   head churns with the news cycle. We model it as a base Zipf
+//!   vocabulary (0.39M words at full scale) overlaid with bursty
+//!   catchphrases: each time slice promotes a fresh random set of keys
+//!   whose burst intensity rises then decays (a news-cycle envelope).
+//! * **AmazonMovieLike** — the AM dataset keys tuples by product id;
+//!   popularity follows release waves (sharp rise, long decay). We model
+//!   products whose release times are spread over the stream and whose
+//!   popularity at time t follows a log-normal-ish wave, on top of a
+//!   Zipf catalogue-popularity base.
+//!
+//! Both generators reproduce the two properties FISH exploits
+//! (Observation 1): (1) within any bounded interval the key frequencies
+//! are heavily skewed; (2) the identity of the head set drifts over time.
+
+use super::zipf::Zipf;
+use super::Generator;
+use crate::util::Rng;
+use crate::Key;
+
+/// Default key-space scale divisor: full-scale MT has 0.39M keys / 49.21M
+/// tuples; by default we keep the keys-per-tuple ratio at reduced scale.
+fn scaled_keys(tuples: usize, full_tuples: f64, full_keys: f64, floor: usize) -> usize {
+    let ratio = full_keys / full_tuples;
+    ((tuples as f64 * ratio) as usize).max(floor)
+}
+
+/// MemeTracker-like bursty keyword stream.
+pub struct MemeTrackerLike {
+    len: usize,
+    key_space: usize,
+    base: Zipf,
+    /// catchphrase schedule: per slice, the promoted key set
+    slices: Vec<Vec<Key>>,
+    slice_len: usize,
+    burst_zipf: Zipf,
+    /// probability a tuple comes from the burst overlay vs the base
+    burst_frac: f64,
+    rng: Rng,
+    cursor: usize,
+    seed: u64,
+}
+
+impl MemeTrackerLike {
+    /// Create a stream of `tuples` tuples (key space scales with size).
+    ///
+    /// The news-cycle length scales with the stream (~32 cycles per
+    /// stream) so the *drift rate* — hot-set changes per stream — matches
+    /// the full-size dataset's behaviour at any scale.
+    pub fn new(tuples: usize, seed: u64) -> Self {
+        let slice = (tuples / 32).max(2_000);
+        Self::with_params(tuples, scaled_keys(tuples, 49.21e6, 0.39e6, 2_000), slice, 16, 0.45, seed)
+    }
+
+    /// Full parameter control (used by ablation benches).
+    ///
+    /// * `slice_len` — tuples per news-cycle slice
+    /// * `burst_keys` — catchphrases promoted per slice
+    /// * `burst_frac` — fraction of tuples drawn from the burst overlay
+    pub fn with_params(
+        tuples: usize,
+        key_space: usize,
+        slice_len: usize,
+        burst_keys: usize,
+        burst_frac: f64,
+        seed: u64,
+    ) -> Self {
+        let mut rng = super::wl_rng(seed, 1);
+        let n_slices = tuples.div_ceil(slice_len.max(1)).max(1);
+        let mut slices = Vec::with_capacity(n_slices);
+        for _ in 0..n_slices {
+            let set: Vec<Key> = (0..burst_keys)
+                .map(|_| rng.gen_range(key_space as u64))
+                .collect();
+            slices.push(set);
+        }
+        MemeTrackerLike {
+            len: tuples,
+            key_space,
+            base: Zipf::new(key_space, 1.05),
+            slices,
+            slice_len: slice_len.max(1),
+            burst_zipf: Zipf::new(burst_keys.max(1), 1.3),
+            burst_frac,
+            rng: super::wl_rng(seed, 2),
+            cursor: 0,
+            seed,
+        }
+    }
+
+    fn sample_at(&mut self, i: usize) -> Key {
+        let slice = (i / self.slice_len).min(self.slices.len() - 1);
+        // news-cycle envelope: burst share ramps 0→peak→0 across the slice
+        let pos = (i % self.slice_len) as f64 / self.slice_len as f64;
+        let envelope = 1.0 - (2.0 * pos - 1.0).abs(); // triangle 0→1→0
+        let p_burst = self.burst_frac * (0.4 + 0.6 * envelope);
+        if self.rng.gen_bool(p_burst) {
+            let r = self.burst_zipf.sample(&mut self.rng);
+            self.slices[slice][r]
+        } else {
+            self.base.sample(&mut self.rng) as Key
+        }
+    }
+}
+
+impl Generator for MemeTrackerLike {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn key_space(&self) -> usize {
+        self.key_space
+    }
+
+    fn key_at(&mut self, i: usize) -> Key {
+        if i != self.cursor {
+            let mut fresh = Self::with_params(
+                self.len,
+                self.key_space,
+                self.slice_len,
+                self.burst_zipf.k(),
+                self.burst_frac,
+                self.seed,
+            );
+            for j in 0..i {
+                let _ = fresh.sample_at(j);
+            }
+            self.rng = fresh.rng;
+            self.cursor = i;
+        }
+        let k = self.sample_at(i);
+        self.cursor += 1;
+        k
+    }
+}
+
+/// Amazon-Movie-Review-like product-popularity stream.
+pub struct AmazonMovieLike {
+    len: usize,
+    key_space: usize,
+    base: Zipf,
+    /// product release position (fraction of stream) per wave product
+    releases: Vec<(Key, f64)>,
+    wave_frac: f64,
+    rng: Rng,
+    cursor: usize,
+    seed: u64,
+}
+
+impl AmazonMovieLike {
+    /// Create a stream of `tuples` review events (~64 release waves per
+    /// stream, mirroring the full dataset's popularity-wave density).
+    pub fn new(tuples: usize, seed: u64) -> Self {
+        Self::with_params(tuples, scaled_keys(tuples, 7.91e6, 0.25e6, 2_000), 64, 0.5, seed)
+    }
+
+    /// * `wave_products` — number of release-wave (hot) products
+    /// * `wave_frac` — fraction of tuples drawn from release waves
+    pub fn with_params(
+        tuples: usize,
+        key_space: usize,
+        wave_products: usize,
+        wave_frac: f64,
+        seed: u64,
+    ) -> Self {
+        let mut rng = super::wl_rng(seed, 11);
+        let releases: Vec<(Key, f64)> = (0..wave_products)
+            .map(|_| (rng.gen_range(key_space as u64), rng.gen_f64() * 0.9))
+            .collect();
+        AmazonMovieLike {
+            len: tuples,
+            key_space,
+            base: Zipf::new(key_space, 0.9),
+            releases,
+            wave_frac,
+            rng: super::wl_rng(seed, 12),
+            cursor: 0,
+            seed,
+        }
+    }
+
+    /// Popularity envelope of a release at stream position `pos`:
+    /// zero before release, sharp rise, exponential-ish decay.
+    fn wave_weight(release: f64, pos: f64) -> f64 {
+        if pos < release {
+            0.0
+        } else {
+            let age = (pos - release) * 20.0; // ~5% of stream = one decay unit
+            age.min(1.0) * (-age * 0.8).exp()
+        }
+    }
+
+    fn sample_at(&mut self, i: usize) -> Key {
+        let pos = i as f64 / self.len.max(1) as f64;
+        if self.rng.gen_bool(self.wave_frac) {
+            // weighted pick among active waves; fall back to base if none
+            let weights: Vec<f64> = self
+                .releases
+                .iter()
+                .map(|&(_, r)| Self::wave_weight(r, pos))
+                .collect();
+            let total: f64 = weights.iter().sum();
+            if total > 1e-12 {
+                let mut u = self.rng.gen_f64() * total;
+                for (j, w) in weights.iter().enumerate() {
+                    u -= w;
+                    if u <= 0.0 {
+                        return self.releases[j].0;
+                    }
+                }
+                return self.releases.last().unwrap().0;
+            }
+        }
+        self.base.sample(&mut self.rng) as Key
+    }
+}
+
+impl Generator for AmazonMovieLike {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn key_space(&self) -> usize {
+        self.key_space
+    }
+
+    fn key_at(&mut self, i: usize) -> Key {
+        if i != self.cursor {
+            let mut fresh = Self::with_params(
+                self.len,
+                self.key_space,
+                self.releases.len(),
+                self.wave_frac,
+                self.seed,
+            );
+            for j in 0..i {
+                let _ = fresh.sample_at(j);
+            }
+            self.rng = fresh.rng;
+            self.cursor = i;
+        }
+        let k = self.sample_at(i);
+        self.cursor += 1;
+        k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn head_share(counts: &HashMap<Key, usize>, top: usize, n: usize) -> f64 {
+        let mut v: Vec<usize> = counts.values().copied().collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v.iter().take(top).sum::<usize>() as f64 / n as f64
+    }
+
+    #[test]
+    fn mt_interval_skew_and_drift() {
+        let mut g = MemeTrackerLike::new(200_000, 4);
+        let mut interval_heads: Vec<Vec<Key>> = Vec::new();
+        for w in 0..4 {
+            let mut counts = HashMap::new();
+            for i in w * 50_000..(w + 1) * 50_000 {
+                *counts.entry(g.key_at(i)).or_insert(0usize) += 1;
+            }
+            // Observation 1: bounded-interval skew — top-20 keys dominate
+            assert!(
+                head_share(&counts, 20, 50_000) > 0.15,
+                "window {w} lacks skew"
+            );
+            let mut v: Vec<(Key, usize)> = counts.into_iter().collect();
+            v.sort_unstable_by(|a, b| b.1.cmp(&a.1));
+            interval_heads.push(v.into_iter().take(10).map(|(k, _)| k).collect());
+        }
+        // hot-set drift: consecutive windows share few head keys
+        let overlap: usize = interval_heads[0]
+            .iter()
+            .filter(|k| interval_heads[3].contains(k))
+            .count();
+        assert!(overlap < 8, "head set did not drift (overlap {overlap})");
+    }
+
+    #[test]
+    fn am_waves_rise_and_decay() {
+        let mut g = AmazonMovieLike::new(200_000, 8);
+        let mut per_window: Vec<HashMap<Key, usize>> = Vec::new();
+        for w in 0..4 {
+            let mut counts = HashMap::new();
+            for i in w * 50_000..(w + 1) * 50_000 {
+                *counts.entry(g.key_at(i)).or_insert(0usize) += 1;
+            }
+            per_window.push(counts);
+        }
+        // each window is skewed
+        for (w, counts) in per_window.iter().enumerate() {
+            assert!(head_share(counts, 20, 50_000) > 0.15, "window {w} lacks skew");
+        }
+    }
+
+    #[test]
+    fn deterministic_and_in_range() {
+        let mut a = MemeTrackerLike::new(20_000, 1);
+        let mut b = MemeTrackerLike::new(20_000, 1);
+        for i in 0..20_000 {
+            let k = a.key_at(i);
+            assert_eq!(k, b.key_at(i));
+            assert!((k as usize) < a.key_space());
+        }
+        let mut c = AmazonMovieLike::new(20_000, 1);
+        let mut d = AmazonMovieLike::new(20_000, 1);
+        for i in 0..20_000 {
+            let k = c.key_at(i);
+            assert_eq!(k, d.key_at(i));
+            assert!((k as usize) < c.key_space());
+        }
+    }
+
+    #[test]
+    fn random_access_consistency() {
+        let mut a = AmazonMovieLike::new(5_000, 2);
+        let seq: Vec<Key> = (0..5_000).map(|i| a.key_at(i)).collect();
+        let mut b = AmazonMovieLike::new(5_000, 2);
+        assert_eq!(b.key_at(1234), seq[1234]);
+        assert_eq!(b.key_at(1235), seq[1235]);
+    }
+}

@@ -1,0 +1,218 @@
+//! Time-evolving Zipf stream — the paper's synthetic ZF dataset (§6.1).
+//!
+//! Spec from the paper: 50M tuples, 10^5 unique keys, exponent
+//! z ∈ {1.0, …, 2.0}:
+//!   * first 0.8·N tuples:  Pr[i] ∝ i^-z            (head = low key ids)
+//!   * last  0.2·N tuples:  Pr[i] ∝ (k - i + 1)^-z  (head flips to the
+//!     other end of the id space — an abrupt hot-set inversion), with
+//!     k = 10^4 and N = 5M per paper text.
+//!
+//! `phases` generalises this to any number of hot-set rotations so the
+//! ablation benches can vary drift rate.
+
+use super::zipf::Zipf;
+use super::Generator;
+use crate::util::Rng;
+use crate::Key;
+
+/// Strategy for mapping a sampled Zipf rank to a key id in one phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseMap {
+    /// key = rank (hot keys are the smallest ids).
+    Identity,
+    /// key = (k - 1 - rank) mod key_space within the window `k`
+    /// (the paper's `(k - i + 1)` inversion).
+    Reversed { k: usize },
+    /// key = (rank + offset) mod key_space (rotating hot set).
+    Rotated { offset: usize },
+}
+
+/// One contiguous phase of the stream.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    /// Number of tuples in this phase.
+    pub len: usize,
+    /// Rank→key mapping for this phase.
+    pub map: PhaseMap,
+}
+
+/// Time-evolving Zipf generator.
+pub struct EvolvingZipf {
+    zipf: Zipf,
+    phases: Vec<Phase>,
+    /// Cumulative phase boundaries (end index of each phase).
+    bounds: Vec<usize>,
+    key_space: usize,
+    rng: Rng,
+    /// Sequential cursor cache: (next index, rng snapshot) — `key_at` is
+    /// O(1) when called with monotonically increasing `i` (the common
+    /// engine replay pattern) and re-seeds deterministically otherwise.
+    cursor: usize,
+    seed: u64,
+}
+
+impl EvolvingZipf {
+    /// Generic constructor.
+    pub fn new(key_space: usize, z: f64, phases: Vec<Phase>, seed: u64) -> Self {
+        assert!(!phases.is_empty());
+        let mut bounds = Vec::with_capacity(phases.len());
+        let mut acc = 0;
+        for p in &phases {
+            acc += p.len;
+            bounds.push(acc);
+        }
+        EvolvingZipf {
+            zipf: Zipf::new(key_space, z),
+            phases,
+            bounds,
+            key_space,
+            rng: Rng::new(seed),
+            cursor: 0,
+            seed,
+        }
+    }
+
+    /// The paper's exact ZF spec scaled to `tuples` total:
+    /// 80% identity-mapped Zipf, 20% reversed within k = key_space / 10.
+    pub fn paper_spec(tuples: usize, z: f64, seed: u64) -> Self {
+        let key_space = 100_000;
+        let head = (tuples as f64 * 0.8) as usize;
+        let phases = vec![
+            Phase { len: head, map: PhaseMap::Identity },
+            Phase { len: tuples - head, map: PhaseMap::Reversed { k: key_space / 10 } },
+        ];
+        EvolvingZipf::new(key_space, z, phases, seed)
+    }
+
+    /// A rotating-hot-set variant: `n_phases` equal phases, each rotating
+    /// the head by `key_space / n_phases`. Used by drift-rate ablations.
+    pub fn rotating(tuples: usize, key_space: usize, z: f64, n_phases: usize, seed: u64) -> Self {
+        assert!(n_phases > 0);
+        let per = tuples / n_phases;
+        let mut phases = Vec::new();
+        for p in 0..n_phases {
+            let len = if p == n_phases - 1 { tuples - per * (n_phases - 1) } else { per };
+            phases.push(Phase {
+                len,
+                map: PhaseMap::Rotated { offset: p * (key_space / n_phases) },
+            });
+        }
+        EvolvingZipf::new(key_space, z, phases, seed)
+    }
+
+    fn phase_of(&self, i: usize) -> &Phase {
+        let pi = match self.bounds.binary_search(&i) {
+            Ok(p) => p + 1,
+            Err(p) => p,
+        };
+        &self.phases[pi.min(self.phases.len() - 1)]
+    }
+
+    #[inline]
+    fn map_rank(&self, map: PhaseMap, rank: usize) -> Key {
+        match map {
+            PhaseMap::Identity => rank as Key,
+            PhaseMap::Reversed { k } => {
+                // paper: Pr[i] ∝ (k - i + 1)^-z, i.e. hottest rank maps to
+                // key k-1, next to k-2, ... wrapping into the key space.
+                let k = k.max(1);
+                ((k - 1 + self.key_space - rank % self.key_space) % self.key_space) as Key
+            }
+            PhaseMap::Rotated { offset } => ((rank + offset) % self.key_space) as Key,
+        }
+    }
+}
+
+impl Generator for EvolvingZipf {
+    fn len(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    fn key_space(&self) -> usize {
+        self.key_space
+    }
+
+    fn key_at(&mut self, i: usize) -> Key {
+        if i != self.cursor {
+            // random access: rebuild the rng deterministically by skipping.
+            // Sequential replay (the hot path) never takes this branch.
+            let mut rng = Rng::new(self.seed);
+            for _ in 0..i {
+                let _ = self.zipf.sample(&mut rng);
+            }
+            self.rng = rng;
+            self.cursor = i;
+        }
+        let rank = self.zipf.sample(&mut self.rng);
+        self.cursor += 1;
+        let map = self.phase_of(i).map;
+        self.map_rank(map, rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_spec_hot_set_inverts() {
+        let mut g = EvolvingZipf::paper_spec(100_000, 1.5, 1);
+        let mut head_counts = std::collections::HashMap::new();
+        let mut tail_counts = std::collections::HashMap::new();
+        for i in 0..80_000 {
+            *head_counts.entry(g.key_at(i)).or_insert(0usize) += 1;
+        }
+        for i in 80_000..100_000 {
+            *tail_counts.entry(g.key_at(i)).or_insert(0usize) += 1;
+        }
+        let hot_head = head_counts.iter().max_by_key(|(_, &c)| c).unwrap();
+        let hot_tail = tail_counts.iter().max_by_key(|(_, &c)| c).unwrap();
+        assert!(*hot_head.0 < 10, "phase-1 hottest should be a small id");
+        assert!(*hot_tail.0 >= 9_000, "phase-2 hottest should be near k-1={}, got {}", 9_999, hot_tail.0);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut a = EvolvingZipf::paper_spec(10_000, 1.2, 7);
+        let mut b = EvolvingZipf::paper_spec(10_000, 1.2, 7);
+        let va: Vec<Key> = (0..10_000).map(|i| a.key_at(i)).collect();
+        let vb: Vec<Key> = (0..10_000).map(|i| b.key_at(i)).collect();
+        assert_eq!(va, vb);
+    }
+
+    #[test]
+    fn random_access_matches_sequential() {
+        let mut a = EvolvingZipf::paper_spec(5_000, 1.0, 3);
+        let seq: Vec<Key> = (0..5_000).map(|i| a.key_at(i)).collect();
+        let mut b = EvolvingZipf::paper_spec(5_000, 1.0, 3);
+        assert_eq!(b.key_at(4_321), seq[4_321]);
+        assert_eq!(b.key_at(100), seq[100]);
+        assert_eq!(b.key_at(101), seq[101]); // sequential after a jump
+    }
+
+    #[test]
+    fn rotating_phases_shift_head() {
+        let mut g = EvolvingZipf::rotating(30_000, 9_000, 1.8, 3, 5);
+        let mode = |from: usize, to: usize, g: &mut EvolvingZipf| {
+            let mut c = std::collections::HashMap::new();
+            for i in from..to {
+                *c.entry(g.key_at(i)).or_insert(0usize) += 1;
+            }
+            *c.iter().max_by_key(|(_, &n)| n).unwrap().0
+        };
+        let m1 = mode(0, 10_000, &mut g);
+        let m2 = mode(10_000, 20_000, &mut g);
+        let m3 = mode(20_000, 30_000, &mut g);
+        assert!(m1 < 100);
+        assert!((3_000..3_100).contains(&(m2 as usize)));
+        assert!((6_000..6_100).contains(&(m3 as usize)));
+    }
+
+    #[test]
+    fn keys_within_space() {
+        let mut g = EvolvingZipf::paper_spec(20_000, 2.0, 11);
+        for i in 0..20_000 {
+            assert!((g.key_at(i) as usize) < g.key_space());
+        }
+    }
+}

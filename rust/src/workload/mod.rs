@@ -1,0 +1,65 @@
+//! Time-evolving stream workload generators and trace I/O.
+//!
+//! The paper evaluates on two real datasets (MemeTracker, Amazon Movie
+//! Reviews) plus a synthetic time-evolving Zipf stream. The real datasets
+//! are not redistributable here, so `corpus` synthesises traces that
+//! reproduce their operative properties — short-interval Zipf skew with
+//! hot-set drift — at configurable scale (DESIGN.md §5).
+
+pub mod corpus;
+pub mod evolving;
+pub mod trace;
+pub mod zipf;
+
+pub use evolving::EvolvingZipf;
+pub use trace::{Trace, Tuple};
+pub use zipf::Zipf;
+
+use crate::util::Rng;
+
+/// Anything that can produce a key stream. All generators are
+/// deterministic given their seed.
+pub trait Generator {
+    /// Total tuples this generator will emit.
+    fn len(&self) -> usize;
+    /// True when `len() == 0`.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Number of distinct keys in the key space.
+    fn key_space(&self) -> usize;
+    /// Emit the `i`-th tuple's key (generators are random-access so the
+    /// engines can replay without materialising 50M-tuple traces).
+    fn key_at(&mut self, i: usize) -> crate::Key;
+}
+
+/// Build the named workload at the given scale.
+///
+/// Names mirror the paper: `zf` (synthetic Zipf, `z` = skew), `mt`
+/// (MemeTracker-like), `am` (Amazon-Movie-like).
+pub fn by_name(name: &str, tuples: usize, z: f64, seed: u64) -> Box<dyn Generator + Send> {
+    match name {
+        "zf" => Box::new(EvolvingZipf::paper_spec(tuples, z, seed)),
+        "mt" => Box::new(corpus::MemeTrackerLike::new(tuples, seed)),
+        "am" => Box::new(corpus::AmazonMovieLike::new(tuples, seed)),
+        other => panic!("unknown workload '{other}' (expected zf|mt|am)"),
+    }
+}
+
+/// Materialise a generator into a [`Trace`].
+pub fn materialise(gen: &mut (dyn Generator + Send), interarrival_ns: u64) -> Trace {
+    let n = gen.len();
+    let mut tuples = Vec::with_capacity(n);
+    for i in 0..n {
+        tuples.push(Tuple {
+            ts: i as u64 * interarrival_ns,
+            key: gen.key_at(i),
+        });
+    }
+    Trace::new(tuples, gen.key_space())
+}
+
+/// Convenience: fresh RNG namespaced to the workload layer.
+pub(crate) fn wl_rng(seed: u64, stream: u64) -> Rng {
+    Rng::new(seed ^ 0x574C_0000_0000_0000).fork(stream)
+}

@@ -1,0 +1,160 @@
+//! Materialised traces and a simple binary trace-file format, so
+//! experiments can be replayed byte-identically across engines/schemes.
+
+use crate::Key;
+use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// One stream tuple: arrival timestamp (ns since stream start) + key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tuple {
+    /// Arrival time in nanoseconds from stream start.
+    pub ts: u64,
+    /// Interned key id.
+    pub key: Key,
+}
+
+/// A fully materialised stream trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    tuples: Vec<Tuple>,
+    key_space: usize,
+}
+
+const MAGIC: &[u8; 8] = b"FISHTRC1";
+
+impl Trace {
+    /// Wrap a tuple vector.
+    pub fn new(tuples: Vec<Tuple>, key_space: usize) -> Self {
+        Trace { tuples, key_space }
+    }
+
+    /// Tuples in arrival order.
+    pub fn tuples(&self) -> &[Tuple] {
+        &self.tuples
+    }
+
+    /// Number of tuples.
+    pub fn len(&self) -> usize {
+        self.tuples.len()
+    }
+
+    /// True when the trace has no tuples.
+    pub fn is_empty(&self) -> bool {
+        self.tuples.is_empty()
+    }
+
+    /// Size of the key space this trace draws from.
+    pub fn key_space(&self) -> usize {
+        self.key_space
+    }
+
+    /// Write the binary format: magic, key_space, n, then (ts, key) LE pairs.
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        let mut w = BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.key_space as u64).to_le_bytes())?;
+        w.write_all(&(self.tuples.len() as u64).to_le_bytes())?;
+        for t in &self.tuples {
+            w.write_all(&t.ts.to_le_bytes())?;
+            w.write_all(&t.key.to_le_bytes())?;
+        }
+        w.flush()
+    }
+
+    /// Read the binary format written by [`Trace::save`].
+    pub fn load(path: &Path) -> io::Result<Trace> {
+        let mut r = BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "bad trace magic"));
+        }
+        let mut buf8 = [0u8; 8];
+        r.read_exact(&mut buf8)?;
+        let key_space = u64::from_le_bytes(buf8) as usize;
+        r.read_exact(&mut buf8)?;
+        let n = u64::from_le_bytes(buf8) as usize;
+        let mut tuples = Vec::with_capacity(n);
+        for _ in 0..n {
+            r.read_exact(&mut buf8)?;
+            let ts = u64::from_le_bytes(buf8);
+            r.read_exact(&mut buf8)?;
+            let key = u64::from_le_bytes(buf8);
+            tuples.push(Tuple { ts, key });
+        }
+        Ok(Trace { tuples, key_space })
+    }
+
+    /// Parse a whitespace text stream (one word per token) into a trace,
+    /// interning words to dense key ids and dropping `stopwords`. This is
+    /// the word-count ingestion path used by `examples/wordcount_pipeline`.
+    pub fn from_text<R: Read>(reader: R, stopwords: &[&str], interarrival_ns: u64) -> Trace {
+        let mut intern: std::collections::HashMap<String, Key> = std::collections::HashMap::new();
+        let mut tuples = Vec::new();
+        let stop: std::collections::HashSet<&str> = stopwords.iter().copied().collect();
+        let br = BufReader::new(reader);
+        let mut i = 0u64;
+        for line in br.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(_) => break,
+            };
+            for word in line.split(|c: char| !c.is_alphanumeric()) {
+                if word.is_empty() {
+                    continue;
+                }
+                let w = word.to_ascii_lowercase();
+                if stop.contains(w.as_str()) || w.len() < 2 {
+                    continue;
+                }
+                let next_id = intern.len() as Key;
+                let id = *intern.entry(w).or_insert(next_id);
+                tuples.push(Tuple { ts: i * interarrival_ns, key: id });
+                i += 1;
+            }
+        }
+        let key_space = intern.len();
+        Trace { tuples, key_space }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let t = Trace::new(
+            (0..1000).map(|i| Tuple { ts: i * 10, key: (i * 7) % 97 }).collect(),
+            97,
+        );
+        let dir = std::env::temp_dir().join("fish_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back.key_space(), 97);
+        assert_eq!(back.tuples(), t.tuples());
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("fish_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTATRACE___").unwrap();
+        assert!(Trace::load(&path).is_err());
+    }
+
+    #[test]
+    fn from_text_interns_and_filters() {
+        let text = "The cat sat. The CAT ran! a";
+        let t = Trace::from_text(text.as_bytes(), &["the"], 100);
+        // tokens kept: cat sat cat ran  (the/a dropped; 'a' too short)
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.key_space(), 3); // cat, sat, ran
+        assert_eq!(t.tuples()[0].key, t.tuples()[2].key); // cat == cat
+        assert_eq!(t.tuples()[1].ts, 100);
+    }
+}

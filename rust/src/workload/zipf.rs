@@ -1,0 +1,111 @@
+//! Zipf sampler over a finite key space.
+//!
+//! Pr[rank i] ∝ i^-z, i ∈ [1, k]. Implemented with a precomputed CDF and
+//! binary search — O(log k) per sample, exact, deterministic.
+
+use crate::util::Rng;
+
+/// Finite Zipf distribution sampler.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Distribution over `k` ranks with exponent `z >= 0`.
+    pub fn new(k: usize, z: f64) -> Self {
+        assert!(k > 0, "zipf needs a non-empty key space");
+        assert!(z >= 0.0 && z.is_finite(), "zipf exponent must be finite >= 0");
+        let mut cdf = Vec::with_capacity(k);
+        let mut acc = 0.0f64;
+        for i in 1..=k {
+            acc += (i as f64).powf(-z);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        // guard against fp round-off on the tail
+        *cdf.last_mut().unwrap() = 1.0;
+        Zipf { cdf }
+    }
+
+    /// Number of ranks.
+    pub fn k(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Sample a rank in `[0, k)` (rank 0 is the hottest).
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.gen_f64();
+        // first index with cdf[i] >= u
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i,
+        }
+    }
+
+    /// Exact probability of rank `i` (0-based).
+    pub fn pmf(&self, i: usize) -> f64 {
+        if i == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[i] - self.cdf[i - 1]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pmf_sums_to_one() {
+        let z = Zipf::new(1000, 1.5);
+        let sum: f64 = (0..1000).map(|i| z.pmf(i)).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ranks_monotone_decreasing() {
+        let z = Zipf::new(100, 1.2);
+        for i in 1..100 {
+            assert!(z.pmf(i) <= z.pmf(i - 1) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn z_zero_is_uniform() {
+        let z = Zipf::new(10, 0.0);
+        for i in 0..10 {
+            assert!((z.pmf(i) - 0.1).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn empirical_matches_pmf_head() {
+        let z = Zipf::new(1000, 1.0);
+        let mut rng = Rng::new(123);
+        let n = 200_000;
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..n {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for i in 0..5 {
+            let emp = counts[i] as f64 / n as f64;
+            let rel = (emp - z.pmf(i)).abs() / z.pmf(i);
+            assert!(rel < 0.05, "rank {i}: emp {emp} vs pmf {}", z.pmf(i));
+        }
+    }
+
+    #[test]
+    fn samples_in_range() {
+        let z = Zipf::new(7, 2.0);
+        let mut rng = Rng::new(9);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut rng) < 7);
+        }
+    }
+}

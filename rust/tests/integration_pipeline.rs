@@ -1,0 +1,136 @@
+//! End-to-end integration over the simulator: every scheme × every
+//! workload, checking the paper's qualitative claims hold in-system.
+
+use fish::config::Config;
+use fish::coordinator::SchemeKind;
+use fish::engine::sim::{run_config, SimResult};
+
+fn cfg(scheme: SchemeKind, workload: &str, workers: usize, z: f64) -> Config {
+    let mut c = Config::default();
+    c.scheme = scheme;
+    c.workload = workload.into();
+    c.tuples = 120_000;
+    c.zipf_z = z;
+    c.workers = workers;
+    c.sources = 4;
+    c.service_ns = 1_000;
+    c.interarrival_ns = (c.service_ns / workers as u64).max(1);
+    c
+}
+
+fn run(scheme: SchemeKind, workload: &str, workers: usize, z: f64) -> SimResult {
+    run_config(&cfg(scheme, workload, workers, z))
+}
+
+#[test]
+fn every_scheme_processes_every_workload() {
+    for workload in ["zf", "mt", "am"] {
+        for kind in SchemeKind::all() {
+            let r = run(kind, workload, 16, 1.4);
+            assert_eq!(
+                r.worker_counts.iter().sum::<u64>() as usize,
+                r.tuples,
+                "{kind} on {workload}"
+            );
+            assert!(r.makespan > 0);
+            assert!(r.entries >= r.distinct_keys);
+        }
+    }
+}
+
+#[test]
+fn fish_matches_wchoices_execution_at_lower_replication() {
+    // The headline comparison (paper Figs. 9/10 + 15): FISH's execution
+    // time is at least competitive with W-C on evolving skewed data,
+    // while CHK's frequency-proportional ladder replicates strictly less
+    // state than W-C's all-workers hot-key treatment.
+    let wc = run(SchemeKind::WChoices, "zf", 64, 1.8);
+    let fish = run(SchemeKind::Fish, "zf", 64, 1.8);
+    let exec_ratio = fish.makespan as f64 / wc.makespan as f64;
+    assert!(exec_ratio < 1.05, "FISH/W-C makespan {exec_ratio}");
+    assert!(
+        fish.entries < wc.entries,
+        "FISH entries {} should undercut W-C {}",
+        fish.entries,
+        wc.entries
+    );
+}
+
+#[test]
+fn fish_tracks_sg_within_paper_bound() {
+    // paper: worst case 1.32x on ZF
+    for z in [1.0, 1.5, 2.0] {
+        let sg = run(SchemeKind::Shuffle, "zf", 32, z);
+        let fish = run(SchemeKind::Fish, "zf", 32, z);
+        let ratio = fish.makespan as f64 / sg.makespan as f64;
+        assert!(ratio < 1.8, "z={z}: FISH/SG makespan {ratio}");
+    }
+}
+
+#[test]
+fn fish_memory_between_fg_and_sg() {
+    let sg = run(SchemeKind::Shuffle, "zf", 64, 1.5);
+    let fish = run(SchemeKind::Fish, "zf", 64, 1.5);
+    assert!(fish.memory_normalized >= 1.0);
+    let fish_over = fish.memory_normalized - 1.0;
+    let sg_over = sg.memory_normalized - 1.0;
+    assert!(
+        fish_over < sg_over * 0.5,
+        "FISH overhead {fish_over} vs SG {sg_over}"
+    );
+}
+
+#[test]
+fn scheme_gap_grows_with_workers_for_pkg() {
+    // paper Fig. 9: PKG-vs-SG ratio worsens as workers scale
+    let r16 = {
+        let sg = run(SchemeKind::Shuffle, "zf", 16, 1.8);
+        let pkg = run(SchemeKind::Pkg, "zf", 16, 1.8);
+        pkg.makespan as f64 / sg.makespan as f64
+    };
+    let r128 = {
+        let sg = run(SchemeKind::Shuffle, "zf", 128, 1.8);
+        let pkg = run(SchemeKind::Pkg, "zf", 128, 1.8);
+        pkg.makespan as f64 / sg.makespan as f64
+    };
+    assert!(
+        r128 > r16,
+        "PKG degradation should grow with scale: 16w {r16} vs 128w {r128}"
+    );
+}
+
+#[test]
+fn config_file_drives_simulation() {
+    let dir = std::env::temp_dir().join("fish_it_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(
+        &path,
+        r#"
+[run]
+scheme = "fish"
+workload = "zf"
+tuples = 30000
+zipf_z = 1.5
+[topology]
+workers = 8
+sources = 2
+"#,
+    )
+    .unwrap();
+    let cfg = Config::from_file(path.to_str().unwrap()).unwrap();
+    assert_eq!(cfg.workers, 8);
+    let r = run_config(&cfg);
+    assert_eq!(r.tuples, 30_000);
+}
+
+#[test]
+fn latency_histogram_consistent_with_makespan() {
+    let r = run(SchemeKind::Fish, "zf", 16, 1.5);
+    assert!(r.latency.count() as usize == r.tuples);
+    // max latency cannot exceed makespan
+    assert!(r.latency.quantile(1.0) <= r.makespan);
+    // p50 <= p95 <= p99
+    assert!(r.latency.quantile(0.5) <= r.latency.quantile(0.95));
+    assert!(r.latency.quantile(0.95) <= r.latency.quantile(0.99));
+}

@@ -1,0 +1,103 @@
+//! Cross-layer integration: the AOT XLA path (Pallas CMS via PJRT) must
+//! agree with the native Rust sketch bit-for-bit, and FISH must produce
+//! equivalent routing behaviour on either identifier backend.
+//!
+//! These tests skip (with a note) when `artifacts/` has not been built —
+//! run `make artifacts` first for full coverage.
+
+use fish::config::Config;
+use fish::coordinator::{ClusterView, Grouper, SchemeKind};
+use fish::sketch::CountMin;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+#[test]
+fn xla_cms_bit_equals_native_countmin() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let svc = fish::runtime::XlaEpochService::spawn("artifacts", 256, 1.0).unwrap();
+    let n = svc.spec().epoch_len;
+
+    let mut rng = fish::util::Rng::new(77);
+    let keys: Vec<u64> = (0..n).map(|_| rng.gen_range(10_000)).collect();
+    let cands: Vec<u64> = keys.iter().take(16).copied().collect();
+
+    // native mirror (alpha=1 → no decay, counts comparable 1:1)
+    // geometry must match the artifact: read it from the manifest.
+    let rtinfo = fish::runtime::Runtime::new("artifacts").unwrap();
+    let spec = rtinfo.pick_variant(256).clone();
+    let mut native = CountMin::new(spec.depth, spec.width);
+    for &k in &keys {
+        native.add(k);
+    }
+
+    let keys_i32: Vec<i32> = keys.iter().map(|&k| k as u32 as i32).collect();
+    let reply = svc.run_epoch(keys_i32, cands.clone()).unwrap();
+    for (k, est) in reply.est {
+        let want = native.estimate(k);
+        assert!(
+            (est - want).abs() < 1e-3,
+            "key {k}: xla {est} native {want}"
+        );
+    }
+}
+
+#[test]
+fn fish_with_xla_identifier_runs_simulation() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut cfg = Config::default();
+    cfg.workers = 16;
+    cfg.sources = 2;
+    cfg.tuples = 8_192; // 8 epochs of the n1024 artifact per source
+    cfg.identifier = "xla-cms".into();
+    cfg.artifacts_dir = "artifacts".into();
+    cfg.interarrival_ns = 100;
+
+    let topology = fish::engine::Topology::from_config(&cfg);
+    let sources: Vec<Box<dyn Grouper>> = (0..cfg.sources)
+        .map(|_| Box::new(fish::runtime::make_fish_xla(&cfg).unwrap()) as Box<dyn Grouper>)
+        .collect();
+    let mut sim = fish::engine::Simulator::new(topology, sources, cfg.interarrival_ns);
+    let mut gen = fish::workload::by_name("zf", cfg.tuples, 1.6, cfg.seed);
+    let r = sim.run(gen.as_mut());
+    assert_eq!(r.worker_counts.iter().sum::<u64>() as usize, cfg.tuples);
+    assert!(r.memory_normalized < 8.0, "xla-FISH memory {}", r.memory_normalized);
+}
+
+#[test]
+fn xla_and_native_fish_route_hot_keys_similarly() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut cfg = Config::default();
+    cfg.workers = 16;
+    let mut native = fish::coordinator::make_kind(SchemeKind::Fish, &cfg, 0);
+    let mut xla = Box::new(fish::runtime::make_fish_xla(&cfg).unwrap()) as Box<dyn Grouper>;
+
+    let ids: Vec<usize> = (0..16).collect();
+    let times = vec![1_000.0; 16];
+    let mut rng = fish::util::Rng::new(9);
+    let mut native_fan = std::collections::HashSet::new();
+    let mut xla_fan = std::collections::HashSet::new();
+    for i in 0..20_000u64 {
+        let k = if rng.gen_bool(0.4) { 5 } else { 100 + rng.gen_range(10_000) };
+        let view = ClusterView { now: i, workers: &ids, per_tuple_time: &times, n_slots: 16 };
+        let wn = native.route(k, &view);
+        let wx = xla.route(k, &view);
+        if k == 5 && i > 10_000 {
+            native_fan.insert(wn);
+            xla_fan.insert(wx);
+        }
+    }
+    // both identifiers must detect the hot key and fan it out broadly
+    assert!(native_fan.len() > 4, "native fan-out {}", native_fan.len());
+    assert!(xla_fan.len() > 4, "xla fan-out {}", xla_fan.len());
+}

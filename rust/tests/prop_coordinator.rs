@@ -1,0 +1,219 @@
+//! Property-based tests over coordinator invariants (in-repo harness,
+//! `fish::testing::prop_check` — proptest is unavailable offline).
+
+use fish::config::Config;
+use fish::coordinator::{make_kind, ClusterView, SchemeKind};
+use fish::hashring::HashRing;
+use fish::metrics::Histogram;
+use fish::sketch::{CountMin, SpaceSaving};
+use fish::testing::prop_check;
+
+#[test]
+fn prop_every_scheme_routes_to_alive_worker() {
+    prop_check("route targets alive worker", 60, |g| {
+        let workers_n = g.usize_in(1..40);
+        let kind = *g.choose(&SchemeKind::all());
+        let mut cfg = Config::default();
+        cfg.workers = workers_n;
+        let mut grouper = make_kind(kind, &cfg, 0);
+        let ids: Vec<usize> = (0..workers_n).collect();
+        let times: Vec<f64> = (0..workers_n).map(|_| 500.0 + g.f64_in(0.0, 1_000.0)).collect();
+        let n = g.usize_in(1..500);
+        for i in 0..n {
+            let key = g.u64_in(0..50);
+            let view = ClusterView {
+                now: i as u64 * 10,
+                workers: &ids,
+                per_tuple_time: &times,
+                n_slots: workers_n,
+            };
+            let w = grouper.route(key, &view);
+            if !ids.contains(&w) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_fg_is_a_function_of_key() {
+    prop_check("FG: same key -> same worker", 40, |g| {
+        let n = g.usize_in(1..64);
+        let mut cfg = Config::default();
+        cfg.workers = n;
+        let mut grouper = make_kind(SchemeKind::Field, &cfg, 0);
+        let ids: Vec<usize> = (0..n).collect();
+        let times = vec![1.0; n];
+        let view = ClusterView { now: 0, workers: &ids, per_tuple_time: &times, n_slots: n };
+        let key = g.u64();
+        let w1 = grouper.route(key, &view);
+        (0..10).all(|_| grouper.route(key, &view) == w1)
+    });
+}
+
+#[test]
+fn prop_pkg_replication_bounded_by_two() {
+    prop_check("PKG: ≤2 workers per key", 30, |g| {
+        let n = g.usize_in(2..64);
+        let mut cfg = Config::default();
+        cfg.workers = n;
+        let mut grouper = make_kind(SchemeKind::Pkg, &cfg, 0);
+        let ids: Vec<usize> = (0..n).collect();
+        let times = vec![1.0; n];
+        let view = ClusterView { now: 0, workers: &ids, per_tuple_time: &times, n_slots: n };
+        let key = g.u64_in(0..1_000);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..g.usize_in(1..300) {
+            seen.insert(grouper.route(key, &view));
+        }
+        seen.len() <= 2
+    });
+}
+
+#[test]
+fn prop_hashring_monotone_under_removal() {
+    prop_check("ring removal only remaps victim's keys", 30, |g| {
+        let n = g.usize_in(3..24);
+        let vnodes = g.usize_in(8..96);
+        let mut ring = HashRing::new(&(0..n).collect::<Vec<_>>(), vnodes);
+        let victim = g.usize_in(0..n);
+        let keys: Vec<u64> = (0..200).map(|_| g.u64()).collect();
+        let before: Vec<usize> = keys.iter().map(|&k| ring.owner(k).unwrap()).collect();
+        ring.remove_worker(victim);
+        keys.iter().zip(&before).all(|(&k, &b)| {
+            let now = ring.owner(k).unwrap();
+            if b == victim { now != victim } else { now == b }
+        })
+    });
+}
+
+#[test]
+fn prop_hashring_candidates_distinct_and_alive() {
+    prop_check("ring candidates distinct + alive", 40, |g| {
+        let n = g.usize_in(1..32);
+        let ring = HashRing::new(&(0..n).collect::<Vec<_>>(), 32);
+        let d = g.usize_in(1..40);
+        let key = g.u64();
+        let c = ring.candidates(key, d);
+        let set: std::collections::HashSet<_> = c.iter().collect();
+        c.len() == d.min(n) && set.len() == c.len() && c.iter().all(|w| *w < n)
+    });
+}
+
+#[test]
+fn prop_spacesaving_never_underestimates_tracked() {
+    prop_check("SpaceSaving over-estimates", 30, |g| {
+        let cap = g.usize_in(4..64);
+        let mut ss = SpaceSaving::new(cap);
+        let mut truth: std::collections::HashMap<u64, u64> = Default::default();
+        for _ in 0..g.usize_in(100..3_000) {
+            let k = g.u64_in(0..200);
+            ss.observe(k);
+            *truth.entry(k).or_insert(0) += 1;
+        }
+        // SpaceSaving guarantees estimate >= truth for tracked keys
+        // (evicted-and-reinserted keys inherit the min count, which is
+        // itself an upper bound on anything it displaced).
+        let entries: Vec<(u64, f64)> = ss.iter().collect();
+        entries
+            .into_iter()
+            .all(|(k, c)| c + 1e-9 >= truth.get(&k).copied().unwrap_or(0) as f64)
+    });
+}
+
+#[test]
+fn prop_spacesaving_capacity_invariant() {
+    prop_check("SpaceSaving |K| <= K_max", 30, |g| {
+        let cap = g.usize_in(1..128);
+        let mut ss = SpaceSaving::new(cap);
+        for _ in 0..g.usize_in(1..2_000) {
+            ss.observe(g.u64_in(0..10_000));
+        }
+        ss.len() <= cap
+    });
+}
+
+#[test]
+fn prop_countmin_upper_bound_and_decay() {
+    prop_check("CMS estimate >= truth; decay scales", 25, |g| {
+        let depth = g.usize_in(1..5);
+        let width = 1 << g.usize_in(5..10);
+        let mut cm = CountMin::new(depth, width);
+        let mut truth: std::collections::HashMap<u64, u32> = Default::default();
+        for _ in 0..g.usize_in(10..2_000) {
+            let k = g.u64_in(0..500);
+            cm.add(k);
+            *truth.entry(k).or_insert(0) += 1;
+        }
+        if !truth.iter().all(|(&k, &c)| cm.estimate(k) >= c as f32) {
+            return false;
+        }
+        let probe = *truth.keys().next().unwrap();
+        let before = cm.estimate(probe);
+        cm.decay(0.5);
+        (cm.estimate(probe) - before * 0.5).abs() < 1e-3
+    });
+}
+
+#[test]
+fn prop_histogram_quantiles_ordered_and_bounded() {
+    prop_check("histogram quantile ordering", 40, |g| {
+        let mut h = Histogram::new();
+        let n = g.usize_in(1..2_000);
+        let mut max = 0u64;
+        for _ in 0..n {
+            let v = g.u64_in(0..10_000_000);
+            max = max.max(v);
+            h.record(v);
+        }
+        let q50 = h.quantile(0.5);
+        let q95 = h.quantile(0.95);
+        let q99 = h.quantile(0.99);
+        q50 <= q95 && q95 <= q99 && q99 <= h.max() && h.max() == max
+    });
+}
+
+#[test]
+fn prop_fish_total_routing_under_random_membership() {
+    prop_check("FISH routes correctly under churn", 20, |g| {
+        let mut cfg = Config::default();
+        cfg.workers = 16;
+        let mut grouper = make_kind(SchemeKind::Fish, &cfg, 0);
+        let times = vec![1_000.0; 24];
+        let mut alive: Vec<usize> = (0..16).collect();
+        for step in 0..g.usize_in(2..8) {
+            // random membership change
+            if g.bool(0.5) && alive.len() > 2 {
+                let idx = g.usize_in(0..alive.len());
+                alive.remove(idx);
+            } else {
+                let new = g.usize_in(0..24);
+                if !alive.contains(&new) {
+                    alive.push(new);
+                    alive.sort_unstable();
+                }
+            }
+            let view = ClusterView {
+                now: step as u64 * 1_000,
+                workers: &alive,
+                per_tuple_time: &times,
+                n_slots: 24,
+            };
+            grouper.on_membership_change(&view);
+            for i in 0..200 {
+                let view = ClusterView {
+                    now: step as u64 * 1_000 + i,
+                    workers: &alive,
+                    per_tuple_time: &times,
+                    n_slots: 24,
+                };
+                let w = grouper.route(g.u64_in(0..100), &view);
+                if !alive.contains(&w) {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
