@@ -13,8 +13,8 @@
 #[path = "support/mod.rs"]
 mod support;
 
-use fish::coordinator::{make_kind, Grouper, SchemeKind};
-use fish::engine::rt::{run, RtOptions};
+use fish::coordinator::SchemeKind;
+use fish::engine::Pipeline;
 use fish::report::{f2, ns, ratio, Table};
 use std::sync::Arc;
 use support::*;
@@ -43,16 +43,16 @@ fn main() {
         cfg.interval = 2_000_000; // 2ms HWA interval on the wall clock
         let mut gen = fish::workload::by_name(workload, tuples, 1.5, cfg.seed);
         let trace = Arc::new(fish::workload::materialise(gen.as_mut(), 0));
-        let opts = RtOptions {
-            queue_depth: 1024,
-            per_tuple_ns: vec![cfg.service_ns as f64],
-            interarrival_ns: 0,
-        };
         let mut sg_thr = None;
         for kind in SchemeKind::all() {
-            let sources: Vec<Box<dyn Grouper>> =
-                (0..sources_n).map(|s| make_kind(kind, &cfg, s)).collect();
-            let r = run(&trace, sources, workers, &opts);
+            let r = Pipeline::builder()
+                .config(cfg.clone())
+                .scheme(kind)
+                .interarrival_ns(0)
+                .per_tuple_ns(vec![cfg.service_ns as f64])
+                .trace(trace.clone())
+                .build_rt()
+                .run();
             let (mean, p50, p95, p99) = r.latency.summary();
             if kind == SchemeKind::Shuffle {
                 sg_thr = Some(r.throughput);
@@ -89,21 +89,18 @@ fn main() {
         cfg.sources = sources_n;
         let mut gen = fish::workload::by_name("zf", tuples, z, cfg.seed);
         let trace = Arc::new(fish::workload::materialise(gen.as_mut(), 0));
-        let opts = RtOptions {
-            queue_depth: 1024,
-            per_tuple_ns: vec![500.0],
-            interarrival_ns: 0,
+        let run_kind = |kind: SchemeKind| {
+            Pipeline::builder()
+                .config(cfg.clone())
+                .scheme(kind)
+                .interarrival_ns(0)
+                .per_tuple_ns(vec![500.0])
+                .trace(trace.clone())
+                .build_rt()
+                .run()
         };
-        let fish_r = {
-            let s: Vec<Box<dyn Grouper>> =
-                (0..sources_n).map(|i| make_kind(SchemeKind::Fish, &cfg, i)).collect();
-            run(&trace, s, workers, &opts)
-        };
-        let sg_r = {
-            let s: Vec<Box<dyn Grouper>> =
-                (0..sources_n).map(|i| make_kind(SchemeKind::Shuffle, &cfg, i)).collect();
-            run(&trace, s, workers, &opts)
-        };
+        let fish_r = run_kind(SchemeKind::Fish);
+        let sg_r = run_kind(SchemeKind::Shuffle);
         mem.row(&[
             format!("{z:.1}"),
             fish_r.entries.to_string(),

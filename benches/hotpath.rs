@@ -1,12 +1,14 @@
 //! Hot-path micro-benchmarks (the §Perf workhorse, not a paper figure).
 //!
-//! * `route()` ns/op for every grouping scheme (the L3 per-tuple cost).
+//! * per-tuple `route()` vs batched `route_batch()` ns/op for every
+//!   grouping scheme, at batch sizes 256 and 1024 — tracks the
+//!   batch-first API's amortisation win over the per-tuple path.
 //! * identifier throughput: native Alg. 1 vs the XLA count-min path
 //!   (AOT Pallas kernel via PJRT), amortised per tuple.
 //!
 //! Methodology: warm up, then N timed iterations over a pre-generated
-//! key stream; report ns/op and Mops. Used to drive the EXPERIMENTS.md
-//! §Perf before/after log.
+//! key stream; report ns/op and the batched/per-tuple speedup. Used to
+//! drive the EXPERIMENTS.md §Perf before/after log.
 
 #[path = "support/mod.rs"]
 mod support;
@@ -46,6 +48,38 @@ fn bench_route(kind: SchemeKind, workers: usize, keys: &[u64]) -> f64 {
     start.elapsed().as_nanos() as f64 / keys.len() as f64
 }
 
+fn bench_route_batch(kind: SchemeKind, workers: usize, keys: &[u64], batch: usize) -> f64 {
+    let mut cfg = Config::default();
+    cfg.workers = workers;
+    let mut g = make_kind(kind, &cfg, 0);
+    let worker_ids: Vec<usize> = (0..workers).collect();
+    let times = vec![1_000.0; workers];
+    let mut out = vec![0usize; batch];
+    // warmup (same 10% prefix as the per-tuple bench)
+    for (bi, chunk) in keys[..keys.len() / 10].chunks(batch).enumerate() {
+        let view = ClusterView {
+            now: (bi * batch) as u64,
+            workers: &worker_ids,
+            per_tuple_time: &times,
+            n_slots: workers,
+        };
+        g.route_batch(chunk, &mut out[..chunk.len()], &view);
+        std::hint::black_box(&out);
+    }
+    let start = Instant::now();
+    for (bi, chunk) in keys.chunks(batch).enumerate() {
+        let view = ClusterView {
+            now: (bi * batch) as u64 * 100,
+            workers: &worker_ids,
+            per_tuple_time: &times,
+            n_slots: workers,
+        };
+        g.route_batch(chunk, &mut out[..chunk.len()], &view);
+        std::hint::black_box(&out);
+    }
+    start.elapsed().as_nanos() as f64 / keys.len() as f64
+}
+
 fn bench_identifier_native(keys: &[u64], epoch: usize, cap: usize) -> f64 {
     let mut id = EpochIdentifier::new(cap, epoch, 0.2);
     let start = Instant::now();
@@ -76,15 +110,22 @@ fn main() {
     let mut gen = fish::workload::by_name("zf", n, 1.5, 3);
     let keys: Vec<u64> = (0..n).map(|i| gen.key_at(i)).collect();
 
-    let mut t = Table::new("route() cost per scheme", &["scheme", "workers", "ns/op", "Mops"]);
+    let mut t = Table::new(
+        "routing cost per scheme: per-tuple route() vs route_batch()",
+        &["scheme", "workers", "tuple ns", "b256 ns", "b1024 ns", "speedup@1024"],
+    );
     for kind in SchemeKind::all() {
         for &w in &[16usize, 128] {
-            let ns = bench_route(kind, w, &keys);
+            let tuple_ns = bench_route(kind, w, &keys);
+            let b256 = bench_route_batch(kind, w, &keys, 256);
+            let b1024 = bench_route_batch(kind, w, &keys, 1024);
             t.row(&[
                 kind.name().into(),
                 w.to_string(),
-                f2(ns),
-                f2(1_000.0 / ns),
+                f2(tuple_ns),
+                f2(b256),
+                f2(b1024),
+                format!("{:.2}x", tuple_ns / b1024.max(1e-9)),
             ]);
         }
     }

@@ -10,7 +10,8 @@
 
 use fish::config::Config;
 use fish::coordinator::SchemeKind;
-use fish::engine::sim::{run_config, SimResult};
+use fish::engine::sim::SimResult;
+use fish::engine::Pipeline;
 
 /// Worker scales used across the paper's figures.
 pub const WORKER_SCALES: [usize; 4] = [16, 32, 64, 128];
@@ -55,10 +56,10 @@ pub fn base_config(workload: &str, workers: usize, z: f64) -> Config {
     cfg
 }
 
-/// Run one scheme on a config.
+/// Run one scheme on a config through the pipeline builder.
 pub fn run_scheme(mut cfg: Config, kind: SchemeKind) -> SimResult {
     cfg.scheme = kind;
-    run_config(&cfg)
+    Pipeline::builder().config(cfg).build_sim().run()
 }
 
 /// Run SG alongside `kind` and return (result, exec-time ratio vs SG) —

@@ -8,17 +8,20 @@
 use fish::config::Config;
 use fish::coordinator::fish::CandidateMode;
 use fish::coordinator::{Fish, Grouper};
-use fish::engine::{sim::Simulator, ChurnEvent, Topology};
+use fish::engine::{ChurnEvent, Pipeline};
 use fish::report::{ratio, Table};
 
 fn run_mode(mode: CandidateMode, churn: Vec<(usize, ChurnEvent)>, cfg: &Config) -> (usize, usize) {
-    let topology = Topology::from_config(cfg).with_churn(churn, cfg.service_ns as f64);
+    // ablation groupers are injected; the builder wires topology + churn
     let sources: Vec<Box<dyn Grouper>> = (0..cfg.sources)
         .map(|s| Box::new(Fish::from_config(cfg, s).with_mode(mode)) as Box<dyn Grouper>)
         .collect();
-    let mut sim = Simulator::new(topology, sources, cfg.interarrival_ns);
-    let mut gen = fish::workload::by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
-    let r = sim.run(gen.as_mut());
+    let r = Pipeline::builder()
+        .config(cfg.clone())
+        .with_sources(sources)
+        .churn(churn)
+        .build_sim()
+        .run();
     (r.entries, r.churn_migrations)
 }
 

@@ -8,7 +8,7 @@
 
 use fish::config::Config;
 use fish::coordinator::SchemeKind;
-use fish::engine::sim;
+use fish::engine::Pipeline;
 use fish::report::{f2, ns, ratio, Table};
 
 fn main() {
@@ -31,10 +31,13 @@ fn main() {
         "schemes on a heterogeneous cluster",
         &["scheme", "makespan", "p99", "imbalance(busy)", "mem vs FG"],
     );
+    let mut fish_result = None;
     for kind in SchemeKind::all() {
-        let mut cfg = base.clone();
-        cfg.scheme = kind;
-        let r = sim::run_config(&cfg);
+        let r = Pipeline::builder()
+            .config(base.clone())
+            .scheme(kind)
+            .build_sim()
+            .run();
         table.row(&[
             kind.name().to_string(),
             ns(r.makespan),
@@ -42,34 +45,15 @@ fn main() {
             f2(r.imbalance().relative),
             ratio(r.memory_normalized),
         ]);
+        if kind == SchemeKind::Fish {
+            fish_result = Some(r);
+        }
     }
     table.print();
 
-    // FISH with HWA vs FISH degraded to count-based assignment: emulate
-    // the ablation by setting every capacity equal in the *view* the
-    // grouper sees (the engine still runs heterogeneous). We do this via
-    // a 1-capacity config whose topology is overridden.
-    use fish::coordinator::Grouper;
-    use fish::engine::{sim::Simulator, Topology};
-
-    let hetero_times: Vec<f64> = base
-        .capacity_vec()
-        .iter()
-        .map(|&c| base.service_ns as f64 / c)
-        .collect();
-
-    // w/ HWA: grouper sees true per-tuple times
-    let topo = Topology::new((0..base.workers).collect(), hetero_times.clone());
-    let sources: Vec<Box<dyn Grouper>> = (0..base.sources)
-        .map(|s| {
-            let mut cfg = base.clone();
-            cfg.scheme = SchemeKind::Fish;
-            fish::coordinator::make_scheme(&cfg, s)
-        })
-        .collect();
-    let mut sim1 = Simulator::new(topo, sources, base.interarrival_ns);
-    let mut gen = fish::workload::by_name("zf", base.tuples, base.zipf_z, base.seed);
-    let with_hwa = sim1.run(gen.as_mut());
+    // FISH with HWA on the heterogeneous topology (Fig. 16's 'w/ hwa'
+    // point) — the run is deterministic, so reuse the loop's result.
+    let with_hwa = fish_result.expect("SchemeKind::all() includes Fish");
 
     println!(
         "\nFISH w/ HWA: makespan {}, p99 {} — Fig. 16's 'w/ hwa' point.\n\

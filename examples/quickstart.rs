@@ -1,28 +1,36 @@
-//! Quickstart: route a small time-evolving Zipf stream through every
-//! grouping scheme and print the paper's two core metrics side by side.
+//! Quickstart: the batch-first `PipelineBuilder` API.
+//!
+//! A job is one fluent chain — workload, scheme, topology, batch size —
+//! ending in `build_sim()` (deterministic simulator) or `build_rt()`
+//! (threaded runtime):
+//!
+//! ```text
+//! let result = Pipeline::builder()
+//!     .workload("zf")            // zf | mt | am
+//!     .scheme(SchemeKind::Fish)  // sg | fg | pkg | dc | wc | fish
+//!     .sources(4)                // grouper instances (Storm tasks)
+//!     .workers(32)               // downstream operator instances
+//!     .batch(1024)               // tuples per route_batch() call
+//!     .tuples(200_000)
+//!     .build_sim()
+//!     .run();
+//! ```
+//!
+//! This example routes a small time-evolving Zipf stream through every
+//! grouping scheme and prints the paper's two core metrics side by side.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use fish::config::Config;
 use fish::coordinator::SchemeKind;
-use fish::engine::sim;
+use fish::engine::Pipeline;
 use fish::report::{ns, ratio, Table};
 
 fn main() {
-    let mut base = Config::default();
-    base.workload = "zf".into();
-    base.tuples = 200_000;
-    base.zipf_z = 1.5;
-    base.workers = 32;
-    base.sources = 4;
-    base.interarrival_ns = base.service_ns / base.workers as u64 + 1;
-
-    println!(
-        "FISH quickstart: {} tuples, zipf z={}, {} workers, {} sources\n",
-        base.tuples, base.zipf_z, base.workers, base.sources
-    );
+    let tuples = 200_000;
+    let workers = 32;
+    println!("FISH quickstart: {tuples} tuples, zipf z=1.5, {workers} workers, 4 sources\n");
 
     let mut table = Table::new(
         "grouping schemes on a time-evolving Zipf stream",
@@ -31,9 +39,18 @@ fn main() {
 
     let mut sg_makespan = None;
     for kind in SchemeKind::all() {
-        let mut cfg = base.clone();
-        cfg.scheme = kind;
-        let r = sim::run_config(&cfg);
+        let r = Pipeline::builder()
+            .workload("zf")
+            .scheme(kind)
+            .sources(4)
+            .workers(workers)
+            .batch(1024)
+            .tuples(tuples)
+            .zipf_z(1.5)
+            // arrival rate ≈ aggregate service rate: keep workers busy
+            .configure(|c| c.interarrival_ns = c.service_ns / c.workers as u64 + 1)
+            .build_sim()
+            .run();
         if kind == SchemeKind::Shuffle {
             sg_makespan = Some(r.makespan);
         }

@@ -18,7 +18,7 @@
 
 use fish::config::Config;
 use fish::coordinator::{make_kind, Grouper, SchemeKind};
-use fish::engine::rt::{run, RtOptions};
+use fish::engine::Pipeline;
 use fish::report::{ns, ratio, Table};
 use fish::workload::{materialise, Trace};
 use std::sync::Arc;
@@ -62,12 +62,6 @@ fn main() {
     let trace: Arc<Trace> = Arc::new(materialise(gen.as_mut(), 0));
     println!("trace: {} tuples over {} distinct words\n", trace.len(), trace.key_space());
 
-    let opts = RtOptions {
-        queue_depth: 1024,
-        per_tuple_ns: vec![cfg.service_ns as f64],
-        interarrival_ns: 0,
-    };
-
     let mut table = Table::new(
         "practical deployment (threaded runtime, paper Figs. 18-20)",
         &["scheme", "throughput", "mean", "p50", "p95", "p99", "mem vs FG"],
@@ -83,7 +77,14 @@ fn main() {
         SchemeKind::Fish,
     ] {
         let sources = build_sources(&cfg, kind, use_xla);
-        let r = run(&trace, sources, cfg.workers, &opts);
+        let r = Pipeline::builder()
+            .config(cfg.clone())
+            .scheme(kind)
+            .with_sources(sources)
+            .trace(trace.clone())
+            .per_tuple_ns(vec![cfg.service_ns as f64])
+            .build_rt()
+            .run();
         let (mean, p50, p95, p99) = r.latency.summary();
         if kind == SchemeKind::Shuffle {
             sg_mem = Some(r.memory_normalized());

@@ -122,10 +122,10 @@ impl Args {
             let value = match k.as_str() {
                 "scheme" | "workload" | "identifier" | "artifacts_dir" => Value::Str(v.clone()),
                 "tuples" | "sources" | "workers" | "key_capacity" | "epoch" | "d_min"
-                | "interval" | "vnodes" | "seed" | "service_ns" | "interarrival_ns" => {
+                | "interval" | "vnodes" | "seed" | "service_ns" | "interarrival_ns" | "batch" => {
                     Value::Int(v.parse().map_err(|_| CliError(format!("--{k}: bad int '{v}'")))?)
                 }
-                "zipf_z" | "alpha" | "theta_num" => {
+                "zipf_z" | "alpha" | "theta_num" | "rebalance_threshold" => {
                     Value::Float(v.parse().map_err(|_| CliError(format!("--{k}: bad float '{v}'")))?)
                 }
                 "capacities" => {
@@ -193,6 +193,15 @@ mod tests {
         assert_eq!(cfg.alpha, 0.5);
         assert_eq!(cfg.capacities, vec![1.0, 2.0]);
         assert_eq!(cfg.scheme, crate::coordinator::SchemeKind::WChoices);
+    }
+
+    #[test]
+    fn batch_and_threshold_flags_apply() {
+        let mut cfg = crate::config::Config::default();
+        let a = parse("--batch 1024 --rebalance_threshold 0.4", false);
+        a.apply_to_config(&mut cfg).unwrap();
+        assert_eq!(cfg.batch, 1024);
+        assert!((cfg.rebalance_threshold - 0.4).abs() < 1e-12);
     }
 
     #[test]

@@ -10,6 +10,10 @@ pub use parser::{ConfigError, ConfigFile, Value};
 
 use crate::coordinator::SchemeKind;
 
+/// Default routing batch size — the single source of truth shared by
+/// [`Config::default`] and [`crate::engine::rt::RtOptions::default`].
+pub const DEFAULT_BATCH: usize = 256;
+
 /// Fully-resolved experiment configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -54,6 +58,12 @@ pub struct Config {
     pub identifier: String,
     /// Directory holding the AOT artifacts.
     pub artifacts_dir: String,
+    /// Routing batch size: tuples per `route_batch` call in both engines
+    /// (and per channel send in the runtime engine).
+    pub batch: usize,
+    /// Rebalance baseline: `max/mean − 1` local-load imbalance that
+    /// triggers a hot-key migration round.
+    pub rebalance_threshold: f64,
 }
 
 impl Default for Config {
@@ -78,6 +88,8 @@ impl Default for Config {
             interarrival_ns: 100,
             identifier: "native".into(),
             artifacts_dir: "artifacts".into(),
+            batch: DEFAULT_BATCH,
+            rebalance_threshold: 0.2,
         }
     }
 }
@@ -178,6 +190,10 @@ impl Config {
             "artifacts_dir" | "run.artifacts_dir" => {
                 self.artifacts_dir = v.as_str().ok_or_else(|| err("string"))?.to_string()
             }
+            "batch" | "run.batch" => self.batch = v.as_int().ok_or_else(|| err("int"))? as usize,
+            "rebalance_threshold" | "rebalance.threshold" => {
+                self.rebalance_threshold = v.as_float().ok_or_else(|| err("float"))?
+            }
             other => return Err(ConfigError::UnknownKey(other.to_string())),
         }
         Ok(())
@@ -205,6 +221,17 @@ impl Config {
                 "identifier must be native|xla-cms, got {}",
                 self.identifier
             )));
+        }
+        // upper bound also catches negative CLI ints wrapped via `as usize`
+        if self.batch == 0 || self.batch > (1 << 24) {
+            return Err(ConfigError::Type(format!(
+                "batch must be in 1..={}, got {}",
+                1usize << 24,
+                self.batch
+            )));
+        }
+        if self.rebalance_threshold < 0.0 {
+            return Err(ConfigError::Type("rebalance_threshold must be >= 0".into()));
         }
         Ok(())
     }
@@ -257,6 +284,26 @@ epoch = 2000
         assert!(cfg.validate().is_err());
         cfg.alpha = 0.2;
         cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn batch_and_rebalance_threshold_configurable() {
+        let f = ConfigFile::parse(
+            "[run]\nbatch = 512\n[rebalance]\nthreshold = 0.35\n",
+        )
+        .unwrap();
+        let mut cfg = Config::default();
+        assert_eq!(cfg.batch, 256);
+        assert!((cfg.rebalance_threshold - 0.2).abs() < 1e-12);
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.batch, 512);
+        assert!((cfg.rebalance_threshold - 0.35).abs() < 1e-12);
+        cfg.validate().unwrap();
+        cfg.batch = 0;
+        assert!(cfg.validate().is_err());
+        // a negative CLI int wraps to a huge usize; validation must catch it
+        cfg.batch = (-1i64) as usize;
         assert!(cfg.validate().is_err());
     }
 

@@ -96,6 +96,21 @@ impl DChoices {
         }
         best
     }
+
+    /// The per-tuple decision, shared by `route` and `route_batch`
+    /// (callers must have sized `self.sent` first).
+    #[inline]
+    fn route_one(&mut self, key: Key, workers: &[WorkerId]) -> WorkerId {
+        let hot = self.hh.observe_is_hot(key);
+        let d = if hot {
+            Self::head_d(self.hh.top_rel(), self.hh.theta, workers.len())
+        } else {
+            2
+        };
+        let w = Self::pick_least_sent(&self.sent, key, self.seed, workers, d);
+        self.sent[w] += 1;
+        w
+    }
 }
 
 impl Grouper for DChoices {
@@ -108,15 +123,19 @@ impl Grouper for DChoices {
         if self.sent.len() < view.n_slots {
             self.sent.resize(view.n_slots, 0);
         }
-        let hot = self.hh.observe_is_hot(key);
-        let d = if hot {
-            Self::head_d(self.hh.top_rel(), self.hh.theta, view.workers.len())
-        } else {
-            2
-        };
-        let w = Self::pick_least_sent(&self.sent, key, self.seed, view.workers, d);
-        self.sent[w] += 1;
-        w
+        self.route_one(key, view.workers)
+    }
+
+    fn route_batch(&mut self, keys: &[Key], out: &mut [WorkerId], view: &ClusterView<'_>) {
+        debug_assert_eq!(keys.len(), out.len());
+        // hoisted: counter sizing check; the sketch update and head-d
+        // derivation stay per-tuple (they track the stream)
+        if self.sent.len() < view.n_slots {
+            self.sent.resize(view.n_slots, 0);
+        }
+        for (key, slot) in keys.iter().zip(out.iter_mut()) {
+            *slot = self.route_one(*key, view.workers);
+        }
     }
 
     fn on_membership_change(&mut self, view: &ClusterView<'_>) {
@@ -162,6 +181,23 @@ mod tests {
             }
         }
         assert!(seen.len() > 2, "hot key only used {} workers", seen.len());
+    }
+
+    #[test]
+    fn batch_matches_sequential() {
+        let workers: Vec<usize> = (0..16).collect();
+        let times = vec![1.0; 16];
+        let v = view(&workers, &times);
+        let mut a = DChoices::new(16, 100, 2.0 / 16.0, 7);
+        let mut b = DChoices::new(16, 100, 2.0 / 16.0, 7);
+        let mut rng = crate::util::Rng::new(6);
+        let keys: Vec<u64> = (0..5_000)
+            .map(|_| if rng.gen_bool(0.4) { 0 } else { rng.gen_range(2_000) })
+            .collect();
+        let seq: Vec<usize> = keys.iter().map(|&k| a.route(k, &v)).collect();
+        let mut got = vec![0usize; keys.len()];
+        b.route_batch(&keys, &mut got, &v);
+        assert_eq!(got, seq);
     }
 
     #[test]

@@ -8,6 +8,9 @@ use super::{ClusterView, Grouper, SchemeKind};
 use crate::util::hash::hash_to;
 use crate::{Key, WorkerId};
 
+/// Hash-family seed for the FG key hash.
+const FG_SEED: u64 = 0xF1E1D;
+
 /// Hash-by-key grouper: `worker = H(key) mod |workers|`.
 #[derive(Debug, Clone, Default)]
 pub struct FieldGrouping;
@@ -26,7 +29,16 @@ impl Grouper for FieldGrouping {
 
     #[inline]
     fn route(&mut self, key: Key, view: &ClusterView<'_>) -> WorkerId {
-        view.workers[hash_to(key, 0xF1E1D, view.workers.len())]
+        view.workers[hash_to(key, FG_SEED, view.workers.len())]
+    }
+
+    fn route_batch(&mut self, keys: &[Key], out: &mut [WorkerId], view: &ClusterView<'_>) {
+        debug_assert_eq!(keys.len(), out.len());
+        // hoisted: worker-count load (stateless pure hash per key)
+        let n = view.workers.len();
+        for (key, slot) in keys.iter().zip(out.iter_mut()) {
+            *slot = view.workers[hash_to(*key, FG_SEED, n)];
+        }
     }
 }
 
@@ -45,6 +57,19 @@ mod tests {
             let w2 = g.route(k, &v);
             assert_eq!(w1, w2);
         }
+    }
+
+    #[test]
+    fn batch_matches_sequential() {
+        let workers: Vec<usize> = (0..16).collect();
+        let times = vec![1.0; 16];
+        let v = ClusterView { now: 0, workers: &workers, per_tuple_time: &times, n_slots: 16 };
+        let mut g = FieldGrouping::new();
+        let keys: Vec<u64> = (0..2_000).map(|i| i * 31).collect();
+        let seq: Vec<usize> = keys.iter().map(|&k| g.route(k, &v)).collect();
+        let mut got = vec![0usize; keys.len()];
+        g.route_batch(&keys, &mut got, &v);
+        assert_eq!(got, seq);
     }
 
     #[test]

@@ -86,9 +86,24 @@ impl Hwa {
     /// Alg. 3: pick the candidate with the smallest inferred waiting
     /// time, then account the new tuple on it.
     pub fn select(&mut self, candidates: &[WorkerId], view: &ClusterView<'_>) -> WorkerId {
-        assert!(!candidates.is_empty(), "HWA needs at least one candidate");
+        self.begin(view);
+        self.select_prepared(candidates, view)
+    }
+
+    /// The per-view prologue of [`Hwa::select`] (slot sizing + interval
+    /// re-estimation), hoisted so a batch loop pays it once. Calling it
+    /// again under the same `view` is a no-op, which is what makes
+    /// batched selection identical to sequential [`Hwa::select`] calls.
+    pub fn begin(&mut self, view: &ClusterView<'_>) {
         self.ensure_slots(view.n_slots);
         self.maybe_update(view);
+    }
+
+    /// [`Hwa::select`] minus the prologue — callers must have run
+    /// [`Hwa::begin`] with the same `view` first.
+    #[inline]
+    pub fn select_prepared(&mut self, candidates: &[WorkerId], view: &ClusterView<'_>) -> WorkerId {
+        assert!(!candidates.is_empty(), "HWA needs at least one candidate");
         // primary key: inferred waiting time T_w = C_w · P_w; tie-break
         // on raw backlog C_w so the selector still balances when the
         // capacity samples are degenerate (e.g. P_w = 0 before the first
@@ -181,6 +196,21 @@ mod tests {
         hwa.select(&workers, &v2);
         let after = hwa.backlog(0) + hwa.backlog(1);
         assert!((after - before - 1.0).abs() < 1e-9, "no drain expected");
+    }
+
+    #[test]
+    fn prepared_selection_matches_select() {
+        let workers = [0usize, 1, 2, 3];
+        let times = [10.0, 10.0, 5.0, 5.0];
+        let mut a = Hwa::new(100);
+        let mut b = Hwa::new(100);
+        for step in 0..500u64 {
+            let v = view(&workers, &times, step * 3);
+            let wa = a.select(&workers, &v);
+            b.begin(&v);
+            let wb = b.select_prepared(&workers, &v);
+            assert_eq!(wa, wb, "step {step}");
+        }
     }
 
     #[test]

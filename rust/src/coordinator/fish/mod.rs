@@ -126,14 +126,23 @@ impl Fish {
     pub fn memo_entries(&self) -> usize {
         self.chk.memo_entries()
     }
-}
 
-impl Grouper for Fish {
-    fn kind(&self) -> SchemeKind {
-        SchemeKind::Fish
+    /// Per-view prologue hoisted out of the batch loop: size the
+    /// per-worker arrays and run HWA's interval re-estimation once.
+    /// Idempotent under an unchanged `view`, so batched routing stays
+    /// identical to sequential [`Grouper::route`] calls.
+    fn prepare(&mut self, view: &ClusterView<'_>) {
+        if self.count_based {
+            if self.sent.len() < view.n_slots {
+                self.sent.resize(view.n_slots, 0);
+            }
+        } else {
+            self.hwa.begin(view);
+        }
     }
 
-    fn route(&mut self, key: Key, view: &ClusterView<'_>) -> WorkerId {
+    /// The per-tuple pipeline (Algs. 1–3) after [`Fish::prepare`].
+    fn route_prepared(&mut self, key: Key, view: &ClusterView<'_>) -> WorkerId {
         // 1. recent hot-key identification (Alg. 1)
         self.identifier.observe(key);
 
@@ -184,9 +193,6 @@ impl Grouper for Fish {
         // 4. heuristic worker assignment (Alg. 3) — or the count-based
         //    strategy of prior work under the Fig. 16 ablation.
         if self.count_based {
-            if self.sent.len() < view.n_slots {
-                self.sent.resize(view.n_slots, 0);
-            }
             let w = *self
                 .cand_buf
                 .iter()
@@ -195,7 +201,29 @@ impl Grouper for Fish {
             self.sent[w] += 1;
             w
         } else {
-            self.hwa.select(&self.cand_buf, view)
+            self.hwa.select_prepared(&self.cand_buf, view)
+        }
+    }
+}
+
+impl Grouper for Fish {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Fish
+    }
+
+    fn route(&mut self, key: Key, view: &ClusterView<'_>) -> WorkerId {
+        self.prepare(view);
+        self.route_prepared(key, view)
+    }
+
+    fn route_batch(&mut self, keys: &[Key], out: &mut [WorkerId], view: &ClusterView<'_>) {
+        debug_assert_eq!(keys.len(), out.len());
+        // hoisted: slot sizing + HWA interval re-estimation (Eq. 1) run
+        // once per batch; identification, CHK and assignment stay
+        // per-tuple because they track the stream.
+        self.prepare(view);
+        for (key, slot) in keys.iter().zip(out.iter_mut()) {
+            *slot = self.route_prepared(*key, view);
         }
     }
 
@@ -280,6 +308,47 @@ mod tests {
         }
         let imb = Imbalance::of_counts(&counts);
         assert!(imb.relative < 0.35, "imbalance {}", imb.relative);
+    }
+
+    #[test]
+    fn batch_matches_sequential() {
+        let n = 16;
+        let workers: Vec<usize> = (0..n).collect();
+        let times = vec![1.0; n];
+        let mut a = default_fish(n);
+        let mut b = default_fish(n);
+        let mut rng = Rng::new(21);
+        // several batches under distinct views, hot + cold mix
+        for step in 0..20u64 {
+            let v = view(&workers, &times, step * 1_000);
+            let keys: Vec<u64> = (0..512)
+                .map(|_| if rng.gen_bool(0.4) { 3 } else { 10 + rng.gen_range(5_000) })
+                .collect();
+            let seq: Vec<usize> = keys.iter().map(|&k| a.route(k, &v)).collect();
+            let mut got = vec![0usize; keys.len()];
+            b.route_batch(&keys, &mut got, &v);
+            assert_eq!(got, seq, "step {step}");
+        }
+    }
+
+    #[test]
+    fn count_based_batch_matches_sequential() {
+        let n = 8;
+        let workers: Vec<usize> = (0..n).collect();
+        let times = vec![1.0; n];
+        let mut cfg = Config::default();
+        cfg.workers = n;
+        let mut a = Fish::from_config(&cfg, 0).with_count_based_assignment();
+        let mut b = Fish::from_config(&cfg, 0).with_count_based_assignment();
+        let mut rng = Rng::new(23);
+        let v = view(&workers, &times, 0);
+        let keys: Vec<u64> = (0..4_000)
+            .map(|_| if rng.gen_bool(0.5) { 1 } else { rng.gen_range(800) })
+            .collect();
+        let seq: Vec<usize> = keys.iter().map(|&k| a.route(k, &v)).collect();
+        let mut got = vec![0usize; keys.len()];
+        b.route_batch(&keys, &mut got, &v);
+        assert_eq!(got, seq);
     }
 
     #[test]

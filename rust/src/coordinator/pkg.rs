@@ -38,6 +38,16 @@ impl PartialKeyGrouping {
         let b = workers[hash_to(key, 2, workers.len())];
         (a, b)
     }
+
+    /// The per-tuple decision, shared by `route` and `route_batch`
+    /// (callers must have run [`PartialKeyGrouping::ensure_slots`]).
+    #[inline]
+    fn route_one(&mut self, key: Key, workers: &[WorkerId]) -> WorkerId {
+        let (a, b) = Self::choices(key, workers);
+        let w = if self.sent[a] <= self.sent[b] { a } else { b };
+        self.sent[w] += 1;
+        w
+    }
 }
 
 impl Grouper for PartialKeyGrouping {
@@ -48,10 +58,16 @@ impl Grouper for PartialKeyGrouping {
     #[inline]
     fn route(&mut self, key: Key, view: &ClusterView<'_>) -> WorkerId {
         self.ensure_slots(view.n_slots);
-        let (a, b) = Self::choices(key, view.workers);
-        let w = if self.sent[a] <= self.sent[b] { a } else { b };
-        self.sent[w] += 1;
-        w
+        self.route_one(key, view.workers)
+    }
+
+    fn route_batch(&mut self, keys: &[Key], out: &mut [WorkerId], view: &ClusterView<'_>) {
+        debug_assert_eq!(keys.len(), out.len());
+        // hoisted: counter-array sizing check
+        self.ensure_slots(view.n_slots);
+        for (key, slot) in keys.iter().zip(out.iter_mut()) {
+            *slot = self.route_one(*key, view.workers);
+        }
     }
 
     fn on_membership_change(&mut self, view: &ClusterView<'_>) {
@@ -80,6 +96,21 @@ mod tests {
             }
             assert!(seen.len() <= 2, "key {k} hit {} workers", seen.len());
         }
+    }
+
+    #[test]
+    fn batch_matches_sequential() {
+        let workers: Vec<usize> = (0..8).collect();
+        let times = vec![1.0; 8];
+        let v = view(&workers, &times);
+        let mut a = PartialKeyGrouping::new(8);
+        let mut b = PartialKeyGrouping::new(8);
+        let mut rng = crate::util::Rng::new(4);
+        let keys: Vec<u64> = (0..3_000).map(|_| rng.gen_range(50)).collect();
+        let seq: Vec<usize> = keys.iter().map(|&k| a.route(k, &v)).collect();
+        let mut got = vec![0usize; keys.len()];
+        b.route_batch(&keys, &mut got, &v);
+        assert_eq!(got, seq);
     }
 
     #[test]

@@ -32,6 +32,18 @@ impl Grouper for ShuffleGrouping {
         self.next = (self.next + 1) % view.workers.len();
         w
     }
+
+    fn route_batch(&mut self, keys: &[Key], out: &mut [WorkerId], view: &ClusterView<'_>) {
+        debug_assert_eq!(keys.len(), out.len());
+        // hoisted: worker-count load (the scheme is key-oblivious)
+        let n = view.workers.len();
+        let mut next = self.next;
+        for slot in out.iter_mut() {
+            *slot = view.workers[next % n];
+            next = (next + 1) % n;
+        }
+        self.next = next;
+    }
 }
 
 #[cfg(test)]
@@ -53,6 +65,20 @@ mod tests {
             counts[g.route(k, &v)] += 1;
         }
         assert!(counts.iter().all(|&c| c == 1000));
+    }
+
+    #[test]
+    fn batch_matches_sequential() {
+        let workers: Vec<usize> = (0..5).collect();
+        let times = vec![1.0; 5];
+        let v = view(&workers, &times);
+        let mut a = ShuffleGrouping::new(3);
+        let mut b = ShuffleGrouping::new(3);
+        let keys: Vec<u64> = (0..1_000).collect();
+        let seq: Vec<usize> = keys.iter().map(|&k| a.route(k, &v)).collect();
+        let mut got = vec![0usize; keys.len()];
+        b.route_batch(&keys, &mut got, &v);
+        assert_eq!(got, seq);
     }
 
     #[test]

@@ -26,6 +26,24 @@ impl WChoices {
             seed,
         }
     }
+
+    /// The per-tuple decision, shared by `route` and `route_batch`
+    /// (callers must have sized `self.sent` first).
+    #[inline]
+    fn route_one(&mut self, key: Key, workers: &[WorkerId]) -> WorkerId {
+        let hot = self.hh.observe_is_hot(key);
+        let w = if hot {
+            // entire worker set: least locally-loaded
+            *workers
+                .iter()
+                .min_by_key(|&&w| self.sent[w])
+                .expect("non-empty worker set")
+        } else {
+            DChoices::pick_least_sent(&self.sent, key, self.seed, workers, 2)
+        };
+        self.sent[w] += 1;
+        w
+    }
 }
 
 impl Grouper for WChoices {
@@ -38,19 +56,19 @@ impl Grouper for WChoices {
         if self.sent.len() < view.n_slots {
             self.sent.resize(view.n_slots, 0);
         }
-        let hot = self.hh.observe_is_hot(key);
-        let w = if hot {
-            // entire worker set: least locally-loaded
-            *view
-                .workers
-                .iter()
-                .min_by_key(|&&w| self.sent[w])
-                .expect("non-empty worker set")
-        } else {
-            DChoices::pick_least_sent(&self.sent, key, self.seed, view.workers, 2)
-        };
-        self.sent[w] += 1;
-        w
+        self.route_one(key, view.workers)
+    }
+
+    fn route_batch(&mut self, keys: &[Key], out: &mut [WorkerId], view: &ClusterView<'_>) {
+        debug_assert_eq!(keys.len(), out.len());
+        // hoisted: counter sizing; hot-key min-scan stays per-tuple
+        // (it reads the counters the loop itself mutates)
+        if self.sent.len() < view.n_slots {
+            self.sent.resize(view.n_slots, 0);
+        }
+        for (key, slot) in keys.iter().zip(out.iter_mut()) {
+            *slot = self.route_one(*key, view.workers);
+        }
     }
 
     fn on_membership_change(&mut self, view: &ClusterView<'_>) {
@@ -88,6 +106,23 @@ mod tests {
             }
         }
         assert_eq!(seen.len(), 16, "hot key should reach all workers");
+    }
+
+    #[test]
+    fn batch_matches_sequential() {
+        let workers: Vec<usize> = (0..8).collect();
+        let times = vec![1.0; 8];
+        let v = view(&workers, &times);
+        let mut a = WChoices::new(8, 64, 0.05, 9);
+        let mut b = WChoices::new(8, 64, 0.05, 9);
+        let mut rng = crate::util::Rng::new(12);
+        let keys: Vec<u64> = (0..5_000)
+            .map(|_| if rng.gen_bool(0.5) { 42 } else { rng.gen_range(1_000) })
+            .collect();
+        let seq: Vec<usize> = keys.iter().map(|&k| a.route(k, &v)).collect();
+        let mut got = vec![0usize; keys.len()];
+        b.route_batch(&keys, &mut got, &v);
+        assert_eq!(got, seq);
     }
 
     #[test]

@@ -1,20 +1,33 @@
 //! The DSPE substrate (the paper runs on Apache Storm; we build the
 //! equivalent from scratch — DESIGN.md §5).
 //!
+//! * [`pipeline`] — the [`Pipeline`] builder: the single batch-first
+//!   construction path both engines, the CLI, the examples and the
+//!   benches share.
 //! * [`sim`] — deterministic discrete-event simulator: virtual clock,
 //!   per-worker FIFO queues, heterogeneous capacities, worker churn.
-//!   Reproduces the paper's simulation experiments (Figs. 2–17) exactly
-//!   and repeatably.
+//!   Reproduces the paper's simulation experiments (Figs. 2–17),
+//!   bit-repeatably for a given (seed, batch size). Note the batched
+//!   drain stamps each routing view at the batch-head arrival, so
+//!   time-sensitive schemes (FISH's HWA re-estimation) see virtual
+//!   time at batch granularity rather than per-tuple.
 //! * [`rt`] — the "practical deployment" (paper §6.6): a real
-//!   multithreaded pipeline — source threads route through the grouping
-//!   scheme into bounded per-worker channels (backpressure), worker
-//!   threads run the actual word-count aggregation — measuring
-//!   wall-clock latency percentiles and throughput (Figs. 18–20).
+//!   multithreaded pipeline — source threads route tuple batches
+//!   through the grouping scheme and ship per-worker chunks into
+//!   bounded channels (backpressure), worker threads run the actual
+//!   word-count aggregation — measuring wall-clock latency percentiles
+//!   and throughput (Figs. 18–20).
 //! * [`topology`] — shared cluster description + churn scripting.
+//!
+//! Both engines drain tuples in micro-batches through
+//! [`crate::coordinator::Grouper::route_batch`]; the batch size comes
+//! from [`crate::config::Config::batch`] (`--batch` on the CLI).
 
+pub mod pipeline;
 pub mod rt;
 pub mod sim;
 pub mod topology;
 
+pub use pipeline::{Pipeline, PipelineBuilder, RtJob, SimJob};
 pub use sim::{SimResult, Simulator};
 pub use topology::{ChurnEvent, Topology};

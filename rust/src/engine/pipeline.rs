@@ -1,0 +1,403 @@
+//! Batch-first pipeline construction: one fluent entry point that both
+//! engines, the CLI, the examples and the benches build jobs through.
+//!
+//! Before this builder existed there were three divergent wirings —
+//! `make_scheme` + hand-built [`Topology`] + [`Simulator`] in the CLI,
+//! another copy in every bench, and a third in the runtime path. The
+//! builder owns that wiring once:
+//!
+//! ```no_run
+//! use fish::coordinator::SchemeKind;
+//! use fish::engine::Pipeline;
+//!
+//! let result = Pipeline::builder()
+//!     .workload("zf")
+//!     .scheme(SchemeKind::Fish)
+//!     .sources(4)
+//!     .workers(32)
+//!     .batch(1024)
+//!     .tuples(200_000)
+//!     .build_sim()
+//!     .run();
+//! println!("makespan {}", result.makespan);
+//! ```
+//!
+//! `build_sim()` produces a [`SimJob`] (deterministic discrete-event
+//! run), `build_rt()` a [`RtJob`] (threaded deployment run). Escape
+//! hatches cover the ablation studies: [`PipelineBuilder::with_sources`]
+//! injects pre-built groupers (XLA identifier, CHK/HWA ablations),
+//! [`PipelineBuilder::trace`] reuses one materialised trace across
+//! schemes, and [`PipelineBuilder::configure`] tweaks any
+//! [`Config`] field without a dedicated setter.
+
+use super::rt::{self, RtOptions, RtResult};
+use super::sim::{SimResult, Simulator};
+use super::topology::{ChurnEvent, Topology};
+use crate::config::Config;
+use crate::coordinator::{make_scheme, Grouper, SchemeKind};
+use crate::workload::{by_name, materialise, Generator, Trace};
+use std::sync::Arc;
+
+/// Namespace for [`Pipeline::builder`].
+pub struct Pipeline;
+
+impl Pipeline {
+    /// Start building a job from the default [`Config`].
+    pub fn builder() -> PipelineBuilder {
+        PipelineBuilder::default()
+    }
+}
+
+/// Fluent builder for simulator and runtime jobs.
+pub struct PipelineBuilder {
+    cfg: Config,
+    churn: Vec<(usize, ChurnEvent)>,
+    queue_depth: Option<usize>,
+    per_tuple_ns: Option<Vec<f64>>,
+    groupers: Option<Vec<Box<dyn Grouper>>>,
+    trace: Option<Arc<Trace>>,
+}
+
+impl Default for PipelineBuilder {
+    fn default() -> Self {
+        PipelineBuilder {
+            cfg: Config::default(),
+            churn: Vec::new(),
+            queue_depth: None,
+            per_tuple_ns: None,
+            groupers: None,
+            trace: None,
+        }
+    }
+}
+
+impl PipelineBuilder {
+    /// Replace the whole config (e.g. one resolved from file + flags).
+    pub fn config(mut self, cfg: Config) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Workload name: `zf`, `mt` or `am`.
+    pub fn workload(mut self, name: &str) -> Self {
+        self.cfg.workload = name.to_string();
+        self
+    }
+
+    /// Grouping scheme under test.
+    pub fn scheme(mut self, kind: SchemeKind) -> Self {
+        self.cfg.scheme = kind;
+        self
+    }
+
+    /// Number of tuples to stream.
+    pub fn tuples(mut self, n: usize) -> Self {
+        self.cfg.tuples = n;
+        self
+    }
+
+    /// Zipf exponent for the `zf` workload.
+    pub fn zipf_z(mut self, z: f64) -> Self {
+        self.cfg.zipf_z = z;
+        self
+    }
+
+    /// Number of sources (one grouper instance each).
+    pub fn sources(mut self, n: usize) -> Self {
+        self.cfg.sources = n;
+        self
+    }
+
+    /// Number of workers.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self
+    }
+
+    /// Worker capacity multipliers (cycled across workers).
+    pub fn capacities(mut self, caps: Vec<f64>) -> Self {
+        self.cfg.capacities = caps;
+        self
+    }
+
+    /// Routing batch size (tuples per `route_batch` call).
+    pub fn batch(mut self, n: usize) -> Self {
+        self.cfg.batch = n;
+        self
+    }
+
+    /// PRNG seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Mean per-tuple service time (ns / virtual ticks).
+    pub fn service_ns(mut self, ns: u64) -> Self {
+        self.cfg.service_ns = ns;
+        self
+    }
+
+    /// Mean tuple inter-arrival gap (ns); 0 = as fast as possible.
+    pub fn interarrival_ns(mut self, ns: u64) -> Self {
+        self.cfg.interarrival_ns = ns;
+        self
+    }
+
+    /// FISH / D-C / W-C tracked-key capacity `K_max`.
+    pub fn key_capacity(mut self, cap: usize) -> Self {
+        self.cfg.key_capacity = cap;
+        self
+    }
+
+    /// HWA re-estimation interval `T`.
+    pub fn interval(mut self, interval: u64) -> Self {
+        self.cfg.interval = interval;
+        self
+    }
+
+    /// Arbitrary config tweak for fields without a dedicated setter.
+    pub fn configure(mut self, f: impl FnOnce(&mut Config)) -> Self {
+        f(&mut self.cfg);
+        self
+    }
+
+    /// Scripted worker churn (simulator only; sorted by tuple index).
+    pub fn churn(mut self, events: Vec<(usize, ChurnEvent)>) -> Self {
+        self.churn = events;
+        self
+    }
+
+    /// Bounded per-worker queue depth in tuples (runtime only).
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = Some(depth);
+        self
+    }
+
+    /// Override the runtime per-tuple CPU burn vector (default: derived
+    /// from `service_ns` and the capacity multipliers).
+    pub fn per_tuple_ns(mut self, ns: Vec<f64>) -> Self {
+        self.per_tuple_ns = Some(ns);
+        self
+    }
+
+    /// Inject pre-built groupers instead of `make_scheme` instances —
+    /// the hook the XLA identifier backend and the ablation studies
+    /// (candidate-mode, CHK-mode, count-based HWA) plug into.
+    pub fn with_sources(mut self, groupers: Vec<Box<dyn Grouper>>) -> Self {
+        self.groupers = Some(groupers);
+        self
+    }
+
+    /// Reuse a materialised trace (runtime only) so several schemes can
+    /// run over byte-identical input.
+    pub fn trace(mut self, trace: Arc<Trace>) -> Self {
+        self.trace = Some(trace);
+        self
+    }
+
+    fn take_groupers(groupers: Option<Vec<Box<dyn Grouper>>>, cfg: &Config) -> Vec<Box<dyn Grouper>> {
+        match groupers {
+            Some(g) => {
+                assert!(!g.is_empty(), "with_sources: need at least one grouper");
+                g
+            }
+            None => (0..cfg.sources).map(|s| make_scheme(cfg, s)).collect(),
+        }
+    }
+
+    /// Build a deterministic simulator job (paper Figs. 2–17).
+    ///
+    /// Panics if a runtime-only option (`trace`, `per_tuple_ns`,
+    /// `queue_depth`) was set — silently ignoring it would run a
+    /// different experiment than the caller asked for.
+    pub fn build_sim(self) -> SimJob {
+        let PipelineBuilder { cfg, churn, queue_depth, per_tuple_ns, groupers, trace } = self;
+        assert!(trace.is_none(), "trace(..) only applies to build_rt()");
+        assert!(per_tuple_ns.is_none(), "per_tuple_ns(..) only applies to build_rt()");
+        assert!(queue_depth.is_none(), "queue_depth(..) only applies to build_rt()");
+        if let Err(e) = cfg.validate() {
+            panic!("invalid pipeline config: {e}");
+        }
+        let mut topology = Topology::from_config(&cfg);
+        if !churn.is_empty() {
+            topology = topology.with_churn(churn, cfg.service_ns as f64);
+        }
+        let sources = Self::take_groupers(groupers, &cfg);
+        let sim = Simulator::new(topology, sources, cfg.interarrival_ns).with_batch(cfg.batch);
+        let gen = by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
+        SimJob { sim, gen }
+    }
+
+    /// Build a threaded runtime job (paper Figs. 18–20).
+    ///
+    /// Panics if a simulator-only option (`churn`) was set — the
+    /// runtime engine has no scripted-churn support (yet).
+    pub fn build_rt(self) -> RtJob {
+        let PipelineBuilder { cfg, churn, queue_depth, per_tuple_ns, groupers, trace } = self;
+        assert!(churn.is_empty(), "churn(..) only applies to build_sim()");
+        if let Err(e) = cfg.validate() {
+            panic!("invalid pipeline config: {e}");
+        }
+        let sources = Self::take_groupers(groupers, &cfg);
+        let trace = trace.unwrap_or_else(|| {
+            let mut gen = by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
+            Arc::new(materialise(gen.as_mut(), cfg.interarrival_ns))
+        });
+        let per_tuple_ns = per_tuple_ns.unwrap_or_else(|| {
+            cfg.capacity_vec()
+                .iter()
+                .map(|&c| cfg.service_ns as f64 / c)
+                .collect()
+        });
+        let opts = RtOptions {
+            queue_depth: queue_depth.unwrap_or(1024),
+            per_tuple_ns,
+            interarrival_ns: cfg.interarrival_ns,
+            batch: cfg.batch,
+        };
+        RtJob { trace, sources, workers: cfg.workers, opts }
+    }
+}
+
+/// A ready-to-run simulator job.
+pub struct SimJob {
+    sim: Simulator,
+    gen: Box<dyn Generator + Send>,
+}
+
+impl SimJob {
+    /// Run the simulation to completion.
+    pub fn run(&mut self) -> SimResult {
+        self.sim.run(self.gen.as_mut())
+    }
+}
+
+/// A ready-to-run threaded runtime job.
+pub struct RtJob {
+    trace: Arc<Trace>,
+    sources: Vec<Box<dyn Grouper>>,
+    workers: usize,
+    opts: RtOptions,
+}
+
+impl RtJob {
+    /// The trace this job will stream.
+    pub fn trace(&self) -> &Arc<Trace> {
+        &self.trace
+    }
+
+    /// Run the deployment to completion.
+    pub fn run(self) -> RtResult {
+        rt::run(&self.trace, self.sources, self.workers, &self.opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::make_kind;
+
+    #[test]
+    fn builder_sim_matches_manual_wiring() {
+        let mut cfg = Config::default();
+        cfg.scheme = SchemeKind::Pkg;
+        cfg.workers = 8;
+        cfg.tuples = 15_000;
+        cfg.sources = 2;
+        cfg.interarrival_ns = 150;
+
+        let manual = {
+            let topology = Topology::from_config(&cfg);
+            let sources: Vec<Box<dyn Grouper>> =
+                (0..cfg.sources).map(|s| make_scheme(&cfg, s)).collect();
+            let mut sim =
+                Simulator::new(topology, sources, cfg.interarrival_ns).with_batch(cfg.batch);
+            let mut gen = by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
+            sim.run(gen.as_mut())
+        };
+        let built = Pipeline::builder().config(cfg).build_sim().run();
+        assert_eq!(manual.worker_counts, built.worker_counts);
+        assert_eq!(manual.makespan, built.makespan);
+        assert_eq!(manual.entries, built.entries);
+    }
+
+    #[test]
+    fn fluent_setters_reach_the_config() {
+        let mut job = Pipeline::builder()
+            .workload("zf")
+            .scheme(SchemeKind::Shuffle)
+            .sources(2)
+            .workers(4)
+            .batch(64)
+            .tuples(5_000)
+            .zipf_z(1.2)
+            .seed(9)
+            .interarrival_ns(100)
+            .build_sim();
+        let r = job.run();
+        assert_eq!(r.tuples, 5_000);
+        assert_eq!(r.worker_counts.iter().sum::<u64>(), 5_000);
+        assert_eq!(r.worker_counts.len(), 4);
+    }
+
+    #[test]
+    fn builder_rt_runs_and_respects_injected_sources() {
+        let cfg = {
+            let mut c = Config::default();
+            c.workers = 4;
+            c.sources = 2;
+            c.tuples = 10_000;
+            c.interarrival_ns = 0;
+            c
+        };
+        let sources: Vec<Box<dyn Grouper>> = (0..2)
+            .map(|s| make_kind(SchemeKind::Shuffle, &cfg, s))
+            .collect();
+        let r = Pipeline::builder()
+            .config(cfg)
+            .with_sources(sources)
+            .per_tuple_ns(vec![0.0])
+            .build_rt()
+            .run();
+        assert_eq!(r.worker_counts.iter().sum::<u64>(), 10_000);
+        // shuffle spreads evenly: every worker saw traffic
+        assert!(r.worker_counts.iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn builder_wires_churn_into_the_topology() {
+        let r = Pipeline::builder()
+            .workload("zf")
+            .scheme(SchemeKind::Fish)
+            .sources(2)
+            .workers(8)
+            .tuples(30_000)
+            .interarrival_ns(150)
+            .churn(vec![(10_000, ChurnEvent::Remove(3)), (20_000, ChurnEvent::Add(8))])
+            .build_sim()
+            .run();
+        assert_eq!(r.worker_counts.iter().sum::<u64>(), 30_000);
+        assert!(r.worker_counts[8] > 0, "late-joining worker got no tuples");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid pipeline config")]
+    fn invalid_config_is_rejected() {
+        let _ = Pipeline::builder().workers(0).build_sim();
+    }
+
+    #[test]
+    #[should_panic(expected = "only applies to build_rt()")]
+    fn sim_rejects_runtime_only_options() {
+        let _ = Pipeline::builder().per_tuple_ns(vec![1.0]).build_sim();
+    }
+
+    #[test]
+    #[should_panic(expected = "only applies to build_sim()")]
+    fn rt_rejects_sim_only_options() {
+        let _ = Pipeline::builder()
+            .churn(vec![(10, ChurnEvent::Remove(0))])
+            .build_rt();
+    }
+}

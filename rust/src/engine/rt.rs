@@ -1,16 +1,19 @@
 //! The "practical deployment" engine — our Apache-Storm stand-in
-//! (paper §6.6, Figs. 18–20).
+//! (paper §6.6, Figs. 18–20), running batch-first.
 //!
 //! Real threads, real queues, real clocks:
 //!
-//! * one thread per **source**: pulls its round-robin share of the trace,
-//!   routes each tuple through its own grouping-scheme instance, and
-//!   sends into the chosen worker's **bounded** channel (blocking send =
-//!   backpressure, exactly like Storm's max.spout.pending).
-//! * one thread per **worker**: drains its channel, updates its
-//!   word-count state (a real per-key `HashMap` — its final size *is*
-//!   the memory-overhead metric), optionally burns `P_w` of CPU per
-//!   tuple to model operator cost / heterogeneity, and records the
+//! * one thread per **source**: pulls its round-robin share of the
+//!   trace, accumulates up to [`RtOptions::batch`] tuples, routes them
+//!   in one [`Grouper::route_batch`] call, and ships one `Vec<Msg>`
+//!   chunk per destination worker into that worker's **bounded**
+//!   channel (blocking send = backpressure, exactly like Storm's
+//!   max.spout.pending). Chunked sends amortise the per-tuple channel
+//!   synchronisation that dominated the old per-tuple path.
+//! * one thread per **worker**: drains chunks, updates its word-count
+//!   state (a real per-key `HashMap` — its final size *is* the
+//!   memory-overhead metric), optionally burns `P_w` of CPU per tuple
+//!   to model operator cost / heterogeneity, and records the
 //!   end-to-end latency (source-emit → processing-complete) in a local
 //!   histogram.
 //!
@@ -20,6 +23,7 @@
 use crate::coordinator::{ClusterView, Grouper};
 use crate::metrics::Histogram;
 use crate::workload::Trace;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread;
@@ -66,17 +70,30 @@ impl RtResult {
 /// so benches can drive it directly).
 #[derive(Debug, Clone)]
 pub struct RtOptions {
-    /// Bounded channel depth per worker (backpressure knob).
+    /// Bounded per-worker queue depth in **tuples** (backpressure knob,
+    /// like Storm's max.spout.pending). The channel carries chunks, so
+    /// the bound is enforced by per-worker tuple credits: a source
+    /// blocks while a worker's unprocessed tuples would exceed this.
+    /// With several sources the bound is approximate (each may overshoot
+    /// by up to one chunk, exactly like concurrent spouts).
     pub queue_depth: usize,
     /// Per-tuple CPU burn per worker id (ns); empty = no burn.
     pub per_tuple_ns: Vec<f64>,
     /// Pace sources to this inter-arrival gap (ns); 0 = as fast as possible.
     pub interarrival_ns: u64,
+    /// Tuples routed per `route_batch` call; each batch ships at most
+    /// one chunk per destination worker.
+    pub batch: usize,
 }
 
 impl Default for RtOptions {
     fn default() -> Self {
-        RtOptions { queue_depth: 1024, per_tuple_ns: Vec::new(), interarrival_ns: 0 }
+        RtOptions {
+            queue_depth: 1024,
+            per_tuple_ns: Vec::new(),
+            interarrival_ns: 0,
+            batch: crate::config::DEFAULT_BATCH,
+        }
     }
 }
 
@@ -110,10 +127,18 @@ pub fn run(
             .collect()
     };
 
-    let mut senders: Vec<SyncSender<Msg>> = Vec::with_capacity(n_workers);
-    let mut receivers: Vec<Receiver<Msg>> = Vec::with_capacity(n_workers);
+    // queue_depth is tuples; chunks vary in size (partial flushes under
+    // pacing, per-worker splits), so the bound is enforced with tuple
+    // credits rather than channel slots. The chunk channel itself is
+    // sized so it is never the binding constraint.
+    let queue_depth = opts.queue_depth.max(1);
+    let batch = opts.batch.max(1).min(queue_depth);
+    let inflight: Vec<Arc<AtomicUsize>> =
+        (0..n_workers).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+    let mut senders: Vec<SyncSender<Vec<Msg>>> = Vec::with_capacity(n_workers);
+    let mut receivers: Vec<Receiver<Vec<Msg>>> = Vec::with_capacity(n_workers);
     for _ in 0..n_workers {
-        let (tx, rx) = sync_channel::<Msg>(opts.queue_depth);
+        let (tx, rx) = sync_channel::<Vec<Msg>>(queue_depth);
         senders.push(tx);
         receivers.push(rx);
     }
@@ -124,18 +149,23 @@ pub fn run(
     let mut worker_handles = Vec::with_capacity(n_workers);
     for (w, rx) in receivers.into_iter().enumerate() {
         let cost = per_tuple[w];
+        let credits = Arc::clone(&inflight[w]);
         worker_handles.push(thread::spawn(move || {
             let mut hist = Histogram::new();
             let mut count = 0u64;
             let mut state: std::collections::HashMap<crate::Key, u64> =
                 std::collections::HashMap::new();
-            while let Ok(msg) = rx.recv() {
-                // the actual operator: word count
-                *state.entry(msg.key).or_insert(0) += 1;
-                burn(cost);
-                let done_ns = epoch.elapsed().as_nanos() as u64;
-                hist.record(done_ns.saturating_sub(msg.emit_ns));
-                count += 1;
+            while let Ok(chunk) = rx.recv() {
+                for msg in chunk {
+                    // the actual operator: word count
+                    *state.entry(msg.key).or_insert(0) += 1;
+                    burn(cost);
+                    let done_ns = epoch.elapsed().as_nanos() as u64;
+                    hist.record(done_ns.saturating_sub(msg.emit_ns));
+                    count += 1;
+                    // release one backpressure credit per processed tuple
+                    credits.fetch_sub(1, Ordering::Release);
+                }
             }
             (hist, count, state.len())
         }));
@@ -146,24 +176,45 @@ pub fn run(
     let n_sources = sources.len();
     let mut source_handles = Vec::with_capacity(n_sources);
     for (s, mut grouper) in sources.drain(..).enumerate() {
-        let txs: Vec<SyncSender<Msg>> = senders.clone();
+        let txs: Vec<SyncSender<Vec<Msg>>> = senders.clone();
         let trace = Arc::clone(trace);
         let workers_list = workers_list.clone();
         let per_tuple = per_tuple.clone();
+        let inflight = inflight.clone();
         let gap = opts.interarrival_ns * n_sources as u64;
         source_handles.push(thread::spawn(move || {
-            let mut i = s;
             let n = trace.len();
             let mut next_emit = (s as u64) * gap / n_sources.max(1) as u64;
-            while i < n {
-                let t = trace.tuples()[i];
-                if gap > 0 {
-                    // pace the stream
-                    while (epoch.elapsed().as_nanos() as u64) < next_emit {
-                        std::hint::spin_loop();
+            let mut keys: Vec<crate::Key> = Vec::with_capacity(batch);
+            let mut emits: Vec<u64> = Vec::with_capacity(batch);
+            let mut routed: Vec<usize> = vec![0; batch];
+            let mut chunks: Vec<Vec<Msg>> = (0..txs.len()).map(|_| Vec::new()).collect();
+            let mut i = s;
+            'stream: while i < n {
+                // accumulate tuples for one routing batch; under pacing,
+                // flush whatever is buffered instead of sitting on it
+                // while waiting for the next emit slot (keeps end-to-end
+                // latency free of artificial batching delay)
+                keys.clear();
+                emits.clear();
+                while i < n && keys.len() < batch {
+                    let t = trace.tuples()[i];
+                    if gap > 0 {
+                        if (epoch.elapsed().as_nanos() as u64) < next_emit && !keys.is_empty() {
+                            break; // ship the partial batch, then pace
+                        }
+                        // pace the stream
+                        while (epoch.elapsed().as_nanos() as u64) < next_emit {
+                            std::hint::spin_loop();
+                        }
+                        next_emit += gap;
                     }
-                    next_emit += gap;
+                    keys.push(t.key);
+                    emits.push(epoch.elapsed().as_nanos() as u64);
+                    i += n_sources;
                 }
+
+                // one route_batch call under one cluster view
                 let now = epoch.elapsed().as_nanos() as u64;
                 let view = ClusterView {
                     now,
@@ -171,12 +222,36 @@ pub fn run(
                     per_tuple_time: &per_tuple,
                     n_slots: per_tuple.len(),
                 };
-                let w = grouper.route(t.key, &view);
-                let msg = Msg { key: t.key, emit_ns: now };
-                if txs[w].send(msg).is_err() {
-                    break; // worker gone (shutdown)
+                let m = keys.len();
+                grouper.route_batch(&keys, &mut routed[..m], &view);
+
+                // one chunk send per destination worker (vs one send per
+                // tuple): this is the channel-contention win
+                for j in 0..m {
+                    chunks[routed[j]].push(Msg { key: keys[j], emit_ns: emits[j] });
                 }
-                i += n_sources;
+                for (w, chunk) in chunks.iter_mut().enumerate() {
+                    if chunk.is_empty() {
+                        continue;
+                    }
+                    // tuple-credit backpressure (blocking send): wait for
+                    // the worker's unprocessed count to leave room. The
+                    // periodic empty-chunk probe detects a vanished
+                    // worker (whose credits would never drain) so the
+                    // source errors out instead of spinning forever.
+                    let mut spins = 0u32;
+                    while inflight[w].load(Ordering::Acquire) + chunk.len() > queue_depth {
+                        std::hint::spin_loop();
+                        spins = spins.wrapping_add(1);
+                        if spins % (1 << 20) == 0 && txs[w].send(Vec::new()).is_err() {
+                            break 'stream; // worker gone
+                        }
+                    }
+                    inflight[w].fetch_add(chunk.len(), Ordering::AcqRel);
+                    if txs[w].send(std::mem::take(chunk)).is_err() {
+                        break 'stream; // worker gone (shutdown)
+                    }
+                }
             }
         }));
     }
@@ -277,6 +352,19 @@ mod tests {
     }
 
     #[test]
+    fn tiny_batches_still_process_everything() {
+        let trace = small_trace();
+        let mut cfg = Config::default();
+        cfg.workers = 4;
+        let sources: Vec<Box<dyn Grouper>> =
+            (0..3).map(|s| make_kind(SchemeKind::Pkg, &cfg, s)).collect();
+        let opts = RtOptions { batch: 1, ..Default::default() };
+        let r = run(&trace, sources, 4, &opts);
+        assert_eq!(r.worker_counts.iter().sum::<u64>(), 20_000);
+        assert_eq!(r.latency.count(), 20_000);
+    }
+
+    #[test]
     fn heterogeneous_burn_shifts_load_under_fish() {
         let trace = small_trace();
         let mut cfg = Config::default();
@@ -288,7 +376,7 @@ mod tests {
         let opts = RtOptions {
             queue_depth: 256,
             per_tuple_ns: vec![4_000.0, 4_000.0, 1_000.0, 1_000.0],
-            interarrival_ns: 0,
+            ..Default::default()
         };
         let r = run(&trace, sources, 4, &opts);
         assert_eq!(r.worker_counts.iter().sum::<u64>(), 20_000);

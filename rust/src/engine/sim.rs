@@ -66,22 +66,43 @@ impl SimResult {
     }
 }
 
-/// The simulator: drives one workload through one scheme.
+/// Default routing batch size (see [`crate::config::Config::batch`]).
+pub use crate::config::DEFAULT_BATCH;
+
+/// The simulator: drives one workload through one scheme, draining
+/// tuples in micro-batches through [`Grouper::route_batch`].
 pub struct Simulator {
     topology: Topology,
     sources: Vec<Box<dyn Grouper>>,
     interarrival_ns: u64,
+    batch: usize,
 }
 
 impl Simulator {
     /// `sources` — one grouper per source (they route independently,
-    /// exactly like Storm tasks).
+    /// exactly like Storm tasks). Routes in batches of [`DEFAULT_BATCH`]
+    /// tuples; override with [`Simulator::with_batch`].
     pub fn new(topology: Topology, sources: Vec<Box<dyn Grouper>>, interarrival_ns: u64) -> Self {
         assert!(!sources.is_empty());
-        Simulator { topology, sources, interarrival_ns }
+        Simulator { topology, sources, interarrival_ns, batch: DEFAULT_BATCH }
+    }
+
+    /// Set the routing batch size (tuples per `route_batch` call).
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        assert!(batch > 0, "batch must be > 0");
+        self.batch = batch;
+        self
     }
 
     /// Run `gen` to completion.
+    ///
+    /// Tuples are drained in batches: each batch shares one
+    /// [`ClusterView`] (stamped at the batch-head arrival), is split
+    /// round-robin across the sources exactly like the per-tuple engine,
+    /// routed via [`Grouper::route_batch`], and then serviced in arrival
+    /// order so the queueing model is unchanged. Batches never span a
+    /// scripted churn event, so membership changes keep per-tuple
+    /// precision.
     pub fn run(&mut self, gen: &mut (dyn Generator + Send)) -> SimResult {
         let n = gen.len();
         let n_slots = self.topology.n_slots();
@@ -93,11 +114,17 @@ impl Simulator {
         let mut churn_migrations = 0usize;
         let n_sources = self.sources.len();
 
-        for i in 0..n {
-            // scripted churn (paper §6.5)
-            if self.topology.pending_churn() > 0 && self.topology.apply_churn(i) {
+        let mut keys: Vec<crate::Key> = Vec::with_capacity(self.batch);
+        let mut assigned: Vec<WorkerId> = vec![0; self.batch];
+        let mut src_keys: Vec<crate::Key> = Vec::with_capacity(self.batch);
+        let mut src_out: Vec<WorkerId> = vec![0; self.batch];
+
+        let mut start = 0usize;
+        while start < n {
+            // scripted churn (paper §6.5) due at the batch head
+            if self.topology.pending_churn() > 0 && self.topology.apply_churn(start) {
                 let view = ClusterView {
-                    now: i as u64 * self.interarrival_ns,
+                    now: start as u64 * self.interarrival_ns,
                     workers: self.topology.workers(),
                     per_tuple_time: self.topology.per_tuple_time(),
                     n_slots: self.topology.n_slots(),
@@ -111,26 +138,61 @@ impl Simulator {
                 churn_migrations += memory.entries_on(|w| !alive.contains(&w));
             }
 
-            let key = gen.key_at(i);
-            let arrival = i as u64 * self.interarrival_ns;
-            let src = i % n_sources;
+            // batch extent: full batch, capped at the next churn event
+            let mut end = (start + self.batch).min(n);
+            if let Some(c) = self.topology.next_churn_at() {
+                debug_assert!(c > start, "due churn must have been applied");
+                end = end.min(c);
+            }
+
+            keys.clear();
+            for i in start..end {
+                keys.push(gen.key_at(i));
+            }
+
             let view = ClusterView {
-                now: arrival,
+                now: start as u64 * self.interarrival_ns,
                 workers: self.topology.workers(),
                 per_tuple_time: self.topology.per_tuple_time(),
                 n_slots,
             };
-            let w = self.sources[src].route(key, &view);
-            debug_assert!(self.topology.workers().contains(&w), "routed to dead worker {w}");
 
-            let p = self.topology.per_tuple_time()[w];
-            let start = done[w].max(arrival);
-            let finish = start + p as u64;
-            latency.record(finish - arrival);
-            done[w] = finish;
-            counts[w] += 1;
-            busy[w] += p;
-            memory.touch(key, w);
+            // route per source over its round-robin share (tuple i goes
+            // to source i % n_sources, exactly like the per-tuple engine)
+            for s in 0..n_sources {
+                let first = start + (s + n_sources - start % n_sources) % n_sources;
+                if first >= end {
+                    continue;
+                }
+                src_keys.clear();
+                let mut i = first;
+                while i < end {
+                    src_keys.push(keys[i - start]);
+                    i += n_sources;
+                }
+                let m = src_keys.len();
+                self.sources[s].route_batch(&src_keys, &mut src_out[..m], &view);
+                for (j, &w) in src_out[..m].iter().enumerate() {
+                    assigned[first + j * n_sources - start] = w;
+                }
+            }
+
+            // service in arrival order: the queueing model is untouched
+            for i in start..end {
+                let w = assigned[i - start];
+                debug_assert!(self.topology.workers().contains(&w), "routed to dead worker {w}");
+                let arrival = i as u64 * self.interarrival_ns;
+                let p = self.topology.per_tuple_time()[w];
+                let begin = done[w].max(arrival);
+                let finish = begin + p as u64;
+                latency.record(finish - arrival);
+                done[w] = finish;
+                counts[w] += 1;
+                busy[w] += p;
+                memory.touch(keys[i - start], w);
+            }
+
+            start = end;
         }
 
         let makespan = done.iter().copied().max().unwrap_or(0);
@@ -149,15 +211,14 @@ impl Simulator {
     }
 }
 
-/// Convenience: run one (scheme, workload) pair from a [`Config`].
+/// Convenience: run one (scheme, workload) pair from a
+/// [`crate::config::Config`] through the [`crate::engine::Pipeline`]
+/// builder.
 pub fn run_config(cfg: &crate::config::Config) -> SimResult {
-    let topology = Topology::from_config(cfg);
-    let sources: Vec<Box<dyn Grouper>> = (0..cfg.sources)
-        .map(|s| crate::coordinator::make_scheme(cfg, s))
-        .collect();
-    let mut sim = Simulator::new(topology, sources, cfg.interarrival_ns);
-    let mut gen = crate::workload::by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
-    sim.run(gen.as_mut())
+    crate::engine::Pipeline::builder()
+        .config(cfg.clone())
+        .build_sim()
+        .run()
 }
 
 #[cfg(test)]
@@ -237,6 +298,35 @@ mod tests {
             assert_eq!(r.worker_counts.iter().sum::<u64>(), 10_000, "{kind}");
             assert_eq!(r.tuples, 10_000);
             assert!(r.makespan > 0);
+        }
+    }
+
+    #[test]
+    fn batch_size_does_not_change_results() {
+        // View-independent schemes advance their routing state key by
+        // key, so any batch size must produce identical simulations.
+        for kind in [SchemeKind::Shuffle, SchemeKind::Pkg, SchemeKind::DChoices] {
+            let mut cfg = Config::default();
+            cfg.scheme = kind;
+            cfg.workers = 8;
+            cfg.tuples = 20_000;
+            cfg.sources = 3;
+            cfg.interarrival_ns = 150;
+            let run_with = |batch: usize| {
+                let topology = Topology::from_config(&cfg);
+                let sources: Vec<Box<dyn Grouper>> = (0..cfg.sources)
+                    .map(|s| crate::coordinator::make_scheme(&cfg, s))
+                    .collect();
+                let mut sim =
+                    Simulator::new(topology, sources, cfg.interarrival_ns).with_batch(batch);
+                let mut gen = crate::workload::by_name("zf", cfg.tuples, 1.5, cfg.seed);
+                sim.run(gen.as_mut())
+            };
+            let a = run_with(1);
+            let b = run_with(1024);
+            assert_eq!(a.worker_counts, b.worker_counts, "{kind}");
+            assert_eq!(a.makespan, b.makespan, "{kind}");
+            assert_eq!(a.entries, b.entries, "{kind}");
         }
     }
 

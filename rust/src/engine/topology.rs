@@ -106,6 +106,13 @@ impl Topology {
     pub fn pending_churn(&self) -> usize {
         self.churn.len() - self.next_churn
     }
+
+    /// Tuple index of the next pending scripted event, if any. The
+    /// batched simulator caps each routing batch at this index so
+    /// membership changes still land on exact tuple boundaries.
+    pub fn next_churn_at(&self) -> Option<usize> {
+        self.churn.get(self.next_churn).map(|&(i, _)| i)
+    }
 }
 
 #[cfg(test)]
@@ -136,6 +143,19 @@ mod tests {
         assert_eq!(t.workers(), &[0, 2, 3]);
         assert_eq!(t.per_tuple_time()[3], 2.0);
         assert_eq!(t.pending_churn(), 0);
+    }
+
+    #[test]
+    fn next_churn_at_tracks_pending_events() {
+        let mut t = Topology::new(vec![0, 1, 2], vec![1.0; 3]).with_churn(
+            vec![(100, ChurnEvent::Remove(1)), (200, ChurnEvent::Add(3))],
+            1.0,
+        );
+        assert_eq!(t.next_churn_at(), Some(100));
+        t.apply_churn(150);
+        assert_eq!(t.next_churn_at(), Some(200));
+        t.apply_churn(250);
+        assert_eq!(t.next_churn_at(), None);
     }
 
     #[test]

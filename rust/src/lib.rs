@@ -4,6 +4,32 @@
 //! 2018) and the distributed-stream-processing substrate it runs on, as
 //! the Layer-3 coordinator of a Rust + JAX + Pallas stack.
 //!
+//! ## Batch-first API
+//!
+//! The public surface is batch-first: jobs are built through the
+//! [`engine::Pipeline`] builder and both engines drain tuples in
+//! micro-batches through [`coordinator::Grouper::route_batch`], which
+//! amortises per-tuple dispatch, hoists per-call work (view validation,
+//! HWA interval re-estimation, counter sizing) out of the routing inner
+//! loop, and is the shape the XLA `epoch_stats` backend needs (key
+//! batches, not single keys):
+//!
+//! ```no_run
+//! use fish::coordinator::SchemeKind;
+//! use fish::engine::Pipeline;
+//!
+//! let result = Pipeline::builder()
+//!     .workload("zf")
+//!     .scheme(SchemeKind::Fish)
+//!     .sources(4)
+//!     .workers(32)
+//!     .batch(1024)
+//!     .tuples(1_000_000)
+//!     .build_sim()
+//!     .run();
+//! println!("makespan {} / memory {:.2}x FG", result.makespan, result.memory_normalized);
+//! ```
+//!
 //! The library is organised as:
 //!
 //! * [`workload`] — time-evolving stream generators (Zipf per the paper's
@@ -12,11 +38,13 @@
 //!   intra-epoch counter set) and a count-min sketch bit-compatible with
 //!   the Pallas kernel in `python/compile/kernels/cms.py`.
 //! * [`hashring`] — consistent hashing with virtual nodes (paper §5).
-//! * [`coordinator`] — the grouping schemes: Shuffle, Field, Partial-Key,
+//! * [`coordinator`] — the grouping schemes behind the batch-first
+//!   [`coordinator::Grouper`] trait: Shuffle, Field, Partial-Key,
 //!   D-Choices, W-Choices and FISH (epoch identification + CHK + HWA).
-//! * [`engine`] — the DSPE substrate: a deterministic discrete-event
-//!   simulator (paper Figs. 2–17) and a real multithreaded runtime with
-//!   bounded-queue backpressure (the Apache-Storm stand-in, Figs. 18–20).
+//! * [`engine`] — the DSPE substrate: the [`engine::Pipeline`] builder,
+//!   a deterministic discrete-event simulator (paper Figs. 2–17) and a
+//!   real multithreaded runtime with bounded-queue backpressure and
+//!   chunked per-worker sends (the Apache-Storm stand-in, Figs. 18–20).
 //! * [`runtime`] — PJRT bridge: loads the AOT-compiled `epoch_stats` HLO
 //!   artifacts and runs them from the coordinator hot path.
 //! * [`metrics`], [`config`], [`cli`], [`report`], [`testing`], [`util`]

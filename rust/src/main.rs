@@ -13,9 +13,8 @@
 use fish::cli::Args;
 use fish::config::Config;
 use fish::coordinator::{Grouper, SchemeKind};
-use fish::engine::{sim, Topology};
+use fish::engine::Pipeline;
 use fish::report::{f2, ns, ratio, Table};
-use std::sync::Arc;
 
 fn load_config(args: &Args) -> anyhow::Result<Config> {
     let mut cfg = match args.get("config") {
@@ -44,12 +43,13 @@ fn build_sources(cfg: &Config) -> anyhow::Result<Vec<Box<dyn Grouper>>> {
 
 fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
-    let topology = Topology::from_config(&cfg);
     let sources = build_sources(&cfg)?;
-    let mut simulator = sim::Simulator::new(topology, sources, cfg.interarrival_ns);
-    let mut gen = fish::workload::by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
+    let mut job = Pipeline::builder()
+        .config(cfg.clone())
+        .with_sources(sources)
+        .build_sim();
     let start = std::time::Instant::now();
-    let r = simulator.run(gen.as_mut());
+    let r = job.run();
     let wall = start.elapsed();
 
     let (mean, p50, p95, p99) = r.latency.summary();
@@ -77,24 +77,18 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_deploy(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
-    let mut gen = fish::workload::by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
-    let trace = Arc::new(fish::workload::materialise(gen.as_mut(), cfg.interarrival_ns));
     let sources = build_sources(&cfg)?;
-    let opts = fish::engine::rt::RtOptions {
-        queue_depth: 1024,
-        per_tuple_ns: cfg
-            .capacity_vec()
-            .iter()
-            .map(|&c| cfg.service_ns as f64 / c)
-            .collect(),
-        interarrival_ns: cfg.interarrival_ns,
-    };
-    let r = fish::engine::rt::run(&trace, sources, cfg.workers, &opts);
+    let job = Pipeline::builder()
+        .config(cfg.clone())
+        .with_sources(sources)
+        .build_rt();
+    let n_tuples = job.trace().len();
+    let r = job.run();
     let (mean, p50, p95, p99) = r.latency.summary();
     let mut t = Table::new(
         &format!(
             "deploy: {} on {} ({} tuples, {} sources, {} workers)",
-            cfg.scheme, cfg.workload, trace.len(), cfg.sources, cfg.workers
+            cfg.scheme, cfg.workload, n_tuples, cfg.sources, cfg.workers
         ),
         &["metric", "value"],
     );
@@ -126,7 +120,7 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
             cfg.scheme = kind;
             cfg.workers = w;
             cfg.interarrival_ns = (cfg.service_ns / w as u64).max(1);
-            let r = sim::run_config(&cfg);
+            let r = Pipeline::builder().config(cfg).build_sim().run();
             if kind == SchemeKind::Shuffle {
                 sg_makespan = r.makespan;
             }
@@ -171,8 +165,8 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 fn usage() -> ! {
     eprintln!(
         "usage: fish <sim|deploy|compare|info> [--config file.toml] [--scheme S] \
-         [--workload zf|mt|am] [--tuples N] [--workers N] [--zipf_z Z] \
-         [--identifier native|xla-cms] [--seed N] ..."
+         [--workload zf|mt|am] [--tuples N] [--workers N] [--zipf_z Z] [--batch N] \
+         [--rebalance_threshold F] [--identifier native|xla-cms] [--seed N] ..."
     );
     std::process::exit(2);
 }

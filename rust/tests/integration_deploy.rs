@@ -86,6 +86,7 @@ fn deploy_paced_sources_respect_interarrival() {
         queue_depth: 1024,
         per_tuple_ns: vec![0.0],
         interarrival_ns: 10_000, // 10µs → ≥50ms total
+        ..Default::default()
     };
     let r = run(&t, sources, 4, &opts);
     assert!(

@@ -175,6 +175,75 @@ fn prop_histogram_quantiles_ordered_and_bounded() {
 }
 
 #[test]
+fn prop_route_batch_identical_to_sequential_route() {
+    // The batch-first API contract: for EVERY scheme, `route_batch` must
+    // be element-wise identical to sequential `route` calls under the
+    // same view — across random keys, worker churn, and batch sizes
+    // 1 / 7 / 1024 (sub-single, prime-stride, super-batch).
+    const SLOTS: usize = 40;
+    let kinds = [
+        SchemeKind::Shuffle,
+        SchemeKind::Field,
+        SchemeKind::Pkg,
+        SchemeKind::DChoices,
+        SchemeKind::WChoices,
+        SchemeKind::Fish,
+        SchemeKind::Rebalance,
+    ];
+    prop_check("route_batch == sequential route", 60, |g| {
+        let kind = *g.choose(&kinds);
+        let batch = *g.choose(&[1usize, 7, 1024]);
+        let mut cfg = Config::default();
+        cfg.workers = g.usize_in(1..24);
+        let mut seq_grouper = make_kind(kind, &cfg, 0);
+        let mut batch_grouper = make_kind(kind, &cfg, 0);
+        let times: Vec<f64> = (0..SLOTS).map(|_| 500.0 + g.f64_in(0.0, 1_000.0)).collect();
+        let mut alive: Vec<usize> = (0..cfg.workers).collect();
+
+        for step in 0..g.usize_in(1..5) {
+            // random membership churn (keep at least one worker alive)
+            if g.bool(0.4) {
+                if g.bool(0.5) && alive.len() > 1 {
+                    let idx = g.usize_in(0..alive.len());
+                    alive.remove(idx);
+                } else {
+                    let new = g.usize_in(0..SLOTS);
+                    if !alive.contains(&new) {
+                        alive.push(new);
+                        alive.sort_unstable();
+                    }
+                }
+            }
+            let view = ClusterView {
+                now: step as u64 * 1_000,
+                workers: &alive,
+                per_tuple_time: &times,
+                n_slots: SLOTS,
+            };
+            seq_grouper.on_membership_change(&view);
+            batch_grouper.on_membership_change(&view);
+
+            let n = g.usize_in(1..600);
+            let keys: Vec<u64> = (0..n)
+                .map(|_| if g.bool(0.3) { g.u64_in(0..8) } else { g.u64_in(0..5_000) })
+                .collect();
+
+            let seq: Vec<usize> = keys.iter().map(|&k| seq_grouper.route(k, &view)).collect();
+            let mut got = vec![0usize; n];
+            let mut off = 0;
+            for chunk in keys.chunks(batch) {
+                batch_grouper.route_batch(chunk, &mut got[off..off + chunk.len()], &view);
+                off += chunk.len();
+            }
+            if got != seq {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
 fn prop_fish_total_routing_under_random_membership() {
     prop_check("FISH routes correctly under churn", 20, |g| {
         let mut cfg = Config::default();

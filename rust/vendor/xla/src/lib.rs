@@ -1,0 +1,139 @@
+//! Offline stub of the `xla` (xla-rs / PJRT) bindings.
+//!
+//! The container building this repo has no XLA/PJRT shared libraries,
+//! so this crate provides the exact API surface `fish::runtime` uses and
+//! reports "unavailable" at runtime: [`PjRtClient::cpu`] returns an
+//! error, which every caller already handles (the CLI prints a note,
+//! benches and tests skip the `xla-cms` backend gracefully).
+//!
+//! Swapping this path dependency for the real bindings re-enables the
+//! AOT Pallas `epoch_stats` path with no source changes.
+
+use std::fmt;
+
+/// Stub error: everything fails with an "unavailable" message.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: XLA/PJRT is not compiled into this build (offline stub; \
+         link the real xla crate to enable the Pallas backend)"
+    )))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU PJRT client — unavailable in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Platform name (unreachable at runtime: no client can exist).
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation — unavailable in the stub.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal arguments — unavailable in the stub.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal — unavailable in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Host literal (stub: shapeless placeholder).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Reshape — unavailable in the stub.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Destructure a tuple literal — unavailable in the stub.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    /// Copy out as a typed vector — unavailable in the stub.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text — unavailable in the stub.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("offline stub"));
+    }
+
+    #[test]
+    fn literal_ops_fail_cleanly() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_err());
+        assert!(lit.to_tuple().is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
