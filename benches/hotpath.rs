@@ -9,6 +9,13 @@
 //! Methodology: warm up, then N timed iterations over a pre-generated
 //! key stream; report ns/op and the batched/per-tuple speedup. Used to
 //! drive the EXPERIMENTS.md §Perf before/after log.
+//!
+//! Besides the console table/CSV, this bench emits
+//! `bench_out/BENCH_hotpath.json` — machine-readable ns/op per scheme
+//! plus run metadata — which CI's `perf-smoke` job uploads as an
+//! artifact and gates against `benches/baselines/hotpath_smoke.json`
+//! (batched-routing speedup must not regress >25%; the *ratio* is
+//! compared, not raw ns/op, so the gate is robust to runner hardware).
 
 #[path = "support/mod.rs"]
 mod support;
@@ -106,30 +113,50 @@ fn bench_identifier_xla(keys: &[u64], cap: usize) -> Option<f64> {
 
 fn main() {
     println!("=== hot-path micro-benchmarks ===\n");
-    let n = 400_000 * support::scale();
-    let mut gen = fish::workload::by_name("zf", n, 1.5, 3);
+    let opts = support::BenchOpts::from_env();
+    let n = opts.tuples(400_000);
+    let mut gen = fish::workload::by_name("zf", n, 1.5, opts.seed);
     let keys: Vec<u64> = (0..n).map(|i| gen.key_at(i)).collect();
 
     let mut t = Table::new(
         "routing cost per scheme: per-tuple route() vs route_batch()",
         &["scheme", "workers", "tuple ns", "b256 ns", "b1024 ns", "speedup@1024"],
     );
+    let mut json_rows: Vec<String> = Vec::new();
     for kind in SchemeKind::all() {
         for &w in &[16usize, 128] {
             let tuple_ns = bench_route(kind, w, &keys);
             let b256 = bench_route_batch(kind, w, &keys, 256);
             let b1024 = bench_route_batch(kind, w, &keys, 1024);
+            let speedup = tuple_ns / b1024.max(1e-9);
             t.row(&[
                 kind.name().into(),
                 w.to_string(),
                 f2(tuple_ns),
                 f2(b256),
                 f2(b1024),
-                format!("{:.2}x", tuple_ns / b1024.max(1e-9)),
+                format!("{speedup:.2}x"),
             ]);
+            json_rows.push(format!(
+                "    {{\"scheme\": \"{}\", \"workers\": {w}, \"tuple_ns\": {tuple_ns:.3}, \
+                 \"b256_ns\": {b256:.3}, \"b1024_ns\": {b1024:.3}, \
+                 \"speedup_b1024\": {speedup:.4}}}",
+                kind.name()
+            ));
         }
     }
-    support::finish(&t, "hotpath_route");
+    support::finish_with(&opts, &t, "hotpath_route");
+
+    // machine-readable sibling of the table above (CI artifact + gate)
+    let json = format!(
+        "{{\n  \"meta\": {},\n  \"tuples\": {n},\n  \"results\": [\n{}\n  ]\n}}\n",
+        opts.meta_json(),
+        json_rows.join(",\n")
+    );
+    match support::save_json(&opts, "BENCH_hotpath.json", &json) {
+        Ok(path) => println!("[saved {}]\n", path.display()),
+        Err(e) => eprintln!("[json save failed: {e}]\n"),
+    }
 
     let mut t2 = Table::new(
         "identifier cost per tuple (observe + estimate)",
@@ -143,5 +170,5 @@ fn main() {
         }
         None => println!("[xla-cms skipped: run `make artifacts` first]"),
     }
-    support::finish(&t2, "hotpath_identifier");
+    support::finish_with(&opts, &t2, "hotpath_identifier");
 }

@@ -4,50 +4,151 @@
 //! for one paper figure, prints the same rows/series the paper reports,
 //! and saves a CSV under `bench_out/` (override via `FISH_BENCH_OUT`).
 //!
-//! Scale: defaults are sized to finish the whole `cargo bench` suite in
-//! minutes on a laptop. `FISH_BENCH_SCALE=4` multiplies tuple counts
-//! (the paper's full 50M-tuple runs ≈ scale 100).
+//! All run-shaping knobs come through one [`BenchOpts`] struct (instead
+//! of ad-hoc env reads scattered per bench), and every CSV/JSON a bench
+//! saves carries the run metadata — scale, seed, git SHA — so saved
+//! series are reproducible and comparable across machines:
+//!
+//! * `FISH_BENCH_SCALE` — tuple-count multiplier, fractional allowed
+//!   (`0.05` = CI smoke scale; the paper's full 50M-tuple runs ≈ 100).
+//! * `FISH_BENCH_SEED` — PRNG seed for generated key streams.
+//! * `FISH_BENCH_FULL_Z` — run all eleven Zipf exponents, not 3.
+//! * `FISH_BENCH_OUT` — output directory (default `bench_out/`).
+
+// Each bench includes this module by path and uses its own subset.
+#![allow(dead_code)]
 
 use fish::config::Config;
 use fish::coordinator::SchemeKind;
 use fish::engine::sim::SimResult;
 use fish::engine::Pipeline;
+use std::path::PathBuf;
+use std::sync::OnceLock;
 
 /// Worker scales used across the paper's figures.
 pub const WORKER_SCALES: [usize; 4] = [16, 32, 64, 128];
 
-/// Zipf exponents (paper: 1.0..=2.0; we sample the ends and middle by
-/// default — `FISH_BENCH_FULL_Z=1` runs all eleven).
-pub fn z_values() -> Vec<f64> {
-    if std::env::var("FISH_BENCH_FULL_Z").is_ok() {
-        (0..=10).map(|i| 1.0 + i as f64 * 0.1).collect()
-    } else {
-        vec![1.0, 1.5, 2.0]
+/// Baseline tuple count the simulator benches scale from.
+pub const SIM_TUPLES_BASE: usize = 200_000;
+
+/// One resolved set of bench-run options (env-derived, read once).
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    /// Tuple-count scale factor (fractional allowed; 1.0 = laptop-sized).
+    pub scale: f64,
+    /// PRNG seed for generated key streams.
+    pub seed: u64,
+    /// Sweep all eleven Zipf exponents instead of the 3-point sample.
+    pub full_z: bool,
+    /// Directory CSV/JSON outputs land in.
+    pub out_dir: PathBuf,
+    /// Git SHA of the tree under test (`GITHUB_SHA`, else `git
+    /// rev-parse`, else `unknown`) — stamped into every saved file.
+    pub git_sha: String,
+}
+
+impl BenchOpts {
+    /// Resolve options from the environment.
+    pub fn from_env() -> Self {
+        let scale = std::env::var("FISH_BENCH_SCALE")
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .filter(|s| *s > 0.0)
+            .unwrap_or(1.0);
+        let seed = std::env::var("FISH_BENCH_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(42);
+        // resolved once per process: the legacy shims re-call from_env()
+        // per config point, and forking `git` each time would dominate
+        // small sweeps
+        static GIT_SHA: OnceLock<String> = OnceLock::new();
+        let git_sha = GIT_SHA
+            .get_or_init(|| {
+                std::env::var("GITHUB_SHA")
+                    .ok()
+                    .filter(|s| !s.is_empty())
+                    .or_else(|| {
+                        std::process::Command::new("git")
+                            .args(["rev-parse", "HEAD"])
+                            .output()
+                            .ok()
+                            .filter(|o| o.status.success())
+                            .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+                    })
+                    .filter(|s| !s.is_empty())
+                    .unwrap_or_else(|| "unknown".to_string())
+            })
+            .clone();
+        BenchOpts {
+            scale,
+            seed,
+            full_z: std::env::var("FISH_BENCH_FULL_Z").is_ok(),
+            out_dir: fish::report::bench_out(),
+            git_sha,
+        }
+    }
+
+    /// Scale a baseline tuple count (floored so smoke runs stay sane).
+    pub fn tuples(&self, base: usize) -> usize {
+        ((base as f64 * self.scale) as usize).max(1_000)
+    }
+
+    /// Zipf exponents to sweep (paper: 1.0..=2.0).
+    pub fn z_values(&self) -> Vec<f64> {
+        if self.full_z {
+            (0..=10).map(|i| 1.0 + i as f64 * 0.1).collect()
+        } else {
+            vec![1.0, 1.5, 2.0]
+        }
+    }
+
+    /// Run metadata stamped into every saved CSV/JSON.
+    pub fn meta(&self) -> Vec<(String, String)> {
+        vec![
+            ("scale".into(), format!("{}", self.scale)),
+            ("seed".into(), self.seed.to_string()),
+            ("git_sha".into(), self.git_sha.clone()),
+        ]
+    }
+
+    /// The same metadata as a JSON object fragment.
+    pub fn meta_json(&self) -> String {
+        format!(
+            "{{\"scale\": {}, \"seed\": {}, \"git_sha\": \"{}\"}}",
+            self.scale, self.seed, self.git_sha
+        )
     }
 }
 
-/// Tuple-count scale factor.
+/// Zipf exponents from the process environment (legacy shim — new code
+/// should hold a [`BenchOpts`]).
+pub fn z_values() -> Vec<f64> {
+    BenchOpts::from_env().z_values()
+}
+
+/// Integer tuple-count scale factor (legacy shim; fractional scales
+/// clamp to 1 — only [`BenchOpts::tuples`] honours them).
 pub fn scale() -> usize {
-    std::env::var("FISH_BENCH_SCALE")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(1)
+    (BenchOpts::from_env().scale.round() as usize).max(1)
 }
 
 /// Baseline tuple count for simulator benches.
 pub fn sim_tuples() -> usize {
-    200_000 * scale()
+    BenchOpts::from_env().tuples(SIM_TUPLES_BASE)
 }
 
 /// A base config tuned so arrivals keep `workers` busy without
 /// unbounded queue growth (arrival rate ≈ aggregate service rate).
 pub fn base_config(workload: &str, workers: usize, z: f64) -> Config {
+    let opts = BenchOpts::from_env();
     let mut cfg = Config::default();
     cfg.workload = workload.into();
-    cfg.tuples = sim_tuples();
+    cfg.tuples = opts.tuples(SIM_TUPLES_BASE);
     cfg.zipf_z = z;
     cfg.workers = workers;
     cfg.sources = 4;
+    cfg.seed = opts.seed;
     cfg.service_ns = 1_000;
     cfg.interarrival_ns = (cfg.service_ns / workers as u64).max(1);
     // K_max proportional to the key space, as in the paper (1000 counters
@@ -71,12 +172,27 @@ pub fn run_vs_sg(cfg: &Config, kind: SchemeKind) -> (SimResult, f64) {
     (r, ratio)
 }
 
-/// Save + print helper: prints the table and writes `bench_out/<name>.csv`.
+/// Save + print helper: prints the table and writes
+/// `bench_out/<name>.csv` with the run metadata as leading `# key=value`
+/// comment lines.
 pub fn finish(table: &fish::report::Table, name: &str) {
+    finish_with(&BenchOpts::from_env(), table, name);
+}
+
+/// [`finish`] against an already-resolved [`BenchOpts`].
+pub fn finish_with(opts: &BenchOpts, table: &fish::report::Table, name: &str) {
     table.print();
-    let path = fish::report::bench_out().join(format!("{name}.csv"));
-    match table.save_csv(&path) {
+    let path = opts.out_dir.join(format!("{name}.csv"));
+    match table.save_csv_with_meta(&path, &opts.meta()) {
         Ok(()) => println!("[saved {}]\n", path.display()),
         Err(e) => eprintln!("[csv save failed: {e}]\n"),
     }
+}
+
+/// Write a machine-readable JSON document under the bench output dir.
+pub fn save_json(opts: &BenchOpts, name: &str, json: &str) -> std::io::Result<PathBuf> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let path = opts.out_dir.join(name);
+    std::fs::write(&path, json)?;
+    Ok(path)
 }

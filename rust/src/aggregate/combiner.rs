@@ -1,0 +1,195 @@
+//! Combiners: the per-key reduction applied at both aggregation stages.
+//!
+//! A [`Combiner`] is the algebra of the two-phase topology — workers
+//! fold tuples into per-key *partial* accumulators with
+//! [`Combiner::accumulate`], and the downstream merge stage folds
+//! flushed partials into the *final* accumulator with
+//! [`Combiner::merge`]. Correctness of the split (PKG / D-C / W-C /
+//! FISH all scatter one key over several workers) only needs `merge`
+//! to be commutative, associative and identity-respecting; every
+//! combiner here satisfies that, so merged results are independent of
+//! flush timing and worker interleaving (pinned by the
+//! `aggregation_oracle` integration tests).
+
+use crate::sketch::SpaceSaving;
+use crate::Key;
+
+/// A commutative-monoid reduction over per-key accumulators.
+pub trait Combiner: Send {
+    /// Per-key accumulator state.
+    type Acc: Clone + Send + 'static;
+
+    /// Combiner identity (for reports).
+    fn name(&self) -> &'static str;
+
+    /// The neutral accumulator (`merge(identity, x) == x`).
+    fn identity(&self) -> Self::Acc;
+
+    /// Fold one tuple occurrence carrying `value` into `acc`
+    /// (stage one: runs on the worker holding the partial).
+    fn accumulate(&self, acc: &mut Self::Acc, value: u64);
+
+    /// Fold a flushed partial into a downstream accumulator
+    /// (stage two: runs on the aggregator).
+    fn merge(&self, into: &mut Self::Acc, other: &Self::Acc);
+
+    /// Wire size of one accumulator (payload accounting for the
+    /// aggregation-traffic metric).
+    fn acc_bytes(&self) -> usize {
+        std::mem::size_of::<Self::Acc>()
+    }
+}
+
+/// Count tuples per key — the word-count topology both engines run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Count;
+
+impl Combiner for Count {
+    type Acc = u64;
+
+    fn name(&self) -> &'static str {
+        "count"
+    }
+
+    fn identity(&self) -> u64 {
+        0
+    }
+
+    fn accumulate(&self, acc: &mut u64, _value: u64) {
+        *acc += 1;
+    }
+
+    fn merge(&self, into: &mut u64, other: &u64) {
+        *into += *other;
+    }
+}
+
+/// Sum tuple values per key (e.g. bytes, click weights).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Sum;
+
+impl Combiner for Sum {
+    type Acc = u64;
+
+    fn name(&self) -> &'static str {
+        "sum"
+    }
+
+    fn identity(&self) -> u64 {
+        0
+    }
+
+    fn accumulate(&self, acc: &mut u64, value: u64) {
+        *acc += value;
+    }
+
+    fn merge(&self, into: &mut u64, other: &u64) {
+        *into += *other;
+    }
+}
+
+/// Bounded-memory approximate top-k over merged flushes, reusing the
+/// [`SpaceSaving`] counter set from [`crate::sketch`] with *weighted*
+/// observes: one flushed partial `(key, n)` lands as a single
+/// `observe_weighted(key, n)` instead of `n` unit observes, so the
+/// aggregator can answer trending-key queries in O(K) memory even when
+/// the merged key space is far larger than `capacity`.
+///
+/// SpaceSaving's overestimate guarantee survives weighting (a newcomer
+/// inherits `c_min + w`), so a genuinely hot key is never under-ranked;
+/// the `topk_trending` example cross-checks this against the exact
+/// merged counts.
+#[derive(Debug, Clone)]
+pub struct TopKSketch {
+    sketch: SpaceSaving,
+}
+
+impl TopKSketch {
+    /// Track at most `capacity` candidate keys.
+    pub fn new(capacity: usize) -> Self {
+        TopKSketch { sketch: SpaceSaving::new(capacity) }
+    }
+
+    /// Absorb one flushed partial: `key` gained `weight` mass.
+    pub fn absorb(&mut self, key: Key, weight: u64) {
+        if weight > 0 {
+            self.sketch.observe_weighted(key, weight as f64);
+        }
+    }
+
+    /// The `k` highest-mass keys, descending (estimates, not exact).
+    pub fn top(&self, k: usize) -> Vec<(Key, f64)> {
+        self.sketch.top_n(k)
+    }
+
+    /// Estimated mass of `key` (0 if untracked).
+    pub fn estimate(&self, key: Key) -> f64 {
+        self.sketch.estimate(key)
+    }
+
+    /// Tracked candidate entries (control-plane memory).
+    pub fn entries(&self) -> usize {
+        self.sketch.entries()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_ignores_value_sum_uses_it() {
+        let c = Count;
+        let mut a = c.identity();
+        c.accumulate(&mut a, 999);
+        c.accumulate(&mut a, 0);
+        assert_eq!(a, 2);
+
+        let s = Sum;
+        let mut b = s.identity();
+        s.accumulate(&mut b, 999);
+        s.accumulate(&mut b, 1);
+        assert_eq!(b, 1000);
+    }
+
+    #[test]
+    fn merge_is_commutative_and_respects_identity() {
+        let c = Count;
+        let (mut x, mut y) = (5u64, 9u64);
+        let (xs, ys) = (x, y);
+        c.merge(&mut x, &ys);
+        c.merge(&mut y, &xs);
+        assert_eq!(x, y);
+        let mut id = c.identity();
+        c.merge(&mut id, &x);
+        assert_eq!(id, x);
+    }
+
+    #[test]
+    fn topk_sketch_weighted_matches_unit_observes_on_hot_keys() {
+        // Feeding (key, n) once must rank hot keys the same as feeding
+        // the key n times — the property that makes flush-batch absorbs
+        // sound.
+        let mut weighted = TopKSketch::new(8);
+        let mut exact: std::collections::HashMap<Key, u64> = std::collections::HashMap::new();
+        let flushes: &[(Key, u64)] = &[(1, 50), (2, 30), (3, 5), (1, 25), (4, 2), (2, 10)];
+        for &(k, n) in flushes {
+            weighted.absorb(k, n);
+            *exact.entry(k).or_insert(0) += n;
+        }
+        let top = weighted.top(2);
+        assert_eq!(top[0].0, 1);
+        assert_eq!(top[1].0, 2);
+        assert!(weighted.estimate(1) >= exact[&1] as f64);
+        assert!(weighted.estimate(2) >= exact[&2] as f64);
+    }
+
+    #[test]
+    fn topk_sketch_bounds_memory() {
+        let mut t = TopKSketch::new(16);
+        for k in 0..10_000u64 {
+            t.absorb(k, 1 + k % 7);
+        }
+        assert!(t.entries() <= 16);
+    }
+}

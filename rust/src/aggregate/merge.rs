@@ -1,0 +1,250 @@
+//! The two stages themselves: per-worker partial state and the
+//! downstream merge stage.
+//!
+//! Stage one ([`PartialAgg`]) lives wherever tuples are processed — a
+//! worker thread in the runtime engine, a per-worker slot in the
+//! simulator — and is periodically *flushed*: drained into a batch of
+//! `(key, accumulator)` deltas shipped downstream. Stage two
+//! ([`MergeStage`]) absorbs those batches into the final per-key
+//! result and keeps the cost ledger ([`AggStats`]): how many flush
+//! batches and entries crossed the stage boundary, the payload bytes,
+//! and the wall time spent merging. This is the aggregation traffic
+//! the PKG paper charges against key splitting — without it, the
+//! per-worker counts every multi-choice scheme produces are only
+//! partial results.
+
+use super::combiner::Combiner;
+use crate::metrics::AggStats;
+use crate::Key;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Wire size of a key on the flush path.
+const KEY_BYTES: usize = std::mem::size_of::<Key>();
+
+/// Stage one: per-key partial accumulators since the last flush.
+pub struct PartialAgg<C: Combiner> {
+    combiner: C,
+    state: HashMap<Key, C::Acc>,
+}
+
+impl<C: Combiner> PartialAgg<C> {
+    /// Empty partial state folding through `combiner`.
+    pub fn new(combiner: C) -> Self {
+        PartialAgg { combiner, state: HashMap::new() }
+    }
+
+    /// Fold one tuple occurrence of `key` carrying `value`.
+    #[inline]
+    pub fn observe(&mut self, key: Key, value: u64) {
+        let combiner = &self.combiner;
+        let acc = self.state.entry(key).or_insert_with(|| combiner.identity());
+        combiner.accumulate(acc, value);
+    }
+
+    /// Distinct keys accumulated since the last flush.
+    pub fn len(&self) -> usize {
+        self.state.len()
+    }
+
+    /// True when there is nothing to flush.
+    pub fn is_empty(&self) -> bool {
+        self.state.is_empty()
+    }
+
+    /// Current partial-state payload size in bytes (what a flush now
+    /// would ship) — the partial-state-bytes metric.
+    pub fn payload_bytes(&self) -> usize {
+        self.state.len() * (KEY_BYTES + self.combiner.acc_bytes())
+    }
+
+    /// Drain the partial state into a flush batch. The partial is empty
+    /// afterwards; accumulation starts over (delta semantics, so flushes
+    /// at any cadence merge to the same final result).
+    pub fn flush(&mut self) -> Vec<(Key, C::Acc)> {
+        self.state.drain().collect()
+    }
+}
+
+/// Stage two: the downstream aggregator state.
+pub struct MergeStage<C: Combiner> {
+    combiner: C,
+    merged: HashMap<Key, C::Acc>,
+    stats: AggStats,
+}
+
+impl<C: Combiner> MergeStage<C> {
+    /// Empty merge stage folding through `combiner`.
+    pub fn new(combiner: C) -> Self {
+        MergeStage { combiner, merged: HashMap::new(), stats: AggStats::default() }
+    }
+
+    /// Absorb one flush batch, recording its traffic and merge time.
+    pub fn absorb(&mut self, batch: Vec<(Key, C::Acc)>) {
+        if batch.is_empty() {
+            return;
+        }
+        let start = Instant::now();
+        let entries = batch.len();
+        for (key, acc) in batch {
+            match self.merged.entry(key) {
+                std::collections::hash_map::Entry::Occupied(mut o) => {
+                    self.combiner.merge(o.get_mut(), &acc);
+                }
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    v.insert(acc);
+                }
+            }
+        }
+        let bytes = entries * (KEY_BYTES + self.combiner.acc_bytes());
+        self.stats.record_merge(entries, bytes, start.elapsed().as_nanos() as u64);
+    }
+
+    /// Distinct keys merged so far.
+    pub fn len(&self) -> usize {
+        self.merged.len()
+    }
+
+    /// True when nothing has been merged yet.
+    pub fn is_empty(&self) -> bool {
+        self.merged.is_empty()
+    }
+
+    /// Merged accumulator for `key`, if any flush mentioned it.
+    pub fn get(&self, key: Key) -> Option<&C::Acc> {
+        self.merged.get(&key)
+    }
+
+    /// Cost ledger so far.
+    pub fn stats(&self) -> &AggStats {
+        &self.stats
+    }
+
+    /// Finish: the merged map plus the cost ledger.
+    pub fn into_parts(self) -> (HashMap<Key, C::Acc>, AggStats) {
+        (self.merged, self.stats)
+    }
+
+    /// Finish into the canonical result shape: `(key, acc)` ascending by
+    /// key (deterministic, directly comparable across runs and engines).
+    pub fn into_sorted(self) -> (Vec<(Key, C::Acc)>, AggStats) {
+        let (map, stats) = self.into_parts();
+        let mut v: Vec<(Key, C::Acc)> = map.into_iter().collect();
+        v.sort_unstable_by_key(|&(k, _)| k);
+        (v, stats)
+    }
+}
+
+/// Exact top-k over a merged count vector: highest count first, ties
+/// broken by key ascending (total order ⇒ deterministic rankings).
+pub fn top_k(counts: &[(Key, u64)], k: usize) -> Vec<(Key, u64)> {
+    let mut v = counts.to_vec();
+    v.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    v.truncate(k);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::combiner::{Count, Sum};
+    use super::*;
+
+    #[test]
+    fn flush_drains_and_merge_reassembles() {
+        let mut p = PartialAgg::new(Count);
+        for k in [1u64, 2, 1, 3, 1, 2] {
+            p.observe(k, 1);
+        }
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.payload_bytes(), 3 * 16);
+
+        let mut m = MergeStage::new(Count);
+        m.absorb(p.flush());
+        assert!(p.is_empty());
+        // second wave through the same partial
+        p.observe(1, 1);
+        p.observe(4, 1);
+        m.absorb(p.flush());
+
+        assert_eq!(m.get(1), Some(&4));
+        assert_eq!(m.get(2), Some(&2));
+        assert_eq!(m.get(4), Some(&1));
+        let (sorted, stats) = m.into_sorted();
+        assert_eq!(sorted, vec![(1, 4), (2, 2), (3, 1), (4, 1)]);
+        assert_eq!(stats.flushes, 2);
+        assert_eq!(stats.messages, 5);
+        assert_eq!(stats.bytes, 5 * 16);
+    }
+
+    #[test]
+    fn merge_is_flush_cadence_invariant() {
+        // Same stream, different flush points → identical merged output.
+        let keys: Vec<Key> = (0..500u64).map(|i| i % 13).collect();
+        let run = |flush_every: usize| {
+            let mut p = PartialAgg::new(Count);
+            let mut m = MergeStage::new(Count);
+            for (i, &k) in keys.iter().enumerate() {
+                p.observe(k, 1);
+                if (i + 1) % flush_every == 0 {
+                    m.absorb(p.flush());
+                }
+            }
+            m.absorb(p.flush());
+            m.into_sorted().0
+        };
+        assert_eq!(run(1), run(7));
+        assert_eq!(run(7), run(500));
+    }
+
+    #[test]
+    fn partials_from_many_workers_merge_to_stream_totals() {
+        // Scatter a stream over 4 "workers" round-robin (worst-case key
+        // splitting) and check the merge reassembles exact totals.
+        let mut workers: Vec<PartialAgg<Count>> = (0..4).map(|_| PartialAgg::new(Count)).collect();
+        let mut truth: HashMap<Key, u64> = HashMap::new();
+        for i in 0..1_000u64 {
+            let k = i % 17;
+            workers[(i % 4) as usize].observe(k, 1);
+            *truth.entry(k).or_insert(0) += 1;
+        }
+        let mut m = MergeStage::new(Count);
+        for w in workers.iter_mut() {
+            m.absorb(w.flush());
+        }
+        let (merged, stats) = m.into_sorted();
+        assert_eq!(merged.len(), truth.len());
+        for &(k, c) in &merged {
+            assert_eq!(c, truth[&k], "key {k}");
+        }
+        assert_eq!(stats.flushes, 4);
+    }
+
+    #[test]
+    fn sum_combiner_flows_values_through_both_stages() {
+        let mut p = PartialAgg::new(Sum);
+        p.observe(9, 10);
+        p.observe(9, 32);
+        let mut m = MergeStage::new(Sum);
+        m.absorb(p.flush());
+        p.observe(9, 58);
+        m.absorb(p.flush());
+        assert_eq!(m.get(9), Some(&100));
+    }
+
+    #[test]
+    fn empty_flushes_cost_nothing() {
+        let mut m = MergeStage::new(Count);
+        m.absorb(Vec::new());
+        assert_eq!(m.stats().flushes, 0);
+        assert_eq!(m.stats().messages, 0);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn top_k_orders_by_count_then_key() {
+        let counts = vec![(5u64, 3u64), (1, 7), (9, 3), (2, 1)];
+        assert_eq!(top_k(&counts, 3), vec![(1, 7), (5, 3), (9, 3)]);
+        assert_eq!(top_k(&counts, 0), Vec::<(Key, u64)>::new());
+        assert_eq!(top_k(&counts, 99).len(), 4);
+    }
+}

@@ -1,0 +1,33 @@
+//! Two-phase aggregation — the downstream stage that turns per-worker
+//! partials into exact merged results.
+//!
+//! Every multi-choice grouping scheme in this repo (PKG, D-Choices,
+//! W-Choices, FISH) deliberately splits a hot key across several
+//! workers, so the per-worker counts the engines produce are *partial*
+//! results. The PKG and D-C/W-C papers are explicit that a downstream
+//! aggregation stage is required for correctness and is the price paid
+//! for key splitting; this module is that stage:
+//!
+//! * [`Combiner`] — the per-key reduction algebra ([`Count`], [`Sum`],
+//!   and approximate top-k via [`TopKSketch`], which reuses
+//!   [`crate::sketch::SpaceSaving`] with weighted observes).
+//! * [`PartialAgg`] — stage one: per-worker accumulators, drained into
+//!   flush batches on a configurable interval
+//!   ([`crate::config::Config::agg_flush_ms`], `--agg_flush_ms`).
+//! * [`MergeStage`] — stage two: absorbs flush batches into the final
+//!   merged map while metering the traffic key splitting costs
+//!   ([`crate::metrics::AggStats`]: flushes, entries, payload bytes,
+//!   merge time).
+//!
+//! Both engines wire this in: the simulator models flush traffic on
+//! virtual time, the runtime engine runs a real aggregator thread fed
+//! by per-worker flush channels. The `aggregation_oracle` integration
+//! tests pin the end-to-end guarantee: merged counts are element-wise
+//! equal to a single-worker Field-Grouping reference for every scheme,
+//! every flush cadence, and both engines.
+
+pub mod combiner;
+pub mod merge;
+
+pub use combiner::{Combiner, Count, Sum, TopKSketch};
+pub use merge::{top_k, MergeStage, PartialAgg};

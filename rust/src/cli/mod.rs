@@ -122,7 +122,8 @@ impl Args {
             let value = match k.as_str() {
                 "scheme" | "workload" | "identifier" | "artifacts_dir" => Value::Str(v.clone()),
                 "tuples" | "sources" | "workers" | "key_capacity" | "epoch" | "d_min"
-                | "interval" | "vnodes" | "seed" | "service_ns" | "interarrival_ns" | "batch" => {
+                | "interval" | "vnodes" | "seed" | "service_ns" | "interarrival_ns" | "batch"
+                | "agg_flush_ms" => {
                     Value::Int(v.parse().map_err(|_| CliError(format!("--{k}: bad int '{v}'")))?)
                 }
                 "zipf_z" | "alpha" | "theta_num" | "rebalance_threshold" => {
@@ -198,10 +199,11 @@ mod tests {
     #[test]
     fn batch_and_threshold_flags_apply() {
         let mut cfg = crate::config::Config::default();
-        let a = parse("--batch 1024 --rebalance_threshold 0.4", false);
+        let a = parse("--batch 1024 --rebalance_threshold 0.4 --agg_flush_ms 5", false);
         a.apply_to_config(&mut cfg).unwrap();
         assert_eq!(cfg.batch, 1024);
         assert!((cfg.rebalance_threshold - 0.4).abs() < 1e-12);
+        assert_eq!(cfg.agg_flush_ms, 5);
     }
 
     #[test]

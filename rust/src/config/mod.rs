@@ -14,6 +14,11 @@ use crate::coordinator::SchemeKind;
 /// [`Config::default`] and [`crate::engine::rt::RtOptions::default`].
 pub const DEFAULT_BATCH: usize = 256;
 
+/// Default partial-aggregate flush interval in milliseconds (wall ms in
+/// the runtime engine, virtual ms in the simulator) — shared by
+/// [`Config::default`] and [`crate::engine::rt::RtOptions::default`].
+pub const DEFAULT_AGG_FLUSH_MS: u64 = 1;
+
 /// Fully-resolved experiment configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -64,6 +69,11 @@ pub struct Config {
     /// Rebalance baseline: `max/mean − 1` local-load imbalance that
     /// triggers a hot-key migration round.
     pub rebalance_threshold: f64,
+    /// Two-phase aggregation: per-worker partial-flush interval in
+    /// milliseconds (wall ms in the runtime engine, virtual ms in the
+    /// simulator). 0 = flush only at end of stream. Smaller = fresher
+    /// merged results but more aggregation traffic (`--agg_flush_ms`).
+    pub agg_flush_ms: u64,
 }
 
 impl Default for Config {
@@ -90,6 +100,7 @@ impl Default for Config {
             artifacts_dir: "artifacts".into(),
             batch: DEFAULT_BATCH,
             rebalance_threshold: 0.2,
+            agg_flush_ms: DEFAULT_AGG_FLUSH_MS,
         }
     }
 }
@@ -194,6 +205,9 @@ impl Config {
             "rebalance_threshold" | "rebalance.threshold" => {
                 self.rebalance_threshold = v.as_float().ok_or_else(|| err("float"))?
             }
+            "agg_flush_ms" | "aggregate.flush_ms" => {
+                self.agg_flush_ms = v.as_int().ok_or_else(|| err("int"))? as u64
+            }
             other => return Err(ConfigError::UnknownKey(other.to_string())),
         }
         Ok(())
@@ -232,6 +246,14 @@ impl Config {
         }
         if self.rebalance_threshold < 0.0 {
             return Err(ConfigError::Type("rebalance_threshold must be >= 0".into()));
+        }
+        // flush intervals are ms→ns multiplied; bound well below overflow
+        // (also catches negative CLI ints wrapped via `as u64`)
+        if self.agg_flush_ms > 3_600_000 {
+            return Err(ConfigError::Type(format!(
+                "agg_flush_ms must be <= 3600000 (1h), got {}",
+                self.agg_flush_ms
+            )));
         }
         Ok(())
     }
@@ -304,6 +326,21 @@ epoch = 2000
         assert!(cfg.validate().is_err());
         // a negative CLI int wraps to a huge usize; validation must catch it
         cfg.batch = (-1i64) as usize;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn agg_flush_ms_configurable_and_bounded() {
+        let f = ConfigFile::parse("[aggregate]\nflush_ms = 25\n").unwrap();
+        let mut cfg = Config::default();
+        assert_eq!(cfg.agg_flush_ms, DEFAULT_AGG_FLUSH_MS);
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.agg_flush_ms, 25);
+        cfg.validate().unwrap();
+        cfg.agg_flush_ms = 0; // 0 = flush only at end: valid
+        cfg.validate().unwrap();
+        // a negative CLI int wraps to a huge u64; validation must catch it
+        cfg.agg_flush_ms = (-1i64) as u64;
         assert!(cfg.validate().is_err());
     }
 

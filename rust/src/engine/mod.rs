@@ -22,6 +22,15 @@
 //! Both engines drain tuples in micro-batches through
 //! [`crate::coordinator::Grouper::route_batch`]; the batch size comes
 //! from [`crate::config::Config::batch`] (`--batch` on the CLI).
+//!
+//! Both engines also run the **two-stage topology** from
+//! [`crate::aggregate`]: per-worker partial aggregates are periodically
+//! flushed to a downstream merge stage (a real aggregator thread in
+//! [`rt`], a virtual-time flush schedule in [`sim`]), so the per-worker
+//! partials every key-splitting scheme produces are reassembled into
+//! exact merged counts. The flush cadence is
+//! [`crate::config::Config::agg_flush_ms`] (`--agg_flush_ms`); the
+//! traffic it costs lands in `SimResult::agg` / `RtResult::agg`.
 
 pub mod pipeline;
 pub mod rt;

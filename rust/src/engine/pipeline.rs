@@ -126,6 +126,13 @@ impl PipelineBuilder {
         self
     }
 
+    /// Partial-aggregate flush interval in ms (wall ms in the runtime
+    /// engine, virtual ms in the simulator; 0 = flush only at end).
+    pub fn agg_flush_ms(mut self, ms: u64) -> Self {
+        self.cfg.agg_flush_ms = ms;
+        self
+    }
+
     /// PRNG seed.
     pub fn seed(mut self, seed: u64) -> Self {
         self.cfg.seed = seed;
@@ -224,7 +231,9 @@ impl PipelineBuilder {
             topology = topology.with_churn(churn, cfg.service_ns as f64);
         }
         let sources = Self::take_groupers(groupers, &cfg);
-        let sim = Simulator::new(topology, sources, cfg.interarrival_ns).with_batch(cfg.batch);
+        let sim = Simulator::new(topology, sources, cfg.interarrival_ns)
+            .with_batch(cfg.batch)
+            .with_agg_flush(cfg.agg_flush_ms.saturating_mul(1_000_000));
         let gen = by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
         SimJob { sim, gen }
     }
@@ -255,6 +264,7 @@ impl PipelineBuilder {
             per_tuple_ns,
             interarrival_ns: cfg.interarrival_ns,
             batch: cfg.batch,
+            agg_flush_ns: cfg.agg_flush_ms.saturating_mul(1_000_000),
         };
         RtJob { trace, sources, workers: cfg.workers, opts }
     }
@@ -363,6 +373,38 @@ mod tests {
         assert_eq!(r.worker_counts.iter().sum::<u64>(), 10_000);
         // shuffle spreads evenly: every worker saw traffic
         assert!(r.worker_counts.iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn builder_wires_agg_flush_into_both_engines() {
+        // flush cadence must not change the merged result, only traffic
+        let run_sim = |ms: u64| {
+            Pipeline::builder()
+                .workload("zf")
+                .scheme(SchemeKind::Pkg)
+                .sources(2)
+                .workers(4)
+                .tuples(10_000)
+                .interarrival_ns(150)
+                .agg_flush_ms(ms)
+                .build_sim()
+                .run()
+        };
+        let (a, b) = (run_sim(0), run_sim(2));
+        assert_eq!(a.merged_counts, b.merged_counts);
+        assert!(a.agg.flushes <= b.agg.flushes);
+
+        let rt = Pipeline::builder()
+            .workload("zf")
+            .scheme(SchemeKind::Pkg)
+            .sources(2)
+            .workers(4)
+            .tuples(10_000)
+            .agg_flush_ms(2)
+            .configure(|c| c.interarrival_ns = 0)
+            .build_rt()
+            .run();
+        assert_eq!(rt.merged.iter().map(|&(_, c)| c).sum::<u64>(), 10_000);
     }
 
     #[test]

@@ -15,25 +15,42 @@
 //!   memory-overhead metric), optionally burns `P_w` of CPU per tuple
 //!   to model operator cost / heterogeneity, and records the
 //!   end-to-end latency (source-emit → processing-complete) in a local
-//!   histogram.
+//!   histogram. Each worker also keeps a delta [`PartialAgg`] and
+//!   flushes it to the aggregator every [`RtOptions::agg_flush_ns`]
+//!   (plus a final drain at shutdown).
+//! * one **aggregator** thread: the topology's second stage. Absorbs
+//!   per-worker partial-flush batches into a [`MergeStage`], metering
+//!   flush traffic, payload bytes, merge time, and flush→merge latency
+//!   — the downstream aggregation the PKG paper charges against key
+//!   splitting, without which per-worker counts are only partials.
 //!
 //! No source↔worker communication happens besides the data channels —
 //! FISH's worker-state inference gets no hidden help.
 
+use crate::aggregate::{self, Count, MergeStage, PartialAgg};
 use crate::coordinator::{ClusterView, Grouper};
-use crate::metrics::Histogram;
+use crate::metrics::{AggStats, Histogram};
 use crate::workload::Trace;
+use crate::Key;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
 /// One in-flight tuple.
 struct Msg {
-    key: crate::Key,
+    key: Key,
     /// ns since pipeline start, from the source's emit clock.
     emit_ns: u64,
+}
+
+/// One partial-flush batch on its way to the aggregator.
+struct FlushMsg {
+    /// ns since pipeline start when the worker emitted the flush.
+    emit_ns: u64,
+    /// Drained per-key deltas since the worker's previous flush.
+    entries: Vec<(Key, u64)>,
 }
 
 /// Result of a runtime deployment run.
@@ -53,6 +70,13 @@ pub struct RtResult {
     pub entries: usize,
     /// Distinct keys overall.
     pub distinct_keys: usize,
+    /// Stage-two output: exact merged per-key counts, ascending by key.
+    pub merged: Vec<(Key, u64)>,
+    /// Aggregation-traffic ledger (flushes, messages, bytes, merge time).
+    pub agg: AggStats,
+    /// Flush→merge latency per flush batch (ns): how stale the merged
+    /// view runs behind the workers.
+    pub agg_latency: Histogram,
 }
 
 impl RtResult {
@@ -63,6 +87,11 @@ impl RtResult {
         } else {
             self.entries as f64 / self.distinct_keys as f64
         }
+    }
+
+    /// The `k` hottest keys by merged count, descending (exact).
+    pub fn top_k(&self, k: usize) -> Vec<(Key, u64)> {
+        aggregate::top_k(&self.merged, k)
     }
 }
 
@@ -84,6 +113,10 @@ pub struct RtOptions {
     /// Tuples routed per `route_batch` call; each batch ships at most
     /// one chunk per destination worker.
     pub batch: usize,
+    /// Partial-aggregate flush interval (wall ns); 0 = each worker
+    /// flushes only once, at shutdown. See
+    /// [`crate::config::Config::agg_flush_ms`].
+    pub agg_flush_ns: u64,
 }
 
 impl Default for RtOptions {
@@ -93,6 +126,7 @@ impl Default for RtOptions {
             per_tuple_ns: Vec::new(),
             interarrival_ns: 0,
             batch: crate::config::DEFAULT_BATCH,
+            agg_flush_ns: crate::config::DEFAULT_AGG_FLUSH_MS * 1_000_000,
         }
     }
 }
@@ -145,20 +179,41 @@ pub fn run(
 
     let epoch = Instant::now();
 
+    // ---- aggregator (stage two) ---------------------------------------
+    // Unbounded channel: flush traffic is orders of magnitude below the
+    // data path, and an unbounded lane cannot deadlock against the
+    // tuple-credit backpressure loop.
+    let (agg_tx, agg_rx) = channel::<FlushMsg>();
+    let agg_handle = thread::spawn(move || {
+        let mut stage = MergeStage::new(Count);
+        let mut lat = Histogram::new();
+        while let Ok(flush) = agg_rx.recv() {
+            let recv_ns = epoch.elapsed().as_nanos() as u64;
+            lat.record(recv_ns.saturating_sub(flush.emit_ns));
+            stage.absorb(flush.entries);
+        }
+        let (merged, stats) = stage.into_sorted();
+        (merged, stats, lat)
+    });
+
     // ---- workers -------------------------------------------------------
+    let agg_flush_ns = opts.agg_flush_ns;
     let mut worker_handles = Vec::with_capacity(n_workers);
     for (w, rx) in receivers.into_iter().enumerate() {
         let cost = per_tuple[w];
         let credits = Arc::clone(&inflight[w]);
+        let agg_tx: Sender<FlushMsg> = agg_tx.clone();
         worker_handles.push(thread::spawn(move || {
             let mut hist = Histogram::new();
             let mut count = 0u64;
-            let mut state: std::collections::HashMap<crate::Key, u64> =
-                std::collections::HashMap::new();
+            let mut state: std::collections::HashMap<Key, u64> = std::collections::HashMap::new();
+            let mut delta = PartialAgg::new(Count);
+            let mut next_flush = agg_flush_ns;
             while let Ok(chunk) = rx.recv() {
                 for msg in chunk {
                     // the actual operator: word count
                     *state.entry(msg.key).or_insert(0) += 1;
+                    delta.observe(msg.key, 1);
                     burn(cost);
                     let done_ns = epoch.elapsed().as_nanos() as u64;
                     hist.record(done_ns.saturating_sub(msg.emit_ns));
@@ -166,10 +221,32 @@ pub fn run(
                     // release one backpressure credit per processed tuple
                     credits.fetch_sub(1, Ordering::Release);
                 }
+                // partial flush: ship the delta downstream once per
+                // interval (checked at chunk granularity — the flush
+                // itself is off the per-tuple path)
+                if agg_flush_ns > 0 {
+                    let now = epoch.elapsed().as_nanos() as u64;
+                    if now >= next_flush {
+                        if !delta.is_empty() {
+                            let _ = agg_tx.send(FlushMsg { emit_ns: now, entries: delta.flush() });
+                        }
+                        next_flush = now + agg_flush_ns;
+                    }
+                }
+            }
+            // shutdown drain: whatever accumulated since the last flush
+            if !delta.is_empty() {
+                let _ = agg_tx.send(FlushMsg {
+                    emit_ns: epoch.elapsed().as_nanos() as u64,
+                    entries: delta.flush(),
+                });
             }
             (hist, count, state.len())
         }));
     }
+    // workers hold the only remaining flush senders: the aggregator
+    // exits exactly when the last worker drains
+    drop(agg_tx);
 
     // ---- sources -------------------------------------------------------
     let workers_list: Vec<usize> = (0..n_workers).collect();
@@ -270,6 +347,7 @@ pub fn run(
         counts.push(count);
         states.push(state_len);
     }
+    let (merged, agg, agg_latency) = agg_handle.join().expect("aggregator thread panicked");
     let wall_ns = epoch.elapsed().as_nanos() as u64;
     let total: u64 = counts.iter().sum();
     let entries: usize = states.iter().sum();
@@ -287,6 +365,9 @@ pub fn run(
         throughput: total as f64 / (wall_ns as f64 / 1e9),
         entries,
         distinct_keys: seen.len(),
+        merged,
+        agg,
+        agg_latency,
     }
 }
 
@@ -321,6 +402,41 @@ mod tests {
             assert!(r.throughput > 0.0);
             assert_eq!(r.latency.count(), 20_000);
         }
+    }
+
+    #[test]
+    fn merged_counts_reassemble_the_trace_exactly() {
+        // Even under shuffle grouping — every key scattered over every
+        // worker — the aggregator's merged counts equal the trace's
+        // per-key histogram, element for element.
+        let trace = small_trace();
+        let mut truth: std::collections::HashMap<Key, u64> = std::collections::HashMap::new();
+        for t in trace.tuples() {
+            *truth.entry(t.key).or_insert(0) += 1;
+        }
+        for kind in [SchemeKind::Shuffle, SchemeKind::Pkg, SchemeKind::Fish] {
+            let r = run_scheme(kind, 4, &trace);
+            assert_eq!(r.merged.len(), truth.len(), "{kind}");
+            for &(k, c) in &r.merged {
+                assert_eq!(c, truth[&k], "{kind} key {k}");
+            }
+            assert!(r.agg.flushes > 0, "{kind}");
+            assert_eq!(r.agg_latency.count(), r.agg.flushes, "{kind}");
+        }
+    }
+
+    #[test]
+    fn final_only_flush_still_merges_everything() {
+        let trace = small_trace();
+        let mut cfg = Config::default();
+        cfg.workers = 4;
+        let sources: Vec<Box<dyn Grouper>> =
+            (0..2).map(|s| make_kind(SchemeKind::Pkg, &cfg, s)).collect();
+        let opts = RtOptions { agg_flush_ns: 0, ..Default::default() };
+        let r = run(&trace, sources, 4, &opts);
+        assert_eq!(r.merged.iter().map(|&(_, c)| c).sum::<u64>(), 20_000);
+        // one shutdown drain per worker that saw traffic
+        assert!(r.agg.flushes <= 4, "flushes {}", r.agg.flushes);
     }
 
     #[test]

@@ -15,12 +15,22 @@
 //! when the last worker drains, Figs. 9–16), *latency* distribution
 //! (Fig. 2), and *memory overhead* (distinct (key, worker) state entries,
 //! Figs. 3, 11–17) — plus imbalance diagnostics.
+//!
+//! The simulated topology is **two-stage**: every worker keeps a
+//! [`PartialAgg`] of its per-key counts and flushes the delta to a
+//! downstream [`MergeStage`] whenever virtual time crosses an
+//! `agg_flush` boundary (plus a final drain, and an eager drain of any
+//! worker removed by churn). The merged counts are exact regardless of
+//! how a scheme split keys — the end-to-end correctness oracle — and
+//! the flush traffic is metered in [`SimResult::agg`], modelling the
+//! aggregation cost the PKG paper charges against key splitting.
 
 use super::topology::Topology;
+use crate::aggregate::{self, Count, MergeStage, PartialAgg};
 use crate::coordinator::{ClusterView, Grouper};
-use crate::metrics::{Histogram, Imbalance, MemoryTracker};
+use crate::metrics::{AggStats, Histogram, Imbalance, MemoryTracker};
 use crate::workload::Generator;
-use crate::WorkerId;
+use crate::{Key, WorkerId};
 
 /// Everything a simulation run produces.
 #[derive(Debug, Clone)]
@@ -46,23 +56,28 @@ pub struct SimResult {
     /// State entries that resided on workers removed by churn and thus
     /// had to migrate (Fig. 17 cost component).
     pub churn_migrations: usize,
+    /// Stage-two output: exact merged per-key counts, ascending by key.
+    /// Element-wise equal to a single-worker reference for every scheme
+    /// (the aggregation oracle).
+    pub merged_counts: Vec<(Key, u64)>,
+    /// Aggregation-traffic ledger (flushes, messages, bytes, merge time).
+    pub agg: AggStats,
 }
 
 impl SimResult {
     /// Load imbalance over worker busy-time.
     pub fn imbalance(&self) -> Imbalance {
-        let busy: Vec<f64> = self
-            .worker_busy
-            .iter()
-            .copied()
-            .filter(|&b| b > 0.0 || true)
-            .collect();
-        Imbalance::of(&busy)
+        Imbalance::of(&self.worker_busy)
     }
 
     /// Mean latency in virtual ns.
     pub fn mean_latency(&self) -> f64 {
         self.latency.mean()
+    }
+
+    /// The `k` hottest keys by merged count, descending (exact).
+    pub fn top_k(&self, k: usize) -> Vec<(Key, u64)> {
+        aggregate::top_k(&self.merged_counts, k)
     }
 }
 
@@ -76,21 +91,39 @@ pub struct Simulator {
     sources: Vec<Box<dyn Grouper>>,
     interarrival_ns: u64,
     batch: usize,
+    /// Partial-flush interval in virtual ns; 0 = flush only at end.
+    agg_flush_ns: u64,
 }
 
 impl Simulator {
     /// `sources` — one grouper per source (they route independently,
     /// exactly like Storm tasks). Routes in batches of [`DEFAULT_BATCH`]
-    /// tuples; override with [`Simulator::with_batch`].
+    /// tuples; override with [`Simulator::with_batch`]. Partial
+    /// aggregates flush every [`crate::config::DEFAULT_AGG_FLUSH_MS`]
+    /// of virtual time; override with [`Simulator::with_agg_flush`].
     pub fn new(topology: Topology, sources: Vec<Box<dyn Grouper>>, interarrival_ns: u64) -> Self {
         assert!(!sources.is_empty());
-        Simulator { topology, sources, interarrival_ns, batch: DEFAULT_BATCH }
+        Simulator {
+            topology,
+            sources,
+            interarrival_ns,
+            batch: DEFAULT_BATCH,
+            agg_flush_ns: crate::config::DEFAULT_AGG_FLUSH_MS * 1_000_000,
+        }
     }
 
     /// Set the routing batch size (tuples per `route_batch` call).
     pub fn with_batch(mut self, batch: usize) -> Self {
         assert!(batch > 0, "batch must be > 0");
         self.batch = batch;
+        self
+    }
+
+    /// Set the partial-flush interval in virtual ns (0 = only the final
+    /// end-of-stream drain). Flush cadence never changes the merged
+    /// counts — only the traffic pattern charged to [`SimResult::agg`].
+    pub fn with_agg_flush(mut self, ns: u64) -> Self {
+        self.agg_flush_ns = ns;
         self
     }
 
@@ -114,6 +147,12 @@ impl Simulator {
         let mut churn_migrations = 0usize;
         let n_sources = self.sources.len();
 
+        // stage two: per-worker partial aggregates + downstream merge
+        let mut partials: Vec<PartialAgg<Count>> =
+            (0..n_slots).map(|_| PartialAgg::new(Count)).collect();
+        let mut merge = MergeStage::new(Count);
+        let mut next_flush = self.agg_flush_ns;
+
         let mut keys: Vec<crate::Key> = Vec::with_capacity(self.batch);
         let mut assigned: Vec<WorkerId> = vec![0; self.batch];
         let mut src_keys: Vec<crate::Key> = Vec::with_capacity(self.batch);
@@ -136,6 +175,13 @@ impl Simulator {
                 let alive: std::collections::HashSet<WorkerId> =
                     self.topology.workers().iter().copied().collect();
                 churn_migrations += memory.entries_on(|w| !alive.contains(&w));
+                // a decommissioned worker drains its partial aggregate
+                // downstream before it disappears — no counts are lost
+                for (w, p) in partials.iter_mut().enumerate() {
+                    if !alive.contains(&w) && !p.is_empty() {
+                        merge.absorb(p.flush());
+                    }
+                }
             }
 
             // batch extent: full batch, capped at the next churn event
@@ -190,10 +236,34 @@ impl Simulator {
                 counts[w] += 1;
                 busy[w] += p;
                 memory.touch(keys[i - start], w);
+                partials[w].observe(keys[i - start], 1);
+            }
+
+            // periodic partial flush when virtual time crosses a flush
+            // boundary (checked at batch granularity, like the routing
+            // views — the merged result is cadence-invariant)
+            if self.agg_flush_ns > 0 {
+                let now = end as u64 * self.interarrival_ns;
+                if now >= next_flush {
+                    for p in partials.iter_mut() {
+                        if !p.is_empty() {
+                            merge.absorb(p.flush());
+                        }
+                    }
+                    next_flush = now - now % self.agg_flush_ns + self.agg_flush_ns;
+                }
             }
 
             start = end;
         }
+
+        // end-of-stream drain: every remaining partial reaches the merge
+        for p in partials.iter_mut() {
+            if !p.is_empty() {
+                merge.absorb(p.flush());
+            }
+        }
+        let (merged_counts, agg) = merge.into_sorted();
 
         let makespan = done.iter().copied().max().unwrap_or(0);
         SimResult {
@@ -207,6 +277,8 @@ impl Simulator {
             control_entries: self.sources.iter().map(|s| s.tracked_entries()).sum(),
             tuples: n,
             churn_migrations,
+            merged_counts,
+            agg,
         }
     }
 }
@@ -289,6 +361,58 @@ mod tests {
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.worker_counts, b.worker_counts);
         assert_eq!(a.entries, b.entries);
+        assert_eq!(a.merged_counts, b.merged_counts);
+        assert_eq!(a.agg.flushes, b.agg.flushes);
+        assert_eq!(a.agg.messages, b.agg.messages);
+    }
+
+    #[test]
+    fn merged_counts_reassemble_the_exact_stream_histogram() {
+        // The two-stage topology's whole point: whatever a scheme did to
+        // split keys across workers, the merge stage reassembles the
+        // exact per-key stream counts.
+        for kind in SchemeKind::all() {
+            let r = run(kind, 8, 15_000, 1.5);
+            let mut truth: std::collections::HashMap<crate::Key, u64> =
+                std::collections::HashMap::new();
+            let mut gen = crate::workload::by_name("zf", 15_000, 1.5, Config::default().seed);
+            for i in 0..15_000 {
+                *truth.entry(gen.key_at(i)).or_insert(0) += 1;
+            }
+            assert_eq!(r.merged_counts.len(), truth.len(), "{kind}");
+            for &(k, c) in &r.merged_counts {
+                assert_eq!(c, truth[&k], "{kind} key {k}");
+            }
+            assert_eq!(r.merged_counts.iter().map(|&(_, c)| c).sum::<u64>(), 15_000, "{kind}");
+            assert!(r.agg.flushes > 0, "{kind}");
+            assert_eq!(r.agg.messages as usize, r.agg.bytes as usize / 16, "{kind}");
+        }
+    }
+
+    #[test]
+    fn flush_cadence_changes_traffic_not_results() {
+        let run_with = |flush_ms: u64| {
+            let mut cfg = Config::default();
+            cfg.scheme = SchemeKind::Pkg;
+            cfg.workers = 8;
+            cfg.tuples = 30_000;
+            cfg.sources = 2;
+            cfg.interarrival_ns = 150;
+            cfg.agg_flush_ms = flush_ms;
+            run_config(&cfg)
+        };
+        let eager = run_with(1);
+        let lazy = run_with(0); // end-of-stream drain only
+        assert_eq!(eager.merged_counts, lazy.merged_counts);
+        assert!(
+            eager.agg.flushes > lazy.agg.flushes,
+            "eager {} vs lazy {}",
+            eager.agg.flushes,
+            lazy.agg.flushes
+        );
+        // lazy ships each worker's state exactly once
+        assert!(lazy.agg.flushes <= 8);
+        assert_eq!(eager.top_k(3).len(), 3);
     }
 
     #[test]
@@ -352,5 +476,8 @@ mod tests {
         assert_eq!(r.worker_counts.iter().sum::<u64>(), 30_000);
         // worker 8 only exists after tuple 20k; worker 3 stops at 10k
         assert!(r.worker_counts[8] > 0);
+        // the removed worker's partial was drained, not lost: the merge
+        // still accounts for every tuple
+        assert_eq!(r.merged_counts.iter().map(|&(_, c)| c).sum::<u64>(), 30_000);
     }
 }

@@ -37,6 +37,10 @@
 //! * [`sketch`] — frequency statistics: SpaceSaving (paper Alg. 1
 //!   intra-epoch counter set) and a count-min sketch bit-compatible with
 //!   the Pallas kernel in `python/compile/kernels/cms.py`.
+//! * [`aggregate`] — the two-phase aggregation layer: per-worker
+//!   partial aggregates flushed to a downstream merge stage, turning
+//!   the per-worker partials that key-splitting schemes produce into
+//!   exact merged results (with top-k queries via SpaceSaving reuse).
 //! * [`hashring`] — consistent hashing with virtual nodes (paper §5).
 //! * [`coordinator`] — the grouping schemes behind the batch-first
 //!   [`coordinator::Grouper`] trait: Shuffle, Field, Partial-Key,
@@ -53,6 +57,7 @@
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
+pub mod aggregate;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

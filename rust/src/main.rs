@@ -70,8 +70,20 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     t.row(&["distinct keys".into(), r.distinct_keys.to_string()]);
     t.row(&["memory vs FG".into(), ratio(r.memory_normalized)]);
     t.row(&["control entries".into(), r.control_entries.to_string()]);
+    t.row(&["agg flushes".into(), r.agg.flushes.to_string()]);
+    t.row(&["agg messages".into(), r.agg.messages.to_string()]);
+    t.row(&["agg payload".into(), format!("{} B", r.agg.bytes)]);
+    t.row(&["agg merge time".into(), ns(r.agg.merge_ns)]);
     t.row(&["wall time".into(), format!("{wall:.2?}")]);
     t.print();
+    let top = r.top_k(5);
+    if !top.is_empty() {
+        let mut tt = Table::new("hottest keys (exact merged counts)", &["key", "count"]);
+        for (k, c) in top {
+            tt.row(&[k.to_string(), c.to_string()]);
+        }
+        tt.print();
+    }
     Ok(())
 }
 
@@ -99,6 +111,10 @@ fn cmd_deploy(args: &Args) -> anyhow::Result<()> {
     t.row(&["latency p99".into(), ns(p99)]);
     t.row(&["state entries".into(), r.entries.to_string()]);
     t.row(&["memory vs FG".into(), ratio(r.memory_normalized())]);
+    t.row(&["agg flushes".into(), r.agg.flushes.to_string()]);
+    t.row(&["agg msgs/sec".into(), format!("{:.0}", r.agg.messages_per_sec(r.wall_ns))]);
+    t.row(&["agg payload".into(), format!("{} B", r.agg.bytes)]);
+    t.row(&["agg flush p99".into(), ns(r.agg_latency.quantile(0.99))]);
     t.row(&["wall time".into(), ns(r.wall_ns)]);
     t.print();
     Ok(())
@@ -166,7 +182,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: fish <sim|deploy|compare|info> [--config file.toml] [--scheme S] \
          [--workload zf|mt|am] [--tuples N] [--workers N] [--zipf_z Z] [--batch N] \
-         [--rebalance_threshold F] [--identifier native|xla-cms] [--seed N] ..."
+         [--agg_flush_ms N] [--rebalance_threshold F] [--identifier native|xla-cms] \
+         [--seed N] ..."
     );
     std::process::exit(2);
 }

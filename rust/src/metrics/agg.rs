@@ -1,0 +1,86 @@
+//! Aggregation-cost accounting — what the two-phase topology spends.
+//!
+//! Key splitting buys load balance at the price of downstream
+//! aggregation traffic (the PKG paper's explicit trade-off). This
+//! ledger makes that price visible next to the load and memory
+//! metrics: flush batches and `(key, partial)` entries shipped from
+//! workers to the merge stage, payload bytes on the wire, and the wall
+//! time the aggregator spent merging.
+
+/// Cost ledger for one run's aggregation stage.
+///
+/// Deliberately *not* `PartialEq`: `merge_ns`/`max_merge_ns` are wall
+/// clock even in the virtual-time simulator, so whole-struct equality
+/// would be nondeterministic across same-seed runs. Compare the
+/// deterministic fields (`flushes`, `messages`, `bytes`) individually.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AggStats {
+    /// Flush batches absorbed by the merge stage.
+    pub flushes: u64,
+    /// `(key, partial)` entries shipped downstream (aggregation
+    /// messages — the traffic charged against key splitting).
+    pub messages: u64,
+    /// Payload bytes shipped downstream.
+    pub bytes: u64,
+    /// Total wall time spent merging (ns).
+    pub merge_ns: u64,
+    /// Worst single merge (ns).
+    pub max_merge_ns: u64,
+}
+
+impl AggStats {
+    /// Record one absorbed flush batch.
+    pub fn record_merge(&mut self, entries: usize, payload_bytes: usize, ns: u64) {
+        self.flushes += 1;
+        self.messages += entries as u64;
+        self.bytes += payload_bytes as u64;
+        self.merge_ns += ns;
+        self.max_merge_ns = self.max_merge_ns.max(ns);
+    }
+
+    /// Aggregation messages per second over a run of `wall_ns`.
+    pub fn messages_per_sec(&self, wall_ns: u64) -> f64 {
+        if wall_ns == 0 {
+            0.0
+        } else {
+            self.messages as f64 / (wall_ns as f64 / 1e9)
+        }
+    }
+
+    /// Mean merge time per flush batch (ns), 0 when nothing flushed.
+    pub fn mean_merge_ns(&self) -> f64 {
+        if self.flushes == 0 {
+            0.0
+        } else {
+            self.merge_ns as f64 / self.flushes as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates() {
+        let mut s = AggStats::default();
+        s.record_merge(10, 160, 500);
+        s.record_merge(2, 32, 1_500);
+        assert_eq!(s.flushes, 2);
+        assert_eq!(s.messages, 12);
+        assert_eq!(s.bytes, 192);
+        assert_eq!(s.merge_ns, 2_000);
+        assert_eq!(s.max_merge_ns, 1_500);
+        assert!((s.mean_merge_ns() - 1_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rates_handle_degenerate_inputs() {
+        let s = AggStats::default();
+        assert_eq!(s.messages_per_sec(0), 0.0);
+        assert_eq!(s.mean_merge_ns(), 0.0);
+        let mut s = AggStats::default();
+        s.record_merge(100, 1_600, 10);
+        assert!((s.messages_per_sec(1_000_000_000) - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,10 +1,12 @@
 //! Measurement substrates: latency histograms, memory accounting,
-//! imbalance statistics.
+//! imbalance statistics, aggregation-cost ledgers.
 
+pub mod agg;
 pub mod histogram;
 pub mod imbalance;
 pub mod memory;
 
+pub use agg::AggStats;
 pub use histogram::Histogram;
 pub use imbalance::Imbalance;
 pub use memory::MemoryTracker;

@@ -72,10 +72,23 @@ impl Table {
 
     /// Write CSV (headers + rows) to `path`, creating parent dirs.
     pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        self.save_csv_with_meta(path, &[])
+    }
+
+    /// [`Table::save_csv`], prefixed with `# key=value` comment lines —
+    /// run metadata (scale, seed, git SHA) that travels with the series.
+    pub fn save_csv_with_meta(
+        &self,
+        path: &Path,
+        meta: &[(String, String)],
+    ) -> std::io::Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
         let mut f = std::fs::File::create(path)?;
+        for (k, v) in meta {
+            writeln!(f, "# {k}={v}")?;
+        }
         writeln!(f, "{}", self.headers.join(","))?;
         for row in &self.rows {
             let esc: Vec<String> = row
@@ -146,6 +159,21 @@ mod tests {
     fn arity_checked() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_meta_lines_precede_headers() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(&["1".into()]);
+        let dir = std::env::temp_dir().join("fish_report_meta_test");
+        let p = dir.join("t.csv");
+        t.save_csv_with_meta(
+            &p,
+            &[("seed".into(), "42".into()), ("git_sha".into(), "abc".into())],
+        )
+        .unwrap();
+        let body = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(body, "# seed=42\n# git_sha=abc\na\n1\n");
     }
 
     #[test]

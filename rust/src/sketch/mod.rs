@@ -1,7 +1,9 @@
 //! Frequency-statistics substrates.
 //!
 //! * [`spacesaving`] — the bounded counter set of paper Alg. 1 (intra-epoch
-//!   counting with ReplaceMin + inter-epoch decay).
+//!   counting with ReplaceMin + inter-epoch decay). Also serves the
+//!   aggregation layer's approximate top-k queries via weighted observes
+//!   ([`SpaceSaving::observe_weighted`], see [`crate::aggregate::TopKSketch`]).
 //! * [`countmin`] — a count-min sketch bit-compatible with the Pallas
 //!   kernel (`python/compile/kernels/cms.py`), used by the XLA-backed
 //!   identifier and by tests that cross-check the two layers.

@@ -108,8 +108,19 @@ impl SpaceSaving {
     /// Observe one occurrence of `key` (paper Alg. 1 lines 8–17).
     #[inline]
     pub fn observe(&mut self, key: Key) {
+        self.observe_weighted(key, 1.0);
+    }
+
+    /// Observe `w` occurrences of `key` at once — the shape flushed
+    /// aggregation partials arrive in (one `(key, n)` delta instead of
+    /// `n` unit observes). Equivalent to `w` calls to [`Self::observe`]
+    /// for tracked keys; on eviction the newcomer inherits `c_min + w`,
+    /// preserving the overestimate guarantee.
+    #[inline]
+    pub fn observe_weighted(&mut self, key: Key, w: f64) {
+        debug_assert!(w > 0.0, "weight must be positive, got {w}");
         if let Some(&i) = self.index.get(&key) {
-            self.slots[i].count += 1.0;
+            self.slots[i].count += w;
             self.slots[i].stamp += 1;
             if self.slots[i].count > self.max_count {
                 self.max_count = self.slots[i].count;
@@ -119,20 +130,20 @@ impl SpaceSaving {
         }
         if self.slots.len() < self.cap {
             let i = self.slots.len();
-            self.slots.push(Slot { key, count: 1.0, stamp: 0 });
+            self.slots.push(Slot { key, count: w, stamp: 0 });
             self.index.insert(key, i);
-            if self.max_count < 1.0 {
-                self.max_count = 1.0;
+            if self.max_count < w {
+                self.max_count = w;
             }
             self.push_heap(i, true);
         } else {
-            self.replace_min(key);
+            self.replace_min(key, w);
         }
     }
 
     /// ReplaceMin subroutine: evict the min-count key; the newcomer gets
-    /// `c_min + 1`. O(log K) amortised via the lazy heap.
-    fn replace_min(&mut self, key: Key) {
+    /// `c_min + w`. O(log K) amortised via the lazy heap.
+    fn replace_min(&mut self, key: Key, w: f64) {
         let i = loop {
             match self.heap.peek() {
                 None => self.rebuild_heap(), // all entries were stale
@@ -147,7 +158,7 @@ impl SpaceSaving {
         self.heap.pop();
         let old = self.slots[i];
         self.index.remove(&old.key);
-        self.slots[i] = Slot { key, count: old.count + 1.0, stamp: old.stamp + 1 };
+        self.slots[i] = Slot { key, count: old.count + w, stamp: old.stamp + 1 };
         self.index.insert(key, i);
         if self.slots[i].count > self.max_count {
             self.max_count = self.slots[i].count;
@@ -301,6 +312,33 @@ mod tests {
         let top = ss.top_n(2);
         assert_eq!(top[0], (3, 9.0));
         assert_eq!(top[1], (1, 5.0));
+    }
+
+    #[test]
+    fn weighted_observe_equals_repeated_unit_observes() {
+        let mut unit = SpaceSaving::new(4);
+        let mut weighted = SpaceSaving::new(4);
+        for (k, n) in [(1u64, 5usize), (2, 3), (3, 9)] {
+            for _ in 0..n {
+                unit.observe(k);
+            }
+            weighted.observe_weighted(k, n as f64);
+        }
+        for k in [1u64, 2, 3] {
+            assert_eq!(unit.estimate(k), weighted.estimate(k), "key {k}");
+        }
+        assert_eq!(unit.top_count(), weighted.top_count());
+    }
+
+    #[test]
+    fn weighted_eviction_inherits_cmin_plus_weight() {
+        let mut ss = SpaceSaving::new(2);
+        ss.observe_weighted(1, 10.0);
+        ss.observe_weighted(2, 4.0);
+        ss.observe_weighted(3, 6.0); // evicts key 2 (min=4): c3 = 10
+        assert!(!ss.contains(2));
+        assert_eq!(ss.estimate(3), 10.0);
+        assert_eq!(ss.len(), 2);
     }
 
     #[test]

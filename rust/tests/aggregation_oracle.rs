@@ -1,0 +1,121 @@
+//! End-to-end aggregation oracle: the two-stage topology's correctness
+//! contract, pinned across every scheme and both engines.
+//!
+//! The reference is the one configuration where no aggregation is ever
+//! needed: a single worker under Field Grouping, which trivially holds
+//! the exact per-key counts. Every other (scheme, worker-count) pair
+//! splits work — and multi-choice schemes split *keys* — so their
+//! per-worker counts are partial; the oracle asserts the downstream
+//! merge stage reassembles exactly the reference, element for element,
+//! on a fixed-seed evolving trace.
+
+use fish::config::Config;
+use fish::coordinator::SchemeKind;
+use fish::engine::Pipeline;
+use fish::Key;
+
+const TUPLES: usize = 40_000;
+const SEED: u64 = 1234;
+const Z: f64 = 1.5;
+
+fn base(kind: SchemeKind, workers: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.scheme = kind;
+    cfg.workload = "zf".into();
+    cfg.tuples = TUPLES;
+    cfg.zipf_z = Z;
+    cfg.workers = workers;
+    cfg.sources = 3;
+    cfg.seed = SEED;
+    cfg.service_ns = 1_000;
+    cfg.interarrival_ns = (cfg.service_ns / workers as u64).max(1);
+    cfg
+}
+
+/// The single-worker Field Grouping reference: exact per-key counts
+/// with no key splitting anywhere.
+fn reference() -> Vec<(Key, u64)> {
+    Pipeline::builder()
+        .config(base(SchemeKind::Field, 1))
+        .build_sim()
+        .run()
+        .merged_counts
+}
+
+#[test]
+fn sim_merged_counts_equal_single_worker_reference_for_every_scheme() {
+    let reference = reference();
+    assert_eq!(reference.iter().map(|&(_, c)| c).sum::<u64>(), TUPLES as u64);
+    for kind in SchemeKind::all() {
+        let r = Pipeline::builder().config(base(kind, 16)).build_sim().run();
+        assert_eq!(
+            r.merged_counts, reference,
+            "{kind}: merged counts diverge from the single-worker reference"
+        );
+    }
+}
+
+#[test]
+fn rt_merged_counts_equal_single_worker_reference_for_every_scheme() {
+    // The threaded engine materialises the same fixed-seed trace, so its
+    // aggregator must converge to the same exact counts — despite real
+    // thread interleaving and wall-clock flush timing.
+    let reference = reference();
+    for kind in SchemeKind::all() {
+        let mut cfg = base(kind, 8);
+        cfg.interarrival_ns = 0; // as fast as possible
+        let r = Pipeline::builder().config(cfg).per_tuple_ns(vec![0.0]).build_rt().run();
+        assert_eq!(
+            r.merged, reference,
+            "{kind}: rt merged counts diverge from the single-worker reference"
+        );
+    }
+}
+
+#[test]
+fn same_seed_produces_identical_merged_output() {
+    let run = || Pipeline::builder().config(base(SchemeKind::Fish, 16)).build_sim().run();
+    let (a, b) = (run(), run());
+    assert_eq!(a.merged_counts, b.merged_counts);
+    assert_eq!(a.top_k(20), b.top_k(20));
+    assert_eq!(a.agg.flushes, b.agg.flushes);
+    assert_eq!(a.agg.messages, b.agg.messages);
+    assert_eq!(a.agg.bytes, b.agg.bytes);
+}
+
+#[test]
+fn flush_cadence_never_changes_the_merged_result() {
+    let reference = reference();
+    for flush_ms in [0u64, 1, 7, 1_000] {
+        let mut cfg = base(SchemeKind::Pkg, 16);
+        cfg.agg_flush_ms = flush_ms;
+        let r = Pipeline::builder().config(cfg).build_sim().run();
+        assert_eq!(r.merged_counts, reference, "flush_ms={flush_ms}");
+    }
+}
+
+#[test]
+fn churn_does_not_lose_or_duplicate_merged_counts() {
+    use fish::engine::ChurnEvent;
+    let r = Pipeline::builder()
+        .config(base(SchemeKind::Fish, 8))
+        .churn(vec![
+            (10_000, ChurnEvent::Remove(3)),
+            (25_000, ChurnEvent::Add(8)),
+        ])
+        .build_sim()
+        .run();
+    // workers came and went mid-stream; the merge still accounts for
+    // every tuple exactly once
+    let reference = reference();
+    assert_eq!(r.merged_counts, reference);
+}
+
+#[test]
+fn top_k_ranking_agrees_between_engines() {
+    let sim = Pipeline::builder().config(base(SchemeKind::Fish, 8)).build_sim().run();
+    let mut cfg = base(SchemeKind::Fish, 8);
+    cfg.interarrival_ns = 0;
+    let rt = Pipeline::builder().config(cfg).per_tuple_ns(vec![0.0]).build_rt().run();
+    assert_eq!(sim.top_k(10), rt.top_k(10));
+}

@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""Gate batched-routing performance against a checked-in baseline.
+
+Usage:
+    check_perf.py CURRENT_JSON BASELINE_JSON [--threshold 0.25]
+
+CURRENT_JSON is the `BENCH_hotpath.json` a `cargo bench --bench hotpath`
+run just emitted; BASELINE_JSON is `benches/baselines/hotpath_smoke.json`.
+
+For every (scheme, workers) pair in the baseline, the *speedup* of
+batched routing over per-tuple routing (tuple_ns / b1024_ns, computed on
+the same machine in the same run) must not fall more than THRESHOLD
+below the baseline speedup. Ratios — not raw ns/op — are compared, so
+the gate is stable across runner hardware while still failing when the
+batched hot path regresses relative to the per-tuple reference.
+
+Exit status: 0 = within threshold, 1 = regression, 2 = bad input.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def index_results(doc, path):
+    results = doc.get("results")
+    if not isinstance(results, list) or not results:
+        print(f"error: {path} has no results[]", file=sys.stderr)
+        sys.exit(2)
+    out = {}
+    for row in results:
+        out[(row["scheme"], row["workers"])] = row
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed relative speedup regression (default 0.25)")
+    args = ap.parse_args()
+
+    current = index_results(load(args.current), args.current)
+    baseline = index_results(load(args.baseline), args.baseline)
+
+    failures = []
+    print(f"{'scheme':>8} {'workers':>8} {'baseline':>9} {'current':>9} {'floor':>9}  status")
+    for key, base_row in sorted(baseline.items()):
+        scheme, workers = key
+        base = base_row["speedup_b1024"]
+        floor = base * (1.0 - args.threshold)
+        cur_row = current.get(key)
+        if cur_row is None:
+            failures.append(f"{scheme}/{workers}w: missing from current results")
+            print(f"{scheme:>8} {workers:>8} {base:>9.3f} {'—':>9} {floor:>9.3f}  MISSING")
+            continue
+        cur = cur_row["speedup_b1024"]
+        ok = cur >= floor
+        print(f"{scheme:>8} {workers:>8} {base:>9.3f} {cur:>9.3f} {floor:>9.3f}  "
+              f"{'ok' if ok else 'REGRESSED'}")
+        if not ok:
+            failures.append(
+                f"{scheme}/{workers}w: batched-routing speedup {cur:.3f} fell below "
+                f"{floor:.3f} (baseline {base:.3f}, threshold {args.threshold:.0%})")
+
+    if failures:
+        print("\nperf-smoke FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print("\nperf-smoke ok: batched routing within threshold for "
+          f"{len(baseline)} scheme/worker pairs")
+
+
+if __name__ == "__main__":
+    main()
