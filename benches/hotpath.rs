@@ -3,6 +3,11 @@
 //! * per-tuple `route()` vs batched `route_batch()` ns/op for every
 //!   grouping scheme, at batch sizes 256 and 1024 — tracks the
 //!   batch-first API's amortisation win over the per-tuple path.
+//! * aggregation-path ns/op: `PartialAgg::observe` (stage-one fold),
+//!   `MergeStage` absorb (per merged entry) and the shard-routing
+//!   dispatch (`ShardRouter::shard_of`) — gated in CI as *ratios*
+//!   against the observe cost, so the two-stage path can't silently
+//!   regress relative to its own stage one.
 //! * identifier throughput: native Alg. 1 vs the XLA count-min path
 //!   (AOT Pallas kernel via PJRT), amortised per tuple.
 //!
@@ -20,6 +25,7 @@
 #[path = "support/mod.rs"]
 mod support;
 
+use fish::aggregate::{Count, MergeStage, PartialAgg, ShardRouter};
 use fish::config::Config;
 use fish::coordinator::fish::{EpochIdentifier, Identifier};
 use fish::coordinator::{make_kind, ClusterView, SchemeKind};
@@ -87,6 +93,60 @@ fn bench_route_batch(kind: SchemeKind, workers: usize, keys: &[u64], batch: usiz
     start.elapsed().as_nanos() as f64 / keys.len() as f64
 }
 
+/// Stage-one fold cost: `PartialAgg::observe` ns/op over the key stream.
+fn bench_partial_observe(keys: &[u64]) -> f64 {
+    let mut p = PartialAgg::new(Count);
+    for &k in keys.iter().take(keys.len() / 10) {
+        p.observe(k, 1);
+    }
+    let start = Instant::now();
+    for &k in keys {
+        p.observe(k, 1);
+    }
+    let ns = start.elapsed().as_nanos() as f64 / keys.len() as f64;
+    std::hint::black_box(p.len());
+    ns
+}
+
+/// Stage-two merge cost: `MergeStage::absorb` ns per merged entry, over
+/// realistic flush batches (a partial drained every `flush_every` keys).
+fn bench_merge_absorb(keys: &[u64], flush_every: usize) -> f64 {
+    let mut batches = Vec::new();
+    let mut p = PartialAgg::new(Count);
+    for (i, &k) in keys.iter().enumerate() {
+        p.observe(k, 1);
+        if (i + 1) % flush_every == 0 {
+            batches.push(p.flush());
+        }
+    }
+    if !p.is_empty() {
+        batches.push(p.flush());
+    }
+    let entries: usize = batches.iter().map(|b| b.len()).sum();
+    let mut m = MergeStage::new(Count);
+    let start = Instant::now();
+    for b in batches {
+        m.absorb(b);
+    }
+    let ns = start.elapsed().as_nanos() as f64 / entries.max(1) as f64;
+    std::hint::black_box(m.len());
+    ns
+}
+
+/// Shard-routing dispatch cost: `ShardRouter::shard_of` ns/op on an
+/// `n_shards`-way fabric (the per-entry price of scattering a flush).
+fn bench_shard_route(keys: &[u64], n_shards: usize) -> f64 {
+    let router = ShardRouter::new(n_shards);
+    for &k in keys.iter().take(keys.len() / 10) {
+        std::hint::black_box(router.shard_of(k));
+    }
+    let start = Instant::now();
+    for &k in keys {
+        std::hint::black_box(router.shard_of(k));
+    }
+    start.elapsed().as_nanos() as f64 / keys.len() as f64
+}
+
 fn bench_identifier_native(keys: &[u64], epoch: usize, cap: usize) -> f64 {
     let mut id = EpochIdentifier::new(cap, epoch, 0.2);
     let start = Instant::now();
@@ -147,11 +207,37 @@ fn main() {
     }
     support::finish_with(&opts, &t, "hotpath_route");
 
-    // machine-readable sibling of the table above (CI artifact + gate)
+    // aggregation path: stage-one observe, stage-two absorb, and the
+    // shard-routing dispatch the merge fabric adds. CI gates the
+    // *ratios* vs observe (same machine, same run), not raw ns/op.
+    let partial_ns = bench_partial_observe(&keys);
+    let absorb_ns = bench_merge_absorb(&keys, 4096);
+    let shard_ns = bench_shard_route(&keys, 8);
+    let mut ta = Table::new(
+        "aggregation path: two-stage fold + shard dispatch",
+        &["op", "ns/op", "ratio vs observe"],
+    );
+    let mut agg_json_rows: Vec<String> = Vec::new();
+    for (op, ns_op) in [
+        ("partial_observe", partial_ns),
+        ("merge_absorb", absorb_ns),
+        ("shard_route8", shard_ns),
+    ] {
+        let ratio = ns_op / partial_ns.max(1e-9);
+        ta.row(&[op.into(), f2(ns_op), format!("{ratio:.2}x")]);
+        agg_json_rows.push(format!(
+            "    {{\"op\": \"{op}\", \"ns\": {ns_op:.3}, \"ratio_vs_observe\": {ratio:.4}}}"
+        ));
+    }
+    support::finish_with(&opts, &ta, "hotpath_agg");
+
+    // machine-readable sibling of the tables above (CI artifact + gate)
     let json = format!(
-        "{{\n  \"meta\": {},\n  \"tuples\": {n},\n  \"results\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"meta\": {},\n  \"tuples\": {n},\n  \"results\": [\n{}\n  ],\n  \
+         \"agg_results\": [\n{}\n  ]\n}}\n",
         opts.meta_json(),
-        json_rows.join(",\n")
+        json_rows.join(",\n"),
+        agg_json_rows.join(",\n")
     );
     match support::save_json(&opts, "BENCH_hotpath.json", &json) {
         Ok(path) => println!("[saved {}]\n", path.display()),

@@ -10,10 +10,14 @@
 //! hot keys and pays only a little aggregation traffic to merge the
 //! partials back.
 //!
-//! The example also runs the aggregator's bounded-memory path: a
-//! [`TopKSketch`] (SpaceSaving with weighted observes) absorbing the
-//! same flush mass in O(capacity) memory, cross-checked against the
-//! exact ranking.
+//! Stage two runs as a **sharded fabric** here (`--agg_shards`-style,
+//! 4 key-range merge shards): flushes scatter across the shards, the
+//! per-shard ledgers expose the aggregation stage's own imbalance, and
+//! global top-k comes back two ways — exact (merged counts) and via the
+//! scatter-gather [`TopKGather`] front-end, whose per-shard SpaceSaving
+//! summaries answer in bounded memory with an explicit rank-error
+//! bound. A standalone [`TopKSketch`] over the merged counts shows the
+//! same machinery single-shard.
 //!
 //! ```bash
 //! cargo run --release --example topk_trending
@@ -22,10 +26,11 @@
 use fish::aggregate::TopKSketch;
 use fish::coordinator::SchemeKind;
 use fish::engine::Pipeline;
-use fish::report::{ns, ratio, Table};
+use fish::report::{f2, ns, ratio, Table};
 
 const TUPLES: usize = 150_000;
 const WORKERS: usize = 16;
+const SHARDS: usize = 4;
 const TOP: usize = 10;
 
 fn run(kind: SchemeKind) -> fish::engine::SimResult {
@@ -37,6 +42,7 @@ fn run(kind: SchemeKind) -> fish::engine::SimResult {
         .tuples(TUPLES)
         .zipf_z(1.6)
         .agg_flush_ms(1)
+        .agg_shards(SHARDS)
         // arrival rate ≈ aggregate service rate: keep workers busy
         .configure(|c| c.interarrival_ns = c.service_ns / c.workers as u64 + 1)
         .build_sim()
@@ -67,18 +73,35 @@ fn main() {
     // --- what the schemes paid for that same answer ---
     let mut cost = Table::new(
         "price per scheme: FG lags on execution, FISH pays a little merge traffic",
-        &["scheme", "makespan", "p99 latency", "agg messages", "agg payload"],
+        &["scheme", "makespan", "p99 latency", "agg messages", "agg payload", "shard imb"],
     );
     for (name, r) in [("fish", &fish_r), ("fg", &fg_r)] {
+        assert_eq!(r.shard_agg.n_shards(), SHARDS);
         cost.row(&[
             name.into(),
             ns(r.makespan),
             ns(r.latency.quantile(0.99)),
             r.agg.messages.to_string(),
             format!("{} B", r.agg.bytes),
+            f2(r.shard_agg.imbalance().relative),
         ]);
     }
     cost.print();
+
+    // --- scatter-gather: per-shard summaries answer the global query ---
+    let gathered = fish_r.gather.top(TOP);
+    let hits = gathered
+        .top
+        .iter()
+        .filter(|(k, _)| fish_top.iter().any(|&(ek, _)| ek == *k))
+        .count();
+    println!(
+        "TopKGather over {SHARDS} shards ({} tracked entries, rank-error bound {:.0}): \
+         {hits}/{TOP} of the exact top-{TOP} recovered",
+        fish_r.gather.entries(),
+        gathered.error_bound,
+    );
+    assert!(hits >= TOP * 8 / 10, "scatter-gather lost the hot set: {hits}/{TOP}");
     println!(
         "FG/FISH makespan: {} — same answer, Field Grouping just arrives later\n",
         ratio(fg_r.makespan as f64 / fish_r.makespan as f64)

@@ -131,6 +131,20 @@ impl TopKSketch {
     pub fn entries(&self) -> usize {
         self.sketch.entries()
     }
+
+    /// Overestimate bound for this sketch's estimates: 0 while under
+    /// capacity (estimates are exact), else the minimum tracked count —
+    /// every estimate `e` satisfies `true ≤ e ≤ true + error_bound()`,
+    /// and any untracked key's true mass is ≤ `error_bound()`. This is
+    /// the per-shard term in the scatter-gather rank-error bound
+    /// ([`crate::aggregate::TopKGather::error_bound`]).
+    pub fn error_bound(&self) -> f64 {
+        if self.sketch.at_capacity() {
+            self.sketch.min_count()
+        } else {
+            0.0
+        }
+    }
 }
 
 #[cfg(test)]

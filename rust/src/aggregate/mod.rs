@@ -18,16 +18,24 @@
 //!   merged map while metering the traffic key splitting costs
 //!   ([`crate::metrics::AggStats`]: flushes, entries, payload bytes,
 //!   merge time).
+//! * [`shard`] — stage two *at scale*: a fabric of key-range-partitioned
+//!   merge shards ([`ShardedMerge`] over a consistent-hash
+//!   [`ShardRouter`], `--agg_shards`) with a scatter-gather top-k
+//!   front-end ([`TopKGather`]) and per-shard imbalance accounting
+//!   ([`crate::metrics::ShardAggStats`]).
 //!
-//! Both engines wire this in: the simulator models flush traffic on
-//! virtual time, the runtime engine runs a real aggregator thread fed
-//! by per-worker flush channels. The `aggregation_oracle` integration
-//! tests pin the end-to-end guarantee: merged counts are element-wise
-//! equal to a single-worker Field-Grouping reference for every scheme,
-//! every flush cadence, and both engines.
+//! Both engines wire this in: the simulator scatters virtual-time
+//! flushes across the fabric deterministically, the runtime engine runs
+//! one real aggregator thread per shard fed by per-worker-to-shard
+//! flush channels. The `aggregation_oracle` integration tests pin the
+//! end-to-end guarantee: merged counts are element-wise equal to a
+//! single-worker Field-Grouping reference for every scheme, every flush
+//! cadence, every shard count, and both engines.
 
 pub mod combiner;
 pub mod merge;
+pub mod shard;
 
 pub use combiner::{Combiner, Count, Sum, TopKSketch};
 pub use merge::{top_k, MergeStage, PartialAgg};
+pub use shard::{GatherResult, ShardRouter, ShardedMerge, TopKGather, DEFAULT_GATHER_CAPACITY};

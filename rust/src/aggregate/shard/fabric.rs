@@ -1,0 +1,236 @@
+//! The merge-shard fabric: N key-range-partitioned [`MergeStage`]s
+//! behind one absorb surface.
+//!
+//! PR 3's single `MergeStage` made stage two correct but serial — the
+//! exact single-point bottleneck the PKG and W-Choices papers warn the
+//! downstream aggregation stage becomes at scale. [`ShardedMerge`]
+//! replaces it with a fabric of shards partitioned by key range via
+//! [`ShardRouter`]: every flush batch is scattered into per-shard
+//! sub-batches, each absorbed by its own [`MergeStage`] with its own
+//! [`crate::metrics::AggStats`] ledger, so shard load (and therefore
+//! aggregation-stage imbalance — max/mean absorbed tuples, see
+//! [`crate::metrics::ShardAggStats::imbalance`]) is measurable per
+//! grouping scheme instead of invisible inside one fold.
+//!
+//! A fabric of one shard is byte-identical to the old single stage
+//! (routing short-circuits, one ledger), which is what keeps the
+//! aggregation oracle's cross-shard-count equality checks meaningful.
+//!
+//! Shard count may change *mid-run* ([`ShardedMerge::set_shards`]):
+//! consistent hashing remaps only the affected arcs, and the final
+//! [`ShardedMerge::into_sorted`] re-merges any key whose deltas landed
+//! on two shards across the change — exactness is preserved by the
+//! combiner's commutative-monoid laws.
+
+use super::router::ShardRouter;
+use crate::aggregate::combiner::Combiner;
+use crate::aggregate::merge::MergeStage;
+use crate::metrics::ShardAggStats;
+use crate::Key;
+use std::collections::HashMap;
+
+/// Key-range-sharded stage two: a fabric of merge shards.
+pub struct ShardedMerge<C: Combiner + Clone> {
+    combiner: C,
+    router: ShardRouter,
+    shards: Vec<MergeStage<C>>,
+}
+
+impl<C: Combiner + Clone> ShardedMerge<C> {
+    /// A fabric of `n_shards` empty merge shards folding through
+    /// `combiner`.
+    pub fn new(combiner: C, n_shards: usize) -> Self {
+        let shards = (0..n_shards).map(|_| MergeStage::new(combiner.clone())).collect();
+        ShardedMerge { combiner, router: ShardRouter::new(n_shards), shards }
+    }
+
+    /// Current *routing* shard count. After a mid-run shrink, retired
+    /// shards keep their merged history (and stay visible in
+    /// [`ShardedMerge::shard_stats`]) but receive no new deltas.
+    pub fn n_shards(&self) -> usize {
+        self.router.n_shards()
+    }
+
+    /// Scatter one flush batch across the fabric: each entry lands on
+    /// the shard owning its key range and is absorbed there (one
+    /// [`crate::metrics::AggStats::record_merge`] per non-empty
+    /// sub-batch).
+    pub fn absorb(&mut self, batch: Vec<(Key, C::Acc)>) {
+        if batch.is_empty() {
+            return;
+        }
+        for (s, sub) in self.router.split(batch).into_iter().enumerate() {
+            self.absorb_on(s, sub);
+        }
+    }
+
+    /// Split a batch with the fabric's router *without* absorbing it —
+    /// for callers that feed several per-shard consumers (merge shard +
+    /// gather sketch) and want to pay the ring lookup once per entry.
+    /// Feed each sub-batch back via [`ShardedMerge::absorb_on`].
+    pub fn split(&self, batch: Vec<(Key, C::Acc)>) -> Vec<Vec<(Key, C::Acc)>> {
+        self.router.split(batch)
+    }
+
+    /// Absorb one already-split sub-batch on shard `shard` (no-op when
+    /// empty). `shard` must be a routing shard id (< the shard count
+    /// the batch was [`ShardedMerge::split`] with).
+    pub fn absorb_on(&mut self, shard: usize, sub: Vec<(Key, C::Acc)>) {
+        if !sub.is_empty() {
+            self.shards[shard].absorb(sub);
+        }
+    }
+
+    /// Grow or shrink the fabric to `n` shards mid-run. Existing merged
+    /// state stays where it is (new deltas for a remapped key go to its
+    /// new owner; [`ShardedMerge::into_sorted`] re-merges the split) —
+    /// resharding moves routing, not history.
+    pub fn set_shards(&mut self, n: usize) {
+        assert!(n > 0, "need at least one aggregator shard");
+        self.router.set_shards(n);
+        while self.shards.len() < n {
+            self.shards.push(MergeStage::new(self.combiner.clone()));
+        }
+        // shrunk shards keep their merged state until the final gather;
+        // the router just stops sending them new deltas
+    }
+
+    /// Distinct `(key, shard)` entries across the fabric. Equals the
+    /// distinct-key count unless a mid-run reshard split a key's deltas
+    /// across two shards (resolved by [`ShardedMerge::into_sorted`]).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    /// True when nothing has been merged anywhere.
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.is_empty())
+    }
+
+    /// Per-shard cost ledgers (indexed by shard id).
+    pub fn shard_stats(&self) -> ShardAggStats {
+        ShardAggStats { per_shard: self.shards.iter().map(|s| *s.stats()).collect() }
+    }
+
+    /// Finish: exact merged `(key, acc)` ascending by key — element-wise
+    /// identical to a single [`MergeStage`] over the same flushes, for
+    /// any shard count and any mid-run reshard history — plus the
+    /// per-shard ledgers.
+    pub fn into_sorted(self) -> (Vec<(Key, C::Acc)>, ShardAggStats) {
+        let stats = self.shard_stats();
+        let combiner = self.combiner;
+        let mut merged: HashMap<Key, C::Acc> = HashMap::new();
+        for shard in self.shards {
+            let (map, _) = shard.into_parts();
+            for (key, acc) in map {
+                match merged.entry(key) {
+                    std::collections::hash_map::Entry::Occupied(mut o) => {
+                        combiner.merge(o.get_mut(), &acc);
+                    }
+                    std::collections::hash_map::Entry::Vacant(v) => {
+                        v.insert(acc);
+                    }
+                }
+            }
+        }
+        let mut v: Vec<(Key, C::Acc)> = merged.into_iter().collect();
+        v.sort_unstable_by_key(|&(k, _)| k);
+        (v, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregate::combiner::Count;
+    use crate::aggregate::merge::PartialAgg;
+
+    /// Drive the same flush schedule through a single stage and an
+    /// n-shard fabric; return both sorted results.
+    fn run_both(n_shards: usize, flush_every: usize) -> (Vec<(Key, u64)>, Vec<(Key, u64)>) {
+        let keys: Vec<Key> = (0..4_000u64).map(|i| (i * i + 7) % 131).collect();
+        let mut single = MergeStage::new(Count);
+        let mut fabric = ShardedMerge::new(Count, n_shards);
+        let mut p1 = PartialAgg::new(Count);
+        let mut p2 = PartialAgg::new(Count);
+        for (i, &k) in keys.iter().enumerate() {
+            p1.observe(k, 1);
+            p2.observe(k, 1);
+            if (i + 1) % flush_every == 0 {
+                single.absorb(p1.flush());
+                fabric.absorb(p2.flush());
+            }
+        }
+        single.absorb(p1.flush());
+        fabric.absorb(p2.flush());
+        (single.into_sorted().0, fabric.into_sorted().0)
+    }
+
+    #[test]
+    fn fabric_is_byte_identical_to_single_stage() {
+        for shards in [1usize, 2, 3, 7, 16] {
+            let (single, sharded) = run_both(shards, 97);
+            assert_eq!(single, sharded, "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn per_shard_ledgers_sum_to_the_whole() {
+        let mut fabric = ShardedMerge::new(Count, 4);
+        let mut p = PartialAgg::new(Count);
+        for k in 0..500u64 {
+            p.observe(k % 37, 1);
+        }
+        fabric.absorb(p.flush());
+        let stats = fabric.shard_stats();
+        assert_eq!(stats.n_shards(), 4);
+        let total = stats.total();
+        assert_eq!(total.messages, 37);
+        assert_eq!(total.bytes, 37 * 16);
+        // one inbound batch scattered over however many shards own keys
+        assert!((1..=4).contains(&total.flushes));
+        assert!(stats.imbalance().relative >= 0.0);
+    }
+
+    #[test]
+    fn empty_batches_cost_nothing() {
+        let mut fabric: ShardedMerge<Count> = ShardedMerge::new(Count, 3);
+        fabric.absorb(Vec::new());
+        assert!(fabric.is_empty());
+        assert_eq!(fabric.shard_stats().total().flushes, 0);
+    }
+
+    #[test]
+    fn mid_run_reshard_keeps_exact_counts() {
+        // Change the shard count mid-stream: a key's deltas may land on
+        // two shards, and the final gather must still merge them back to
+        // the exact totals, deterministically.
+        let keys: Vec<Key> = (0..6_000u64).map(|i| (i * 31 + 5) % 211).collect();
+        let run = |reshard_to: &[usize]| {
+            let mut fabric = ShardedMerge::new(Count, 2);
+            let mut p = PartialAgg::new(Count);
+            for (i, &k) in keys.iter().enumerate() {
+                p.observe(k, 1);
+                if (i + 1) % 500 == 0 {
+                    fabric.absorb(p.flush());
+                }
+                if (i + 1) % 2_000 == 0 {
+                    let step = (i + 1) / 2_000 - 1;
+                    if step < reshard_to.len() {
+                        fabric.set_shards(reshard_to[step]);
+                    }
+                }
+            }
+            fabric.absorb(p.flush());
+            fabric.into_sorted().0
+        };
+        let stable = run(&[]);
+        let grown = run(&[5, 9]);
+        let shrunk_grown = run(&[1, 6]);
+        assert_eq!(stable.iter().map(|&(_, c)| c).sum::<u64>(), 6_000);
+        assert_eq!(stable, grown);
+        assert_eq!(stable, shrunk_grown);
+        // determinism across repeated resharded runs
+        assert_eq!(grown, run(&[5, 9]));
+    }
+}

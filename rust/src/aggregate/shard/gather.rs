@@ -1,0 +1,208 @@
+//! Scatter-gather top-k over the merge-shard fabric.
+//!
+//! With stage two sharded by key range, "what are the k hottest keys
+//! globally?" becomes a scatter-gather: each shard keeps a bounded
+//! [`TopKSketch`] (SpaceSaving over the flush mass it absorbed), and
+//! [`TopKGather`] answers the global query by collecting each shard's
+//! local top-k candidates and re-ranking the union.
+//!
+//! Because the router *partitions* keys, every key's whole mass lives
+//! on exactly one shard — per-key estimates never need cross-shard
+//! summation, and a shard's local ranking is over its complete share of
+//! the stream. What sharding cannot remove is SpaceSaving's own
+//! overestimate: [`TopKGather::error_bound`] reports the worst
+//! per-shard bound (the shard's minimum tracked count once it is at
+//! capacity), and every gathered estimate `e` satisfies
+//! `true ≤ e ≤ true + error_bound` — the rank-error bound: two keys
+//! whose estimates differ by more than the bound are ranked correctly,
+//! closer pairs may swap, and a true top-k key can be crowded out of
+//! the gathered list only by rivals within the bound of it.
+
+use super::router::ShardRouter;
+use crate::aggregate::combiner::TopKSketch;
+use crate::Key;
+
+/// Default per-shard candidate capacity for the engines' gather path —
+/// control-plane memory, so sized generously (`n_shards × 1024`
+/// counters total, still O(K) against millions of keys).
+pub const DEFAULT_GATHER_CAPACITY: usize = 1024;
+
+/// One answered global top-k query.
+#[derive(Debug, Clone)]
+pub struct GatherResult {
+    /// The `k` highest-estimate keys, descending (ties broken by key
+    /// ascending, so rankings are deterministic given the sketches).
+    pub top: Vec<(Key, f64)>,
+    /// Worst per-shard overestimate: every listed estimate `e`
+    /// satisfies `true ≤ e ≤ true + error_bound`. A key missing from
+    /// `top` either was never tracked by its shard's sketch (true mass
+    /// ≤ this bound) or ranks at or below the k-th listed estimate —
+    /// so only keys within the bound of each other can swap ranks.
+    pub error_bound: f64,
+}
+
+/// Scatter-gather front-end: per-shard bounded top-k summaries plus
+/// the global merge that answers queries over them.
+#[derive(Debug, Clone)]
+pub struct TopKGather {
+    router: ShardRouter,
+    shards: Vec<TopKSketch>,
+}
+
+impl TopKGather {
+    /// A gather over `n_shards` empty sketches of `capacity` counters
+    /// each, routed identically to the merge fabric.
+    pub fn new(n_shards: usize, capacity: usize) -> Self {
+        assert!(n_shards > 0, "need at least one aggregator shard");
+        TopKGather {
+            router: ShardRouter::new(n_shards),
+            shards: (0..n_shards).map(|_| TopKSketch::new(capacity)).collect(),
+        }
+    }
+
+    /// Assemble a gather from sketches the shards built themselves (the
+    /// runtime engine's per-shard aggregator threads).
+    pub fn from_shards(shards: Vec<TopKSketch>) -> Self {
+        assert!(!shards.is_empty(), "need at least one shard sketch");
+        TopKGather { router: ShardRouter::new(shards.len()), shards }
+    }
+
+    /// Shard count.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Absorb one flushed delta: `key` gained `weight` mass on its
+    /// owner shard's sketch.
+    pub fn absorb(&mut self, key: Key, weight: u64) {
+        let s = self.router.shard_of(key);
+        self.shards[s].absorb(key, weight);
+    }
+
+    /// Absorb a whole flush batch of `(key, delta)` entries.
+    pub fn absorb_batch(&mut self, batch: &[(Key, u64)]) {
+        for &(key, weight) in batch {
+            self.absorb(key, weight);
+        }
+    }
+
+    /// Absorb an already-routed sub-batch directly on shard `shard` —
+    /// for engines that split a flush once (with the merge fabric's
+    /// router, which maps identically) and feed both the merge shard
+    /// and its sketch from the same split.
+    pub fn absorb_on(&mut self, shard: usize, batch: &[(Key, u64)]) {
+        for &(key, weight) in batch {
+            self.shards[shard].absorb(key, weight);
+        }
+    }
+
+    /// Estimated mass of `key` (0 if untracked on its owner shard).
+    pub fn estimate(&self, key: Key) -> f64 {
+        self.shards[self.router.shard_of(key)].estimate(key)
+    }
+
+    /// Worst per-shard overestimate bound (0 while every shard is under
+    /// capacity — estimates are then exact).
+    pub fn error_bound(&self) -> f64 {
+        self.shards.iter().map(|s| s.error_bound()).fold(0.0, f64::max)
+    }
+
+    /// Tracked candidate entries across all shards (control-plane
+    /// memory for the scalability metric).
+    pub fn entries(&self) -> usize {
+        self.shards.iter().map(|s| s.entries()).sum()
+    }
+
+    /// Answer the global top-k: each shard contributes its local top-k
+    /// candidates, the union is re-ranked by estimate (descending, key
+    /// ascending on ties) and truncated to `k`.
+    pub fn top(&self, k: usize) -> GatherResult {
+        let mut union: Vec<(Key, f64)> = Vec::with_capacity(k * self.shards.len());
+        for shard in &self.shards {
+            union.extend(shard.top(k));
+        }
+        union.sort_unstable_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
+        });
+        union.truncate(k);
+        GatherResult { top: union, error_bound: self.error_bound() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    /// A skewed synthetic flush stream: key `k` gets `mass(k)` total,
+    /// delivered as several deltas (like periodic partial flushes).
+    fn feed(gather: &mut TopKGather, n_keys: u64) -> HashMap<Key, u64> {
+        let mut truth = HashMap::new();
+        for k in 0..n_keys {
+            let mass = 1 + 10_000 / (k + 1); // Zipf-ish: key 0 hottest
+            for piece in [mass / 2, mass - mass / 2] {
+                if piece > 0 {
+                    gather.absorb(k, piece);
+                }
+            }
+            truth.insert(k, mass);
+        }
+        truth
+    }
+
+    #[test]
+    fn exact_under_capacity_any_shard_count() {
+        for shards in [1usize, 2, 7] {
+            let mut g = TopKGather::new(shards, 4_096);
+            let truth = feed(&mut g, 500);
+            assert_eq!(g.error_bound(), 0.0, "{shards} shards under capacity");
+            let top = g.top(10).top;
+            assert_eq!(top.len(), 10);
+            for &(k, est) in &top {
+                assert_eq!(est, truth[&k] as f64, "{shards} shards, key {k}");
+            }
+            // exact estimates ⇒ exact ranking: key 0 is the hottest
+            assert_eq!(top[0].0, 0);
+        }
+    }
+
+    #[test]
+    fn overestimates_stay_within_the_reported_bound() {
+        let mut g = TopKGather::new(4, 64); // far under the 5k key space
+        let truth = feed(&mut g, 5_000);
+        let r = g.top(20);
+        assert!(r.error_bound > 0.0, "evictions must raise the bound");
+        for &(k, est) in &r.top {
+            let t = truth[&k] as f64;
+            assert!(est >= t, "key {k}: estimate {est} under truth {t}");
+            assert!(est <= t + r.error_bound, "key {k}: {est} > {t} + {}", r.error_bound);
+        }
+        // the clearly-hot head (gaps ≫ bound) is still ranked correctly
+        assert_eq!(r.top[0].0, 0);
+        assert_eq!(r.top[1].0, 1);
+    }
+
+    #[test]
+    fn gather_matches_single_sketch_semantics_on_one_shard() {
+        let mut g = TopKGather::new(1, 128);
+        let mut single = TopKSketch::new(128);
+        for k in 0..300u64 {
+            g.absorb(k, k + 1);
+            single.absorb(k, k + 1);
+        }
+        assert_eq!(g.top(5).top, single.top(5));
+        assert_eq!(g.entries(), single.entries());
+    }
+
+    #[test]
+    fn partitioning_keeps_per_key_mass_on_one_shard() {
+        let mut g = TopKGather::new(8, 1_024);
+        for _ in 0..50 {
+            g.absorb(42, 10);
+        }
+        assert_eq!(g.estimate(42), 500.0);
+        // exactly one shard tracks the key
+        let tracked = g.shards.iter().filter(|s| s.estimate(42) > 0.0).count();
+        assert_eq!(tracked, 1);
+    }
+}

@@ -1,0 +1,35 @@
+//! Sharded aggregation fabric — stage two as a parallel subsystem.
+//!
+//! The two-phase topology (PR 3) made merged results exact, but its
+//! merge path was a *single* [`crate::aggregate::MergeStage`]: every
+//! flush from every worker funnelled through one fold — precisely the
+//! downstream bottleneck the PKG and W-Choices papers identify as the
+//! cost of key splitting, and the scalability ceiling the ROADMAP
+//! flagged at 128-node scale. This module removes it:
+//!
+//! * [`ShardRouter`] — key-range partitioning over the consistent-hash
+//!   ring ([`crate::hashring`]), so the shard count can change without
+//!   remapping every key (elasticity, same argument as worker churn).
+//! * [`ShardedMerge`] — the fabric: N merge shards, each with its own
+//!   [`crate::metrics::AggStats`] ledger, absorbing scattered flush
+//!   sub-batches. One shard ≡ the old single stage, byte for byte.
+//! * [`TopKGather`] — scatter-gather front-end: per-shard
+//!   [`crate::aggregate::TopKSketch`] summaries merged into a global
+//!   top-k with an explicit rank-error bound.
+//!
+//! Both engines wire the fabric in (`--agg_shards`,
+//! [`crate::config::Config::agg_shards`]): the simulator scatters
+//! virtual-time flushes deterministically, the runtime engine runs one
+//! real aggregator thread per shard fed by per-worker-to-shard flush
+//! channels. Shard imbalance (max/mean absorbed tuples,
+//! [`crate::metrics::ShardAggStats`]) is surfaced next to the routing
+//! metrics so the aggregation stage's skew is comparable across
+//! grouping schemes.
+
+pub mod fabric;
+pub mod gather;
+pub mod router;
+
+pub use fabric::ShardedMerge;
+pub use gather::{GatherResult, TopKGather, DEFAULT_GATHER_CAPACITY};
+pub use router::{ShardId, ShardRouter, SHARD_VNODES};

@@ -1,0 +1,176 @@
+//! Key-range shard routing over the consistent-hash ring.
+//!
+//! The fabric partitions the merged key space across `n_shards`
+//! aggregator shards by reusing [`crate::hashring::HashRing`] with
+//! shard ids as the ring members. Consistent hashing is what makes the
+//! shard count *elastic*: growing the fabric from `n` to `n + 1`
+//! shards remaps only the arcs the new shard's virtual nodes land on
+//! (≈ `1/(n+1)` of the key space), instead of rehashing every key the
+//! way `key % n` would — the same monotonicity argument the paper
+//! makes for worker churn (§5), applied one stage downstream.
+//!
+//! Routing is pure and deterministic: `shard_of(key)` depends only on
+//! the key and the current shard set, never on observation order, so
+//! both engines split flush batches identically for a given
+//! `--agg_shards` and the per-shard ledgers are comparable across runs.
+
+use crate::hashring::HashRing;
+use crate::Key;
+
+/// Virtual nodes per shard on the shard ring. Fixed (rather than
+/// borrowing [`crate::config::Config::vnodes`]) so the worker→shard
+/// mapping for a given `--agg_shards` is one deterministic function of
+/// the key, identical in both engines and every test.
+pub const SHARD_VNODES: usize = 64;
+
+/// Index of an aggregator shard.
+pub type ShardId = usize;
+
+/// Key-range partitioner for the merge-shard fabric.
+#[derive(Debug, Clone)]
+pub struct ShardRouter {
+    ring: HashRing,
+    n_shards: usize,
+}
+
+impl ShardRouter {
+    /// A router over shards `0..n_shards`.
+    pub fn new(n_shards: usize) -> Self {
+        assert!(n_shards > 0, "need at least one aggregator shard");
+        ShardRouter {
+            ring: HashRing::new(&(0..n_shards).collect::<Vec<_>>(), SHARD_VNODES),
+            n_shards,
+        }
+    }
+
+    /// Current shard count.
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// The shard owning `key` (deterministic; single-shard fabrics skip
+    /// the ring lookup entirely — the dominant production default).
+    #[inline]
+    pub fn shard_of(&self, key: Key) -> ShardId {
+        if self.n_shards == 1 {
+            return 0;
+        }
+        self.ring.owner(key).expect("shard ring is never empty")
+    }
+
+    /// Grow or shrink the fabric to `n` shards (ids `0..n`). Only the
+    /// ring arcs owned by added/removed shards remap — the elasticity
+    /// property [`ShardedMerge`](super::ShardedMerge) relies on for
+    /// mid-run shard-count changes.
+    pub fn set_shards(&mut self, n: usize) {
+        assert!(n > 0, "need at least one aggregator shard");
+        for s in self.n_shards..n {
+            self.ring.add_worker(s);
+        }
+        for s in n..self.n_shards {
+            self.ring.remove_worker(s);
+        }
+        self.n_shards = n;
+    }
+
+    /// Scatter one flush batch into per-shard sub-batches
+    /// (`out[s]` = entries owned by shard `s`; some may be empty).
+    pub fn split<A>(&self, batch: Vec<(Key, A)>) -> Vec<Vec<(Key, A)>> {
+        if self.n_shards == 1 {
+            return vec![batch];
+        }
+        let mut out: Vec<Vec<(Key, A)>> = (0..self.n_shards).map(|_| Vec::new()).collect();
+        for (key, acc) in batch {
+            out[self.shard_of(key)].push((key, acc));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_deterministic_and_total() {
+        let r = ShardRouter::new(7);
+        for k in 0..2_000u64 {
+            let s = r.shard_of(k);
+            assert_eq!(s, r.shard_of(k));
+            assert!(s < 7);
+        }
+    }
+
+    #[test]
+    fn single_shard_short_circuits() {
+        let r = ShardRouter::new(1);
+        for k in 0..100u64 {
+            assert_eq!(r.shard_of(k), 0);
+        }
+        let split = r.split(vec![(1u64, 2u64), (9, 1)]);
+        assert_eq!(split.len(), 1);
+        assert_eq!(split[0].len(), 2);
+    }
+
+    #[test]
+    fn every_shard_owns_a_reasonable_share() {
+        let r = ShardRouter::new(4);
+        let mut counts = [0usize; 4];
+        for k in 0..20_000u64 {
+            counts[r.shard_of(k)] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            let share = c as f64 / 20_000.0;
+            assert!((0.10..0.45).contains(&share), "shard {s} owns {share}");
+        }
+    }
+
+    #[test]
+    fn split_preserves_every_entry_on_its_owner_shard() {
+        let r = ShardRouter::new(5);
+        let batch: Vec<(Key, u64)> = (0..1_000u64).map(|k| (k, k + 1)).collect();
+        let split = r.split(batch.clone());
+        assert_eq!(split.len(), 5);
+        assert_eq!(split.iter().map(|b| b.len()).sum::<usize>(), batch.len());
+        for (s, sub) in split.iter().enumerate() {
+            for &(k, v) in sub {
+                assert_eq!(r.shard_of(k), s);
+                assert_eq!(v, k + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn growing_the_fabric_remaps_only_a_bounded_arc() {
+        // The elasticity claim: 8 → 9 shards moves keys only onto the
+        // new shard, and only ≈ 1/9 of them.
+        let mut r = ShardRouter::new(8);
+        let before: Vec<ShardId> = (0..10_000u64).map(|k| r.shard_of(k)).collect();
+        r.set_shards(9);
+        let mut moved = 0usize;
+        for (k, &was) in before.iter().enumerate() {
+            let now = r.shard_of(k as u64);
+            if now != was {
+                assert_eq!(now, 8, "key {k} moved to an old shard");
+                moved += 1;
+            }
+        }
+        let frac = moved as f64 / 10_000.0;
+        assert!(frac < 0.25, "grow remapped {frac} of the key space");
+    }
+
+    #[test]
+    fn shrinking_only_remaps_the_removed_shards_keys() {
+        let mut r = ShardRouter::new(6);
+        let before: Vec<ShardId> = (0..10_000u64).map(|k| r.shard_of(k)).collect();
+        r.set_shards(5); // drops shard 5
+        for (k, &was) in before.iter().enumerate() {
+            let now = r.shard_of(k as u64);
+            if was != 5 {
+                assert_eq!(now, was, "key {k} moved needlessly");
+            } else {
+                assert_ne!(now, 5);
+            }
+        }
+    }
+}

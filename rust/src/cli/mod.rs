@@ -123,7 +123,7 @@ impl Args {
                 "scheme" | "workload" | "identifier" | "artifacts_dir" => Value::Str(v.clone()),
                 "tuples" | "sources" | "workers" | "key_capacity" | "epoch" | "d_min"
                 | "interval" | "vnodes" | "seed" | "service_ns" | "interarrival_ns" | "batch"
-                | "agg_flush_ms" => {
+                | "agg_flush_ms" | "agg_shards" => {
                     Value::Int(v.parse().map_err(|_| CliError(format!("--{k}: bad int '{v}'")))?)
                 }
                 "zipf_z" | "alpha" | "theta_num" | "rebalance_threshold" => {
@@ -204,6 +204,16 @@ mod tests {
         assert_eq!(cfg.batch, 1024);
         assert!((cfg.rebalance_threshold - 0.4).abs() < 1e-12);
         assert_eq!(cfg.agg_flush_ms, 5);
+    }
+
+    #[test]
+    fn agg_shards_flag_applies() {
+        let mut cfg = crate::config::Config::default();
+        let a = parse("--agg_shards 4", false);
+        a.apply_to_config(&mut cfg).unwrap();
+        assert_eq!(cfg.agg_shards, 4);
+        let bad = parse("--agg_shards nope", false);
+        assert!(bad.apply_to_config(&mut cfg).is_err());
     }
 
     #[test]

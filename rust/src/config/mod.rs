@@ -74,6 +74,13 @@ pub struct Config {
     /// simulator). 0 = flush only at end of stream. Smaller = fresher
     /// merged results but more aggregation traffic (`--agg_flush_ms`).
     pub agg_flush_ms: u64,
+    /// Number of stage-two merge shards (`--agg_shards`). 1 = the
+    /// single-aggregator topology; >1 partitions the merged key space
+    /// by key range over a consistent-hash ring and (in the runtime
+    /// engine) runs one aggregator thread per shard. Merged results are
+    /// shard-count-invariant — only parallelism and the per-shard
+    /// ledgers change.
+    pub agg_shards: usize,
 }
 
 impl Default for Config {
@@ -101,6 +108,7 @@ impl Default for Config {
             batch: DEFAULT_BATCH,
             rebalance_threshold: 0.2,
             agg_flush_ms: DEFAULT_AGG_FLUSH_MS,
+            agg_shards: 1,
         }
     }
 }
@@ -208,6 +216,9 @@ impl Config {
             "agg_flush_ms" | "aggregate.flush_ms" => {
                 self.agg_flush_ms = v.as_int().ok_or_else(|| err("int"))? as u64
             }
+            "agg_shards" | "aggregate.shards" => {
+                self.agg_shards = v.as_int().ok_or_else(|| err("int"))? as usize
+            }
             other => return Err(ConfigError::UnknownKey(other.to_string())),
         }
         Ok(())
@@ -253,6 +264,13 @@ impl Config {
             return Err(ConfigError::Type(format!(
                 "agg_flush_ms must be <= 3600000 (1h), got {}",
                 self.agg_flush_ms
+            )));
+        }
+        // upper bound also catches negative CLI ints wrapped via `as usize`
+        if self.agg_shards == 0 || self.agg_shards > 4096 {
+            return Err(ConfigError::Type(format!(
+                "agg_shards must be in 1..=4096, got {}",
+                self.agg_shards
             )));
         }
         Ok(())
@@ -341,6 +359,21 @@ epoch = 2000
         cfg.validate().unwrap();
         // a negative CLI int wraps to a huge u64; validation must catch it
         cfg.agg_flush_ms = (-1i64) as u64;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn agg_shards_configurable_and_bounded() {
+        let f = ConfigFile::parse("[aggregate]\nshards = 8\n").unwrap();
+        let mut cfg = Config::default();
+        assert_eq!(cfg.agg_shards, 1);
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.agg_shards, 8);
+        cfg.validate().unwrap();
+        cfg.agg_shards = 0;
+        assert!(cfg.validate().is_err());
+        // a negative CLI int wraps to a huge usize; validation must catch it
+        cfg.agg_shards = (-1i64) as usize;
         assert!(cfg.validate().is_err());
     }
 

@@ -25,12 +25,17 @@
 //!
 //! Both engines also run the **two-stage topology** from
 //! [`crate::aggregate`]: per-worker partial aggregates are periodically
-//! flushed to a downstream merge stage (a real aggregator thread in
-//! [`rt`], a virtual-time flush schedule in [`sim`]), so the per-worker
-//! partials every key-splitting scheme produces are reassembled into
-//! exact merged counts. The flush cadence is
+//! flushed to a downstream merge fabric of
+//! [`crate::config::Config::agg_shards`] key-range shards (one real
+//! aggregator thread per shard in [`rt`], a deterministic virtual-time
+//! flush scatter in [`sim`]), so the per-worker partials every
+//! key-splitting scheme produces are reassembled into exact merged
+//! counts — shard-count-invariantly. The flush cadence is
 //! [`crate::config::Config::agg_flush_ms`] (`--agg_flush_ms`); the
-//! traffic it costs lands in `SimResult::agg` / `RtResult::agg`.
+//! traffic it costs lands in `SimResult::agg` / `RtResult::agg`, with
+//! per-shard ledgers and the shard-imbalance summary in `shard_agg` and
+//! global approximate top-k behind the scatter-gather
+//! [`crate::aggregate::TopKGather`] front-end.
 
 pub mod pipeline;
 pub mod rt;

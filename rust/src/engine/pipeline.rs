@@ -133,6 +133,15 @@ impl PipelineBuilder {
         self
     }
 
+    /// Stage-two merge-shard count (1 = single aggregator). The runtime
+    /// engine runs one aggregator thread per shard; the simulator
+    /// scatters virtual-time flushes across the fabric. Never changes
+    /// merged results — only parallelism and the per-shard ledgers.
+    pub fn agg_shards(mut self, n: usize) -> Self {
+        self.cfg.agg_shards = n;
+        self
+    }
+
     /// PRNG seed.
     pub fn seed(mut self, seed: u64) -> Self {
         self.cfg.seed = seed;
@@ -233,7 +242,8 @@ impl PipelineBuilder {
         let sources = Self::take_groupers(groupers, &cfg);
         let sim = Simulator::new(topology, sources, cfg.interarrival_ns)
             .with_batch(cfg.batch)
-            .with_agg_flush(cfg.agg_flush_ms.saturating_mul(1_000_000));
+            .with_agg_flush(cfg.agg_flush_ms.saturating_mul(1_000_000))
+            .with_agg_shards(cfg.agg_shards);
         let gen = by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
         SimJob { sim, gen }
     }
@@ -265,6 +275,7 @@ impl PipelineBuilder {
             interarrival_ns: cfg.interarrival_ns,
             batch: cfg.batch,
             agg_flush_ns: cfg.agg_flush_ms.saturating_mul(1_000_000),
+            agg_shards: cfg.agg_shards,
         };
         RtJob { trace, sources, workers: cfg.workers, opts }
     }
@@ -405,6 +416,42 @@ mod tests {
             .build_rt()
             .run();
         assert_eq!(rt.merged.iter().map(|&(_, c)| c).sum::<u64>(), 10_000);
+    }
+
+    #[test]
+    fn builder_wires_agg_shards_into_both_engines() {
+        let sim = Pipeline::builder()
+            .workload("zf")
+            .scheme(SchemeKind::Pkg)
+            .sources(2)
+            .workers(4)
+            .tuples(10_000)
+            .interarrival_ns(150)
+            .agg_shards(3)
+            .build_sim()
+            .run();
+        assert_eq!(sim.shard_agg.n_shards(), 3);
+        assert_eq!(sim.merged_counts.iter().map(|&(_, c)| c).sum::<u64>(), 10_000);
+
+        let rt = Pipeline::builder()
+            .workload("zf")
+            .scheme(SchemeKind::Pkg)
+            .sources(2)
+            .workers(4)
+            .tuples(10_000)
+            .agg_shards(3)
+            .per_tuple_ns(vec![0.0])
+            .configure(|c| c.interarrival_ns = 0)
+            .build_rt()
+            .run();
+        assert_eq!(rt.shard_agg.n_shards(), 3);
+        assert_eq!(rt.merged, sim.merged_counts);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid pipeline config")]
+    fn zero_agg_shards_is_rejected() {
+        let _ = Pipeline::builder().agg_shards(0).build_sim();
     }
 
     #[test]

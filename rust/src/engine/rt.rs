@@ -16,20 +16,27 @@
 //!   to model operator cost / heterogeneity, and records the
 //!   end-to-end latency (source-emit → processing-complete) in a local
 //!   histogram. Each worker also keeps a delta [`PartialAgg`] and
-//!   flushes it to the aggregator every [`RtOptions::agg_flush_ns`]
-//!   (plus a final drain at shutdown).
-//! * one **aggregator** thread: the topology's second stage. Absorbs
-//!   per-worker partial-flush batches into a [`MergeStage`], metering
-//!   flush traffic, payload bytes, merge time, and flush→merge latency
-//!   — the downstream aggregation the PKG paper charges against key
-//!   splitting, without which per-worker counts are only partials.
+//!   scatters it across the aggregator shards every
+//!   [`RtOptions::agg_flush_ns`] (plus a final drain at shutdown).
+//! * one **aggregator thread per merge shard** ([`RtOptions::agg_shards`];
+//!   1 = the classic single aggregator): the topology's second stage as
+//!   a fabric. Workers scatter each flush batch by key range
+//!   ([`crate::aggregate::ShardRouter`]) and ship the per-shard
+//!   sub-batches over dedicated worker→shard channels; each shard
+//!   absorbs into its own [`MergeStage`] (metering flush traffic,
+//!   payload bytes, merge time, and flush→merge latency) and keeps a
+//!   [`TopKSketch`] of its flush mass for the scatter-gather top-k
+//!   front-end ([`crate::aggregate::TopKGather`]). This is the
+//!   downstream aggregation the PKG paper charges against key
+//!   splitting, without which per-worker counts are only partials —
+//!   now with the single-point merge bottleneck sharded away.
 //!
 //! No source↔worker communication happens besides the data channels —
 //! FISH's worker-state inference gets no hidden help.
 
-use crate::aggregate::{self, Count, MergeStage, PartialAgg};
+use crate::aggregate::{self, Count, MergeStage, PartialAgg, ShardRouter, TopKGather, TopKSketch};
 use crate::coordinator::{ClusterView, Grouper};
-use crate::metrics::{AggStats, Histogram};
+use crate::metrics::{AggStats, Histogram, ShardAggStats};
 use crate::workload::Trace;
 use crate::Key;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -70,13 +77,22 @@ pub struct RtResult {
     pub entries: usize,
     /// Distinct keys overall.
     pub distinct_keys: usize,
-    /// Stage-two output: exact merged per-key counts, ascending by key.
+    /// Stage-two output: exact merged per-key counts, ascending by key
+    /// (shard-count-invariant — the aggregation oracle).
     pub merged: Vec<(Key, u64)>,
-    /// Aggregation-traffic ledger (flushes, messages, bytes, merge time).
+    /// Whole-fabric aggregation-traffic ledger (flushes, messages,
+    /// bytes, merge time) — the totals across [`RtResult::shard_agg`].
     pub agg: AggStats,
-    /// Flush→merge latency per flush batch (ns): how stale the merged
-    /// view runs behind the workers.
+    /// Per-shard ledgers + shard-imbalance summary (max/mean absorbed
+    /// tuples across the `--agg_shards` aggregator threads).
+    pub shard_agg: ShardAggStats,
+    /// Flush→merge latency per shard flush batch (**wall** ns): how
+    /// stale the merged view runs behind the workers. (The simulator's
+    /// counterpart, `SimResult::agg_latency`, is virtual ns.)
     pub agg_latency: Histogram,
+    /// Scatter-gather top-k front-end assembled from the per-shard
+    /// sketches, queryable with an explicit rank-error bound.
+    pub gather: TopKGather,
 }
 
 impl RtResult {
@@ -117,6 +133,9 @@ pub struct RtOptions {
     /// flushes only once, at shutdown. See
     /// [`crate::config::Config::agg_flush_ms`].
     pub agg_flush_ns: u64,
+    /// Stage-two merge shards — one aggregator thread each. See
+    /// [`crate::config::Config::agg_shards`].
+    pub agg_shards: usize,
 }
 
 impl Default for RtOptions {
@@ -127,6 +146,7 @@ impl Default for RtOptions {
             interarrival_ns: 0,
             batch: crate::config::DEFAULT_BATCH,
             agg_flush_ns: crate::config::DEFAULT_AGG_FLUSH_MS * 1_000_000,
+            agg_shards: 1,
         }
     }
 }
@@ -141,6 +161,23 @@ fn burn(ns: f64) {
     let start = Instant::now();
     while (start.elapsed().as_nanos() as f64) < ns {
         std::hint::spin_loop();
+    }
+}
+
+/// Scatter one drained flush batch across the shard fabric: each
+/// non-empty per-shard sub-batch ships on its worker→shard channel
+/// stamped with the same emit time. Send errors are ignored — a gone
+/// shard only happens at shutdown.
+fn send_flush(
+    router: &ShardRouter,
+    shard_txs: &[Sender<FlushMsg>],
+    emit_ns: u64,
+    batch: Vec<(Key, u64)>,
+) {
+    for (s, entries) in router.split(batch).into_iter().enumerate() {
+        if !entries.is_empty() {
+            let _ = shard_txs[s].send(FlushMsg { emit_ns, entries });
+        }
     }
 }
 
@@ -179,22 +216,35 @@ pub fn run(
 
     let epoch = Instant::now();
 
-    // ---- aggregator (stage two) ---------------------------------------
-    // Unbounded channel: flush traffic is orders of magnitude below the
-    // data path, and an unbounded lane cannot deadlock against the
-    // tuple-credit backpressure loop.
-    let (agg_tx, agg_rx) = channel::<FlushMsg>();
-    let agg_handle = thread::spawn(move || {
-        let mut stage = MergeStage::new(Count);
-        let mut lat = Histogram::new();
-        while let Ok(flush) = agg_rx.recv() {
-            let recv_ns = epoch.elapsed().as_nanos() as u64;
-            lat.record(recv_ns.saturating_sub(flush.emit_ns));
-            stage.absorb(flush.entries);
-        }
-        let (merged, stats) = stage.into_sorted();
-        (merged, stats, lat)
-    });
+    // ---- aggregator fabric (stage two) ---------------------------------
+    // One thread per merge shard, each with its own unbounded flush
+    // channel: flush traffic is orders of magnitude below the data
+    // path, and an unbounded lane cannot deadlock against the
+    // tuple-credit backpressure loop. Workers scatter each flush by key
+    // range, so a shard only ever sees its own arc of the key space.
+    let n_shards = opts.agg_shards.max(1);
+    let router = Arc::new(ShardRouter::new(n_shards));
+    let mut shard_txs: Vec<Sender<FlushMsg>> = Vec::with_capacity(n_shards);
+    let mut shard_handles = Vec::with_capacity(n_shards);
+    for _ in 0..n_shards {
+        let (tx, rx) = channel::<FlushMsg>();
+        shard_txs.push(tx);
+        shard_handles.push(thread::spawn(move || {
+            let mut stage = MergeStage::new(Count);
+            let mut sketch = TopKSketch::new(aggregate::DEFAULT_GATHER_CAPACITY);
+            let mut lat = Histogram::new();
+            while let Ok(flush) = rx.recv() {
+                let recv_ns = epoch.elapsed().as_nanos() as u64;
+                lat.record(recv_ns.saturating_sub(flush.emit_ns));
+                for &(key, delta) in &flush.entries {
+                    sketch.absorb(key, delta);
+                }
+                stage.absorb(flush.entries);
+            }
+            let (merged, stats) = stage.into_sorted();
+            (merged, stats, sketch, lat)
+        }));
+    }
 
     // ---- workers -------------------------------------------------------
     let agg_flush_ns = opts.agg_flush_ns;
@@ -202,7 +252,8 @@ pub fn run(
     for (w, rx) in receivers.into_iter().enumerate() {
         let cost = per_tuple[w];
         let credits = Arc::clone(&inflight[w]);
-        let agg_tx: Sender<FlushMsg> = agg_tx.clone();
+        let agg_txs: Vec<Sender<FlushMsg>> = shard_txs.clone();
+        let router = Arc::clone(&router);
         worker_handles.push(thread::spawn(move || {
             let mut hist = Histogram::new();
             let mut count = 0u64;
@@ -221,14 +272,14 @@ pub fn run(
                     // release one backpressure credit per processed tuple
                     credits.fetch_sub(1, Ordering::Release);
                 }
-                // partial flush: ship the delta downstream once per
-                // interval (checked at chunk granularity — the flush
-                // itself is off the per-tuple path)
+                // partial flush: scatter the delta across the shard
+                // fabric once per interval (checked at chunk granularity
+                // — the flush itself is off the per-tuple path)
                 if agg_flush_ns > 0 {
                     let now = epoch.elapsed().as_nanos() as u64;
                     if now >= next_flush {
                         if !delta.is_empty() {
-                            let _ = agg_tx.send(FlushMsg { emit_ns: now, entries: delta.flush() });
+                            send_flush(&router, &agg_txs, now, delta.flush());
                         }
                         next_flush = now + agg_flush_ns;
                     }
@@ -236,17 +287,15 @@ pub fn run(
             }
             // shutdown drain: whatever accumulated since the last flush
             if !delta.is_empty() {
-                let _ = agg_tx.send(FlushMsg {
-                    emit_ns: epoch.elapsed().as_nanos() as u64,
-                    entries: delta.flush(),
-                });
+                let now = epoch.elapsed().as_nanos() as u64;
+                send_flush(&router, &agg_txs, now, delta.flush());
             }
             (hist, count, state.len())
         }));
     }
-    // workers hold the only remaining flush senders: the aggregator
+    // workers hold the only remaining flush senders: each shard thread
     // exits exactly when the last worker drains
-    drop(agg_tx);
+    drop(shard_txs);
 
     // ---- sources -------------------------------------------------------
     let workers_list: Vec<usize> = (0..n_workers).collect();
@@ -347,7 +396,24 @@ pub fn run(
         counts.push(count);
         states.push(state_len);
     }
-    let (merged, agg, agg_latency) = agg_handle.join().expect("aggregator thread panicked");
+    // gather the fabric: shard results arrive in shard-id order, keys
+    // are disjoint across shards, so concat + sort reproduces the
+    // single-aggregator ordering byte for byte
+    let mut merged: Vec<(Key, u64)> = Vec::new();
+    let mut per_shard: Vec<AggStats> = Vec::with_capacity(n_shards);
+    let mut sketches: Vec<TopKSketch> = Vec::with_capacity(n_shards);
+    let mut agg_latency = Histogram::new();
+    for h in shard_handles {
+        let (m, stats, sketch, lat) = h.join().expect("aggregator shard thread panicked");
+        merged.extend(m);
+        per_shard.push(stats);
+        sketches.push(sketch);
+        agg_latency.merge(&lat);
+    }
+    merged.sort_unstable_by_key(|&(k, _)| k);
+    let shard_agg = ShardAggStats { per_shard };
+    let agg = shard_agg.total();
+    let gather = TopKGather::from_shards(sketches);
     let wall_ns = epoch.elapsed().as_nanos() as u64;
     let total: u64 = counts.iter().sum();
     let entries: usize = states.iter().sum();
@@ -367,7 +433,9 @@ pub fn run(
         distinct_keys: seen.len(),
         merged,
         agg,
+        shard_agg,
         agg_latency,
+        gather,
     }
 }
 
@@ -376,7 +444,7 @@ mod tests {
     use super::*;
     use crate::config::Config;
     use crate::coordinator::{make_kind, SchemeKind};
-    use crate::workload::{materialise, by_name};
+    use crate::workload::{by_name, materialise};
 
     fn small_trace() -> Arc<Trace> {
         let mut gen = by_name("zf", 20_000, 1.5, 7);
@@ -423,6 +491,37 @@ mod tests {
             assert!(r.agg.flushes > 0, "{kind}");
             assert_eq!(r.agg_latency.count(), r.agg.flushes, "{kind}");
         }
+    }
+
+    #[test]
+    fn sharded_fabric_merges_identically_to_single_aggregator() {
+        let trace = small_trace();
+        let run_with = |shards: usize| {
+            let mut cfg = Config::default();
+            cfg.workers = 4;
+            let sources: Vec<Box<dyn Grouper>> =
+                (0..2).map(|s| make_kind(SchemeKind::Pkg, &cfg, s)).collect();
+            let opts = RtOptions { agg_shards: shards, ..Default::default() };
+            run(&trace, sources, 4, &opts)
+        };
+        let single = run_with(1);
+        let sharded = run_with(4);
+        // wall-clock flush timing varies run to run, but the merged
+        // output is exact either way — and byte-identical across fabrics
+        assert_eq!(single.merged, sharded.merged);
+        assert_eq!(single.top_k(10), sharded.top_k(10));
+        assert_eq!(single.shard_agg.n_shards(), 1);
+        assert_eq!(sharded.shard_agg.n_shards(), 4);
+        for r in [&single, &sharded] {
+            assert_eq!(
+                r.shard_agg.per_shard.iter().map(|s| s.messages).sum::<u64>(),
+                r.agg.messages
+            );
+            assert_eq!(r.agg_latency.count(), r.agg.flushes);
+            assert_eq!(r.gather.n_shards(), r.shard_agg.n_shards());
+        }
+        // every shard that absorbed traffic is visible in the ledger
+        assert!(sharded.shard_agg.per_shard.iter().any(|s| s.messages > 0));
     }
 
     #[test]

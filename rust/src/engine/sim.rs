@@ -17,18 +17,22 @@
 //! Figs. 3, 11–17) — plus imbalance diagnostics.
 //!
 //! The simulated topology is **two-stage**: every worker keeps a
-//! [`PartialAgg`] of its per-key counts and flushes the delta to a
-//! downstream [`MergeStage`] whenever virtual time crosses an
-//! `agg_flush` boundary (plus a final drain, and an eager drain of any
-//! worker removed by churn). The merged counts are exact regardless of
-//! how a scheme split keys — the end-to-end correctness oracle — and
-//! the flush traffic is metered in [`SimResult::agg`], modelling the
-//! aggregation cost the PKG paper charges against key splitting.
+//! [`PartialAgg`] of its per-key counts and flushes the delta downstream
+//! whenever virtual time crosses an `agg_flush` boundary (plus a final
+//! drain, and an eager drain of any worker removed by churn). Stage two
+//! is a [`ShardedMerge`] fabric (`--agg_shards` key-range merge shards;
+//! one shard ≡ the single aggregator): each flush is scattered across
+//! the shards deterministically, with a [`TopKGather`] absorbing the
+//! same deltas for bounded-memory approximate top-k. The merged counts
+//! are exact regardless of how a scheme split keys *or* how many shards
+//! merged them — the end-to-end correctness oracle — and the flush
+//! traffic is metered per shard in [`SimResult::shard_agg`], modelling
+//! the aggregation cost the PKG paper charges against key splitting.
 
 use super::topology::Topology;
-use crate::aggregate::{self, Count, MergeStage, PartialAgg};
+use crate::aggregate::{self, Count, PartialAgg, ShardedMerge, TopKGather};
 use crate::coordinator::{ClusterView, Grouper};
-use crate::metrics::{AggStats, Histogram, Imbalance, MemoryTracker};
+use crate::metrics::{AggStats, Histogram, Imbalance, MemoryTracker, ShardAggStats};
 use crate::workload::Generator;
 use crate::{Key, WorkerId};
 
@@ -58,10 +62,24 @@ pub struct SimResult {
     pub churn_migrations: usize,
     /// Stage-two output: exact merged per-key counts, ascending by key.
     /// Element-wise equal to a single-worker reference for every scheme
-    /// (the aggregation oracle).
+    /// and every shard count (the aggregation oracle).
     pub merged_counts: Vec<(Key, u64)>,
-    /// Aggregation-traffic ledger (flushes, messages, bytes, merge time).
+    /// Whole-fabric aggregation-traffic ledger (flushes, messages,
+    /// bytes, merge time) — the totals across [`SimResult::shard_agg`].
     pub agg: AggStats,
+    /// Per-shard ledgers + shard-imbalance summary (max/mean absorbed
+    /// tuples across the `--agg_shards` merge shards).
+    pub shard_agg: ShardAggStats,
+    /// Flush staleness in **virtual** ns: at each worker flush, the age
+    /// of the oldest delta it could be carrying (time since that
+    /// worker's previous flush). The sim analogue of the runtime
+    /// engine's wall-clock flush→merge latency — how far the merged
+    /// view can trail the workers.
+    pub agg_latency: Histogram,
+    /// Scatter-gather top-k front-end: per-shard SpaceSaving summaries
+    /// of the flush mass, queryable via [`TopKGather::top`] with an
+    /// explicit rank-error bound.
+    pub gather: TopKGather,
 }
 
 impl SimResult {
@@ -84,6 +102,45 @@ impl SimResult {
 /// Default routing batch size (see [`crate::config::Config::batch`]).
 pub use crate::config::DEFAULT_BATCH;
 
+/// Stage-two state for one simulation run: the merge-shard fabric, the
+/// scatter-gather top-k sketches, and the staleness bookkeeping every
+/// flush site shares (periodic, churn drain, end-of-stream drain).
+struct StageTwo {
+    merge: ShardedMerge<Count>,
+    gather: TopKGather,
+    /// Virtual-ns staleness recorded at each worker flush.
+    staleness: Histogram,
+    /// Per-slot virtual time of the previous flush.
+    last_flush: Vec<u64>,
+}
+
+impl StageTwo {
+    fn new(n_shards: usize, n_slots: usize) -> Self {
+        StageTwo {
+            merge: ShardedMerge::new(Count, n_shards),
+            gather: TopKGather::new(n_shards, crate::aggregate::DEFAULT_GATHER_CAPACITY),
+            staleness: Histogram::new(),
+            last_flush: vec![0; n_slots],
+        }
+    }
+
+    /// Flush worker `w`'s partial at virtual time `now` (no-op when the
+    /// partial is empty): record the delta's staleness, then route the
+    /// batch once and feed each per-shard sub-batch to both that
+    /// shard's gather sketch and its merge stage.
+    fn flush(&mut self, w: usize, now: u64, partial: &mut PartialAgg<Count>) {
+        if partial.is_empty() {
+            return;
+        }
+        self.staleness.record(now.saturating_sub(self.last_flush[w]));
+        self.last_flush[w] = now;
+        for (s, sub) in self.merge.split(partial.flush()).into_iter().enumerate() {
+            self.gather.absorb_on(s, &sub);
+            self.merge.absorb_on(s, sub);
+        }
+    }
+}
+
 /// The simulator: drives one workload through one scheme, draining
 /// tuples in micro-batches through [`Grouper::route_batch`].
 pub struct Simulator {
@@ -93,6 +150,8 @@ pub struct Simulator {
     batch: usize,
     /// Partial-flush interval in virtual ns; 0 = flush only at end.
     agg_flush_ns: u64,
+    /// Stage-two merge shards (1 = single aggregator).
+    agg_shards: usize,
 }
 
 impl Simulator {
@@ -109,6 +168,7 @@ impl Simulator {
             interarrival_ns,
             batch: DEFAULT_BATCH,
             agg_flush_ns: crate::config::DEFAULT_AGG_FLUSH_MS * 1_000_000,
+            agg_shards: 1,
         }
     }
 
@@ -124,6 +184,15 @@ impl Simulator {
     /// counts — only the traffic pattern charged to [`SimResult::agg`].
     pub fn with_agg_flush(mut self, ns: u64) -> Self {
         self.agg_flush_ns = ns;
+        self
+    }
+
+    /// Set the stage-two shard count (1 = single aggregator). Shard
+    /// count never changes the merged counts — only parallelism and the
+    /// per-shard ledgers in [`SimResult::shard_agg`].
+    pub fn with_agg_shards(mut self, n: usize) -> Self {
+        assert!(n > 0, "agg_shards must be > 0");
+        self.agg_shards = n;
         self
     }
 
@@ -147,10 +216,10 @@ impl Simulator {
         let mut churn_migrations = 0usize;
         let n_sources = self.sources.len();
 
-        // stage two: per-worker partial aggregates + downstream merge
+        // stage two: per-worker partial aggregates + sharded merge fabric
         let mut partials: Vec<PartialAgg<Count>> =
             (0..n_slots).map(|_| PartialAgg::new(Count)).collect();
-        let mut merge = MergeStage::new(Count);
+        let mut stage2 = StageTwo::new(self.agg_shards, n_slots);
         let mut next_flush = self.agg_flush_ns;
 
         let mut keys: Vec<crate::Key> = Vec::with_capacity(self.batch);
@@ -178,8 +247,8 @@ impl Simulator {
                 // a decommissioned worker drains its partial aggregate
                 // downstream before it disappears — no counts are lost
                 for (w, p) in partials.iter_mut().enumerate() {
-                    if !alive.contains(&w) && !p.is_empty() {
-                        merge.absorb(p.flush());
+                    if !alive.contains(&w) {
+                        stage2.flush(w, view.now, p);
                     }
                 }
             }
@@ -245,10 +314,8 @@ impl Simulator {
             if self.agg_flush_ns > 0 {
                 let now = end as u64 * self.interarrival_ns;
                 if now >= next_flush {
-                    for p in partials.iter_mut() {
-                        if !p.is_empty() {
-                            merge.absorb(p.flush());
-                        }
+                    for (w, p) in partials.iter_mut().enumerate() {
+                        stage2.flush(w, now, p);
                     }
                     next_flush = now - now % self.agg_flush_ns + self.agg_flush_ns;
                 }
@@ -258,12 +325,12 @@ impl Simulator {
         }
 
         // end-of-stream drain: every remaining partial reaches the merge
-        for p in partials.iter_mut() {
-            if !p.is_empty() {
-                merge.absorb(p.flush());
-            }
+        let end_of_stream = n as u64 * self.interarrival_ns;
+        for (w, p) in partials.iter_mut().enumerate() {
+            stage2.flush(w, end_of_stream, p);
         }
-        let (merged_counts, agg) = merge.into_sorted();
+        let StageTwo { merge, gather, staleness, .. } = stage2;
+        let (merged_counts, shard_agg) = merge.into_sorted();
 
         let makespan = done.iter().copied().max().unwrap_or(0);
         SimResult {
@@ -278,7 +345,10 @@ impl Simulator {
             tuples: n,
             churn_migrations,
             merged_counts,
-            agg,
+            agg: shard_agg.total(),
+            shard_agg,
+            agg_latency: staleness,
+            gather,
         }
     }
 }
@@ -413,6 +483,37 @@ mod tests {
         // lazy ships each worker's state exactly once
         assert!(lazy.agg.flushes <= 8);
         assert_eq!(eager.top_k(3).len(), 3);
+    }
+
+    #[test]
+    fn sharded_stage_two_matches_single_aggregator() {
+        let run_with = |shards: usize| {
+            let mut cfg = Config::default();
+            cfg.scheme = SchemeKind::Fish;
+            cfg.workers = 8;
+            cfg.tuples = 20_000;
+            cfg.sources = 2;
+            cfg.interarrival_ns = 150;
+            cfg.agg_shards = shards;
+            run_config(&cfg)
+        };
+        let single = run_with(1);
+        let sharded = run_with(4);
+        // the fabric never changes the answer, only who merged what
+        assert_eq!(single.merged_counts, sharded.merged_counts);
+        assert_eq!(single.agg.messages, sharded.agg.messages);
+        assert_eq!(single.agg.bytes, sharded.agg.bytes);
+        assert_eq!(single.shard_agg.n_shards(), 1);
+        assert_eq!(sharded.shard_agg.n_shards(), 4);
+        assert_eq!(single.shard_agg.imbalance().relative, 0.0);
+        assert_eq!(
+            sharded.shard_agg.per_shard.iter().map(|s| s.messages).sum::<u64>(),
+            sharded.agg.messages
+        );
+        // every flush recorded a virtual staleness sample
+        assert!(sharded.agg_latency.count() > 0);
+        // the gather tracked the flush mass on both topologies
+        assert_eq!(single.gather.top(5).top[0].0, sharded.gather.top(5).top[0].0);
     }
 
     #[test]

@@ -38,9 +38,13 @@
 //!   intra-epoch counter set) and a count-min sketch bit-compatible with
 //!   the Pallas kernel in `python/compile/kernels/cms.py`.
 //! * [`aggregate`] — the two-phase aggregation layer: per-worker
-//!   partial aggregates flushed to a downstream merge stage, turning
+//!   partial aggregates flushed to a downstream merge fabric of
+//!   key-range shards (`--agg_shards`, consistent-hash routed), turning
 //!   the per-worker partials that key-splitting schemes produce into
-//!   exact merged results (with top-k queries via SpaceSaving reuse).
+//!   exact merged results, with global top-k answered exactly from the
+//!   merged counts or approximately via the scatter-gather
+//!   [`aggregate::TopKGather`] (per-shard SpaceSaving summaries with a
+//!   rank-error bound).
 //! * [`hashring`] — consistent hashing with virtual nodes (paper §5).
 //! * [`coordinator`] — the grouping schemes behind the batch-first
 //!   [`coordinator::Grouper`] trait: Shuffle, Field, Partial-Key,

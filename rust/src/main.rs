@@ -73,7 +73,11 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     t.row(&["agg flushes".into(), r.agg.flushes.to_string()]);
     t.row(&["agg messages".into(), r.agg.messages.to_string()]);
     t.row(&["agg payload".into(), format!("{} B", r.agg.bytes)]);
-    t.row(&["agg merge time".into(), ns(r.agg.merge_ns)]);
+    t.row(&["agg merge time (wall)".into(), ns(r.agg.merge_ns)]);
+    t.row(&["agg shards".into(), r.shard_agg.n_shards().to_string()]);
+    t.row(&["shard imbalance max/mean-1".into(), f2(r.shard_agg.imbalance().relative)]);
+    // sim flush latency is *virtual* delta staleness, not wall transit
+    t.row(&["agg staleness p99 (virtual)".into(), ns(r.agg_latency.quantile(0.99))]);
     t.row(&["wall time".into(), format!("{wall:.2?}")]);
     t.print();
     let top = r.top_k(5);
@@ -114,7 +118,10 @@ fn cmd_deploy(args: &Args) -> anyhow::Result<()> {
     t.row(&["agg flushes".into(), r.agg.flushes.to_string()]);
     t.row(&["agg msgs/sec".into(), format!("{:.0}", r.agg.messages_per_sec(r.wall_ns))]);
     t.row(&["agg payload".into(), format!("{} B", r.agg.bytes)]);
-    t.row(&["agg flush p99".into(), ns(r.agg_latency.quantile(0.99))]);
+    t.row(&["agg shards".into(), r.shard_agg.n_shards().to_string()]);
+    t.row(&["shard imbalance max/mean-1".into(), f2(r.shard_agg.imbalance().relative)]);
+    // rt flush latency is wall-clock flush→merge transit per shard batch
+    t.row(&["agg flush p99 (wall)".into(), ns(r.agg_latency.quantile(0.99))]);
     t.row(&["wall time".into(), ns(r.wall_ns)]);
     t.print();
     Ok(())
@@ -125,9 +132,25 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
     let worker_counts: Vec<usize> = args
         .get_list("worker-counts", &[16usize, 32, 64, 128])
         .map_err(|e| anyhow::anyhow!("{e}"))?;
+    // two-stage cost columns: aggregation traffic (msgs the merge fabric
+    // absorbed), merged-count staleness (virtual flush p99 — how far the
+    // merged view trails the workers), and shard imbalance across the
+    // --agg_shards merge shards
     let mut t = Table::new(
-        &format!("compare on {} ({} tuples)", base.workload, base.tuples),
-        &["workers", "scheme", "exec (vs SG)", "p99", "mem (vs FG)"],
+        &format!(
+            "compare on {} ({} tuples, {} agg shards)",
+            base.workload, base.tuples, base.agg_shards
+        ),
+        &[
+            "workers",
+            "scheme",
+            "exec (vs SG)",
+            "p99",
+            "mem (vs FG)",
+            "agg msgs",
+            "flush p99 (virt)",
+            "shard imb",
+        ],
     );
     for &w in &worker_counts {
         let mut sg_makespan = 0u64;
@@ -151,6 +174,9 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
                 exec,
                 ns(r.latency.quantile(0.99)),
                 ratio(r.memory_normalized),
+                r.agg.messages.to_string(),
+                ns(r.agg_latency.quantile(0.99)),
+                f2(r.shard_agg.imbalance().relative),
             ]);
         }
     }
@@ -182,8 +208,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: fish <sim|deploy|compare|info> [--config file.toml] [--scheme S] \
          [--workload zf|mt|am] [--tuples N] [--workers N] [--zipf_z Z] [--batch N] \
-         [--agg_flush_ms N] [--rebalance_threshold F] [--identifier native|xla-cms] \
-         [--seed N] ..."
+         [--agg_flush_ms N] [--agg_shards N] [--rebalance_threshold F] \
+         [--identifier native|xla-cms] [--seed N] ..."
     );
     std::process::exit(2);
 }

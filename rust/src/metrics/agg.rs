@@ -6,6 +6,22 @@
 //! metrics: flush batches and `(key, partial)` entries shipped from
 //! workers to the merge stage, payload bytes on the wire, and the wall
 //! time the aggregator spent merging.
+//!
+//! With the merge stage sharded (`--agg_shards`,
+//! [`crate::aggregate::ShardedMerge`]), each shard keeps its own
+//! [`AggStats`]; [`ShardAggStats`] holds the per-shard ledgers plus the
+//! shard-imbalance summary (max/mean absorbed tuples) that tells you
+//! whether the aggregation stage itself is skewed.
+//!
+//! **Units.** `merge_ns`/`max_merge_ns` are *wall-clock* nanoseconds in
+//! **both** engines (the simulator really spends that time merging,
+//! virtual time just doesn't advance for it). Flush-*latency*
+//! histograms are engine-specific and live on the results, not here:
+//! `SimResult::agg_latency` is **virtual** ns (delta staleness at each
+//! flush), `RtResult::agg_latency` is **wall** ns (flush→merge
+//! transit); the report tables label each accordingly.
+
+use super::imbalance::Imbalance;
 
 /// Cost ledger for one run's aggregation stage.
 ///
@@ -55,6 +71,54 @@ impl AggStats {
             self.merge_ns as f64 / self.flushes as f64
         }
     }
+
+    /// Fold another ledger into this one (shard totals, engine joins).
+    pub fn absorb(&mut self, other: &AggStats) {
+        self.flushes += other.flushes;
+        self.messages += other.messages;
+        self.bytes += other.bytes;
+        self.merge_ns += other.merge_ns;
+        self.max_merge_ns = self.max_merge_ns.max(other.max_merge_ns);
+    }
+}
+
+/// Per-shard cost ledgers for a sharded merge fabric, indexed by shard
+/// id — the observable that turns "is stage two itself skewed?" from a
+/// guess into a metric.
+#[derive(Debug, Clone, Default)]
+pub struct ShardAggStats {
+    /// One ledger per merge shard.
+    pub per_shard: Vec<AggStats>,
+}
+
+impl ShardAggStats {
+    /// Ledger for a single-shard (unsharded) fabric.
+    pub fn single(stats: AggStats) -> Self {
+        ShardAggStats { per_shard: vec![stats] }
+    }
+
+    /// Number of shards accounted for.
+    pub fn n_shards(&self) -> usize {
+        self.per_shard.len()
+    }
+
+    /// Whole-fabric totals (sum of every shard's ledger; worst single
+    /// merge is the max across shards).
+    pub fn total(&self) -> AggStats {
+        let mut out = AggStats::default();
+        for s in &self.per_shard {
+            out.absorb(s);
+        }
+        out
+    }
+
+    /// Shard-load imbalance over absorbed tuples (`messages` per
+    /// shard): `relative` is the max/mean − 1 figure the report tables
+    /// print. 0 for a single shard by construction.
+    pub fn imbalance(&self) -> Imbalance {
+        let msgs: Vec<u64> = self.per_shard.iter().map(|s| s.messages).collect();
+        Imbalance::of_counts(&msgs)
+    }
 }
 
 #[cfg(test)]
@@ -82,5 +146,36 @@ mod tests {
         let mut s = AggStats::default();
         s.record_merge(100, 1_600, 10);
         assert!((s.messages_per_sec(1_000_000_000) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shard_stats_total_sums_and_maxes() {
+        let mut a = AggStats::default();
+        a.record_merge(10, 160, 500);
+        let mut b = AggStats::default();
+        b.record_merge(30, 480, 2_000);
+        b.record_merge(20, 320, 100);
+        let stats = ShardAggStats { per_shard: vec![a, b] };
+        assert_eq!(stats.n_shards(), 2);
+        let t = stats.total();
+        assert_eq!(t.flushes, 3);
+        assert_eq!(t.messages, 60);
+        assert_eq!(t.bytes, 960);
+        assert_eq!(t.merge_ns, 2_600);
+        assert_eq!(t.max_merge_ns, 2_000);
+    }
+
+    #[test]
+    fn shard_imbalance_reflects_absorbed_tuples() {
+        let mut hot = AggStats::default();
+        hot.record_merge(90, 1_440, 1);
+        let mut cold = AggStats::default();
+        cold.record_merge(10, 160, 1);
+        let stats = ShardAggStats { per_shard: vec![hot, cold] };
+        // max/mean = 90/50 → relative 0.8
+        assert!((stats.imbalance().relative - 0.8).abs() < 1e-12);
+        let single = ShardAggStats::single(hot);
+        assert_eq!(single.imbalance().relative, 0.0);
+        assert_eq!(single.n_shards(), 1);
     }
 }

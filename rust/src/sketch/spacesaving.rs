@@ -222,6 +222,26 @@ impl SpaceSaving {
     pub fn entries(&self) -> usize {
         self.slots.len()
     }
+
+    /// True once the counter set is full — from then on estimates may
+    /// overestimate (ReplaceMin inheritance) by up to
+    /// [`SpaceSaving::min_count`].
+    pub fn at_capacity(&self) -> bool {
+        self.slots.len() == self.cap
+    }
+
+    /// Smallest tracked count (0 when empty). Without decay this is
+    /// nondecreasing, so it bounds every past ReplaceMin inheritance:
+    /// any estimate `e` satisfies `true ≤ e ≤ true + min_count()`, and
+    /// any *untracked* key's true count is ≤ `min_count()`. O(K) scan —
+    /// query/report path, not the per-observe hot path.
+    pub fn min_count(&self) -> f64 {
+        if self.slots.is_empty() {
+            0.0
+        } else {
+            self.slots.iter().map(|s| s.count).fold(f64::INFINITY, f64::min)
+        }
+    }
 }
 
 #[cfg(test)]

@@ -119,3 +119,154 @@ fn top_k_ranking_agrees_between_engines() {
     let rt = Pipeline::builder().config(cfg).per_tuple_ns(vec![0.0]).build_rt().run();
     assert_eq!(sim.top_k(10), rt.top_k(10));
 }
+
+// ---- sharded aggregation fabric ---------------------------------------
+//
+// The shard-count dimension of the oracle: for any `--agg_shards`,
+// merged counts and exact top-k must be byte-identical to the
+// single-aggregator reference on both engines — sharding changes who
+// merges, never what is merged.
+
+#[test]
+fn sim_merged_counts_are_shard_count_invariant() {
+    let reference = reference();
+    let ref_top = fish::aggregate::top_k(&reference, 10);
+    for shards in [1usize, 2, 7] {
+        let mut cfg = base(SchemeKind::Fish, 16);
+        cfg.agg_shards = shards;
+        let r = Pipeline::builder().config(cfg).build_sim().run();
+        assert_eq!(r.merged_counts, reference, "agg_shards={shards}");
+        assert_eq!(r.top_k(10), ref_top, "agg_shards={shards}");
+        // the per-shard ledgers account for exactly the total traffic
+        assert_eq!(r.shard_agg.n_shards(), shards);
+        assert_eq!(
+            r.shard_agg.per_shard.iter().map(|s| s.messages).sum::<u64>(),
+            r.agg.messages,
+            "agg_shards={shards}"
+        );
+        assert!(r.shard_agg.imbalance().relative >= 0.0);
+    }
+}
+
+#[test]
+fn rt_merged_counts_are_shard_count_invariant() {
+    // Acceptance criterion: with --agg_shards 4 (and others) on the rt
+    // engine, merged counts are byte-identical to --agg_shards 1.
+    let reference = reference();
+    let ref_top = fish::aggregate::top_k(&reference, 10);
+    for shards in [1usize, 2, 4, 7] {
+        let mut cfg = base(SchemeKind::Pkg, 8);
+        cfg.interarrival_ns = 0;
+        cfg.agg_shards = shards;
+        let r = Pipeline::builder().config(cfg).per_tuple_ns(vec![0.0]).build_rt().run();
+        assert_eq!(r.merged, reference, "agg_shards={shards}");
+        assert_eq!(r.top_k(10), ref_top, "agg_shards={shards}");
+        assert_eq!(r.shard_agg.n_shards(), shards);
+        assert_eq!(
+            r.shard_agg.per_shard.iter().map(|s| s.messages).sum::<u64>(),
+            r.agg.messages,
+            "agg_shards={shards}"
+        );
+    }
+}
+
+#[test]
+fn sharded_merge_survives_churn() {
+    use fish::engine::ChurnEvent;
+    let reference = reference();
+    let mut cfg = base(SchemeKind::Fish, 8);
+    cfg.agg_shards = 7;
+    let r = Pipeline::builder()
+        .config(cfg)
+        .churn(vec![
+            (10_000, ChurnEvent::Remove(3)),
+            (25_000, ChurnEvent::Add(8)),
+        ])
+        .build_sim()
+        .run();
+    // workers came and went mid-stream; the fabric still accounts for
+    // every tuple exactly once, on whichever shard owns each key
+    assert_eq!(r.merged_counts, reference);
+}
+
+#[test]
+fn sharded_runs_are_deterministic_per_shard() {
+    let run = || {
+        let mut cfg = base(SchemeKind::Fish, 16);
+        cfg.agg_shards = 7;
+        Pipeline::builder().config(cfg).build_sim().run()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.merged_counts, b.merged_counts);
+    assert_eq!(a.shard_agg.n_shards(), b.shard_agg.n_shards());
+    // the virtual-time flush scatter is deterministic shard by shard
+    for (s, (x, y)) in a.shard_agg.per_shard.iter().zip(&b.shard_agg.per_shard).enumerate() {
+        assert_eq!(x.flushes, y.flushes, "shard {s}");
+        assert_eq!(x.messages, y.messages, "shard {s}");
+        assert_eq!(x.bytes, y.bytes, "shard {s}");
+    }
+    assert_eq!(a.agg_latency.count(), b.agg_latency.count());
+    assert_eq!(a.gather.top(10).top, b.gather.top(10).top);
+}
+
+#[test]
+fn mid_run_shard_count_change_keeps_exact_counts() {
+    // The fabric's elasticity contract, driven directly: reshard the
+    // fabric mid-stream (grow and shrink) and the final merged counts
+    // stay byte-identical to a fixed single-shard run — deterministic
+    // across repeats.
+    use fish::aggregate::{Count, PartialAgg, ShardedMerge};
+    let mut gen = fish::workload::by_name("zf", TUPLES, Z, SEED);
+    let keys: Vec<Key> = (0..TUPLES).map(|i| gen.key_at(i)).collect();
+    let run = |schedule: &[(usize, usize)]| {
+        // schedule: (tuple index, new shard count)
+        let mut fabric = ShardedMerge::new(Count, 3);
+        let mut partial = PartialAgg::new(Count);
+        let mut next = 0usize;
+        for (i, &k) in keys.iter().enumerate() {
+            partial.observe(k, 1);
+            if (i + 1) % 1_000 == 0 {
+                fabric.absorb(partial.flush());
+            }
+            if next < schedule.len() && schedule[next].0 == i {
+                fabric.set_shards(schedule[next].1);
+                next += 1;
+            }
+        }
+        fabric.absorb(partial.flush());
+        fabric.into_sorted().0
+    };
+    let fixed = run(&[]);
+    let resharded = run(&[(8_000, 6), (20_000, 2), (32_000, 9)]);
+    assert_eq!(fixed, resharded);
+    assert_eq!(resharded, run(&[(8_000, 6), (20_000, 2), (32_000, 9)]));
+    assert_eq!(fixed.iter().map(|&(_, c)| c).sum::<u64>(), TUPLES as u64);
+}
+
+#[test]
+fn gather_top_k_respects_error_bounds_against_exact_counts() {
+    let mut cfg = base(SchemeKind::Fish, 16);
+    cfg.agg_shards = 4;
+    let r = Pipeline::builder().config(cfg).build_sim().run();
+    let exact: std::collections::HashMap<Key, u64> = r.merged_counts.iter().copied().collect();
+    let g = r.gather.top(10);
+    assert_eq!(g.top.len(), 10);
+    for &(k, est) in &g.top {
+        let truth = exact[&k] as f64;
+        assert!(est >= truth, "key {k}: estimate {est} under exact {truth}");
+        assert!(
+            est <= truth + g.error_bound + 1e-9,
+            "key {k}: estimate {est} exceeds exact {truth} + bound {}",
+            g.error_bound
+        );
+    }
+    // the rank-error-bound statement itself: whatever key the gather
+    // ranks first is within error_bound of the true hottest key's count
+    let true_top = r.top_k(1)[0].1 as f64;
+    let gathered_top_truth = exact[&g.top[0].0] as f64;
+    assert!(
+        gathered_top_truth + g.error_bound + 1e-9 >= true_top,
+        "gathered top key's exact count {gathered_top_truth} not within bound {} of {true_top}",
+        g.error_bound
+    );
+}

@@ -14,6 +14,14 @@ below the baseline speedup. Ratios — not raw ns/op — are compared, so
 the gate is stable across runner hardware while still failing when the
 batched hot path regresses relative to the per-tuple reference.
 
+The aggregation path is gated the same way: for every op in the
+baseline's agg_results[] (MergeStage absorb, shard-routing dispatch),
+its cost *relative to PartialAgg::observe in the same run*
+(ratio_vs_observe) must not rise more than AGG-THRESHOLD above the
+baseline ratio. Again a same-machine ratio, so runner hardware cancels
+out; only the two-stage path getting slower relative to its own stage
+one fails the gate.
+
 Exit status: 0 = within threshold, 1 = regression, 2 = bad input.
 """
 
@@ -42,16 +50,27 @@ def index_results(doc, path):
     return out
 
 
+def index_agg(doc):
+    """agg_results[] indexed by op name ({} when the section is absent)."""
+    return {row["op"]: row for row in doc.get("agg_results") or []}
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current")
     ap.add_argument("baseline")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max allowed relative speedup regression (default 0.25)")
+    ap.add_argument("--agg-threshold", type=float, default=1.0,
+                    help="max allowed relative rise of an aggregation-path "
+                         "ratio_vs_observe (default 1.0 = 100%%; these "
+                         "micro-ratios are noisier than routing speedups)")
     args = ap.parse_args()
 
-    current = index_results(load(args.current), args.current)
-    baseline = index_results(load(args.baseline), args.baseline)
+    current_doc = load(args.current)
+    baseline_doc = load(args.baseline)
+    current = index_results(current_doc, args.current)
+    baseline = index_results(baseline_doc, args.baseline)
 
     failures = []
     print(f"{'scheme':>8} {'workers':>8} {'baseline':>9} {'current':>9} {'floor':>9}  status")
@@ -73,13 +92,40 @@ def main():
                 f"{scheme}/{workers}w: batched-routing speedup {cur:.3f} fell below "
                 f"{floor:.3f} (baseline {base:.3f}, threshold {args.threshold:.0%})")
 
+    # aggregation-path gate: op cost relative to PartialAgg::observe must
+    # not rise more than --agg-threshold above the baseline ratio
+    agg_base = index_agg(baseline_doc)
+    agg_cur = index_agg(current_doc)
+    gated_ops = 0
+    if agg_base:
+        print(f"\n{'op':>16} {'baseline':>9} {'current':>9} {'ceiling':>9}  status")
+        for op, base_row in sorted(agg_base.items()):
+            base = base_row["ratio_vs_observe"]
+            ceiling = base * (1.0 + args.agg_threshold)
+            cur_row = agg_cur.get(op)
+            if cur_row is None:
+                failures.append(f"agg/{op}: missing from current agg_results")
+                print(f"{op:>16} {base:>9.3f} {'—':>9} {ceiling:>9.3f}  MISSING")
+                continue
+            cur = cur_row["ratio_vs_observe"]
+            ok = cur <= ceiling
+            gated_ops += 1
+            print(f"{op:>16} {base:>9.3f} {cur:>9.3f} {ceiling:>9.3f}  "
+                  f"{'ok' if ok else 'REGRESSED'}")
+            if not ok:
+                failures.append(
+                    f"agg/{op}: ratio vs observe {cur:.3f} rose above "
+                    f"{ceiling:.3f} (baseline {base:.3f}, threshold "
+                    f"{args.agg_threshold:.0%})")
+
     if failures:
         print("\nperf-smoke FAILED:", file=sys.stderr)
         for f in failures:
             print(f"  - {f}", file=sys.stderr)
         sys.exit(1)
     print("\nperf-smoke ok: batched routing within threshold for "
-          f"{len(baseline)} scheme/worker pairs")
+          f"{len(baseline)} scheme/worker pairs, aggregation path within "
+          f"threshold for {gated_ops} ops")
 
 
 if __name__ == "__main__":
