@@ -4,10 +4,12 @@
 //!   grouping scheme, at batch sizes 256 and 1024 — tracks the
 //!   batch-first API's amortisation win over the per-tuple path.
 //! * aggregation-path ns/op: `PartialAgg::observe` (stage-one fold),
-//!   `MergeStage` absorb (per merged entry) and the shard-routing
-//!   dispatch (`ShardRouter::shard_of`) — gated in CI as *ratios*
-//!   against the observe cost, so the two-stage path can't silently
-//!   regress relative to its own stage one.
+//!   `MergeStage` absorb (per merged entry), the shard-routing
+//!   dispatch (`ShardRouter::shard_of`), and the windowed path
+//!   (`WindowedPartial::observe` pane assignment, `WindowedMerge`
+//!   absorb + watermark retirement per entry) — gated in CI as
+//!   *ratios* against the observe cost, so the two-stage path can't
+//!   silently regress relative to its own stage one.
 //! * identifier throughput: native Alg. 1 vs the XLA count-min path
 //!   (AOT Pallas kernel via PJRT), amortised per tuple.
 //!
@@ -25,7 +27,7 @@
 #[path = "support/mod.rs"]
 mod support;
 
-use fish::aggregate::{Count, MergeStage, PartialAgg, ShardRouter};
+use fish::aggregate::{Count, MergeStage, PartialAgg, ShardRouter, WindowedMerge, WindowedPartial};
 use fish::config::Config;
 use fish::coordinator::fish::{EpochIdentifier, Identifier};
 use fish::coordinator::{make_kind, ClusterView, SchemeKind};
@@ -147,6 +149,62 @@ fn bench_shard_route(keys: &[u64], n_shards: usize) -> f64 {
     start.elapsed().as_nanos() as f64 / keys.len() as f64
 }
 
+/// Windowed stage-one fold cost: `WindowedPartial::observe` ns/op with
+/// event time advancing through panes — the pane-assignment price on
+/// top of the plain `PartialAgg::observe` fold.
+fn bench_window_observe(keys: &[u64]) -> f64 {
+    // ~64 tuples per pane: pane advances are frequent enough to price
+    let window_ns = 6_400;
+    let warm = keys.len() / 10;
+    let mut p = WindowedPartial::new(Count, window_ns);
+    for (i, &k) in keys.iter().take(warm).enumerate() {
+        p.observe(k, 1, i as u64 * 100);
+    }
+    p.flush();
+    let start = Instant::now();
+    for (i, &k) in keys.iter().enumerate() {
+        // event time continues past the warmup: every measured observe
+        // takes the hot-pane path being priced, not the laggard
+        // side-table path a timestamp rewind would hit
+        p.observe(k, 1, (warm + i) as u64 * 100);
+    }
+    let ns = start.elapsed().as_nanos() as f64 / keys.len() as f64;
+    std::hint::black_box(p.len());
+    ns
+}
+
+/// Windowed stage-two cost: `WindowedMerge` absorb + watermark
+/// retirement, ns per merged entry over realistic per-pane flush
+/// batches (a windowed partial drained every `flush_every` keys, panes
+/// retired as the watermark passes them).
+fn bench_window_retire(keys: &[u64], flush_every: usize) -> f64 {
+    let window_ns = 6_400;
+    let mut batches = Vec::new();
+    let mut p = WindowedPartial::new(Count, window_ns);
+    for (i, &k) in keys.iter().enumerate() {
+        p.observe(k, 1, i as u64 * 100);
+        if (i + 1) % flush_every == 0 {
+            batches.push((i as u64 * 100, p.flush()));
+        }
+    }
+    if !p.is_empty() {
+        batches.push((keys.len() as u64 * 100, p.flush()));
+    }
+    let entries: usize =
+        batches.iter().map(|(_, panes)| panes.iter().map(|(_, b)| b.len()).sum::<usize>()).sum();
+    let mut m = WindowedMerge::new(Count, window_ns, 1024);
+    let start = Instant::now();
+    for (watermark, panes) in batches {
+        for (win, sub) in panes {
+            m.absorb(win, sub);
+        }
+        m.advance(watermark);
+    }
+    let ns = start.elapsed().as_nanos() as f64 / entries.max(1) as f64;
+    std::hint::black_box(m.finish().windows.len());
+    ns
+}
+
 fn bench_identifier_native(keys: &[u64], epoch: usize, cap: usize) -> f64 {
     let mut id = EpochIdentifier::new(cap, epoch, 0.2);
     let start = Instant::now();
@@ -213,8 +271,10 @@ fn main() {
     let partial_ns = bench_partial_observe(&keys);
     let absorb_ns = bench_merge_absorb(&keys, 4096);
     let shard_ns = bench_shard_route(&keys, 8);
+    let window_observe_ns = bench_window_observe(&keys);
+    let window_retire_ns = bench_window_retire(&keys, 4096);
     let mut ta = Table::new(
-        "aggregation path: two-stage fold + shard dispatch",
+        "aggregation path: two-stage fold + shard dispatch + window panes",
         &["op", "ns/op", "ratio vs observe"],
     );
     let mut agg_json_rows: Vec<String> = Vec::new();
@@ -222,6 +282,8 @@ fn main() {
         ("partial_observe", partial_ns),
         ("merge_absorb", absorb_ns),
         ("shard_route8", shard_ns),
+        ("window_observe", window_observe_ns),
+        ("window_retire", window_retire_ns),
     ] {
         let ratio = ns_op / partial_ns.max(1e-9);
         ta.row(&[op.into(), f2(ns_op), format!("{ratio:.2}x")]);

@@ -19,6 +19,14 @@
 //! bound. A standalone [`TopKSketch`] over the merged counts shows the
 //! same machinery single-shard.
 //!
+//! The fabric also runs **windowed** (`--agg_window_ms`-style, 1 ms
+//! tumbling panes): the same runs retire per-window exact counts, and
+//! because the workload's hot set inverts late in the stream, "trending
+//! in the last window" diverges sharply from the all-time top-k — the
+//! all-time ranking still rewards hot keys that went cold long ago,
+//! the last pane answers for *now*. Sliding windows compose from the
+//! panes.
+//!
 //! ```bash
 //! cargo run --release --example topk_trending
 //! ```
@@ -32,6 +40,7 @@ const TUPLES: usize = 150_000;
 const WORKERS: usize = 16;
 const SHARDS: usize = 4;
 const TOP: usize = 10;
+const WINDOW_MS: u64 = 1;
 
 fn run(kind: SchemeKind) -> fish::engine::SimResult {
     Pipeline::builder()
@@ -43,6 +52,7 @@ fn run(kind: SchemeKind) -> fish::engine::SimResult {
         .zipf_z(1.6)
         .agg_flush_ms(1)
         .agg_shards(SHARDS)
+        .agg_window_ms(WINDOW_MS)
         // arrival rate ≈ aggregate service rate: keep workers busy
         .configure(|c| c.interarrival_ns = c.service_ns / c.workers as u64 + 1)
         .build_sim()
@@ -105,6 +115,69 @@ fn main() {
     println!(
         "FG/FISH makespan: {} — same answer, Field Grouping just arrives later\n",
         ratio(fg_r.makespan as f64 / fish_r.makespan as f64)
+    );
+
+    // --- windowed: "trending now" vs the all-time ranking ---
+    // The same runs retired 1 ms tumbling panes; the per-window oracle
+    // holds pane by pane (FISH's windows == FG's windows), and because
+    // the zf hot set inverts late in the stream, the last pane's top-k
+    // has moved on from the all-time answer.
+    assert!(!fish_r.windows.is_empty(), "windowed mode produced no panes");
+    assert_eq!(fish_r.windows.len(), fg_r.windows.len());
+    for (a, b) in fish_r.windows.iter().zip(&fg_r.windows) {
+        assert_eq!(a.counts, b.counts, "windowed oracle broke at pane {}", a.window);
+    }
+    assert_eq!(
+        fish_r.windows.iter().map(|w| w.total()).sum::<u64>(),
+        TUPLES as u64,
+        "panes must partition the stream"
+    );
+    let last = fish_r.windows.last().unwrap();
+    let trending = last.top_k(TOP);
+    assert_ne!(
+        trending, fish_top,
+        "hot-set inversion must separate trending from all-time top-k"
+    );
+    let mut wt = Table::new(
+        &format!(
+            "all-time top-{TOP} vs trending (last {WINDOW_MS} ms pane, {} panes retired)",
+            fish_r.windows.len()
+        ),
+        &["rank", "all-time key", "count", "trending key", "count"],
+    );
+    for i in 0..TOP {
+        wt.row(&[
+            (i + 1).to_string(),
+            fish_top[i].0.to_string(),
+            fish_top[i].1.to_string(),
+            trending[i].0.to_string(),
+            trending[i].1.to_string(),
+        ]);
+    }
+    wt.print();
+    println!(
+        "pane lifecycle: {} pane-shard retirements, peak {} open panes/shard, \
+         peak {} open-pane entries, {} late reopens\n",
+        fish_r.window_stats.panes_retired,
+        fish_r.window_stats.max_open_panes,
+        fish_r.window_stats.max_open_entries,
+        fish_r.window_stats.late_reopens,
+    );
+
+    // sliding windows compose from panes: a 3 ms window sliding by 1 ms
+    let slid = fish::aggregate::sliding(&fish_r.windows, 3);
+    let last3 = slid.last().unwrap();
+    assert_eq!(
+        last3.total(),
+        fish_r.windows.iter().rev().take(3).map(|w| w.total()).sum::<u64>()
+    );
+    println!(
+        "sliding window [{:.1} ms, {:.1} ms): top key {} × {} (3 panes merged, gather bound {:.0})\n",
+        last3.start_ns() as f64 / 1e6,
+        last3.end_ns() as f64 / 1e6,
+        last3.top_k(1)[0].0,
+        last3.top_k(1)[0].1,
+        last3.gather.top(TOP).error_bound,
     );
 
     // --- bounded-memory trending: SpaceSaving over the flush mass ---

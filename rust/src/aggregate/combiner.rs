@@ -102,12 +102,17 @@ impl Combiner for Sum {
 #[derive(Debug, Clone)]
 pub struct TopKSketch {
     sketch: SpaceSaving,
+    /// Overestimate carried in from [`TopKSketch::merge`]d sketches:
+    /// a folded entry's estimate already includes the source sketch's
+    /// error, which this sketch's own `min_count` knows nothing about,
+    /// so the merged bound is the *sum* of both sides' bounds.
+    merged_error: f64,
 }
 
 impl TopKSketch {
     /// Track at most `capacity` candidate keys.
     pub fn new(capacity: usize) -> Self {
-        TopKSketch { sketch: SpaceSaving::new(capacity) }
+        TopKSketch { sketch: SpaceSaving::new(capacity), merged_error: 0.0 }
     }
 
     /// Absorb one flushed partial: `key` gained `weight` mass.
@@ -132,18 +137,35 @@ impl TopKSketch {
         self.sketch.entries()
     }
 
+    /// Fold another sketch's tracked mass into this one: each of
+    /// `other`'s `(key, estimate)` entries lands as one weighted
+    /// observe. Estimates stay overestimates, and `other`'s own
+    /// overestimate bound is folded into [`TopKSketch::error_bound`]
+    /// (a merged entry's estimate already carries the source sketch's
+    /// error, which this side's `min_count` cannot see — the sound
+    /// merged bound is the sum of both sides' bounds). Used when a
+    /// reopened window pane re-finalizes into the first emission's
+    /// sketch, and by sliding-window gather composition.
+    pub fn merge(&mut self, other: &TopKSketch) {
+        for (key, est) in other.sketch.iter() {
+            if est > 0.0 {
+                self.sketch.observe_weighted(key, est);
+            }
+        }
+        self.merged_error += other.error_bound();
+    }
+
     /// Overestimate bound for this sketch's estimates: 0 while under
     /// capacity (estimates are exact), else the minimum tracked count —
-    /// every estimate `e` satisfies `true ≤ e ≤ true + error_bound()`,
-    /// and any untracked key's true mass is ≤ `error_bound()`. This is
-    /// the per-shard term in the scatter-gather rank-error bound
+    /// plus the bounds inherited from any [`TopKSketch::merge`]d
+    /// sketches. Every estimate `e` satisfies
+    /// `true ≤ e ≤ true + error_bound()`, and any untracked key's true
+    /// mass is ≤ `error_bound()`. This is the per-shard term in the
+    /// scatter-gather rank-error bound
     /// ([`crate::aggregate::TopKGather::error_bound`]).
     pub fn error_bound(&self) -> f64 {
-        if self.sketch.at_capacity() {
-            self.sketch.min_count()
-        } else {
-            0.0
-        }
+        let own = if self.sketch.at_capacity() { self.sketch.min_count() } else { 0.0 };
+        own + self.merged_error
     }
 }
 
@@ -196,6 +218,63 @@ mod tests {
         assert_eq!(top[1].0, 2);
         assert!(weighted.estimate(1) >= exact[&1] as f64);
         assert!(weighted.estimate(2) >= exact[&2] as f64);
+    }
+
+    #[test]
+    fn topk_sketch_merge_keeps_overestimates() {
+        let mut a = TopKSketch::new(8);
+        let mut b = TopKSketch::new(8);
+        for (k, n) in [(1u64, 40), (2, 10)] {
+            a.absorb(k, n);
+        }
+        for (k, n) in [(1u64, 5), (3, 20)] {
+            b.absorb(k, n);
+        }
+        a.merge(&b);
+        assert!(a.estimate(1) >= 45.0);
+        assert!(a.estimate(2) >= 10.0);
+        assert!(a.estimate(3) >= 20.0);
+        assert_eq!(a.top(1)[0].0, 1);
+    }
+
+    #[test]
+    fn topk_sketch_merge_bound_covers_both_sides_errors() {
+        // Capacity-2 sketches: each side evicts, so each carries its own
+        // overestimate; the merged bound must cover the sum — a merged
+        // entry's estimate already includes the source sketch's error,
+        // which the destination's min_count alone cannot see.
+        let feed = |pairs: &[(Key, u64)]| {
+            let mut s = TopKSketch::new(2);
+            for &(k, n) in pairs {
+                s.absorb(k, n);
+            }
+            s
+        };
+        let mut a = feed(&[(1, 10), (2, 4), (3, 6)]); // evicts: bound > 0
+        let b = feed(&[(4, 8), (5, 3), (6, 5)]); // evicts: bound > 0
+        let (a_bound, b_bound) = (a.error_bound(), b.error_bound());
+        assert!(a_bound > 0.0 && b_bound > 0.0);
+        a.merge(&b);
+        assert!(
+            a.error_bound() >= a_bound.max(b_bound),
+            "merged bound {} must cover both sides' bounds ({a_bound}, {b_bound})",
+            a.error_bound()
+        );
+        // the guarantee itself: every estimate within truth + bound
+        let truth: std::collections::HashMap<Key, u64> =
+            [(1u64, 10u64), (2, 4), (3, 6), (4, 8), (5, 3), (6, 5)].into_iter().collect();
+        for (k, est) in [1u64, 2, 3, 4, 5, 6]
+            .iter()
+            .map(|&k| (k, a.estimate(k)))
+            .filter(|&(_, e)| e > 0.0)
+        {
+            assert!(
+                est <= truth[&k] as f64 + a.error_bound() + 1e-9,
+                "key {k}: {est} exceeds {} + {}",
+                truth[&k],
+                a.error_bound()
+            );
+        }
     }
 
     #[test]

@@ -58,11 +58,22 @@ impl<C: Combiner> PartialAgg<C> {
         self.state.len() * (KEY_BYTES + self.combiner.acc_bytes())
     }
 
-    /// Drain the partial state into a flush batch. The partial is empty
-    /// afterwards; accumulation starts over (delta semantics, so flushes
-    /// at any cadence merge to the same final result).
+    /// Drain the partial state into a flush batch, **ascending by key**.
+    /// The partial is empty afterwards; accumulation starts over (delta
+    /// semantics, so flushes at any cadence merge to the same final
+    /// result).
+    ///
+    /// The sort is a determinism requirement, not cosmetics: `HashMap`
+    /// drain order varies per instance (random hasher seeds), and once a
+    /// downstream bounded sketch ([`crate::aggregate::TopKSketch`]) is
+    /// at capacity, admission depends on arrival order — unsorted
+    /// batches made gather rankings vary between identically-seeded
+    /// runs. Flushing is off the per-tuple hot path, so the O(n log n)
+    /// is paid where it is cheap.
     pub fn flush(&mut self) -> Vec<(Key, C::Acc)> {
-        self.state.drain().collect()
+        let mut batch: Vec<(Key, C::Acc)> = self.state.drain().collect();
+        batch.sort_unstable_by_key(|&(k, _)| k);
+        batch
     }
 }
 
@@ -217,6 +228,23 @@ mod tests {
             assert_eq!(c, truth[&k], "key {k}");
         }
         assert_eq!(stats.flushes, 4);
+    }
+
+    #[test]
+    fn flush_batches_are_sorted_by_key() {
+        // Two identically-fed partials are distinct HashMap instances
+        // (different hasher seeds), so only the sort makes their flush
+        // batches — and therefore downstream sketch admission — agree.
+        let feed = || {
+            let mut p = PartialAgg::new(Count);
+            for k in [9u64, 1, 5, 1, 3, 9, 7, 2] {
+                p.observe(k, 1);
+            }
+            p.flush()
+        };
+        let (a, b) = (feed(), feed());
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].0 < w[1].0), "not key-ascending: {a:?}");
     }
 
     #[test]

@@ -23,19 +23,33 @@
 //!   [`ShardRouter`], `--agg_shards`) with a scatter-gather top-k
 //!   front-end ([`TopKGather`]) and per-shard imbalance accounting
 //!   ([`crate::metrics::ShardAggStats`]).
+//! * [`window`] — stage two *in time*: tumbling event-time panes over
+//!   the fabric ([`WindowedPartial`] / [`WindowedMerge`],
+//!   `--agg_window_ms`; 0 = unwindowed), retired by watermark advance
+//!   into per-window exact counts + per-window [`TopKGather`]
+//!   ([`WindowSnapshot`]), with [`sliding`] windows composed from
+//!   panes and pane-lifecycle accounting in
+//!   [`crate::metrics::WindowStats`]. [`next_boundary`] is the shared
+//!   flush/pane cadence grid both engines snap to.
 //!
 //! Both engines wire this in: the simulator scatters virtual-time
 //! flushes across the fabric deterministically, the runtime engine runs
 //! one real aggregator thread per shard fed by per-worker-to-shard
 //! flush channels. The `aggregation_oracle` integration tests pin the
-//! end-to-end guarantee: merged counts are element-wise equal to a
-//! single-worker Field-Grouping reference for every scheme, every flush
-//! cadence, every shard count, and both engines.
+//! end-to-end guarantee: merged counts — and, windowed, *per-window*
+//! merged counts — are element-wise equal to a single-worker
+//! Field-Grouping reference for every scheme, every flush cadence,
+//! every shard count, and both engines.
 
 pub mod combiner;
 pub mod merge;
 pub mod shard;
+pub mod window;
 
 pub use combiner::{Combiner, Count, Sum, TopKSketch};
 pub use merge::{top_k, MergeStage, PartialAgg};
 pub use shard::{GatherResult, ShardRouter, ShardedMerge, TopKGather, DEFAULT_GATHER_CAPACITY};
+pub use window::{
+    assemble_windows, next_boundary, sliding, window_of, WindowId, WindowResult, WindowSnapshot,
+    WindowedMerge, WindowedOutput, WindowedPartial,
+};

@@ -96,6 +96,23 @@ impl TopKGather {
         }
     }
 
+    /// Fold another gather's per-shard sketches into this one,
+    /// shard-wise (both must cover the same shard count — i.e. come
+    /// from the same fabric). This is how pane-composed **sliding**
+    /// windows assemble: the sliding query over the last `m` tumbling
+    /// panes merges the panes' gathers, and because each key lives on
+    /// the same shard in every pane, the merge never crosses shards.
+    pub fn merge_from(&mut self, other: &TopKGather) {
+        assert_eq!(
+            self.shards.len(),
+            other.shards.len(),
+            "can only merge gathers from the same fabric"
+        );
+        for (mine, theirs) in self.shards.iter_mut().zip(&other.shards) {
+            mine.merge(theirs);
+        }
+    }
+
     /// Estimated mass of `key` (0 if untracked on its owner shard).
     pub fn estimate(&self, key: Key) -> f64 {
         self.shards[self.router.shard_of(key)].estimate(key)
@@ -192,6 +209,22 @@ mod tests {
         }
         assert_eq!(g.top(5).top, single.top(5));
         assert_eq!(g.entries(), single.entries());
+    }
+
+    #[test]
+    fn merge_from_folds_pane_gathers_shard_wise() {
+        let mut a = TopKGather::new(4, 64);
+        let mut b = TopKGather::new(4, 64);
+        a.absorb(7, 30);
+        a.absorb(11, 5);
+        b.absorb(7, 12);
+        b.absorb(99, 40);
+        a.merge_from(&b);
+        assert!(a.estimate(7) >= 42.0);
+        assert!(a.estimate(99) >= 40.0);
+        // per-key mass still lives on exactly one shard after the merge
+        let tracked = a.shards.iter().filter(|s| s.estimate(7) > 0.0).count();
+        assert_eq!(tracked, 1);
     }
 
     #[test]

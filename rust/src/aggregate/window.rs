@@ -1,0 +1,761 @@
+//! Windowed aggregation over the merge fabric: tumbling event-time
+//! panes with watermark retirement, and pane-composed sliding windows.
+//!
+//! FISH's premise is that hotness only means anything "within a bounded
+//! distance of time interval" (paper §3) — yet an unwindowed stage two
+//! folds the whole stream, so its top-k answers *all time*, not
+//! *trending now*. This module adds time to the fabric:
+//!
+//! * every tuple is assigned to a **pane** by its *emit timestamp*
+//!   (virtual arrival ns in the simulator, the source-stamped trace
+//!   emit ns in the runtime engine): `pane = ts / window_ns`
+//!   ([`window_of`]). Assignment by event time — not by flush time — is
+//!   what makes per-pane counts invariant under flush cadence, shard
+//!   count, grouping scheme and engine, the windowed half of the
+//!   aggregation oracle.
+//! * stage one keeps one [`PartialAgg`] per open pane per worker
+//!   ([`WindowedPartial`]; the current pane is a direct field, so the
+//!   unwindowed `window_ns = 0` case pays one branch over the old
+//!   single-partial path and reproduces it byte for byte).
+//! * stage two keeps per-pane [`MergeStage`]s (plus a per-pane
+//!   [`TopKSketch`]) on each merge shard ([`WindowedMerge`]). When the
+//!   shard's **watermark** passes a pane's end, the pane is *retired*:
+//!   its finalized `(window, key, acc)` counts are flushed downstream
+//!   as a [`WindowResult`] and its memory is released — open-pane
+//!   memory and retirement counts land in
+//!   [`crate::metrics::WindowStats`].
+//! * the engines assemble per-shard results into global
+//!   [`WindowSnapshot`]s ([`assemble_windows`]): exact per-window
+//!   counts (keys are disjoint across shards, so concat + sort is
+//!   byte-identical to a single-shard fold) plus a per-window
+//!   [`TopKGather`] built from the panes' shard sketches.
+//! * **sliding** windows are composed from panes ([`sliding`]): a
+//!   window of `m` panes is the merge of `m` consecutive tumbling
+//!   panes — the classic paired-pane construction, which the
+//!   count-based [`crate::sketch::SlidingWindow`] baseline cross-checks
+//!   in the oracle tests.
+//!
+//! Watermarks are exact in the simulator (virtual time is global) and
+//! heuristic in the runtime engine (min over per-worker high-water
+//! marks): a late delta there *reopens* its pane, and the reopened
+//! emission is re-merged exactly at assembly — retirement timing is
+//! best-effort, final per-window counts never are.
+//!
+//! [`next_boundary`] is the shared flush/pane cadence helper: both
+//! engines snap their periodic flush schedule to the same boundary grid
+//! (`now → now - now % interval + interval`), so flush cadence cannot
+//! drift with per-chunk processing time the way the runtime engine's
+//! old `now + interval` arithmetic did.
+
+use super::combiner::{Combiner, TopKSketch};
+use super::merge::{MergeStage, PartialAgg};
+use super::shard::TopKGather;
+use crate::metrics::{AggStats, WindowStats};
+use crate::Key;
+use std::collections::{BTreeMap, HashMap};
+
+/// Identifier of a tumbling pane: `ts / window_ns` (pane `w` covers
+/// `[w·window_ns, (w+1)·window_ns)`).
+pub type WindowId = u64;
+
+/// The pane owning event time `ts`; everything lands in pane 0 when
+/// unwindowed (`window_ns == 0`).
+#[inline]
+pub fn window_of(ts: u64, window_ns: u64) -> WindowId {
+    if window_ns == 0 {
+        0
+    } else {
+        ts / window_ns
+    }
+}
+
+/// End of `window`'s pane in event-time ns (exclusive).
+#[inline]
+fn pane_end(window: WindowId, window_ns: u64) -> u64 {
+    (window + 1).saturating_mul(window_ns)
+}
+
+/// The next boundary of an `interval` grid strictly after `now`:
+/// `now - now % interval + interval`. The one flush-cadence arithmetic
+/// both engines (and pane retirement) share — scheduling the next flush
+/// as `now + interval` instead lets the cadence drift by per-chunk
+/// processing time, which is exactly the runtime-engine bug this
+/// helper replaced.
+#[inline]
+pub fn next_boundary(now: u64, interval: u64) -> u64 {
+    debug_assert!(interval > 0, "boundary grid needs a positive interval");
+    now - now % interval + interval
+}
+
+/// Stage one with panes: per-(pane, key) partial accumulators on one
+/// worker. The current (hottest) pane is a direct field so the
+/// `window_ns = 0` configuration — a single eternal pane — runs the old
+/// single-[`PartialAgg`] hot path with one extra branch; stragglers
+/// from earlier panes (late deltas from a lagging source) go to a small
+/// ordered side table.
+pub struct WindowedPartial<C: Combiner + Clone> {
+    combiner: C,
+    window_ns: u64,
+    cur_window: WindowId,
+    cur: PartialAgg<C>,
+    /// Panes older than `cur_window` that received tuples after the
+    /// current pane advanced. Invariant: keys `< cur_window`, every
+    /// entry non-empty.
+    laggards: BTreeMap<WindowId, PartialAgg<C>>,
+}
+
+impl<C: Combiner + Clone> WindowedPartial<C> {
+    /// Empty windowed partial folding through `combiner`;
+    /// `window_ns == 0` = unwindowed (single pane 0).
+    pub fn new(combiner: C, window_ns: u64) -> Self {
+        WindowedPartial {
+            cur: PartialAgg::new(combiner.clone()),
+            combiner,
+            window_ns,
+            cur_window: 0,
+            laggards: BTreeMap::new(),
+        }
+    }
+
+    /// Fold one tuple occurrence of `key` carrying `value`, stamped
+    /// with event time `ts`.
+    #[inline]
+    pub fn observe(&mut self, key: Key, value: u64, ts: u64) {
+        let win = window_of(ts, self.window_ns);
+        if win == self.cur_window {
+            self.cur.observe(key, value);
+        } else if win > self.cur_window {
+            // pane advance: park the previous pane until the next flush
+            let prev = std::mem::replace(&mut self.cur, PartialAgg::new(self.combiner.clone()));
+            if !prev.is_empty() {
+                self.laggards.insert(self.cur_window, prev);
+            }
+            self.cur_window = win;
+            self.cur.observe(key, value);
+        } else {
+            self.laggards
+                .entry(win)
+                .or_insert_with(|| PartialAgg::new(self.combiner.clone()))
+                .observe(key, value);
+        }
+    }
+
+    /// True when there is nothing to flush.
+    pub fn is_empty(&self) -> bool {
+        self.cur.is_empty() && self.laggards.is_empty()
+    }
+
+    /// Distinct `(pane, key)` entries accumulated since the last flush.
+    pub fn len(&self) -> usize {
+        self.cur.len() + self.laggards.values().map(|p| p.len()).sum::<usize>()
+    }
+
+    /// Payload a flush now would ship, in bytes.
+    pub fn payload_bytes(&self) -> usize {
+        self.cur.payload_bytes() + self.laggards.values().map(|p| p.payload_bytes()).sum::<usize>()
+    }
+
+    /// Drain everything into per-pane flush batches, ascending by pane
+    /// id, each batch ascending by key (see [`PartialAgg::flush`]).
+    /// Empty afterwards.
+    pub fn flush(&mut self) -> Vec<(WindowId, Vec<(Key, C::Acc)>)> {
+        let mut out = Vec::with_capacity(self.laggards.len() + 1);
+        for (win, mut p) in std::mem::take(&mut self.laggards) {
+            out.push((win, p.flush()));
+        }
+        if !self.cur.is_empty() {
+            out.push((self.cur_window, self.cur.flush()));
+        }
+        out
+    }
+}
+
+/// One finalized pane on one merge shard: the exact counts for the
+/// shard's key range within the pane, plus the pane's bounded top-k
+/// summary — what window retirement "flushes downstream".
+#[derive(Debug, Clone)]
+pub struct WindowResult {
+    /// Pane id (`[window·window_ns, (window+1)·window_ns)`).
+    pub window: WindowId,
+    /// Exact `(key, acc)` for this shard's key range, ascending by key.
+    pub counts: Vec<(Key, u64)>,
+    /// The pane's SpaceSaving summary on this shard (feeds the
+    /// per-window [`TopKGather`] at assembly).
+    pub sketch: TopKSketch,
+}
+
+impl WindowResult {
+    /// Fold a reopened pane's second emission into the first: counts
+    /// merge-join (both ascending, exact), sketches fold via
+    /// [`TopKSketch::merge`].
+    fn merge_from(&mut self, other: WindowResult, combiner: &impl Combiner<Acc = u64>) {
+        debug_assert_eq!(self.window, other.window);
+        let mut merged = Vec::with_capacity(self.counts.len() + other.counts.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.counts.len() && j < other.counts.len() {
+            match self.counts[i].0.cmp(&other.counts[j].0) {
+                std::cmp::Ordering::Less => {
+                    merged.push(self.counts[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    merged.push(other.counts[j]);
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    let mut acc = self.counts[i].1;
+                    combiner.merge(&mut acc, &other.counts[j].1);
+                    merged.push((self.counts[i].0, acc));
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        merged.extend_from_slice(&self.counts[i..]);
+        merged.extend_from_slice(&other.counts[j..]);
+        self.counts = merged;
+        self.sketch.merge(&other.sketch);
+    }
+}
+
+/// Everything one shard's windowed merge produced, returned by
+/// [`WindowedMerge::finish`].
+pub struct WindowedOutput {
+    /// Finalized panes, ascending by pane id, at most one per pane
+    /// (reopened emissions already re-merged); empty when unwindowed.
+    pub windows: Vec<WindowResult>,
+    /// All-time `(key, acc)` totals across every pane, ascending by key
+    /// — byte-identical to what an unwindowed [`MergeStage`] over the
+    /// same deltas produces.
+    pub all_time: Vec<(Key, u64)>,
+    /// The shard's aggregation-traffic ledger (folded across panes).
+    pub stats: AggStats,
+    /// Pane-lifecycle and open-pane-memory ledger.
+    pub window_stats: WindowStats,
+}
+
+/// One open pane's state on a shard.
+struct WindowPane<C: Combiner> {
+    merge: MergeStage<C>,
+    sketch: TopKSketch,
+}
+
+/// Stage two with panes: one shard of the windowed merge fabric. Each
+/// open pane holds a [`MergeStage`] over the shard's key range plus a
+/// bounded [`TopKSketch`]; [`WindowedMerge::advance`] retires panes the
+/// watermark has passed. `window_ns == 0` degenerates to a single
+/// never-retired pane — the unwindowed fabric, byte for byte.
+pub struct WindowedMerge<C: Combiner<Acc = u64> + Clone> {
+    combiner: C,
+    window_ns: u64,
+    sketch_capacity: usize,
+    open: BTreeMap<WindowId, WindowPane<C>>,
+    /// Running `(key, acc)` entry total across open panes — maintained
+    /// incrementally so the per-absorb stat update is O(1), not a scan
+    /// over every open pane.
+    open_entries: usize,
+    retired: Vec<WindowResult>,
+    retired_stats: AggStats,
+    watermark: u64,
+    stats: WindowStats,
+}
+
+impl<C: Combiner<Acc = u64> + Clone> WindowedMerge<C> {
+    /// An empty shard folding through `combiner`, with panes of
+    /// `window_ns` (0 = unwindowed) and per-pane sketches of
+    /// `sketch_capacity` counters.
+    pub fn new(combiner: C, window_ns: u64, sketch_capacity: usize) -> Self {
+        WindowedMerge {
+            combiner,
+            window_ns,
+            sketch_capacity,
+            open: BTreeMap::new(),
+            open_entries: 0,
+            retired: Vec::new(),
+            retired_stats: AggStats::default(),
+            watermark: 0,
+            stats: WindowStats::default(),
+        }
+    }
+
+    /// Absorb one already-shard-routed flush sub-batch for `window`
+    /// (no-op when empty). A sub-batch for a pane the watermark already
+    /// retired *reopens* it (counted in
+    /// [`WindowStats::late_reopens`]); the reopened emission re-merges
+    /// exactly at [`WindowedMerge::finish`].
+    pub fn absorb(&mut self, window: WindowId, sub: Vec<(Key, u64)>) {
+        if sub.is_empty() {
+            return;
+        }
+        let late = self.window_ns > 0 && pane_end(window, self.window_ns) <= self.watermark;
+        // a late delta is a *reopen* only if the pane actually retired;
+        // a pane whose first-ever delta arrives behind the watermark is
+        // just opening late (it retires on the next advance). Rare path,
+        // so the linear scan over retired results costs nothing.
+        let reopen = late && self.retired.iter().any(|r| r.window == window);
+        let pane = match self.open.entry(window) {
+            std::collections::btree_map::Entry::Vacant(v) => {
+                self.stats.panes_opened += 1;
+                if reopen {
+                    self.stats.late_reopens += 1;
+                }
+                v.insert(WindowPane {
+                    merge: MergeStage::new(self.combiner.clone()),
+                    sketch: TopKSketch::new(self.sketch_capacity),
+                })
+            }
+            std::collections::btree_map::Entry::Occupied(o) => o.into_mut(),
+        };
+        let before = pane.merge.len();
+        for &(key, delta) in &sub {
+            pane.sketch.absorb(key, delta);
+        }
+        pane.merge.absorb(sub);
+        self.open_entries += pane.merge.len() - before;
+        self.stats.max_open_panes = self.stats.max_open_panes.max(self.open.len() as u64);
+        self.stats.max_open_entries = self.stats.max_open_entries.max(self.open_entries as u64);
+    }
+
+    /// Advance the shard's watermark to `to` (monotone) and retire
+    /// every open pane whose end it passed, oldest first. Returns the
+    /// number of panes retired by this call. Never retires anything
+    /// when unwindowed.
+    pub fn advance(&mut self, to: u64) -> usize {
+        if to > self.watermark {
+            self.watermark = to;
+        }
+        if self.window_ns == 0 {
+            return 0;
+        }
+        let mut retired = 0usize;
+        while let Some(&window) = self.open.keys().next() {
+            if pane_end(window, self.window_ns) > self.watermark {
+                break;
+            }
+            let pane = self.open.remove(&window).expect("pane key just observed");
+            self.retire(window, pane);
+            retired += 1;
+        }
+        retired
+    }
+
+    /// Current watermark (highest `advance` seen).
+    pub fn watermark(&self) -> u64 {
+        self.watermark
+    }
+
+    /// Panes currently open on this shard.
+    pub fn open_panes(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Pane-lifecycle ledger so far.
+    pub fn window_stats(&self) -> WindowStats {
+        self.stats
+    }
+
+    fn retire(&mut self, window: WindowId, pane: WindowPane<C>) {
+        let WindowPane { merge, sketch } = pane;
+        let (counts, stats) = merge.into_sorted();
+        self.open_entries -= counts.len();
+        self.retired_stats.absorb(&stats);
+        self.stats.panes_retired += 1;
+        self.retired.push(WindowResult { window, counts, sketch });
+    }
+
+    /// Finish the shard: retire every remaining pane, re-merge any
+    /// reopened emissions, and fold the all-time totals. Unwindowed
+    /// (`window_ns == 0`) there is exactly one eternal pane, whose
+    /// counts *are* the all-time answer — they move out directly (no
+    /// re-hash, no re-sort, no duplicate copy) and `windows` comes back
+    /// empty, matching what the engines expose for unwindowed runs.
+    pub fn finish(mut self) -> WindowedOutput {
+        let open: Vec<(WindowId, WindowPane<C>)> = std::mem::take(&mut self.open).into_iter().collect();
+        for (window, pane) in open {
+            self.retire(window, pane);
+        }
+        // reopened panes emitted twice; stable sort groups them, then
+        // adjacent same-window results merge exactly
+        self.retired.sort_by_key(|r| r.window);
+        let mut windows: Vec<WindowResult> = Vec::with_capacity(self.retired.len());
+        for r in self.retired.drain(..) {
+            match windows.last_mut() {
+                Some(last) if last.window == r.window => last.merge_from(r, &self.combiner),
+                _ => windows.push(r),
+            }
+        }
+        if self.window_ns == 0 {
+            let all_time = windows.pop().map(|r| r.counts).unwrap_or_default();
+            return WindowedOutput {
+                windows: Vec::new(),
+                all_time,
+                stats: self.retired_stats,
+                window_stats: self.stats,
+            };
+        }
+        let mut all: HashMap<Key, u64> = HashMap::new();
+        for r in &windows {
+            for &(k, c) in &r.counts {
+                match all.entry(k) {
+                    std::collections::hash_map::Entry::Occupied(mut o) => {
+                        self.combiner.merge(o.get_mut(), &c);
+                    }
+                    std::collections::hash_map::Entry::Vacant(v) => {
+                        v.insert(c);
+                    }
+                }
+            }
+        }
+        let mut all_time: Vec<(Key, u64)> = all.into_iter().collect();
+        all_time.sort_unstable_by_key(|&(k, _)| k);
+        WindowedOutput {
+            windows,
+            all_time,
+            stats: self.retired_stats,
+            window_stats: self.stats,
+        }
+    }
+}
+
+/// One fabric-wide finalized window: exact counts assembled across
+/// every merge shard, plus the scatter-gather top-k front-end over the
+/// panes' per-shard sketches.
+#[derive(Debug, Clone)]
+pub struct WindowSnapshot {
+    /// Pane id of the window's **last** (or only) pane.
+    pub window: WindowId,
+    /// Pane length in event-time ns.
+    pub window_ns: u64,
+    /// Tumbling panes this snapshot spans (1 for a plain pane; `m` for
+    /// a [`sliding`] window of `m` panes).
+    pub panes: u64,
+    /// Exact merged `(key, acc)`, ascending by key — byte-identical for
+    /// every shard count, flush cadence, scheme and engine.
+    pub counts: Vec<(Key, u64)>,
+    /// Approximate per-window top-k over the per-shard pane sketches,
+    /// with the usual rank-error bound.
+    pub gather: TopKGather,
+}
+
+impl WindowSnapshot {
+    /// Window start in event-time ns (inclusive).
+    pub fn start_ns(&self) -> u64 {
+        (self.window + 1).saturating_sub(self.panes).saturating_mul(self.window_ns)
+    }
+
+    /// Window end in event-time ns (exclusive).
+    pub fn end_ns(&self) -> u64 {
+        pane_end(self.window, self.window_ns)
+    }
+
+    /// Total mass in the window.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().map(|&(_, c)| c).sum()
+    }
+
+    /// The `k` hottest keys **within this window**, exact (highest
+    /// count first, ties by key ascending).
+    pub fn top_k(&self, k: usize) -> Vec<(Key, u64)> {
+        super::merge::top_k(&self.counts, k)
+    }
+}
+
+/// Assemble per-shard finalized panes into fabric-wide
+/// [`WindowSnapshot`]s, ascending by pane id. Shards partition the key
+/// space, so concatenating each shard's (already deduplicated) counts
+/// and sorting by key reproduces the single-shard fold byte for byte;
+/// the per-window gather keeps one sketch slot per fabric shard (empty
+/// where a shard saw none of the pane) so its routing matches the
+/// fabric's.
+pub fn assemble_windows(
+    window_ns: u64,
+    n_shards: usize,
+    sketch_capacity: usize,
+    per_shard: Vec<Vec<WindowResult>>,
+) -> Vec<WindowSnapshot> {
+    assert_eq!(per_shard.len(), n_shards, "one result list per shard");
+    let mut by_window: BTreeMap<WindowId, Vec<(usize, WindowResult)>> = BTreeMap::new();
+    for (s, results) in per_shard.into_iter().enumerate() {
+        for r in results {
+            by_window.entry(r.window).or_default().push((s, r));
+        }
+    }
+    by_window
+        .into_iter()
+        .map(|(window, parts)| {
+            let mut counts = Vec::new();
+            let mut sketches: Vec<TopKSketch> =
+                (0..n_shards).map(|_| TopKSketch::new(sketch_capacity)).collect();
+            for (s, r) in parts {
+                counts.extend(r.counts);
+                sketches[s] = r.sketch;
+            }
+            counts.sort_unstable_by_key(|&(k, _)| k);
+            WindowSnapshot {
+                window,
+                window_ns,
+                panes: 1,
+                counts,
+                gather: TopKGather::from_shards(sketches),
+            }
+        })
+        .collect()
+}
+
+/// Compose sliding windows from tumbling panes: for every pane in
+/// `panes` (ascending, as [`assemble_windows`] returns them), the
+/// sliding window ending with that pane merges the up-to
+/// `panes_per_window` consecutive panes covering
+/// `((last+1-m)·window_ns, (last+1)·window_ns]`. The slide equals one
+/// pane — the classic paired-pane construction, trading pane-grain
+/// slide granularity for O(panes) state instead of the O(window
+/// contents) a tuple-buffer baseline like
+/// [`crate::sketch::SlidingWindow`] pays.
+///
+/// Counts roll incrementally — each pane is added once when it enters
+/// the span and subtracted once when it leaves (exact: counts are
+/// non-negative sums), so the whole sweep is O(total pane entries)
+/// plus one sorted snapshot per output window. Gathers cannot be
+/// subtracted (SpaceSaving has no inverse), so each window's gather is
+/// re-folded from its ≤ `panes_per_window` panes via
+/// [`TopKGather::merge_from`].
+pub fn sliding(panes: &[WindowSnapshot], panes_per_window: usize) -> Vec<WindowSnapshot> {
+    assert!(panes_per_window > 0, "a sliding window needs at least one pane");
+    let mut out = Vec::with_capacity(panes.len());
+    let mut rolling: HashMap<Key, u64> = HashMap::new();
+    let mut lo = 0usize;
+    for (i, p) in panes.iter().enumerate() {
+        // evict panes that fell out of the span, add the entering one
+        while panes[lo].window + panes_per_window as u64 <= p.window {
+            for &(k, c) in &panes[lo].counts {
+                match rolling.entry(k) {
+                    std::collections::hash_map::Entry::Occupied(mut o) => {
+                        *o.get_mut() -= c;
+                        if *o.get() == 0 {
+                            o.remove();
+                        }
+                    }
+                    std::collections::hash_map::Entry::Vacant(_) => {
+                        unreachable!("evicted pane key missing from rolling window")
+                    }
+                }
+            }
+            lo += 1;
+        }
+        for &(k, c) in &p.counts {
+            *rolling.entry(k).or_insert(0) += c;
+        }
+        let mut counts: Vec<(Key, u64)> = rolling.iter().map(|(&k, &c)| (k, c)).collect();
+        counts.sort_unstable_by_key(|&(k, _)| k);
+        let mut gather = panes[lo].gather.clone();
+        for q in &panes[lo + 1..=i] {
+            gather.merge_from(&q.gather);
+        }
+        out.push(WindowSnapshot {
+            window: p.window,
+            window_ns: p.window_ns,
+            panes: panes_per_window as u64,
+            counts,
+            gather,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::combiner::Count;
+    use super::super::shard::ShardRouter;
+    use super::*;
+
+    #[test]
+    fn boundary_snap_lands_on_the_grid() {
+        assert_eq!(next_boundary(0, 10), 10);
+        assert_eq!(next_boundary(9, 10), 10);
+        assert_eq!(next_boundary(10, 10), 20);
+        assert_eq!(next_boundary(11, 10), 20);
+        assert_eq!(next_boundary(1_000_000, 1_000_000), 2_000_000);
+    }
+
+    #[test]
+    fn window_assignment_is_by_event_time() {
+        assert_eq!(window_of(0, 100), 0);
+        assert_eq!(window_of(99, 100), 0);
+        assert_eq!(window_of(100, 100), 1);
+        assert_eq!(window_of(1234, 0), 0, "unwindowed = one eternal pane");
+    }
+
+    #[test]
+    fn windowed_partial_groups_flushes_by_pane() {
+        let mut p = WindowedPartial::new(Count, 100);
+        p.observe(1, 1, 10); // pane 0
+        p.observe(1, 1, 50); // pane 0
+        p.observe(2, 1, 150); // pane 1 (advance)
+        p.observe(3, 1, 90); // pane 0 again (laggard)
+        p.observe(2, 1, 260); // pane 2
+        assert_eq!(p.len(), 4);
+        let flushed = p.flush();
+        assert!(p.is_empty());
+        assert_eq!(
+            flushed,
+            vec![
+                (0, vec![(1u64, 2u64), (3, 1)]),
+                (1, vec![(2, 1)]),
+                (2, vec![(2, 1)]),
+            ]
+        );
+    }
+
+    #[test]
+    fn unwindowed_partial_is_a_single_pane() {
+        let mut p = WindowedPartial::new(Count, 0);
+        for (k, ts) in [(5u64, 0u64), (5, 999), (7, 123_456)] {
+            p.observe(k, 1, ts);
+        }
+        let flushed = p.flush();
+        assert_eq!(flushed, vec![(0, vec![(5, 2), (7, 1)])]);
+    }
+
+    #[test]
+    fn watermark_retires_closed_panes_in_order() {
+        let mut m = WindowedMerge::new(Count, 100, 64);
+        m.absorb(0, vec![(1, 2), (2, 1)]);
+        m.absorb(1, vec![(1, 1)]);
+        assert_eq!(m.open_panes(), 2);
+        assert_eq!(m.advance(150), 1, "pane 0 ends at 100 <= 150");
+        assert_eq!(m.open_panes(), 1);
+        assert_eq!(m.advance(150), 0, "idempotent");
+        let out = m.finish();
+        assert_eq!(out.windows.len(), 2);
+        assert_eq!(out.windows[0].window, 0);
+        assert_eq!(out.windows[0].counts, vec![(1, 2), (2, 1)]);
+        assert_eq!(out.windows[1].window, 1);
+        assert_eq!(out.windows[1].counts, vec![(1, 1)]);
+        assert_eq!(out.all_time, vec![(1, 3), (2, 1)]);
+        assert_eq!(out.window_stats.panes_opened, 2);
+        assert_eq!(out.window_stats.panes_retired, 2);
+        assert_eq!(out.window_stats.late_reopens, 0);
+        assert_eq!(out.window_stats.max_open_panes, 2);
+    }
+
+    #[test]
+    fn late_delta_reopens_and_remerges_exactly() {
+        let mut m = WindowedMerge::new(Count, 100, 64);
+        m.absorb(0, vec![(1, 2)]);
+        m.advance(250); // pane 0 retired
+        m.absorb(0, vec![(1, 3), (9, 1)]); // late: reopens pane 0
+        // a first-ever delta behind the watermark is a late *open*, not
+        // a reopen — nothing was retired for pane 1
+        m.absorb(1, vec![(7, 1)]);
+        m.absorb(2, vec![(4, 1)]);
+        let out = m.finish();
+        assert_eq!(out.window_stats.late_reopens, 1);
+        assert_eq!(out.windows.len(), 3, "reopened emissions re-merged");
+        assert_eq!(out.windows[0].window, 0);
+        assert_eq!(out.windows[0].counts, vec![(1, 5), (9, 1)]);
+        assert!(out.windows[0].sketch.estimate(1) >= 5.0);
+        assert_eq!(out.windows[1].counts, vec![(7, 1)]);
+        assert_eq!(out.all_time, vec![(1, 5), (4, 1), (7, 1), (9, 1)]);
+    }
+
+    #[test]
+    fn unwindowed_merge_never_retires_until_finish() {
+        let mut m = WindowedMerge::new(Count, 0, 64);
+        m.absorb(0, vec![(1, 1), (2, 2)]);
+        assert_eq!(m.advance(u64::MAX - 1), 0);
+        m.absorb(0, vec![(1, 4)]);
+        let out = m.finish();
+        assert!(out.windows.is_empty(), "unwindowed output exposes no panes");
+        assert_eq!(out.all_time, vec![(1, 5), (2, 2)]);
+        assert_eq!(out.stats.flushes, 2);
+        assert_eq!(out.stats.messages, 3);
+    }
+
+    /// Drive the same windowed flush schedule through a 1-shard and an
+    /// n-shard fabric; assembled snapshots must be byte-identical.
+    #[test]
+    fn assembled_windows_are_shard_count_invariant() {
+        let run = |n_shards: usize| {
+            let router = ShardRouter::new(n_shards);
+            let mut shards: Vec<WindowedMerge<Count>> =
+                (0..n_shards).map(|_| WindowedMerge::new(Count, 1_000, 64)).collect();
+            let mut partial = WindowedPartial::new(Count, 1_000);
+            for i in 0..6_000u64 {
+                partial.observe((i * i + 3) % 97, 1, i * 7); // ts 0..42000 → 42 panes
+                if (i + 1) % 500 == 0 {
+                    for (win, batch) in partial.flush() {
+                        for (s, sub) in router.split(batch).into_iter().enumerate() {
+                            shards[s].absorb(win, sub);
+                        }
+                    }
+                    for sh in shards.iter_mut() {
+                        sh.advance(i * 7);
+                    }
+                }
+            }
+            for (win, batch) in partial.flush() {
+                for (s, sub) in router.split(batch).into_iter().enumerate() {
+                    shards[s].absorb(win, sub);
+                }
+            }
+            let per_shard: Vec<Vec<WindowResult>> =
+                shards.into_iter().map(|sh| sh.finish().windows).collect();
+            assemble_windows(1_000, n_shards, 64, per_shard)
+        };
+        let single = run(1);
+        let sharded = run(5);
+        assert_eq!(single.len(), sharded.len());
+        assert_eq!(single.len(), 42);
+        for (a, b) in single.iter().zip(&sharded) {
+            assert_eq!(a.window, b.window);
+            assert_eq!(a.counts, b.counts, "pane {}", a.window);
+            assert_eq!(a.top_k(5), b.top_k(5), "pane {}", a.window);
+        }
+        assert_eq!(single.iter().map(|w| w.total()).sum::<u64>(), 6_000);
+    }
+
+    #[test]
+    fn sliding_windows_merge_consecutive_panes() {
+        // three panes of 10ns with distinct keys
+        let mk = |window: u64, counts: Vec<(Key, u64)>| {
+            let mut gather = TopKGather::new(1, 16);
+            for &(k, c) in &counts {
+                gather.absorb(k, c);
+            }
+            WindowSnapshot { window, window_ns: 10, panes: 1, counts, gather }
+        };
+        let panes = vec![
+            mk(0, vec![(1, 5)]),
+            mk(1, vec![(1, 2), (2, 4)]),
+            mk(2, vec![(3, 7)]),
+        ];
+        let slid = sliding(&panes, 2);
+        assert_eq!(slid.len(), 3);
+        // ramp-up window: just pane 0
+        assert_eq!(slid[0].counts, vec![(1, 5)]);
+        assert_eq!(slid[1].counts, vec![(1, 7), (2, 4)]);
+        // pane 0's mass left the span; pane 1's share of key 1 remains
+        assert_eq!(slid[2].counts, vec![(1, 2), (2, 4), (3, 7)]);
+        assert_eq!(slid[2].panes, 2);
+        assert_eq!(slid[2].start_ns(), 10);
+        assert_eq!(slid[2].end_ns(), 30);
+        assert!(slid[1].gather.estimate(1) >= 7.0);
+        assert_eq!(slid[1].top_k(1), vec![(1, 7)]);
+    }
+
+    #[test]
+    fn sliding_skips_panes_outside_the_span_even_with_gaps() {
+        let mk = |window: u64, counts: Vec<(Key, u64)>| {
+            let mut gather = TopKGather::new(1, 16);
+            for &(k, c) in &counts {
+                gather.absorb(k, c);
+            }
+            WindowSnapshot { window, window_ns: 10, panes: 1, counts, gather }
+        };
+        // pane 1 empty (absent): window of 2 panes ending at pane 2
+        // must NOT include pane 0
+        let panes = vec![mk(0, vec![(1, 5)]), mk(2, vec![(2, 3)])];
+        let slid = sliding(&panes, 2);
+        assert_eq!(slid[1].counts, vec![(2, 3)]);
+    }
+}

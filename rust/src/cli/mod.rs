@@ -123,7 +123,7 @@ impl Args {
                 "scheme" | "workload" | "identifier" | "artifacts_dir" => Value::Str(v.clone()),
                 "tuples" | "sources" | "workers" | "key_capacity" | "epoch" | "d_min"
                 | "interval" | "vnodes" | "seed" | "service_ns" | "interarrival_ns" | "batch"
-                | "agg_flush_ms" | "agg_shards" => {
+                | "agg_flush_ms" | "agg_shards" | "agg_window_ms" => {
                     Value::Int(v.parse().map_err(|_| CliError(format!("--{k}: bad int '{v}'")))?)
                 }
                 "zipf_z" | "alpha" | "theta_num" | "rebalance_threshold" => {
@@ -213,6 +213,16 @@ mod tests {
         a.apply_to_config(&mut cfg).unwrap();
         assert_eq!(cfg.agg_shards, 4);
         let bad = parse("--agg_shards nope", false);
+        assert!(bad.apply_to_config(&mut cfg).is_err());
+    }
+
+    #[test]
+    fn agg_window_ms_flag_applies() {
+        let mut cfg = crate::config::Config::default();
+        let a = parse("--agg_window_ms 250", false);
+        a.apply_to_config(&mut cfg).unwrap();
+        assert_eq!(cfg.agg_window_ms, 250);
+        let bad = parse("--agg_window_ms soon", false);
         assert!(bad.apply_to_config(&mut cfg).is_err());
     }
 

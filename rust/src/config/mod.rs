@@ -81,6 +81,15 @@ pub struct Config {
     /// shard-count-invariant — only parallelism and the per-shard
     /// ledgers change.
     pub agg_shards: usize,
+    /// Windowed aggregation: tumbling-pane length in milliseconds of
+    /// *event time* (`--agg_window_ms`; virtual ms in the simulator,
+    /// trace-emit ms in the runtime engine). 0 = unwindowed, exactly
+    /// today's all-time fold. When > 0, closed panes retire on
+    /// watermark advance into per-window exact counts + per-window
+    /// top-k (`SimResult::windows` / `RtResult::windows`); per-window
+    /// results are invariant under scheme, shard count, flush cadence
+    /// and engine.
+    pub agg_window_ms: u64,
 }
 
 impl Default for Config {
@@ -109,6 +118,7 @@ impl Default for Config {
             rebalance_threshold: 0.2,
             agg_flush_ms: DEFAULT_AGG_FLUSH_MS,
             agg_shards: 1,
+            agg_window_ms: 0,
         }
     }
 }
@@ -219,6 +229,9 @@ impl Config {
             "agg_shards" | "aggregate.shards" => {
                 self.agg_shards = v.as_int().ok_or_else(|| err("int"))? as usize
             }
+            "agg_window_ms" | "aggregate.window_ms" => {
+                self.agg_window_ms = v.as_int().ok_or_else(|| err("int"))? as u64
+            }
             other => return Err(ConfigError::UnknownKey(other.to_string())),
         }
         Ok(())
@@ -264,6 +277,14 @@ impl Config {
             return Err(ConfigError::Type(format!(
                 "agg_flush_ms must be <= 3600000 (1h), got {}",
                 self.agg_flush_ms
+            )));
+        }
+        // same ms→ns overflow bound (and negative-int wrap catch) as
+        // agg_flush_ms; 0 = unwindowed is valid
+        if self.agg_window_ms > 3_600_000 {
+            return Err(ConfigError::Type(format!(
+                "agg_window_ms must be <= 3600000 (1h), got {}",
+                self.agg_window_ms
             )));
         }
         // upper bound also catches negative CLI ints wrapped via `as usize`
@@ -359,6 +380,21 @@ epoch = 2000
         cfg.validate().unwrap();
         // a negative CLI int wraps to a huge u64; validation must catch it
         cfg.agg_flush_ms = (-1i64) as u64;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn agg_window_ms_configurable_and_bounded() {
+        let f = ConfigFile::parse("[aggregate]\nwindow_ms = 250\n").unwrap();
+        let mut cfg = Config::default();
+        assert_eq!(cfg.agg_window_ms, 0, "unwindowed by default");
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.agg_window_ms, 250);
+        cfg.validate().unwrap();
+        cfg.agg_window_ms = 0; // unwindowed: valid
+        cfg.validate().unwrap();
+        // a negative CLI int wraps to a huge u64; validation must catch it
+        cfg.agg_window_ms = (-1i64) as u64;
         assert!(cfg.validate().is_err());
     }
 

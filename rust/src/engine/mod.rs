@@ -31,11 +31,21 @@
 //! flush scatter in [`sim`]), so the per-worker partials every
 //! key-splitting scheme produces are reassembled into exact merged
 //! counts — shard-count-invariantly. The flush cadence is
-//! [`crate::config::Config::agg_flush_ms`] (`--agg_flush_ms`); the
-//! traffic it costs lands in `SimResult::agg` / `RtResult::agg`, with
-//! per-shard ledgers and the shard-imbalance summary in `shard_agg` and
-//! global approximate top-k behind the scatter-gather
-//! [`crate::aggregate::TopKGather`] front-end.
+//! [`crate::config::Config::agg_flush_ms`] (`--agg_flush_ms`), snapped
+//! to one shared boundary grid ([`crate::aggregate::next_boundary`]) in
+//! both engines; the traffic it costs lands in `SimResult::agg` /
+//! `RtResult::agg`, with per-shard ledgers and the shard-imbalance
+//! summary in `shard_agg` and global approximate top-k behind the
+//! scatter-gather [`crate::aggregate::TopKGather`] front-end.
+//!
+//! With [`crate::config::Config::agg_window_ms`] (`--agg_window_ms`)
+//! set, the fabric also runs **windowed**: tuples land in tumbling
+//! event-time panes (virtual arrival time in [`sim`], trace emit time
+//! in [`rt`]), watermark advance retires closed panes into per-window
+//! exact counts + per-window top-k (`SimResult::windows` /
+//! `RtResult::windows`, pane lifecycle in `window_stats`), and
+//! [`crate::aggregate::sliding`] composes sliding windows from the
+//! panes.
 
 pub mod pipeline;
 pub mod rt;

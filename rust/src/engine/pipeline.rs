@@ -142,6 +142,15 @@ impl PipelineBuilder {
         self
     }
 
+    /// Windowed aggregation: tumbling-pane length in event-time ms
+    /// (0 = unwindowed). Closed panes retire into per-window exact
+    /// counts + per-window top-k in `SimResult::windows` /
+    /// `RtResult::windows`; all-time merged results are unchanged.
+    pub fn agg_window_ms(mut self, ms: u64) -> Self {
+        self.cfg.agg_window_ms = ms;
+        self
+    }
+
     /// PRNG seed.
     pub fn seed(mut self, seed: u64) -> Self {
         self.cfg.seed = seed;
@@ -243,7 +252,8 @@ impl PipelineBuilder {
         let sim = Simulator::new(topology, sources, cfg.interarrival_ns)
             .with_batch(cfg.batch)
             .with_agg_flush(cfg.agg_flush_ms.saturating_mul(1_000_000))
-            .with_agg_shards(cfg.agg_shards);
+            .with_agg_shards(cfg.agg_shards)
+            .with_agg_window(cfg.agg_window_ms.saturating_mul(1_000_000));
         let gen = by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
         SimJob { sim, gen }
     }
@@ -276,6 +286,7 @@ impl PipelineBuilder {
             batch: cfg.batch,
             agg_flush_ns: cfg.agg_flush_ms.saturating_mul(1_000_000),
             agg_shards: cfg.agg_shards,
+            agg_window_ns: cfg.agg_window_ms.saturating_mul(1_000_000),
         };
         RtJob { trace, sources, workers: cfg.workers, opts }
     }
@@ -445,6 +456,43 @@ mod tests {
             .build_rt()
             .run();
         assert_eq!(rt.shard_agg.n_shards(), 3);
+        assert_eq!(rt.merged, sim.merged_counts);
+    }
+
+    #[test]
+    fn builder_wires_agg_window_into_both_engines() {
+        // identical trace timing (trace ts == sim arrival time), so the
+        // per-window counts must agree byte for byte across engines
+        let sim = Pipeline::builder()
+            .workload("zf")
+            .scheme(SchemeKind::Pkg)
+            .sources(2)
+            .workers(4)
+            .tuples(10_000)
+            .interarrival_ns(500)
+            .agg_window_ms(1)
+            .build_sim()
+            .run();
+        assert_eq!(sim.windows.len(), 5, "10k tuples × 500ns = 5ms = 5 panes");
+        assert_eq!(sim.windows.iter().map(|w| w.total()).sum::<u64>(), 10_000);
+
+        let rt = Pipeline::builder()
+            .workload("zf")
+            .scheme(SchemeKind::Pkg)
+            .sources(2)
+            .workers(4)
+            .tuples(10_000)
+            .interarrival_ns(500)
+            .agg_window_ms(1)
+            .per_tuple_ns(vec![0.0])
+            .build_rt()
+            .run();
+        assert_eq!(rt.windows.len(), sim.windows.len());
+        for (a, b) in sim.windows.iter().zip(&rt.windows) {
+            assert_eq!(a.window, b.window);
+            assert_eq!(a.counts, b.counts, "pane {}", a.window);
+        }
+        // the unwindowed all-time result is untouched by windowing
         assert_eq!(rt.merged, sim.merged_counts);
     }
 

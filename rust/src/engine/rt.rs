@@ -15,28 +15,40 @@
 //!   memory-overhead metric), optionally burns `P_w` of CPU per tuple
 //!   to model operator cost / heterogeneity, and records the
 //!   end-to-end latency (source-emit → processing-complete) in a local
-//!   histogram. Each worker also keeps a delta [`PartialAgg`] and
-//!   scatters it across the aggregator shards every
-//!   [`RtOptions::agg_flush_ns`] (plus a final drain at shutdown).
+//!   histogram. Each worker also keeps a delta [`WindowedPartial`]
+//!   (per-pane when `--agg_window_ms > 0`, a single eternal pane
+//!   otherwise) and scatters it across the aggregator shards every
+//!   [`RtOptions::agg_flush_ns`] — on the boundary-snapped grid shared
+//!   with the simulator — plus a final drain at shutdown.
 //! * one **aggregator thread per merge shard** ([`RtOptions::agg_shards`];
 //!   1 = the classic single aggregator): the topology's second stage as
 //!   a fabric. Workers scatter each flush batch by key range
 //!   ([`crate::aggregate::ShardRouter`]) and ship the per-shard
 //!   sub-batches over dedicated worker→shard channels; each shard
-//!   absorbs into its own [`MergeStage`] (metering flush traffic,
-//!   payload bytes, merge time, and flush→merge latency) and keeps a
-//!   [`TopKSketch`] of its flush mass for the scatter-gather top-k
-//!   front-end ([`crate::aggregate::TopKGather`]). This is the
-//!   downstream aggregation the PKG paper charges against key
+//!   absorbs into its own [`WindowedMerge`] (per-pane merge stages,
+//!   metering flush traffic, payload bytes, merge time, and
+//!   flush→merge latency) and keeps a [`TopKSketch`] of its flush mass
+//!   for the scatter-gather top-k front-end
+//!   ([`crate::aggregate::TopKGather`]). Windowed, flush messages
+//!   carry per-worker event-time watermarks (workers poll with a
+//!   timeout so watermark-only flushes flow even when their data
+//!   channel is quiet) and shards retire closed panes when the min
+//!   across progress-reporting workers passes a pane's end — a
+//!   heuristic whose misfires take the late-reopen path and re-merge
+//!   exactly. This is
+//!   the downstream aggregation the PKG paper charges against key
 //!   splitting, without which per-worker counts are only partials —
 //!   now with the single-point merge bottleneck sharded away.
 //!
 //! No source↔worker communication happens besides the data channels —
 //! FISH's worker-state inference gets no hidden help.
 
-use crate::aggregate::{self, Count, MergeStage, PartialAgg, ShardRouter, TopKGather, TopKSketch};
+use crate::aggregate::{
+    self, Count, ShardRouter, TopKGather, TopKSketch, WindowSnapshot, WindowedMerge,
+    WindowedPartial,
+};
 use crate::coordinator::{ClusterView, Grouper};
-use crate::metrics::{AggStats, Histogram, ShardAggStats};
+use crate::metrics::{AggStats, Histogram, ShardAggStats, WindowStats};
 use crate::workload::Trace;
 use crate::Key;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -50,14 +62,29 @@ struct Msg {
     key: Key,
     /// ns since pipeline start, from the source's emit clock.
     emit_ns: u64,
+    /// The tuple's *event* time: the trace's scheduled emit ns, stamped
+    /// by the source. Windows are assigned by this — not by wall clock —
+    /// so per-window counts are deterministic and engine-invariant
+    /// (the trace's `ts` is exactly the simulator's arrival time).
+    ts: u64,
 }
 
-/// One partial-flush batch on its way to the aggregator.
+/// One partial-flush batch on its way to an aggregator shard.
 struct FlushMsg {
-    /// ns since pipeline start when the worker emitted the flush.
+    /// Worker that emitted the flush (indexes the shard's watermark
+    /// table).
+    worker: usize,
+    /// Wall ns since pipeline start when the worker emitted the flush.
     emit_ns: u64,
-    /// Drained per-key deltas since the worker's previous flush.
-    entries: Vec<(Key, u64)>,
+    /// The worker's event-time high-water mark: the highest tuple `ts`
+    /// it has processed. The shard's retirement watermark is the min of
+    /// these across workers — heuristic under cross-source skew, so a
+    /// late delta may reopen a pane (re-merged exactly at assembly).
+    watermark: u64,
+    /// Drained per-pane, per-key deltas since the worker's previous
+    /// flush (one entry per pane; empty when the flush only carries the
+    /// watermark).
+    panes: Vec<(u64, Vec<(Key, u64)>)>,
 }
 
 /// Result of a runtime deployment run.
@@ -93,6 +120,18 @@ pub struct RtResult {
     /// Scatter-gather top-k front-end assembled from the per-shard
     /// sketches, queryable with an explicit rank-error bound.
     pub gather: TopKGather,
+    /// Windowed aggregation output (`--agg_window_ms > 0`; empty when
+    /// unwindowed): one [`WindowSnapshot`] per tumbling event-time
+    /// pane, ascending. Panes are assigned by the tuples' trace emit
+    /// times, so per-window counts are byte-identical to the
+    /// simulator's for the same trace — thread interleaving and
+    /// wall-clock flush timing only move *when* panes retire, never
+    /// what they contain.
+    pub windows: Vec<WindowSnapshot>,
+    /// Pane-lifecycle ledger folded across the aggregator shards
+    /// (retirements, late reopens, open-pane memory peaks); all zeros
+    /// when unwindowed.
+    pub window_stats: WindowStats,
 }
 
 impl RtResult {
@@ -136,6 +175,9 @@ pub struct RtOptions {
     /// Stage-two merge shards — one aggregator thread each. See
     /// [`crate::config::Config::agg_shards`].
     pub agg_shards: usize,
+    /// Tumbling-pane length in event-time ns (0 = unwindowed). See
+    /// [`crate::config::Config::agg_window_ms`].
+    pub agg_window_ns: u64,
 }
 
 impl Default for RtOptions {
@@ -147,6 +189,7 @@ impl Default for RtOptions {
             batch: crate::config::DEFAULT_BATCH,
             agg_flush_ns: crate::config::DEFAULT_AGG_FLUSH_MS * 1_000_000,
             agg_shards: 1,
+            agg_window_ns: 0,
         }
     }
 }
@@ -164,19 +207,35 @@ fn burn(ns: f64) {
     }
 }
 
-/// Scatter one drained flush batch across the shard fabric: each
-/// non-empty per-shard sub-batch ships on its worker→shard channel
-/// stamped with the same emit time. Send errors are ignored — a gone
-/// shard only happens at shutdown.
+/// Scatter one drained (per-pane) flush across the shard fabric: each
+/// shard gets the panes' sub-batches it owns, on its worker→shard
+/// channel, stamped with the same emit time and the worker's event-time
+/// watermark. Unwindowed, shards with nothing to absorb are skipped
+/// (today's traffic shape); windowed, every shard gets the message —
+/// an empty one still advances the worker's watermark so panes can
+/// retire. Send errors are ignored — a gone shard only happens at
+/// shutdown.
 fn send_flush(
     router: &ShardRouter,
     shard_txs: &[Sender<FlushMsg>],
+    worker: usize,
     emit_ns: u64,
-    batch: Vec<(Key, u64)>,
+    watermark: u64,
+    flushed: Vec<(u64, Vec<(Key, u64)>)>,
+    windowed: bool,
 ) {
-    for (s, entries) in router.split(batch).into_iter().enumerate() {
-        if !entries.is_empty() {
-            let _ = shard_txs[s].send(FlushMsg { emit_ns, entries });
+    let mut per_shard: Vec<Vec<(u64, Vec<(Key, u64)>)>> =
+        (0..shard_txs.len()).map(|_| Vec::new()).collect();
+    for (win, batch) in flushed {
+        for (s, sub) in router.split(batch).into_iter().enumerate() {
+            if !sub.is_empty() {
+                per_shard[s].push((win, sub));
+            }
+        }
+    }
+    for (s, panes) in per_shard.into_iter().enumerate() {
+        if windowed || !panes.is_empty() {
+            let _ = shard_txs[s].send(FlushMsg { worker, emit_ns, watermark, panes });
         }
     }
 }
@@ -223,6 +282,7 @@ pub fn run(
     // tuple-credit backpressure loop. Workers scatter each flush by key
     // range, so a shard only ever sees its own arc of the key space.
     let n_shards = opts.agg_shards.max(1);
+    let agg_window_ns = opts.agg_window_ns;
     let router = Arc::new(ShardRouter::new(n_shards));
     let mut shard_txs: Vec<Sender<FlushMsg>> = Vec::with_capacity(n_shards);
     let mut shard_handles = Vec::with_capacity(n_shards);
@@ -230,19 +290,38 @@ pub fn run(
         let (tx, rx) = channel::<FlushMsg>();
         shard_txs.push(tx);
         shard_handles.push(thread::spawn(move || {
-            let mut stage = MergeStage::new(Count);
+            let mut stage =
+                WindowedMerge::new(Count, agg_window_ns, aggregate::DEFAULT_GATHER_CAPACITY);
             let mut sketch = TopKSketch::new(aggregate::DEFAULT_GATHER_CAPACITY);
             let mut lat = Histogram::new();
+            // per-worker event-time high-water marks; panes retire when
+            // the min across workers passes their end
+            let mut worker_wm = vec![0u64; n_workers];
             while let Ok(flush) = rx.recv() {
-                let recv_ns = epoch.elapsed().as_nanos() as u64;
-                lat.record(recv_ns.saturating_sub(flush.emit_ns));
-                for &(key, delta) in &flush.entries {
-                    sketch.absorb(key, delta);
+                if !flush.panes.is_empty() {
+                    let recv_ns = epoch.elapsed().as_nanos() as u64;
+                    lat.record(recv_ns.saturating_sub(flush.emit_ns));
                 }
-                stage.absorb(flush.entries);
+                for (win, entries) in flush.panes {
+                    for &(key, delta) in &entries {
+                        sketch.absorb(key, delta);
+                    }
+                    stage.absorb(win, entries);
+                }
+                if flush.watermark > worker_wm[flush.worker] {
+                    worker_wm[flush.worker] = flush.watermark;
+                }
+                // min over workers that have reported event-time progress:
+                // a worker that never sees a tuple (e.g. an FG worker whose
+                // key arc is empty) would otherwise pin the fabric at 0 and
+                // stall every retirement until shutdown. If a silent worker
+                // does speak up later, its deltas take the late-reopen path
+                // and re-merge exactly — the heuristic moves retirement
+                // timing, never the final counts.
+                let wm = worker_wm.iter().copied().filter(|&w| w > 0).min().unwrap_or(0);
+                stage.advance(wm);
             }
-            let (merged, stats) = stage.into_sorted();
-            (merged, stats, sketch, lat)
+            (stage.finish(), sketch, lat)
         }));
     }
 
@@ -254,17 +333,39 @@ pub fn run(
         let credits = Arc::clone(&inflight[w]);
         let agg_txs: Vec<Sender<FlushMsg>> = shard_txs.clone();
         let router = Arc::clone(&router);
+        let windowed = agg_window_ns > 0;
         worker_handles.push(thread::spawn(move || {
             let mut hist = Histogram::new();
             let mut count = 0u64;
             let mut state: std::collections::HashMap<Key, u64> = std::collections::HashMap::new();
-            let mut delta = PartialAgg::new(Count);
+            let mut delta = WindowedPartial::new(Count, agg_window_ns);
+            let mut watermark = 0u64;
             let mut next_flush = agg_flush_ns;
-            while let Ok(chunk) = rx.recv() {
-                for msg in chunk {
+            // windowed, the worker polls with a timeout so watermark-only
+            // flushes keep flowing even when its data channel goes quiet
+            // — otherwise a worker idle mid-run would pin every shard's
+            // min-watermark and stall pane retirement until shutdown
+            let poll = windowed && agg_flush_ns > 0;
+            loop {
+                let chunk = if poll {
+                    match rx.recv_timeout(std::time::Duration::from_nanos(agg_flush_ns)) {
+                        Ok(c) => Some(c),
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                } else {
+                    match rx.recv() {
+                        Ok(c) => Some(c),
+                        Err(_) => break,
+                    }
+                };
+                for msg in chunk.into_iter().flatten() {
                     // the actual operator: word count
                     *state.entry(msg.key).or_insert(0) += 1;
-                    delta.observe(msg.key, 1);
+                    delta.observe(msg.key, 1, msg.ts);
+                    if msg.ts > watermark {
+                        watermark = msg.ts;
+                    }
                     burn(cost);
                     let done_ns = epoch.elapsed().as_nanos() as u64;
                     hist.record(done_ns.saturating_sub(msg.emit_ns));
@@ -274,21 +375,29 @@ pub fn run(
                 }
                 // partial flush: scatter the delta across the shard
                 // fabric once per interval (checked at chunk granularity
-                // — the flush itself is off the per-tuple path)
+                // — the flush itself is off the per-tuple path). The
+                // schedule snaps to the interval's boundary grid
+                // (`next_boundary`, shared with the simulator) instead
+                // of `now + interval`, so cadence cannot drift by
+                // per-chunk processing time. Windowed, empty flushes
+                // still ship: they carry the watermark panes retire on.
                 if agg_flush_ns > 0 {
                     let now = epoch.elapsed().as_nanos() as u64;
                     if now >= next_flush {
-                        if !delta.is_empty() {
-                            send_flush(&router, &agg_txs, now, delta.flush());
+                        if windowed || !delta.is_empty() {
+                            let batch = delta.flush();
+                            send_flush(&router, &agg_txs, w, now, watermark, batch, windowed);
                         }
-                        next_flush = now + agg_flush_ns;
+                        next_flush = aggregate::next_boundary(now, agg_flush_ns);
                     }
                 }
             }
-            // shutdown drain: whatever accumulated since the last flush
-            if !delta.is_empty() {
+            // shutdown drain: whatever accumulated since the last flush,
+            // with the watermark pinned open — this worker is done, it
+            // can never hold a pane back again
+            if windowed || !delta.is_empty() {
                 let now = epoch.elapsed().as_nanos() as u64;
-                send_flush(&router, &agg_txs, now, delta.flush());
+                send_flush(&router, &agg_txs, w, now, u64::MAX, delta.flush(), windowed);
             }
             (hist, count, state.len())
         }));
@@ -313,6 +422,7 @@ pub fn run(
             let mut next_emit = (s as u64) * gap / n_sources.max(1) as u64;
             let mut keys: Vec<crate::Key> = Vec::with_capacity(batch);
             let mut emits: Vec<u64> = Vec::with_capacity(batch);
+            let mut tss: Vec<u64> = Vec::with_capacity(batch);
             let mut routed: Vec<usize> = vec![0; batch];
             let mut chunks: Vec<Vec<Msg>> = (0..txs.len()).map(|_| Vec::new()).collect();
             let mut i = s;
@@ -323,6 +433,7 @@ pub fn run(
                 // latency free of artificial batching delay)
                 keys.clear();
                 emits.clear();
+                tss.clear();
                 while i < n && keys.len() < batch {
                     let t = trace.tuples()[i];
                     if gap > 0 {
@@ -337,6 +448,7 @@ pub fn run(
                     }
                     keys.push(t.key);
                     emits.push(epoch.elapsed().as_nanos() as u64);
+                    tss.push(t.ts); // event time: the trace's scheduled emit
                     i += n_sources;
                 }
 
@@ -354,7 +466,7 @@ pub fn run(
                 // one chunk send per destination worker (vs one send per
                 // tuple): this is the channel-contention win
                 for j in 0..m {
-                    chunks[routed[j]].push(Msg { key: keys[j], emit_ns: emits[j] });
+                    chunks[routed[j]].push(Msg { key: keys[j], emit_ns: emits[j], ts: tss[j] });
                 }
                 for (w, chunk) in chunks.iter_mut().enumerate() {
                     if chunk.is_empty() {
@@ -401,16 +513,31 @@ pub fn run(
     // single-aggregator ordering byte for byte
     let mut merged: Vec<(Key, u64)> = Vec::new();
     let mut per_shard: Vec<AggStats> = Vec::with_capacity(n_shards);
+    let mut per_shard_windows: Vec<Vec<aggregate::WindowResult>> = Vec::with_capacity(n_shards);
+    let mut window_stats = WindowStats::default();
     let mut sketches: Vec<TopKSketch> = Vec::with_capacity(n_shards);
     let mut agg_latency = Histogram::new();
     for h in shard_handles {
-        let (m, stats, sketch, lat) = h.join().expect("aggregator shard thread panicked");
-        merged.extend(m);
-        per_shard.push(stats);
+        let (out, sketch, lat) = h.join().expect("aggregator shard thread panicked");
+        merged.extend(out.all_time);
+        per_shard.push(out.stats);
+        window_stats.absorb(&out.window_stats);
+        per_shard_windows.push(out.windows);
         sketches.push(sketch);
         agg_latency.merge(&lat);
     }
     merged.sort_unstable_by_key(|&(k, _)| k);
+    let windows = if agg_window_ns > 0 {
+        aggregate::assemble_windows(
+            agg_window_ns,
+            n_shards,
+            aggregate::DEFAULT_GATHER_CAPACITY,
+            per_shard_windows,
+        )
+    } else {
+        window_stats = WindowStats::default();
+        Vec::new()
+    };
     let shard_agg = ShardAggStats { per_shard };
     let agg = shard_agg.total();
     let gather = TopKGather::from_shards(sketches);
@@ -436,6 +563,8 @@ pub fn run(
         shard_agg,
         agg_latency,
         gather,
+        windows,
+        window_stats,
     }
 }
 
@@ -522,6 +651,50 @@ mod tests {
         }
         // every shard that absorbed traffic is visible in the ledger
         assert!(sharded.shard_agg.per_shard.iter().any(|s| s.messages > 0));
+    }
+
+    #[test]
+    fn windowed_rt_panes_partition_the_trace_by_event_time() {
+        // materialise with a real inter-arrival so the trace carries
+        // meaningful event times (500ns × 20k tuples = 10ms of stream)
+        let mut gen = by_name("zf", 20_000, 1.5, 7);
+        let trace = Arc::new(materialise(gen.as_mut(), 500));
+        let mut cfg = Config::default();
+        cfg.workers = 4;
+        let sources: Vec<Box<dyn Grouper>> =
+            (0..2).map(|s| make_kind(SchemeKind::Pkg, &cfg, s)).collect();
+        let opts = RtOptions {
+            agg_shards: 3,
+            agg_window_ns: 2_000_000, // 2ms panes → 5 panes
+            ..Default::default()
+        };
+        let r = run(&trace, sources, 4, &opts);
+        assert_eq!(r.windows.len(), 5);
+        assert_eq!(r.windows.iter().map(|w| w.total()).sum::<u64>(), 20_000);
+        for (i, w) in r.windows.iter().enumerate() {
+            assert_eq!(w.window, i as u64);
+            assert_eq!(w.total(), 4_000, "each 2ms pane holds 4000 scheduled emits");
+            // the pane's exact counts match the trace slice it covers
+            let mut truth: std::collections::HashMap<Key, u64> = std::collections::HashMap::new();
+            for t in trace.tuples() {
+                if t.ts >= w.start_ns() && t.ts < w.end_ns() {
+                    *truth.entry(t.key).or_insert(0) += 1;
+                }
+            }
+            assert_eq!(w.counts.len(), truth.len(), "pane {i}");
+            for &(k, c) in &w.counts {
+                assert_eq!(c, truth[&k], "pane {i} key {k}");
+            }
+        }
+        assert!(r.window_stats.panes_retired > 0);
+    }
+
+    #[test]
+    fn unwindowed_rt_reports_no_windows() {
+        let trace = small_trace();
+        let r = run_scheme(SchemeKind::Pkg, 4, &trace);
+        assert!(r.windows.is_empty());
+        assert_eq!(r.window_stats.panes_retired, 0);
     }
 
     #[test]

@@ -17,22 +17,33 @@
 //! Figs. 3, 11–17) — plus imbalance diagnostics.
 //!
 //! The simulated topology is **two-stage**: every worker keeps a
-//! [`PartialAgg`] of its per-key counts and flushes the delta downstream
-//! whenever virtual time crosses an `agg_flush` boundary (plus a final
-//! drain, and an eager drain of any worker removed by churn). Stage two
-//! is a [`ShardedMerge`] fabric (`--agg_shards` key-range merge shards;
-//! one shard ≡ the single aggregator): each flush is scattered across
-//! the shards deterministically, with a [`TopKGather`] absorbing the
-//! same deltas for bounded-memory approximate top-k. The merged counts
-//! are exact regardless of how a scheme split keys *or* how many shards
-//! merged them — the end-to-end correctness oracle — and the flush
-//! traffic is metered per shard in [`SimResult::shard_agg`], modelling
-//! the aggregation cost the PKG paper charges against key splitting.
+//! [`WindowedPartial`] of its per-(pane, key) counts and flushes the
+//! deltas downstream whenever virtual time crosses an `agg_flush`
+//! boundary (plus a final drain, and an eager drain of any worker
+//! removed by churn). Stage two is a fabric of per-shard
+//! [`WindowedMerge`] stages (`--agg_shards` key-range merge shards; one
+//! shard ≡ the single aggregator): each pane's flush batch is scattered
+//! across the shards deterministically, with a [`TopKGather`] absorbing
+//! the same deltas for bounded-memory approximate all-time top-k. The
+//! merged counts are exact regardless of how a scheme split keys *or*
+//! how many shards merged them — the end-to-end correctness oracle —
+//! and the flush traffic is metered per shard in
+//! [`SimResult::shard_agg`], modelling the aggregation cost the PKG
+//! paper charges against key splitting.
+//!
+//! With `--agg_window_ms > 0` the fabric runs **windowed**: tuples are
+//! assigned to tumbling panes by arrival (event) time, each periodic
+//! flush advances the watermark (exact here — virtual time is global),
+//! closed panes retire into [`SimResult::windows`] with exact
+//! per-window counts and a per-window top-k gather, and pane lifecycle
+//! is accounted in [`SimResult::window_stats`].
 
 use super::topology::Topology;
-use crate::aggregate::{self, Count, PartialAgg, ShardedMerge, TopKGather};
+use crate::aggregate::{
+    self, Count, ShardRouter, TopKGather, WindowSnapshot, WindowedMerge, WindowedPartial,
+};
 use crate::coordinator::{ClusterView, Grouper};
-use crate::metrics::{AggStats, Histogram, Imbalance, MemoryTracker, ShardAggStats};
+use crate::metrics::{AggStats, Histogram, Imbalance, MemoryTracker, ShardAggStats, WindowStats};
 use crate::workload::Generator;
 use crate::{Key, WorkerId};
 
@@ -80,6 +91,18 @@ pub struct SimResult {
     /// of the flush mass, queryable via [`TopKGather::top`] with an
     /// explicit rank-error bound.
     pub gather: TopKGather,
+    /// Windowed aggregation output (`--agg_window_ms > 0`; empty when
+    /// unwindowed): one [`WindowSnapshot`] per tumbling event-time pane,
+    /// ascending — exact per-window counts (byte-identical across
+    /// schemes, shard counts, flush cadences and engines) plus the
+    /// per-window top-k gather. "Trending in the last N ms" is
+    /// `windows.last().top_k(k)`; [`aggregate::sliding`] composes
+    /// longer sliding windows from these panes.
+    pub windows: Vec<WindowSnapshot>,
+    /// Pane-lifecycle ledger (retirements, late reopens, open-pane
+    /// memory peaks), folded across the merge shards; all zeros when
+    /// unwindowed.
+    pub window_stats: WindowStats,
 }
 
 impl SimResult {
@@ -102,42 +125,102 @@ impl SimResult {
 /// Default routing batch size (see [`crate::config::Config::batch`]).
 pub use crate::config::DEFAULT_BATCH;
 
-/// Stage-two state for one simulation run: the merge-shard fabric, the
-/// scatter-gather top-k sketches, and the staleness bookkeeping every
-/// flush site shares (periodic, churn drain, end-of-stream drain).
+/// Stage-two state for one simulation run: per-shard windowed merge
+/// stages behind one shard router (a pane of `agg_window_ns`; 0 = one
+/// eternal pane = the unwindowed fabric), the all-time scatter-gather
+/// top-k sketches, and the staleness bookkeeping every flush site
+/// shares (periodic, churn drain, end-of-stream drain).
 struct StageTwo {
-    merge: ShardedMerge<Count>,
+    router: ShardRouter,
+    shards: Vec<WindowedMerge<Count>>,
     gather: TopKGather,
     /// Virtual-ns staleness recorded at each worker flush.
     staleness: Histogram,
     /// Per-slot virtual time of the previous flush.
     last_flush: Vec<u64>,
+    window_ns: u64,
 }
 
 impl StageTwo {
-    fn new(n_shards: usize, n_slots: usize) -> Self {
+    fn new(n_shards: usize, n_slots: usize, window_ns: u64) -> Self {
         StageTwo {
-            merge: ShardedMerge::new(Count, n_shards),
+            router: ShardRouter::new(n_shards),
+            shards: (0..n_shards)
+                .map(|_| {
+                    WindowedMerge::new(Count, window_ns, crate::aggregate::DEFAULT_GATHER_CAPACITY)
+                })
+                .collect(),
             gather: TopKGather::new(n_shards, crate::aggregate::DEFAULT_GATHER_CAPACITY),
             staleness: Histogram::new(),
             last_flush: vec![0; n_slots],
+            window_ns,
         }
     }
 
     /// Flush worker `w`'s partial at virtual time `now` (no-op when the
-    /// partial is empty): record the delta's staleness, then route the
-    /// batch once and feed each per-shard sub-batch to both that
-    /// shard's gather sketch and its merge stage.
-    fn flush(&mut self, w: usize, now: u64, partial: &mut PartialAgg<Count>) {
+    /// partial is empty): record the delta's staleness, then route each
+    /// pane's batch once and feed each per-shard sub-batch to both that
+    /// shard's gather sketch and its windowed merge stage.
+    fn flush(&mut self, w: usize, now: u64, partial: &mut WindowedPartial<Count>) {
         if partial.is_empty() {
             return;
         }
         self.staleness.record(now.saturating_sub(self.last_flush[w]));
         self.last_flush[w] = now;
-        for (s, sub) in self.merge.split(partial.flush()).into_iter().enumerate() {
-            self.gather.absorb_on(s, &sub);
-            self.merge.absorb_on(s, sub);
+        for (win, batch) in partial.flush() {
+            for (s, sub) in self.router.split(batch).into_iter().enumerate() {
+                self.gather.absorb_on(s, &sub);
+                self.shards[s].absorb(win, sub);
+            }
         }
+    }
+
+    /// Advance the fabric watermark to virtual time `now`, retiring
+    /// closed panes. Exact in the simulator: every tuple arriving
+    /// before `now` has been serviced and flushed by the time this is
+    /// called, so no late deltas (and no pane reopens) are possible.
+    fn advance(&mut self, now: u64) {
+        for shard in self.shards.iter_mut() {
+            shard.advance(now);
+        }
+    }
+
+    /// Finish: all-time merged counts, per-shard ledgers, assembled
+    /// window snapshots (empty when unwindowed) and the folded
+    /// pane-lifecycle stats.
+    #[allow(clippy::type_complexity)]
+    fn into_results(
+        self,
+    ) -> (Vec<(Key, u64)>, ShardAggStats, Vec<WindowSnapshot>, WindowStats, TopKGather, Histogram)
+    {
+        let StageTwo { shards, gather, staleness, window_ns, .. } = self;
+        let n_shards = shards.len();
+        let mut merged_counts: Vec<(Key, u64)> = Vec::new();
+        let mut per_shard = Vec::with_capacity(n_shards);
+        let mut per_shard_windows = Vec::with_capacity(n_shards);
+        let mut window_stats = WindowStats::default();
+        for shard in shards {
+            let out = shard.finish();
+            merged_counts.extend(out.all_time);
+            per_shard.push(out.stats);
+            window_stats.absorb(&out.window_stats);
+            per_shard_windows.push(out.windows);
+        }
+        // shards partition the key space: concat + sort reproduces the
+        // single-aggregator ordering byte for byte
+        merged_counts.sort_unstable_by_key(|&(k, _)| k);
+        let windows = if window_ns > 0 {
+            aggregate::assemble_windows(
+                window_ns,
+                n_shards,
+                aggregate::DEFAULT_GATHER_CAPACITY,
+                per_shard_windows,
+            )
+        } else {
+            window_stats = WindowStats::default();
+            Vec::new()
+        };
+        (merged_counts, ShardAggStats { per_shard }, windows, window_stats, gather, staleness)
     }
 }
 
@@ -152,6 +235,8 @@ pub struct Simulator {
     agg_flush_ns: u64,
     /// Stage-two merge shards (1 = single aggregator).
     agg_shards: usize,
+    /// Tumbling-pane length in virtual ns; 0 = unwindowed.
+    agg_window_ns: u64,
 }
 
 impl Simulator {
@@ -169,6 +254,7 @@ impl Simulator {
             batch: DEFAULT_BATCH,
             agg_flush_ns: crate::config::DEFAULT_AGG_FLUSH_MS * 1_000_000,
             agg_shards: 1,
+            agg_window_ns: 0,
         }
     }
 
@@ -196,6 +282,15 @@ impl Simulator {
         self
     }
 
+    /// Set the tumbling-pane length in virtual ns (0 = unwindowed).
+    /// Tuples are assigned to panes by arrival time, so per-window
+    /// merged counts in [`SimResult::windows`] are invariant under
+    /// flush cadence, shard count and grouping scheme.
+    pub fn with_agg_window(mut self, ns: u64) -> Self {
+        self.agg_window_ns = ns;
+        self
+    }
+
     /// Run `gen` to completion.
     ///
     /// Tuples are drained in batches: each batch shares one
@@ -216,10 +311,11 @@ impl Simulator {
         let mut churn_migrations = 0usize;
         let n_sources = self.sources.len();
 
-        // stage two: per-worker partial aggregates + sharded merge fabric
-        let mut partials: Vec<PartialAgg<Count>> =
-            (0..n_slots).map(|_| PartialAgg::new(Count)).collect();
-        let mut stage2 = StageTwo::new(self.agg_shards, n_slots);
+        // stage two: per-worker (windowed) partial aggregates + the
+        // windowed merge-shard fabric
+        let mut partials: Vec<WindowedPartial<Count>> =
+            (0..n_slots).map(|_| WindowedPartial::new(Count, self.agg_window_ns)).collect();
+        let mut stage2 = StageTwo::new(self.agg_shards, n_slots, self.agg_window_ns);
         let mut next_flush = self.agg_flush_ns;
 
         let mut keys: Vec<crate::Key> = Vec::with_capacity(self.batch);
@@ -305,7 +401,9 @@ impl Simulator {
                 counts[w] += 1;
                 busy[w] += p;
                 memory.touch(keys[i - start], w);
-                partials[w].observe(keys[i - start], 1);
+                // panes are assigned by *arrival* (event) time — worker
+                // choice and queueing delay never move a tuple's window
+                partials[w].observe(keys[i - start], 1, arrival);
             }
 
             // periodic partial flush when virtual time crosses a flush
@@ -317,7 +415,10 @@ impl Simulator {
                     for (w, p) in partials.iter_mut().enumerate() {
                         stage2.flush(w, now, p);
                     }
-                    next_flush = now - now % self.agg_flush_ns + self.agg_flush_ns;
+                    // every arrival before `now` is now flushed, so the
+                    // watermark is exact: closed panes retire here
+                    stage2.advance(now);
+                    next_flush = aggregate::next_boundary(now, self.agg_flush_ns);
                 }
             }
 
@@ -329,8 +430,8 @@ impl Simulator {
         for (w, p) in partials.iter_mut().enumerate() {
             stage2.flush(w, end_of_stream, p);
         }
-        let StageTwo { merge, gather, staleness, .. } = stage2;
-        let (merged_counts, shard_agg) = merge.into_sorted();
+        let (merged_counts, shard_agg, windows, window_stats, gather, staleness) =
+            stage2.into_results();
 
         let makespan = done.iter().copied().max().unwrap_or(0);
         SimResult {
@@ -349,6 +450,8 @@ impl Simulator {
             shard_agg,
             agg_latency: staleness,
             gather,
+            windows,
+            window_stats,
         }
     }
 }
@@ -514,6 +617,53 @@ mod tests {
         assert!(sharded.agg_latency.count() > 0);
         // the gather tracked the flush mass on both topologies
         assert_eq!(single.gather.top(5).top[0].0, sharded.gather.top(5).top[0].0);
+    }
+
+    #[test]
+    fn windowed_panes_partition_the_stream_and_rebuild_the_totals() {
+        let mut cfg = Config::default();
+        cfg.scheme = SchemeKind::Fish;
+        cfg.workers = 8;
+        cfg.tuples = 30_000;
+        cfg.sources = 2;
+        cfg.interarrival_ns = 500; // 15ms of virtual time
+        cfg.agg_window_ms = 2; // → ~8 panes
+        let r = run_config(&cfg);
+        assert!(!r.windows.is_empty());
+        assert_eq!(r.windows.len(), 8, "ceil(15ms / 2ms)");
+        // panes partition the stream exactly…
+        assert_eq!(r.windows.iter().map(|w| w.total()).sum::<u64>(), 30_000);
+        // …and sum back to the all-time merged counts
+        let mut rebuilt: std::collections::HashMap<crate::Key, u64> =
+            std::collections::HashMap::new();
+        for w in &r.windows {
+            for &(k, c) in &w.counts {
+                *rebuilt.entry(k).or_insert(0) += c;
+            }
+        }
+        for &(k, c) in &r.merged_counts {
+            assert_eq!(rebuilt.get(&k), Some(&c), "key {k}");
+        }
+        // each pane covers exactly 2ms of virtual time, 4000 arrivals
+        for (i, w) in r.windows.iter().enumerate() {
+            assert_eq!(w.window, i as u64);
+            assert_eq!(w.end_ns() - w.start_ns(), 2_000_000);
+            if w.end_ns() <= 15_000_000 {
+                assert_eq!(w.total(), 4_000, "pane {i}");
+            }
+        }
+        // panes were retired by watermark advance, not only at the drain
+        assert!(r.window_stats.panes_retired >= r.windows.len() as u64);
+        assert!(r.window_stats.max_open_panes >= 1);
+        assert_eq!(r.window_stats.late_reopens, 0, "sim watermarks are exact");
+    }
+
+    #[test]
+    fn unwindowed_run_reports_no_windows() {
+        let r = run(SchemeKind::Fish, 8, 10_000, 1.5);
+        assert!(r.windows.is_empty());
+        assert_eq!(r.window_stats.panes_retired, 0);
+        assert_eq!(r.window_stats.max_open_entries, 0);
     }
 
     #[test]

@@ -78,12 +78,30 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     t.row(&["shard imbalance max/mean-1".into(), f2(r.shard_agg.imbalance().relative)]);
     // sim flush latency is *virtual* delta staleness, not wall transit
     t.row(&["agg staleness p99 (virtual)".into(), ns(r.agg_latency.quantile(0.99))]);
+    if cfg.agg_window_ms > 0 {
+        t.row(&["agg window".into(), format!("{} ms", cfg.agg_window_ms)]);
+        t.row(&["windows retired".into(), r.windows.len().to_string()]);
+        t.row(&["pane retirements (pane-shard)".into(), r.window_stats.panes_retired.to_string()]);
+        t.row(&["late pane reopens".into(), r.window_stats.late_reopens.to_string()]);
+        t.row(&["peak open panes/shard".into(), r.window_stats.max_open_panes.to_string()]);
+        t.row(&["peak open-pane entries".into(), r.window_stats.max_open_entries.to_string()]);
+    }
     t.row(&["wall time".into(), format!("{wall:.2?}")]);
     t.print();
     let top = r.top_k(5);
     if !top.is_empty() {
-        let mut tt = Table::new("hottest keys (exact merged counts)", &["key", "count"]);
+        let mut tt = Table::new("hottest keys (exact merged counts, all time)", &["key", "count"]);
         for (k, c) in top {
+            tt.row(&[k.to_string(), c.to_string()]);
+        }
+        tt.print();
+    }
+    if let Some(last) = r.windows.last() {
+        let mut tt = Table::new(
+            &format!("trending keys (last {} ms window, exact)", cfg.agg_window_ms),
+            &["key", "count"],
+        );
+        for (k, c) in last.top_k(5) {
             tt.row(&[k.to_string(), c.to_string()]);
         }
         tt.print();
@@ -122,6 +140,14 @@ fn cmd_deploy(args: &Args) -> anyhow::Result<()> {
     t.row(&["shard imbalance max/mean-1".into(), f2(r.shard_agg.imbalance().relative)]);
     // rt flush latency is wall-clock flush→merge transit per shard batch
     t.row(&["agg flush p99 (wall)".into(), ns(r.agg_latency.quantile(0.99))]);
+    if cfg.agg_window_ms > 0 {
+        t.row(&["agg window".into(), format!("{} ms", cfg.agg_window_ms)]);
+        t.row(&["windows retired".into(), r.windows.len().to_string()]);
+        t.row(&["pane retirements (pane-shard)".into(), r.window_stats.panes_retired.to_string()]);
+        t.row(&["late pane reopens".into(), r.window_stats.late_reopens.to_string()]);
+        t.row(&["peak open panes/shard".into(), r.window_stats.max_open_panes.to_string()]);
+        t.row(&["peak open-pane entries".into(), r.window_stats.max_open_entries.to_string()]);
+    }
     t.row(&["wall time".into(), ns(r.wall_ns)]);
     t.print();
     Ok(())
@@ -134,12 +160,13 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     // two-stage cost columns: aggregation traffic (msgs the merge fabric
     // absorbed), merged-count staleness (virtual flush p99 — how far the
-    // merged view trails the workers), and shard imbalance across the
-    // --agg_shards merge shards
+    // merged view trails the workers), shard imbalance across the
+    // --agg_shards merge shards, and — when --agg_window_ms > 0 — how
+    // many windows the run retired ("-" when unwindowed)
     let mut t = Table::new(
         &format!(
-            "compare on {} ({} tuples, {} agg shards)",
-            base.workload, base.tuples, base.agg_shards
+            "compare on {} ({} tuples, {} agg shards, window {} ms)",
+            base.workload, base.tuples, base.agg_shards, base.agg_window_ms
         ),
         &[
             "workers",
@@ -150,6 +177,7 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
             "agg msgs",
             "flush p99 (virt)",
             "shard imb",
+            "windows",
         ],
     );
     for &w in &worker_counts {
@@ -168,6 +196,11 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
             } else {
                 "-".into()
             };
+            let windows = if base.agg_window_ms > 0 {
+                r.windows.len().to_string()
+            } else {
+                "-".into()
+            };
             t.row(&[
                 w.to_string(),
                 kind.name().into(),
@@ -177,6 +210,7 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
                 r.agg.messages.to_string(),
                 ns(r.agg_latency.quantile(0.99)),
                 f2(r.shard_agg.imbalance().relative),
+                windows,
             ]);
         }
     }
@@ -208,8 +242,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: fish <sim|deploy|compare|info> [--config file.toml] [--scheme S] \
          [--workload zf|mt|am] [--tuples N] [--workers N] [--zipf_z Z] [--batch N] \
-         [--agg_flush_ms N] [--agg_shards N] [--rebalance_threshold F] \
-         [--identifier native|xla-cms] [--seed N] ..."
+         [--agg_flush_ms N] [--agg_shards N] [--agg_window_ms N] \
+         [--rebalance_threshold F] [--identifier native|xla-cms] [--seed N] ..."
     );
     std::process::exit(2);
 }

@@ -82,6 +82,47 @@ impl AggStats {
     }
 }
 
+/// Windowed-aggregation ledger: pane lifecycle counts and open-pane
+/// memory for one [`crate::aggregate::WindowedMerge`] shard (fold
+/// across shards with [`WindowStats::absorb`]).
+///
+/// Granularity is **pane × shard**: a window pane that received deltas
+/// on 3 merge shards opens (and later retires) 3 pane-shards, exactly
+/// like `AggStats::flushes` counts per-shard sub-batches. The engine
+/// results expose the fabric-wide distinct-pane view separately (the
+/// assembled `windows` list).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WindowStats {
+    /// Pane-shards opened (first delta for a window on a shard).
+    pub panes_opened: u64,
+    /// Pane-shards retired (finalized results flushed downstream),
+    /// including the end-of-stream drain.
+    pub panes_retired: u64,
+    /// Deltas that arrived for an already-retired pane and reopened it
+    /// (possible only under the runtime engine's heuristic watermarks;
+    /// reopened panes re-finalize and merge exactly).
+    pub late_reopens: u64,
+    /// Peak panes open at once on any single shard.
+    pub max_open_panes: u64,
+    /// Peak `(key, acc)` entries held in open panes — the windowed
+    /// stage's working-set memory (summed across shards by `absorb`).
+    pub max_open_entries: u64,
+}
+
+impl WindowStats {
+    /// Fold another shard's ledger into this one: event counts and
+    /// memory peaks sum (per-shard peaks add up to a fabric-wide memory
+    /// bound); `max_open_panes` takes the max (pane ids are shared
+    /// across shards, so summing would multiply-count the same pane).
+    pub fn absorb(&mut self, other: &WindowStats) {
+        self.panes_opened += other.panes_opened;
+        self.panes_retired += other.panes_retired;
+        self.late_reopens += other.late_reopens;
+        self.max_open_panes = self.max_open_panes.max(other.max_open_panes);
+        self.max_open_entries += other.max_open_entries;
+    }
+}
+
 /// Per-shard cost ledgers for a sharded merge fabric, indexed by shard
 /// id — the observable that turns "is stage two itself skewed?" from a
 /// guess into a metric.
@@ -163,6 +204,31 @@ mod tests {
         assert_eq!(t.bytes, 960);
         assert_eq!(t.merge_ns, 2_600);
         assert_eq!(t.max_merge_ns, 2_000);
+    }
+
+    #[test]
+    fn window_stats_fold_sums_events_and_memory_but_maxes_panes() {
+        let a = WindowStats {
+            panes_opened: 4,
+            panes_retired: 3,
+            late_reopens: 1,
+            max_open_panes: 2,
+            max_open_entries: 100,
+        };
+        let b = WindowStats {
+            panes_opened: 6,
+            panes_retired: 6,
+            late_reopens: 0,
+            max_open_panes: 3,
+            max_open_entries: 250,
+        };
+        let mut folded = a;
+        folded.absorb(&b);
+        assert_eq!(folded.panes_opened, 10);
+        assert_eq!(folded.panes_retired, 9);
+        assert_eq!(folded.late_reopens, 1);
+        assert_eq!(folded.max_open_panes, 3);
+        assert_eq!(folded.max_open_entries, 350);
     }
 
     #[test]

@@ -6,7 +6,7 @@ pub mod histogram;
 pub mod imbalance;
 pub mod memory;
 
-pub use agg::{AggStats, ShardAggStats};
+pub use agg::{AggStats, ShardAggStats, WindowStats};
 pub use histogram::Histogram;
 pub use imbalance::Imbalance;
 pub use memory::MemoryTracker;

@@ -7,6 +7,12 @@
 //! * [`countmin`] — a count-min sketch bit-compatible with the Pallas
 //!   kernel (`python/compile/kernels/cms.py`), used by the XLA-backed
 //!   identifier and by tests that cross-check the two layers.
+//! * [`window`] — exact count-based [`SlidingWindow`], the §2.4
+//!   window-based counting baseline (linear memory in the window), now
+//!   also the ground-truth cross-check for the aggregation layer's
+//!   pane-based tumbling/sliding windows
+//!   ([`crate::aggregate::WindowedMerge`], `--agg_window_ms`) in the
+//!   windowed oracle tests.
 
 pub mod countmin;
 pub mod spacesaving;

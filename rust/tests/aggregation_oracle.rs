@@ -243,6 +243,244 @@ fn mid_run_shard_count_change_keeps_exact_counts() {
     assert_eq!(fixed.iter().map(|&(_, c)| c).sum::<u64>(), TUPLES as u64);
 }
 
+// ---- windowed aggregation -------------------------------------------
+//
+// The windowed half of the oracle: with `--agg_window_ms > 0`, tuples
+// land in tumbling panes by *event time* (virtual arrival ns in sim,
+// trace emit ns in rt), so per-window merged counts — and per-window
+// exact top-k — must be byte-identical to a per-window single-worker
+// Field-Grouping reference for every scheme, shard count, flush
+// cadence and engine. `agg_window_ms = 0` must reproduce the
+// unwindowed results exactly.
+
+/// 500ns inter-arrivals × 40k tuples = 20ms of event time; 2ms panes
+/// → 10 windows of exactly 4000 tuples each.
+const WIN_INTERARRIVAL_NS: u64 = 500;
+const WIN_MS: u64 = 2;
+const PANE_TUPLES: usize = (WIN_MS as usize * 1_000_000) / WIN_INTERARRIVAL_NS as usize;
+
+fn windowed_base(kind: SchemeKind, workers: usize) -> Config {
+    let mut cfg = base(kind, workers);
+    // event time must be identical across worker counts, so the
+    // inter-arrival is fixed rather than derived from `workers`
+    cfg.interarrival_ns = WIN_INTERARRIVAL_NS;
+    cfg.agg_window_ms = WIN_MS;
+    cfg
+}
+
+/// Per-window single-worker Field Grouping reference: exact per-pane
+/// counts with no key splitting anywhere.
+fn windowed_reference() -> Vec<fish::aggregate::WindowSnapshot> {
+    Pipeline::builder()
+        .config(windowed_base(SchemeKind::Field, 1))
+        .build_sim()
+        .run()
+        .windows
+}
+
+fn assert_windows_match(
+    got: &[fish::aggregate::WindowSnapshot],
+    want: &[fish::aggregate::WindowSnapshot],
+    what: &str,
+) {
+    assert_eq!(got.len(), want.len(), "{what}: window count");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.window, w.window, "{what}");
+        assert_eq!(g.counts, w.counts, "{what}: pane {}", g.window);
+        assert_eq!(g.top_k(10), w.top_k(10), "{what}: pane {} top-k", g.window);
+    }
+}
+
+#[test]
+fn sim_windowed_counts_equal_per_window_reference_for_every_scheme() {
+    let reference = windowed_reference();
+    assert_eq!(reference.len(), 10);
+    assert!(reference.iter().all(|w| w.total() == PANE_TUPLES as u64));
+    for kind in SchemeKind::all() {
+        let r = Pipeline::builder().config(windowed_base(kind, 16)).build_sim().run();
+        assert_windows_match(&r.windows, &reference, &format!("{kind}"));
+    }
+}
+
+#[test]
+fn windowed_counts_are_invariant_across_shards_and_flush_cadences() {
+    let reference = windowed_reference();
+    for shards in [1usize, 2, 7] {
+        for flush_ms in [0u64, 1, 7] {
+            let mut cfg = windowed_base(SchemeKind::Fish, 16);
+            cfg.agg_shards = shards;
+            cfg.agg_flush_ms = flush_ms;
+            let r = Pipeline::builder().config(cfg).build_sim().run();
+            assert_windows_match(
+                &r.windows,
+                &reference,
+                &format!("shards={shards} flush_ms={flush_ms}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn rt_windowed_counts_equal_the_per_window_reference() {
+    // The threaded engine assigns panes by the trace's scheduled emit
+    // times — identical to the simulator's virtual arrivals — so its
+    // per-window counts must match byte for byte despite real thread
+    // interleaving, heuristic watermarks and wall-clock flush timing.
+    let reference = windowed_reference();
+    for shards in [1usize, 4] {
+        let mut cfg = windowed_base(SchemeKind::Pkg, 8);
+        cfg.agg_shards = shards;
+        let r = Pipeline::builder().config(cfg).per_tuple_ns(vec![0.0]).build_rt().run();
+        assert_windows_match(&r.windows, &reference, &format!("rt shards={shards}"));
+    }
+}
+
+#[test]
+fn windowed_counts_survive_churn() {
+    // The tentpole invariance list includes churn: a worker removed
+    // mid-stream drains its per-pane partials downstream (sim churn
+    // path), so per-window counts must still match the reference byte
+    // for byte — no pane loses or double-counts a laggard delta.
+    use fish::engine::ChurnEvent;
+    let reference = windowed_reference();
+    let mut cfg = windowed_base(SchemeKind::Fish, 8);
+    cfg.agg_shards = 7;
+    let r = Pipeline::builder()
+        .config(cfg)
+        .churn(vec![
+            (10_000, ChurnEvent::Remove(3)),
+            (25_000, ChurnEvent::Add(8)),
+        ])
+        .build_sim()
+        .run();
+    assert_windows_match(&r.windows, &reference, "windowed churn");
+}
+
+#[test]
+fn agg_window_zero_reproduces_the_unwindowed_results_exactly() {
+    let unwindowed = Pipeline::builder().config(base(SchemeKind::Fish, 16)).build_sim().run();
+    let mut cfg = base(SchemeKind::Fish, 16);
+    cfg.agg_window_ms = 0; // explicit: today's behavior
+    let r = Pipeline::builder().config(cfg).build_sim().run();
+    assert!(r.windows.is_empty());
+    assert_eq!(r.window_stats.panes_retired, 0);
+    assert_eq!(r.merged_counts, unwindowed.merged_counts);
+    assert_eq!(r.agg.flushes, unwindowed.agg.flushes);
+    assert_eq!(r.agg.messages, unwindowed.agg.messages);
+    assert_eq!(r.agg.bytes, unwindowed.agg.bytes);
+    assert_eq!(r.gather.top(10).top, unwindowed.gather.top(10).top);
+
+    // and windowing never changes the all-time answer
+    let windowed = Pipeline::builder().config(windowed_base(SchemeKind::Fish, 16)).build_sim().run();
+    let mut alltime = windowed_base(SchemeKind::Fish, 16);
+    alltime.agg_window_ms = 0;
+    let alltime = Pipeline::builder().config(alltime).build_sim().run();
+    assert_eq!(windowed.merged_counts, alltime.merged_counts);
+}
+
+#[test]
+fn tumbling_panes_match_the_sliding_window_baseline() {
+    // Cross-check against sketch/window.rs, the §2.4 window-based
+    // counting baseline: with fixed inter-arrivals, a count-based
+    // SlidingWindow of exactly one pane's worth of tuples holds
+    // precisely pane p's contents the moment pane p's last tuple has
+    // been observed — so the engine's tumbling counts must agree with
+    // the buffer-everything baseline at every pane boundary.
+    use fish::sketch::SlidingWindow;
+    let r = Pipeline::builder().config(windowed_base(SchemeKind::Fish, 16)).build_sim().run();
+    let mut gen = fish::workload::by_name("zf", TUPLES, Z, SEED);
+    let mut sliding = SlidingWindow::new(PANE_TUPLES);
+    let mut pane = 0usize;
+    for i in 0..TUPLES {
+        sliding.observe(gen.key_at(i));
+        if (i + 1) % PANE_TUPLES == 0 {
+            let w = &r.windows[pane];
+            assert_eq!(w.window, pane as u64);
+            assert_eq!(w.total(), PANE_TUPLES as u64, "pane {pane}");
+            for &(k, c) in &w.counts {
+                assert_eq!(c, sliding.count(k), "pane {pane} key {k}");
+            }
+            pane += 1;
+        }
+    }
+    assert_eq!(pane, r.windows.len(), "every pane cross-checked");
+}
+
+#[test]
+fn sliding_windows_compose_panes_exactly() {
+    let r = Pipeline::builder().config(windowed_base(SchemeKind::Fish, 16)).build_sim().run();
+    let slid = fish::aggregate::sliding(&r.windows, 3);
+    assert_eq!(slid.len(), r.windows.len());
+    for (i, s) in slid.iter().enumerate() {
+        // manual merge of the pane span the sliding window claims
+        let lo = i.saturating_sub(2);
+        let mut truth: std::collections::HashMap<Key, u64> = std::collections::HashMap::new();
+        for p in &r.windows[lo..=i] {
+            for &(k, c) in &p.counts {
+                *truth.entry(k).or_insert(0) += c;
+            }
+        }
+        assert_eq!(s.counts.len(), truth.len(), "window {i}");
+        for &(k, c) in &s.counts {
+            assert_eq!(c, truth[&k], "window {i} key {k}");
+        }
+        assert_eq!(s.panes, 3);
+    }
+}
+
+#[test]
+fn windowed_runs_are_deterministic() {
+    let run = || {
+        let mut cfg = windowed_base(SchemeKind::Fish, 16);
+        cfg.agg_shards = 7;
+        Pipeline::builder().config(cfg).build_sim().run()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.windows.len(), b.windows.len());
+    for (x, y) in a.windows.iter().zip(&b.windows) {
+        assert_eq!(x.counts, y.counts, "pane {}", x.window);
+        assert_eq!(x.gather.top(10).top, y.gather.top(10).top, "pane {}", x.window);
+    }
+    assert_eq!(a.window_stats.panes_opened, b.window_stats.panes_opened);
+    assert_eq!(a.window_stats.panes_retired, b.window_stats.panes_retired);
+    assert_eq!(a.window_stats.max_open_entries, b.window_stats.max_open_entries);
+}
+
+// ---- flush-order determinism (the sorted-flush bugfix) ----------------
+
+#[test]
+fn gather_output_is_deterministic_at_sketch_capacity() {
+    // Regression test for the nondeterministic-flush bug: PartialAgg
+    // drained its HashMap in arbitrary per-instance order, and once a
+    // SpaceSaving sketch is at capacity, admission depends on arrival
+    // order — so identically-fed runs produced different gather
+    // rankings. With flush batches sorted by key, two independent runs
+    // must agree exactly even with the sketch far over capacity.
+    use fish::aggregate::{Count, PartialAgg, TopKGather};
+    let run = || {
+        let mut gather = TopKGather::new(2, 64); // tiny: 5000 keys ≫ 2×64
+        let mut partial = PartialAgg::new(Count);
+        for i in 0..5_000u64 {
+            // all-tail stream with a few hot keys: eviction churn makes
+            // at-capacity admission order-sensitive
+            partial.observe(i % 5_000, 1);
+            if i % 7 == 0 {
+                partial.observe(i % 11, 1);
+            }
+            if (i + 1) % 1_000 == 0 {
+                gather.absorb_batch(&partial.flush());
+            }
+        }
+        gather.absorb_batch(&partial.flush());
+        (gather.top(64).top, gather.error_bound())
+    };
+    let (a_top, a_bound) = run();
+    let (b_top, b_bound) = run();
+    assert!(a_bound > 0.0, "sketches must actually be at capacity");
+    assert_eq!(a_bound, b_bound);
+    assert_eq!(a_top, b_top, "identical runs must produce identical gather rankings");
+}
+
 #[test]
 fn gather_top_k_respects_error_bounds_against_exact_counts() {
     let mut cfg = base(SchemeKind::Fish, 16);

@@ -15,12 +15,14 @@ the gate is stable across runner hardware while still failing when the
 batched hot path regresses relative to the per-tuple reference.
 
 The aggregation path is gated the same way: for every op in the
-baseline's agg_results[] (MergeStage absorb, shard-routing dispatch),
-its cost *relative to PartialAgg::observe in the same run*
-(ratio_vs_observe) must not rise more than AGG-THRESHOLD above the
-baseline ratio. Again a same-machine ratio, so runner hardware cancels
-out; only the two-stage path getting slower relative to its own stage
-one fails the gate.
+baseline's agg_results[] (MergeStage absorb, shard-routing dispatch,
+and the windowed path — WindowedPartial::observe pane assignment and
+WindowedMerge absorb + watermark retirement per entry), its cost
+*relative to PartialAgg::observe in the same run* (ratio_vs_observe)
+must not rise more than AGG-THRESHOLD above the baseline ratio. Again
+a same-machine ratio, so runner hardware cancels out; only the
+two-stage path getting slower relative to its own stage one fails the
+gate.
 
 Exit status: 0 = within threshold, 1 = regression, 2 = bad input.
 """
