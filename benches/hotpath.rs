@@ -7,9 +7,11 @@
 //!   `MergeStage` absorb (per merged entry), the shard-routing
 //!   dispatch (`ShardRouter::shard_of`), and the windowed path
 //!   (`WindowedPartial::observe` pane assignment, `WindowedMerge`
-//!   absorb + watermark retirement per entry) — gated in CI as
-//!   *ratios* against the observe cost, so the two-stage path can't
-//!   silently regress relative to its own stage one.
+//!   absorb + watermark retirement per entry), and the transport wire
+//!   codec (`encode_data` / `decode_frame` per tuple at engine batch
+//!   size) — gated in CI as *ratios* against the observe cost, so the
+//!   two-stage path and the serialize/deserialize hot loop can't
+//!   silently regress relative to their own stage one.
 //! * identifier throughput: native Alg. 1 vs the XLA count-min path
 //!   (AOT Pallas kernel via PJRT), amortised per tuple.
 //!
@@ -205,6 +207,57 @@ fn bench_window_retire(keys: &[u64], flush_every: usize) -> f64 {
     ns
 }
 
+/// Wire serialize cost: `encode_data` ns per tuple over engine-sized
+/// batches — the per-tuple price a socket lane adds on the way out.
+fn bench_wire_encode(keys: &[u64], batch: usize) -> f64 {
+    use fish::transport::wire::{self, Msg};
+    let msgs: Vec<Msg> = keys
+        .iter()
+        .enumerate()
+        .map(|(i, &k)| Msg { key: k, emit_ns: i as u64 * 100, ts: i as u64 * 100 })
+        .collect();
+    let mut buf = Vec::new();
+    for chunk in msgs[..msgs.len() / 10].chunks(batch) {
+        buf.clear();
+        wire::encode_data(chunk, &mut buf);
+        std::hint::black_box(&buf);
+    }
+    let start = Instant::now();
+    for chunk in msgs.chunks(batch) {
+        buf.clear();
+        wire::encode_data(chunk, &mut buf);
+        std::hint::black_box(&buf);
+    }
+    start.elapsed().as_nanos() as f64 / msgs.len() as f64
+}
+
+/// Wire deserialize cost: `decode_frame` ns per tuple over the frames
+/// [`bench_wire_encode`] ships — the inbound price on a socket lane.
+fn bench_wire_decode(keys: &[u64], batch: usize) -> f64 {
+    use fish::transport::wire::{self, Msg};
+    let msgs: Vec<Msg> = keys
+        .iter()
+        .enumerate()
+        .map(|(i, &k)| Msg { key: k, emit_ns: i as u64 * 100, ts: i as u64 * 100 })
+        .collect();
+    let frames: Vec<Vec<u8>> = msgs
+        .chunks(batch)
+        .map(|chunk| {
+            let mut buf = Vec::new();
+            wire::encode_data(chunk, &mut buf);
+            buf
+        })
+        .collect();
+    for frame in frames.iter().take(frames.len() / 10) {
+        std::hint::black_box(wire::decode_frame(frame).unwrap());
+    }
+    let start = Instant::now();
+    for frame in &frames {
+        std::hint::black_box(wire::decode_frame(frame).unwrap());
+    }
+    start.elapsed().as_nanos() as f64 / msgs.len() as f64
+}
+
 fn bench_identifier_native(keys: &[u64], epoch: usize, cap: usize) -> f64 {
     let mut id = EpochIdentifier::new(cap, epoch, 0.2);
     let start = Instant::now();
@@ -273,8 +326,10 @@ fn main() {
     let shard_ns = bench_shard_route(&keys, 8);
     let window_observe_ns = bench_window_observe(&keys);
     let window_retire_ns = bench_window_retire(&keys, 4096);
+    let wire_encode_ns = bench_wire_encode(&keys, 1024);
+    let wire_decode_ns = bench_wire_decode(&keys, 1024);
     let mut ta = Table::new(
-        "aggregation path: two-stage fold + shard dispatch + window panes",
+        "aggregation path: two-stage fold + shard dispatch + window panes + wire codec",
         &["op", "ns/op", "ratio vs observe"],
     );
     let mut agg_json_rows: Vec<String> = Vec::new();
@@ -284,6 +339,8 @@ fn main() {
         ("shard_route8", shard_ns),
         ("window_observe", window_observe_ns),
         ("window_retire", window_retire_ns),
+        ("wire_encode", wire_encode_ns),
+        ("wire_decode", wire_decode_ns),
     ] {
         let ratio = ns_op / partial_ns.max(1e-9);
         ta.row(&[op.into(), f2(ns_op), format!("{ratio:.2}x")]);

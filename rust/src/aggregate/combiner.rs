@@ -38,6 +38,14 @@ pub trait Combiner: Send {
     fn acc_bytes(&self) -> usize {
         std::mem::size_of::<Self::Acc>()
     }
+
+    /// Tuple mass an accumulator carries — the units of the
+    /// late-reopen-mass ledger. Defaults to 1 (one re-merged entry);
+    /// `Count` reports the tuple count itself so the ledger reads in
+    /// tuples, not entries.
+    fn acc_mass(&self, _acc: &Self::Acc) -> u64 {
+        1
+    }
 }
 
 /// Count tuples per key — the word-count topology both engines run.
@@ -61,6 +69,10 @@ impl Combiner for Count {
 
     fn merge(&self, into: &mut u64, other: &u64) {
         *into += *other;
+    }
+
+    fn acc_mass(&self, acc: &u64) -> u64 {
+        *acc
     }
 }
 
@@ -153,6 +165,38 @@ impl TopKSketch {
             }
         }
         self.merged_error += other.error_bound();
+    }
+
+    /// Counter-set capacity this sketch was built with.
+    pub fn capacity(&self) -> usize {
+        self.sketch.capacity()
+    }
+
+    /// Tracked `(key, estimate)` entries — the serializable state a
+    /// multi-process shard ships back to the coordinator.
+    pub fn tracked(&self) -> impl Iterator<Item = (Key, f64)> + '_ {
+        self.sketch.iter()
+    }
+
+    /// Error inherited from merged sketches (travels next to the
+    /// tracked entries when a sketch is serialized).
+    pub fn merged_error(&self) -> f64 {
+        self.merged_error
+    }
+
+    /// Rebuild a sketch from its serialized parts. Re-observing each
+    /// tracked entry at its estimate is faithful: a sketch of the same
+    /// capacity admits all of them without eviction, so estimates and
+    /// the error bound come back exactly.
+    pub fn from_parts(capacity: usize, entries: &[(Key, f64)], merged_error: f64) -> Self {
+        let mut s = TopKSketch::new(capacity);
+        for &(k, w) in entries {
+            if w > 0.0 {
+                s.sketch.observe_weighted(k, w);
+            }
+        }
+        s.merged_error = merged_error;
+        s
     }
 
     /// Overestimate bound for this sketch's estimates: 0 while under
@@ -275,6 +319,26 @@ mod tests {
                 a.error_bound()
             );
         }
+    }
+
+    #[test]
+    fn topk_sketch_rebuilds_exactly_from_parts() {
+        let mut orig = TopKSketch::new(4);
+        for (k, n) in [(1u64, 40), (2, 10), (3, 7), (4, 3), (5, 9)] {
+            orig.absorb(k, n);
+        }
+        let mut other = TopKSketch::new(4);
+        other.absorb(9, 100);
+        orig.merge(&other);
+        let parts: Vec<(Key, f64)> = orig.tracked().collect();
+        let back = TopKSketch::from_parts(orig.capacity(), &parts, orig.merged_error());
+        assert_eq!(back.capacity(), orig.capacity());
+        assert_eq!(back.entries(), orig.entries());
+        assert_eq!(back.error_bound(), orig.error_bound());
+        for &(k, est) in &parts {
+            assert_eq!(back.estimate(k), est, "key {k}");
+        }
+        assert_eq!(back.top(4), orig.top(4));
     }
 
     #[test]

@@ -248,6 +248,12 @@ struct WindowPane<C: Combiner> {
 pub struct WindowedMerge<C: Combiner<Acc = u64> + Clone> {
     combiner: C,
     window_ns: u64,
+    /// Watermark slack (`--agg_lateness_ms`): a pane stays open until
+    /// the watermark passes `pane_end + lateness_ns`, so bounded
+    /// event-time disorder absorbs in place instead of forcing a
+    /// retire-reopen-remerge cycle. 0 = retire the instant the
+    /// watermark passes the pane end (the pre-slack behavior).
+    lateness_ns: u64,
     sketch_capacity: usize,
     open: BTreeMap<WindowId, WindowPane<C>>,
     /// Running `(key, acc)` entry total across open panes — maintained
@@ -268,6 +274,7 @@ impl<C: Combiner<Acc = u64> + Clone> WindowedMerge<C> {
         WindowedMerge {
             combiner,
             window_ns,
+            lateness_ns: 0,
             sketch_capacity,
             open: BTreeMap::new(),
             open_entries: 0,
@@ -276,6 +283,13 @@ impl<C: Combiner<Acc = u64> + Clone> WindowedMerge<C> {
             watermark: 0,
             stats: WindowStats::default(),
         }
+    }
+
+    /// Keep panes open for `lateness_ns` of watermark slack past their
+    /// end before retiring them (see the `lateness_ns` field).
+    pub fn with_lateness(mut self, lateness_ns: u64) -> Self {
+        self.lateness_ns = lateness_ns;
+        self
     }
 
     /// Absorb one already-shard-routed flush sub-batch for `window`
@@ -287,12 +301,21 @@ impl<C: Combiner<Acc = u64> + Clone> WindowedMerge<C> {
         if sub.is_empty() {
             return;
         }
-        let late = self.window_ns > 0 && pane_end(window, self.window_ns) <= self.watermark;
+        let late = self.window_ns > 0
+            && pane_end(window, self.window_ns).saturating_add(self.lateness_ns)
+                <= self.watermark;
         // a late delta is a *reopen* only if the pane actually retired;
         // a pane whose first-ever delta arrives behind the watermark is
         // just opening late (it retires on the next advance). Rare path,
         // so the linear scan over retired results costs nothing.
         let reopen = late && self.retired.iter().any(|r| r.window == window);
+        if reopen {
+            // every delta landing in a reopened pane gets re-merged at
+            // finish — charge its full tuple mass, not just the reopen
+            // event, so a 1 000-tuple late batch is visible as such
+            self.stats.late_reopen_mass +=
+                sub.iter().map(|(_, acc)| self.combiner.acc_mass(acc)).sum::<u64>();
+        }
         let pane = match self.open.entry(window) {
             std::collections::btree_map::Entry::Vacant(v) => {
                 self.stats.panes_opened += 1;
@@ -317,9 +340,9 @@ impl<C: Combiner<Acc = u64> + Clone> WindowedMerge<C> {
     }
 
     /// Advance the shard's watermark to `to` (monotone) and retire
-    /// every open pane whose end it passed, oldest first. Returns the
-    /// number of panes retired by this call. Never retires anything
-    /// when unwindowed.
+    /// every open pane whose end (plus the configured lateness slack)
+    /// it passed, oldest first. Returns the number of panes retired by
+    /// this call. Never retires anything when unwindowed.
     pub fn advance(&mut self, to: u64) -> usize {
         if to > self.watermark {
             self.watermark = to;
@@ -329,7 +352,7 @@ impl<C: Combiner<Acc = u64> + Clone> WindowedMerge<C> {
         }
         let mut retired = 0usize;
         while let Some(&window) = self.open.keys().next() {
-            if pane_end(window, self.window_ns) > self.watermark {
+            if pane_end(window, self.window_ns).saturating_add(self.lateness_ns) > self.watermark {
                 break;
             }
             let pane = self.open.remove(&window).expect("pane key just observed");
@@ -516,15 +539,17 @@ pub fn assemble_windows(
 /// the span and subtracted once when it leaves (exact: counts are
 /// non-negative sums), so the whole sweep is O(total pane entries)
 /// plus one sorted snapshot per output window. Gathers cannot be
-/// subtracted (SpaceSaving has no inverse), so each window's gather is
-/// re-folded from its ≤ `panes_per_window` panes via
-/// [`TopKGather::merge_from`].
+/// subtracted (SpaceSaving has no inverse), so per-pane merged gather
+/// summaries are cached in a [`GatherQueue`] — a two-stack FIFO with
+/// running folds — and each output window's gather is composed from at
+/// most two cached folds instead of re-merging every pane in the span.
 pub fn sliding(panes: &[WindowSnapshot], panes_per_window: usize) -> Vec<WindowSnapshot> {
     assert!(panes_per_window > 0, "a sliding window needs at least one pane");
     let mut out = Vec::with_capacity(panes.len());
     let mut rolling: HashMap<Key, u64> = HashMap::new();
+    let mut gathers = GatherQueue::default();
     let mut lo = 0usize;
-    for (i, p) in panes.iter().enumerate() {
+    for p in panes {
         // evict panes that fell out of the span, add the entering one
         while panes[lo].window + panes_per_window as u64 <= p.window {
             for &(k, c) in &panes[lo].counts {
@@ -540,26 +565,86 @@ pub fn sliding(panes: &[WindowSnapshot], panes_per_window: usize) -> Vec<WindowS
                     }
                 }
             }
+            gathers.pop();
             lo += 1;
         }
         for &(k, c) in &p.counts {
             *rolling.entry(k).or_insert(0) += c;
         }
+        gathers.push(&p.gather);
         let mut counts: Vec<(Key, u64)> = rolling.iter().map(|(&k, &c)| (k, c)).collect();
         counts.sort_unstable_by_key(|&(k, _)| k);
-        let mut gather = panes[lo].gather.clone();
-        for q in &panes[lo + 1..=i] {
-            gather.merge_from(&q.gather);
-        }
         out.push(WindowSnapshot {
             window: p.window,
             window_ns: p.window_ns,
             panes: panes_per_window as u64,
             counts,
-            gather,
+            gather: gathers.fold(),
         });
     }
     out
+}
+
+/// FIFO queue of pane gathers with amortized-O(1) whole-queue folds —
+/// the cache behind [`sliding`]'s per-window gather. The classic
+/// two-stack aggregation queue: `back` collects pushed panes under one
+/// running fold (`back_agg`); when a pop finds `front` empty, `back`
+/// flips into `front` as cumulative *suffix* folds (so `front.last()`
+/// always covers every un-popped flipped pane). Each pane's gather is
+/// merged O(1) times amortized over a sweep, versus the O(span) merges
+/// per output window a naive per-window refold pays.
+#[derive(Default)]
+struct GatherQueue {
+    /// Pop side, newest at the bottom: `front[j]` is the fold of the
+    /// flipped panes `j..` (in arrival order), so the oldest un-popped
+    /// pane's cumulative fold sits on top.
+    front: Vec<TopKGather>,
+    /// Push side, raw pane gathers in arrival order.
+    back: Vec<TopKGather>,
+    /// Running fold of everything in `back`.
+    back_agg: Option<TopKGather>,
+}
+
+impl GatherQueue {
+    /// Enqueue one pane's gather.
+    fn push(&mut self, gather: &TopKGather) {
+        self.back.push(gather.clone());
+        match &mut self.back_agg {
+            Some(agg) => agg.merge_from(gather),
+            None => self.back_agg = Some(gather.clone()),
+        }
+    }
+
+    /// Dequeue the oldest pane, flipping the push side into cumulative
+    /// suffix folds when the pop side runs dry.
+    fn pop(&mut self) {
+        if self.front.is_empty() {
+            for g in std::mem::take(&mut self.back).into_iter().rev() {
+                let mut cum = g;
+                if let Some(newer) = self.front.last() {
+                    cum.merge_from(newer);
+                }
+                self.front.push(cum);
+            }
+            self.back_agg = None;
+        }
+        self.front.pop();
+    }
+
+    /// Fold of every enqueued pane: at most one merge of the two sides'
+    /// cached folds, never a walk over the panes.
+    fn fold(&self) -> TopKGather {
+        match (self.front.last(), &self.back_agg) {
+            (Some(f), Some(b)) => {
+                let mut all = f.clone();
+                all.merge_from(b);
+                all
+            }
+            (Some(f), None) => f.clone(),
+            (None, Some(b)) => b.clone(),
+            (None, None) => unreachable!("fold of an empty gather queue"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -635,7 +720,26 @@ mod tests {
         assert_eq!(out.window_stats.panes_opened, 2);
         assert_eq!(out.window_stats.panes_retired, 2);
         assert_eq!(out.window_stats.late_reopens, 0);
+        assert_eq!(out.window_stats.late_reopen_mass, 0);
         assert_eq!(out.window_stats.max_open_panes, 2);
+    }
+
+    #[test]
+    fn lateness_slack_delays_retirement_and_absorbs_stragglers() {
+        let mut m = WindowedMerge::new(Count, 100, 64).with_lateness(50);
+        m.absorb(0, vec![(1, 2)]);
+        // pane 0 ends at 100, but 100 + 50 > 120: the slack holds it open
+        assert_eq!(m.advance(120), 0);
+        // so this straggler absorbs in place — no reopen, no late mass
+        m.absorb(0, vec![(1, 3)]);
+        assert_eq!(m.advance(150), 1, "100 + 50 <= 150 retires pane 0");
+        // beyond the slack it is a genuine reopen, charged by tuple mass
+        m.absorb(0, vec![(9, 4)]);
+        let out = m.finish();
+        assert_eq!(out.window_stats.late_reopens, 1);
+        assert_eq!(out.window_stats.late_reopen_mass, 4);
+        assert_eq!(out.windows.len(), 1);
+        assert_eq!(out.windows[0].counts, vec![(1, 5), (9, 4)]);
     }
 
     #[test]
@@ -650,6 +754,7 @@ mod tests {
         m.absorb(2, vec![(4, 1)]);
         let out = m.finish();
         assert_eq!(out.window_stats.late_reopens, 1);
+        assert_eq!(out.window_stats.late_reopen_mass, 4, "3 + 1 tuples re-merged late");
         assert_eq!(out.windows.len(), 3, "reopened emissions re-merged");
         assert_eq!(out.windows[0].window, 0);
         assert_eq!(out.windows[0].counts, vec![(1, 5), (9, 1)]);
@@ -757,5 +862,40 @@ mod tests {
         let panes = vec![mk(0, vec![(1, 5)]), mk(2, vec![(2, 3)])];
         let slid = sliding(&panes, 2);
         assert_eq!(slid[1].counts, vec![(2, 3)]);
+    }
+
+    #[test]
+    fn sliding_gather_queue_matches_a_naive_refold() {
+        // small key sets keep every sketch under capacity, where
+        // estimates are exact regardless of merge order — so the cached
+        // two-stack composition must agree with a pane-by-pane refold
+        // to the digit, not just within the error bound
+        let mk = |window: u64, counts: Vec<(Key, u64)>| {
+            let mut gather = TopKGather::new(1, 16);
+            for &(k, c) in &counts {
+                gather.absorb(k, c);
+            }
+            WindowSnapshot { window, window_ns: 10, panes: 1, counts, gather }
+        };
+        let panes: Vec<WindowSnapshot> =
+            (0..8u64).map(|w| mk(w, vec![(w % 3, w + 1), (10 + w, 2)])).collect();
+        let slid = sliding(&panes, 3);
+        assert_eq!(slid.len(), 8);
+        for (i, s) in slid.iter().enumerate() {
+            let lo = i.saturating_sub(2);
+            let mut naive = panes[lo].gather.clone();
+            for q in &panes[lo + 1..=i] {
+                naive.merge_from(&q.gather);
+            }
+            for &(k, c) in &s.counts {
+                assert_eq!(
+                    s.gather.estimate(k),
+                    naive.estimate(k),
+                    "window {} key {k}",
+                    s.window
+                );
+                assert!(s.gather.estimate(k) >= c as f64);
+            }
+        }
     }
 }

@@ -120,10 +120,13 @@ impl Args {
         let map_err = |e: crate::config::ConfigError| CliError(e.to_string());
         for (k, v) in &self.flags {
             let value = match k.as_str() {
-                "scheme" | "workload" | "identifier" | "artifacts_dir" => Value::Str(v.clone()),
+                "scheme" | "workload" | "identifier" | "artifacts_dir" | "transport" => {
+                    Value::Str(v.clone())
+                }
                 "tuples" | "sources" | "workers" | "key_capacity" | "epoch" | "d_min"
                 | "interval" | "vnodes" | "seed" | "service_ns" | "interarrival_ns" | "batch"
-                | "agg_flush_ms" | "agg_shards" | "agg_window_ms" => {
+                | "agg_flush_ms" | "agg_shards" | "agg_window_ms" | "agg_lateness_ms"
+                | "processes" => {
                     Value::Int(v.parse().map_err(|_| CliError(format!("--{k}: bad int '{v}'")))?)
                 }
                 "zipf_z" | "alpha" | "theta_num" | "rebalance_threshold" => {
@@ -223,6 +226,18 @@ mod tests {
         a.apply_to_config(&mut cfg).unwrap();
         assert_eq!(cfg.agg_window_ms, 250);
         let bad = parse("--agg_window_ms soon", false);
+        assert!(bad.apply_to_config(&mut cfg).is_err());
+    }
+
+    #[test]
+    fn transport_lateness_and_processes_flags_apply() {
+        let mut cfg = crate::config::Config::default();
+        let a = parse("--transport tcp --agg_lateness_ms 5 --processes 2", false);
+        a.apply_to_config(&mut cfg).unwrap();
+        assert_eq!(cfg.transport, "tcp");
+        assert_eq!(cfg.agg_lateness_ms, 5);
+        assert_eq!(cfg.processes, 2);
+        let bad = parse("--processes several", false);
         assert!(bad.apply_to_config(&mut cfg).is_err());
     }
 

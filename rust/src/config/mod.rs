@@ -90,6 +90,27 @@ pub struct Config {
     /// results are invariant under scheme, shard count, flush cadence
     /// and engine.
     pub agg_window_ms: u64,
+    /// Watermark slack before pane retirement, in milliseconds of event
+    /// time (`--agg_lateness_ms`). Panes stay open until the watermark
+    /// passes `pane end + slack`, so bounded disorder absorbs in place
+    /// instead of taking the retire-reopen-remerge path (the re-merged
+    /// tuple mass is reported as `late reopen mass`). 0 = retire the
+    /// instant the watermark passes a pane's end. Never changes
+    /// per-window results — only retirement timing and the lifecycle
+    /// ledger.
+    pub agg_lateness_ms: u64,
+    /// Runtime-engine lane backend (`--transport`): `loopback`
+    /// (in-process channels, the default), `uds` or `tcp` (socket lanes
+    /// carrying the length-prefixed wire format with credit-based flow
+    /// control). Merged counts, windows and top-k are
+    /// transport-invariant; the simulator ignores this.
+    pub transport: String,
+    /// Multi-process deployment (`deploy --processes N`): 0 = threads
+    /// in one process (the default); N > 0 runs N worker processes plus
+    /// one process per merge shard, sources staying in the coordinator.
+    /// Loopback transport is promoted to a socket kind for the
+    /// process-crossing lanes.
+    pub processes: usize,
 }
 
 impl Default for Config {
@@ -119,6 +140,9 @@ impl Default for Config {
             agg_flush_ms: DEFAULT_AGG_FLUSH_MS,
             agg_shards: 1,
             agg_window_ms: 0,
+            agg_lateness_ms: 0,
+            transport: "loopback".into(),
+            processes: 0,
         }
     }
 }
@@ -232,6 +256,15 @@ impl Config {
             "agg_window_ms" | "aggregate.window_ms" => {
                 self.agg_window_ms = v.as_int().ok_or_else(|| err("int"))? as u64
             }
+            "agg_lateness_ms" | "aggregate.lateness_ms" => {
+                self.agg_lateness_ms = v.as_int().ok_or_else(|| err("int"))? as u64
+            }
+            "transport" | "deploy.transport" => {
+                self.transport = v.as_str().ok_or_else(|| err("string"))?.to_string()
+            }
+            "processes" | "deploy.processes" => {
+                self.processes = v.as_int().ok_or_else(|| err("int"))? as usize
+            }
             other => return Err(ConfigError::UnknownKey(other.to_string())),
         }
         Ok(())
@@ -292,6 +325,27 @@ impl Config {
             return Err(ConfigError::Type(format!(
                 "agg_shards must be in 1..=4096, got {}",
                 self.agg_shards
+            )));
+        }
+        // same ms→ns overflow bound (and negative-int wrap catch) as
+        // agg_window_ms; 0 = strict retirement is valid
+        if self.agg_lateness_ms > 3_600_000 {
+            return Err(ConfigError::Type(format!(
+                "agg_lateness_ms must be <= 3600000 (1h), got {}",
+                self.agg_lateness_ms
+            )));
+        }
+        if crate::transport::TransportKind::parse(&self.transport).is_none() {
+            return Err(ConfigError::Type(format!(
+                "transport must be loopback|uds|tcp, got {}",
+                self.transport
+            )));
+        }
+        // upper bound also catches negative CLI ints wrapped via `as usize`
+        if self.processes > 256 {
+            return Err(ConfigError::Type(format!(
+                "processes must be <= 256, got {}",
+                self.processes
             )));
         }
         Ok(())
@@ -410,6 +464,39 @@ epoch = 2000
         assert!(cfg.validate().is_err());
         // a negative CLI int wraps to a huge usize; validation must catch it
         cfg.agg_shards = (-1i64) as usize;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn agg_lateness_ms_configurable_and_bounded() {
+        let f = ConfigFile::parse("[aggregate]\nlateness_ms = 5\n").unwrap();
+        let mut cfg = Config::default();
+        assert_eq!(cfg.agg_lateness_ms, 0, "strict retirement by default");
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.agg_lateness_ms, 5);
+        cfg.validate().unwrap();
+        // a negative CLI int wraps to a huge u64; validation must catch it
+        cfg.agg_lateness_ms = (-1i64) as u64;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn transport_and_processes_configurable_and_validated() {
+        let f = ConfigFile::parse("[deploy]\ntransport = \"tcp\"\nprocesses = 2\n").unwrap();
+        let mut cfg = Config::default();
+        assert_eq!(cfg.transport, "loopback");
+        assert_eq!(cfg.processes, 0);
+        cfg.apply_file(&f).unwrap();
+        assert_eq!(cfg.transport, "tcp");
+        assert_eq!(cfg.processes, 2);
+        cfg.validate().unwrap();
+        cfg.transport = "uds".into();
+        cfg.validate().unwrap();
+        cfg.transport = "carrier-pigeon".into();
+        assert!(cfg.validate().is_err());
+        cfg.transport = "loopback".into();
+        // a negative CLI int wraps to a huge usize; validation must catch it
+        cfg.processes = (-1i64) as usize;
         assert!(cfg.validate().is_err());
     }
 

@@ -151,6 +151,23 @@ impl PipelineBuilder {
         self
     }
 
+    /// Watermark slack (ms) before pane retirement: panes stay open
+    /// until the watermark passes `pane end + slack`, so bounded
+    /// event-time disorder absorbs in place instead of taking the
+    /// late-reopen path. 0 = retire immediately (the strict default).
+    pub fn agg_lateness_ms(mut self, ms: u64) -> Self {
+        self.cfg.agg_lateness_ms = ms;
+        self
+    }
+
+    /// Lane backend for the runtime engine's source→worker and
+    /// worker→shard traffic (loopback, UDS or TCP); the simulator
+    /// ignores it.
+    pub fn transport(mut self, kind: crate::transport::TransportKind) -> Self {
+        self.cfg.transport = kind.name().to_string();
+        self
+    }
+
     /// PRNG seed.
     pub fn seed(mut self, seed: u64) -> Self {
         self.cfg.seed = seed;
@@ -253,7 +270,8 @@ impl PipelineBuilder {
             .with_batch(cfg.batch)
             .with_agg_flush(cfg.agg_flush_ms.saturating_mul(1_000_000))
             .with_agg_shards(cfg.agg_shards)
-            .with_agg_window(cfg.agg_window_ms.saturating_mul(1_000_000));
+            .with_agg_window(cfg.agg_window_ms.saturating_mul(1_000_000))
+            .with_agg_lateness(cfg.agg_lateness_ms.saturating_mul(1_000_000));
         let gen = by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
         SimJob { sim, gen }
     }
@@ -287,6 +305,9 @@ impl PipelineBuilder {
             agg_flush_ns: cfg.agg_flush_ms.saturating_mul(1_000_000),
             agg_shards: cfg.agg_shards,
             agg_window_ns: cfg.agg_window_ms.saturating_mul(1_000_000),
+            agg_lateness_ns: cfg.agg_lateness_ms.saturating_mul(1_000_000),
+            transport: crate::transport::TransportKind::parse(&cfg.transport)
+                .unwrap_or_default(),
         };
         RtJob { trace, sources, workers: cfg.workers, opts }
     }
@@ -322,6 +343,18 @@ impl RtJob {
     /// Run the deployment to completion.
     pub fn run(self) -> RtResult {
         rt::run(&self.trace, self.sources, self.workers, &self.opts)
+    }
+
+    /// Run the deployment as child processes — one per worker, one per
+    /// merge shard — via [`crate::transport::launch::run_multiprocess`]
+    /// (`deploy --processes N`). The sources stay in this process.
+    pub fn run_multiprocess(self) -> std::io::Result<RtResult> {
+        crate::transport::launch::run_multiprocess(
+            &self.trace,
+            self.sources,
+            self.workers,
+            &self.opts,
+        )
     }
 }
 

@@ -6,9 +6,9 @@
 //! * one thread per **source**: pulls its round-robin share of the
 //!   trace, accumulates up to [`RtOptions::batch`] tuples, routes them
 //!   in one [`Grouper::route_batch`] call, and ships one `Vec<Msg>`
-//!   chunk per destination worker into that worker's **bounded**
-//!   channel (blocking send = backpressure, exactly like Storm's
-//!   max.spout.pending). Chunked sends amortise the per-tuple channel
+//!   chunk per destination worker down that worker's **tuple lane**
+//!   (blocking, credit-gated send = backpressure, exactly like Storm's
+//!   max.spout.pending). Chunked sends amortise the per-tuple
 //!   synchronisation that dominated the old per-tuple path.
 //! * one thread per **worker**: drains chunks, updates its word-count
 //!   state (a real per-key `HashMap` — its final size *is* the
@@ -24,7 +24,7 @@
 //!   1 = the classic single aggregator): the topology's second stage as
 //!   a fabric. Workers scatter each flush batch by key range
 //!   ([`crate::aggregate::ShardRouter`]) and ship the per-shard
-//!   sub-batches over dedicated worker→shard channels; each shard
+//!   sub-batches over dedicated worker→shard flush lanes; each shard
 //!   absorbs into its own [`WindowedMerge`] (per-pane merge stages,
 //!   metering flush traffic, payload bytes, merge time, and
 //!   flush→merge latency) and keeps a [`TopKSketch`] of its flush mass
@@ -32,60 +32,40 @@
 //!   ([`crate::aggregate::TopKGather`]). Windowed, flush messages
 //!   carry per-worker event-time watermarks (workers poll with a
 //!   timeout so watermark-only flushes flow even when their data
-//!   channel is quiet) and shards retire closed panes when the min
-//!   across progress-reporting workers passes a pane's end — a
-//!   heuristic whose misfires take the late-reopen path and re-merge
-//!   exactly. This is
-//!   the downstream aggregation the PKG paper charges against key
-//!   splitting, without which per-worker counts are only partials —
-//!   now with the single-point merge bottleneck sharded away.
+//!   lane is quiet) and shards retire closed panes when the min
+//!   across progress-reporting workers passes a pane's end plus the
+//!   `--agg_lateness_ms` slack — a heuristic whose misfires take the
+//!   late-reopen path and re-merge exactly.
 //!
-//! No source↔worker communication happens besides the data channels —
+//! Both data paths are written against the [`crate::transport`] lane
+//! traits, so the same topology runs over in-process loopback lanes
+//! (the default — byte-identical to the pre-transport engine), UDS or
+//! TCP streams ([`RtOptions::transport`]), or across process
+//! boundaries (`deploy --processes N`, [`crate::transport::launch`],
+//! which reuses [`worker_loop`] / [`shard_loop`] / [`source_loop`]
+//! verbatim in the child processes). Merged counts, per-window
+//! snapshots and exact top-k are transport-invariant; socket lanes
+//! additionally meter frames, bytes and serialization time into
+//! [`RtResult::wire`].
+//!
+//! No source↔worker communication happens besides the data lanes —
 //! FISH's worker-state inference gets no hidden help.
 
 use crate::aggregate::{
     self, Count, ShardRouter, TopKGather, TopKSketch, WindowSnapshot, WindowedMerge,
-    WindowedPartial,
+    WindowedOutput, WindowedPartial,
 };
 use crate::coordinator::{ClusterView, Grouper};
-use crate::metrics::{AggStats, Histogram, ShardAggStats, WindowStats};
+use crate::metrics::{AggStats, Histogram, ShardAggStats, WindowStats, WireLedger, WireStats};
+use crate::transport::wire::{FlushMsg, Msg};
+use crate::transport::{
+    loopback, socket, Clock, FlushRx, FlushTx, TransportKind, TupleRecv, TupleRx, TupleTx,
+};
 use crate::workload::Trace;
 use crate::Key;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread;
-use std::time::Instant;
-
-/// One in-flight tuple.
-struct Msg {
-    key: Key,
-    /// ns since pipeline start, from the source's emit clock.
-    emit_ns: u64,
-    /// The tuple's *event* time: the trace's scheduled emit ns, stamped
-    /// by the source. Windows are assigned by this — not by wall clock —
-    /// so per-window counts are deterministic and engine-invariant
-    /// (the trace's `ts` is exactly the simulator's arrival time).
-    ts: u64,
-}
-
-/// One partial-flush batch on its way to an aggregator shard.
-struct FlushMsg {
-    /// Worker that emitted the flush (indexes the shard's watermark
-    /// table).
-    worker: usize,
-    /// Wall ns since pipeline start when the worker emitted the flush.
-    emit_ns: u64,
-    /// The worker's event-time high-water mark: the highest tuple `ts`
-    /// it has processed. The shard's retirement watermark is the min of
-    /// these across workers — heuristic under cross-source skew, so a
-    /// late delta may reopen a pane (re-merged exactly at assembly).
-    watermark: u64,
-    /// Drained per-pane, per-key deltas since the worker's previous
-    /// flush (one entry per pane; empty when the flush only carries the
-    /// watermark).
-    panes: Vec<(u64, Vec<(Key, u64)>)>,
-}
+use std::time::{Duration, Instant};
 
 /// Result of a runtime deployment run.
 #[derive(Debug, Clone)]
@@ -129,9 +109,13 @@ pub struct RtResult {
     /// what they contain.
     pub windows: Vec<WindowSnapshot>,
     /// Pane-lifecycle ledger folded across the aggregator shards
-    /// (retirements, late reopens, open-pane memory peaks); all zeros
-    /// when unwindowed.
+    /// (retirements, late reopens and their re-merged tuple mass,
+    /// open-pane memory peaks); all zeros when unwindowed.
     pub window_stats: WindowStats,
+    /// Wire-transport traffic and serialization time. All zeros on
+    /// loopback (nothing is serialized); socket and multi-process runs
+    /// meter every frame both directions.
+    pub wire: WireStats,
 }
 
 impl RtResult {
@@ -155,9 +139,9 @@ impl RtResult {
 #[derive(Debug, Clone)]
 pub struct RtOptions {
     /// Bounded per-worker queue depth in **tuples** (backpressure knob,
-    /// like Storm's max.spout.pending). The channel carries chunks, so
-    /// the bound is enforced by per-worker tuple credits: a source
-    /// blocks while a worker's unprocessed tuples would exceed this.
+    /// like Storm's max.spout.pending). Loopback lanes enforce it with
+    /// shared tuple credits; socket lanes with a per-stream credit
+    /// window of the same size (credits return as `Credit` frames).
     /// With several sources the bound is approximate (each may overshoot
     /// by up to one chunk, exactly like concurrent spouts).
     pub queue_depth: usize,
@@ -176,8 +160,16 @@ pub struct RtOptions {
     /// [`crate::config::Config::agg_shards`].
     pub agg_shards: usize,
     /// Tumbling-pane length in event-time ns (0 = unwindowed). See
-    /// [`crate::config::Config::agg_window_ms`].
+    /// [`crate::config::Config::agg_window_ns`].
     pub agg_window_ns: u64,
+    /// Watermark slack before pane retirement (event-time ns): panes
+    /// stay open until the watermark passes `pane end + slack`, so
+    /// bounded disorder absorbs in place instead of reopening retired
+    /// panes. See [`crate::config::Config::agg_lateness_ms`].
+    pub agg_lateness_ns: u64,
+    /// Which lane backend carries source→worker and worker→shard
+    /// traffic (in-process): loopback channels (default), UDS or TCP.
+    pub transport: TransportKind,
 }
 
 impl Default for RtOptions {
@@ -190,6 +182,8 @@ impl Default for RtOptions {
             agg_flush_ns: crate::config::DEFAULT_AGG_FLUSH_MS * 1_000_000,
             agg_shards: 1,
             agg_window_ns: 0,
+            agg_lateness_ns: 0,
+            transport: TransportKind::Loopback,
         }
     }
 }
@@ -209,15 +203,15 @@ fn burn(ns: f64) {
 
 /// Scatter one drained (per-pane) flush across the shard fabric: each
 /// shard gets the panes' sub-batches it owns, on its worker→shard
-/// channel, stamped with the same emit time and the worker's event-time
-/// watermark. Unwindowed, shards with nothing to absorb are skipped
-/// (today's traffic shape); windowed, every shard gets the message —
-/// an empty one still advances the worker's watermark so panes can
-/// retire. Send errors are ignored — a gone shard only happens at
-/// shutdown.
+/// flush lane, stamped with the same emit time and the worker's
+/// event-time watermark. Unwindowed, shards with nothing to absorb are
+/// skipped (today's traffic shape); windowed, every shard gets the
+/// message — an empty one still advances the worker's watermark so
+/// panes can retire. Send errors are ignored — a gone shard only
+/// happens at shutdown.
 fn send_flush(
     router: &ShardRouter,
-    shard_txs: &[Sender<FlushMsg>],
+    shard_txs: &mut [Box<dyn FlushTx>],
     worker: usize,
     emit_ns: u64,
     watermark: u64,
@@ -240,285 +234,238 @@ fn send_flush(
     }
 }
 
-/// Run `trace` through `sources` grouper instances onto `n_workers`
-/// worker threads.
-pub fn run(
-    trace: &Arc<Trace>,
-    mut sources: Vec<Box<dyn Grouper>>,
+/// One source's whole life, over any tuple-lane backend: pull the
+/// round-robin share of the trace, route in batches under one cluster
+/// view, ship one chunk per destination worker down its (credit-gated,
+/// blocking) lane. Shared verbatim by the in-process engine and the
+/// multi-process coordinator.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn source_loop(
+    s: usize,
+    n_sources: usize,
+    mut grouper: Box<dyn Grouper>,
+    trace: &Trace,
+    batch: usize,
+    gap: u64,
+    clock: Clock,
+    per_tuple: &[f64],
+    workers_list: &[usize],
+    mut txs: Vec<Box<dyn TupleTx>>,
+) {
+    let n = trace.len();
+    // pace relative to when this source actually starts (≈0 in-process;
+    // multi-process, handshakes already spent some of the epoch)
+    let mut next_emit = clock.now_ns() + (s as u64) * gap / n_sources.max(1) as u64;
+    let mut keys: Vec<crate::Key> = Vec::with_capacity(batch);
+    let mut emits: Vec<u64> = Vec::with_capacity(batch);
+    let mut tss: Vec<u64> = Vec::with_capacity(batch);
+    let mut routed: Vec<usize> = vec![0; batch];
+    let mut chunks: Vec<Vec<Msg>> = (0..txs.len()).map(|_| Vec::new()).collect();
+    let mut i = s;
+    'stream: while i < n {
+        // accumulate tuples for one routing batch; under pacing,
+        // flush whatever is buffered instead of sitting on it
+        // while waiting for the next emit slot (keeps end-to-end
+        // latency free of artificial batching delay)
+        keys.clear();
+        emits.clear();
+        tss.clear();
+        while i < n && keys.len() < batch {
+            let t = trace.tuples()[i];
+            if gap > 0 {
+                if clock.now_ns() < next_emit && !keys.is_empty() {
+                    break; // ship the partial batch, then pace
+                }
+                // pace the stream
+                while clock.now_ns() < next_emit {
+                    std::hint::spin_loop();
+                }
+                next_emit += gap;
+            }
+            keys.push(t.key);
+            emits.push(clock.now_ns());
+            tss.push(t.ts); // event time: the trace's scheduled emit
+            i += n_sources;
+        }
+
+        // one route_batch call under one cluster view
+        let now = clock.now_ns();
+        let view = ClusterView {
+            now,
+            workers: workers_list,
+            per_tuple_time: per_tuple,
+            n_slots: per_tuple.len(),
+        };
+        let m = keys.len();
+        grouper.route_batch(&keys, &mut routed[..m], &view);
+
+        // one chunk send per destination worker (vs one send per
+        // tuple): this is the lane-contention win
+        for j in 0..m {
+            chunks[routed[j]].push(Msg { key: keys[j], emit_ns: emits[j], ts: tss[j] });
+        }
+        for (w, chunk) in chunks.iter_mut().enumerate() {
+            if chunk.is_empty() {
+                continue;
+            }
+            // blocking, credit-gated send: the lane waits for the
+            // worker's unprocessed count to leave room, and reports a
+            // vanished worker as `false` so the source errors out
+            // instead of blocking forever
+            if !txs[w].send(std::mem::take(chunk)) {
+                break 'stream; // worker gone (shutdown)
+            }
+        }
+    }
+    for tx in txs.iter_mut() {
+        tx.close();
+    }
+}
+
+/// One worker's whole life, over any lane backend: drain tuple chunks,
+/// fold the word-count state and the windowed delta, return processed
+/// credits, scatter periodic partial flushes, drain at shutdown.
+/// Returns `(latency histogram, tuples processed, state entries)`.
+/// Shared verbatim by the in-process engine and multi-process worker
+/// children.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn worker_loop(
+    w: usize,
+    cost: f64,
+    agg_flush_ns: u64,
+    agg_window_ns: u64,
+    clock: Clock,
+    router: &ShardRouter,
+    mut rx: Box<dyn TupleRx>,
+    mut flush_txs: Vec<Box<dyn FlushTx>>,
+) -> (Histogram, u64, usize) {
+    let windowed = agg_window_ns > 0;
+    let mut hist = Histogram::new();
+    let mut count = 0u64;
+    let mut state: std::collections::HashMap<Key, u64> = std::collections::HashMap::new();
+    let mut delta = WindowedPartial::new(Count, agg_window_ns);
+    let mut watermark = 0u64;
+    let mut next_flush = agg_flush_ns;
+    // windowed, the worker polls with a timeout so watermark-only
+    // flushes keep flowing even when its data lane goes quiet
+    // — otherwise a worker idle mid-run would pin every shard's
+    // min-watermark and stall pane retirement until shutdown
+    let poll = windowed && agg_flush_ns > 0;
+    loop {
+        let timeout = if poll { Some(Duration::from_nanos(agg_flush_ns)) } else { None };
+        let chunk = match rx.recv(timeout) {
+            TupleRecv::Chunk(c) => Some(c),
+            TupleRecv::Timeout => None,
+            TupleRecv::Closed => break,
+        };
+        for msg in chunk.into_iter().flatten() {
+            // the actual operator: word count
+            *state.entry(msg.key).or_insert(0) += 1;
+            delta.observe(msg.key, 1, msg.ts);
+            if msg.ts > watermark {
+                watermark = msg.ts;
+            }
+            burn(cost);
+            let done_ns = clock.now_ns();
+            hist.record(done_ns.saturating_sub(msg.emit_ns));
+            count += 1;
+            // release one backpressure credit per processed tuple
+            rx.ack(1);
+        }
+        // partial flush: scatter the delta across the shard
+        // fabric once per interval (checked at chunk granularity
+        // — the flush itself is off the per-tuple path). The
+        // schedule snaps to the interval's boundary grid
+        // (`next_boundary`, shared with the simulator) instead
+        // of `now + interval`, so cadence cannot drift by
+        // per-chunk processing time. Windowed, empty flushes
+        // still ship: they carry the watermark panes retire on.
+        if agg_flush_ns > 0 {
+            let now = clock.now_ns();
+            if now >= next_flush {
+                if windowed || !delta.is_empty() {
+                    let batch = delta.flush();
+                    send_flush(router, &mut flush_txs, w, now, watermark, batch, windowed);
+                }
+                next_flush = aggregate::next_boundary(now, agg_flush_ns);
+            }
+        }
+    }
+    // shutdown drain: whatever accumulated since the last flush,
+    // with the watermark pinned open — this worker is done, it
+    // can never hold a pane back again
+    if windowed || !delta.is_empty() {
+        let now = clock.now_ns();
+        send_flush(router, &mut flush_txs, w, now, u64::MAX, delta.flush(), windowed);
+    }
+    (hist, count, state.len())
+}
+
+/// One merge shard's whole life, over any lane backend: absorb flush
+/// batches into the windowed merge stage and the shard's top-k sketch,
+/// advance the min-across-workers watermark, retire panes, finish.
+/// Shared verbatim by the in-process engine and multi-process shard
+/// children.
+pub(crate) fn shard_loop(
     n_workers: usize,
-    opts: &RtOptions,
-) -> RtResult {
-    assert!(!sources.is_empty() && n_workers > 0);
-    let per_tuple: Vec<f64> = if opts.per_tuple_ns.is_empty() {
-        vec![0.0; n_workers]
-    } else {
-        (0..n_workers)
-            .map(|w| opts.per_tuple_ns[w % opts.per_tuple_ns.len()])
-            .collect()
-    };
-
-    // queue_depth is tuples; chunks vary in size (partial flushes under
-    // pacing, per-worker splits), so the bound is enforced with tuple
-    // credits rather than channel slots. The chunk channel itself is
-    // sized so it is never the binding constraint.
-    let queue_depth = opts.queue_depth.max(1);
-    let batch = opts.batch.max(1).min(queue_depth);
-    let inflight: Vec<Arc<AtomicUsize>> =
-        (0..n_workers).map(|_| Arc::new(AtomicUsize::new(0))).collect();
-    let mut senders: Vec<SyncSender<Vec<Msg>>> = Vec::with_capacity(n_workers);
-    let mut receivers: Vec<Receiver<Vec<Msg>>> = Vec::with_capacity(n_workers);
-    for _ in 0..n_workers {
-        let (tx, rx) = sync_channel::<Vec<Msg>>(queue_depth);
-        senders.push(tx);
-        receivers.push(rx);
-    }
-
-    let epoch = Instant::now();
-
-    // ---- aggregator fabric (stage two) ---------------------------------
-    // One thread per merge shard, each with its own unbounded flush
-    // channel: flush traffic is orders of magnitude below the data
-    // path, and an unbounded lane cannot deadlock against the
-    // tuple-credit backpressure loop. Workers scatter each flush by key
-    // range, so a shard only ever sees its own arc of the key space.
-    let n_shards = opts.agg_shards.max(1);
-    let agg_window_ns = opts.agg_window_ns;
-    let router = Arc::new(ShardRouter::new(n_shards));
-    let mut shard_txs: Vec<Sender<FlushMsg>> = Vec::with_capacity(n_shards);
-    let mut shard_handles = Vec::with_capacity(n_shards);
-    for _ in 0..n_shards {
-        let (tx, rx) = channel::<FlushMsg>();
-        shard_txs.push(tx);
-        shard_handles.push(thread::spawn(move || {
-            let mut stage =
-                WindowedMerge::new(Count, agg_window_ns, aggregate::DEFAULT_GATHER_CAPACITY);
-            let mut sketch = TopKSketch::new(aggregate::DEFAULT_GATHER_CAPACITY);
-            let mut lat = Histogram::new();
-            // per-worker event-time high-water marks; panes retire when
-            // the min across workers passes their end
-            let mut worker_wm = vec![0u64; n_workers];
-            while let Ok(flush) = rx.recv() {
-                if !flush.panes.is_empty() {
-                    let recv_ns = epoch.elapsed().as_nanos() as u64;
-                    lat.record(recv_ns.saturating_sub(flush.emit_ns));
-                }
-                for (win, entries) in flush.panes {
-                    for &(key, delta) in &entries {
-                        sketch.absorb(key, delta);
-                    }
-                    stage.absorb(win, entries);
-                }
-                if flush.watermark > worker_wm[flush.worker] {
-                    worker_wm[flush.worker] = flush.watermark;
-                }
-                // min over workers that have reported event-time progress:
-                // a worker that never sees a tuple (e.g. an FG worker whose
-                // key arc is empty) would otherwise pin the fabric at 0 and
-                // stall every retirement until shutdown. If a silent worker
-                // does speak up later, its deltas take the late-reopen path
-                // and re-merge exactly — the heuristic moves retirement
-                // timing, never the final counts.
-                let wm = worker_wm.iter().copied().filter(|&w| w > 0).min().unwrap_or(0);
-                stage.advance(wm);
+    agg_window_ns: u64,
+    agg_lateness_ns: u64,
+    clock: Clock,
+    mut rx: Box<dyn FlushRx>,
+) -> (WindowedOutput, TopKSketch, Histogram) {
+    let mut stage = WindowedMerge::new(Count, agg_window_ns, aggregate::DEFAULT_GATHER_CAPACITY)
+        .with_lateness(agg_lateness_ns);
+    let mut sketch = TopKSketch::new(aggregate::DEFAULT_GATHER_CAPACITY);
+    let mut lat = Histogram::new();
+    // per-worker event-time high-water marks; panes retire when
+    // the min across workers passes their end (plus lateness slack)
+    let mut worker_wm = vec![0u64; n_workers];
+    while let Some(flush) = rx.recv() {
+        if !flush.panes.is_empty() {
+            let recv_ns = clock.now_ns();
+            lat.record(recv_ns.saturating_sub(flush.emit_ns));
+        }
+        for (win, entries) in flush.panes {
+            for &(key, delta) in &entries {
+                sketch.absorb(key, delta);
             }
-            (stage.finish(), sketch, lat)
-        }));
+            stage.absorb(win, entries);
+        }
+        if flush.worker < worker_wm.len() && flush.watermark > worker_wm[flush.worker] {
+            worker_wm[flush.worker] = flush.watermark;
+        }
+        // min over workers that have reported event-time progress:
+        // a worker that never sees a tuple (e.g. an FG worker whose
+        // key arc is empty) would otherwise pin the fabric at 0 and
+        // stall every retirement until shutdown. If a silent worker
+        // does speak up later, its deltas take the late-reopen path
+        // and re-merge exactly — the heuristic moves retirement
+        // timing, never the final counts.
+        let wm = worker_wm.iter().copied().filter(|&w| w > 0).min().unwrap_or(0);
+        stage.advance(wm);
     }
+    (stage.finish(), sketch, lat)
+}
 
-    // ---- workers -------------------------------------------------------
-    let agg_flush_ns = opts.agg_flush_ns;
-    let mut worker_handles = Vec::with_capacity(n_workers);
-    for (w, rx) in receivers.into_iter().enumerate() {
-        let cost = per_tuple[w];
-        let credits = Arc::clone(&inflight[w]);
-        let agg_txs: Vec<Sender<FlushMsg>> = shard_txs.clone();
-        let router = Arc::clone(&router);
-        let windowed = agg_window_ns > 0;
-        worker_handles.push(thread::spawn(move || {
-            let mut hist = Histogram::new();
-            let mut count = 0u64;
-            let mut state: std::collections::HashMap<Key, u64> = std::collections::HashMap::new();
-            let mut delta = WindowedPartial::new(Count, agg_window_ns);
-            let mut watermark = 0u64;
-            let mut next_flush = agg_flush_ns;
-            // windowed, the worker polls with a timeout so watermark-only
-            // flushes keep flowing even when its data channel goes quiet
-            // — otherwise a worker idle mid-run would pin every shard's
-            // min-watermark and stall pane retirement until shutdown
-            let poll = windowed && agg_flush_ns > 0;
-            loop {
-                let chunk = if poll {
-                    match rx.recv_timeout(std::time::Duration::from_nanos(agg_flush_ns)) {
-                        Ok(c) => Some(c),
-                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
-                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
-                    }
-                } else {
-                    match rx.recv() {
-                        Ok(c) => Some(c),
-                        Err(_) => break,
-                    }
-                };
-                for msg in chunk.into_iter().flatten() {
-                    // the actual operator: word count
-                    *state.entry(msg.key).or_insert(0) += 1;
-                    delta.observe(msg.key, 1, msg.ts);
-                    if msg.ts > watermark {
-                        watermark = msg.ts;
-                    }
-                    burn(cost);
-                    let done_ns = epoch.elapsed().as_nanos() as u64;
-                    hist.record(done_ns.saturating_sub(msg.emit_ns));
-                    count += 1;
-                    // release one backpressure credit per processed tuple
-                    credits.fetch_sub(1, Ordering::Release);
-                }
-                // partial flush: scatter the delta across the shard
-                // fabric once per interval (checked at chunk granularity
-                // — the flush itself is off the per-tuple path). The
-                // schedule snaps to the interval's boundary grid
-                // (`next_boundary`, shared with the simulator) instead
-                // of `now + interval`, so cadence cannot drift by
-                // per-chunk processing time. Windowed, empty flushes
-                // still ship: they carry the watermark panes retire on.
-                if agg_flush_ns > 0 {
-                    let now = epoch.elapsed().as_nanos() as u64;
-                    if now >= next_flush {
-                        if windowed || !delta.is_empty() {
-                            let batch = delta.flush();
-                            send_flush(&router, &agg_txs, w, now, watermark, batch, windowed);
-                        }
-                        next_flush = aggregate::next_boundary(now, agg_flush_ns);
-                    }
-                }
-            }
-            // shutdown drain: whatever accumulated since the last flush,
-            // with the watermark pinned open — this worker is done, it
-            // can never hold a pane back again
-            if windowed || !delta.is_empty() {
-                let now = epoch.elapsed().as_nanos() as u64;
-                send_flush(&router, &agg_txs, w, now, u64::MAX, delta.flush(), windowed);
-            }
-            (hist, count, state.len())
-        }));
-    }
-    // workers hold the only remaining flush senders: each shard thread
-    // exits exactly when the last worker drains
-    drop(shard_txs);
-
-    // ---- sources -------------------------------------------------------
-    let workers_list: Vec<usize> = (0..n_workers).collect();
-    let n_sources = sources.len();
-    let mut source_handles = Vec::with_capacity(n_sources);
-    for (s, mut grouper) in sources.drain(..).enumerate() {
-        let txs: Vec<SyncSender<Vec<Msg>>> = senders.clone();
-        let trace = Arc::clone(trace);
-        let workers_list = workers_list.clone();
-        let per_tuple = per_tuple.clone();
-        let inflight = inflight.clone();
-        let gap = opts.interarrival_ns * n_sources as u64;
-        source_handles.push(thread::spawn(move || {
-            let n = trace.len();
-            let mut next_emit = (s as u64) * gap / n_sources.max(1) as u64;
-            let mut keys: Vec<crate::Key> = Vec::with_capacity(batch);
-            let mut emits: Vec<u64> = Vec::with_capacity(batch);
-            let mut tss: Vec<u64> = Vec::with_capacity(batch);
-            let mut routed: Vec<usize> = vec![0; batch];
-            let mut chunks: Vec<Vec<Msg>> = (0..txs.len()).map(|_| Vec::new()).collect();
-            let mut i = s;
-            'stream: while i < n {
-                // accumulate tuples for one routing batch; under pacing,
-                // flush whatever is buffered instead of sitting on it
-                // while waiting for the next emit slot (keeps end-to-end
-                // latency free of artificial batching delay)
-                keys.clear();
-                emits.clear();
-                tss.clear();
-                while i < n && keys.len() < batch {
-                    let t = trace.tuples()[i];
-                    if gap > 0 {
-                        if (epoch.elapsed().as_nanos() as u64) < next_emit && !keys.is_empty() {
-                            break; // ship the partial batch, then pace
-                        }
-                        // pace the stream
-                        while (epoch.elapsed().as_nanos() as u64) < next_emit {
-                            std::hint::spin_loop();
-                        }
-                        next_emit += gap;
-                    }
-                    keys.push(t.key);
-                    emits.push(epoch.elapsed().as_nanos() as u64);
-                    tss.push(t.ts); // event time: the trace's scheduled emit
-                    i += n_sources;
-                }
-
-                // one route_batch call under one cluster view
-                let now = epoch.elapsed().as_nanos() as u64;
-                let view = ClusterView {
-                    now,
-                    workers: &workers_list,
-                    per_tuple_time: &per_tuple,
-                    n_slots: per_tuple.len(),
-                };
-                let m = keys.len();
-                grouper.route_batch(&keys, &mut routed[..m], &view);
-
-                // one chunk send per destination worker (vs one send per
-                // tuple): this is the channel-contention win
-                for j in 0..m {
-                    chunks[routed[j]].push(Msg { key: keys[j], emit_ns: emits[j], ts: tss[j] });
-                }
-                for (w, chunk) in chunks.iter_mut().enumerate() {
-                    if chunk.is_empty() {
-                        continue;
-                    }
-                    // tuple-credit backpressure (blocking send): wait for
-                    // the worker's unprocessed count to leave room. The
-                    // periodic empty-chunk probe detects a vanished
-                    // worker (whose credits would never drain) so the
-                    // source errors out instead of spinning forever.
-                    let mut spins = 0u32;
-                    while inflight[w].load(Ordering::Acquire) + chunk.len() > queue_depth {
-                        std::hint::spin_loop();
-                        spins = spins.wrapping_add(1);
-                        if spins % (1 << 20) == 0 && txs[w].send(Vec::new()).is_err() {
-                            break 'stream; // worker gone
-                        }
-                    }
-                    inflight[w].fetch_add(chunk.len(), Ordering::AcqRel);
-                    if txs[w].send(std::mem::take(chunk)).is_err() {
-                        break 'stream; // worker gone (shutdown)
-                    }
-                }
-            }
-        }));
-    }
-
-    for h in source_handles {
-        h.join().expect("source thread panicked");
-    }
-    drop(senders); // close channels → workers drain and exit
-
-    let mut latency = Histogram::new();
-    let mut counts = Vec::with_capacity(n_workers);
-    let mut states = Vec::with_capacity(n_workers);
-    for h in worker_handles {
-        let (hist, count, state_len) = h.join().expect("worker thread panicked");
-        latency.merge(&hist);
-        counts.push(count);
-        states.push(state_len);
-    }
-    // gather the fabric: shard results arrive in shard-id order, keys
-    // are disjoint across shards, so concat + sort reproduces the
-    // single-aggregator ordering byte for byte
+/// Assemble the fabric's per-shard outputs into the run-level result
+/// fields: exact merged counts (concat + sort — shards partition the
+/// key space), per-shard ledgers, window snapshots (empty when
+/// unwindowed) and the folded pane-lifecycle stats. Shared with the
+/// multi-process coordinator, which gets the same triples back over
+/// `Done` frames instead of thread joins.
+#[allow(clippy::type_complexity)]
+pub(crate) fn assemble_shards(
+    agg_window_ns: u64,
+    shard_outs: Vec<(WindowedOutput, TopKSketch, Histogram)>,
+) -> (Vec<(Key, u64)>, ShardAggStats, Vec<WindowSnapshot>, WindowStats, TopKGather, Histogram) {
+    let n_shards = shard_outs.len();
     let mut merged: Vec<(Key, u64)> = Vec::new();
     let mut per_shard: Vec<AggStats> = Vec::with_capacity(n_shards);
     let mut per_shard_windows: Vec<Vec<aggregate::WindowResult>> = Vec::with_capacity(n_shards);
     let mut window_stats = WindowStats::default();
     let mut sketches: Vec<TopKSketch> = Vec::with_capacity(n_shards);
     let mut agg_latency = Histogram::new();
-    for h in shard_handles {
-        let (out, sketch, lat) = h.join().expect("aggregator shard thread panicked");
+    for (out, sketch, lat) in shard_outs {
         merged.extend(out.all_time);
         per_shard.push(out.stats);
         window_stats.absorb(&out.window_stats);
@@ -538,10 +485,133 @@ pub fn run(
         window_stats = WindowStats::default();
         Vec::new()
     };
-    let shard_agg = ShardAggStats { per_shard };
-    let agg = shard_agg.total();
     let gather = TopKGather::from_shards(sketches);
-    let wall_ns = epoch.elapsed().as_nanos() as u64;
+    (merged, ShardAggStats { per_shard }, windows, window_stats, gather, agg_latency)
+}
+
+/// Normalise the per-worker burn table to `n_workers` entries.
+pub(crate) fn per_tuple_table(opts: &RtOptions, n_workers: usize) -> Vec<f64> {
+    if opts.per_tuple_ns.is_empty() {
+        vec![0.0; n_workers]
+    } else {
+        (0..n_workers)
+            .map(|w| opts.per_tuple_ns[w % opts.per_tuple_ns.len()])
+            .collect()
+    }
+}
+
+/// Run `trace` through `sources` grouper instances onto `n_workers`
+/// worker threads, over the lane backend [`RtOptions::transport`]
+/// selects (all in one process; `deploy --processes N` is
+/// [`crate::transport::launch::run_multiprocess`]).
+pub fn run(
+    trace: &Arc<Trace>,
+    mut sources: Vec<Box<dyn Grouper>>,
+    n_workers: usize,
+    opts: &RtOptions,
+) -> RtResult {
+    assert!(!sources.is_empty() && n_workers > 0);
+    let per_tuple = per_tuple_table(opts, n_workers);
+
+    // queue_depth is tuples; chunks vary in size (partial flushes under
+    // pacing, per-worker splits), so the bound is enforced with tuple
+    // credits rather than lane slots. Chunks are clamped ≤ queue_depth
+    // so a single chunk can always be admitted.
+    let queue_depth = opts.queue_depth.max(1);
+    let batch = opts.batch.max(1).min(queue_depth);
+    let n_sources = sources.len();
+    let n_shards = opts.agg_shards.max(1);
+    let agg_window_ns = opts.agg_window_ns;
+    let agg_lateness_ns = opts.agg_lateness_ns;
+    let agg_flush_ns = opts.agg_flush_ns;
+
+    // ---- lanes ---------------------------------------------------------
+    // Loopback lanes are channels + atomic credits (no serialization,
+    // ledger stays zero); socket lanes carry the wire format with
+    // per-stream credit windows and meter every frame.
+    let ledger = Arc::new(WireLedger::new());
+    let (tuple_txs, tuple_rxs) = match opts.transport {
+        TransportKind::Loopback => loopback::tuple_lanes(n_sources, n_workers, queue_depth),
+        kind => socket::tuple_mesh(kind, n_sources, n_workers, queue_depth, &ledger)
+            .expect("tuple socket mesh"),
+    };
+    let (flush_txs, flush_rxs) = match opts.transport {
+        TransportKind::Loopback => loopback::flush_lanes(n_workers, n_shards),
+        kind => socket::flush_mesh(kind, n_workers, n_shards, &ledger).expect("flush socket mesh"),
+    };
+
+    let clock = Clock::mono();
+    let router = Arc::new(ShardRouter::new(n_shards));
+
+    // ---- aggregator fabric (stage two) ---------------------------------
+    // One thread per merge shard. Flush lanes are uncredited: flush
+    // traffic is orders of magnitude below the data path, and an
+    // ungated lane cannot deadlock against the tuple-credit loop.
+    let mut shard_handles = Vec::with_capacity(n_shards);
+    for rx in flush_rxs {
+        shard_handles.push(thread::spawn(move || {
+            shard_loop(n_workers, agg_window_ns, agg_lateness_ns, clock, rx)
+        }));
+    }
+
+    // ---- workers -------------------------------------------------------
+    let mut worker_handles = Vec::with_capacity(n_workers);
+    for (w, (rx, txs)) in tuple_rxs.into_iter().zip(flush_txs).enumerate() {
+        let cost = per_tuple[w];
+        let router = Arc::clone(&router);
+        worker_handles.push(thread::spawn(move || {
+            worker_loop(w, cost, agg_flush_ns, agg_window_ns, clock, &router, rx, txs)
+        }));
+    }
+
+    // ---- sources -------------------------------------------------------
+    let workers_list: Vec<usize> = (0..n_workers).collect();
+    let mut source_handles = Vec::with_capacity(n_sources);
+    for (s, (grouper, txs)) in sources.drain(..).zip(tuple_txs).enumerate() {
+        let trace = Arc::clone(trace);
+        let workers_list = workers_list.clone();
+        let per_tuple = per_tuple.clone();
+        let gap = opts.interarrival_ns * n_sources as u64;
+        source_handles.push(thread::spawn(move || {
+            source_loop(
+                s,
+                n_sources,
+                grouper,
+                &trace,
+                batch,
+                gap,
+                clock,
+                &per_tuple,
+                &workers_list,
+                txs,
+            );
+        }));
+    }
+
+    for h in source_handles {
+        h.join().expect("source thread panicked");
+    }
+
+    let mut latency = Histogram::new();
+    let mut counts = Vec::with_capacity(n_workers);
+    let mut states = Vec::with_capacity(n_workers);
+    for h in worker_handles {
+        let (hist, count, state_len) = h.join().expect("worker thread panicked");
+        latency.merge(&hist);
+        counts.push(count);
+        states.push(state_len);
+    }
+    // gather the fabric: shard results arrive in shard-id order, keys
+    // are disjoint across shards, so concat + sort reproduces the
+    // single-aggregator ordering byte for byte
+    let mut shard_outs = Vec::with_capacity(n_shards);
+    for h in shard_handles {
+        shard_outs.push(h.join().expect("aggregator shard thread panicked"));
+    }
+    let (merged, shard_agg, windows, window_stats, gather, agg_latency) =
+        assemble_shards(agg_window_ns, shard_outs);
+    let agg = shard_agg.total();
+    let wall_ns = clock.now_ns();
     let total: u64 = counts.iter().sum();
     let entries: usize = states.iter().sum();
     // distinct keys = key_space actually touched; recompute from trace
@@ -565,6 +635,7 @@ pub fn run(
         gather,
         windows,
         window_stats,
+        wire: ledger.snapshot(),
     }
 }
 
@@ -619,6 +690,8 @@ mod tests {
             }
             assert!(r.agg.flushes > 0, "{kind}");
             assert_eq!(r.agg_latency.count(), r.agg.flushes, "{kind}");
+            // loopback lanes serialize nothing
+            assert!(!r.wire.any(), "{kind}");
         }
     }
 
@@ -651,6 +724,32 @@ mod tests {
         }
         // every shard that absorbed traffic is visible in the ledger
         assert!(sharded.shard_agg.per_shard.iter().any(|s| s.messages > 0));
+    }
+
+    #[test]
+    fn socket_transport_matches_loopback_merged_output() {
+        // the loopback ≡ socket oracle, in miniature (the integration
+        // test covers UDS/TCP × windowed × sharded): same trace, same
+        // schemes, real TCP lanes — identical merged counts and top-k,
+        // and the wire ledger actually metered the traffic
+        let trace = small_trace();
+        let run_with = |transport: TransportKind| {
+            let mut cfg = Config::default();
+            cfg.workers = 4;
+            let sources: Vec<Box<dyn Grouper>> =
+                (0..2).map(|s| make_kind(SchemeKind::Pkg, &cfg, s)).collect();
+            let opts = RtOptions { transport, agg_shards: 2, ..Default::default() };
+            run(&trace, sources, 4, &opts)
+        };
+        let loopback = run_with(TransportKind::Loopback);
+        let tcp = run_with(TransportKind::Tcp);
+        assert_eq!(loopback.merged, tcp.merged);
+        assert_eq!(loopback.top_k(10), tcp.top_k(10));
+        assert_eq!(tcp.worker_counts.iter().sum::<u64>(), 20_000);
+        assert!(!loopback.wire.any());
+        assert!(tcp.wire.any());
+        assert_eq!(tcp.wire.tuples_out, 20_000 + tcp.agg.messages);
+        assert!(tcp.wire.bytes_out > 0 && tcp.wire.bytes_in > 0);
     }
 
     #[test]

@@ -142,12 +142,13 @@ struct StageTwo {
 }
 
 impl StageTwo {
-    fn new(n_shards: usize, n_slots: usize, window_ns: u64) -> Self {
+    fn new(n_shards: usize, n_slots: usize, window_ns: u64, lateness_ns: u64) -> Self {
         StageTwo {
             router: ShardRouter::new(n_shards),
             shards: (0..n_shards)
                 .map(|_| {
                     WindowedMerge::new(Count, window_ns, crate::aggregate::DEFAULT_GATHER_CAPACITY)
+                        .with_lateness(lateness_ns)
                 })
                 .collect(),
             gather: TopKGather::new(n_shards, crate::aggregate::DEFAULT_GATHER_CAPACITY),
@@ -237,6 +238,11 @@ pub struct Simulator {
     agg_shards: usize,
     /// Tumbling-pane length in virtual ns; 0 = unwindowed.
     agg_window_ns: u64,
+    /// Watermark slack before pane retirement (virtual ns). Sim
+    /// watermarks are exact, so this only delays retirement — it can
+    /// never create or absorb late deltas here — but keeping the knob
+    /// engine-uniform lets one config drive both engines.
+    agg_lateness_ns: u64,
 }
 
 impl Simulator {
@@ -255,6 +261,7 @@ impl Simulator {
             agg_flush_ns: crate::config::DEFAULT_AGG_FLUSH_MS * 1_000_000,
             agg_shards: 1,
             agg_window_ns: 0,
+            agg_lateness_ns: 0,
         }
     }
 
@@ -291,6 +298,14 @@ impl Simulator {
         self
     }
 
+    /// Set the watermark slack (virtual ns) panes stay open past their
+    /// end before retiring (`--agg_lateness_ms`; 0 = retire exactly at
+    /// the pane end).
+    pub fn with_agg_lateness(mut self, ns: u64) -> Self {
+        self.agg_lateness_ns = ns;
+        self
+    }
+
     /// Run `gen` to completion.
     ///
     /// Tuples are drained in batches: each batch shares one
@@ -315,7 +330,8 @@ impl Simulator {
         // windowed merge-shard fabric
         let mut partials: Vec<WindowedPartial<Count>> =
             (0..n_slots).map(|_| WindowedPartial::new(Count, self.agg_window_ns)).collect();
-        let mut stage2 = StageTwo::new(self.agg_shards, n_slots, self.agg_window_ns);
+        let mut stage2 =
+            StageTwo::new(self.agg_shards, n_slots, self.agg_window_ns, self.agg_lateness_ns);
         let mut next_flush = self.agg_flush_ns;
 
         let mut keys: Vec<crate::Key> = Vec::with_capacity(self.batch);

@@ -55,6 +55,10 @@
 //!   chunked per-worker sends (the Apache-Storm stand-in, Figs. 18–20).
 //! * [`runtime`] — PJRT bridge: loads the AOT-compiled `epoch_stats` HLO
 //!   artifacts and runs them from the coordinator hot path.
+//! * [`transport`] — the distributed transport subsystem: lane traits
+//!   over in-process loopback, UDS and TCP backends carrying a
+//!   length-prefixed binary wire format with credit-based flow
+//!   control, plus the `deploy --processes N` multi-process launcher.
 //! * [`metrics`], [`config`], [`cli`], [`report`], [`testing`], [`util`]
 //!   — supporting substrates (hand-rolled: the build is offline).
 //!
@@ -73,6 +77,7 @@ pub mod runtime;
 pub mod sketch;
 pub mod state;
 pub mod testing;
+pub mod transport;
 pub mod util;
 pub mod workload;
 

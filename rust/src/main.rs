@@ -83,6 +83,7 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
         t.row(&["windows retired".into(), r.windows.len().to_string()]);
         t.row(&["pane retirements (pane-shard)".into(), r.window_stats.panes_retired.to_string()]);
         t.row(&["late pane reopens".into(), r.window_stats.late_reopens.to_string()]);
+        t.row(&["late reopen mass (tuples)".into(), r.window_stats.late_reopen_mass.to_string()]);
         t.row(&["peak open panes/shard".into(), r.window_stats.max_open_panes.to_string()]);
         t.row(&["peak open-pane entries".into(), r.window_stats.max_open_entries.to_string()]);
     }
@@ -110,14 +111,23 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_deploy(args: &Args) -> anyhow::Result<()> {
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
+    // --processes N: N worker processes (plus one per merge shard)
+    if cfg.processes > 0 {
+        cfg.workers = cfg.processes;
+    }
     let sources = build_sources(&cfg)?;
     let job = Pipeline::builder()
         .config(cfg.clone())
         .with_sources(sources)
         .build_rt();
     let n_tuples = job.trace().len();
-    let r = job.run();
+    let trace = std::sync::Arc::clone(job.trace());
+    let r = if cfg.processes > 0 {
+        job.run_multiprocess()?
+    } else {
+        job.run()
+    };
     let (mean, p50, p95, p99) = r.latency.summary();
     let mut t = Table::new(
         &format!(
@@ -126,6 +136,19 @@ fn cmd_deploy(args: &Args) -> anyhow::Result<()> {
         ),
         &["metric", "value"],
     );
+    let topology = if cfg.processes > 0 {
+        format!(
+            "{} ({} worker + {} shard processes)",
+            fish::transport::launch::process_kind(
+                fish::transport::TransportKind::parse(&cfg.transport).unwrap_or_default()
+            ),
+            cfg.workers,
+            cfg.agg_shards
+        )
+    } else {
+        format!("{} (threads)", cfg.transport)
+    };
+    t.row(&["transport".into(), topology]);
     t.row(&["throughput".into(), format!("{:.0} tuples/s", r.throughput)]);
     t.row(&["latency mean".into(), ns(mean as u64)]);
     t.row(&["latency p50".into(), ns(p50)]);
@@ -140,16 +163,50 @@ fn cmd_deploy(args: &Args) -> anyhow::Result<()> {
     t.row(&["shard imbalance max/mean-1".into(), f2(r.shard_agg.imbalance().relative)]);
     // rt flush latency is wall-clock flush→merge transit per shard batch
     t.row(&["agg flush p99 (wall)".into(), ns(r.agg_latency.quantile(0.99))]);
+    if r.wire.any() {
+        // socket / multi-process lanes: what the wire actually carried
+        t.row(&["wire frames out/in".into(), format!("{}/{}", r.wire.frames_out, r.wire.frames_in)]);
+        t.row(&["wire bytes out/in".into(), format!("{}/{} B", r.wire.bytes_out, r.wire.bytes_in)]);
+        t.row(&[
+            "wire throughput".into(),
+            format!("{:.1} MB/s", r.wire.bytes_per_sec(r.wall_ns) / 1e6),
+        ]);
+        t.row(&["serialize".into(), format!("{:.0} ns/tuple", r.wire.encode_ns_per_tuple())]);
+        t.row(&["deserialize".into(), format!("{:.0} ns/tuple", r.wire.decode_ns_per_tuple())]);
+    }
     if cfg.agg_window_ms > 0 {
         t.row(&["agg window".into(), format!("{} ms", cfg.agg_window_ms)]);
+        if cfg.agg_lateness_ms > 0 {
+            t.row(&["agg lateness slack".into(), format!("{} ms", cfg.agg_lateness_ms)]);
+        }
         t.row(&["windows retired".into(), r.windows.len().to_string()]);
         t.row(&["pane retirements (pane-shard)".into(), r.window_stats.panes_retired.to_string()]);
         t.row(&["late pane reopens".into(), r.window_stats.late_reopens.to_string()]);
+        t.row(&["late reopen mass (tuples)".into(), r.window_stats.late_reopen_mass.to_string()]);
         t.row(&["peak open panes/shard".into(), r.window_stats.max_open_panes.to_string()]);
         t.row(&["peak open-pane entries".into(), r.window_stats.max_open_entries.to_string()]);
     }
     t.row(&["wall time".into(), ns(r.wall_ns)]);
     t.print();
+
+    // --verify: re-run the same trace through the in-process loopback
+    // engine and insist every transport-invariant output matches
+    if args.has("verify") {
+        let mut ref_cfg = cfg.clone();
+        ref_cfg.processes = 0;
+        ref_cfg.transport = "loopback".into();
+        let reference = Pipeline::builder()
+            .config(ref_cfg.clone())
+            .with_sources(build_sources(&ref_cfg)?)
+            .trace(trace)
+            .build_rt()
+            .run();
+        fish::transport::launch::verify_against_reference(&r, &reference)
+            .map_err(|e| anyhow::anyhow!("verify failed: {e}"))?;
+        println!(
+            "verify: OK — merged counts, windows and top-k match the in-process reference"
+        );
+    }
     Ok(())
 }
 
@@ -242,14 +299,24 @@ fn usage() -> ! {
     eprintln!(
         "usage: fish <sim|deploy|compare|info> [--config file.toml] [--scheme S] \
          [--workload zf|mt|am] [--tuples N] [--workers N] [--zipf_z Z] [--batch N] \
-         [--agg_flush_ms N] [--agg_shards N] [--agg_window_ms N] \
-         [--rebalance_threshold F] [--identifier native|xla-cms] [--seed N] ..."
+         [--agg_flush_ms N] [--agg_shards N] [--agg_window_ms N] [--agg_lateness_ms N] \
+         [--transport loopback|uds|tcp] [--rebalance_threshold F] \
+         [--identifier native|xla-cms] [--seed N] ...\n       \
+         deploy also takes [--processes N] (N worker processes + one per merge \
+         shard) and [--verify] (check against the in-process reference)"
     );
     std::process::exit(2);
 }
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(true).unwrap_or_else(|e| {
+    // hidden child-process entry points for `deploy --processes N`
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    match raw.first().map(|s| s.as_str()) {
+        Some("__worker") => return fish::transport::launch::worker_child(&raw[1..]).map_err(Into::into),
+        Some("__shard") => return fish::transport::launch::shard_child(&raw[1..]).map_err(Into::into),
+        _ => {}
+    }
+    let args = Args::parse(raw, true).unwrap_or_else(|e| {
         eprintln!("{e}");
         usage()
     });

@@ -102,6 +102,12 @@ pub struct WindowStats {
     /// (possible only under the runtime engine's heuristic watermarks;
     /// reopened panes re-finalize and merge exactly).
     pub late_reopens: u64,
+    /// Accumulator mass re-merged through late reopens — for `Count`,
+    /// the number of tuples whose counts landed after retirement. A
+    /// pane that reopens once for a 1 000-tuple delta costs far more
+    /// re-merge work than one reopening for a single straggler;
+    /// `late_reopens` alone cannot tell them apart.
+    pub late_reopen_mass: u64,
     /// Peak panes open at once on any single shard.
     pub max_open_panes: u64,
     /// Peak `(key, acc)` entries held in open panes — the windowed
@@ -118,6 +124,7 @@ impl WindowStats {
         self.panes_opened += other.panes_opened;
         self.panes_retired += other.panes_retired;
         self.late_reopens += other.late_reopens;
+        self.late_reopen_mass += other.late_reopen_mass;
         self.max_open_panes = self.max_open_panes.max(other.max_open_panes);
         self.max_open_entries += other.max_open_entries;
     }
@@ -212,6 +219,7 @@ mod tests {
             panes_opened: 4,
             panes_retired: 3,
             late_reopens: 1,
+            late_reopen_mass: 40,
             max_open_panes: 2,
             max_open_entries: 100,
         };
@@ -219,6 +227,7 @@ mod tests {
             panes_opened: 6,
             panes_retired: 6,
             late_reopens: 0,
+            late_reopen_mass: 0,
             max_open_panes: 3,
             max_open_entries: 250,
         };
@@ -227,6 +236,7 @@ mod tests {
         assert_eq!(folded.panes_opened, 10);
         assert_eq!(folded.panes_retired, 9);
         assert_eq!(folded.late_reopens, 1);
+        assert_eq!(folded.late_reopen_mass, 40);
         assert_eq!(folded.max_open_panes, 3);
         assert_eq!(folded.max_open_entries, 350);
     }

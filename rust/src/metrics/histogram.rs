@@ -117,6 +117,45 @@ impl Histogram {
     pub fn summary(&self) -> (f64, u64, u64, u64) {
         (self.mean(), self.quantile(0.50), self.quantile(0.95), self.quantile(0.99))
     }
+
+    /// Serialize to a sparse little-endian byte layout (only non-zero
+    /// buckets travel): used by multi-process children to ship latency
+    /// histograms back to the coordinator inside `Done` frames.
+    pub fn to_bytes(&self, buf: &mut Vec<u8>) {
+        let nonzero: u32 = self.counts.iter().filter(|&&c| c != 0).count() as u32;
+        buf.extend_from_slice(&nonzero.to_le_bytes());
+        for (b, &c) in self.counts.iter().enumerate() {
+            if c != 0 {
+                buf.extend_from_slice(&(b as u32).to_le_bytes());
+                buf.extend_from_slice(&c.to_le_bytes());
+            }
+        }
+        buf.extend_from_slice(&self.total.to_le_bytes());
+        buf.extend_from_slice(&(self.sum as u64).to_le_bytes());
+        buf.extend_from_slice(&((self.sum >> 64) as u64).to_le_bytes());
+        buf.extend_from_slice(&self.max.to_le_bytes());
+        buf.extend_from_slice(&self.min.to_le_bytes());
+    }
+
+    /// Rebuild from [`Histogram::to_bytes`] output; `None` on any
+    /// truncation or an out-of-range bucket index.
+    pub fn from_bytes(bytes: &[u8]) -> Option<Histogram> {
+        let mut r = crate::transport::wire::Reader::new(bytes);
+        let mut h = Histogram::new();
+        let nonzero = r.u32().ok()? as usize;
+        for _ in 0..nonzero {
+            let b = r.u32().ok()? as usize;
+            let c = r.u64().ok()?;
+            *h.counts.get_mut(b)? = c;
+        }
+        h.total = r.u64().ok()?;
+        let lo = r.u64().ok()? as u128;
+        let hi = r.u64().ok()? as u128;
+        h.sum = (hi << 64) | lo;
+        h.max = r.u64().ok()?;
+        h.min = r.u64().ok()?;
+        Some(h)
+    }
 }
 
 impl Default for Histogram {
@@ -187,6 +226,34 @@ mod tests {
         assert_eq!(a.count(), c.count());
         assert_eq!(a.quantile(0.99), c.quantile(0.99));
         assert_eq!(a.max(), c.max());
+    }
+
+    #[test]
+    fn byte_round_trip_preserves_every_statistic() {
+        let mut h = Histogram::new();
+        let mut rng = crate::util::Rng::new(7);
+        for _ in 0..5_000 {
+            h.record(rng.gen_range(10_000_000));
+        }
+        let mut buf = Vec::new();
+        h.to_bytes(&mut buf);
+        let back = Histogram::from_bytes(&buf).expect("round trip");
+        assert_eq!(back.count(), h.count());
+        assert_eq!(back.min(), h.min());
+        assert_eq!(back.max(), h.max());
+        assert_eq!(back.mean(), h.mean());
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(back.quantile(q), h.quantile(q));
+        }
+        // empty histograms survive too (min sentinel intact)
+        let mut empty_buf = Vec::new();
+        Histogram::new().to_bytes(&mut empty_buf);
+        let empty = Histogram::from_bytes(&empty_buf).expect("empty");
+        assert_eq!(empty.count(), 0);
+        assert_eq!(empty.min(), 0);
+        // truncated input is rejected, never a panic
+        assert!(Histogram::from_bytes(&buf[..buf.len() - 1]).is_none());
+        assert!(Histogram::from_bytes(&[]).is_none());
     }
 
     #[test]

@@ -5,8 +5,10 @@ pub mod agg;
 pub mod histogram;
 pub mod imbalance;
 pub mod memory;
+pub mod wire;
 
 pub use agg::{AggStats, ShardAggStats, WindowStats};
 pub use histogram::Histogram;
 pub use imbalance::Imbalance;
 pub use memory::MemoryTracker;
+pub use wire::{WireLedger, WireStats};

@@ -1,0 +1,171 @@
+//! Wire-transport ledger: frames, bytes, tuples and serialization
+//! time crossing lane boundaries.
+//!
+//! Socket lanes share one [`WireLedger`] per endpoint set (an
+//! `Arc<WireLedger>` cloned into every tx/rx and reader thread);
+//! loopback lanes record nothing, so an all-loopback run reports a
+//! zero [`WireStats`]. Multi-process children snapshot their ledger
+//! into the `Done` frame they return and the coordinator folds the
+//! copies together with [`WireStats::absorb`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared, thread-safe wire counters for one set of transport
+/// endpoints.
+#[derive(Debug, Default)]
+pub struct WireLedger {
+    frames_out: AtomicU64,
+    bytes_out: AtomicU64,
+    tuples_out: AtomicU64,
+    encode_ns: AtomicU64,
+    frames_in: AtomicU64,
+    bytes_in: AtomicU64,
+    tuples_in: AtomicU64,
+    decode_ns: AtomicU64,
+}
+
+impl WireLedger {
+    /// Fresh zeroed ledger.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one encoded and sent frame: its full size on the wire,
+    /// the stream tuples it carries, and the encode time.
+    pub fn record_out(&self, bytes: u64, tuples: u64, encode_ns: u64) {
+        self.frames_out.fetch_add(1, Ordering::Relaxed);
+        self.bytes_out.fetch_add(bytes, Ordering::Relaxed);
+        self.tuples_out.fetch_add(tuples, Ordering::Relaxed);
+        self.encode_ns.fetch_add(encode_ns, Ordering::Relaxed);
+    }
+
+    /// Record one received and decoded frame.
+    pub fn record_in(&self, bytes: u64, tuples: u64, decode_ns: u64) {
+        self.frames_in.fetch_add(1, Ordering::Relaxed);
+        self.bytes_in.fetch_add(bytes, Ordering::Relaxed);
+        self.tuples_in.fetch_add(tuples, Ordering::Relaxed);
+        self.decode_ns.fetch_add(decode_ns, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of the counters.
+    pub fn snapshot(&self) -> WireStats {
+        WireStats {
+            frames_out: self.frames_out.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            tuples_out: self.tuples_out.load(Ordering::Relaxed),
+            encode_ns: self.encode_ns.load(Ordering::Relaxed),
+            frames_in: self.frames_in.load(Ordering::Relaxed),
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            tuples_in: self.tuples_in.load(Ordering::Relaxed),
+            decode_ns: self.decode_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A foldable snapshot of one endpoint set's wire traffic.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// Frames encoded and sent.
+    pub frames_out: u64,
+    /// Bytes written to the wire (headers included).
+    pub bytes_out: u64,
+    /// Stream tuples serialized (data tuples + flush entries).
+    pub tuples_out: u64,
+    /// Total serialization time in ns.
+    pub encode_ns: u64,
+    /// Frames received and decoded.
+    pub frames_in: u64,
+    /// Bytes read from the wire (headers included).
+    pub bytes_in: u64,
+    /// Stream tuples deserialized.
+    pub tuples_in: u64,
+    /// Total deserialization time in ns.
+    pub decode_ns: u64,
+}
+
+impl WireStats {
+    /// Mean serialization cost per tuple sent (ns; 0 when idle).
+    pub fn encode_ns_per_tuple(&self) -> f64 {
+        if self.tuples_out == 0 {
+            0.0
+        } else {
+            self.encode_ns as f64 / self.tuples_out as f64
+        }
+    }
+
+    /// Mean deserialization cost per tuple received (ns; 0 when idle).
+    pub fn decode_ns_per_tuple(&self) -> f64 {
+        if self.tuples_in == 0 {
+            0.0
+        } else {
+            self.decode_ns as f64 / self.tuples_in as f64
+        }
+    }
+
+    /// Total wire traffic rate (both directions) over a wall-clock
+    /// interval.
+    pub fn bytes_per_sec(&self, wall_ns: u64) -> f64 {
+        if wall_ns == 0 {
+            0.0
+        } else {
+            (self.bytes_out + self.bytes_in) as f64 * 1e9 / wall_ns as f64
+        }
+    }
+
+    /// True when any frame crossed a wire (all-loopback runs stay
+    /// false, so reports can skip the wire rows).
+    pub fn any(&self) -> bool {
+        self.frames_out > 0 || self.frames_in > 0
+    }
+
+    /// Fold another endpoint set's stats into this one.
+    pub fn absorb(&mut self, other: &WireStats) {
+        self.frames_out += other.frames_out;
+        self.bytes_out += other.bytes_out;
+        self.tuples_out += other.tuples_out;
+        self.encode_ns += other.encode_ns;
+        self.frames_in += other.frames_in;
+        self.bytes_in += other.bytes_in;
+        self.tuples_in += other.tuples_in;
+        self.decode_ns += other.decode_ns;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_records_and_snapshots() {
+        let ledger = WireLedger::new();
+        ledger.record_out(100, 4, 50);
+        ledger.record_out(60, 2, 30);
+        ledger.record_in(100, 4, 20);
+        let s = ledger.snapshot();
+        assert_eq!(s.frames_out, 2);
+        assert_eq!(s.bytes_out, 160);
+        assert_eq!(s.tuples_out, 6);
+        assert_eq!(s.frames_in, 1);
+        assert!(s.any());
+        assert!((s.encode_ns_per_tuple() - 80.0 / 6.0).abs() < 1e-9);
+        assert!((s.decode_ns_per_tuple() - 5.0).abs() < 1e-9);
+        // 260 bytes over 1s
+        assert!((s.bytes_per_sec(1_000_000_000) - 260.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_fold_and_idle_rates_are_zero() {
+        let idle = WireStats::default();
+        assert!(!idle.any());
+        assert_eq!(idle.encode_ns_per_tuple(), 0.0);
+        assert_eq!(idle.decode_ns_per_tuple(), 0.0);
+        assert_eq!(idle.bytes_per_sec(0), 0.0);
+
+        let mut a = WireStats { frames_out: 1, bytes_out: 10, tuples_out: 2, encode_ns: 8, ..Default::default() };
+        let b = WireStats { frames_in: 3, bytes_in: 30, tuples_in: 6, decode_ns: 12, ..Default::default() };
+        a.absorb(&b);
+        assert_eq!(a.frames_out, 1);
+        assert_eq!(a.frames_in, 3);
+        assert_eq!(a.bytes_out + a.bytes_in, 40);
+    }
+}

@@ -1,0 +1,716 @@
+//! Multi-process launcher: the machinery behind `fish deploy
+//! --processes N`.
+//!
+//! The coordinator process keeps the sources (groupers need the trace
+//! and the cluster view) and spawns one **worker** process per worker
+//! and one **shard** process per merge shard, re-executing its own
+//! binary with the hidden `__worker` / `__shard` subcommands. The
+//! handshake is three moves over a control connection carrying the
+//! same [`wire`] frames as the data path:
+//!
+//! 1. Shard children spawn first. Each binds its flush listener,
+//!    connects back to the coordinator's control listener, and
+//!    announces `Hello { role: 2, index, addr }`.
+//! 2. Worker children spawn with the shard addresses on their command
+//!    line. Each binds its tuple listener, says `Hello { role: 1 }`,
+//!    connects a flush stream to every shard, and accepts one tuple
+//!    stream per source.
+//! 3. The coordinator connects the source→worker tuple streams and
+//!    runs the source threads. From here the topology is exactly the
+//!    in-process engine — the children run [`rt::worker_loop`] and
+//!    [`rt::shard_loop`] verbatim — except every lane crosses a
+//!    process boundary.
+//!
+//! When a child finishes it serializes its results (histograms,
+//! merged windows, sketches, wire ledger) into an opaque `Done` frame
+//! on the control connection; the coordinator deserializes and
+//! assembles them with the same [`rt::assemble_shards`] fold the
+//! threaded engine uses. Latency stamps cross process boundaries via
+//! the unix [`Clock`] against a coordinator-chosen epoch.
+
+use super::socket::{self, Duplex, SocketFlushTx, SocketTupleRx, SocketTupleTx};
+use super::wire::{self, Frame, Reader, WireError};
+use super::{Clock, FlushTx, TransportKind, TupleTx};
+use crate::aggregate::{ShardRouter, TopKSketch, WindowResult, WindowedOutput};
+use crate::coordinator::Grouper;
+use crate::engine::rt::{self, RtOptions, RtResult};
+use crate::metrics::{AggStats, Histogram, WindowStats, WireLedger, WireStats};
+use crate::workload::Trace;
+use std::io::{self, Write};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::thread;
+
+/// Pick the socket transport a multi-process run uses when the config
+/// still says `loopback` (which cannot cross a process boundary).
+pub fn process_kind(kind: TransportKind) -> TransportKind {
+    match kind {
+        TransportKind::Loopback => {
+            if cfg!(unix) {
+                TransportKind::Uds
+            } else {
+                TransportKind::Tcp
+            }
+        }
+        k => k,
+    }
+}
+
+/// Transport kind an address minted by [`socket::listen`] belongs to
+/// (children derive their own listener kind from the control address).
+fn kind_of_addr(addr: &str) -> TransportKind {
+    if addr.starts_with("tcp:") {
+        TransportKind::Tcp
+    } else {
+        TransportKind::Uds
+    }
+}
+
+fn wire_io(e: WireError) -> io::Error {
+    match e {
+        WireError::Io(e) => e,
+        other => io::Error::new(io::ErrorKind::InvalidData, other.to_string()),
+    }
+}
+
+fn proto_err(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+// ---- tiny `--key value` argv parser for the child subcommands -------
+
+fn arg<'a>(args: &'a [String], key: &str) -> io::Result<&'a str> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+        .ok_or_else(|| proto_err(format!("missing child argument {key}")))
+}
+
+fn arg_u64(args: &[String], key: &str) -> io::Result<u64> {
+    arg(args, key)?
+        .parse::<u64>()
+        .map_err(|e| proto_err(format!("bad child argument {key}: {e}")))
+}
+
+// ---- Done-payload serialization -------------------------------------
+// Opaque blobs inside `Done` frames; the coordinator and the children
+// are always the same binary, so this format needs no versioning
+// beyond the wire header's.
+
+fn put_histogram(h: &Histogram, buf: &mut Vec<u8>) {
+    let mut hb = Vec::new();
+    h.to_bytes(&mut hb);
+    wire::put_u32(buf, hb.len() as u32);
+    buf.extend_from_slice(&hb);
+}
+
+fn get_histogram(r: &mut Reader) -> Result<Histogram, WireError> {
+    let len = r.u32()? as usize;
+    let bytes = r.take(len)?;
+    Histogram::from_bytes(bytes).ok_or(WireError::Truncated)
+}
+
+fn put_sketch(s: &TopKSketch, buf: &mut Vec<u8>) {
+    wire::put_u32(buf, s.capacity() as u32);
+    let entries: Vec<(crate::Key, f64)> = s.tracked().collect();
+    wire::put_u32(buf, entries.len() as u32);
+    for (key, est) in entries {
+        wire::put_u64(buf, key);
+        wire::put_f64(buf, est);
+    }
+    wire::put_f64(buf, s.merged_error());
+}
+
+fn get_sketch(r: &mut Reader) -> Result<TopKSketch, WireError> {
+    let capacity = r.u32()? as usize;
+    let n = r.u32()? as usize;
+    if r.remaining() < n.saturating_mul(16) {
+        return Err(WireError::Truncated);
+    }
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        let key = r.u64()?;
+        let est = r.f64()?;
+        entries.push((key, est));
+    }
+    let merged_error = r.f64()?;
+    Ok(TopKSketch::from_parts(capacity, &entries, merged_error))
+}
+
+fn put_counts(counts: &[(crate::Key, u64)], buf: &mut Vec<u8>) {
+    wire::put_u32(buf, counts.len() as u32);
+    for &(k, c) in counts {
+        wire::put_u64(buf, k);
+        wire::put_u64(buf, c);
+    }
+}
+
+fn get_counts(r: &mut Reader) -> Result<Vec<(crate::Key, u64)>, WireError> {
+    let n = r.u32()? as usize;
+    if r.remaining() < n.saturating_mul(16) {
+        return Err(WireError::Truncated);
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = r.u64()?;
+        let c = r.u64()?;
+        out.push((k, c));
+    }
+    Ok(out)
+}
+
+fn put_wire_stats(w: &WireStats, buf: &mut Vec<u8>) {
+    for v in [
+        w.frames_out,
+        w.bytes_out,
+        w.tuples_out,
+        w.encode_ns,
+        w.frames_in,
+        w.bytes_in,
+        w.tuples_in,
+        w.decode_ns,
+    ] {
+        wire::put_u64(buf, v);
+    }
+}
+
+fn get_wire_stats(r: &mut Reader) -> Result<WireStats, WireError> {
+    Ok(WireStats {
+        frames_out: r.u64()?,
+        bytes_out: r.u64()?,
+        tuples_out: r.u64()?,
+        encode_ns: r.u64()?,
+        frames_in: r.u64()?,
+        bytes_in: r.u64()?,
+        tuples_in: r.u64()?,
+        decode_ns: r.u64()?,
+    })
+}
+
+/// What one worker child reports back.
+struct WorkerDone {
+    latency: Histogram,
+    count: u64,
+    state_len: usize,
+    wire: WireStats,
+}
+
+fn put_worker_done(d: &WorkerDone, buf: &mut Vec<u8>) {
+    wire::put_u64(buf, d.count);
+    wire::put_u64(buf, d.state_len as u64);
+    put_histogram(&d.latency, buf);
+    put_wire_stats(&d.wire, buf);
+}
+
+fn get_worker_done(payload: &[u8]) -> Result<WorkerDone, WireError> {
+    let mut r = Reader::new(payload);
+    let count = r.u64()?;
+    let state_len = r.u64()? as usize;
+    let latency = get_histogram(&mut r)?;
+    let wire = get_wire_stats(&mut r)?;
+    Ok(WorkerDone { latency, count, state_len, wire })
+}
+
+/// What one shard child reports back: the exact triple
+/// [`rt::shard_loop`] returns, plus the child's wire ledger.
+struct ShardDone {
+    out: WindowedOutput,
+    sketch: TopKSketch,
+    lat: Histogram,
+    wire: WireStats,
+}
+
+fn put_agg_stats(s: &AggStats, buf: &mut Vec<u8>) {
+    for v in [s.flushes, s.messages, s.bytes, s.merge_ns, s.max_merge_ns] {
+        wire::put_u64(buf, v);
+    }
+}
+
+fn get_agg_stats(r: &mut Reader) -> Result<AggStats, WireError> {
+    Ok(AggStats {
+        flushes: r.u64()?,
+        messages: r.u64()?,
+        bytes: r.u64()?,
+        merge_ns: r.u64()?,
+        max_merge_ns: r.u64()?,
+    })
+}
+
+fn put_window_stats(s: &WindowStats, buf: &mut Vec<u8>) {
+    for v in [
+        s.panes_opened,
+        s.panes_retired,
+        s.late_reopens,
+        s.late_reopen_mass,
+        s.max_open_panes,
+        s.max_open_entries,
+    ] {
+        wire::put_u64(buf, v);
+    }
+}
+
+fn get_window_stats(r: &mut Reader) -> Result<WindowStats, WireError> {
+    Ok(WindowStats {
+        panes_opened: r.u64()?,
+        panes_retired: r.u64()?,
+        late_reopens: r.u64()?,
+        late_reopen_mass: r.u64()?,
+        max_open_panes: r.u64()?,
+        max_open_entries: r.u64()?,
+    })
+}
+
+fn put_shard_done(d: &ShardDone, buf: &mut Vec<u8>) {
+    wire::put_u32(buf, d.out.windows.len() as u32);
+    for w in &d.out.windows {
+        wire::put_u64(buf, w.window);
+        put_counts(&w.counts, buf);
+        put_sketch(&w.sketch, buf);
+    }
+    put_counts(&d.out.all_time, buf);
+    put_agg_stats(&d.out.stats, buf);
+    put_window_stats(&d.out.window_stats, buf);
+    put_sketch(&d.sketch, buf);
+    put_histogram(&d.lat, buf);
+    put_wire_stats(&d.wire, buf);
+}
+
+fn get_shard_done(payload: &[u8]) -> Result<ShardDone, WireError> {
+    let mut r = Reader::new(payload);
+    let n_windows = r.u32()? as usize;
+    let mut windows = Vec::with_capacity(n_windows.min(payload.len() / 8 + 1));
+    for _ in 0..n_windows {
+        let window = r.u64()?;
+        let counts = get_counts(&mut r)?;
+        let sketch = get_sketch(&mut r)?;
+        windows.push(WindowResult { window, counts, sketch });
+    }
+    let all_time = get_counts(&mut r)?;
+    let stats = get_agg_stats(&mut r)?;
+    let window_stats = get_window_stats(&mut r)?;
+    let sketch = get_sketch(&mut r)?;
+    let lat = get_histogram(&mut r)?;
+    let wire = get_wire_stats(&mut r)?;
+    Ok(ShardDone {
+        out: WindowedOutput { windows, all_time, stats, window_stats },
+        sketch,
+        lat,
+        wire,
+    })
+}
+
+// ---- control-connection helpers --------------------------------------
+
+fn read_hello(conn: &mut Duplex) -> io::Result<(u8, usize, String)> {
+    let mut scratch = Vec::new();
+    match wire::read_frame(conn, &mut scratch).map_err(wire_io)? {
+        Some(Frame::Hello { role, index, addr }) => Ok((role, index as usize, addr)),
+        Some(_) => Err(proto_err("expected Hello frame from child")),
+        None => Err(proto_err("child exited before saying Hello")),
+    }
+}
+
+fn read_done(conn: &mut Duplex) -> io::Result<Vec<u8>> {
+    let mut scratch = Vec::new();
+    match wire::read_frame(conn, &mut scratch).map_err(wire_io)? {
+        Some(Frame::Done(payload)) => Ok(payload),
+        Some(_) => Err(proto_err("expected Done frame from child")),
+        None => Err(proto_err("child exited before reporting results")),
+    }
+}
+
+fn send_hello(conn: &mut Duplex, role: u8, index: usize, addr: &str) -> io::Result<()> {
+    let mut buf = Vec::new();
+    wire::encode_hello(role, index as u64, addr, &mut buf);
+    conn.write_all(&buf)?;
+    conn.flush()
+}
+
+fn send_done(conn: &mut Duplex, payload: &[u8]) -> io::Result<()> {
+    let mut buf = Vec::new();
+    wire::encode_done(payload, &mut buf);
+    conn.write_all(&buf)?;
+    conn.flush()
+}
+
+// ---- child entry points ----------------------------------------------
+
+/// Entry point for the hidden `__worker` subcommand (argv after the
+/// subcommand name). Runs [`rt::worker_loop`] against socket lanes and
+/// reports a `Done` frame on the control connection.
+pub fn worker_child(args: &[String]) -> io::Result<()> {
+    let control = arg(args, "--control")?.to_string();
+    let index = arg_u64(args, "--index")? as usize;
+    let n_sources = arg_u64(args, "--sources")? as usize;
+    let cost = f64::from_bits(arg_u64(args, "--cost-bits")?);
+    let agg_flush_ns = arg_u64(args, "--flush-ns")?;
+    let agg_window_ns = arg_u64(args, "--window-ns")?;
+    let queue_depth = arg_u64(args, "--queue")? as usize;
+    let epoch = arg_u64(args, "--epoch")?;
+    let shard_addrs: Vec<&str> = arg(args, "--shards")?.split(',').collect();
+
+    let kind = kind_of_addr(&control);
+    let (listener, addr) = socket::listen(kind, &format!("w{index}"))?;
+    let mut control = Duplex::connect(&control)?;
+    send_hello(&mut control, 1, index, &addr)?;
+
+    let ledger = Arc::new(WireLedger::new());
+    let mut flush_txs: Vec<Box<dyn FlushTx>> = Vec::with_capacity(shard_addrs.len());
+    for sa in &shard_addrs {
+        let conn = Duplex::connect(sa)?;
+        flush_txs.push(Box::new(SocketFlushTx::new(conn, Arc::clone(&ledger))));
+    }
+    let mut conns = Vec::with_capacity(n_sources);
+    for _ in 0..n_sources {
+        conns.push(listener.accept()?);
+    }
+    let rx = Box::new(SocketTupleRx::new(conns, queue_depth, &ledger)?);
+
+    let router = ShardRouter::new(shard_addrs.len());
+    let clock = Clock::unix(epoch);
+    let (latency, count, state_len) =
+        rt::worker_loop(index, cost, agg_flush_ns, agg_window_ns, clock, &router, rx, flush_txs);
+
+    let done = WorkerDone { latency, count, state_len, wire: ledger.snapshot() };
+    let mut payload = Vec::new();
+    put_worker_done(&done, &mut payload);
+    send_done(&mut control, &payload)
+}
+
+/// Entry point for the hidden `__shard` subcommand. Runs
+/// [`rt::shard_loop`] against a socket flush lane and reports a `Done`
+/// frame on the control connection.
+pub fn shard_child(args: &[String]) -> io::Result<()> {
+    let control = arg(args, "--control")?.to_string();
+    let index = arg_u64(args, "--index")? as usize;
+    let n_workers = arg_u64(args, "--workers")? as usize;
+    let agg_window_ns = arg_u64(args, "--window-ns")?;
+    let agg_lateness_ns = arg_u64(args, "--lateness-ns")?;
+    let epoch = arg_u64(args, "--epoch")?;
+
+    let kind = kind_of_addr(&control);
+    let (listener, addr) = socket::listen(kind, &format!("s{index}"))?;
+    let mut control = Duplex::connect(&control)?;
+    send_hello(&mut control, 2, index, &addr)?;
+
+    let ledger = Arc::new(WireLedger::new());
+    let mut conns = Vec::with_capacity(n_workers);
+    for _ in 0..n_workers {
+        conns.push(listener.accept()?);
+    }
+    let rx = Box::new(socket::SocketFlushRx::new(conns, &ledger)?);
+
+    let clock = Clock::unix(epoch);
+    let (out, sketch, lat) = rt::shard_loop(n_workers, agg_window_ns, agg_lateness_ns, clock, rx);
+
+    let done = ShardDone { out, sketch, lat, wire: ledger.snapshot() };
+    let mut payload = Vec::new();
+    put_shard_done(&done, &mut payload);
+    send_done(&mut control, &payload)
+}
+
+// ---- coordinator -----------------------------------------------------
+
+fn spawn_child(bin: &std::path::Path, subcmd: &str, args: &[String]) -> io::Result<Child> {
+    Command::new(bin)
+        .arg(subcmd)
+        .args(args)
+        .stdin(Stdio::null())
+        .spawn()
+}
+
+/// Run the topology as `n_workers + agg_shards` child processes plus
+/// source threads in this one: the multi-process counterpart of
+/// [`rt::run`], returning the same [`RtResult`]. The transport is
+/// [`RtOptions::transport`] with `loopback` promoted to a socket kind
+/// via [`process_kind`]. Merged counts, per-window snapshots and
+/// exact top-k match the in-process engine for the same trace.
+pub fn run_multiprocess(
+    trace: &Arc<Trace>,
+    mut sources: Vec<Box<dyn Grouper>>,
+    n_workers: usize,
+    opts: &RtOptions,
+) -> io::Result<RtResult> {
+    assert!(!sources.is_empty() && n_workers > 0);
+    let kind = process_kind(opts.transport);
+    let n_sources = sources.len();
+    let n_shards = opts.agg_shards.max(1);
+    let queue_depth = opts.queue_depth.max(1);
+    let batch = opts.batch.max(1).min(queue_depth);
+    let per_tuple = rt::per_tuple_table(opts, n_workers);
+    let bin = std::env::current_exe()?;
+
+    let epoch = Clock::now_unix_ns();
+    let clock = Clock::unix(epoch);
+    let (control_listener, control_addr) = socket::listen(kind, "ctl")?;
+
+    // 1. shard children: spawn, then collect their Hello { addr }s
+    let mut children: Vec<Child> = Vec::with_capacity(n_shards + n_workers);
+    for i in 0..n_shards {
+        let args = vec![
+            "--control".into(),
+            control_addr.clone(),
+            "--index".into(),
+            i.to_string(),
+            "--workers".into(),
+            n_workers.to_string(),
+            "--window-ns".into(),
+            opts.agg_window_ns.to_string(),
+            "--lateness-ns".into(),
+            opts.agg_lateness_ns.to_string(),
+            "--epoch".into(),
+            epoch.to_string(),
+        ];
+        children.push(spawn_child(&bin, "__shard", &args)?);
+    }
+    let mut shard_conns: Vec<Option<Duplex>> = (0..n_shards).map(|_| None).collect();
+    let mut shard_addrs: Vec<String> = vec![String::new(); n_shards];
+    for _ in 0..n_shards {
+        let mut conn = control_listener.accept()?;
+        let (role, index, addr) = read_hello(&mut conn)?;
+        if role != 2 || index >= n_shards {
+            return Err(proto_err(format!("unexpected hello: role {role} index {index}")));
+        }
+        shard_addrs[index] = addr;
+        shard_conns[index] = Some(conn);
+    }
+
+    // 2. worker children: spawn with the shard addresses, collect Hellos
+    for w in 0..n_workers {
+        let args = vec![
+            "--control".into(),
+            control_addr.clone(),
+            "--index".into(),
+            w.to_string(),
+            "--sources".into(),
+            n_sources.to_string(),
+            "--cost-bits".into(),
+            per_tuple[w].to_bits().to_string(),
+            "--flush-ns".into(),
+            opts.agg_flush_ns.to_string(),
+            "--window-ns".into(),
+            opts.agg_window_ns.to_string(),
+            "--queue".into(),
+            queue_depth.to_string(),
+            "--epoch".into(),
+            epoch.to_string(),
+            "--shards".into(),
+            shard_addrs.join(","),
+        ];
+        children.push(spawn_child(&bin, "__worker", &args)?);
+    }
+    let mut worker_conns: Vec<Option<Duplex>> = (0..n_workers).map(|_| None).collect();
+    let mut worker_addrs: Vec<String> = vec![String::new(); n_workers];
+    for _ in 0..n_workers {
+        let mut conn = control_listener.accept()?;
+        let (role, index, addr) = read_hello(&mut conn)?;
+        if role != 1 || index >= n_workers {
+            return Err(proto_err(format!("unexpected hello: role {role} index {index}")));
+        }
+        worker_addrs[index] = addr;
+        worker_conns[index] = Some(conn);
+    }
+
+    // 3. sources stay home: one tuple stream per (source, worker) pair,
+    // then the exact source_loop the threaded engine runs
+    let ledger = Arc::new(WireLedger::new());
+    let mut source_handles = Vec::with_capacity(n_sources);
+    for (s, grouper) in sources.drain(..).enumerate() {
+        let mut txs: Vec<Box<dyn TupleTx>> = Vec::with_capacity(n_workers);
+        for addr in &worker_addrs {
+            let conn = Duplex::connect(addr)?;
+            txs.push(Box::new(SocketTupleTx::new(conn, queue_depth, Arc::clone(&ledger))));
+        }
+        let trace = Arc::clone(trace);
+        let per_tuple = per_tuple.clone();
+        let workers_list: Vec<usize> = (0..n_workers).collect();
+        let gap = opts.interarrival_ns * n_sources as u64;
+        source_handles.push(thread::spawn(move || {
+            rt::source_loop(
+                s,
+                n_sources,
+                grouper,
+                &trace,
+                batch,
+                gap,
+                clock,
+                &per_tuple,
+                &workers_list,
+                txs,
+            );
+        }));
+    }
+    for h in source_handles {
+        h.join().expect("source thread panicked");
+    }
+
+    // 4. harvest: workers finish once the sources close, shards once
+    // the workers drop their flush streams — read in causal order
+    let mut wire = ledger.snapshot();
+    let mut latency = Histogram::new();
+    let mut counts = Vec::with_capacity(n_workers);
+    let mut states = Vec::with_capacity(n_workers);
+    for conn in worker_conns.iter_mut() {
+        let conn = conn.as_mut().expect("every worker said hello");
+        let done = get_worker_done(&read_done(conn)?).map_err(wire_io)?;
+        latency.merge(&done.latency);
+        counts.push(done.count);
+        states.push(done.state_len);
+        wire.absorb(&done.wire);
+    }
+    let mut shard_outs = Vec::with_capacity(n_shards);
+    for conn in shard_conns.iter_mut() {
+        let conn = conn.as_mut().expect("every shard said hello");
+        let done = get_shard_done(&read_done(conn)?).map_err(wire_io)?;
+        wire.absorb(&done.wire);
+        shard_outs.push((done.out, done.sketch, done.lat));
+    }
+    for child in children.iter_mut() {
+        let _ = child.wait();
+    }
+
+    let (merged, shard_agg, windows, window_stats, gather, agg_latency) =
+        rt::assemble_shards(opts.agg_window_ns, shard_outs);
+    let agg = shard_agg.total();
+    let wall_ns = clock.now_ns();
+    let total: u64 = counts.iter().sum();
+    let entries: usize = states.iter().sum();
+    let mut seen = std::collections::HashSet::new();
+    for t in trace.tuples() {
+        seen.insert(t.key);
+    }
+
+    Ok(RtResult {
+        latency,
+        worker_counts: counts,
+        worker_state: states,
+        wall_ns,
+        throughput: total as f64 / (wall_ns as f64 / 1e9),
+        entries,
+        distinct_keys: seen.len(),
+        merged,
+        agg,
+        shard_agg,
+        agg_latency,
+        gather,
+        windows,
+        window_stats,
+        wire,
+    })
+}
+
+/// Compare a multi-process (or socket-transport) run against an
+/// in-process reference on every transport-invariant output: merged
+/// counts, tuple totals, per-window snapshots and exact top-k.
+/// Returns the first discrepancy as an error string (`deploy
+/// --verify` prints it and exits nonzero).
+pub fn verify_against_reference(run: &RtResult, reference: &RtResult) -> Result<(), String> {
+    if run.merged != reference.merged {
+        return Err(format!(
+            "merged counts diverge: {} vs {} entries",
+            run.merged.len(),
+            reference.merged.len()
+        ));
+    }
+    let (a, b): (u64, u64) =
+        (run.worker_counts.iter().sum(), reference.worker_counts.iter().sum());
+    if a != b {
+        return Err(format!("tuple totals diverge: {a} vs {b}"));
+    }
+    if run.top_k(10) != reference.top_k(10) {
+        return Err("top-10 diverges".into());
+    }
+    if run.windows.len() != reference.windows.len() {
+        return Err(format!(
+            "window counts diverge: {} vs {} panes",
+            run.windows.len(),
+            reference.windows.len()
+        ));
+    }
+    for (w, r) in run.windows.iter().zip(&reference.windows) {
+        if w.window != r.window || w.counts != r.counts {
+            return Err(format!("window {} diverges", r.window));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn done_payloads_round_trip() {
+        let mut lat = Histogram::new();
+        for v in [10, 20, 30, 40_000] {
+            lat.record(v);
+        }
+        let wire_stats = WireStats {
+            frames_out: 7,
+            bytes_out: 700,
+            tuples_out: 70,
+            encode_ns: 7_000,
+            ..Default::default()
+        };
+        let done = WorkerDone { latency: lat.clone(), count: 1234, state_len: 99, wire: wire_stats };
+        let mut payload = Vec::new();
+        put_worker_done(&done, &mut payload);
+        let back = get_worker_done(&payload).expect("round trip");
+        assert_eq!(back.count, 1234);
+        assert_eq!(back.state_len, 99);
+        assert_eq!(back.latency.count(), 4);
+        assert_eq!(back.wire.frames_out, 7);
+        assert_eq!(back.wire.bytes_out, 700);
+
+        let mut sketch = TopKSketch::new(8);
+        sketch.absorb(5, 50);
+        sketch.absorb(9, 12);
+        let out = WindowedOutput {
+            windows: vec![WindowResult {
+                window: 3,
+                counts: vec![(1, 10), (5, 50)],
+                sketch: sketch.clone(),
+            }],
+            all_time: vec![(1, 10), (5, 50), (9, 12)],
+            stats: AggStats {
+                flushes: 2,
+                messages: 5,
+                bytes: 80,
+                merge_ns: 1_000,
+                max_merge_ns: 900,
+            },
+            window_stats: WindowStats {
+                panes_opened: 4,
+                panes_retired: 4,
+                late_reopens: 1,
+                late_reopen_mass: 17,
+                max_open_panes: 2,
+                max_open_entries: 30,
+            },
+        };
+        let done = ShardDone { out, sketch, lat, wire: WireStats::default() };
+        let mut payload = Vec::new();
+        put_shard_done(&done, &mut payload);
+        let back = get_shard_done(&payload).expect("round trip");
+        assert_eq!(back.out.windows.len(), 1);
+        assert_eq!(back.out.windows[0].window, 3);
+        assert_eq!(back.out.windows[0].counts, vec![(1, 10), (5, 50)]);
+        assert_eq!(back.out.all_time, vec![(1, 10), (5, 50), (9, 12)]);
+        assert_eq!(back.out.stats.messages, 5);
+        assert_eq!(back.out.window_stats.late_reopen_mass, 17);
+        assert_eq!(back.sketch.capacity(), 8);
+        assert_eq!(back.lat.count(), 4);
+
+        // corrupting the payload surfaces as an error, not a panic
+        assert!(get_shard_done(&payload[..payload.len() - 3]).is_err());
+        assert!(get_worker_done(&payload[..2]).is_err());
+    }
+
+    #[test]
+    fn process_kind_promotes_loopback_to_a_socket_transport() {
+        assert_ne!(process_kind(TransportKind::Loopback), TransportKind::Loopback);
+        assert_eq!(process_kind(TransportKind::Tcp), TransportKind::Tcp);
+        assert_eq!(process_kind(TransportKind::Uds), TransportKind::Uds);
+    }
+}

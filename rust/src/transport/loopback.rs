@@ -1,0 +1,192 @@
+//! In-process loopback lanes: `std::sync::mpsc` channels plus shared
+//! atomic credit counters — exactly the mechanism the rt engine used
+//! before the transport trait existed, so loopback runs stay
+//! byte-identical to the pre-transport engine (and pay no
+//! serialization cost; the wire ledger stays zero).
+
+use super::wire::{FlushMsg, Msg};
+use super::{FlushRx, FlushTx, TupleRecv, TupleRx, TupleTx};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Source-side loopback endpoint. The credit window (`queue_depth`
+/// in-flight tuples) is **per worker**, shared by every source
+/// through one atomic counter — the same global bound the
+/// pre-transport engine enforced.
+pub struct LoopbackTupleTx {
+    tx: SyncSender<Vec<Msg>>,
+    inflight: Arc<AtomicUsize>,
+    queue_depth: usize,
+    spins: u64,
+}
+
+impl TupleTx for LoopbackTupleTx {
+    fn send(&mut self, chunk: Vec<Msg>) -> bool {
+        if chunk.is_empty() {
+            return true;
+        }
+        // credit spin: wait until the worker's in-flight window has
+        // room, probing channel liveness occasionally so a dead
+        // worker cannot hang the source forever
+        while self.inflight.load(Ordering::Acquire) + chunk.len() > self.queue_depth {
+            std::hint::spin_loop();
+            self.spins = self.spins.wrapping_add(1);
+            if self.spins % (1 << 20) == 0 && self.tx.send(Vec::new()).is_err() {
+                return false;
+            }
+        }
+        self.inflight.fetch_add(chunk.len(), Ordering::AcqRel);
+        self.tx.send(chunk).is_ok()
+    }
+}
+
+/// Worker-side loopback endpoint.
+pub struct LoopbackTupleRx {
+    rx: Receiver<Vec<Msg>>,
+    inflight: Arc<AtomicUsize>,
+}
+
+impl TupleRx for LoopbackTupleRx {
+    fn recv(&mut self, timeout: Option<Duration>) -> TupleRecv {
+        match timeout {
+            Some(d) => match self.rx.recv_timeout(d) {
+                Ok(chunk) => TupleRecv::Chunk(chunk),
+                Err(RecvTimeoutError::Timeout) => TupleRecv::Timeout,
+                Err(RecvTimeoutError::Disconnected) => TupleRecv::Closed,
+            },
+            None => match self.rx.recv() {
+                Ok(chunk) => TupleRecv::Chunk(chunk),
+                Err(_) => TupleRecv::Closed,
+            },
+        }
+    }
+
+    fn ack(&mut self, n: usize) {
+        self.inflight.fetch_sub(n, Ordering::Release);
+    }
+}
+
+/// Build the full source→worker loopback mesh: per worker, one
+/// bounded channel and one shared credit counter; per source, one tx
+/// clone per worker. Returns `(per-source tx vectors, per-worker
+/// receivers)`.
+pub fn tuple_lanes(
+    n_sources: usize,
+    n_workers: usize,
+    queue_depth: usize,
+) -> (Vec<Vec<Box<dyn TupleTx>>>, Vec<Box<dyn TupleRx>>) {
+    let mut txs: Vec<Vec<Box<dyn TupleTx>>> =
+        (0..n_sources).map(|_| Vec::with_capacity(n_workers)).collect();
+    let mut rxs: Vec<Box<dyn TupleRx>> = Vec::with_capacity(n_workers);
+    for _ in 0..n_workers {
+        let (tx, rx) = sync_channel::<Vec<Msg>>(queue_depth);
+        let inflight = Arc::new(AtomicUsize::new(0));
+        for src in txs.iter_mut() {
+            src.push(Box::new(LoopbackTupleTx {
+                tx: tx.clone(),
+                inflight: Arc::clone(&inflight),
+                queue_depth,
+                spins: 0,
+            }));
+        }
+        drop(tx);
+        rxs.push(Box::new(LoopbackTupleRx { rx, inflight }));
+    }
+    (txs, rxs)
+}
+
+/// Worker-side loopback flush endpoint.
+pub struct LoopbackFlushTx {
+    tx: Sender<FlushMsg>,
+}
+
+impl FlushTx for LoopbackFlushTx {
+    fn send(&mut self, msg: FlushMsg) -> bool {
+        self.tx.send(msg).is_ok()
+    }
+}
+
+/// Shard-side loopback flush endpoint.
+pub struct LoopbackFlushRx {
+    rx: Receiver<FlushMsg>,
+}
+
+impl FlushRx for LoopbackFlushRx {
+    fn recv(&mut self) -> Option<FlushMsg> {
+        self.rx.recv().ok()
+    }
+}
+
+/// Build the worker→shard loopback mesh: one unbounded channel per
+/// shard, one tx clone per worker. Returns `(per-worker tx vectors,
+/// per-shard receivers)`.
+pub fn flush_lanes(
+    n_workers: usize,
+    n_shards: usize,
+) -> (Vec<Vec<Box<dyn FlushTx>>>, Vec<Box<dyn FlushRx>>) {
+    let mut txs: Vec<Vec<Box<dyn FlushTx>>> =
+        (0..n_workers).map(|_| Vec::with_capacity(n_shards)).collect();
+    let mut rxs: Vec<Box<dyn FlushRx>> = Vec::with_capacity(n_shards);
+    for _ in 0..n_shards {
+        let (tx, rx) = channel::<FlushMsg>();
+        for w in txs.iter_mut() {
+            w.push(Box::new(LoopbackFlushTx { tx: tx.clone() }));
+        }
+        drop(tx);
+        rxs.push(Box::new(LoopbackFlushRx { rx }));
+    }
+    (txs, rxs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tuple_lanes_deliver_and_credit() {
+        let (mut txs, mut rxs) = tuple_lanes(2, 1, 8);
+        let mut rx = rxs.remove(0);
+        let chunk: Vec<Msg> = (0..3).map(|i| Msg { key: i, emit_ns: 0, ts: 0 }).collect();
+        assert!(txs[0][0].send(chunk.clone()));
+        assert!(txs[1][0].send(chunk.clone()));
+        let mut got = 0;
+        for _ in 0..2 {
+            match rx.recv(None) {
+                TupleRecv::Chunk(c) => {
+                    got += c.len();
+                    rx.ack(c.len());
+                }
+                other => panic!("expected chunk, got {other:?}"),
+            }
+        }
+        assert_eq!(got, 6);
+        drop(txs);
+        assert!(matches!(rx.recv(None), TupleRecv::Closed));
+        assert!(matches!(
+            rx.recv(Some(Duration::from_millis(1))),
+            TupleRecv::Closed
+        ));
+    }
+
+    #[test]
+    fn send_fails_once_the_worker_is_gone() {
+        let (mut txs, rxs) = tuple_lanes(1, 1, 4);
+        drop(rxs);
+        assert!(!txs[0][0].send(vec![Msg { key: 1, emit_ns: 0, ts: 0 }]));
+    }
+
+    #[test]
+    fn flush_lanes_close_when_all_workers_drop() {
+        let (mut txs, mut rxs) = flush_lanes(2, 1);
+        let flush = FlushMsg { worker: 0, emit_ns: 1, watermark: 2, panes: vec![] };
+        assert!(txs[0][0].send(flush.clone()));
+        assert!(txs[1][0].send(flush));
+        drop(txs);
+        let mut rx = rxs.remove(0);
+        assert!(rx.recv().is_some());
+        assert!(rx.recv().is_some());
+        assert!(rx.recv().is_none());
+    }
+}

@@ -1,0 +1,203 @@
+//! Distributed transport subsystem: how tuples and flush batches move
+//! between sources, workers and merge shards — in-process or across
+//! process boundaries.
+//!
+//! The rt engine's two data paths (source→worker tuple lanes and
+//! worker→shard flush lanes) are written against the four lane traits
+//! here, so the same topology runs over any backend:
+//!
+//! - [`loopback`] — in-process `mpsc` channels plus shared atomic
+//!   credit counters; byte-identical to the pre-transport engine and
+//!   still the default.
+//! - [`socket`] — UDS or TCP streams carrying the [`wire`]
+//!   length-prefixed binary format, with per-peer credit windows
+//!   (credits travel upstream as `Credit` frames) replacing the
+//!   bounded-channel backpressure. The design mirrors
+//!   timely-dataflow's `communication/` allocators: one duplex stream
+//!   per peer pair, a reader thread per stream, send-side blocking on
+//!   exhausted credit.
+//! - [`launch`] — the multi-process launcher behind
+//!   `fish deploy --processes N`: a coordinator spawns one process
+//!   per worker and per shard, children bind data listeners and
+//!   report them over a control connection, and results return as
+//!   serialized `Done` frames.
+//!
+//! Merged counts, per-window snapshots and exact top-k are
+//! transport-invariant: absorb order only perturbs sketch internals
+//! and timing ledgers, never the oracle-compared outputs.
+
+pub mod launch;
+pub mod loopback;
+pub mod socket;
+pub mod wire;
+
+pub use wire::{FlushMsg, Frame, Msg, WireError};
+
+use std::fmt;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Which lane implementation carries source→worker and worker→shard
+/// traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// In-process channels + atomic credits (the classic engine).
+    #[default]
+    Loopback,
+    /// Unix-domain stream sockets (unix only).
+    Uds,
+    /// TCP over 127.0.0.1.
+    Tcp,
+}
+
+impl TransportKind {
+    /// Parse a config/CLI spelling.
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "loopback" | "channel" => Some(TransportKind::Loopback),
+            "uds" | "unix" => Some(TransportKind::Uds),
+            "tcp" => Some(TransportKind::Tcp),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (the `parse` spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Loopback => "loopback",
+            TransportKind::Uds => "uds",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+impl fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Timestamp source for emit/latency accounting. Single-process runs
+/// share one monotonic epoch across threads; multi-process runs use
+/// the unix clock against a coordinator-chosen epoch, so an emit
+/// stamp taken in one process compares against a completion stamp
+/// taken in another.
+#[derive(Debug, Clone, Copy)]
+pub enum Clock {
+    /// Monotonic, relative to a process-local start instant.
+    Mono(Instant),
+    /// Unix wall clock, relative to a coordinator-chosen epoch (ns).
+    Unix {
+        /// Unix time (ns) all stamps are measured from.
+        epoch_unix_ns: u64,
+    },
+}
+
+impl Clock {
+    /// Monotonic clock starting now.
+    pub fn mono() -> Clock {
+        Clock::Mono(Instant::now())
+    }
+
+    /// Unix-epoch clock against a coordinator-chosen epoch.
+    pub fn unix(epoch_unix_ns: u64) -> Clock {
+        Clock::Unix { epoch_unix_ns }
+    }
+
+    /// Current unix time in ns (0 if the system clock reads pre-1970).
+    pub fn now_unix_ns() -> u64 {
+        SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0)
+    }
+
+    /// Nanoseconds since this clock's epoch.
+    pub fn now_ns(&self) -> u64 {
+        match self {
+            Clock::Mono(epoch) => epoch.elapsed().as_nanos() as u64,
+            Clock::Unix { epoch_unix_ns } => Self::now_unix_ns().saturating_sub(*epoch_unix_ns),
+        }
+    }
+}
+
+/// What a tuple-lane receive produced.
+#[derive(Debug)]
+pub enum TupleRecv {
+    /// A batch of routed tuples.
+    Chunk(Vec<Msg>),
+    /// The timeout elapsed with no chunk.
+    Timeout,
+    /// Every sender is gone and the queue is drained.
+    Closed,
+}
+
+/// Source-side tuple lane endpoint (source → worker).
+pub trait TupleTx: Send {
+    /// Blocking, credit-gated send. Blocks while the peer's credit
+    /// window is exhausted; returns `false` when the receiver is gone
+    /// (the source should stop streaming to it).
+    fn send(&mut self, chunk: Vec<Msg>) -> bool;
+
+    /// Signal end-of-stream (socket lanes write an `Eof` frame;
+    /// loopback lanes rely on channel drop).
+    fn close(&mut self) {}
+}
+
+/// Worker-side tuple lane endpoint (every source merged).
+pub trait TupleRx: Send {
+    /// Blocking receive; `None` timeout waits indefinitely.
+    fn recv(&mut self, timeout: Option<Duration>) -> TupleRecv;
+
+    /// Return `n` processed-tuple credits toward the sender of the
+    /// most recently delivered chunk.
+    fn ack(&mut self, n: usize);
+}
+
+/// Worker-side flush lane endpoint (worker → shard). Flush traffic is
+/// low-rate (bounded by the flush cadence) and rides uncredited.
+pub trait FlushTx: Send {
+    /// Send one flush batch; `false` when the shard is gone.
+    fn send(&mut self, msg: FlushMsg) -> bool;
+}
+
+/// Shard-side flush lane endpoint (every worker merged).
+pub trait FlushRx: Send {
+    /// Blocking receive; `None` once every worker closed its lane.
+    fn recv(&mut self) -> Option<FlushMsg>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_parses_and_prints() {
+        assert_eq!(TransportKind::parse("loopback"), Some(TransportKind::Loopback));
+        assert_eq!(TransportKind::parse("uds"), Some(TransportKind::Uds));
+        assert_eq!(TransportKind::parse("unix"), Some(TransportKind::Uds));
+        assert_eq!(TransportKind::parse("tcp"), Some(TransportKind::Tcp));
+        assert_eq!(TransportKind::parse("carrier-pigeon"), None);
+        for kind in [TransportKind::Loopback, TransportKind::Uds, TransportKind::Tcp] {
+            assert_eq!(TransportKind::parse(kind.name()), Some(kind));
+            assert_eq!(format!("{kind}"), kind.name());
+        }
+        assert_eq!(TransportKind::default(), TransportKind::Loopback);
+    }
+
+    #[test]
+    fn clocks_advance_monotonically() {
+        let mono = Clock::mono();
+        let a = mono.now_ns();
+        let b = mono.now_ns();
+        assert!(b >= a);
+
+        let epoch = Clock::now_unix_ns();
+        let unix = Clock::unix(epoch);
+        let c = unix.now_ns();
+        let d = unix.now_ns();
+        assert!(d >= c);
+        // an epoch in the future saturates to zero instead of wrapping
+        let future = Clock::unix(u64::MAX);
+        assert_eq!(future.now_ns(), 0);
+    }
+}

@@ -1,0 +1,572 @@
+//! Socket transport: UDS / TCP lanes with credit-based flow control.
+//!
+//! Each source→worker pair gets its own duplex stream with a credit
+//! window of `queue_depth` tuples. The source spends credit as it
+//! sends `Data` frames and, when the window is exhausted, blocks
+//! reading `Credit` frames off the same stream; the worker returns
+//! credit as it acks processed tuples, batched into quanta of half
+//! the window so credit traffic stays constant per window, and always
+//! flushes owed credit before blocking — which is what makes the
+//! protocol deadlock-free. Worker→shard flush lanes are plain streams
+//! without credits: flush traffic is low-rate and bounded by cadence.
+//!
+//! Each receive side runs one reader thread per peer stream and
+//! merges decoded frames into a single in-process queue, mirroring
+//! timely-dataflow's per-peer recv threads.
+
+use super::wire::{self, FlushMsg, Frame, Msg, WireError};
+use super::{FlushRx, FlushTx, TransportKind, TupleRecv, TupleRx, TupleTx};
+use crate::metrics::WireLedger;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// A bidirectional byte stream over TCP or UDS.
+#[derive(Debug)]
+pub enum Duplex {
+    /// TCP stream (Nagle disabled — frames are latency-sensitive).
+    Tcp(TcpStream),
+    /// Unix-domain stream.
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Duplex {
+    /// Clone the underlying stream (shared file description, so one
+    /// half can read while the other writes).
+    pub fn try_clone(&self) -> io::Result<Duplex> {
+        match self {
+            Duplex::Tcp(s) => s.try_clone().map(Duplex::Tcp),
+            #[cfg(unix)]
+            Duplex::Unix(s) => s.try_clone().map(Duplex::Unix),
+        }
+    }
+
+    /// Connect to an address minted by [`listen`] (`tcp:IP:PORT` or
+    /// `uds:PATH`).
+    pub fn connect(addr: &str) -> io::Result<Duplex> {
+        if let Some(hostport) = addr.strip_prefix("tcp:") {
+            let s = TcpStream::connect(hostport)?;
+            let _ = s.set_nodelay(true);
+            return Ok(Duplex::Tcp(s));
+        }
+        #[cfg(unix)]
+        {
+            if let Some(path) = addr.strip_prefix("uds:") {
+                return UnixStream::connect(path).map(Duplex::Unix);
+            }
+        }
+        Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("unsupported transport address: {addr}"),
+        ))
+    }
+}
+
+impl Read for Duplex {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Duplex::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Duplex::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Duplex {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Duplex::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Duplex::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Duplex::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Duplex::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A listening socket plus its connect address. UDS listeners unlink
+/// their socket file on drop.
+pub enum Listener {
+    /// TCP listener on 127.0.0.1.
+    Tcp(TcpListener),
+    /// Unix-domain listener and the path it owns.
+    #[cfg(unix)]
+    Unix(UnixListener, PathBuf),
+}
+
+static LISTENER_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Bind a fresh listener for `kind`: TCP on an OS-assigned 127.0.0.1
+/// port, UDS on a unique socket path under the system temp dir.
+/// Returns the listener and the address peers pass to
+/// [`Duplex::connect`].
+pub fn listen(kind: TransportKind, tag: &str) -> io::Result<(Listener, String)> {
+    match kind {
+        TransportKind::Loopback => Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            "loopback transport has no listener",
+        )),
+        TransportKind::Tcp => {
+            let l = TcpListener::bind("127.0.0.1:0")?;
+            let addr = format!("tcp:{}", l.local_addr()?);
+            Ok((Listener::Tcp(l), addr))
+        }
+        TransportKind::Uds => {
+            #[cfg(unix)]
+            {
+                let seq = LISTENER_SEQ.fetch_add(1, Ordering::Relaxed);
+                let path = std::env::temp_dir()
+                    .join(format!("fish-{}-{tag}-{seq}.sock", std::process::id()));
+                let _ = std::fs::remove_file(&path);
+                let l = UnixListener::bind(&path)?;
+                let addr = format!("uds:{}", path.display());
+                Ok((Listener::Unix(l, path), addr))
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = tag;
+                Err(io::Error::new(
+                    io::ErrorKind::Unsupported,
+                    "uds transport requires unix",
+                ))
+            }
+        }
+    }
+}
+
+impl Listener {
+    /// Accept one peer connection.
+    pub fn accept(&self) -> io::Result<Duplex> {
+        match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                let _ = s.set_nodelay(true);
+                Ok(Duplex::Tcp(s))
+            }
+            #[cfg(unix)]
+            Listener::Unix(l, _) => l.accept().map(|(s, _)| Duplex::Unix(s)),
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Listener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Read one frame, charging payload decode time and traffic to
+/// `ledger`. Clean EOF is `Ok(None)`.
+fn read_frame_timed(
+    conn: &mut Duplex,
+    scratch: &mut Vec<u8>,
+    ledger: &WireLedger,
+) -> Result<Option<Frame>, WireError> {
+    let mut header = [0u8; wire::HEADER_LEN];
+    loop {
+        match conn.read(&mut header[..1]) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    conn.read_exact(&mut header[1..])?;
+    let (kind, len) = wire::parse_header(&header)?;
+    scratch.clear();
+    scratch.resize(len, 0);
+    conn.read_exact(scratch)?;
+    let t0 = Instant::now();
+    let frame = wire::decode_payload(kind, scratch)?;
+    ledger.record_in(
+        (wire::HEADER_LEN + len) as u64,
+        wire::frame_tuples(&frame) as u64,
+        t0.elapsed().as_nanos() as u64,
+    );
+    Ok(Some(frame))
+}
+
+/// Source-side socket endpoint for one source→worker stream.
+pub struct SocketTupleTx {
+    conn: Duplex,
+    credit: usize,
+    buf: Vec<u8>,
+    scratch: Vec<u8>,
+    ledger: Arc<WireLedger>,
+    closed: bool,
+}
+
+impl SocketTupleTx {
+    /// Wrap a connected stream with an initial credit window of
+    /// `queue_depth` tuples (the receive side must be built with the
+    /// same depth). Chunks larger than the window can never be
+    /// admitted; the engine clamps batch ≤ queue_depth.
+    pub fn new(conn: Duplex, queue_depth: usize, ledger: Arc<WireLedger>) -> Self {
+        SocketTupleTx {
+            conn,
+            credit: queue_depth.max(1),
+            buf: Vec::new(),
+            scratch: Vec::new(),
+            ledger,
+            closed: false,
+        }
+    }
+}
+
+impl TupleTx for SocketTupleTx {
+    fn send(&mut self, chunk: Vec<Msg>) -> bool {
+        if self.closed {
+            return false;
+        }
+        if chunk.is_empty() {
+            return true;
+        }
+        // window exhausted: block on the upstream credit channel
+        // until the worker acknowledges enough processed tuples
+        while self.credit < chunk.len() {
+            match wire::read_frame(&mut self.conn, &mut self.scratch) {
+                Ok(Some(Frame::Credit(n))) => self.credit += n as usize,
+                _ => {
+                    self.closed = true;
+                    return false;
+                }
+            }
+        }
+        let t0 = Instant::now();
+        self.buf.clear();
+        wire::encode_data(&chunk, &mut self.buf);
+        let encode_ns = t0.elapsed().as_nanos() as u64;
+        self.ledger
+            .record_out(self.buf.len() as u64, chunk.len() as u64, encode_ns);
+        self.credit -= chunk.len();
+        if self.conn.write_all(&self.buf).is_err() {
+            self.closed = true;
+            return false;
+        }
+        true
+    }
+
+    fn close(&mut self) {
+        if self.closed {
+            return;
+        }
+        self.buf.clear();
+        wire::encode_eof(&mut self.buf);
+        let _ = self.conn.write_all(&self.buf);
+        let _ = self.conn.flush();
+        self.closed = true;
+    }
+}
+
+/// Worker-side socket endpoint merging every source stream. One
+/// reader thread per stream decodes `Data` frames into a shared
+/// queue; acks accumulate per stream and return upstream as `Credit`
+/// frames.
+pub struct SocketTupleRx {
+    rx: Receiver<(usize, Vec<Msg>)>,
+    conns: Vec<Duplex>,
+    pending: Vec<usize>,
+    last_conn: usize,
+    quantum: usize,
+    buf: Vec<u8>,
+}
+
+impl SocketTupleRx {
+    /// Build from accepted per-source streams, spawning one reader
+    /// thread per stream.
+    pub fn new(
+        conns: Vec<Duplex>,
+        queue_depth: usize,
+        ledger: &Arc<WireLedger>,
+    ) -> io::Result<SocketTupleRx> {
+        let (tx, rx) = channel::<(usize, Vec<Msg>)>();
+        let mut write_halves = Vec::with_capacity(conns.len());
+        for (id, conn) in conns.into_iter().enumerate() {
+            write_halves.push(conn.try_clone()?);
+            let tx = tx.clone();
+            let ledger = Arc::clone(ledger);
+            thread::spawn(move || {
+                let mut conn = conn;
+                let mut scratch = Vec::new();
+                loop {
+                    match read_frame_timed(&mut conn, &mut scratch, &ledger) {
+                        Ok(Some(Frame::Data(msgs))) => {
+                            if tx.send((id, msgs)).is_err() {
+                                break;
+                            }
+                        }
+                        // Eof frame, socket close, or any error all
+                        // end this source's stream
+                        _ => break,
+                    }
+                }
+            });
+        }
+        drop(tx);
+        let n = write_halves.len();
+        Ok(SocketTupleRx {
+            rx,
+            conns: write_halves,
+            pending: vec![0; n],
+            last_conn: 0,
+            quantum: queue_depth.max(2) / 2,
+            buf: Vec::new(),
+        })
+    }
+
+    fn flush_credit(&mut self, id: usize) {
+        if self.pending[id] == 0 {
+            return;
+        }
+        self.buf.clear();
+        wire::encode_credit(self.pending[id] as u64, &mut self.buf);
+        // a failed credit write means the source is gone; nothing to do
+        let _ = self.conns[id].write_all(&self.buf);
+        self.pending[id] = 0;
+    }
+
+    fn flush_all_credits(&mut self) {
+        for id in 0..self.pending.len() {
+            self.flush_credit(id);
+        }
+    }
+}
+
+impl TupleRx for SocketTupleRx {
+    fn recv(&mut self, timeout: Option<Duration>) -> TupleRecv {
+        // return owed credit before blocking so a window-starved
+        // source can always make progress
+        self.flush_all_credits();
+        let delivered = match timeout {
+            Some(d) => match self.rx.recv_timeout(d) {
+                Ok(pair) => pair,
+                Err(RecvTimeoutError::Timeout) => return TupleRecv::Timeout,
+                Err(RecvTimeoutError::Disconnected) => return TupleRecv::Closed,
+            },
+            None => match self.rx.recv() {
+                Ok(pair) => pair,
+                Err(_) => return TupleRecv::Closed,
+            },
+        };
+        self.last_conn = delivered.0;
+        TupleRecv::Chunk(delivered.1)
+    }
+
+    fn ack(&mut self, n: usize) {
+        self.pending[self.last_conn] += n;
+        if self.pending[self.last_conn] >= self.quantum {
+            self.flush_credit(self.last_conn);
+        }
+    }
+}
+
+/// Worker-side socket endpoint for one worker→shard stream.
+pub struct SocketFlushTx {
+    conn: Duplex,
+    buf: Vec<u8>,
+    ledger: Arc<WireLedger>,
+}
+
+impl SocketFlushTx {
+    /// Wrap a connected stream.
+    pub fn new(conn: Duplex, ledger: Arc<WireLedger>) -> Self {
+        SocketFlushTx { conn, buf: Vec::new(), ledger }
+    }
+}
+
+impl FlushTx for SocketFlushTx {
+    fn send(&mut self, msg: FlushMsg) -> bool {
+        let t0 = Instant::now();
+        self.buf.clear();
+        wire::encode_flush(&msg, &mut self.buf);
+        let encode_ns = t0.elapsed().as_nanos() as u64;
+        let tuples: usize = msg.panes.iter().map(|(_, e)| e.len()).sum();
+        self.ledger
+            .record_out(self.buf.len() as u64, tuples as u64, encode_ns);
+        self.conn.write_all(&self.buf).is_ok()
+    }
+}
+
+/// Shard-side socket endpoint merging every worker stream.
+pub struct SocketFlushRx {
+    rx: Receiver<FlushMsg>,
+}
+
+impl SocketFlushRx {
+    /// Build from accepted per-worker streams, spawning one reader
+    /// thread per stream.
+    pub fn new(conns: Vec<Duplex>, ledger: &Arc<WireLedger>) -> SocketFlushRx {
+        let (tx, rx) = channel::<FlushMsg>();
+        for conn in conns {
+            let tx = tx.clone();
+            let ledger = Arc::clone(ledger);
+            thread::spawn(move || {
+                let mut conn = conn;
+                let mut scratch = Vec::new();
+                loop {
+                    match read_frame_timed(&mut conn, &mut scratch, &ledger) {
+                        Ok(Some(Frame::Flush(f))) => {
+                            if tx.send(f).is_err() {
+                                break;
+                            }
+                        }
+                        _ => break,
+                    }
+                }
+            });
+        }
+        SocketFlushRx { rx }
+    }
+}
+
+impl FlushRx for SocketFlushRx {
+    fn recv(&mut self) -> Option<FlushMsg> {
+        self.rx.recv().ok()
+    }
+}
+
+/// Build a full source→worker socket mesh inside one process: per
+/// worker, bind a listener, then connect one client stream per source
+/// and accept its server side. This is the loopback≡socket oracle
+/// path — same engine, real sockets, no process spawn.
+pub fn tuple_mesh(
+    kind: TransportKind,
+    n_sources: usize,
+    n_workers: usize,
+    queue_depth: usize,
+    ledger: &Arc<WireLedger>,
+) -> io::Result<(Vec<Vec<Box<dyn TupleTx>>>, Vec<Box<dyn TupleRx>>)> {
+    let mut txs: Vec<Vec<Box<dyn TupleTx>>> =
+        (0..n_sources).map(|_| Vec::with_capacity(n_workers)).collect();
+    let mut rxs: Vec<Box<dyn TupleRx>> = Vec::with_capacity(n_workers);
+    for w in 0..n_workers {
+        let (listener, addr) = listen(kind, &format!("tup{w}"))?;
+        let mut accepted = Vec::with_capacity(n_sources);
+        for src in txs.iter_mut() {
+            let client = Duplex::connect(&addr)?;
+            accepted.push(listener.accept()?);
+            src.push(Box::new(SocketTupleTx::new(client, queue_depth, Arc::clone(ledger))));
+        }
+        rxs.push(Box::new(SocketTupleRx::new(accepted, queue_depth, ledger)?));
+    }
+    Ok((txs, rxs))
+}
+
+/// Build the worker→shard socket mesh inside one process.
+pub fn flush_mesh(
+    kind: TransportKind,
+    n_workers: usize,
+    n_shards: usize,
+    ledger: &Arc<WireLedger>,
+) -> io::Result<(Vec<Vec<Box<dyn FlushTx>>>, Vec<Box<dyn FlushRx>>)> {
+    let mut txs: Vec<Vec<Box<dyn FlushTx>>> =
+        (0..n_workers).map(|_| Vec::with_capacity(n_shards)).collect();
+    let mut rxs: Vec<Box<dyn FlushRx>> = Vec::with_capacity(n_shards);
+    for s in 0..n_shards {
+        let (listener, addr) = listen(kind, &format!("fl{s}"))?;
+        let mut accepted = Vec::with_capacity(n_workers);
+        for w in txs.iter_mut() {
+            let client = Duplex::connect(&addr)?;
+            accepted.push(listener.accept()?);
+            w.push(Box::new(SocketFlushTx::new(client, Arc::clone(ledger))));
+        }
+        rxs.push(Box::new(SocketFlushRx::new(accepted, ledger)));
+    }
+    Ok((txs, rxs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds() -> Vec<TransportKind> {
+        #[cfg(unix)]
+        {
+            vec![TransportKind::Tcp, TransportKind::Uds]
+        }
+        #[cfg(not(unix))]
+        {
+            vec![TransportKind::Tcp]
+        }
+    }
+
+    #[test]
+    fn tuple_mesh_streams_under_credit_pressure() {
+        for kind in kinds() {
+            let ledger = Arc::new(WireLedger::new());
+            let (mut txs, mut rxs) = tuple_mesh(kind, 1, 1, 4, &ledger).unwrap();
+            let mut rx = rxs.pop().unwrap();
+            // worker drains + acks everything on its own thread
+            let handle = thread::spawn(move || {
+                let mut total = 0usize;
+                loop {
+                    match rx.recv(None) {
+                        TupleRecv::Chunk(chunk) => {
+                            total += chunk.len();
+                            rx.ack(chunk.len());
+                        }
+                        TupleRecv::Closed => break,
+                        TupleRecv::Timeout => unreachable!(),
+                    }
+                }
+                total
+            });
+            // 30 chunks of 3 tuples through a 4-tuple credit window
+            // forces many credit round-trips
+            let tx = &mut txs[0][0];
+            for i in 0..30u64 {
+                let chunk: Vec<Msg> =
+                    (0..3).map(|j| Msg { key: i * 3 + j, emit_ns: 0, ts: 0 }).collect();
+                assert!(tx.send(chunk), "send {i} failed for {kind}");
+            }
+            tx.close();
+            drop(txs);
+            assert_eq!(handle.join().unwrap(), 90, "{kind} lost tuples");
+            let stats = ledger.snapshot();
+            assert_eq!(stats.tuples_out, 90);
+            assert_eq!(stats.tuples_in, 90);
+            assert!(stats.bytes_out > 0 && stats.frames_out >= 30);
+        }
+    }
+
+    #[test]
+    fn flush_mesh_delivers_and_closes() {
+        for kind in kinds() {
+            let ledger = Arc::new(WireLedger::new());
+            let (mut txs, mut rxs) = flush_mesh(kind, 2, 1, &ledger).unwrap();
+            let flush = FlushMsg {
+                worker: 1,
+                emit_ns: 5,
+                watermark: 10,
+                panes: vec![(0, vec![(7, 3)])],
+            };
+            assert!(txs[0][0].send(flush.clone()));
+            assert!(txs[1][0].send(flush.clone()));
+            drop(txs);
+            let mut rx = rxs.pop().unwrap();
+            let a = rx.recv().expect("first flush");
+            let b = rx.recv().expect("second flush");
+            assert_eq!(a.panes, flush.panes);
+            assert_eq!(b.panes, flush.panes);
+            assert!(rx.recv().is_none(), "{kind} flush lane failed to close");
+        }
+    }
+}

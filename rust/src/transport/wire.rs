@@ -1,0 +1,559 @@
+//! Length-prefixed binary wire format for the transport subsystem.
+//!
+//! Every frame is a fixed 12-byte header followed by a little-endian
+//! payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "FSHW"
+//! 4       1     format version (currently 1)
+//! 5       1     frame kind
+//! 6       2     reserved (zero)
+//! 8       4     payload length, u32 LE
+//! ```
+//!
+//! Encoding appends into a caller-owned `Vec<u8>` so hot paths reuse a
+//! single buffer per lane; decoding borrows the input slice and only
+//! allocates the output collections. [`read_frame`] distinguishes a
+//! clean end-of-stream (`Ok(None)` — the peer closed exactly on a
+//! frame boundary) from a mid-frame truncation
+//! ([`WireError::Truncated`]).
+
+use crate::Key;
+use std::fmt;
+use std::io::Read;
+
+/// 4-byte frame magic.
+pub const MAGIC: [u8; 4] = *b"FSHW";
+/// Current wire-format version.
+pub const VERSION: u8 = 1;
+/// Fixed frame-header length in bytes.
+pub const HEADER_LEN: usize = 12;
+/// Payload bytes per encoded [`Msg`] (key, emit_ns, ts).
+pub const MSG_BYTES: usize = 24;
+
+const KIND_DATA: u8 = 1;
+const KIND_FLUSH: u8 = 2;
+const KIND_CREDIT: u8 = 3;
+const KIND_HELLO: u8 = 4;
+const KIND_EOF: u8 = 5;
+const KIND_DONE: u8 = 6;
+
+/// One routed tuple in flight from a source to a worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Msg {
+    /// Interned key id.
+    pub key: Key,
+    /// Source emit time in ns on the run's shared clock (end-to-end
+    /// latency is completion time minus this).
+    pub emit_ns: u64,
+    /// Event-time timestamp from the trace (drives pane assignment).
+    pub ts: u64,
+}
+
+/// One partial-aggregate flush from a worker to a merge shard.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FlushMsg {
+    /// Originating worker index.
+    pub worker: usize,
+    /// Flush emit time in ns (flush→merge transit latency baseline).
+    pub emit_ns: u64,
+    /// The worker's event-time watermark at flush time (`u64::MAX` on
+    /// the final end-of-stream flush).
+    pub watermark: u64,
+    /// Per-pane deltas: `(window id, (key, count) entries)`. Empty on
+    /// a watermark-only flush.
+    pub panes: Vec<(u64, Vec<(Key, u64)>)>,
+}
+
+/// A decoded transport frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// A batch of routed tuples (source → worker).
+    Data(Vec<Msg>),
+    /// A partial-aggregate flush (worker → shard).
+    Flush(FlushMsg),
+    /// Flow-control credit return: the receiver freed `n` tuples of
+    /// window space (worker → source).
+    Credit(u64),
+    /// Launch handshake: a child process reports its role, index and
+    /// the data address it listens on (child → coordinator).
+    Hello {
+        /// 1 = worker, 2 = shard.
+        role: u8,
+        /// Worker or shard index.
+        index: u64,
+        /// Address peers pass to `Duplex::connect`.
+        addr: String,
+    },
+    /// Explicit end-of-stream marker (a socket close on a frame
+    /// boundary means the same thing).
+    Eof,
+    /// Opaque result blob a child returns to the coordinator.
+    Done(Vec<u8>),
+}
+
+/// Wire decode / IO error.
+#[derive(Debug)]
+pub enum WireError {
+    /// The input ended mid-header or mid-payload.
+    Truncated,
+    /// The 4-byte magic did not match [`MAGIC`].
+    BadMagic,
+    /// The version byte did not match [`VERSION`].
+    VersionMismatch {
+        /// Version byte on the wire.
+        got: u8,
+        /// Version this build speaks.
+        want: u8,
+    },
+    /// Unknown frame-kind byte.
+    BadKind(u8),
+    /// Underlying socket/file error.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::BadMagic => write!(f, "bad frame magic"),
+            WireError::VersionMismatch { got, want } => {
+                write!(f, "wire version mismatch: got {got}, want {want}")
+            }
+            WireError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::Io(e) => write!(f, "wire io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            WireError::Truncated
+        } else {
+            WireError::Io(e)
+        }
+    }
+}
+
+#[inline]
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub(crate) fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+/// Append a frame header with a zero length field; returns the payload
+/// start offset for [`end_frame`] to patch.
+fn begin_frame(kind: u8, buf: &mut Vec<u8>) -> usize {
+    buf.extend_from_slice(&MAGIC);
+    buf.push(VERSION);
+    buf.push(kind);
+    buf.extend_from_slice(&[0, 0]);
+    put_u32(buf, 0);
+    buf.len()
+}
+
+/// Patch the payload length of the frame opened at `payload_start`.
+fn end_frame(payload_start: usize, buf: &mut Vec<u8>) {
+    let len = (buf.len() - payload_start) as u32;
+    buf[payload_start - 4..payload_start].copy_from_slice(&len.to_le_bytes());
+}
+
+/// Append a `Data` frame carrying `msgs`.
+pub fn encode_data(msgs: &[Msg], buf: &mut Vec<u8>) {
+    let start = begin_frame(KIND_DATA, buf);
+    buf.reserve(4 + msgs.len() * MSG_BYTES);
+    put_u32(buf, msgs.len() as u32);
+    for m in msgs {
+        put_u64(buf, m.key);
+        put_u64(buf, m.emit_ns);
+        put_u64(buf, m.ts);
+    }
+    end_frame(start, buf);
+}
+
+/// Append a `Flush` frame.
+pub fn encode_flush(msg: &FlushMsg, buf: &mut Vec<u8>) {
+    let start = begin_frame(KIND_FLUSH, buf);
+    put_u64(buf, msg.worker as u64);
+    put_u64(buf, msg.emit_ns);
+    put_u64(buf, msg.watermark);
+    put_u32(buf, msg.panes.len() as u32);
+    for (window, entries) in &msg.panes {
+        put_u64(buf, *window);
+        put_u32(buf, entries.len() as u32);
+        for &(key, count) in entries {
+            put_u64(buf, key);
+            put_u64(buf, count);
+        }
+    }
+    end_frame(start, buf);
+}
+
+/// Append a `Credit` frame returning `n` tuples of window space.
+pub fn encode_credit(n: u64, buf: &mut Vec<u8>) {
+    let start = begin_frame(KIND_CREDIT, buf);
+    put_u64(buf, n);
+    end_frame(start, buf);
+}
+
+/// Append a `Hello` handshake frame.
+pub fn encode_hello(role: u8, index: u64, addr: &str, buf: &mut Vec<u8>) {
+    let start = begin_frame(KIND_HELLO, buf);
+    buf.push(role);
+    put_u64(buf, index);
+    put_u32(buf, addr.len() as u32);
+    buf.extend_from_slice(addr.as_bytes());
+    end_frame(start, buf);
+}
+
+/// Append an `Eof` frame.
+pub fn encode_eof(buf: &mut Vec<u8>) {
+    let start = begin_frame(KIND_EOF, buf);
+    end_frame(start, buf);
+}
+
+/// Append a `Done` frame wrapping an opaque result blob.
+pub fn encode_done(payload: &[u8], buf: &mut Vec<u8>) {
+    let start = begin_frame(KIND_DONE, buf);
+    buf.extend_from_slice(payload);
+    end_frame(start, buf);
+}
+
+/// Little-endian payload reader over a borrowed byte slice; every
+/// accessor fails with [`WireError::Truncated`] instead of panicking,
+/// so malformed frames can never crash a receiver.
+pub struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Start reading at the front of `bytes`.
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Reader { bytes, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    /// Consume the next `n` bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated);
+        }
+        let out = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// Consume one byte.
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Consume a little-endian u32.
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Consume a little-endian u64.
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        let b: [u8; 8] = self.take(8)?.try_into().expect("len checked");
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// Consume an f64 stored as its little-endian bit pattern.
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Consume a u32-length-prefixed UTF-8 string.
+    pub fn str_u32(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| {
+            WireError::Io(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "non-utf8 string on the wire",
+            ))
+        })
+    }
+}
+
+/// Parse a frame header: returns `(kind, payload length)`. The kind
+/// byte is validated later, by payload decode, so `Credit`-only
+/// readers can skip frames they do not understand if they choose to.
+pub fn parse_header(header: &[u8]) -> Result<(u8, usize), WireError> {
+    if header.len() < HEADER_LEN {
+        return Err(WireError::Truncated);
+    }
+    if header[..4] != MAGIC {
+        return Err(WireError::BadMagic);
+    }
+    if header[4] != VERSION {
+        return Err(WireError::VersionMismatch { got: header[4], want: VERSION });
+    }
+    let len = u32::from_le_bytes([header[8], header[9], header[10], header[11]]) as usize;
+    Ok((header[5], len))
+}
+
+/// Decode a payload of the given kind (header already stripped).
+pub(crate) fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame, WireError> {
+    let mut r = Reader::new(payload);
+    match kind {
+        KIND_DATA => {
+            let n = r.u32()? as usize;
+            if r.remaining() < n.saturating_mul(MSG_BYTES) {
+                return Err(WireError::Truncated);
+            }
+            let mut msgs = Vec::with_capacity(n);
+            for _ in 0..n {
+                msgs.push(Msg { key: r.u64()?, emit_ns: r.u64()?, ts: r.u64()? });
+            }
+            Ok(Frame::Data(msgs))
+        }
+        KIND_FLUSH => {
+            let worker = r.u64()? as usize;
+            let emit_ns = r.u64()?;
+            let watermark = r.u64()?;
+            let n_panes = r.u32()? as usize;
+            // 12 bytes (window + entry count) is the tightest per-pane
+            // lower bound — enough to reject absurd counts before
+            // allocating
+            if r.remaining() < n_panes.saturating_mul(12) {
+                return Err(WireError::Truncated);
+            }
+            let mut panes = Vec::with_capacity(n_panes);
+            for _ in 0..n_panes {
+                let window = r.u64()?;
+                let n = r.u32()? as usize;
+                if r.remaining() < n.saturating_mul(16) {
+                    return Err(WireError::Truncated);
+                }
+                let mut entries = Vec::with_capacity(n);
+                for _ in 0..n {
+                    entries.push((r.u64()?, r.u64()?));
+                }
+                panes.push((window, entries));
+            }
+            Ok(Frame::Flush(FlushMsg { worker, emit_ns, watermark, panes }))
+        }
+        KIND_CREDIT => Ok(Frame::Credit(r.u64()?)),
+        KIND_HELLO => {
+            let role = r.u8()?;
+            let index = r.u64()?;
+            let addr = r.str_u32()?;
+            Ok(Frame::Hello { role, index, addr })
+        }
+        KIND_EOF => Ok(Frame::Eof),
+        KIND_DONE => Ok(Frame::Done(payload.to_vec())),
+        other => Err(WireError::BadKind(other)),
+    }
+}
+
+/// Decode one frame from the front of `bytes`; returns the frame and
+/// the total bytes consumed (header + payload), so a caller can walk
+/// a buffer of back-to-back frames.
+pub fn decode_frame(bytes: &[u8]) -> Result<(Frame, usize), WireError> {
+    let (kind, len) = parse_header(bytes)?;
+    if bytes.len() < HEADER_LEN + len {
+        return Err(WireError::Truncated);
+    }
+    let frame = decode_payload(kind, &bytes[HEADER_LEN..HEADER_LEN + len])?;
+    Ok((frame, HEADER_LEN + len))
+}
+
+/// Read one frame from a blocking reader, reusing `scratch` for the
+/// payload. Returns `Ok(None)` on a clean end-of-stream (EOF exactly
+/// on a frame boundary); EOF in the middle of a frame is
+/// [`WireError::Truncated`].
+pub fn read_frame<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> Result<Option<Frame>, WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    // read the first byte by hand so a clean close is distinguishable
+    // from a mid-frame one
+    loop {
+        match r.read(&mut header[..1]) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    r.read_exact(&mut header[1..])?;
+    let (kind, len) = parse_header(&header)?;
+    scratch.clear();
+    scratch.resize(len, 0);
+    r.read_exact(scratch)?;
+    decode_payload(kind, scratch).map(Some)
+}
+
+/// Number of stream tuples a frame carries (for the wire ledger).
+pub fn frame_tuples(frame: &Frame) -> usize {
+    match frame {
+        Frame::Data(msgs) => msgs.len(),
+        Frame::Flush(f) => f.panes.iter().map(|(_, entries)| entries.len()).sum(),
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(encode: impl FnOnce(&mut Vec<u8>)) -> Frame {
+        let mut buf = Vec::new();
+        encode(&mut buf);
+        let (frame, used) = decode_frame(&buf).expect("decode");
+        assert_eq!(used, buf.len(), "frame must consume exactly its bytes");
+        frame
+    }
+
+    #[test]
+    fn data_frame_round_trips() {
+        let msgs: Vec<Msg> = (0..17)
+            .map(|i| Msg { key: i * 7, emit_ns: i * 1000, ts: i * 31 })
+            .collect();
+        match roundtrip(|b| encode_data(&msgs, b)) {
+            Frame::Data(back) => assert_eq!(back, msgs),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        // empty batches are legal (loopback liveness probes)
+        match roundtrip(|b| encode_data(&[], b)) {
+            Frame::Data(back) => assert!(back.is_empty()),
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn flush_frame_round_trips_including_watermark_only() {
+        let full = FlushMsg {
+            worker: 3,
+            emit_ns: 1_234_567,
+            watermark: 999,
+            panes: vec![(0, vec![(1, 5), (9, 2)]), (2, vec![(4, 1)])],
+        };
+        match roundtrip(|b| encode_flush(&full, b)) {
+            Frame::Flush(back) => assert_eq!(back, full),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        let wm_only = FlushMsg { worker: 0, emit_ns: 7, watermark: u64::MAX, panes: vec![] };
+        match roundtrip(|b| encode_flush(&wm_only, b)) {
+            Frame::Flush(back) => assert_eq!(back, wm_only),
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_frames_round_trip() {
+        assert_eq!(roundtrip(|b| encode_credit(42, b)), Frame::Credit(42));
+        assert_eq!(roundtrip(encode_eof), Frame::Eof);
+        assert_eq!(
+            roundtrip(|b| encode_hello(2, 5, "tcp:127.0.0.1:9000", b)),
+            Frame::Hello { role: 2, index: 5, addr: "tcp:127.0.0.1:9000".into() }
+        );
+        assert_eq!(
+            roundtrip(|b| encode_done(&[9, 8, 7], b)),
+            Frame::Done(vec![9, 8, 7])
+        );
+    }
+
+    #[test]
+    fn truncated_and_corrupt_frames_are_rejected() {
+        let mut buf = Vec::new();
+        encode_data(&[Msg { key: 1, emit_ns: 2, ts: 3 }], &mut buf);
+        for cut in [0, 1, HEADER_LEN - 1, HEADER_LEN + 3, buf.len() - 1] {
+            assert!(
+                matches!(decode_frame(&buf[..cut]), Err(WireError::Truncated)),
+                "cut at {cut} must be Truncated"
+            );
+        }
+        let mut bad_magic = buf.clone();
+        bad_magic[0] = b'X';
+        assert!(matches!(decode_frame(&bad_magic), Err(WireError::BadMagic)));
+        let mut bad_kind = buf.clone();
+        bad_kind[5] = 99;
+        assert!(matches!(decode_frame(&bad_kind), Err(WireError::BadKind(99))));
+        // a data payload whose count field promises more tuples than
+        // the payload holds is truncation, not a huge allocation
+        let mut lying = Vec::new();
+        encode_data(&[], &mut lying);
+        lying[HEADER_LEN..HEADER_LEN + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode_frame(&lying), Err(WireError::Truncated)));
+    }
+
+    #[test]
+    fn version_mismatch_is_reported() {
+        let mut buf = Vec::new();
+        encode_credit(1, &mut buf);
+        buf[4] = VERSION + 1;
+        match decode_frame(&buf) {
+            Err(WireError::VersionMismatch { got, want }) => {
+                assert_eq!(got, VERSION + 1);
+                assert_eq!(want, VERSION);
+            }
+            other => panic!("expected version mismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn back_to_back_frames_decode_sequentially() {
+        let mut buf = Vec::new();
+        encode_credit(1, &mut buf);
+        encode_data(&[Msg { key: 5, emit_ns: 6, ts: 7 }], &mut buf);
+        encode_eof(&mut buf);
+        let mut off = 0;
+        let mut frames = Vec::new();
+        while off < buf.len() {
+            let (frame, used) = decode_frame(&buf[off..]).expect("decode");
+            frames.push(frame);
+            off += used;
+        }
+        assert_eq!(frames.len(), 3);
+        assert_eq!(frames[0], Frame::Credit(1));
+        assert_eq!(frames[2], Frame::Eof);
+    }
+
+    #[test]
+    fn read_frame_distinguishes_clean_eof_from_truncation() {
+        let mut buf = Vec::new();
+        encode_credit(3, &mut buf);
+        let mut scratch = Vec::new();
+
+        let mut clean = std::io::Cursor::new(buf.clone());
+        assert_eq!(read_frame(&mut clean, &mut scratch).unwrap(), Some(Frame::Credit(3)));
+        assert_eq!(read_frame(&mut clean, &mut scratch).unwrap(), None);
+
+        let mut cut = std::io::Cursor::new(buf[..buf.len() - 2].to_vec());
+        assert!(matches!(read_frame(&mut cut, &mut scratch), Err(WireError::Truncated)));
+    }
+
+    #[test]
+    fn frame_tuples_counts_stream_tuples_only() {
+        let data = Frame::Data(vec![Msg { key: 0, emit_ns: 0, ts: 0 }; 4]);
+        assert_eq!(frame_tuples(&data), 4);
+        let flush = Frame::Flush(FlushMsg {
+            worker: 0,
+            emit_ns: 0,
+            watermark: 0,
+            panes: vec![(0, vec![(1, 2), (2, 3)]), (1, vec![(1, 1)])],
+        });
+        assert_eq!(frame_tuples(&flush), 3);
+        assert_eq!(frame_tuples(&Frame::Credit(10)), 0);
+    }
+}

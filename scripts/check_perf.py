@@ -16,8 +16,10 @@ batched hot path regresses relative to the per-tuple reference.
 
 The aggregation path is gated the same way: for every op in the
 baseline's agg_results[] (MergeStage absorb, shard-routing dispatch,
-and the windowed path — WindowedPartial::observe pane assignment and
-WindowedMerge absorb + watermark retirement per entry), its cost
+the windowed path — WindowedPartial::observe pane assignment and
+WindowedMerge absorb + watermark retirement per entry — and the
+transport wire codec: encode_data serialize and decode_frame
+deserialize per tuple at engine batch size), its cost
 *relative to PartialAgg::observe in the same run* (ratio_vs_observe)
 must not rise more than AGG-THRESHOLD above the baseline ratio. Again
 a same-machine ratio, so runner hardware cancels out; only the
