@@ -71,6 +71,7 @@ impl<C: Combiner> PartialAgg<C> {
     /// runs. Flushing is off the per-tuple hot path, so the O(n log n)
     /// is paid where it is cheap.
     pub fn flush(&mut self) -> Vec<(Key, C::Acc)> {
+        // sorted by key on the next line. lint: sorted-ok
         let mut batch: Vec<(Key, C::Acc)> = self.state.drain().collect();
         batch.sort_unstable_by_key(|&(k, _)| k);
         batch

@@ -133,6 +133,7 @@ impl<C: Combiner + Clone> ShardedMerge<C> {
                 }
             }
         }
+        // sorted by key on the next line. lint: sorted-ok
         let mut v: Vec<(Key, C::Acc)> = merged.into_iter().collect();
         v.sort_unstable_by_key(|&(k, _)| k);
         (v, stats)

@@ -429,6 +429,7 @@ impl<C: Combiner<Acc = u64> + Clone> WindowedMerge<C> {
                 }
             }
         }
+        // sorted by key on the next line. lint: sorted-ok
         let mut all_time: Vec<(Key, u64)> = all.into_iter().collect();
         all_time.sort_unstable_by_key(|&(k, _)| k);
         WindowedOutput {
@@ -572,6 +573,7 @@ pub fn sliding(panes: &[WindowSnapshot], panes_per_window: usize) -> Vec<WindowS
             *rolling.entry(k).or_insert(0) += c;
         }
         gathers.push(&p.gather);
+        // sorted by key on the next line. lint: sorted-ok
         let mut counts: Vec<(Key, u64)> = rolling.iter().map(|(&k, &c)| (k, c)).collect();
         counts.sort_unstable_by_key(|&(k, _)| k);
         out.push(WindowSnapshot {

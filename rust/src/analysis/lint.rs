@@ -1,0 +1,775 @@
+//! `fish lint` — the repo's determinism & robustness rule engine.
+//!
+//! A deliberately small, line-oriented analyzer (no parser, no
+//! dependencies — the build is offline) that walks a source tree and
+//! enforces the rules in `docs/DETERMINISM.md`:
+//!
+//! | rule                     | scope                          | catches |
+//! |--------------------------|--------------------------------|---------|
+//! | `unsorted-map-iteration` | `aggregate/ sketch/ report/`   | order-dependent `HashMap`/`HashSet` iteration on flush/merge/report/sketch-admission paths |
+//! | `unwrap-in-io`           | `transport/`, `engine/rt.rs`   | `unwrap()`/`expect()` on I/O paths that must degrade, not panic |
+//! | `relaxed-credit-atomic`  | `transport/`                   | `Ordering::Relaxed` on credit/watermark/ack atomics |
+//! | `raw-clock`              | everywhere but the `Clock` home| `SystemTime::now()` bypassing the shared clock |
+//! | `frame-exhaustive`       | everywhere                     | wire-frame `match`es with a bare `_` arm that would swallow a new frame kind |
+//!
+//! The only escape hatch is `// lint: sorted-ok` on (or immediately
+//! above) a flagged line of the map-iteration rule, for sites that
+//! sort the drained batch before it crosses a stage boundary or fold
+//! it through an order-independent operation. Every escape is counted
+//! and reported; the other rules have none — their findings are fixed,
+//! not waived.
+//!
+//! Test regions (`#[cfg(test)]` items), comments and string literals
+//! are ignored. The engine favours zero false positives on the idioms
+//! this repo uses over completeness; it is self-tested against
+//! seeded-regression fixtures in `rust/tests/fixtures/lint/` and
+//! against the real tree (which must scan clean).
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::io;
+use std::path::Path;
+
+/// Directory components whose files are flush/merge/report/
+/// sketch-admission paths for the map-iteration rule.
+const SORTED_DIRS: &[&str] = &["aggregate", "sketch", "report"];
+
+/// Map methods whose iteration order is the hasher's, not the caller's.
+const UNORDERED_METHODS: &[&str] = &["drain", "iter", "iter_mut", "keys", "values", "into_iter"];
+
+/// Keywords that mark an atomic as part of the credit/watermark
+/// protocol for the relaxed-ordering rule.
+const CREDIT_WORDS: &[&str] = &["credit", "inflight", "watermark", "grant", "ack", "pending"];
+
+/// The escape-comment marker (map-iteration rule only).
+const ESCAPE_MARK: &str = "lint: sorted-ok";
+
+/// One rule violation at one source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule identifier (stable, kebab-case).
+    pub rule: &'static str,
+    /// Path relative to the linted root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// What is wrong and what to do instead.
+    pub message: String,
+    /// The offending source line, trimmed.
+    pub snippet: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Everything one lint run produced.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Violations, sorted by (file, line, rule) — deterministic output.
+    pub findings: Vec<Finding>,
+    /// `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Would-be map-iteration findings waived by `// lint: sorted-ok`.
+    pub suppressions: usize,
+}
+
+impl LintReport {
+    /// Serialize as a single-line JSON object (hand-rolled — offline
+    /// build, no serde). Shape:
+    /// `{"findings":[{"rule":..,"file":..,"line":..,"message":..}],
+    ///   "files_scanned":N,"suppressions":N}`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"findings\":[");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"rule\":\"{}\",\"file\":\"{}\",\"line\":{},\"message\":\"{}\"}}",
+                json_escape(f.rule),
+                json_escape(&f.file),
+                f.line,
+                json_escape(&f.message)
+            ));
+        }
+        out.push_str(&format!(
+            "],\"files_scanned\":{},\"suppressions\":{}}}",
+            self.files_scanned, self.suppressions
+        ));
+        out
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One preprocessed source line.
+struct LineInfo {
+    /// The line with comments and string-literal contents removed.
+    code: String,
+    /// The raw line (for snippets and escape-comment detection).
+    raw: String,
+    /// Inside a `#[cfg(test)]` item.
+    in_test: bool,
+}
+
+/// Strip comments and string/char-literal contents from one line,
+/// tracking block-comment state across lines. Quotes are kept (so
+/// `"x"` becomes `""`), which preserves tokenization without letting
+/// literal contents trip pattern rules.
+fn strip_line(line: &str, in_block_comment: &mut bool) -> String {
+    let bytes: Vec<char> = line.chars().collect();
+    let mut out = String::with_capacity(line.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if *in_block_comment {
+            if bytes[i] == '*' && i + 1 < bytes.len() && bytes[i + 1] == '/' {
+                *in_block_comment = false;
+                i += 2;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        match bytes[i] {
+            '/' if i + 1 < bytes.len() && bytes[i + 1] == '/' => break, // line comment
+            '/' if i + 1 < bytes.len() && bytes[i + 1] == '*' => {
+                *in_block_comment = true;
+                i += 2;
+            }
+            '"' => {
+                out.push('"');
+                i += 1;
+                while i < bytes.len() {
+                    if bytes[i] == '\\' {
+                        i += 2;
+                    } else if bytes[i] == '"' {
+                        break;
+                    } else {
+                        i += 1;
+                    }
+                }
+                out.push('"');
+                i += 1; // past the closing quote (or EOL on unterminated)
+            }
+            '\'' => {
+                // char literal vs lifetime: a literal is 'x' or '\x';
+                // anything else (e.g. `&'static`, `<'a>`) passes through
+                if i + 2 < bytes.len() && bytes[i + 1] == '\\' {
+                    let mut j = i + 2;
+                    while j < bytes.len() && bytes[j] != '\'' {
+                        j += 1;
+                    }
+                    out.push_str("''");
+                    i = j + 1;
+                } else if i + 2 < bytes.len() && bytes[i + 2] == '\'' {
+                    out.push_str("''");
+                    i += 3;
+                } else {
+                    out.push('\'');
+                    i += 1;
+                }
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Preprocess a file: strip comments/strings and mark `#[cfg(test)]`
+/// regions by brace balancing.
+fn preprocess(text: &str) -> Vec<LineInfo> {
+    let mut lines = Vec::new();
+    let mut in_block_comment = false;
+    let mut depth: i64 = 0;
+    let mut pending_test = false;
+    let mut test_until_depth: Option<i64> = None;
+    for raw in text.lines() {
+        let code = strip_line(raw, &mut in_block_comment);
+        let is_test_attr = code.contains("#[cfg(test)]");
+        if is_test_attr {
+            pending_test = true;
+        }
+        let opens = code.matches('{').count() as i64;
+        let closes = code.matches('}').count() as i64;
+        if pending_test && opens > 0 && test_until_depth.is_none() {
+            test_until_depth = Some(depth);
+            pending_test = false;
+        }
+        let in_test = pending_test || test_until_depth.is_some() || is_test_attr;
+        depth += opens - closes;
+        if let Some(d) = test_until_depth {
+            if depth <= d {
+                test_until_depth = None;
+            }
+        }
+        lines.push(LineInfo { code, raw: raw.to_string(), in_test });
+    }
+    lines
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Last identifier in `s`, if `s` ends with one (ignoring trailing
+/// whitespace).
+fn trailing_ident(s: &str) -> Option<&str> {
+    let t = s.trim_end();
+    let start = t
+        .char_indices()
+        .rev()
+        .take_while(|&(_, c)| is_ident_char(c))
+        .last()
+        .map(|(i, _)| i)?;
+    let ident = &t[start..];
+    if ident.is_empty() || ident.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        None
+    } else {
+        Some(ident)
+    }
+}
+
+/// Identifiers declared (or initialized) as `HashMap`/`HashSet` in
+/// this file: `name: HashMap<..>` field/binding annotations and
+/// `let [mut] name = HashMap::new()`-style initializers.
+fn collect_map_names(lines: &[LineInfo]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for info in lines {
+        let code = &info.code;
+        for ty in ["HashMap", "HashSet"] {
+            let mut from = 0;
+            while let Some(rel) = code[from..].find(ty) {
+                let at = from + rel;
+                from = at + ty.len();
+                // word boundary after the type name
+                let after = code[at + ty.len()..].chars().next();
+                if matches!(after, Some(c) if is_ident_char(c)) {
+                    continue;
+                }
+                // strip a qualifying path (`std::collections::HashMap`)
+                let mut head = &code[..at];
+                while head.ends_with("::") {
+                    head = &head[..head.len() - 2];
+                    while head.chars().next_back().is_some_and(is_ident_char) {
+                        head = &head[..head.len() - 1];
+                    }
+                }
+                let trimmed = head.trim_end();
+                if let Some(before_colon) = trimmed.strip_suffix(':') {
+                    // `name: HashMap<..>` annotation — the colon must
+                    // directly precede the type, so return positions
+                    // like `(x: u32) -> HashMap<..>` don't mis-bind
+                    if !before_colon.ends_with(':') {
+                        if let Some(name) = trailing_ident(before_colon) {
+                            names.insert(name.to_string());
+                        }
+                    }
+                } else if let Some(before_eq) = trimmed.strip_suffix('=') {
+                    // `let [mut] name = HashMap::new()` initializer
+                    if before_eq.contains("let ") {
+                        if let Some(name) = trailing_ident(before_eq) {
+                            names.insert(name.to_string());
+                        }
+                    }
+                }
+            }
+        }
+    }
+    names
+}
+
+/// Occurrences of `name.method(` with a word boundary before `name`.
+fn calls_method(code: &str, name: &str, method: &str) -> bool {
+    let needle = format!("{name}.{method}(");
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(&needle) {
+        let at = from + rel;
+        let boundary = at == 0 || !is_ident_char(code[..at].chars().next_back().unwrap_or(' '));
+        if boundary {
+            return true;
+        }
+        from = at + needle.len();
+    }
+    false
+}
+
+/// True when the line iterates `name` via `for .. in [&[mut]] name`.
+fn for_iterates(code: &str, name: &str) -> bool {
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(" in ") {
+        let at = from + rel;
+        from = at + 4;
+        let rest = code[at + 4..].trim_start().trim_start_matches("&mut ").trim_start_matches('&');
+        let ident: String = rest.chars().take_while(|&c| is_ident_char(c)).collect();
+        if ident == name {
+            // `for k in name`, `in name {`, `in name.x` — only flag
+            // direct iteration, not field access like `name.len()`
+            let after = &rest[ident.len()..];
+            if !after.starts_with('.') {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// The map-iteration escape: marker on the flagged line or the one
+/// above (checked on raw text — the marker lives in a comment).
+fn escaped(lines: &[LineInfo], idx: usize) -> bool {
+    lines[idx].raw.contains(ESCAPE_MARK)
+        || (idx > 0 && lines[idx - 1].raw.contains(ESCAPE_MARK))
+}
+
+fn in_dirs(relpath: &str, dirs: &[&str]) -> bool {
+    let mut components: Vec<&str> = relpath.split('/').collect();
+    components.pop(); // the file name itself is not a directory
+    components.iter().any(|c| dirs.contains(c))
+}
+
+/// Rule 1: unsorted `HashMap`/`HashSet` iteration on flush/merge/
+/// report/sketch-admission paths. Returns `(findings, suppressions)`.
+fn rule_unsorted_map(relpath: &str, lines: &[LineInfo]) -> (Vec<Finding>, usize) {
+    if !in_dirs(relpath, SORTED_DIRS) {
+        return (Vec::new(), 0);
+    }
+    let names = collect_map_names(lines);
+    if names.is_empty() {
+        return (Vec::new(), 0);
+    }
+    let mut findings = Vec::new();
+    let mut suppressions = 0;
+    for (idx, info) in lines.iter().enumerate() {
+        if info.in_test {
+            continue;
+        }
+        for name in &names {
+            let method_hit = UNORDERED_METHODS
+                .iter()
+                .copied()
+                .find(|&m| calls_method(&info.code, name, m));
+            let for_hit = for_iterates(&info.code, name);
+            if method_hit.is_none() && !for_hit {
+                continue;
+            }
+            if escaped(lines, idx) {
+                suppressions += 1;
+                continue;
+            }
+            let how = match method_hit {
+                Some(m) => format!("`{name}.{m}()`"),
+                None => format!("`for .. in {name}`"),
+            };
+            findings.push(Finding {
+                rule: "unsorted-map-iteration",
+                file: relpath.to_string(),
+                line: idx + 1,
+                message: format!(
+                    "{how} iterates a hash map in hasher order on a flush/merge path; \
+                     sort before the batch crosses a stage boundary, or mark the site \
+                     `// lint: sorted-ok` with a justification"
+                ),
+                snippet: info.raw.trim().to_string(),
+            });
+        }
+    }
+    (findings, suppressions)
+}
+
+/// Rule 2: `unwrap()`/`expect()` on transport / rt I/O paths.
+fn rule_unwrap_in_io(relpath: &str, lines: &[LineInfo]) -> Vec<Finding> {
+    let applies = in_dirs(relpath, &["transport"]) || relpath == "engine/rt.rs";
+    if !applies {
+        return Vec::new();
+    }
+    let mut findings = Vec::new();
+    for (idx, info) in lines.iter().enumerate() {
+        if info.in_test {
+            continue;
+        }
+        // joining a thread that can only die by panicking is the one
+        // place propagating the panic is the right move
+        if info.code.contains(".join()") {
+            continue;
+        }
+        let hit = if info.code.contains(".unwrap()") {
+            Some("unwrap()")
+        } else if info.code.contains(".expect(") {
+            Some("expect(..)")
+        } else {
+            None
+        };
+        if let Some(what) = hit {
+            findings.push(Finding {
+                rule: "unwrap-in-io",
+                file: relpath.to_string(),
+                line: idx + 1,
+                message: format!(
+                    "`{what}` on an I/O path panics the lane instead of degrading; \
+                     propagate through `LaneError`/`io::Result` so peers see a clean close"
+                ),
+                snippet: info.raw.trim().to_string(),
+            });
+        }
+    }
+    findings
+}
+
+/// Rule 3: `Ordering::Relaxed` on credit-protocol atomics.
+fn rule_relaxed_credit(relpath: &str, lines: &[LineInfo]) -> Vec<Finding> {
+    if !in_dirs(relpath, &["transport"]) {
+        return Vec::new();
+    }
+    let mut findings = Vec::new();
+    for (idx, info) in lines.iter().enumerate() {
+        if info.in_test || !info.code.contains("Ordering::Relaxed") {
+            continue;
+        }
+        let lower = info.code.to_lowercase();
+        if let Some(word) = CREDIT_WORDS.iter().copied().find(|&w| lower.contains(w)) {
+            findings.push(Finding {
+                rule: "relaxed-credit-atomic",
+                file: relpath.to_string(),
+                line: idx + 1,
+                message: format!(
+                    "`Ordering::Relaxed` on a {word}-protocol atomic: grant/ack pairs \
+                     must be Acquire/Release so the window open cannot reorder past the \
+                     work it accounts for"
+                ),
+                snippet: info.raw.trim().to_string(),
+            });
+        }
+    }
+    findings
+}
+
+/// Rule 4: raw `SystemTime::now()` outside the shared `Clock`.
+fn rule_raw_clock(relpath: &str, lines: &[LineInfo]) -> Vec<Finding> {
+    // transport/mod.rs is where Clock wraps the system clock
+    if relpath == "transport/mod.rs" {
+        return Vec::new();
+    }
+    let mut findings = Vec::new();
+    for (idx, info) in lines.iter().enumerate() {
+        if info.in_test || !info.code.contains("SystemTime::now") {
+            continue;
+        }
+        findings.push(Finding {
+            rule: "raw-clock",
+            file: relpath.to_string(),
+            line: idx + 1,
+            message: "raw `SystemTime::now()` bypasses the shared `transport::Clock`; \
+                      cross-process timestamps must come from one epoch"
+                .to_string(),
+            snippet: info.raw.trim().to_string(),
+        });
+    }
+    findings
+}
+
+/// Rule 5: wire-frame `match`es must not have a bare `_` arm — a new
+/// frame kind must be classified explicitly at every decode site.
+fn rule_frame_exhaustive(relpath: &str, lines: &[LineInfo]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let frame_marker = "Frame::";
+    for (start, info) in lines.iter().enumerate() {
+        if info.in_test || !has_match_keyword(&info.code) {
+            continue;
+        }
+        // walk the block by brace balance, starting at the match's `{`
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut mentions_frame = false;
+        let mut wildcard_at: Option<usize> = None;
+        let mut idx = start;
+        while idx < lines.len() {
+            let code = &lines[idx].code;
+            let scan_from = if idx == start {
+                code.find("match").map(|p| p + 5).unwrap_or(0)
+            } else {
+                0
+            };
+            if code.contains(frame_marker) {
+                mentions_frame = true;
+            }
+            if let Some(arrow) = code.find("=>") {
+                if code[..arrow].trim() == "_" {
+                    wildcard_at.get_or_insert(idx);
+                }
+            }
+            for c in code[scan_from..].chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            idx += 1;
+        }
+        if mentions_frame {
+            if let Some(w) = wildcard_at {
+                findings.push(Finding {
+                    rule: "frame-exhaustive",
+                    file: relpath.to_string(),
+                    line: w + 1,
+                    message: "bare `_` arm in a wire-frame `match` silently swallows \
+                              future frame kinds; enumerate every `Frame` variant (an \
+                              explicit error arm is fine)"
+                        .to_string(),
+                    snippet: lines[w].raw.trim().to_string(),
+                });
+            }
+        }
+    }
+    findings
+}
+
+/// `match` as a keyword (not `matches!`, not inside an identifier).
+fn has_match_keyword(code: &str) -> bool {
+    let mut from = 0;
+    while let Some(rel) = code[from..].find("match") {
+        let at = from + rel;
+        from = at + 5;
+        let before_ok =
+            at == 0 || !is_ident_char(code[..at].chars().next_back().unwrap_or(' '));
+        let after = code[at + 5..].chars().next();
+        let after_ok = matches!(after, Some(c) if c.is_whitespace() || c == '(');
+        if before_ok && after_ok {
+            return true;
+        }
+    }
+    false
+}
+
+/// Lint one file's source. `relpath` is the `/`-separated path
+/// relative to the linted root (it selects which rules apply).
+/// Returns the findings plus the number of suppressed map-iteration
+/// findings.
+pub fn lint_source(relpath: &str, text: &str) -> (Vec<Finding>, usize) {
+    let lines = preprocess(text);
+    let (mut findings, suppressions) = rule_unsorted_map(relpath, &lines);
+    findings.extend(rule_unwrap_in_io(relpath, &lines));
+    findings.extend(rule_relaxed_credit(relpath, &lines));
+    findings.extend(rule_raw_clock(relpath, &lines));
+    findings.extend(rule_frame_exhaustive(relpath, &lines));
+    (findings, suppressions)
+}
+
+/// Lint every `.rs` file under `root` (recursively, deterministic
+/// order).
+pub fn lint_tree(root: &Path) -> io::Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs_files(root, root, &mut files)?;
+    files.sort();
+    let mut report = LintReport::default();
+    for rel in files {
+        let text = std::fs::read_to_string(root.join(&rel))?;
+        let rel_slash = rel.replace('\\', "/");
+        let (findings, suppressions) = lint_source(&rel_slash, &text);
+        report.findings.extend(findings);
+        report.suppressions += suppressions;
+        report.files_scanned += 1;
+    }
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(report)
+}
+
+fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            if let Ok(rel) = path.strip_prefix(root) {
+                out.push(rel.to_string_lossy().into_owned());
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings_for(relpath: &str, src: &str) -> Vec<Finding> {
+        lint_source(relpath, src).0
+    }
+
+    #[test]
+    fn unsorted_drain_on_flush_path_is_flagged() {
+        let src = "use std::collections::HashMap;\n\
+                   pub struct P { state: HashMap<u64, u64> }\n\
+                   impl P {\n\
+                       pub fn flush(&mut self) -> Vec<(u64, u64)> {\n\
+                           self.state.drain().collect()\n\
+                       }\n\
+                   }\n";
+        let f = findings_for("aggregate/bad.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "unsorted-map-iteration");
+        assert_eq!(f[0].line, 5);
+        // same file outside the allowlisted dirs: no finding
+        assert!(findings_for("engine/ok.rs", src).is_empty());
+    }
+
+    #[test]
+    fn sorted_ok_escape_waives_and_counts() {
+        let src = "use std::collections::HashMap;\n\
+                   pub struct P { state: HashMap<u64, u64> }\n\
+                   impl P {\n\
+                       pub fn flush(&mut self) -> Vec<(u64, u64)> {\n\
+                           // sorted on the next line. lint: sorted-ok\n\
+                           let mut v: Vec<_> = self.state.drain().collect();\n\
+                           v.sort_unstable();\n\
+                           v\n\
+                       }\n\
+                   }\n";
+        let (f, suppressed) = lint_source("aggregate/ok.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(suppressed, 1);
+    }
+
+    #[test]
+    fn entry_and_get_are_not_iteration() {
+        let src = "use std::collections::HashMap;\n\
+                   pub struct P { state: HashMap<u64, u64> }\n\
+                   impl P {\n\
+                       pub fn bump(&mut self, k: u64) {\n\
+                           *self.state.entry(k).or_insert(0) += 1;\n\
+                           let _ = self.state.get(&k);\n\
+                           let _ = self.state.len();\n\
+                       }\n\
+                   }\n";
+        assert!(findings_for("aggregate/ok.rs", src).is_empty());
+    }
+
+    #[test]
+    fn for_loop_over_map_is_flagged_but_vec_is_not() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f() {\n\
+                       let mut m: HashMap<u64, u64> = HashMap::new();\n\
+                       m.insert(1, 2);\n\
+                       let v = vec![1u64];\n\
+                       for x in &v { let _ = x; }\n\
+                       for (k, c) in &m { let _ = (k, c); }\n\
+                   }\n";
+        let f = findings_for("sketch/bad.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 7);
+    }
+
+    #[test]
+    fn unwrap_rule_scopes_to_transport_and_rt() {
+        let src = "fn f(x: std::io::Result<u8>) -> u8 { x.unwrap() }\n";
+        assert_eq!(findings_for("transport/x.rs", src).len(), 1);
+        assert_eq!(findings_for("engine/rt.rs", src).len(), 1);
+        assert!(findings_for("engine/sim.rs", src).is_empty());
+        // join lines are exempt: a panicking thread must propagate
+        let join = "fn g(h: std::thread::JoinHandle<u8>) -> u8 { h.join().unwrap() }\n";
+        assert!(findings_for("transport/x.rs", join).is_empty());
+        // unwrap_or is not unwrap
+        let or = "fn h(x: Option<u8>) -> u8 { x.unwrap_or(0) }\n";
+        assert!(findings_for("transport/x.rs", or).is_empty());
+    }
+
+    #[test]
+    fn relaxed_rule_needs_a_credit_word() {
+        let bad = "fn f(c: &std::sync::atomic::AtomicUsize) {\n\
+                       c.fetch_add(1, Ordering::Relaxed); // credit grant\n\
+                   }\n";
+        // the comment is stripped, so make the identifier carry the word
+        let bad = bad.replace("(c:", "(credit:").replace("c.fetch_add", "credit.fetch_add");
+        assert_eq!(findings_for("transport/x.rs", &bad).len(), 1);
+        let benign = "static SEQ: std::sync::atomic::AtomicU64 =\n\
+                      std::sync::atomic::AtomicU64::new(0);\n\
+                      fn f() { SEQ.fetch_add(1, Ordering::Relaxed); }\n";
+        assert!(findings_for("transport/x.rs", benign).is_empty());
+        // rule is scoped to transport/
+        assert!(findings_for("engine/rt.rs", &bad).is_empty());
+    }
+
+    #[test]
+    fn raw_clock_allowed_only_in_clock_home() {
+        let src = "fn now() -> std::time::SystemTime { std::time::SystemTime::now() }\n";
+        assert_eq!(findings_for("engine/sim.rs", src).len(), 1);
+        assert!(findings_for("transport/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn frame_match_with_wildcard_is_flagged() {
+        let bad = "fn f(frame: &Frame) -> usize {\n\
+                       match frame {\n\
+                           Frame::Data(m) => m.len(),\n\
+                           _ => 0,\n\
+                       }\n\
+                   }\n";
+        let f = findings_for("transport/x.rs", bad);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "frame-exhaustive");
+        assert_eq!(f[0].line, 4);
+        // an explicit catch arm (`other =>`, `Some(_) =>`) is fine
+        let ok = bad.replace("_ =>", "other =>");
+        assert!(findings_for("transport/x.rs", &ok).is_empty());
+        // wildcard in a frameless match is fine
+        let frameless = "fn g(x: u8) -> u8 { match x { 1 => 2, _ => 0 } }\n";
+        assert!(findings_for("transport/x.rs", frameless).is_empty());
+    }
+
+    #[test]
+    fn comments_strings_and_test_regions_are_ignored() {
+        let src = "// SystemTime::now() in a comment\n\
+                   fn f() -> &'static str { \"SystemTime::now()\" }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn g() { let _ = std::time::SystemTime::now(); }\n\
+                   }\n";
+        assert!(findings_for("engine/sim.rs", src).is_empty());
+    }
+
+    #[test]
+    fn report_json_is_well_formed() {
+        let report = LintReport {
+            findings: vec![Finding {
+                rule: "raw-clock",
+                file: "a/b.rs".into(),
+                line: 3,
+                message: "say \"no\"".into(),
+                snippet: "x".into(),
+            }],
+            files_scanned: 2,
+            suppressions: 0,
+        };
+        let json = report.to_json();
+        assert!(json.contains("\"files_scanned\":2"));
+        assert!(json.contains("\\\"no\\\""));
+        assert!(json.starts_with('{') && json.ends_with('}'));
+    }
+}

@@ -1,0 +1,40 @@
+//! Determinism & concurrency analysis suite.
+//!
+//! FISH's headline guarantee is byte-identical load-balanced results
+//! across runs, transports and process topologies — and the two worst
+//! bugs this repo has shipped were *nondeterminism* bugs (unsorted
+//! `HashMap` drain order corrupting at-capacity SpaceSaving admission;
+//! rt flush-cadence drift), a class ordinary tests only catch by luck.
+//! This module machine-checks the rules that keep the guarantee:
+//!
+//! * [`lint`] — a source-level rule engine behind `fish lint`. It
+//!   walks `rust/src/` and enforces the repo-specific determinism and
+//!   robustness rules written down in `docs/DETERMINISM.md`: no
+//!   unsorted `HashMap`/`HashSet` iteration on flush/merge/report/
+//!   sketch-admission paths (escape hatch: `// lint: sorted-ok` at
+//!   sites that sort immediately or fold order-independently), no
+//!   `unwrap()`/`expect()` in transport + rt I/O paths, no
+//!   `Ordering::Relaxed` on credit/watermark atomics, no raw
+//!   `SystemTime::now()` outside the shared [`crate::transport::Clock`],
+//!   and exhaustive `Frame` matches at every decode site.
+//! * [`model`] — an explicit-state model checker for the credit-based
+//!   flow-control protocol the socket and loopback lanes implement
+//!   (grant/consume/ack with half-window quanta and
+//!   flush-all-credits-before-blocking). It exhaustively enumerates
+//!   bounded interleavings of senders, receiver and credit returns,
+//!   asserting deadlock freedom, credit conservation (no leak, no
+//!   double grant) and per-stream FIFO delivery — and it detects the
+//!   violation when any of those protocol rules is deliberately
+//!   broken (see `rust/tests/credit_model.rs`).
+//!
+//! Everything here is `std`-only and runs offline — the lint engine is
+//! a line-oriented analyzer, not a full parser; its rules are written
+//! to have zero false positives on idioms this repo actually uses, and
+//! it is self-tested against seeded-regression fixtures in
+//! `rust/tests/fixtures/lint/`.
+
+pub mod lint;
+pub mod model;
+
+pub use lint::{lint_source, lint_tree, Finding, LintReport};
+pub use model::{check, Mutation, ModelConfig, ModelStats, Violation};

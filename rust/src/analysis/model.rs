@@ -1,0 +1,407 @@
+//! Explicit-state model checker for the credit-based flow-control
+//! protocol the transport lanes implement.
+//!
+//! The protocol under check (see `transport/socket.rs` and
+//! `docs/DETERMINISM.md`):
+//!
+//! * each sender starts with `window` credits and spends them on
+//!   fixed-size data chunks (a chunk is atomic — a sender with credit
+//!   left over but less than one chunk is *blocked*, exactly like the
+//!   real sender that must ship `opts.chunk` tuples per frame);
+//! * the receiver acks consumed tuples in quanta of
+//!   `window.max(2) / 2`, returning credit in whole quanta and
+//!   holding the sub-quantum remainder;
+//! * before the receiver would block waiting for data it **flushes
+//!   all owed credit**, remainder included. This is the rule that
+//!   makes the protocol deadlock-free — quantized acks alone can
+//!   strand up to `quantum - 1` credits while the sender is blocked
+//!   needing a full chunk.
+//!
+//! [`check`] enumerates *every* interleaving of send / deliver /
+//! credit-flush / grant-arrival transitions over a bounded
+//! configuration (breadth-first over the state graph with a visited
+//! set), asserting at each reachable state:
+//!
+//! * **deadlock freedom** — a state with no enabled transition has
+//!   delivered every tuple;
+//! * **credit conservation** — per stream, `sender credit + in-flight
+//!   data + receiver-owed + grants in flight == window` (no leak, no
+//!   double grant);
+//! * **no overflow** — sender credit never exceeds the window;
+//! * **FIFO delivery** — tuples arrive in sequence order per stream.
+//!
+//! [`Mutation`] deliberately breaks one protocol rule at a time so
+//! tests can prove the checker *detects* each violation class rather
+//! than vacuously passing: `rust/tests/credit_model.rs` runs the
+//! honest protocol exhaustively and asserts every mutation is caught.
+//!
+//! The checker is pure `std`, deterministic (fixed exploration order,
+//! no time, no randomness) and small: states are a few `u32`s per
+//! stream, so bounded configs in the tens of thousands of states
+//! check in milliseconds even in debug builds.
+
+use std::collections::{HashSet, VecDeque};
+use std::fmt;
+
+/// A bounded protocol configuration to exhaustively check.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    /// Concurrent senders feeding one receiver (streams are
+    /// credit-independent; interleavings are shared).
+    pub n_senders: usize,
+    /// Credit window per stream (the receiver-side queue depth).
+    pub window: u32,
+    /// Tuples each sender must deliver for the run to terminate.
+    pub tuples_per_sender: u32,
+    /// Fixed data-chunk size (the final chunk may be smaller). Must
+    /// be ≤ `window` or even the honest protocol cannot make progress.
+    pub chunk: u32,
+    /// Protocol rule to deliberately break ([`Mutation::None`] checks
+    /// the honest protocol).
+    pub mutation: Mutation,
+    /// Abort with [`Violation::StateSpaceExceeded`] past this many
+    /// distinct states — a misconfiguration guard, not a soundness
+    /// limit (within the bound the search is exhaustive).
+    pub max_states: usize,
+}
+
+/// A deliberate protocol bug, used to prove the checker catches each
+/// violation class (mutation testing for the model itself).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mutation {
+    /// The protocol as implemented.
+    None,
+    /// Receiver never flushes sub-quantum credit remainders before
+    /// blocking — the bug class the `flush_all_credits()` rule
+    /// prevents. Expected: [`Violation::Deadlock`].
+    SkipCreditFlush,
+    /// Receiver grants every ack twice. Expected:
+    /// [`Violation::CreditLost`] (conservation breaks high) or
+    /// [`Violation::CreditOverflow`].
+    DoubleGrant,
+    /// Receiver drops one credit from every grant. Expected:
+    /// [`Violation::CreditLost`] (conservation breaks low).
+    DropCredit,
+    /// Network delivers the newest in-flight chunk first. Expected:
+    /// [`Violation::OutOfOrder`].
+    ReorderData,
+}
+
+/// Aggregate counts from an exhaustive run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelStats {
+    /// Distinct reachable states.
+    pub states: usize,
+    /// Explored transitions (edges, including ones to already-visited
+    /// states).
+    pub transitions: usize,
+}
+
+/// A protocol property violated in some reachable state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Violation {
+    /// No transition enabled, tuples still undelivered.
+    Deadlock { state: String },
+    /// Per-stream credit accounting no longer sums to the window.
+    CreditLost { sender: usize, window: u32, accounted: u32 },
+    /// Sender credit exceeds the window.
+    CreditOverflow { sender: usize, credit: u32, window: u32 },
+    /// A chunk arrived out of sequence order.
+    OutOfOrder { sender: usize, expected_seq: u32, got_seq: u32 },
+    /// `max_states` exceeded before the frontier emptied.
+    StateSpaceExceeded { explored: usize },
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Violation::Deadlock { state } => write!(f, "deadlock: no enabled transition in {state}"),
+            Violation::CreditLost { sender, window, accounted } => write!(
+                f,
+                "credit conservation broken on stream {sender}: window {window}, accounted {accounted}"
+            ),
+            Violation::CreditOverflow { sender, credit, window } => write!(
+                f,
+                "credit overflow on stream {sender}: credit {credit} > window {window}"
+            ),
+            Violation::OutOfOrder { sender, expected_seq, got_seq } => write!(
+                f,
+                "out-of-order delivery on stream {sender}: expected seq {expected_seq}, got {got_seq}"
+            ),
+            Violation::StateSpaceExceeded { explored } => {
+                write!(f, "state space exceeded the configured bound after {explored} states")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Violation {}
+
+/// Per-stream protocol state. Everything is small unsigned counters,
+/// so a whole state hashes as a short `Vec<u32>`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Lane {
+    /// Credits the sender may spend.
+    credit: u32,
+    /// Tuples the sender has not yet put on the wire.
+    to_send: u32,
+    /// In-flight data chunks: `(size, first_seq)`, FIFO.
+    channel: VecDeque<(u32, u32)>,
+    /// Next sequence number the receiver expects (== tuples
+    /// delivered).
+    delivered: u32,
+    /// Tuples consumed but not yet acked (credit the receiver owes).
+    pending: u32,
+    /// Credit grants in flight back to the sender, FIFO.
+    grants: VecDeque<u32>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct State {
+    lanes: Vec<Lane>,
+}
+
+impl State {
+    fn initial(cfg: &ModelConfig) -> State {
+        State {
+            lanes: vec![
+                Lane {
+                    credit: cfg.window,
+                    to_send: cfg.tuples_per_sender,
+                    channel: VecDeque::new(),
+                    delivered: 0,
+                    pending: 0,
+                    grants: VecDeque::new(),
+                };
+                cfg.n_senders
+            ],
+        }
+    }
+
+    /// Canonical hashable encoding.
+    fn key(&self) -> Vec<u32> {
+        let mut k = Vec::with_capacity(self.lanes.len() * 8);
+        for lane in &self.lanes {
+            k.push(lane.credit);
+            k.push(lane.to_send);
+            k.push(lane.delivered);
+            k.push(lane.pending);
+            k.push(lane.channel.len() as u32);
+            for &(size, seq) in &lane.channel {
+                k.push(size);
+                k.push(seq);
+            }
+            k.push(lane.grants.len() as u32);
+            for &g in &lane.grants {
+                k.push(g);
+            }
+        }
+        k
+    }
+
+    fn all_delivered(&self, cfg: &ModelConfig) -> bool {
+        self.lanes.iter().all(|l| l.delivered == cfg.tuples_per_sender)
+    }
+
+    fn describe(&self) -> String {
+        let mut s = String::new();
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if i > 0 {
+                s.push_str("; ");
+            }
+            s.push_str(&format!(
+                "stream {i}: credit={} to_send={} inflight={:?} delivered={} pending={} grants={:?}",
+                lane.credit, lane.to_send, lane.channel, lane.delivered, lane.pending, lane.grants
+            ));
+        }
+        s
+    }
+
+    /// Every state reachable in one transition. Errors on a FIFO
+    /// violation observed while delivering.
+    fn successors(&self, cfg: &ModelConfig, quantum: u32) -> Result<Vec<State>, Violation> {
+        let mut out = Vec::new();
+        for i in 0..self.lanes.len() {
+            let lane = &self.lanes[i];
+
+            // send: one fixed-size chunk, atomically, if credit covers it
+            if lane.to_send > 0 {
+                let size = cfg.chunk.min(lane.to_send);
+                if lane.credit >= size {
+                    let mut next = self.clone();
+                    let l = &mut next.lanes[i];
+                    let first_seq = cfg.tuples_per_sender - l.to_send;
+                    l.credit -= size;
+                    l.to_send -= size;
+                    l.channel.push_back((size, first_seq));
+                    out.push(next);
+                }
+            }
+
+            // deliver: receiver consumes one in-flight chunk and acks
+            // in whole quanta, holding the remainder
+            if !lane.channel.is_empty() {
+                let mut next = self.clone();
+                let l = &mut next.lanes[i];
+                let (size, first_seq) = if cfg.mutation == Mutation::ReorderData && l.channel.len() > 1
+                {
+                    l.channel.pop_back().expect("checked non-empty")
+                } else {
+                    l.channel.pop_front().expect("checked non-empty")
+                };
+                if first_seq != l.delivered {
+                    return Err(Violation::OutOfOrder {
+                        sender: i,
+                        expected_seq: l.delivered,
+                        got_seq: first_seq,
+                    });
+                }
+                l.delivered += size;
+                l.pending += size;
+                let quantized = (l.pending / quantum) * quantum;
+                if quantized > 0 {
+                    l.pending -= quantized;
+                    push_grant(l, quantized, cfg.mutation);
+                }
+                out.push(next);
+            }
+
+            // flush: receiver returns ALL owed credit (the
+            // before-blocking rule); removed under SkipCreditFlush
+            if lane.pending > 0 && cfg.mutation != Mutation::SkipCreditFlush {
+                let mut next = self.clone();
+                let l = &mut next.lanes[i];
+                let owed = l.pending;
+                l.pending = 0;
+                push_grant(l, owed, cfg.mutation);
+                out.push(next);
+            }
+
+            // grant arrival: a credit frame reaches the sender
+            if !lane.grants.is_empty() {
+                let mut next = self.clone();
+                let l = &mut next.lanes[i];
+                let g = l.grants.pop_front().expect("checked non-empty");
+                l.credit += g;
+                out.push(next);
+            }
+        }
+        Ok(out)
+    }
+
+    fn check_invariants(&self, cfg: &ModelConfig) -> Result<(), Violation> {
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if lane.credit > cfg.window {
+                return Err(Violation::CreditOverflow {
+                    sender: i,
+                    credit: lane.credit,
+                    window: cfg.window,
+                });
+            }
+            let inflight: u32 = lane.channel.iter().map(|&(size, _)| size).sum();
+            let grants: u32 = lane.grants.iter().sum();
+            let accounted = lane.credit + inflight + lane.pending + grants;
+            if accounted != cfg.window {
+                return Err(Violation::CreditLost { sender: i, window: cfg.window, accounted });
+            }
+        }
+        Ok(())
+    }
+}
+
+fn push_grant(lane: &mut Lane, granted: u32, mutation: Mutation) {
+    let granted = match mutation {
+        Mutation::DoubleGrant => granted * 2,
+        Mutation::DropCredit => granted.saturating_sub(1),
+        _ => granted,
+    };
+    if granted > 0 {
+        lane.grants.push_back(granted);
+    }
+}
+
+/// Exhaustively explore every interleaving of `cfg`, checking the
+/// protocol invariants at each reachable state. Deterministic: same
+/// config, same result, same [`ModelStats`].
+pub fn check(cfg: &ModelConfig) -> Result<ModelStats, Violation> {
+    assert!(cfg.n_senders > 0, "need at least one sender");
+    assert!(cfg.window > 0 && cfg.chunk > 0, "window and chunk must be positive");
+    assert!(
+        cfg.chunk <= cfg.window,
+        "chunk > window cannot make progress even unmutated"
+    );
+    let quantum = cfg.window.max(2) / 2;
+    let init = State::initial(cfg);
+    init.check_invariants(cfg)?;
+    let mut visited: HashSet<Vec<u32>> = HashSet::new();
+    visited.insert(init.key());
+    let mut frontier = VecDeque::new();
+    frontier.push_back(init);
+    let mut stats = ModelStats { states: 1, transitions: 0 };
+    while let Some(state) = frontier.pop_front() {
+        let successors = state.successors(cfg, quantum)?;
+        if successors.is_empty() && !state.all_delivered(cfg) {
+            return Err(Violation::Deadlock { state: state.describe() });
+        }
+        for next in successors {
+            stats.transitions += 1;
+            next.check_invariants(cfg)?;
+            if visited.insert(next.key()) {
+                stats.states += 1;
+                if stats.states > cfg.max_states {
+                    return Err(Violation::StateSpaceExceeded { explored: stats.states });
+                }
+                frontier.push_back(next);
+            }
+        }
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(n_senders: usize, window: u32, tuples: u32, chunk: u32, mutation: Mutation) -> ModelConfig {
+        ModelConfig {
+            n_senders,
+            window,
+            tuples_per_sender: tuples,
+            chunk,
+            mutation,
+            max_states: 2_000_000,
+        }
+    }
+
+    #[test]
+    fn honest_protocol_small_config_passes() {
+        let stats = check(&cfg(1, 2, 4, 1, Mutation::None)).expect("honest run");
+        assert!(stats.states > 1);
+        assert!(stats.transitions >= stats.states - 1);
+    }
+
+    #[test]
+    fn skip_credit_flush_deadlocks() {
+        // window 5, chunk 5: the quantized ack returns 4, stranding 1
+        // credit at the receiver while the sender needs a full chunk
+        let err = check(&cfg(1, 5, 10, 5, Mutation::SkipCreditFlush)).unwrap_err();
+        assert!(matches!(err, Violation::Deadlock { .. }), "{err}");
+        // the honest protocol flushes the remainder and completes
+        check(&cfg(1, 5, 10, 5, Mutation::None)).expect("flush saves it");
+    }
+
+    #[test]
+    fn determinism_same_config_same_stats() {
+        let a = check(&cfg(2, 3, 4, 2, Mutation::None)).expect("run a");
+        let b = check(&cfg(2, 3, 4, 2, Mutation::None)).expect("run b");
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn state_space_guard_trips() {
+        let mut c = cfg(2, 3, 6, 1, Mutation::None);
+        c.max_states = 10;
+        let err = check(&c).unwrap_err();
+        assert!(matches!(err, Violation::StateSpaceExceeded { .. }), "{err}");
+    }
+}

@@ -340,9 +340,17 @@ impl RtJob {
         &self.trace
     }
 
-    /// Run the deployment to completion.
+    /// Run the deployment to completion, panicking on lane-mesh setup
+    /// failure (tests and benches; the CLI uses [`RtJob::try_run`]).
     pub fn run(self) -> RtResult {
         rt::run(&self.trace, self.sources, self.workers, &self.opts)
+    }
+
+    /// Run the deployment to completion, surfacing socket-mesh setup
+    /// failures as [`crate::transport::LaneError`] instead of
+    /// panicking.
+    pub fn try_run(self) -> Result<RtResult, crate::transport::LaneError> {
+        rt::try_run(&self.trace, self.sources, self.workers, &self.opts)
     }
 
     /// Run the deployment as child processes — one per worker, one per

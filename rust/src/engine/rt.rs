@@ -59,7 +59,8 @@ use crate::coordinator::{ClusterView, Grouper};
 use crate::metrics::{AggStats, Histogram, ShardAggStats, WindowStats, WireLedger, WireStats};
 use crate::transport::wire::{FlushMsg, Msg};
 use crate::transport::{
-    loopback, socket, Clock, FlushRx, FlushTx, TransportKind, TupleRecv, TupleRx, TupleTx,
+    loopback, socket, Clock, FlushRx, FlushTx, LaneError, TransportKind, TupleRecv, TupleRx,
+    TupleTx,
 };
 use crate::workload::Trace;
 use crate::Key;
@@ -310,9 +311,9 @@ pub(crate) fn source_loop(
             }
             // blocking, credit-gated send: the lane waits for the
             // worker's unprocessed count to leave room, and reports a
-            // vanished worker as `false` so the source errors out
-            // instead of blocking forever
-            if !txs[w].send(std::mem::take(chunk)) {
+            // vanished worker as an error so the source stops
+            // streaming instead of blocking forever
+            if txs[w].send(std::mem::take(chunk)).is_err() {
                 break 'stream; // worker gone (shutdown)
             }
         }
@@ -502,14 +503,30 @@ pub(crate) fn per_tuple_table(opts: &RtOptions, n_workers: usize) -> Vec<f64> {
 
 /// Run `trace` through `sources` grouper instances onto `n_workers`
 /// worker threads, over the lane backend [`RtOptions::transport`]
-/// selects (all in one process; `deploy --processes N` is
-/// [`crate::transport::launch::run_multiprocess`]).
+/// selects. Panics if the lane mesh cannot be built; callers that can
+/// surface setup failures (the deploy path) use [`try_run`].
 pub fn run(
+    trace: &Arc<Trace>,
+    sources: Vec<Box<dyn Grouper>>,
+    n_workers: usize,
+    opts: &RtOptions,
+) -> RtResult {
+    match try_run(trace, sources, n_workers, opts) {
+        Ok(result) => result,
+        Err(e) => panic!("rt transport setup failed: {e}"),
+    }
+}
+
+/// Fallible [`run`]: socket-mesh construction errors (bind, connect,
+/// accept, clone) come back as [`LaneError`] instead of panicking —
+/// all in one process; `deploy --processes N` is
+/// [`crate::transport::launch::run_multiprocess`].
+pub fn try_run(
     trace: &Arc<Trace>,
     mut sources: Vec<Box<dyn Grouper>>,
     n_workers: usize,
     opts: &RtOptions,
-) -> RtResult {
+) -> Result<RtResult, LaneError> {
     assert!(!sources.is_empty() && n_workers > 0);
     let per_tuple = per_tuple_table(opts, n_workers);
 
@@ -532,12 +549,11 @@ pub fn run(
     let ledger = Arc::new(WireLedger::new());
     let (tuple_txs, tuple_rxs) = match opts.transport {
         TransportKind::Loopback => loopback::tuple_lanes(n_sources, n_workers, queue_depth),
-        kind => socket::tuple_mesh(kind, n_sources, n_workers, queue_depth, &ledger)
-            .expect("tuple socket mesh"),
+        kind => socket::tuple_mesh(kind, n_sources, n_workers, queue_depth, &ledger)?,
     };
     let (flush_txs, flush_rxs) = match opts.transport {
         TransportKind::Loopback => loopback::flush_lanes(n_workers, n_shards),
-        kind => socket::flush_mesh(kind, n_workers, n_shards, &ledger).expect("flush socket mesh"),
+        kind => socket::flush_mesh(kind, n_workers, n_shards, &ledger)?,
     };
 
     let clock = Clock::mono();
@@ -620,7 +636,7 @@ pub fn run(
         seen.insert(t.key);
     }
 
-    RtResult {
+    Ok(RtResult {
         latency,
         worker_counts: counts,
         worker_state: states,
@@ -636,7 +652,7 @@ pub fn run(
         windows,
         window_stats,
         wire: ledger.snapshot(),
-    }
+    })
 }
 
 #[cfg(test)]

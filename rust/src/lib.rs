@@ -59,6 +59,12 @@
 //!   over in-process loopback, UDS and TCP backends carrying a
 //!   length-prefixed binary wire format with credit-based flow
 //!   control, plus the `deploy --processes N` multi-process launcher.
+//! * [`analysis`] — the determinism & concurrency analysis suite:
+//!   the `fish lint` source-level rule engine (unsorted map drains on
+//!   flush paths, unwrap in transport I/O, relaxed credit atomics,
+//!   raw clocks, non-exhaustive frame matches) and an explicit-state
+//!   model checker for the credit flow-control protocol (see
+//!   `docs/DETERMINISM.md`).
 //! * [`metrics`], [`config`], [`cli`], [`report`], [`testing`], [`util`]
 //!   — supporting substrates (hand-rolled: the build is offline).
 //!
@@ -66,6 +72,7 @@
 //! paper-vs-measured record.
 
 pub mod aggregate;
+pub mod analysis;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

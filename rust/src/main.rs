@@ -4,6 +4,7 @@
 //! fish sim     --scheme fish --workload zf --workers 64 ...   simulator run
 //! fish deploy  --scheme fish --workload mt --workers 32 ...   threaded runtime run
 //! fish compare --workload zf --workers 16,32,64,128           all schemes side by side
+//! fish lint    [--src rust/src] [--json]                      determinism lint suite
 //! fish info                                                   artifact + platform info
 //! ```
 //!
@@ -126,7 +127,7 @@ fn cmd_deploy(args: &Args) -> anyhow::Result<()> {
     let r = if cfg.processes > 0 {
         job.run_multiprocess()?
     } else {
-        job.run()
+        job.try_run().map_err(|e| anyhow::anyhow!("deploy failed: {e}"))?
     };
     let (mean, p50, p95, p99) = r.latency.summary();
     let mut t = Table::new(
@@ -275,6 +276,30 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    let src = args.get("src").unwrap_or("rust/src");
+    let report = fish::analysis::lint_tree(std::path::Path::new(src))
+        .map_err(|e| anyhow::anyhow!("lint: cannot walk {src}: {e}"))?;
+    if args.has("json") {
+        println!("{}", report.to_json());
+    } else {
+        for f in &report.findings {
+            println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+            println!("    {}", f.snippet);
+        }
+        println!(
+            "fish lint: {} finding(s), {} file(s) scanned, {} documented suppression(s)",
+            report.findings.len(),
+            report.files_scanned,
+            report.suppressions
+        );
+    }
+    if !report.findings.is_empty() {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     println!("fish {} — FISH grouping for time-evolving streams", env!("CARGO_PKG_VERSION"));
@@ -297,13 +322,14 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: fish <sim|deploy|compare|info> [--config file.toml] [--scheme S] \
+        "usage: fish <sim|deploy|compare|lint|info> [--config file.toml] [--scheme S] \
          [--workload zf|mt|am] [--tuples N] [--workers N] [--zipf_z Z] [--batch N] \
          [--agg_flush_ms N] [--agg_shards N] [--agg_window_ms N] [--agg_lateness_ms N] \
          [--transport loopback|uds|tcp] [--rebalance_threshold F] \
          [--identifier native|xla-cms] [--seed N] ...\n       \
          deploy also takes [--processes N] (N worker processes + one per merge \
-         shard) and [--verify] (check against the in-process reference)"
+         shard) and [--verify] (check against the in-process reference)\n       \
+         lint takes [--src DIR] (default rust/src) and [--json]; exits 1 on findings"
     );
     std::process::exit(2);
 }
@@ -324,6 +350,7 @@ fn main() -> anyhow::Result<()> {
         Some("sim") => cmd_sim(&args),
         Some("deploy") => cmd_deploy(&args),
         Some("compare") => cmd_compare(&args),
+        Some("lint") => cmd_lint(&args),
         Some("info") => cmd_info(&args),
         _ => usage(),
     }

@@ -58,6 +58,7 @@ impl SlidingWindow {
 
     /// Highest in-window count.
     pub fn top_count(&self) -> u64 {
+        // max() is an order-independent fold. lint: sorted-ok
         self.counts.values().copied().max().unwrap_or(0)
     }
 

@@ -472,6 +472,9 @@ pub fn run_multiprocess(
         if role != 2 || index >= n_shards {
             return Err(proto_err(format!("unexpected hello: role {role} index {index}")));
         }
+        if shard_conns[index].is_some() {
+            return Err(proto_err(format!("duplicate hello from shard {index}")));
+        }
         shard_addrs[index] = addr;
         shard_conns[index] = Some(conn);
     }
@@ -507,6 +510,9 @@ pub fn run_multiprocess(
         let (role, index, addr) = read_hello(&mut conn)?;
         if role != 1 || index >= n_workers {
             return Err(proto_err(format!("unexpected hello: role {role} index {index}")));
+        }
+        if worker_conns[index].is_some() {
+            return Err(proto_err(format!("duplicate hello from worker {index}")));
         }
         worker_addrs[index] = addr;
         worker_conns[index] = Some(conn);
@@ -551,8 +557,10 @@ pub fn run_multiprocess(
     let mut latency = Histogram::new();
     let mut counts = Vec::with_capacity(n_workers);
     let mut states = Vec::with_capacity(n_workers);
-    for conn in worker_conns.iter_mut() {
-        let conn = conn.as_mut().expect("every worker said hello");
+    for (w, conn) in worker_conns.iter_mut().enumerate() {
+        let conn = conn
+            .as_mut()
+            .ok_or_else(|| proto_err(format!("worker {w} never said hello")))?;
         let done = get_worker_done(&read_done(conn)?).map_err(wire_io)?;
         latency.merge(&done.latency);
         counts.push(done.count);
@@ -560,8 +568,10 @@ pub fn run_multiprocess(
         wire.absorb(&done.wire);
     }
     let mut shard_outs = Vec::with_capacity(n_shards);
-    for conn in shard_conns.iter_mut() {
-        let conn = conn.as_mut().expect("every shard said hello");
+    for (s, conn) in shard_conns.iter_mut().enumerate() {
+        let conn = conn
+            .as_mut()
+            .ok_or_else(|| proto_err(format!("shard {s} never said hello")))?;
         let done = get_shard_done(&read_done(conn)?).map_err(wire_io)?;
         wire.absorb(&done.wire);
         shard_outs.push((done.out, done.sketch, done.lat));

@@ -5,7 +5,7 @@
 //! serialization cost; the wire ledger stays zero).
 
 use super::wire::{FlushMsg, Msg};
-use super::{FlushRx, FlushTx, TupleRecv, TupleRx, TupleTx};
+use super::{FlushRx, FlushTx, LaneError, TupleRecv, TupleRx, TupleTx};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::Arc;
@@ -23,22 +23,37 @@ pub struct LoopbackTupleTx {
 }
 
 impl TupleTx for LoopbackTupleTx {
-    fn send(&mut self, chunk: Vec<Msg>) -> bool {
+    fn send(&mut self, chunk: Vec<Msg>) -> Result<(), LaneError> {
         if chunk.is_empty() {
-            return true;
+            return Ok(());
         }
         // credit spin: wait until the worker's in-flight window has
         // room, probing channel liveness occasionally so a dead
-        // worker cannot hang the source forever
+        // worker cannot hang the source forever.
+        //
+        // Ordering audit (the grant/ack pair, see docs/DETERMINISM.md):
+        // this Acquire load pairs with the Release `fetch_sub` in
+        // `ack()` — once the source observes the window open, it also
+        // observes every write the worker made while processing the
+        // acked tuples. Relaxed would let the credit return become
+        // visible before those writes, reordering the window open past
+        // the work it accounts for.
         while self.inflight.load(Ordering::Acquire) + chunk.len() > self.queue_depth {
             std::hint::spin_loop();
             self.spins = self.spins.wrapping_add(1);
             if self.spins % (1 << 20) == 0 && self.tx.send(Vec::new()).is_err() {
-                return false;
+                return Err(LaneError::Closed);
             }
         }
+        // AcqRel: the spend must neither float above the credit check
+        // (Acquire half) nor below the channel send it pays for
+        // (Release half) — otherwise two sources could both observe
+        // room and overfill the window.
         self.inflight.fetch_add(chunk.len(), Ordering::AcqRel);
-        self.tx.send(chunk).is_ok()
+        if self.tx.send(chunk).is_err() {
+            return Err(LaneError::Closed);
+        }
+        Ok(())
     }
 }
 
@@ -64,6 +79,9 @@ impl TupleRx for LoopbackTupleRx {
     }
 
     fn ack(&mut self, n: usize) {
+        // Release: publishes the worker's processing of the acked
+        // tuples to the Acquire credit check in `send` (the other
+        // half of the grant/ack pair documented there).
         self.inflight.fetch_sub(n, Ordering::Release);
     }
 }
@@ -103,8 +121,8 @@ pub struct LoopbackFlushTx {
 }
 
 impl FlushTx for LoopbackFlushTx {
-    fn send(&mut self, msg: FlushMsg) -> bool {
-        self.tx.send(msg).is_ok()
+    fn send(&mut self, msg: FlushMsg) -> Result<(), LaneError> {
+        self.tx.send(msg).map_err(|_| LaneError::Closed)
     }
 }
 
@@ -149,8 +167,8 @@ mod tests {
         let (mut txs, mut rxs) = tuple_lanes(2, 1, 8);
         let mut rx = rxs.remove(0);
         let chunk: Vec<Msg> = (0..3).map(|i| Msg { key: i, emit_ns: 0, ts: 0 }).collect();
-        assert!(txs[0][0].send(chunk.clone()));
-        assert!(txs[1][0].send(chunk.clone()));
+        assert!(txs[0][0].send(chunk.clone()).is_ok());
+        assert!(txs[1][0].send(chunk.clone()).is_ok());
         let mut got = 0;
         for _ in 0..2 {
             match rx.recv(None) {
@@ -174,15 +192,18 @@ mod tests {
     fn send_fails_once_the_worker_is_gone() {
         let (mut txs, rxs) = tuple_lanes(1, 1, 4);
         drop(rxs);
-        assert!(!txs[0][0].send(vec![Msg { key: 1, emit_ns: 0, ts: 0 }]));
+        assert!(matches!(
+            txs[0][0].send(vec![Msg { key: 1, emit_ns: 0, ts: 0 }]),
+            Err(LaneError::Closed)
+        ));
     }
 
     #[test]
     fn flush_lanes_close_when_all_workers_drop() {
         let (mut txs, mut rxs) = flush_lanes(2, 1);
         let flush = FlushMsg { worker: 0, emit_ns: 1, watermark: 2, panes: vec![] };
-        assert!(txs[0][0].send(flush.clone()));
-        assert!(txs[1][0].send(flush));
+        assert!(txs[0][0].send(flush.clone()).is_ok());
+        assert!(txs[1][0].send(flush).is_ok());
         drop(txs);
         let mut rx = rxs.remove(0);
         assert!(rx.recv().is_some());

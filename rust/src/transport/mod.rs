@@ -34,7 +34,61 @@ pub mod wire;
 pub use wire::{FlushMsg, Frame, Msg, WireError};
 
 use std::fmt;
+use std::io;
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Why a lane send failed. Socket lanes surface the underlying I/O or
+/// wire-decode failure; loopback lanes only ever report [`Closed`]
+/// (the peer hung up). Senders treat every variant the same way —
+/// stop streaming to that peer — but the variant carried makes deploy
+/// failures diagnosable instead of a bare `false`.
+///
+/// [`Closed`]: LaneError::Closed
+#[derive(Debug)]
+pub enum LaneError {
+    /// The socket write or read failed at the OS level.
+    Io(io::Error),
+    /// The peer sent bytes that do not decode as a frame.
+    Wire(WireError),
+    /// The peer closed its end of the lane (clean shutdown or drop).
+    Closed,
+    /// The peer sent a well-formed frame that this lane never carries
+    /// (e.g. a `Data` frame arriving on a sender's credit channel).
+    Protocol(&'static str),
+}
+
+impl fmt::Display for LaneError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LaneError::Io(e) => write!(f, "lane i/o error: {e}"),
+            LaneError::Wire(e) => write!(f, "lane wire error: {e}"),
+            LaneError::Closed => f.write_str("lane closed by peer"),
+            LaneError::Protocol(what) => write!(f, "lane protocol violation: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for LaneError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LaneError::Io(e) => Some(e),
+            LaneError::Wire(e) => Some(e),
+            LaneError::Closed | LaneError::Protocol(_) => None,
+        }
+    }
+}
+
+impl From<io::Error> for LaneError {
+    fn from(e: io::Error) -> LaneError {
+        LaneError::Io(e)
+    }
+}
+
+impl From<WireError> for LaneError {
+    fn from(e: WireError) -> LaneError {
+        LaneError::Wire(e)
+    }
+}
 
 /// Which lane implementation carries source→worker and worker→shard
 /// traffic.
@@ -134,9 +188,9 @@ pub enum TupleRecv {
 /// Source-side tuple lane endpoint (source → worker).
 pub trait TupleTx: Send {
     /// Blocking, credit-gated send. Blocks while the peer's credit
-    /// window is exhausted; returns `false` when the receiver is gone
-    /// (the source should stop streaming to it).
-    fn send(&mut self, chunk: Vec<Msg>) -> bool;
+    /// window is exhausted; errs when the receiver is gone or the
+    /// lane broke (the source should stop streaming to it).
+    fn send(&mut self, chunk: Vec<Msg>) -> Result<(), LaneError>;
 
     /// Signal end-of-stream (socket lanes write an `Eof` frame;
     /// loopback lanes rely on channel drop).
@@ -156,8 +210,8 @@ pub trait TupleRx: Send {
 /// Worker-side flush lane endpoint (worker → shard). Flush traffic is
 /// low-rate (bounded by the flush cadence) and rides uncredited.
 pub trait FlushTx: Send {
-    /// Send one flush batch; `false` when the shard is gone.
-    fn send(&mut self, msg: FlushMsg) -> bool;
+    /// Send one flush batch; errs when the shard is gone.
+    fn send(&mut self, msg: FlushMsg) -> Result<(), LaneError>;
 }
 
 /// Shard-side flush lane endpoint (every worker merged).

@@ -15,7 +15,7 @@
 //! timely-dataflow's per-peer recv threads.
 
 use super::wire::{self, FlushMsg, Frame, Msg, WireError};
-use super::{FlushRx, FlushTx, TransportKind, TupleRecv, TupleRx, TupleTx};
+use super::{FlushRx, FlushTx, LaneError, TransportKind, TupleRecv, TupleRx, TupleTx};
 use crate::metrics::WireLedger;
 use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -232,21 +232,35 @@ impl SocketTupleTx {
 }
 
 impl TupleTx for SocketTupleTx {
-    fn send(&mut self, chunk: Vec<Msg>) -> bool {
+    fn send(&mut self, chunk: Vec<Msg>) -> Result<(), LaneError> {
         if self.closed {
-            return false;
+            return Err(LaneError::Closed);
         }
         if chunk.is_empty() {
-            return true;
+            return Ok(());
         }
         // window exhausted: block on the upstream credit channel
         // until the worker acknowledges enough processed tuples
         while self.credit < chunk.len() {
             match wire::read_frame(&mut self.conn, &mut self.scratch) {
                 Ok(Some(Frame::Credit(n))) => self.credit += n as usize,
-                _ => {
+                // the worker hung up before granting enough credit —
+                // clean close either way, no more tuples can be sent
+                Ok(Some(Frame::Eof)) | Ok(None) => {
                     self.closed = true;
-                    return false;
+                    return Err(LaneError::Closed);
+                }
+                // only Credit ever travels worker→source on this
+                // stream; anything else is a peer bug
+                Ok(Some(
+                    Frame::Data(_) | Frame::Flush(_) | Frame::Hello { .. } | Frame::Done(_),
+                )) => {
+                    self.closed = true;
+                    return Err(LaneError::Protocol("non-credit frame on credit channel"));
+                }
+                Err(e) => {
+                    self.closed = true;
+                    return Err(LaneError::Wire(e));
                 }
             }
         }
@@ -257,11 +271,11 @@ impl TupleTx for SocketTupleTx {
         self.ledger
             .record_out(self.buf.len() as u64, chunk.len() as u64, encode_ns);
         self.credit -= chunk.len();
-        if self.conn.write_all(&self.buf).is_err() {
+        if let Err(e) = self.conn.write_all(&self.buf) {
             self.closed = true;
-            return false;
+            return Err(LaneError::Io(e));
         }
-        true
+        Ok(())
     }
 
     fn close(&mut self) {
@@ -313,9 +327,17 @@ impl SocketTupleRx {
                                 break;
                             }
                         }
-                        // Eof frame, socket close, or any error all
-                        // end this source's stream
-                        _ => break,
+                        // Eof frame or clean socket close ends this
+                        // source's stream
+                        Ok(Some(Frame::Eof)) | Ok(None) => break,
+                        // frames that never travel source→worker: the
+                        // peer is confused — stop reading from it
+                        Ok(Some(
+                            Frame::Flush(_) | Frame::Credit(_) | Frame::Hello { .. }
+                            | Frame::Done(_),
+                        )) => break,
+                        // decode or i/o failure: the stream is dead
+                        Err(_) => break,
                     }
                 }
             });
@@ -393,7 +415,7 @@ impl SocketFlushTx {
 }
 
 impl FlushTx for SocketFlushTx {
-    fn send(&mut self, msg: FlushMsg) -> bool {
+    fn send(&mut self, msg: FlushMsg) -> Result<(), LaneError> {
         let t0 = Instant::now();
         self.buf.clear();
         wire::encode_flush(&msg, &mut self.buf);
@@ -401,7 +423,7 @@ impl FlushTx for SocketFlushTx {
         let tuples: usize = msg.panes.iter().map(|(_, e)| e.len()).sum();
         self.ledger
             .record_out(self.buf.len() as u64, tuples as u64, encode_ns);
-        self.conn.write_all(&self.buf).is_ok()
+        self.conn.write_all(&self.buf).map_err(LaneError::Io)
     }
 }
 
@@ -413,7 +435,7 @@ pub struct SocketFlushRx {
 impl SocketFlushRx {
     /// Build from accepted per-worker streams, spawning one reader
     /// thread per stream.
-    pub fn new(conns: Vec<Duplex>, ledger: &Arc<WireLedger>) -> SocketFlushRx {
+    pub fn new(conns: Vec<Duplex>, ledger: &Arc<WireLedger>) -> io::Result<SocketFlushRx> {
         let (tx, rx) = channel::<FlushMsg>();
         for conn in conns {
             let tx = tx.clone();
@@ -428,12 +450,20 @@ impl SocketFlushRx {
                                 break;
                             }
                         }
-                        _ => break,
+                        // Eof frame or clean close ends this worker's
+                        // flush stream
+                        Ok(Some(Frame::Eof)) | Ok(None) => break,
+                        // frames that never travel worker→shard
+                        Ok(Some(
+                            Frame::Data(_) | Frame::Credit(_) | Frame::Hello { .. }
+                            | Frame::Done(_),
+                        )) => break,
+                        Err(_) => break,
                     }
                 }
             });
         }
-        SocketFlushRx { rx }
+        Ok(SocketFlushRx { rx })
     }
 }
 
@@ -488,7 +518,7 @@ pub fn flush_mesh(
             accepted.push(listener.accept()?);
             w.push(Box::new(SocketFlushTx::new(client, Arc::clone(ledger))));
         }
-        rxs.push(Box::new(SocketFlushRx::new(accepted, ledger)));
+        rxs.push(Box::new(SocketFlushRx::new(accepted, ledger)?));
     }
     Ok((txs, rxs))
 }
@@ -535,7 +565,7 @@ mod tests {
             for i in 0..30u64 {
                 let chunk: Vec<Msg> =
                     (0..3).map(|j| Msg { key: i * 3 + j, emit_ns: 0, ts: 0 }).collect();
-                assert!(tx.send(chunk), "send {i} failed for {kind}");
+                assert!(tx.send(chunk).is_ok(), "send {i} failed for {kind}");
             }
             tx.close();
             drop(txs);
@@ -558,8 +588,8 @@ mod tests {
                 watermark: 10,
                 panes: vec![(0, vec![(7, 3)])],
             };
-            assert!(txs[0][0].send(flush.clone()));
-            assert!(txs[1][0].send(flush.clone()));
+            assert!(txs[0][0].send(flush.clone()).is_ok());
+            assert!(txs[1][0].send(flush.clone()).is_ok());
             drop(txs);
             let mut rx = rxs.pop().unwrap();
             let a = rx.recv().expect("first flush");

@@ -274,8 +274,8 @@ impl<'a> Reader<'a> {
 
     /// Consume a little-endian u64.
     pub fn u64(&mut self) -> Result<u64, WireError> {
-        let b: [u8; 8] = self.take(8)?.try_into().expect("len checked");
-        Ok(u64::from_le_bytes(b))
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 
     /// Consume an f64 stored as its little-endian bit pattern.
@@ -408,7 +408,9 @@ pub fn frame_tuples(frame: &Frame) -> usize {
     match frame {
         Frame::Data(msgs) => msgs.len(),
         Frame::Flush(f) => f.panes.iter().map(|(_, entries)| entries.len()).sum(),
-        _ => 0,
+        // control frames carry no stream tuples; a new frame kind must
+        // decide its tuple accounting here explicitly
+        Frame::Credit(_) | Frame::Hello { .. } | Frame::Eof | Frame::Done(_) => 0,
     }
 }
 

@@ -1,0 +1,73 @@
+//! Self-test for the `fish lint` rule engine: the seeded regressions
+//! in `rust/tests/fixtures/lint/` must be flagged, and the real tree
+//! under `rust/src/` must scan clean (zero findings; every waived
+//! map-iteration site is a documented `// lint: sorted-ok` escape).
+//!
+//! The second half is the repo's own lint gate running inside
+//! `cargo test` — CI additionally runs `fish lint` as a standalone
+//! blocking job, but a plain test run already refuses new findings.
+
+use std::path::PathBuf;
+
+use fish::analysis::lint_tree;
+
+fn repo_path(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+#[test]
+fn seeded_regressions_are_flagged() {
+    let report = lint_tree(&repo_path("rust/tests/fixtures/lint")).expect("scan fixtures");
+    assert_eq!(report.files_scanned, 2, "fixture set changed without updating this test");
+    assert_eq!(report.suppressions, 0);
+    assert_eq!(
+        report.findings.len(),
+        2,
+        "expected exactly the two seeded findings, got: {:#?}",
+        report.findings
+    );
+    // findings are sorted by (file, line, rule)
+    let flush = &report.findings[0];
+    assert_eq!(flush.rule, "unsorted-map-iteration");
+    assert_eq!(flush.file, "aggregate/bad_flush.rs");
+    assert_eq!(flush.line, 16);
+    assert!(flush.snippet.contains("drain"), "{flush:?}");
+    let credit = &report.findings[1];
+    assert_eq!(credit.rule, "relaxed-credit-atomic");
+    assert_eq!(credit.file, "transport/bad_credit.rs");
+    assert_eq!(credit.line, 15);
+    assert!(credit.snippet.contains("Ordering::Relaxed"), "{credit:?}");
+}
+
+#[test]
+fn real_tree_scans_clean() {
+    let report = lint_tree(&repo_path("rust/src")).expect("scan rust/src");
+    assert!(report.files_scanned > 30, "scanned only {} files — wrong root?", report.files_scanned);
+    assert!(
+        report.findings.is_empty(),
+        "lint findings in the real tree:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| format!("  {f}\n      {}", f.snippet))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    // the documented `// lint: sorted-ok` sites: PartialAgg::flush,
+    // windowed all-time + rolling snapshots, ShardedAgg::into_sorted,
+    // sketch-window top_count. A new suppression needs a justification
+    // comment at the site AND a bump here.
+    assert_eq!(
+        report.suppressions, 5,
+        "suppression count changed — audit the new/removed `lint: sorted-ok` site"
+    );
+}
+
+#[test]
+fn json_report_round_trips_the_counts() {
+    let report = lint_tree(&repo_path("rust/tests/fixtures/lint")).expect("scan fixtures");
+    let json = report.to_json();
+    assert!(json.contains("\"files_scanned\":2"), "{json}");
+    assert!(json.contains("\"rule\":\"unsorted-map-iteration\""), "{json}");
+    assert!(json.contains("\"rule\":\"relaxed-credit-atomic\""), "{json}");
+}

@@ -1,0 +1,18 @@
+//! Seeded regression for `fish lint`: an unsorted `HashMap::drain`
+//! on a flush path — the exact bug class that made gather rankings
+//! vary between identically-seeded runs (see `docs/DETERMINISM.md`).
+//! This file is a lint fixture, never compiled; the self-test in
+//! `rust/tests/analysis_lint.rs` asserts the engine flags line 16.
+
+use std::collections::HashMap;
+
+pub struct BadFlush {
+    state: HashMap<u64, u64>,
+}
+
+impl BadFlush {
+    /// Drains in hasher order — nondeterministic across runs.
+    pub fn flush(&mut self) -> Vec<(u64, u64)> {
+        self.state.drain().collect()
+    }
+}

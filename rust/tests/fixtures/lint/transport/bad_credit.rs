@@ -1,0 +1,17 @@
+//! Seeded regression for `fish lint`: a credit-protocol atomic
+//! updated with `Ordering::Relaxed` — the grant could reorder past
+//! the work it accounts for (see `docs/DETERMINISM.md`). This file
+//! is a lint fixture, never compiled; the self-test in
+//! `rust/tests/analysis_lint.rs` asserts the engine flags line 15.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub struct BadCredit {
+    credits: AtomicUsize,
+}
+
+impl BadCredit {
+    pub fn grant(&self, n: usize) {
+        self.credits.fetch_add(n, Ordering::Relaxed);
+    }
+}

@@ -97,26 +97,65 @@ fn randomized_frames_round_trip() {
 
 #[test]
 fn truncated_frames_error_cleanly() {
+    // one encoded specimen of EVERY frame kind — a new Frame variant
+    // without an entry here fails the count check below
     let mut rng = Rng::new(7);
+    let mut specimens: Vec<(&str, Vec<u8>)> = Vec::new();
     let mut buf = Vec::new();
     wire::encode_data(&random_msgs(&mut rng, 9), &mut buf);
-    // every strict prefix is an error — never a panic, never a bogus frame
-    for cut in 0..buf.len() {
-        match wire::decode_frame(&buf[..cut]) {
-            Err(WireError::Truncated) => {}
-            other => panic!("prefix {cut}: expected Truncated, got {other:?}"),
-        }
-    }
-    // a Reader over a stream that ends mid-frame reports Truncated too
-    let mut cursor = std::io::Cursor::new(&buf[..buf.len() - 1]);
+    specimens.push(("data", buf));
+    let mut buf = Vec::new();
+    wire::encode_flush(&random_flush(&mut rng), &mut buf);
+    specimens.push(("flush", buf));
+    let mut buf = Vec::new();
+    wire::encode_flush(
+        &FlushMsg { worker: 1, emit_ns: 9, watermark: u64::MAX, panes: Vec::new() },
+        &mut buf,
+    );
+    specimens.push(("flush-keepalive", buf));
+    let mut buf = Vec::new();
+    wire::encode_credit(123, &mut buf);
+    specimens.push(("credit", buf));
+    let mut buf = Vec::new();
+    wire::encode_hello(1, 7, "tcp:127.0.0.1:4099", &mut buf);
+    specimens.push(("hello", buf));
+    let mut buf = Vec::new();
+    wire::encode_eof(&mut buf);
+    specimens.push(("eof", buf));
+    let mut buf = Vec::new();
+    wire::encode_done(&[1, 2, 3, 4], &mut buf);
+    specimens.push(("done", buf));
+    assert_eq!(specimens.len(), 7, "cover every frame kind (incl. the pane-less flush)");
+
     let mut scratch = Vec::new();
-    assert!(matches!(
-        wire::read_frame(&mut cursor, &mut scratch),
-        Err(WireError::Truncated)
-    ));
-    // while a clean end-of-stream on a frame boundary is None, not an error
-    let mut cursor = std::io::Cursor::new(&buf[..0]);
-    assert!(matches!(wire::read_frame(&mut cursor, &mut scratch), Ok(None)));
+    for (kind, buf) in &specimens {
+        // every strict prefix is an error — never a panic, never a
+        // bogus frame, never a silent partial decode
+        for cut in 0..buf.len() {
+            match wire::decode_frame(&buf[..cut]) {
+                Err(WireError::Truncated) => {}
+                other => panic!("{kind} prefix {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+        // a Reader over a stream that ends mid-frame reports Truncated
+        // at every cut past the empty prefix…
+        for cut in 1..buf.len() {
+            let mut cursor = std::io::Cursor::new(&buf[..cut]);
+            match wire::read_frame(&mut cursor, &mut scratch) {
+                Err(WireError::Truncated) => {}
+                other => panic!("{kind} stream cut {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+        // …while a clean end-of-stream on a frame boundary is None
+        let mut cursor = std::io::Cursor::new(&buf[..0]);
+        assert!(
+            matches!(wire::read_frame(&mut cursor, &mut scratch), Ok(None)),
+            "{kind}: empty stream must be a clean EOF"
+        );
+        // and the untruncated frame still decodes, consuming every byte
+        let (_, used) = wire::decode_frame(buf).expect(kind);
+        assert_eq!(used, buf.len(), "{kind}: trailing bytes after decode");
+    }
 }
 
 #[test]
@@ -166,6 +205,10 @@ fn run_transport(trace: &Arc<fish::workload::Trace>, transport: &str) -> RtResul
         .run()
 }
 
+// Miri has no sockets or real threads-with-time; the codec tests above
+// are the Miri target, the pipeline tests run under the native suite
+// and TSan.
+#[cfg_attr(miri, ignore)]
 #[test]
 fn loopback_uds_tcp_produce_identical_results() {
     let mut gen = by_name("zf", 20_000, 1.5, 11);
@@ -196,6 +239,7 @@ fn loopback_uds_tcp_produce_identical_results() {
     }
 }
 
+#[cfg_attr(miri, ignore)]
 #[test]
 fn tiny_credit_windows_still_drain_over_tcp() {
     // queue_depth 2 forces constant credit-frame ping-pong; the run

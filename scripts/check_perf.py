@@ -3,6 +3,7 @@
 
 Usage:
     check_perf.py CURRENT_JSON BASELINE_JSON [--threshold 0.25]
+    check_perf.py --lint LINT_JSON --lint-baseline scripts/lint_baseline.json
 
 CURRENT_JSON is the `BENCH_hotpath.json` a `cargo bench --bench hotpath`
 run just emitted; BASELINE_JSON is `benches/baselines/hotpath_smoke.json`.
@@ -25,6 +26,13 @@ must not rise more than AGG-THRESHOLD above the baseline ratio. Again
 a same-machine ratio, so runner hardware cancels out; only the
 two-stage path getting slower relative to its own stage one fails the
 gate.
+
+With --lint, the gate compares `fish lint --json` output against the
+checked-in findings baseline instead: any (rule, file) pair present in
+the current report but absent from the baseline fails the gate. The
+baseline is empty — the tree lints clean — so in practice any new
+finding fails; the indirection exists so a finding can be temporarily
+baselined during a multi-PR refactor without disabling the job.
 
 Exit status: 0 = within threshold, 1 = regression, 2 = bad input.
 """
@@ -59,17 +67,53 @@ def index_agg(doc):
     return {row["op"]: row for row in doc.get("agg_results") or []}
 
 
+def check_lint(current_path, baseline_path):
+    """Fail on any (rule, file) finding not present in the baseline."""
+    current = load(current_path)
+    baseline = load(baseline_path)
+    if not isinstance(current.get("findings"), list):
+        print(f"error: {current_path} has no findings[]", file=sys.stderr)
+        sys.exit(2)
+    baselined = {(row["rule"], row["file"])
+                 for row in baseline.get("findings") or []}
+    new = [row for row in current["findings"]
+           if (row["rule"], row["file"]) not in baselined]
+    scanned = current.get("files_scanned", "?")
+    suppressed = current.get("suppressions", "?")
+    if new:
+        print("lint gate FAILED: findings not in the baseline:", file=sys.stderr)
+        for row in new:
+            print(f"  - {row['file']}:{row.get('line', '?')}: "
+                  f"[{row['rule']}] {row.get('message', '')}", file=sys.stderr)
+        sys.exit(1)
+    print(f"lint gate ok: {scanned} files scanned, "
+          f"{len(current['findings'])} finding(s) all baselined, "
+          f"{suppressed} documented suppression(s)")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("current")
-    ap.add_argument("baseline")
+    ap.add_argument("current", nargs="?")
+    ap.add_argument("baseline", nargs="?")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max allowed relative speedup regression (default 0.25)")
     ap.add_argument("--agg-threshold", type=float, default=1.0,
                     help="max allowed relative rise of an aggregation-path "
                          "ratio_vs_observe (default 1.0 = 100%%; these "
                          "micro-ratios are noisier than routing speedups)")
+    ap.add_argument("--lint", metavar="LINT_JSON",
+                    help="gate `fish lint --json` output instead of perf")
+    ap.add_argument("--lint-baseline", metavar="BASELINE_JSON",
+                    default="scripts/lint_baseline.json",
+                    help="checked-in lint findings baseline "
+                         "(default scripts/lint_baseline.json)")
     args = ap.parse_args()
+
+    if args.lint:
+        check_lint(args.lint, args.lint_baseline)
+        return
+    if not args.current or not args.baseline:
+        ap.error("CURRENT_JSON and BASELINE_JSON are required without --lint")
 
     current_doc = load(args.current)
     baseline_doc = load(args.baseline)
