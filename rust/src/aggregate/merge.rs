@@ -16,7 +16,7 @@
 use super::combiner::Combiner;
 use crate::metrics::AggStats;
 use crate::Key;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::time::Instant;
 
 /// Wire size of a key on the flush path.
@@ -145,6 +145,131 @@ impl<C: Combiner> MergeStage<C> {
         v.sort_unstable_by_key(|&(k, _)| k);
         (v, stats)
     }
+
+    /// Snapshot export: the merged map as `(key, acc)` ascending by key
+    /// *without* consuming the stage — the crash-recovery snapshot path,
+    /// taken periodically while the stage keeps absorbing.
+    pub fn sorted(&self) -> Vec<(Key, C::Acc)> {
+        // sorted by key on the next line. lint: sorted-ok
+        let mut v: Vec<(Key, C::Acc)> =
+            self.merged.iter().map(|(&k, a)| (k, a.clone())).collect();
+        v.sort_unstable_by_key(|&(k, _)| k);
+        v
+    }
+
+    /// Rebuild a stage from a snapshot (`sorted` export + cost ledger).
+    /// Restoring the ledger too keeps the deterministic stat fields
+    /// (flushes/messages/bytes) of a recovered run equal to a run that
+    /// never crashed.
+    pub fn from_parts(combiner: C, entries: Vec<(Key, C::Acc)>, stats: AggStats) -> Self {
+        MergeStage { combiner, merged: entries.into_iter().collect(), stats }
+    }
+}
+
+/// What [`FlushSequencer::offer`] decided about one flush batch.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SeqDecision<T> {
+    /// Next-in-sequence: absorb the offered batch, then every parked
+    /// successor it unblocked, in the order returned.
+    Accept(Vec<T>),
+    /// A batch with this sequence number was already accepted — a
+    /// replay (a worker resending its flush log after a shard
+    /// restart). Drop it; absorbing again would double count.
+    Replayed,
+    /// Ahead of a sequence gap: parked until the gap fills.
+    Buffered,
+}
+
+/// Per-worker flush-stream sequencing at a merge shard: the dedup /
+/// reorder half of the exactly-once guarantee (docs/RECOVERY.md).
+///
+/// Every worker numbers the flush batches it sends to each shard with
+/// a per-(worker, shard) monotonic `seq` (see
+/// [`crate::transport::FlushMsg`]). The shard offers each arriving
+/// batch here before absorbing it: exactly `seq == expected` is
+/// accepted (advancing `expected`), `seq > expected` is buffered until
+/// the gap fills (cannot happen on one healthy FIFO stream, but
+/// replays interleaved with live traffic after a reconnect can race),
+/// and `seq < expected` is dropped as a replay. Absorb-side state plus
+/// the `expected` vector are snapshotted together, so a restored shard
+/// answers `Resume` with exactly the first seq it has not absorbed.
+pub struct FlushSequencer<T> {
+    expected: Vec<u64>,
+    ahead: Vec<BTreeMap<u64, T>>,
+}
+
+impl<T> FlushSequencer<T> {
+    /// Fresh streams from `n_workers` workers, all expecting seq 0.
+    pub fn new(n_workers: usize) -> Self {
+        Self::restore(vec![0; n_workers])
+    }
+
+    /// Rebuild from a snapshot's per-worker expected-seq vector.
+    pub fn restore(expected: Vec<u64>) -> Self {
+        let n = expected.len();
+        FlushSequencer { expected, ahead: (0..n).map(|_| BTreeMap::new()).collect() }
+    }
+
+    /// Next sequence number expected from `worker`.
+    pub fn expected(&self, worker: usize) -> u64 {
+        self.expected[worker]
+    }
+
+    /// The full per-worker expected-seq vector (snapshot payload).
+    pub fn expected_all(&self) -> &[u64] {
+        &self.expected
+    }
+
+    /// Batches currently parked ahead of a gap, across all workers.
+    pub fn buffered(&self) -> usize {
+        self.ahead.iter().map(|m| m.len()).sum()
+    }
+
+    /// Borrow every parked batch as `(worker, seq, &batch)`, ascending
+    /// by (worker, seq) — the non-destructive view a periodic snapshot
+    /// serializes while the sequencer keeps running.
+    pub fn parked(&self) -> Vec<(usize, u64, &T)> {
+        let mut out = Vec::new();
+        for (w, m) in self.ahead.iter().enumerate() {
+            for (seq, msg) in m {
+                out.push((w, *seq, msg));
+            }
+        }
+        out
+    }
+
+    /// Drain every parked batch as `(worker, seq, batch)`, ascending by
+    /// (worker, seq) — the snapshot payload for in-flight reorder state.
+    pub fn drain_buffered(&mut self) -> Vec<(usize, u64, T)> {
+        let mut out = Vec::new();
+        for (w, m) in self.ahead.iter_mut().enumerate() {
+            for (seq, msg) in std::mem::take(m) {
+                out.push((w, seq, msg));
+            }
+        }
+        out
+    }
+
+    /// Classify one arriving batch from `worker` carrying `seq`.
+    pub fn offer(&mut self, worker: usize, seq: u64, msg: T) -> SeqDecision<T> {
+        let exp = self.expected[worker];
+        if seq < exp {
+            return SeqDecision::Replayed;
+        }
+        if seq > exp {
+            // a replayed duplicate of an already-parked seq just
+            // overwrites its twin — same payload, absorbed once either way
+            self.ahead[worker].insert(seq, msg);
+            return SeqDecision::Buffered;
+        }
+        self.expected[worker] = exp + 1;
+        let mut out = vec![msg];
+        while let Some(next) = self.ahead[worker].remove(&self.expected[worker]) {
+            self.expected[worker] += 1;
+            out.push(next);
+        }
+        SeqDecision::Accept(out)
+    }
 }
 
 /// Exact top-k over a merged count vector: highest count first, ties
@@ -267,6 +392,43 @@ mod tests {
         assert_eq!(m.stats().flushes, 0);
         assert_eq!(m.stats().messages, 0);
         assert!(m.is_empty());
+    }
+
+    #[test]
+    fn sequencer_accepts_next_buffers_ahead_drops_replayed() {
+        let mut s: FlushSequencer<&str> = FlushSequencer::new(2);
+        assert_eq!(s.offer(0, 0, "a"), SeqDecision::Accept(vec!["a"]));
+        // ahead of the gap: parked, not absorbed
+        assert_eq!(s.offer(0, 2, "c"), SeqDecision::Buffered);
+        assert_eq!(s.buffered(), 1);
+        // the gap fills: both come back, in order
+        assert_eq!(s.offer(0, 1, "b"), SeqDecision::Accept(vec!["b", "c"]));
+        assert_eq!(s.expected(0), 3);
+        assert_eq!(s.buffered(), 0);
+        // replays of anything already accepted are dropped
+        for seq in 0..3 {
+            assert_eq!(s.offer(0, seq, "dup"), SeqDecision::Replayed);
+        }
+        // streams are independent per worker
+        assert_eq!(s.expected(1), 0);
+        assert_eq!(s.offer(1, 0, "x"), SeqDecision::Accept(vec!["x"]));
+        assert_eq!(s.expected_all(), &[3, 1]);
+    }
+
+    #[test]
+    fn sequencer_restores_from_snapshot_vector() {
+        let mut s: FlushSequencer<u32> = FlushSequencer::restore(vec![5, 0]);
+        // a worker replaying its whole log after the shard restored:
+        // everything below the snapshot point is deduped, the rest flows
+        for seq in 0..5 {
+            assert_eq!(s.offer(0, seq, seq as u32), SeqDecision::Replayed);
+        }
+        assert_eq!(s.offer(0, 5, 5), SeqDecision::Accept(vec![5]));
+        // parked batches drain for snapshotting, ascending by seq
+        assert_eq!(s.offer(1, 2, 92), SeqDecision::Buffered);
+        assert_eq!(s.offer(1, 1, 91), SeqDecision::Buffered);
+        assert_eq!(s.drain_buffered(), vec![(1, 1, 91), (1, 2, 92)]);
+        assert_eq!(s.buffered(), 0);
     }
 
     #[test]

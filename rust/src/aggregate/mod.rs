@@ -47,9 +47,9 @@ pub mod shard;
 pub mod window;
 
 pub use combiner::{Combiner, Count, Sum, TopKSketch};
-pub use merge::{top_k, MergeStage, PartialAgg};
+pub use merge::{top_k, FlushSequencer, MergeStage, PartialAgg, SeqDecision};
 pub use shard::{GatherResult, ShardRouter, ShardedMerge, TopKGather, DEFAULT_GATHER_CAPACITY};
 pub use window::{
-    assemble_windows, next_boundary, sliding, window_of, WindowId, WindowResult, WindowSnapshot,
-    WindowedMerge, WindowedOutput, WindowedPartial,
+    assemble_windows, next_boundary, sliding, window_of, MergeSnapshot, PaneState, WindowId,
+    WindowResult, WindowSnapshot, WindowedMerge, WindowedOutput, WindowedPartial,
 };

@@ -240,6 +240,56 @@ struct WindowPane<C: Combiner> {
     sketch: TopKSketch,
 }
 
+/// One pane's serializable state inside a [`MergeSnapshot`]: exact
+/// counts ascending by key, the pane's merge-cost ledger (so a restored
+/// run's deterministic stat fields match a run that never crashed), and
+/// the pane sketch's parts ([`TopKSketch::from_parts`] shape, entries
+/// ascending by key so snapshot bytes are deterministic).
+#[derive(Debug, Clone)]
+pub struct PaneState {
+    /// Pane id.
+    pub window: WindowId,
+    /// Exact `(key, acc)`, ascending by key.
+    pub counts: Vec<(Key, u64)>,
+    /// The pane's merge ledger (default for retired panes, whose ledger
+    /// already folded into the shard-wide retired ledger).
+    pub stats: AggStats,
+    /// Tracked sketch entries, ascending by key.
+    pub sketch_entries: Vec<(Key, f64)>,
+    /// The sketch's inherited merge error.
+    pub sketch_error: f64,
+}
+
+/// Everything a [`WindowedMerge`] shard must persist to come back
+/// byte-identical after a crash: watermark, open panes, already-retired
+/// panes, and both stat ledgers. Captured by [`WindowedMerge::snapshot`]
+/// without consuming the shard, reinstated by
+/// [`WindowedMerge::restore`]; serialized by
+/// [`crate::state::snapshot`]. Dedup/reorder state (the per-worker
+/// expected-seq vector) travels next to this in the full shard
+/// snapshot — see docs/RECOVERY.md.
+#[derive(Debug, Clone, Default)]
+pub struct MergeSnapshot {
+    /// Highest watermark the shard advanced to.
+    pub watermark: u64,
+    /// Open panes, ascending by pane id.
+    pub open: Vec<PaneState>,
+    /// Retired panes, in retirement order (`stats` defaulted).
+    pub retired: Vec<PaneState>,
+    /// The shard-wide ledger folded out of retired panes.
+    pub retired_stats: AggStats,
+    /// Pane-lifecycle ledger.
+    pub window_stats: WindowStats,
+}
+
+/// A [`TopKSketch`]'s parts with deterministic entry order.
+fn sketch_parts(sketch: &TopKSketch) -> (Vec<(Key, f64)>, f64) {
+    // sorted by key on the next line. lint: sorted-ok
+    let mut entries: Vec<(Key, f64)> = sketch.tracked().collect();
+    entries.sort_unstable_by_key(|&(k, _)| k);
+    (entries, sketch.merged_error())
+}
+
 /// Stage two with panes: one shard of the windowed merge fabric. Each
 /// open pane holds a [`MergeStage`] over the shard's key range plus a
 /// bounded [`TopKSketch`]; [`WindowedMerge::advance`] retires panes the
@@ -375,6 +425,89 @@ impl<C: Combiner<Acc = u64> + Clone> WindowedMerge<C> {
     /// Pane-lifecycle ledger so far.
     pub fn window_stats(&self) -> WindowStats {
         self.stats
+    }
+
+    /// Capture the shard's full windowed-merge state without consuming
+    /// it — the periodic crash-recovery snapshot. Everything absorb
+    /// order can influence is included, so [`WindowedMerge::restore`]
+    /// followed by replaying the not-yet-absorbed flush batches
+    /// converges byte-identically with a shard that never crashed.
+    pub fn snapshot(&self) -> MergeSnapshot {
+        let open = self
+            .open
+            .iter()
+            .map(|(&window, pane)| {
+                let (sketch_entries, sketch_error) = sketch_parts(&pane.sketch);
+                PaneState {
+                    window,
+                    counts: pane.merge.sorted(),
+                    stats: *pane.merge.stats(),
+                    sketch_entries,
+                    sketch_error,
+                }
+            })
+            .collect();
+        let retired = self
+            .retired
+            .iter()
+            .map(|r| {
+                let (sketch_entries, sketch_error) = sketch_parts(&r.sketch);
+                PaneState {
+                    window: r.window,
+                    counts: r.counts.clone(),
+                    stats: AggStats::default(),
+                    sketch_entries,
+                    sketch_error,
+                }
+            })
+            .collect();
+        MergeSnapshot {
+            watermark: self.watermark,
+            open,
+            retired,
+            retired_stats: self.retired_stats,
+            window_stats: self.stats,
+        }
+    }
+
+    /// Reinstate a [`MergeSnapshot`] into this (freshly built) shard,
+    /// discarding whatever it held. The shard must be configured as the
+    /// snapshotted one was (same `window_ns`, lateness and sketch
+    /// capacity — all config-derived, so a respawned `fish __shard`
+    /// satisfies this by construction).
+    pub fn restore(&mut self, snap: MergeSnapshot) {
+        self.watermark = snap.watermark;
+        self.stats = snap.window_stats;
+        self.retired_stats = snap.retired_stats;
+        self.open.clear();
+        self.open_entries = 0;
+        for p in snap.open {
+            self.open_entries += p.counts.len();
+            self.open.insert(
+                p.window,
+                WindowPane {
+                    merge: MergeStage::from_parts(self.combiner.clone(), p.counts, p.stats),
+                    sketch: TopKSketch::from_parts(
+                        self.sketch_capacity,
+                        &p.sketch_entries,
+                        p.sketch_error,
+                    ),
+                },
+            );
+        }
+        self.retired = snap
+            .retired
+            .into_iter()
+            .map(|p| WindowResult {
+                window: p.window,
+                counts: p.counts,
+                sketch: TopKSketch::from_parts(
+                    self.sketch_capacity,
+                    &p.sketch_entries,
+                    p.sketch_error,
+                ),
+            })
+            .collect();
     }
 
     fn retire(&mut self, window: WindowId, pane: WindowPane<C>) {
@@ -776,6 +909,52 @@ mod tests {
         assert_eq!(out.all_time, vec![(1, 5), (2, 2)]);
         assert_eq!(out.stats.flushes, 2);
         assert_eq!(out.stats.messages, 3);
+    }
+
+    /// Crash a shard mid-run: snapshot → fresh shard → restore → replay
+    /// the batches absorbed after the snapshot. Finish output must be
+    /// byte-identical to the shard that never crashed, including the
+    /// deterministic stat fields.
+    #[test]
+    fn snapshot_restore_replay_converges_byte_identically() {
+        let feed: Vec<(WindowId, Vec<(Key, u64)>)> = (0..40u64)
+            .map(|i| (i / 8, vec![(i % 5, i % 3 + 1), (10 + i % 7, 1)]))
+            .collect();
+        let drive = |m: &mut WindowedMerge<Count>, batches: &[(WindowId, Vec<(Key, u64)>)], base: u64| {
+            for (i, (win, sub)) in batches.iter().enumerate() {
+                m.absorb(*win, sub.clone());
+                m.advance((base + i as u64) * 700);
+            }
+        };
+        // reference: no crash
+        let mut reference = WindowedMerge::new(Count, 1_000, 16).with_lateness(500);
+        drive(&mut reference, &feed, 0);
+        let ref_out = reference.finish();
+        // crashed twin: snapshot at batch 25, restore into a fresh
+        // shard, replay the suffix
+        let mut crashed = WindowedMerge::new(Count, 1_000, 16).with_lateness(500);
+        drive(&mut crashed, &feed[..25], 0);
+        let snap = crashed.snapshot();
+        drop(crashed);
+        let mut restored = WindowedMerge::new(Count, 1_000, 16).with_lateness(500);
+        restored.restore(snap);
+        drive(&mut restored, &feed[25..], 25);
+        let out = restored.finish();
+        assert_eq!(out.all_time, ref_out.all_time);
+        assert_eq!(out.windows.len(), ref_out.windows.len());
+        for (a, b) in out.windows.iter().zip(&ref_out.windows) {
+            assert_eq!(a.window, b.window);
+            assert_eq!(a.counts, b.counts, "pane {}", a.window);
+            assert_eq!(a.sketch.top(8), b.sketch.top(8), "pane {}", a.window);
+            assert_eq!(a.sketch.error_bound(), b.sketch.error_bound());
+        }
+        // deterministic stat fields survive the crash
+        assert_eq!(out.stats.flushes, ref_out.stats.flushes);
+        assert_eq!(out.stats.messages, ref_out.stats.messages);
+        assert_eq!(out.stats.bytes, ref_out.stats.bytes);
+        assert_eq!(out.window_stats.panes_opened, ref_out.window_stats.panes_opened);
+        assert_eq!(out.window_stats.panes_retired, ref_out.window_stats.panes_retired);
+        assert_eq!(out.window_stats.max_open_entries, ref_out.window_stats.max_open_entries);
     }
 
     /// Drive the same windowed flush schedule through a 1-shard and an

@@ -10,7 +10,7 @@
 //! | `unwrap-in-io`           | `transport/`, `engine/rt.rs`   | `unwrap()`/`expect()` on I/O paths that must degrade, not panic |
 //! | `relaxed-credit-atomic`  | `transport/`                   | `Ordering::Relaxed` on credit/watermark/ack atomics |
 //! | `raw-clock`              | everywhere but the `Clock` home| `SystemTime::now()` bypassing the shared clock |
-//! | `frame-exhaustive`       | everywhere                     | wire-frame `match`es with a bare `_` arm that would swallow a new frame kind |
+//! | `frame-exhaustive`       | everywhere                     | wire-frame `match`es with a bare `_` arm that would swallow a new frame kind; `FlushMsg` literals that don't name their exactly-once `seq` explicitly |
 //!
 //! The only escape hatch is `// lint: sorted-ok` on (or immediately
 //! above) a flagged line of the map-iteration rule, for sites that
@@ -548,6 +548,106 @@ fn rule_frame_exhaustive(relpath: &str, lines: &[LineInfo]) -> Vec<Finding> {
     findings
 }
 
+/// Rule 5, second face: every `FlushMsg` literal must name its `seq`
+/// field explicitly. A construction that hides it behind `..` (struct
+/// update) ships a silently-defaulted sequence number, and the shard
+/// sequencer will dedup or park the batch — exactly-once breaks
+/// without any error. Same rule id as the `match` face: both guard
+/// the flush frame's contract.
+fn rule_flush_seq(relpath: &str, lines: &[LineInfo]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for (start, info) in lines.iter().enumerate() {
+        if info.in_test {
+            continue;
+        }
+        // find a literal `FlushMsg {` on this line: skip type positions
+        // (declaration, impl header, return type, annotations)
+        let mut at = None;
+        let mut search = 0;
+        while let Some(rel) = find_token(&info.code[search..], "FlushMsg") {
+            let site = search + rel;
+            search = site + "FlushMsg".len();
+            let before = info.code[..site].trim_end();
+            if before.ends_with("->")
+                || trailing_ident(before) == Some("struct")
+                || trailing_ident(before) == Some("impl")
+            {
+                continue;
+            }
+            if info.code[search..].trim_start().starts_with('{') {
+                at = Some(site);
+                break;
+            }
+        }
+        let Some(at) = at else { continue };
+        // walk the literal's braces collecting its body text
+        let mut depth = 0i64;
+        let mut body = String::new();
+        let mut idx = start;
+        let mut from = at;
+        'walk: while idx < lines.len() {
+            for ch in lines[idx].code[from..].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        if depth > 1 {
+                            body.push(ch);
+                        }
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break 'walk;
+                        }
+                        body.push(ch);
+                    }
+                    _ => {
+                        if depth >= 1 {
+                            body.push(ch);
+                        }
+                    }
+                }
+            }
+            body.push(' ');
+            idx += 1;
+            from = 0;
+            if idx >= lines.len() {
+                break;
+            }
+        }
+        if find_token(&body, "seq").is_none() {
+            findings.push(Finding {
+                rule: "frame-exhaustive",
+                file: relpath.to_string(),
+                line: start + 1,
+                message: "`FlushMsg` construction without an explicit `seq` field — a \
+                          defaulted sequence number breaks exactly-once dedup at the \
+                          shard sequencer; name `seq` even when it is 0"
+                    .to_string(),
+                snippet: lines[start].raw.trim().to_string(),
+            });
+        }
+    }
+    findings
+}
+
+/// Byte offset of `word` in `code` as a standalone identifier (not a
+/// substring of a longer one), if present.
+fn find_token(code: &str, word: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(word) {
+        let at = from + rel;
+        from = at + word.len();
+        let before_ok =
+            at == 0 || !is_ident_char(code[..at].chars().next_back().unwrap_or(' '));
+        let after_ok = !code[at + word.len()..].chars().next().is_some_and(is_ident_char);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+    }
+    None
+}
+
 /// `match` as a keyword (not `matches!`, not inside an identifier).
 fn has_match_keyword(code: &str) -> bool {
     let mut from = 0;
@@ -576,6 +676,7 @@ pub fn lint_source(relpath: &str, text: &str) -> (Vec<Finding>, usize) {
     findings.extend(rule_relaxed_credit(relpath, &lines));
     findings.extend(rule_raw_clock(relpath, &lines));
     findings.extend(rule_frame_exhaustive(relpath, &lines));
+    findings.extend(rule_flush_seq(relpath, &lines));
     (findings, suppressions)
 }
 
@@ -741,6 +842,57 @@ mod tests {
         // wildcard in a frameless match is fine
         let frameless = "fn g(x: u8) -> u8 { match x { 1 => 2, _ => 0 } }\n";
         assert!(findings_for("transport/x.rs", frameless).is_empty());
+    }
+
+    #[test]
+    fn flush_literal_hiding_seq_behind_struct_update_is_flagged() {
+        let bad = "fn f(w: usize) -> FlushMsg {\n\
+                       FlushMsg { worker: w, emit_ns: 1, watermark: 2, panes: vec![], \
+                       ..Default::default() }\n\
+                   }\n";
+        let f = findings_for("engine/rt.rs", bad);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "frame-exhaustive");
+        assert_eq!(f[0].line, 2);
+
+        // naming seq — explicitly or via shorthand — is the fix
+        let explicit = "fn f(w: usize, seq: u64) -> FlushMsg {\n\
+                            FlushMsg { worker: w, seq, emit_ns: 1, watermark: 2, \
+                            panes: vec![] }\n\
+                        }\n";
+        assert!(findings_for("engine/rt.rs", explicit).is_empty());
+
+        // multi-line literals are walked to their closing brace
+        let multi = "fn f(w: usize) -> FlushMsg {\n\
+                         FlushMsg {\n\
+                             worker: w,\n\
+                             seq: 0,\n\
+                             emit_ns: 1,\n\
+                             watermark: 2,\n\
+                             panes: vec![],\n\
+                         }\n\
+                     }\n";
+        assert!(findings_for("engine/rt.rs", multi).is_empty());
+        let multi_bad = multi.replace("seq: 0,\n", "");
+        let f = findings_for("engine/rt.rs", &multi_bad);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 2);
+
+        // type positions are not construction sites
+        let types = "struct FlushMsg { seq_hidden: u64 }\n\
+                     impl FlushMsg { fn n(&self) -> u64 { 0 } }\n\
+                     fn g(m: FlushMsg) -> usize { m.panes.len() }\n";
+        assert!(findings_for("transport/wire.rs", types).is_empty());
+
+        // `seqs` is not `seq`; a literal after a type annotation on the
+        // same line is still checked
+        let annotated = "fn h(seqs: &[u64]) {\n\
+                             let m: FlushMsg = FlushMsg { worker: 0, emit_ns: 1, \
+                             watermark: 2, panes: vec![], ..base(seqs) };\n\
+                             drop(m);\n\
+                         }\n";
+        let f = findings_for("engine/sim.rs", annotated);
+        assert_eq!(f.len(), 1, "{f:?}");
     }
 
     #[test]

@@ -53,5 +53,5 @@ pub mod sim;
 pub mod topology;
 
 pub use pipeline::{Pipeline, PipelineBuilder, RtJob, SimJob};
-pub use sim::{SimResult, Simulator};
+pub use sim::{FaultPoint, SimResult, Simulator};
 pub use topology::{ChurnEvent, Topology};

@@ -357,11 +357,22 @@ impl RtJob {
     /// merge shard — via [`crate::transport::launch::run_multiprocess`]
     /// (`deploy --processes N`). The sources stay in this process.
     pub fn run_multiprocess(self) -> std::io::Result<RtResult> {
+        self.run_multiprocess_chaos(&crate::transport::launch::ChaosPlan::default())
+    }
+
+    /// [`RtJob::run_multiprocess`] with scripted kills: an armed
+    /// [`crate::transport::launch::ChaosPlan`] crashes victims mid-run
+    /// and the fabric must still converge exactly (`deploy --chaos`).
+    pub fn run_multiprocess_chaos(
+        self,
+        chaos: &crate::transport::launch::ChaosPlan,
+    ) -> std::io::Result<RtResult> {
         crate::transport::launch::run_multiprocess(
             &self.trace,
             self.sources,
             self.workers,
             &self.opts,
+            chaos,
         )
     }
 }

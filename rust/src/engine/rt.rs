@@ -52,11 +52,15 @@
 //! FISH's worker-state inference gets no hidden help.
 
 use crate::aggregate::{
-    self, Count, ShardRouter, TopKGather, TopKSketch, WindowSnapshot, WindowedMerge,
-    WindowedOutput, WindowedPartial,
+    self, Count, FlushSequencer, SeqDecision, ShardRouter, TopKGather, TopKSketch, WindowSnapshot,
+    WindowedMerge, WindowedOutput, WindowedPartial,
 };
 use crate::coordinator::{ClusterView, Grouper};
-use crate::metrics::{AggStats, Histogram, ShardAggStats, WindowStats, WireLedger, WireStats};
+use crate::metrics::{
+    AggStats, Histogram, RecoveryLedger, RecoveryStats, ShardAggStats, WindowStats, WireLedger,
+    WireStats,
+};
+use crate::state::ShardSnapshot;
 use crate::transport::wire::{FlushMsg, Msg};
 use crate::transport::{
     loopback, socket, Clock, FlushRx, FlushTx, LaneError, TransportKind, TupleRecv, TupleRx,
@@ -64,6 +68,7 @@ use crate::transport::{
 };
 use crate::workload::Trace;
 use crate::Key;
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
@@ -117,6 +122,10 @@ pub struct RtResult {
     /// loopback (nothing is serialized); socket and multi-process runs
     /// meter every frame both directions.
     pub wire: WireStats,
+    /// Exactly-once recovery activity — flush-batch replays and dedups,
+    /// snapshots, restores, restarts (docs/RECOVERY.md). All zeros on a
+    /// fault-free run, so [`RecoveryStats::any`] gates the report rows.
+    pub recovery: RecoveryStats,
 }
 
 impl RtResult {
@@ -204,15 +213,21 @@ fn burn(ns: f64) {
 
 /// Scatter one drained (per-pane) flush across the shard fabric: each
 /// shard gets the panes' sub-batches it owns, on its worker→shard
-/// flush lane, stamped with the same emit time and the worker's
-/// event-time watermark. Unwindowed, shards with nothing to absorb are
-/// skipped (today's traffic shape); windowed, every shard gets the
-/// message — an empty one still advances the worker's watermark so
-/// panes can retire. Send errors are ignored — a gone shard only
-/// happens at shutdown.
+/// flush lane, stamped with the same emit time, the worker's
+/// event-time watermark, and the next per-(worker, shard) sequence
+/// number (`seqs[s]`, advanced only when shard `s` actually gets a
+/// message — the shard's sequencer expects the *received* stream to be
+/// gap-free). Unwindowed, shards with nothing to absorb are skipped
+/// (today's traffic shape); windowed, every shard gets the message —
+/// an empty one still advances the worker's watermark so panes can
+/// retire. Send errors are ignored — a gone shard only happens at
+/// shutdown (a *restarted* shard is handled inside the recovering
+/// socket lane, which re-dials and replays before reporting failure).
+#[allow(clippy::too_many_arguments)]
 fn send_flush(
     router: &ShardRouter,
     shard_txs: &mut [Box<dyn FlushTx>],
+    seqs: &mut [u64],
     worker: usize,
     emit_ns: u64,
     watermark: u64,
@@ -230,7 +245,14 @@ fn send_flush(
     }
     for (s, panes) in per_shard.into_iter().enumerate() {
         if windowed || !panes.is_empty() {
-            let _ = shard_txs[s].send(FlushMsg { worker, emit_ns, watermark, panes });
+            let _ = shard_txs[s].send(FlushMsg {
+                worker,
+                seq: seqs[s],
+                emit_ns,
+                watermark,
+                panes,
+            });
+            seqs[s] += 1;
         }
     }
 }
@@ -329,6 +351,18 @@ pub(crate) fn source_loop(
 /// Returns `(latency histogram, tuples processed, state entries)`.
 /// Shared verbatim by the in-process engine and multi-process worker
 /// children.
+///
+/// Flush batches are stamped with per-(worker, shard) sequence
+/// numbers, seeded from each lane's [`FlushTx::resume_from`] — 0 on a
+/// fresh lane, the shard's next expected seq when this worker is a
+/// chaos respawn rejoining mid-stream (docs/RECOVERY.md).
+///
+/// `crash_after_flushes` is the chaos harness's cooperative kill
+/// switch: after the Nth periodic flush round the worker pushes its
+/// owed backpressure credits out (so the source never replays tuples
+/// that are already flushed — the `acked ⊆ flushed` invariant), then
+/// exits the process without `Done`/`Eof`. Only the multi-process
+/// launcher arms it; the in-process engine always passes `None`.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn worker_loop(
     w: usize,
@@ -339,6 +373,7 @@ pub(crate) fn worker_loop(
     router: &ShardRouter,
     mut rx: Box<dyn TupleRx>,
     mut flush_txs: Vec<Box<dyn FlushTx>>,
+    crash_after_flushes: Option<u64>,
 ) -> (Histogram, u64, usize) {
     let windowed = agg_window_ns > 0;
     let mut hist = Histogram::new();
@@ -347,6 +382,8 @@ pub(crate) fn worker_loop(
     let mut delta = WindowedPartial::new(Count, agg_window_ns);
     let mut watermark = 0u64;
     let mut next_flush = agg_flush_ns;
+    let mut seqs: Vec<u64> = flush_txs.iter().map(|tx| tx.resume_from()).collect();
+    let mut flush_rounds = 0u64;
     // windowed, the worker polls with a timeout so watermark-only
     // flushes keep flowing even when its data lane goes quiet
     // — otherwise a worker idle mid-run would pin every shard's
@@ -386,7 +423,17 @@ pub(crate) fn worker_loop(
             if now >= next_flush {
                 if windowed || !delta.is_empty() {
                     let batch = delta.flush();
-                    send_flush(router, &mut flush_txs, w, now, watermark, batch, windowed);
+                    send_flush(router, &mut flush_txs, &mut seqs, w, now, watermark, batch, windowed);
+                    flush_rounds += 1;
+                    // cooperative crash point: die exactly at a flush
+                    // boundary, where every acked tuple is flushed.
+                    // Push owed credits out first, then exit without
+                    // Done/Eof — the sources replay the unacked suffix
+                    // to this worker's replacement.
+                    if crash_after_flushes.is_some_and(|n| flush_rounds >= n) {
+                        let _ = rx.recv(Some(Duration::ZERO));
+                        std::process::exit(0);
+                    }
                 }
                 next_flush = aggregate::next_boundary(now, agg_flush_ns);
             }
@@ -397,23 +444,120 @@ pub(crate) fn worker_loop(
     // can never hold a pane back again
     if windowed || !delta.is_empty() {
         let now = clock.now_ns();
-        send_flush(router, &mut flush_txs, w, now, u64::MAX, delta.flush(), windowed);
+        send_flush(router, &mut flush_txs, &mut seqs, w, now, u64::MAX, delta.flush(), windowed);
+    }
+    // explicit close: a recovering lane whose shard restarted under the
+    // drain re-dials and replays before Eof, so the drain above cannot
+    // be lost to a dead socket (no-op on loopback lanes)
+    for tx in flush_txs.iter_mut() {
+        tx.close();
     }
     (hist, count, state.len())
 }
 
-/// One merge shard's whole life, over any lane backend: absorb flush
-/// batches into the windowed merge stage and the shard's top-k sketch,
-/// advance the min-across-workers watermark, retire panes, finish.
-/// Shared verbatim by the in-process engine and multi-process shard
-/// children.
+/// Control inputs for one merge shard: identity, recovery ledger,
+/// snapshot cadence, and (for a chaos respawn) the snapshot to resume
+/// from. [`ShardControl::fresh`] is the no-chaos default the
+/// in-process engine uses.
+pub(crate) struct ShardControl {
+    /// Shard index (stamped into snapshots).
+    pub shard: u64,
+    /// Recovery ledger this shard meters into (under `deploy`, shared
+    /// with the rest of the child process's lanes).
+    pub ledger: Arc<RecoveryLedger>,
+    /// Snapshot every N accepted flush batches (0 = never).
+    pub snapshot_every: u64,
+    /// Where snapshots persist; `None` serializes and meters without
+    /// writing (exercises the codec at zero I/O cost).
+    pub snapshot_path: Option<PathBuf>,
+    /// Snapshot to resume from — a restarted shard rejoining the mesh.
+    pub resume: Option<ShardSnapshot>,
+}
+
+impl ShardControl {
+    /// No chaos: fresh state, private ledger, no snapshots.
+    pub fn fresh(shard: u64) -> Self {
+        ShardControl {
+            shard,
+            ledger: Arc::new(RecoveryLedger::new()),
+            snapshot_every: 0,
+            snapshot_path: None,
+            resume: None,
+        }
+    }
+}
+
+/// Everything one merge shard hands back at shutdown.
+pub(crate) struct ShardOutput {
+    /// Windowed-merge output (all-time counts, windows, ledgers).
+    pub out: WindowedOutput,
+    /// The shard's gather sketch (scatter-gather top-k front-end).
+    pub sketch: TopKSketch,
+    /// Flush→merge transit latency.
+    pub latency: Histogram,
+    /// Per-worker tuple mass absorbed (accepted batches only). Under
+    /// chaos the coordinator reconstructs a killed worker's processed
+    /// count from these — the worker itself died without reporting.
+    pub absorbed: Vec<u64>,
+    /// Recovery activity, cumulative across this shard's incarnations.
+    pub recovery: RecoveryStats,
+}
+
+/// The shard's gather-sketch parts in snapshot order (ascending by
+/// key, so snapshot bytes are deterministic for a given sketch state).
+pub(crate) fn sketch_parts_sorted(sketch: &TopKSketch) -> Vec<(Key, f64)> {
+    let mut v: Vec<(Key, f64)> = sketch.tracked().collect();
+    v.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+    v
+}
+
+/// Fold one *accepted* flush batch into a shard's state: latency
+/// sample, per-pane absorb into the merge stage and the gather sketch,
+/// per-worker absorbed mass and watermark high-water mark. The caller
+/// guarantees `flush.worker` is in range.
+fn absorb_flush(
+    stage: &mut WindowedMerge<Count>,
+    sketch: &mut TopKSketch,
+    lat: &mut Histogram,
+    worker_wm: &mut [u64],
+    absorbed: &mut [u64],
+    clock: Clock,
+    flush: FlushMsg,
+) {
+    if !flush.panes.is_empty() {
+        let recv_ns = clock.now_ns();
+        lat.record(recv_ns.saturating_sub(flush.emit_ns));
+    }
+    let worker = flush.worker;
+    for (win, entries) in flush.panes {
+        for &(key, delta) in &entries {
+            sketch.absorb(key, delta);
+            absorbed[worker] += delta;
+        }
+        stage.absorb(win, entries);
+    }
+    if flush.watermark > worker_wm[worker] {
+        worker_wm[worker] = flush.watermark;
+    }
+}
+
+/// One merge shard's whole life, over any lane backend: sequence every
+/// arriving flush batch (accept-next / buffer-ahead / drop-replayed —
+/// the dedup half of exactly-once), absorb accepted batches into the
+/// windowed merge stage and the shard's top-k sketch, advance the
+/// min-across-workers watermark, retire panes, snapshot periodically,
+/// finish. Shared verbatim by the in-process engine and multi-process
+/// shard children; a respawned shard passes the loaded snapshot in
+/// [`ShardControl::resume`] and converges byte-identically
+/// (docs/RECOVERY.md).
 pub(crate) fn shard_loop(
     n_workers: usize,
     agg_window_ns: u64,
     agg_lateness_ns: u64,
     clock: Clock,
     mut rx: Box<dyn FlushRx>,
-) -> (WindowedOutput, TopKSketch, Histogram) {
+    ctl: ShardControl,
+) -> ShardOutput {
     let mut stage = WindowedMerge::new(Count, agg_window_ns, aggregate::DEFAULT_GATHER_CAPACITY)
         .with_lateness(agg_lateness_ns);
     let mut sketch = TopKSketch::new(aggregate::DEFAULT_GATHER_CAPACITY);
@@ -421,19 +565,73 @@ pub(crate) fn shard_loop(
     // per-worker event-time high-water marks; panes retire when
     // the min across workers passes their end (plus lateness slack)
     let mut worker_wm = vec![0u64; n_workers];
-    while let Some(flush) = rx.recv() {
-        if !flush.panes.is_empty() {
-            let recv_ns = clock.now_ns();
-            lat.record(recv_ns.saturating_sub(flush.emit_ns));
+    let mut sequencer: FlushSequencer<FlushMsg> = FlushSequencer::new(n_workers);
+    let mut absorbed = vec![0u64; n_workers];
+    // recovery counters carried over from previous incarnations — the
+    // ledger meters only this incarnation's activity on top
+    let mut carried = RecoveryStats::default();
+    let mut accepted_since_snapshot = 0u64;
+    if let Some(snap) = ctl.resume {
+        ctl.ledger.record_restore();
+        sequencer = FlushSequencer::restore(snap.expected_seq);
+        for (dst, src) in worker_wm.iter_mut().zip(&snap.worker_wm) {
+            *dst = *src;
         }
-        for (win, entries) in flush.panes {
-            for &(key, delta) in &entries {
-                sketch.absorb(key, delta);
+        // the gather sketch is not reconstructible from replay (batches
+        // below the expected seqs are never re-sent) — rebuild it from
+        // its serialized parts, which round-trip exactly
+        sketch = TopKSketch::from_parts(
+            aggregate::DEFAULT_GATHER_CAPACITY,
+            &snap.sketch_entries,
+            snap.sketch_error,
+        );
+        lat = snap.latency;
+        carried = snap.recovery;
+        stage.restore(snap.merge);
+        // re-offer the batches the predecessor had parked ahead of a
+        // sequence gap (a batch the restored cursors no longer block
+        // absorbs immediately; a stale one drops silently)
+        for msg in snap.buffered {
+            let (worker, seq) = (msg.worker, msg.seq);
+            if worker >= n_workers {
+                continue;
             }
-            stage.absorb(win, entries);
+            if let SeqDecision::Accept(batch) = sequencer.offer(worker, seq, msg) {
+                for m in batch {
+                    absorb_flush(
+                        &mut stage, &mut sketch, &mut lat, &mut worker_wm, &mut absorbed,
+                        clock, m,
+                    );
+                }
+            }
         }
-        if flush.worker < worker_wm.len() && flush.watermark > worker_wm[flush.worker] {
-            worker_wm[flush.worker] = flush.watermark;
+    }
+    while let Some(flush) = rx.recv() {
+        let (worker, seq) = (flush.worker, flush.seq);
+        if worker >= n_workers {
+            continue; // foreign or corrupt frame: never absorb
+        }
+        match sequencer.offer(worker, seq, flush) {
+            SeqDecision::Accept(batch) => {
+                for msg in batch {
+                    absorb_flush(
+                        &mut stage, &mut sketch, &mut lat, &mut worker_wm, &mut absorbed,
+                        clock, msg,
+                    );
+                    accepted_since_snapshot += 1;
+                }
+            }
+            SeqDecision::Replayed => {
+                // already absorbed before the sender's restart —
+                // dropping it here is the double count exactly-once
+                // promises never happens
+                ctl.ledger.record_deduped_batch();
+                continue;
+            }
+            SeqDecision::Buffered => {
+                ctl.ledger.record_buffered_batch();
+                continue;
+            }
         }
         // min over workers that have reported event-time progress:
         // a worker that never sees a tuple (e.g. an FG worker whose
@@ -444,21 +642,72 @@ pub(crate) fn shard_loop(
         // timing, never the final counts.
         let wm = worker_wm.iter().copied().filter(|&w| w > 0).min().unwrap_or(0);
         stage.advance(wm);
+        if ctl.snapshot_every > 0 && accepted_since_snapshot >= ctl.snapshot_every {
+            accepted_since_snapshot = 0;
+            let snap = ShardSnapshot {
+                shard: ctl.shard,
+                expected_seq: sequencer.expected_all().to_vec(),
+                worker_wm: worker_wm.clone(),
+                merge: stage.snapshot(),
+                sketch_entries: sketch_parts_sorted(&sketch),
+                sketch_error: sketch.merged_error(),
+                buffered: sequencer.parked().into_iter().map(|(_, _, m)| m.clone()).collect(),
+                latency: lat.clone(),
+                recovery: {
+                    let mut r = carried;
+                    r.absorb(&ctl.ledger.snapshot());
+                    r
+                },
+            };
+            match &ctl.snapshot_path {
+                Some(path) => {
+                    // persist errors are survivable: the shard keeps
+                    // merging, recovery just falls back to the previous
+                    // snapshot plus a longer replay
+                    if let Ok(bytes) = snap.persist(path) {
+                        ctl.ledger.record_snapshot(bytes);
+                    }
+                }
+                None => ctl.ledger.record_snapshot(snap.to_bytes().len() as u64),
+            }
+        }
     }
-    (stage.finish(), sketch, lat)
+    let mut recovery = carried;
+    recovery.absorb(&ctl.ledger.snapshot());
+    ShardOutput { out: stage.finish(), sketch, latency: lat, absorbed, recovery }
+}
+
+/// Run-level fields assembled from the fabric's per-shard outputs.
+pub(crate) struct Assembled {
+    /// Exact merged counts, ascending by key.
+    pub merged: Vec<(Key, u64)>,
+    /// Per-shard ledgers.
+    pub shard_agg: ShardAggStats,
+    /// Per-window snapshots (empty when unwindowed).
+    pub windows: Vec<WindowSnapshot>,
+    /// Folded pane-lifecycle stats.
+    pub window_stats: WindowStats,
+    /// Scatter-gather top-k front-end.
+    pub gather: TopKGather,
+    /// Flush→merge latency folded across shards.
+    pub agg_latency: Histogram,
+    /// Per-worker tuple mass absorbed across every shard — under chaos
+    /// this reconstructs a killed worker's processed count (the worker
+    /// died without reporting; Count partials make shard-side mass
+    /// exactly the tuples it processed).
+    pub absorbed: Vec<u64>,
+    /// Folded recovery activity across the fabric.
+    pub recovery: RecoveryStats,
 }
 
 /// Assemble the fabric's per-shard outputs into the run-level result
 /// fields: exact merged counts (concat + sort — shards partition the
 /// key space), per-shard ledgers, window snapshots (empty when
-/// unwindowed) and the folded pane-lifecycle stats. Shared with the
-/// multi-process coordinator, which gets the same triples back over
-/// `Done` frames instead of thread joins.
-#[allow(clippy::type_complexity)]
-pub(crate) fn assemble_shards(
-    agg_window_ns: u64,
-    shard_outs: Vec<(WindowedOutput, TopKSketch, Histogram)>,
-) -> (Vec<(Key, u64)>, ShardAggStats, Vec<WindowSnapshot>, WindowStats, TopKGather, Histogram) {
+/// unwindowed), the folded pane-lifecycle stats, and the folded
+/// recovery ledgers. Shared with the multi-process coordinator, which
+/// gets the same outputs back over `Done` frames instead of thread
+/// joins.
+pub(crate) fn assemble_shards(agg_window_ns: u64, shard_outs: Vec<ShardOutput>) -> Assembled {
     let n_shards = shard_outs.len();
     let mut merged: Vec<(Key, u64)> = Vec::new();
     let mut per_shard: Vec<AggStats> = Vec::with_capacity(n_shards);
@@ -466,13 +715,22 @@ pub(crate) fn assemble_shards(
     let mut window_stats = WindowStats::default();
     let mut sketches: Vec<TopKSketch> = Vec::with_capacity(n_shards);
     let mut agg_latency = Histogram::new();
-    for (out, sketch, lat) in shard_outs {
-        merged.extend(out.all_time);
-        per_shard.push(out.stats);
-        window_stats.absorb(&out.window_stats);
-        per_shard_windows.push(out.windows);
-        sketches.push(sketch);
-        agg_latency.merge(&lat);
+    let mut absorbed: Vec<u64> = Vec::new();
+    let mut recovery = RecoveryStats::default();
+    for so in shard_outs {
+        merged.extend(so.out.all_time);
+        per_shard.push(so.out.stats);
+        window_stats.absorb(&so.out.window_stats);
+        per_shard_windows.push(so.out.windows);
+        sketches.push(so.sketch);
+        agg_latency.merge(&so.latency);
+        if absorbed.len() < so.absorbed.len() {
+            absorbed.resize(so.absorbed.len(), 0);
+        }
+        for (dst, src) in absorbed.iter_mut().zip(&so.absorbed) {
+            *dst += *src;
+        }
+        recovery.absorb(&so.recovery);
     }
     merged.sort_unstable_by_key(|&(k, _)| k);
     let windows = if agg_window_ns > 0 {
@@ -487,7 +745,16 @@ pub(crate) fn assemble_shards(
         Vec::new()
     };
     let gather = TopKGather::from_shards(sketches);
-    (merged, ShardAggStats { per_shard }, windows, window_stats, gather, agg_latency)
+    Assembled {
+        merged,
+        shard_agg: ShardAggStats { per_shard },
+        windows,
+        window_stats,
+        gather,
+        agg_latency,
+        absorbed,
+        recovery,
+    }
 }
 
 /// Normalise the per-worker burn table to `n_workers` entries.
@@ -564,9 +831,10 @@ pub fn try_run(
     // traffic is orders of magnitude below the data path, and an
     // ungated lane cannot deadlock against the tuple-credit loop.
     let mut shard_handles = Vec::with_capacity(n_shards);
-    for rx in flush_rxs {
+    for (s, rx) in flush_rxs.into_iter().enumerate() {
+        let ctl = ShardControl::fresh(s as u64);
         shard_handles.push(thread::spawn(move || {
-            shard_loop(n_workers, agg_window_ns, agg_lateness_ns, clock, rx)
+            shard_loop(n_workers, agg_window_ns, agg_lateness_ns, clock, rx, ctl)
         }));
     }
 
@@ -576,7 +844,7 @@ pub fn try_run(
         let cost = per_tuple[w];
         let router = Arc::clone(&router);
         worker_handles.push(thread::spawn(move || {
-            worker_loop(w, cost, agg_flush_ns, agg_window_ns, clock, &router, rx, txs)
+            worker_loop(w, cost, agg_flush_ns, agg_window_ns, clock, &router, rx, txs, None)
         }));
     }
 
@@ -624,9 +892,8 @@ pub fn try_run(
     for h in shard_handles {
         shard_outs.push(h.join().expect("aggregator shard thread panicked"));
     }
-    let (merged, shard_agg, windows, window_stats, gather, agg_latency) =
-        assemble_shards(agg_window_ns, shard_outs);
-    let agg = shard_agg.total();
+    let assembled = assemble_shards(agg_window_ns, shard_outs);
+    let agg = assembled.shard_agg.total();
     let wall_ns = clock.now_ns();
     let total: u64 = counts.iter().sum();
     let entries: usize = states.iter().sum();
@@ -644,14 +911,15 @@ pub fn try_run(
         throughput: total as f64 / (wall_ns as f64 / 1e9),
         entries,
         distinct_keys: seen.len(),
-        merged,
+        merged: assembled.merged,
         agg,
-        shard_agg,
-        agg_latency,
-        gather,
-        windows,
-        window_stats,
+        shard_agg: assembled.shard_agg,
+        agg_latency: assembled.agg_latency,
+        gather: assembled.gather,
+        windows: assembled.windows,
+        window_stats: assembled.window_stats,
         wire: ledger.snapshot(),
+        recovery: assembled.recovery,
     })
 }
 
@@ -708,7 +976,111 @@ mod tests {
             assert_eq!(r.agg_latency.count(), r.agg.flushes, "{kind}");
             // loopback lanes serialize nothing
             assert!(!r.wire.any(), "{kind}");
+            // no faults injected → no recovery machinery fires
+            assert!(!r.recovery.any(), "{kind}");
         }
+    }
+
+    #[test]
+    fn restored_shard_converges_byte_identically() {
+        // drive one shard over loopback lanes, snapshotting every 2
+        // accepted batches; "crash" it after 4, bring up a replacement
+        // from the persisted snapshot, and replay the full flush log —
+        // the sequencer drops the already-absorbed prefix and the final
+        // output is byte-identical to a shard that never crashed
+        let msgs: Vec<FlushMsg> = (0..6u64)
+            .map(|i| FlushMsg {
+                worker: 0,
+                seq: i,
+                emit_ns: 10 * i,
+                watermark: 100 * (i + 1),
+                panes: vec![(i % 2, vec![(i + 1, 2), (7, 1)])],
+            })
+            .collect();
+        let drive = |ctl: ShardControl, feed: Vec<FlushMsg>| {
+            let (mut txs, mut rxs) = loopback::flush_lanes(1, 1);
+            let rx = rxs.remove(0);
+            let mut tx = txs.remove(0).remove(0);
+            let clock = Clock::mono();
+            let h = thread::spawn(move || shard_loop(1, 200, 0, clock, rx, ctl));
+            for m in feed {
+                tx.send(m).expect("loopback send");
+            }
+            drop(tx);
+            h.join().expect("shard thread")
+        };
+        let reference = drive(ShardControl::fresh(0), msgs.clone());
+        let path = std::env::temp_dir()
+            .join(format!("fish-rt-restore-{}.snap", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut ctl = ShardControl::fresh(0);
+        ctl.snapshot_every = 2;
+        ctl.snapshot_path = Some(path.clone());
+        let first = drive(ctl, msgs[..4].to_vec());
+        assert_eq!(first.recovery.snapshots, 2);
+        assert!(first.recovery.snapshot_bytes > 0);
+        let snap = crate::state::ShardSnapshot::load(&path)
+            .expect("load")
+            .expect("snapshot present");
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(snap.expected_seq, vec![4]);
+        let mut ctl = ShardControl::fresh(0);
+        ctl.resume = Some(snap);
+        let restored = drive(ctl, msgs.clone()); // full replay: seqs 0..6
+        assert_eq!(restored.out.all_time, reference.out.all_time);
+        assert_eq!(
+            restored
+                .out
+                .windows
+                .iter()
+                .map(|w| (w.window, w.counts.clone()))
+                .collect::<Vec<_>>(),
+            reference
+                .out
+                .windows
+                .iter()
+                .map(|w| (w.window, w.counts.clone()))
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(restored.sketch.top(10), reference.sketch.top(10));
+        // only post-restore mass lands in `absorbed` (2 batches × 3)
+        assert_eq!(restored.absorbed, vec![6]);
+        assert_eq!(restored.recovery.deduped_batches, 4);
+        assert_eq!(restored.recovery.restores, 1);
+        // the second snapshot's recovery field was captured before its
+        // own persist landed in the ledger, so the carried count is 1
+        assert_eq!(restored.recovery.snapshots, 1);
+        assert_eq!(restored.latency.count(), reference.latency.count());
+    }
+
+    #[test]
+    fn shard_buffers_ahead_and_accepts_when_gap_fills() {
+        // deliver seqs 0, 2, 3 (gap at 1), then 1 — everything absorbs
+        // exactly once, in order, and the ledger shows 2 parked batches
+        let feed: Vec<FlushMsg> = [0u64, 2, 3, 1]
+            .iter()
+            .map(|&i| FlushMsg {
+                worker: 0,
+                seq: i,
+                emit_ns: 0,
+                watermark: 0,
+                panes: vec![(0, vec![(i + 1, 1)])],
+            })
+            .collect();
+        let (mut txs, mut rxs) = loopback::flush_lanes(1, 1);
+        let rx = rxs.remove(0);
+        let mut tx = txs.remove(0).remove(0);
+        let clock = Clock::mono();
+        let h = thread::spawn(move || shard_loop(1, 0, 0, clock, rx, ShardControl::fresh(0)));
+        for m in feed {
+            tx.send(m).expect("loopback send");
+        }
+        drop(tx);
+        let out = h.join().expect("shard thread");
+        assert_eq!(out.out.all_time, vec![(1, 1), (2, 1), (3, 1), (4, 1)]);
+        assert_eq!(out.recovery.buffered_batches, 2);
+        assert_eq!(out.recovery.deduped_batches, 0);
+        assert_eq!(out.absorbed, vec![4]);
     }
 
     #[test]

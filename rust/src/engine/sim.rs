@@ -37,13 +37,29 @@
 //! closed panes retire into [`SimResult::windows`] with exact
 //! per-window counts and a per-window top-k gather, and pane lifecycle
 //! is accounted in [`SimResult::window_stats`].
+//!
+//! **Chaos**: the fabric speaks the same exactly-once flush protocol as
+//! the deployed mesh — every worker→shard lane carries a monotonic
+//! `seq`, each shard runs a [`FlushSequencer`], and shards snapshot
+//! through the real [`ShardSnapshot`] codec. Scripted [`FaultPoint`]s
+//! ([`Simulator::with_faults`]) kill workers (the un-flushed delta dies
+//! and the source replays the since-last-flush suffix) or shards (state
+//! is dropped, restored from the last snapshot bytes, and the workers
+//! replay their logged flushes from the Resume cursors) at deterministic
+//! virtual-time points, so recovery is bit-reproducible and the oracle
+//! can assert chaos runs converge byte-identically (docs/RECOVERY.md).
 
 use super::topology::Topology;
 use crate::aggregate::{
-    self, Count, ShardRouter, TopKGather, WindowSnapshot, WindowedMerge, WindowedPartial,
+    self, Count, FlushSequencer, SeqDecision, ShardRouter, TopKGather, TopKSketch, WindowSnapshot,
+    WindowedMerge, WindowedPartial,
 };
 use crate::coordinator::{ClusterView, Grouper};
-use crate::metrics::{AggStats, Histogram, Imbalance, MemoryTracker, ShardAggStats, WindowStats};
+use crate::metrics::{
+    AggStats, Histogram, Imbalance, MemoryTracker, RecoveryStats, ShardAggStats, WindowStats,
+};
+use crate::state::ShardSnapshot;
+use crate::transport::wire::FlushMsg;
 use crate::workload::Generator;
 use crate::{Key, WorkerId};
 
@@ -103,6 +119,43 @@ pub struct SimResult {
     /// memory peaks), folded across the merge shards; all zeros when
     /// unwindowed.
     pub window_stats: WindowStats,
+    /// Exactly-once recovery ledger: scripted-fault restarts, replayed /
+    /// deduplicated flush batches, replayed source tuples, snapshots
+    /// serialized and restores performed. All zeros on a fault-free run
+    /// ([`crate::metrics::RecoveryStats::any`] gates report rows).
+    pub recovery: RecoveryStats,
+}
+
+/// One scripted crash in the simulated topology. Faults fire at
+/// deterministic points in virtual time (a worker's Nth processed tuple,
+/// a shard's Nth accepted flush batch), so chaos runs are exactly as
+/// reproducible as fault-free ones.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// Kill worker `worker` right after it has processed `at_tuple`
+    /// tuples: its un-flushed windowed delta is lost with it, and the
+    /// sources re-feed the unacked suffix observed since its last flush
+    /// (at-least-once replay). Flushed panes are never re-sent — their
+    /// lane seqs are already absorbed downstream — so the merge stays
+    /// exactly-once.
+    KillWorker {
+        /// Victim worker slot.
+        worker: usize,
+        /// Fires once `worker` has processed this many tuples.
+        at_tuple: u64,
+    },
+    /// Kill merge shard `shard` right after its current incarnation has
+    /// accepted `at_flush` flush batches: live state is dropped, the
+    /// last snapshot bytes (if any) are decoded through the real
+    /// [`ShardSnapshot`] codec, and the workers replay their logged
+    /// flushes from the shard's Resume cursors — the socket lanes'
+    /// reconnect protocol, in virtual time.
+    KillShard {
+        /// Victim merge shard.
+        shard: usize,
+        /// Fires once the incarnation has accepted this many batches.
+        at_flush: u64,
+    },
 }
 
 impl SimResult {
@@ -125,54 +178,252 @@ impl SimResult {
 /// Default routing batch size (see [`crate::config::Config::batch`]).
 pub use crate::config::DEFAULT_BATCH;
 
+/// One simulated merge shard: the windowed merge stage, this shard's
+/// slice of the gather sketch, the flush sequencer, and the chaos
+/// bookkeeping a kill needs (the union of the workers' replay logs for
+/// this shard, and the last serialized snapshot).
+struct SimShard {
+    stage: WindowedMerge<Count>,
+    sketch: TopKSketch,
+    sequencer: FlushSequencer<FlushMsg>,
+    /// Per-worker watermark high-water marks (mirrors the rt shard).
+    worker_wm: Vec<u64>,
+    /// Every message delivered to this incarnation, in delivery order.
+    /// Only retained while a shard kill is armed — it stands in for the
+    /// senders' replay logs, pre-split per shard.
+    log: Vec<FlushMsg>,
+    /// Flush batches accepted by this incarnation (fault triggers and
+    /// snapshot cadence count these, not raw deliveries).
+    accepted: u64,
+    since_snapshot: u64,
+    last_snapshot: Option<Vec<u8>>,
+}
+
+impl SimShard {
+    fn new(window_ns: u64, lateness_ns: u64, n_slots: usize) -> Self {
+        SimShard {
+            stage: WindowedMerge::new(Count, window_ns, aggregate::DEFAULT_GATHER_CAPACITY)
+                .with_lateness(lateness_ns),
+            sketch: TopKSketch::new(aggregate::DEFAULT_GATHER_CAPACITY),
+            sequencer: FlushSequencer::new(n_slots),
+            worker_wm: vec![0; n_slots],
+            log: Vec::new(),
+            accepted: 0,
+            since_snapshot: 0,
+            last_snapshot: None,
+        }
+    }
+
+    /// Absorb one sequencer-accepted flush batch into the merge stage
+    /// and the gather sketch.
+    fn absorb(&mut self, msg: FlushMsg) {
+        if msg.watermark > self.worker_wm[msg.worker] {
+            self.worker_wm[msg.worker] = msg.watermark;
+        }
+        for (win, entries) in msg.panes {
+            for &(k, c) in &entries {
+                self.sketch.absorb(k, c);
+            }
+            self.stage.absorb(win, entries);
+        }
+        self.accepted += 1;
+        self.since_snapshot += 1;
+    }
+}
+
 /// Stage-two state for one simulation run: per-shard windowed merge
-/// stages behind one shard router (a pane of `agg_window_ns`; 0 = one
-/// eternal pane = the unwindowed fabric), the all-time scatter-gather
-/// top-k sketches, and the staleness bookkeeping every flush site
-/// shares (periodic, churn drain, end-of-stream drain).
+/// stages + gather sketches behind one shard router (a pane of
+/// `agg_window_ns`; 0 = one eternal pane = the unwindowed fabric), the
+/// per-lane flush seqs and per-shard sequencers of the exactly-once
+/// protocol, the staleness bookkeeping every flush site shares
+/// (periodic, churn drain, end-of-stream drain), and the armed shard
+/// kills.
 struct StageTwo {
     router: ShardRouter,
-    shards: Vec<WindowedMerge<Count>>,
-    gather: TopKGather,
+    shards: Vec<SimShard>,
+    /// `seqs[worker][shard]`: next flush seq on that lane. Incremented
+    /// only when the shard actually receives a message, exactly like
+    /// the rt engine, so the per-shard received stream is gap-free.
+    seqs: Vec<Vec<u64>>,
     /// Virtual-ns staleness recorded at each worker flush.
     staleness: Histogram,
     /// Per-slot virtual time of the previous flush.
     last_flush: Vec<u64>,
     window_ns: u64,
+    lateness_ns: u64,
+    n_slots: usize,
+    /// Serialize a shard snapshot every N accepted batches (0 = never).
+    snapshot_every: u64,
+    /// Armed [`FaultPoint::KillShard`]s as `(shard, at_flush)`.
+    shard_faults: Vec<(usize, u64)>,
+    /// Shard chaos armed at run start — gates replay-log retention.
+    chaos: bool,
+    recovery: RecoveryStats,
 }
 
 impl StageTwo {
-    fn new(n_shards: usize, n_slots: usize, window_ns: u64, lateness_ns: u64) -> Self {
+    fn new(
+        n_shards: usize,
+        n_slots: usize,
+        window_ns: u64,
+        lateness_ns: u64,
+        snapshot_every: u64,
+        shard_faults: Vec<(usize, u64)>,
+    ) -> Self {
+        let chaos = !shard_faults.is_empty();
         StageTwo {
             router: ShardRouter::new(n_shards),
-            shards: (0..n_shards)
-                .map(|_| {
-                    WindowedMerge::new(Count, window_ns, crate::aggregate::DEFAULT_GATHER_CAPACITY)
-                        .with_lateness(lateness_ns)
-                })
-                .collect(),
-            gather: TopKGather::new(n_shards, crate::aggregate::DEFAULT_GATHER_CAPACITY),
+            shards: (0..n_shards).map(|_| SimShard::new(window_ns, lateness_ns, n_slots)).collect(),
+            seqs: vec![vec![0; n_shards]; n_slots],
             staleness: Histogram::new(),
             last_flush: vec![0; n_slots],
             window_ns,
+            lateness_ns,
+            n_slots,
+            snapshot_every,
+            shard_faults,
+            chaos,
+            recovery: RecoveryStats::default(),
         }
     }
 
     /// Flush worker `w`'s partial at virtual time `now` (no-op when the
-    /// partial is empty): record the delta's staleness, then route each
-    /// pane's batch once and feed each per-shard sub-batch to both that
-    /// shard's gather sketch and its windowed merge stage.
+    /// partial is empty): record the delta's staleness, split each
+    /// pane's batch across the shards, and deliver one seq-stamped
+    /// [`FlushMsg`] per shard that received any panes this round.
     fn flush(&mut self, w: usize, now: u64, partial: &mut WindowedPartial<Count>) {
         if partial.is_empty() {
             return;
         }
         self.staleness.record(now.saturating_sub(self.last_flush[w]));
         self.last_flush[w] = now;
+        let mut per_shard: Vec<Vec<(u64, Vec<(Key, u64)>)>> =
+            (0..self.shards.len()).map(|_| Vec::new()).collect();
         for (win, batch) in partial.flush() {
             for (s, sub) in self.router.split(batch).into_iter().enumerate() {
-                self.gather.absorb_on(s, &sub);
-                self.shards[s].absorb(win, sub);
+                if !sub.is_empty() {
+                    per_shard[s].push((win, sub));
+                }
             }
+        }
+        for (s, panes) in per_shard.into_iter().enumerate() {
+            if panes.is_empty() {
+                continue;
+            }
+            let msg =
+                FlushMsg { worker: w, seq: self.seqs[w][s], emit_ns: now, watermark: now, panes };
+            self.seqs[w][s] += 1;
+            self.deliver(s, msg);
+        }
+    }
+
+    /// Deliver one flush message to shard `s`: log it (while chaos is
+    /// armed), sequence it, snapshot on cadence, then fire any scripted
+    /// kill that has come due.
+    fn deliver(&mut self, s: usize, msg: FlushMsg) {
+        if self.chaos {
+            self.shards[s].log.push(msg.clone());
+        }
+        self.offer(s, msg);
+        if self.snapshot_every > 0 && self.shards[s].since_snapshot >= self.snapshot_every {
+            self.snapshot(s);
+        }
+        if let Some(pos) = self
+            .shard_faults
+            .iter()
+            .position(|&(fs, at)| fs == s && self.shards[s].accepted >= at)
+        {
+            self.shard_faults.swap_remove(pos);
+            self.kill_shard(s);
+        }
+    }
+
+    /// Run one message through shard `s`'s sequencer: absorb accepted
+    /// batches (plus any parked successors they unblock), meter
+    /// duplicates and reorders.
+    fn offer(&mut self, s: usize, msg: FlushMsg) {
+        let (worker, seq) = (msg.worker, msg.seq);
+        match self.shards[s].sequencer.offer(worker, seq, msg) {
+            SeqDecision::Accept(batch) => {
+                for m in batch {
+                    self.shards[s].absorb(m);
+                }
+            }
+            SeqDecision::Replayed => self.recovery.deduped_batches += 1,
+            SeqDecision::Buffered => self.recovery.buffered_batches += 1,
+        }
+    }
+
+    /// Serialize shard `s` through the real [`ShardSnapshot`] codec —
+    /// the exact bytes a deployed shard would persist — and retain them
+    /// for the next kill.
+    fn snapshot(&mut self, s: usize) {
+        let shard = &mut self.shards[s];
+        shard.since_snapshot = 0;
+        let snap = ShardSnapshot {
+            shard: s as u64,
+            expected_seq: shard.sequencer.expected_all().to_vec(),
+            worker_wm: shard.worker_wm.clone(),
+            merge: shard.stage.snapshot(),
+            sketch_entries: super::rt::sketch_parts_sorted(&shard.sketch),
+            sketch_error: shard.sketch.merged_error(),
+            buffered: shard.sequencer.parked().into_iter().map(|(_, _, m)| m.clone()).collect(),
+            latency: Histogram::new(),
+            recovery: RecoveryStats::default(),
+        };
+        let bytes = snap.to_bytes();
+        self.recovery.snapshots += 1;
+        self.recovery.snapshot_bytes += bytes.len() as u64;
+        shard.last_snapshot = Some(bytes);
+    }
+
+    /// Scripted shard kill: drop the live incarnation, restore from the
+    /// last snapshot bytes (none → cold start), then replay every logged
+    /// message at or above the restored Resume cursors — exactly the
+    /// socket lanes' reconnect protocol, in virtual time.
+    fn kill_shard(&mut self, s: usize) {
+        self.recovery.shard_restarts += 1;
+        let log = std::mem::take(&mut self.shards[s].log);
+        let snap_bytes = self.shards[s].last_snapshot.take();
+        self.shards[s] = SimShard::new(self.window_ns, self.lateness_ns, self.n_slots);
+        let mut resume = vec![0u64; self.n_slots];
+        if let Some(bytes) = &snap_bytes {
+            let snap = ShardSnapshot::from_bytes(bytes)
+                .expect("in-memory snapshot bytes round-trip through the codec");
+            self.recovery.restores += 1;
+            resume = snap.expected_seq.clone();
+            let shard = &mut self.shards[s];
+            shard.sequencer = FlushSequencer::restore(snap.expected_seq);
+            for (dst, src) in shard.worker_wm.iter_mut().zip(&snap.worker_wm) {
+                *dst = *src;
+            }
+            shard.sketch = TopKSketch::from_parts(
+                aggregate::DEFAULT_GATHER_CAPACITY,
+                &snap.sketch_entries,
+                snap.sketch_error,
+            );
+            shard.stage.restore(snap.merge);
+            // parked-ahead batches from the snapshot re-enter through the
+            // sequencer (the in-order sim never parks any, but the
+            // restore path is protocol-complete)
+            for m in snap.buffered {
+                let (worker, seq) = (m.worker, m.seq);
+                if let SeqDecision::Accept(batch) = shard.sequencer.offer(worker, seq, m) {
+                    for mm in batch {
+                        shard.absorb(mm);
+                    }
+                }
+            }
+        }
+        self.shards[s].last_snapshot = snap_bytes;
+        for msg in log {
+            if msg.seq < resume[msg.worker] {
+                // below the shard's Resume answer: the lane never re-sends
+                continue;
+            }
+            self.recovery.replayed_batches += 1;
+            self.shards[s].log.push(msg.clone());
+            self.offer(s, msg);
         }
     }
 
@@ -182,30 +433,40 @@ impl StageTwo {
     /// called, so no late deltas (and no pane reopens) are possible.
     fn advance(&mut self, now: u64) {
         for shard in self.shards.iter_mut() {
-            shard.advance(now);
+            shard.stage.advance(now);
         }
     }
 
     /// Finish: all-time merged counts, per-shard ledgers, assembled
-    /// window snapshots (empty when unwindowed) and the folded
-    /// pane-lifecycle stats.
+    /// window snapshots (empty when unwindowed), the folded
+    /// pane-lifecycle stats, and the shard-side recovery ledger.
     #[allow(clippy::type_complexity)]
     fn into_results(
         self,
-    ) -> (Vec<(Key, u64)>, ShardAggStats, Vec<WindowSnapshot>, WindowStats, TopKGather, Histogram)
-    {
-        let StageTwo { shards, gather, staleness, window_ns, .. } = self;
+    ) -> (
+        Vec<(Key, u64)>,
+        ShardAggStats,
+        Vec<WindowSnapshot>,
+        WindowStats,
+        TopKGather,
+        Histogram,
+        RecoveryStats,
+    ) {
+        let StageTwo { shards, staleness, window_ns, recovery, .. } = self;
         let n_shards = shards.len();
         let mut merged_counts: Vec<(Key, u64)> = Vec::new();
         let mut per_shard = Vec::with_capacity(n_shards);
         let mut per_shard_windows = Vec::with_capacity(n_shards);
+        let mut sketches = Vec::with_capacity(n_shards);
         let mut window_stats = WindowStats::default();
         for shard in shards {
-            let out = shard.finish();
+            let SimShard { stage, sketch, .. } = shard;
+            let out = stage.finish();
             merged_counts.extend(out.all_time);
             per_shard.push(out.stats);
             window_stats.absorb(&out.window_stats);
             per_shard_windows.push(out.windows);
+            sketches.push(sketch);
         }
         // shards partition the key space: concat + sort reproduces the
         // single-aggregator ordering byte for byte
@@ -221,7 +482,16 @@ impl StageTwo {
             window_stats = WindowStats::default();
             Vec::new()
         };
-        (merged_counts, ShardAggStats { per_shard }, windows, window_stats, gather, staleness)
+        let gather = TopKGather::from_shards(sketches);
+        (
+            merged_counts,
+            ShardAggStats { per_shard },
+            windows,
+            window_stats,
+            gather,
+            staleness,
+            recovery,
+        )
     }
 }
 
@@ -243,6 +513,11 @@ pub struct Simulator {
     /// never create or absorb late deltas here — but keeping the knob
     /// engine-uniform lets one config drive both engines.
     agg_lateness_ns: u64,
+    /// Scripted crashes; empty = fault-free.
+    faults: Vec<FaultPoint>,
+    /// Shard-snapshot cadence in accepted batches (0 = never snapshot;
+    /// a kill then recovers by full log replay).
+    snapshot_every: u64,
 }
 
 impl Simulator {
@@ -262,6 +537,8 @@ impl Simulator {
             agg_shards: 1,
             agg_window_ns: 0,
             agg_lateness_ns: 0,
+            faults: Vec::new(),
+            snapshot_every: 0,
         }
     }
 
@@ -306,6 +583,23 @@ impl Simulator {
         self
     }
 
+    /// Arm scripted crashes (the in-process fault-point registry). Each
+    /// fault fires exactly once at its deterministic trigger; the run's
+    /// recovery work lands in [`SimResult::recovery`] and the outputs
+    /// must still match a fault-free run byte for byte.
+    pub fn with_faults(mut self, faults: Vec<FaultPoint>) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Snapshot each merge shard every `every` accepted flush batches
+    /// through the real [`ShardSnapshot`] codec (0 = never; shard kills
+    /// then recover by replaying the whole flush log).
+    pub fn with_snapshot_every(mut self, every: u64) -> Self {
+        self.snapshot_every = every;
+        self
+    }
+
     /// Run `gen` to completion.
     ///
     /// Tuples are drained in batches: each batch shares one
@@ -326,12 +620,38 @@ impl Simulator {
         let mut churn_migrations = 0usize;
         let n_sources = self.sources.len();
 
+        // scripted faults, split by stage: worker kills fire in the
+        // service loop, shard kills inside the merge fabric
+        let mut worker_faults: Vec<(usize, u64)> = Vec::new();
+        let mut shard_faults: Vec<(usize, u64)> = Vec::new();
+        for f in &self.faults {
+            match *f {
+                FaultPoint::KillWorker { worker, at_tuple } => {
+                    worker_faults.push((worker, at_tuple))
+                }
+                FaultPoint::KillShard { shard, at_flush } => shard_faults.push((shard, at_flush)),
+            }
+        }
+        // source-side replay buffers: each worker's observed tuples since
+        // its last flush (the unacked suffix a respawn would be re-fed).
+        // Only tracked while a worker kill is armed — fault-free runs pay
+        // nothing.
+        let track_replay = !worker_faults.is_empty();
+        let mut since_flush: Vec<Vec<(Key, u64)>> = (0..n_slots).map(|_| Vec::new()).collect();
+        let mut worker_recovery = RecoveryStats::default();
+
         // stage two: per-worker (windowed) partial aggregates + the
         // windowed merge-shard fabric
         let mut partials: Vec<WindowedPartial<Count>> =
             (0..n_slots).map(|_| WindowedPartial::new(Count, self.agg_window_ns)).collect();
-        let mut stage2 =
-            StageTwo::new(self.agg_shards, n_slots, self.agg_window_ns, self.agg_lateness_ns);
+        let mut stage2 = StageTwo::new(
+            self.agg_shards,
+            n_slots,
+            self.agg_window_ns,
+            self.agg_lateness_ns,
+            self.snapshot_every,
+            shard_faults,
+        );
         let mut next_flush = self.agg_flush_ns;
 
         let mut keys: Vec<crate::Key> = Vec::with_capacity(self.batch);
@@ -361,6 +681,7 @@ impl Simulator {
                 for (w, p) in partials.iter_mut().enumerate() {
                     if !alive.contains(&w) {
                         stage2.flush(w, view.now, p);
+                        since_flush[w].clear();
                     }
                 }
             }
@@ -420,6 +741,27 @@ impl Simulator {
                 // panes are assigned by *arrival* (event) time — worker
                 // choice and queueing delay never move a tuple's window
                 partials[w].observe(keys[i - start], 1, arrival);
+                if track_replay {
+                    since_flush[w].push((keys[i - start], arrival));
+                    if let Some(pos) =
+                        worker_faults.iter().position(|&(fw, at)| fw == w && counts[w] >= at)
+                    {
+                        // scripted worker kill: the un-flushed delta dies
+                        // with the worker, the source re-feeds the unacked
+                        // suffix, and the respawn rebuilds the identical
+                        // partial — flushed panes are never re-sent (their
+                        // lane seqs are already absorbed downstream)
+                        worker_faults.swap_remove(pos);
+                        worker_recovery.worker_restarts += 1;
+                        worker_recovery.replayed_tuples += since_flush[w].len() as u64;
+                        let buf = std::mem::take(&mut since_flush[w]);
+                        partials[w] = WindowedPartial::new(Count, self.agg_window_ns);
+                        for &(k, t) in &buf {
+                            partials[w].observe(k, 1, t);
+                        }
+                        since_flush[w] = buf;
+                    }
+                }
             }
 
             // periodic partial flush when virtual time crosses a flush
@@ -430,6 +772,7 @@ impl Simulator {
                 if now >= next_flush {
                     for (w, p) in partials.iter_mut().enumerate() {
                         stage2.flush(w, now, p);
+                        since_flush[w].clear();
                     }
                     // every arrival before `now` is now flushed, so the
                     // watermark is exact: closed panes retire here
@@ -446,8 +789,9 @@ impl Simulator {
         for (w, p) in partials.iter_mut().enumerate() {
             stage2.flush(w, end_of_stream, p);
         }
-        let (merged_counts, shard_agg, windows, window_stats, gather, staleness) =
+        let (merged_counts, shard_agg, windows, window_stats, gather, staleness, mut recovery) =
             stage2.into_results();
+        recovery.absorb(&worker_recovery);
 
         let makespan = done.iter().copied().max().unwrap_or(0);
         SimResult {
@@ -468,6 +812,7 @@ impl Simulator {
             gather,
             windows,
             window_stats,
+            recovery,
         }
     }
 }
@@ -719,6 +1064,75 @@ mod tests {
             assert_eq!(a.makespan, b.makespan, "{kind}");
             assert_eq!(a.entries, b.entries, "{kind}");
         }
+    }
+
+    /// One windowed chaos-capable run: PKG over 8 workers, 3 merge
+    /// shards, 2ms panes over 15ms of virtual time.
+    fn chaos_run(faults: Vec<FaultPoint>, snapshot_every: u64) -> SimResult {
+        let mut cfg = Config::default();
+        cfg.scheme = SchemeKind::Pkg;
+        cfg.workers = 8;
+        cfg.tuples = 30_000;
+        cfg.sources = 2;
+        cfg.interarrival_ns = 500;
+        let topology = Topology::from_config(&cfg);
+        let sources: Vec<Box<dyn Grouper>> = (0..cfg.sources)
+            .map(|s| crate::coordinator::make_scheme(&cfg, s))
+            .collect();
+        let mut sim = Simulator::new(topology, sources, cfg.interarrival_ns)
+            .with_agg_shards(3)
+            .with_agg_window(2_000_000)
+            .with_faults(faults)
+            .with_snapshot_every(snapshot_every);
+        let mut gen = crate::workload::by_name("zf", cfg.tuples, 1.5, cfg.seed);
+        sim.run(gen.as_mut())
+    }
+
+    #[test]
+    fn fault_free_run_reports_zero_recovery() {
+        let r = chaos_run(Vec::new(), 0);
+        assert!(!r.recovery.any());
+        assert_eq!(r.recovery.snapshots, 0);
+    }
+
+    #[test]
+    fn scripted_kills_converge_byte_identically() {
+        let clean = chaos_run(Vec::new(), 0);
+        assert!(!clean.recovery.any());
+        let chaos = chaos_run(
+            vec![
+                FaultPoint::KillWorker { worker: 2, at_tuple: 1_000 },
+                // shard 1 dies before its first snapshot (cold restart,
+                // full log replay); shard 0 dies after one (snapshot
+                // restore + suffix replay)
+                FaultPoint::KillShard { shard: 1, at_flush: 3 },
+                FaultPoint::KillShard { shard: 0, at_flush: 5 },
+            ],
+            4,
+        );
+        // the exactly-once oracle: crashes moved work around, never
+        // results — every output is byte-identical to the clean run
+        assert_eq!(chaos.merged_counts, clean.merged_counts);
+        assert_eq!(chaos.top_k(10), clean.top_k(10));
+        assert_eq!(chaos.windows.len(), clean.windows.len());
+        for (c, r) in chaos.windows.iter().zip(&clean.windows) {
+            assert_eq!(c.window, r.window);
+            assert_eq!(c.counts, r.counts, "window {}", r.window);
+        }
+        assert_eq!(chaos.window_stats.panes_retired, clean.window_stats.panes_retired);
+        // the traffic ledger is exactly-once too: replayed batches land
+        // in restored-from-snapshot or fresh stages, never double-count
+        assert_eq!(chaos.agg.messages, clean.agg.messages);
+        assert_eq!(chaos.agg.bytes, clean.agg.bytes);
+        assert_eq!(chaos.worker_counts, clean.worker_counts);
+        assert_eq!(chaos.makespan, clean.makespan);
+        // …and the recovery ledger shows the crashes actually happened
+        assert_eq!(chaos.recovery.worker_restarts, 1);
+        assert_eq!(chaos.recovery.shard_restarts, 2);
+        assert!(chaos.recovery.replayed_tuples > 0, "worker kill re-fed its suffix");
+        assert!(chaos.recovery.replayed_batches > 0, "shard kills replayed the logs");
+        assert!(chaos.recovery.snapshots > 0, "cadence-4 snapshots fired");
+        assert!(chaos.recovery.restores >= 1, "at least one warm restore");
     }
 
     #[test]

@@ -124,8 +124,27 @@ fn cmd_deploy(args: &Args) -> anyhow::Result<()> {
         .build_rt();
     let n_tuples = job.trace().len();
     let trace = std::sync::Arc::clone(job.trace());
+    // --chaos kill-worker:<n|mid>,kill-shard:<ms|mid>: scripted mid-run
+    // kills; `mid` anchors to the paced stream duration
+    let chaos = match args.get("chaos") {
+        Some(spec) => {
+            let stream_ns = n_tuples as u64 * cfg.interarrival_ns;
+            fish::transport::launch::ChaosPlan::parse(spec, stream_ns)
+                .map_err(|e| anyhow::anyhow!("--chaos: {e}"))?
+        }
+        None => fish::transport::launch::ChaosPlan::default(),
+    };
+    if chaos.armed() && cfg.processes == 0 {
+        anyhow::bail!("--chaos requires --processes N (kills are real child processes)");
+    }
+    if chaos.kill_shard_after_ns.is_some() && cfg.agg_window_ms == 0 {
+        anyhow::bail!(
+            "--chaos kill-shard requires --agg_window_ms > 0 (windowed flushes reach every \
+             shard each round, so the respawned victim is guaranteed reconnections)"
+        );
+    }
     let r = if cfg.processes > 0 {
-        job.run_multiprocess()?
+        job.run_multiprocess_chaos(&chaos)?
     } else {
         job.try_run().map_err(|e| anyhow::anyhow!("deploy failed: {e}"))?
     };
@@ -187,8 +206,55 @@ fn cmd_deploy(args: &Args) -> anyhow::Result<()> {
         t.row(&["peak open panes/shard".into(), r.window_stats.max_open_panes.to_string()]);
         t.row(&["peak open-pane entries".into(), r.window_stats.max_open_entries.to_string()]);
     }
+    if r.recovery.any() {
+        // exactly-once recovery activity (docs/RECOVERY.md): all zeros
+        // on a fault-free run, so these rows only appear under chaos
+        t.row(&["restarts worker/shard".into(), format!(
+            "{}/{}",
+            r.recovery.worker_restarts, r.recovery.shard_restarts
+        )]);
+        t.row(&["recovery wall".into(), ns(r.recovery.recovery_wall_ns)]);
+        t.row(&["replayed flush batches".into(), r.recovery.replayed_batches.to_string()]);
+        t.row(&["deduped flush batches".into(), r.recovery.deduped_batches.to_string()]);
+        t.row(&["replayed tuples".into(), r.recovery.replayed_tuples.to_string()]);
+        t.row(&["replay ratio".into(), f2(r.recovery.replay_ratio(r.agg.flushes))]);
+        t.row(&["snapshots (bytes)".into(), format!(
+            "{} ({} B)",
+            r.recovery.snapshots, r.recovery.snapshot_bytes
+        )]);
+        t.row(&["snapshot restores".into(), r.recovery.restores.to_string()]);
+    }
     t.row(&["wall time".into(), ns(r.wall_ns)]);
     t.print();
+
+    // --recovery-json PATH: machine-readable recovery metrics (the CI
+    // chaos lane uploads this and gates on it via scripts/check_perf.py)
+    if let Some(path) = args.get("recovery-json") {
+        let rec = &r.recovery;
+        let json = format!(
+            "{{\n  \"wall_ns\": {},\n  \"worker_restarts\": {},\n  \"shard_restarts\": {},\n  \
+             \"recovery_wall_ns\": {},\n  \"replayed_batches\": {},\n  \"deduped_batches\": {},\n  \
+             \"buffered_batches\": {},\n  \"replayed_tuples\": {},\n  \"snapshots\": {},\n  \
+             \"snapshot_bytes\": {},\n  \"restores\": {},\n  \"absorbed_flushes\": {},\n  \
+             \"replay_ratio\": {:.6}\n}}\n",
+            r.wall_ns,
+            rec.worker_restarts,
+            rec.shard_restarts,
+            rec.recovery_wall_ns,
+            rec.replayed_batches,
+            rec.deduped_batches,
+            rec.buffered_batches,
+            rec.replayed_tuples,
+            rec.snapshots,
+            rec.snapshot_bytes,
+            rec.restores,
+            r.agg.flushes,
+            rec.replay_ratio(r.agg.flushes),
+        );
+        std::fs::write(path, json)
+            .map_err(|e| anyhow::anyhow!("--recovery-json {path}: {e}"))?;
+        println!("recovery metrics written to {path}");
+    }
 
     // --verify: re-run the same trace through the in-process loopback
     // engine and insist every transport-invariant output matches
@@ -328,7 +394,9 @@ fn usage() -> ! {
          [--transport loopback|uds|tcp] [--rebalance_threshold F] \
          [--identifier native|xla-cms] [--seed N] ...\n       \
          deploy also takes [--processes N] (N worker processes + one per merge \
-         shard) and [--verify] (check against the in-process reference)\n       \
+         shard), [--verify] (check against the in-process reference), \
+         [--chaos kill-worker:<n|mid>,kill-shard:<ms|mid>] (scripted mid-run kills; \
+         recovery must still verify exactly) and [--recovery-json PATH]\n       \
          lint takes [--src DIR] (default rust/src) and [--json]; exits 1 on findings"
     );
     std::process::exit(2);

@@ -5,10 +5,12 @@ pub mod agg;
 pub mod histogram;
 pub mod imbalance;
 pub mod memory;
+pub mod recovery;
 pub mod wire;
 
 pub use agg::{AggStats, ShardAggStats, WindowStats};
 pub use histogram::Histogram;
 pub use imbalance::Imbalance;
 pub use memory::MemoryTracker;
+pub use recovery::{RecoveryLedger, RecoveryStats};
 pub use wire::{WireLedger, WireStats};

@@ -1,0 +1,198 @@
+//! Crash-recovery ledger: what exactly-once costs when something dies.
+//!
+//! The recovery protocol (docs/RECOVERY.md) has three moving parts —
+//! worker-side flush replay logs, shard-side sequencer dedup, and
+//! periodic shard snapshots — and each is metered here. Socket lanes
+//! and shard loops share one [`RecoveryLedger`] per process (an
+//! `Arc<RecoveryLedger>` cloned into every endpoint, exactly like
+//! [`crate::metrics::WireLedger`]); multi-process children snapshot
+//! their ledger into the `Done` frame and the coordinator folds the
+//! copies — plus its own restart/wall-time observations — with
+//! [`RecoveryStats::absorb`]. A run with no faults injected reports an
+//! all-zero [`RecoveryStats`], so report tables can skip the recovery
+//! rows entirely.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared, thread-safe recovery counters for one process.
+#[derive(Debug, Default)]
+pub struct RecoveryLedger {
+    replayed_batches: AtomicU64,
+    deduped_batches: AtomicU64,
+    buffered_batches: AtomicU64,
+    replayed_tuples: AtomicU64,
+    snapshots: AtomicU64,
+    snapshot_bytes: AtomicU64,
+    restores: AtomicU64,
+}
+
+impl RecoveryLedger {
+    /// Fresh zeroed ledger.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A worker re-sent one flush batch from its replay log.
+    pub fn record_replayed_batch(&self) {
+        self.replayed_batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A shard sequencer dropped one already-absorbed batch.
+    pub fn record_deduped_batch(&self) {
+        self.deduped_batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A shard sequencer parked one ahead-of-gap batch.
+    pub fn record_buffered_batch(&self) {
+        self.buffered_batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A source re-sent `n` tuples to a respawned worker.
+    pub fn record_replayed_tuples(&self, n: u64) {
+        self.replayed_tuples.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// A shard wrote one snapshot of `bytes` serialized bytes.
+    pub fn record_snapshot(&self, bytes: u64) {
+        self.snapshots.fetch_add(1, Ordering::Relaxed);
+        self.snapshot_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// A restarted shard reinstated state from a snapshot.
+    pub fn record_restore(&self) {
+        self.restores.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of the counters (restart and wall-time
+    /// fields zero — those are coordinator observations).
+    pub fn snapshot(&self) -> RecoveryStats {
+        RecoveryStats {
+            replayed_batches: self.replayed_batches.load(Ordering::Relaxed),
+            deduped_batches: self.deduped_batches.load(Ordering::Relaxed),
+            buffered_batches: self.buffered_batches.load(Ordering::Relaxed),
+            replayed_tuples: self.replayed_tuples.load(Ordering::Relaxed),
+            snapshots: self.snapshots.load(Ordering::Relaxed),
+            snapshot_bytes: self.snapshot_bytes.load(Ordering::Relaxed),
+            restores: self.restores.load(Ordering::Relaxed),
+            worker_restarts: 0,
+            shard_restarts: 0,
+            recovery_wall_ns: 0,
+        }
+    }
+}
+
+/// A foldable snapshot of one run's recovery activity.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Flush batches re-sent from worker replay logs after a shard
+    /// restart (or a worker restart resuming mid-stream).
+    pub replayed_batches: u64,
+    /// Replayed batches the shard sequencers dropped as already
+    /// absorbed — every one of these would have been a double count.
+    pub deduped_batches: u64,
+    /// Batches parked ahead of a sequence gap until the gap filled.
+    pub buffered_batches: u64,
+    /// Source→worker tuples re-sent to a respawned worker.
+    pub replayed_tuples: u64,
+    /// Shard snapshots written.
+    pub snapshots: u64,
+    /// Serialized snapshot bytes written.
+    pub snapshot_bytes: u64,
+    /// Snapshot loads (restarts that recovered persisted state).
+    pub restores: u64,
+    /// Worker processes killed and respawned (coordinator-observed).
+    pub worker_restarts: u64,
+    /// Shard processes killed and respawned (coordinator-observed).
+    pub shard_restarts: u64,
+    /// Wall time from kill to mesh rejoin, summed over restarts
+    /// (coordinator-observed; 0 for in-process sim kills, which are
+    /// instantaneous in virtual time).
+    pub recovery_wall_ns: u64,
+}
+
+impl RecoveryStats {
+    /// True when any recovery machinery fired (fault-free runs stay
+    /// false, so reports can skip the recovery rows).
+    pub fn any(&self) -> bool {
+        *self != RecoveryStats::default()
+    }
+
+    /// Replayed batches as a fraction of batches a shard absorbed
+    /// (`flushes` from the aggregation ledger) — the wasted-work ratio
+    /// the perf gate bounds.
+    pub fn replay_ratio(&self, absorbed_flushes: u64) -> f64 {
+        if absorbed_flushes == 0 {
+            0.0
+        } else {
+            self.replayed_batches as f64 / absorbed_flushes as f64
+        }
+    }
+
+    /// Fold another process's stats into this one.
+    pub fn absorb(&mut self, other: &RecoveryStats) {
+        self.replayed_batches += other.replayed_batches;
+        self.deduped_batches += other.deduped_batches;
+        self.buffered_batches += other.buffered_batches;
+        self.replayed_tuples += other.replayed_tuples;
+        self.snapshots += other.snapshots;
+        self.snapshot_bytes += other.snapshot_bytes;
+        self.restores += other.restores;
+        self.worker_restarts += other.worker_restarts;
+        self.shard_restarts += other.shard_restarts;
+        self.recovery_wall_ns += other.recovery_wall_ns;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_records_and_snapshots() {
+        let ledger = RecoveryLedger::new();
+        ledger.record_replayed_batch();
+        ledger.record_replayed_batch();
+        ledger.record_deduped_batch();
+        ledger.record_buffered_batch();
+        ledger.record_replayed_tuples(128);
+        ledger.record_snapshot(4_096);
+        ledger.record_snapshot(4_200);
+        ledger.record_restore();
+        let s = ledger.snapshot();
+        assert_eq!(s.replayed_batches, 2);
+        assert_eq!(s.deduped_batches, 1);
+        assert_eq!(s.buffered_batches, 1);
+        assert_eq!(s.replayed_tuples, 128);
+        assert_eq!(s.snapshots, 2);
+        assert_eq!(s.snapshot_bytes, 8_296);
+        assert_eq!(s.restores, 1);
+        assert!(s.any());
+        assert!((s.replay_ratio(100) - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fault_free_runs_report_nothing() {
+        let s = RecoveryLedger::new().snapshot();
+        assert!(!s.any());
+        assert_eq!(s.replay_ratio(0), 0.0);
+        assert_eq!(s, RecoveryStats::default());
+    }
+
+    #[test]
+    fn stats_fold_across_processes() {
+        let mut a = RecoveryStats { replayed_batches: 3, snapshots: 2, ..Default::default() };
+        let b = RecoveryStats {
+            replayed_batches: 1,
+            deduped_batches: 4,
+            shard_restarts: 1,
+            recovery_wall_ns: 5_000,
+            ..Default::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.replayed_batches, 4);
+        assert_eq!(a.deduped_batches, 4);
+        assert_eq!(a.snapshots, 2);
+        assert_eq!(a.shard_restarts, 1);
+        assert_eq!(a.recovery_wall_ns, 5_000);
+    }
+}

@@ -6,6 +6,15 @@
 //! migrated. [`StateStore`] tracks the cluster's state placement;
 //! [`MigrationPlan`] computes and applies the minimal move set for a
 //! mapping change, and its size is the §6.5 migration-cost metric.
+//!
+//! [`snapshot`] is the other durability axis: periodic merge-shard
+//! snapshots (sequencer + panes + ledgers) that let a crashed shard
+//! process rejoin the mesh and converge byte-identically
+//! (docs/RECOVERY.md).
+
+pub mod snapshot;
+
+pub use snapshot::ShardSnapshot;
 
 use crate::{Key, WorkerId};
 use std::collections::HashMap;

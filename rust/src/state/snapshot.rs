@@ -1,0 +1,455 @@
+//! Shard snapshot codec: the persistent half of exactly-once recovery.
+//!
+//! A merge shard periodically serializes everything a restarted
+//! replacement needs to converge byte-identically (docs/RECOVERY.md):
+//! the per-worker expected flush sequence numbers (its
+//! [`crate::aggregate::FlushSequencer`] state), per-worker watermark
+//! high-water marks, the full windowed-merge state
+//! ([`crate::aggregate::MergeSnapshot`]: open panes, retired panes,
+//! both stat ledgers), the shard-level gather sketch (tracked entries
+//! plus inherited error — [`crate::aggregate::TopKSketch::from_parts`]
+//! rebuilds it exactly), any flush batches parked ahead of a sequence
+//! gap, the flush-latency histogram, and the recovery ledger itself.
+//!
+//! The byte format follows the wire codec's conventions — little
+//! endian, u32 counts up front, allocation guarded by
+//! remaining-byte lower bounds, and **every strict prefix of a valid
+//! encoding fails with [`WireError::Truncated`]** (property-tested at
+//! every byte offset, like the wire frames). Parked flush batches are
+//! embedded as full `Flush` wire frames, so the snapshot and wire
+//! codecs cannot drift apart on the one payload they share.
+//!
+//! [`ShardSnapshot::persist`] is crash-safe against SIGKILL: bytes go
+//! to a sibling temp file, `sync_all`, then an atomic rename — a
+//! reader sees either the previous complete snapshot or the new one,
+//! never a torn write.
+
+use crate::aggregate::{MergeSnapshot, PaneState};
+use crate::metrics::{AggStats, Histogram, RecoveryStats, WindowStats};
+use crate::Key;
+use crate::transport::wire::{
+    self, decode_frame, encode_flush, FlushMsg, Frame, Reader, WireError,
+};
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// 4-byte snapshot magic ("FSHS": FISH Snapshot).
+pub const SNAP_MAGIC: [u8; 4] = *b"FSHS";
+/// Current snapshot-format version.
+pub const SNAP_VERSION: u8 = 1;
+
+/// Everything one merge shard persists per snapshot.
+#[derive(Debug, Clone)]
+pub struct ShardSnapshot {
+    /// Shard index (sanity-checked by the loader's caller).
+    pub shard: u64,
+    /// Per-worker next expected flush seq — the `Resume` answers a
+    /// restarted shard gives, and the dedup threshold for replays.
+    pub expected_seq: Vec<u64>,
+    /// Per-worker event-time watermark high-water marks (the shard
+    /// watermark is their minimum over started workers).
+    pub worker_wm: Vec<u64>,
+    /// The windowed-merge state (open + retired panes, ledgers).
+    pub merge: MergeSnapshot,
+    /// Tracked entries of the shard-level gather sketch, ascending by
+    /// key. Pane sketches inside `merge` cover per-window top-k; this
+    /// one is the all-time sketch the gather stage folds, and it is
+    /// *not* reconstructible from replay — batches below the expected
+    /// seq are never re-sent.
+    pub sketch_entries: Vec<(Key, f64)>,
+    /// The gather sketch's inherited merge error.
+    pub sketch_error: f64,
+    /// Flush batches parked ahead of a sequence gap at snapshot time.
+    pub buffered: Vec<FlushMsg>,
+    /// Flush→merge transit latency histogram.
+    pub latency: Histogram,
+    /// The shard's recovery ledger (cumulative across restarts).
+    pub recovery: RecoveryStats,
+}
+
+fn put_agg_stats(buf: &mut Vec<u8>, s: &AggStats) {
+    wire::put_u64(buf, s.flushes);
+    wire::put_u64(buf, s.messages);
+    wire::put_u64(buf, s.bytes);
+    wire::put_u64(buf, s.merge_ns);
+    wire::put_u64(buf, s.max_merge_ns);
+}
+
+fn get_agg_stats(r: &mut Reader<'_>) -> Result<AggStats, WireError> {
+    Ok(AggStats {
+        flushes: r.u64()?,
+        messages: r.u64()?,
+        bytes: r.u64()?,
+        merge_ns: r.u64()?,
+        max_merge_ns: r.u64()?,
+    })
+}
+
+fn put_window_stats(buf: &mut Vec<u8>, s: &WindowStats) {
+    wire::put_u64(buf, s.panes_opened);
+    wire::put_u64(buf, s.panes_retired);
+    wire::put_u64(buf, s.late_reopens);
+    wire::put_u64(buf, s.late_reopen_mass);
+    wire::put_u64(buf, s.max_open_panes);
+    wire::put_u64(buf, s.max_open_entries);
+}
+
+fn get_window_stats(r: &mut Reader<'_>) -> Result<WindowStats, WireError> {
+    Ok(WindowStats {
+        panes_opened: r.u64()?,
+        panes_retired: r.u64()?,
+        late_reopens: r.u64()?,
+        late_reopen_mass: r.u64()?,
+        max_open_panes: r.u64()?,
+        max_open_entries: r.u64()?,
+    })
+}
+
+fn put_pane(buf: &mut Vec<u8>, p: &PaneState) {
+    wire::put_u64(buf, p.window);
+    wire::put_u32(buf, p.counts.len() as u32);
+    for &(k, c) in &p.counts {
+        wire::put_u64(buf, k);
+        wire::put_u64(buf, c);
+    }
+    put_agg_stats(buf, &p.stats);
+    wire::put_u32(buf, p.sketch_entries.len() as u32);
+    for &(k, w) in &p.sketch_entries {
+        wire::put_u64(buf, k);
+        wire::put_f64(buf, w);
+    }
+    wire::put_f64(buf, p.sketch_error);
+}
+
+fn get_pane(r: &mut Reader<'_>) -> Result<PaneState, WireError> {
+    let window = r.u64()?;
+    let n_counts = r.u32()? as usize;
+    if r.remaining() < n_counts.saturating_mul(16) {
+        return Err(WireError::Truncated);
+    }
+    let mut counts = Vec::with_capacity(n_counts);
+    for _ in 0..n_counts {
+        counts.push((r.u64()?, r.u64()?));
+    }
+    let stats = get_agg_stats(r)?;
+    let n_sketch = r.u32()? as usize;
+    if r.remaining() < n_sketch.saturating_mul(16) {
+        return Err(WireError::Truncated);
+    }
+    let mut sketch_entries = Vec::with_capacity(n_sketch);
+    for _ in 0..n_sketch {
+        sketch_entries.push((r.u64()?, r.f64()?));
+    }
+    let sketch_error = r.f64()?;
+    Ok(PaneState { window, counts, stats, sketch_entries, sketch_error })
+}
+
+fn get_panes(r: &mut Reader<'_>) -> Result<Vec<PaneState>, WireError> {
+    let n = r.u32()? as usize;
+    // 44 bytes (window + two counts + stats) is the tightest per-pane
+    // lower bound — enough to reject absurd counts before allocating
+    if r.remaining() < n.saturating_mul(44) {
+        return Err(WireError::Truncated);
+    }
+    let mut panes = Vec::with_capacity(n);
+    for _ in 0..n {
+        panes.push(get_pane(r)?);
+    }
+    Ok(panes)
+}
+
+fn get_u64s(r: &mut Reader<'_>, n: usize) -> Result<Vec<u64>, WireError> {
+    if r.remaining() < n.saturating_mul(8) {
+        return Err(WireError::Truncated);
+    }
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(r.u64()?);
+    }
+    Ok(v)
+}
+
+impl ShardSnapshot {
+    /// Serialize to the snapshot byte format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&SNAP_MAGIC);
+        buf.push(SNAP_VERSION);
+        wire::put_u64(&mut buf, self.shard);
+        wire::put_u32(&mut buf, self.expected_seq.len() as u32);
+        for &s in &self.expected_seq {
+            wire::put_u64(&mut buf, s);
+        }
+        for &w in &self.worker_wm {
+            wire::put_u64(&mut buf, w);
+        }
+        wire::put_u64(&mut buf, self.merge.watermark);
+        wire::put_u32(&mut buf, self.merge.open.len() as u32);
+        for p in &self.merge.open {
+            put_pane(&mut buf, p);
+        }
+        wire::put_u32(&mut buf, self.merge.retired.len() as u32);
+        for p in &self.merge.retired {
+            put_pane(&mut buf, p);
+        }
+        put_agg_stats(&mut buf, &self.merge.retired_stats);
+        put_window_stats(&mut buf, &self.merge.window_stats);
+        wire::put_u32(&mut buf, self.sketch_entries.len() as u32);
+        for &(k, w) in &self.sketch_entries {
+            wire::put_u64(&mut buf, k);
+            wire::put_f64(&mut buf, w);
+        }
+        wire::put_f64(&mut buf, self.sketch_error);
+        wire::put_u32(&mut buf, self.buffered.len() as u32);
+        for msg in &self.buffered {
+            let mut frame = Vec::new();
+            encode_flush(msg, &mut frame);
+            wire::put_u32(&mut buf, frame.len() as u32);
+            buf.extend_from_slice(&frame);
+        }
+        let mut hist = Vec::new();
+        self.latency.to_bytes(&mut hist);
+        wire::put_u32(&mut buf, hist.len() as u32);
+        buf.extend_from_slice(&hist);
+        let rec = &self.recovery;
+        for v in [
+            rec.replayed_batches,
+            rec.deduped_batches,
+            rec.buffered_batches,
+            rec.replayed_tuples,
+            rec.snapshots,
+            rec.snapshot_bytes,
+            rec.restores,
+            rec.worker_restarts,
+            rec.shard_restarts,
+            rec.recovery_wall_ns,
+        ] {
+            wire::put_u64(&mut buf, v);
+        }
+        buf
+    }
+
+    /// Decode a snapshot; every strict prefix of a valid encoding is
+    /// [`WireError::Truncated`], trailing bytes are rejected.
+    pub fn from_bytes(bytes: &[u8]) -> Result<ShardSnapshot, WireError> {
+        let mut r = Reader::new(bytes);
+        if r.take(4)? != SNAP_MAGIC {
+            return Err(WireError::BadMagic);
+        }
+        let version = r.u8()?;
+        if version != SNAP_VERSION {
+            return Err(WireError::VersionMismatch { got: version, want: SNAP_VERSION });
+        }
+        let shard = r.u64()?;
+        let n_workers = r.u32()? as usize;
+        let expected_seq = get_u64s(&mut r, n_workers)?;
+        let worker_wm = get_u64s(&mut r, n_workers)?;
+        let watermark = r.u64()?;
+        let open = get_panes(&mut r)?;
+        let retired = get_panes(&mut r)?;
+        let retired_stats = get_agg_stats(&mut r)?;
+        let window_stats = get_window_stats(&mut r)?;
+        let n_sketch = r.u32()? as usize;
+        if r.remaining() < n_sketch.saturating_mul(16) {
+            return Err(WireError::Truncated);
+        }
+        let mut sketch_entries = Vec::with_capacity(n_sketch);
+        for _ in 0..n_sketch {
+            sketch_entries.push((r.u64()?, r.f64()?));
+        }
+        let sketch_error = r.f64()?;
+        let n_buffered = r.u32()? as usize;
+        if r.remaining() < n_buffered.saturating_mul(4 + wire::HEADER_LEN) {
+            return Err(WireError::Truncated);
+        }
+        let mut buffered = Vec::with_capacity(n_buffered);
+        for _ in 0..n_buffered {
+            let len = r.u32()? as usize;
+            let frame_bytes = r.take(len)?;
+            match decode_frame(frame_bytes)? {
+                (Frame::Flush(msg), used) if used == len => buffered.push(msg),
+                _ => {
+                    return Err(WireError::Io(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "non-flush frame parked in snapshot",
+                    )))
+                }
+            }
+        }
+        let hist_len = r.u32()? as usize;
+        let latency =
+            Histogram::from_bytes(r.take(hist_len)?).ok_or(WireError::Truncated)?;
+        let recovery = RecoveryStats {
+            replayed_batches: r.u64()?,
+            deduped_batches: r.u64()?,
+            buffered_batches: r.u64()?,
+            replayed_tuples: r.u64()?,
+            snapshots: r.u64()?,
+            snapshot_bytes: r.u64()?,
+            restores: r.u64()?,
+            worker_restarts: r.u64()?,
+            shard_restarts: r.u64()?,
+            recovery_wall_ns: r.u64()?,
+        };
+        if r.remaining() != 0 {
+            return Err(WireError::Io(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "trailing bytes after snapshot",
+            )));
+        }
+        Ok(ShardSnapshot {
+            shard,
+            expected_seq,
+            worker_wm,
+            merge: MergeSnapshot { watermark, open, retired, retired_stats, window_stats },
+            sketch_entries,
+            sketch_error,
+            buffered,
+            latency,
+            recovery,
+        })
+    }
+
+    /// Persist atomically: write a sibling temp file, `sync_all`, then
+    /// rename over `path`. Survives SIGKILL at any point — a reader
+    /// sees the previous complete snapshot or this one, never a torn
+    /// write. Returns the serialized size in bytes.
+    pub fn persist(&self, path: &Path) -> io::Result<u64> {
+        let bytes = self.to_bytes();
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = fs::File::create(&tmp)?;
+            io::Write::write_all(&mut f, &bytes)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, path)?;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Load the snapshot at `path`; `Ok(None)` when no snapshot was
+    /// ever persisted (a shard restarting before its first snapshot
+    /// starts fresh and relies on full replay).
+    pub fn load(path: &Path) -> io::Result<Option<ShardSnapshot>> {
+        let bytes = match fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e),
+        };
+        ShardSnapshot::from_bytes(&bytes)
+            .map(Some)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("bad snapshot: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregate::{Count, WindowedMerge};
+
+    fn specimen() -> ShardSnapshot {
+        let mut m = WindowedMerge::new(Count, 1_000, 8).with_lateness(250);
+        m.absorb(0, vec![(1, 5), (9, 2)]);
+        m.absorb(1, vec![(3, 1)]);
+        m.advance(2_600); // retires pane 0 and 1
+        m.absorb(2, vec![(1, 4), (7, 7)]);
+        let mut latency = Histogram::new();
+        for ns in [100u64, 5_000, 5_000, 90_000] {
+            latency.record(ns);
+        }
+        ShardSnapshot {
+            shard: 1,
+            expected_seq: vec![3, 0, 7],
+            worker_wm: vec![2_600, 0, 3_100],
+            merge: m.snapshot(),
+            sketch_entries: vec![(1, 9.0), (3, 1.0), (7, 7.0)],
+            sketch_error: 0.25,
+            buffered: vec![FlushMsg {
+                worker: 2,
+                seq: 8,
+                emit_ns: 123,
+                watermark: 3_200,
+                panes: vec![(3, vec![(4, 1)])],
+            }],
+            latency,
+            recovery: RecoveryStats {
+                replayed_batches: 2,
+                deduped_batches: 1,
+                snapshots: 4,
+                snapshot_bytes: 1_000,
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn snapshot_round_trips_byte_identically() {
+        let snap = specimen();
+        let bytes = snap.to_bytes();
+        let back = ShardSnapshot::from_bytes(&bytes).expect("decode");
+        // re-encoding the decoded snapshot must reproduce the bytes —
+        // stronger than field equality, and covers the ledgers, which
+        // deliberately do not implement PartialEq
+        assert_eq!(back.to_bytes(), bytes);
+        assert_eq!(back.shard, snap.shard);
+        assert_eq!(back.expected_seq, snap.expected_seq);
+        assert_eq!(back.worker_wm, snap.worker_wm);
+        assert_eq!(back.sketch_entries, snap.sketch_entries);
+        assert_eq!(back.sketch_error, snap.sketch_error);
+        assert_eq!(back.buffered, snap.buffered);
+        assert_eq!(back.recovery, snap.recovery);
+        assert_eq!(back.latency.count(), snap.latency.count());
+        assert_eq!(back.merge.watermark, snap.merge.watermark);
+        assert_eq!(back.merge.open.len(), 1);
+        assert_eq!(back.merge.retired.len(), 2);
+    }
+
+    #[test]
+    fn every_strict_prefix_is_truncated() {
+        let bytes = specimen().to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(
+                matches!(ShardSnapshot::from_bytes(&bytes[..cut]), Err(WireError::Truncated)),
+                "prefix of {cut}/{} bytes must be Truncated",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_magic_version_and_trailing_bytes_are_rejected() {
+        let bytes = specimen().to_bytes();
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] = b'X';
+        assert!(matches!(ShardSnapshot::from_bytes(&bad_magic), Err(WireError::BadMagic)));
+        let mut bad_version = bytes.clone();
+        bad_version[4] = SNAP_VERSION + 1;
+        assert!(matches!(
+            ShardSnapshot::from_bytes(&bad_version),
+            Err(WireError::VersionMismatch { .. })
+        ));
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(ShardSnapshot::from_bytes(&trailing).is_err());
+    }
+
+    #[test]
+    fn persist_is_atomic_and_load_round_trips() {
+        let snap = specimen();
+        let path = std::env::temp_dir()
+            .join(format!("fish-snap-test-{}.snap", std::process::id()));
+        assert!(ShardSnapshot::load(&path).expect("missing file is Ok(None)").is_none());
+        let bytes = snap.persist(&path).expect("persist");
+        assert_eq!(bytes, snap.to_bytes().len() as u64);
+        assert!(!path.with_extension("tmp").exists(), "temp file renamed away");
+        let back = ShardSnapshot::load(&path).expect("load").expect("present");
+        assert_eq!(back.to_bytes(), snap.to_bytes());
+        // persist over an existing snapshot replaces it atomically
+        let mut next = snap.clone();
+        next.expected_seq[0] += 1;
+        next.persist(&path).expect("re-persist");
+        let newest = ShardSnapshot::load(&path).expect("load").expect("present");
+        assert_eq!(newest.expected_seq[0], snap.expected_seq[0] + 1);
+        let _ = std::fs::remove_file(&path);
+    }
+}

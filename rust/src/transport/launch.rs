@@ -22,24 +22,44 @@
 //!    process boundary.
 //!
 //! When a child finishes it serializes its results (histograms,
-//! merged windows, sketches, wire ledger) into an opaque `Done` frame
-//! on the control connection; the coordinator deserializes and
-//! assembles them with the same [`rt::assemble_shards`] fold the
-//! threaded engine uses. Latency stamps cross process boundaries via
-//! the unix [`Clock`] against a coordinator-chosen epoch.
+//! merged windows, sketches, wire ledger, recovery counters) into an
+//! opaque `Done` frame on the control connection; the coordinator
+//! deserializes and assembles them with the same
+//! [`rt::assemble_shards`] fold the threaded engine uses. Latency
+//! stamps cross process boundaries via the unix [`Clock`] against a
+//! coordinator-chosen epoch.
+//!
+//! **Chaos** (`--chaos kill-worker:<n>,kill-shard:<t>`): with a
+//! [`ChaosPlan`] armed, every lane runs restart-aware — sources dial
+//! workers through [`AddrCell`]s and keep unacked replay windows,
+//! workers dial shards through [`AddrCell`]s and keep seq-stamped
+//! flush logs, and shard children snapshot through the
+//! [`ShardSnapshot`] codec on a cadence. A supervisor thread then
+//! SIGKILLs the victim shard (and/or waits for the victim worker's
+//! scripted crash), respawns the child re-executing this binary with
+//! `--resume`, and relays the respawn's fresh address: `Hello{role:2}`
+//! frames down the worker control connections for a shard, an
+//! [`AddrCell`] bump for a worker. Replays, dedups, snapshot and
+//! restore work, and coordinator-measured recovery wall time land in
+//! [`RtResult::recovery`] (docs/RECOVERY.md).
 
-use super::socket::{self, Duplex, SocketFlushTx, SocketTupleRx, SocketTupleTx};
+use super::socket::{self, AddrCell, Duplex, Listener, SocketFlushTx, SocketTupleRx, SocketTupleTx};
 use super::wire::{self, Frame, Reader, WireError};
 use super::{Clock, FlushTx, TransportKind, TupleTx};
 use crate::aggregate::{ShardRouter, TopKSketch, WindowResult, WindowedOutput};
 use crate::coordinator::Grouper;
 use crate::engine::rt::{self, RtOptions, RtResult};
-use crate::metrics::{AggStats, Histogram, WindowStats, WireLedger, WireStats};
+use crate::metrics::{
+    AggStats, Histogram, RecoveryLedger, RecoveryStats, WindowStats, WireLedger, WireStats,
+};
+use crate::state::ShardSnapshot;
 use crate::workload::Trace;
 use std::io::{self, Write};
+use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
 use std::thread;
+use std::time::{Duration, Instant};
 
 /// Pick the socket transport a multi-process run uses when the config
 /// still says `loopback` (which cannot cross a process boundary).
@@ -91,6 +111,97 @@ fn arg_u64(args: &[String], key: &str) -> io::Result<u64> {
     arg(args, key)?
         .parse::<u64>()
         .map_err(|e| proto_err(format!("bad child argument {key}: {e}")))
+}
+
+fn arg_opt<'a>(args: &'a [String], key: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn arg_opt_u64(args: &[String], key: &str) -> io::Result<Option<u64>> {
+    match arg_opt(args, key) {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<u64>()
+            .map(Some)
+            .map_err(|e| proto_err(format!("bad child argument {key}: {e}"))),
+    }
+}
+
+// ---- chaos plan ------------------------------------------------------
+
+/// Snapshot cadence (accepted flush batches) shard children run at
+/// while chaos is armed.
+pub const CHAOS_SNAPSHOT_EVERY: u64 = 8;
+
+/// Flush rounds a `kill-worker:mid` victim survives before its
+/// scripted crash.
+const KILL_WORKER_MID_FLUSHES: u64 = 2;
+
+/// Wall delay a `kill-shard:mid` uses when the stream length is
+/// unknown (unpaced sources).
+const KILL_SHARD_FALLBACK_NS: u64 = 10_000_000;
+
+/// Parsed `--chaos` spec: which scripted kills a deploy run performs.
+/// `Default` (both `None`) means fault-free — every lane then runs the
+/// plain non-logging path.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChaosPlan {
+    /// Worker 0 crashes cooperatively after this many flush rounds
+    /// (`kill-worker:<n>`; `mid` = after 2 rounds).
+    pub kill_worker_after_flushes: Option<u64>,
+    /// Shard 0 is killed this many wall ns after the sources start
+    /// (`kill-shard:<ms>`; `mid` = half the paced stream duration).
+    pub kill_shard_after_ns: Option<u64>,
+}
+
+impl ChaosPlan {
+    /// Whether any kill is scripted (gates all recovery machinery).
+    pub fn armed(&self) -> bool {
+        self.kill_worker_after_flushes.is_some() || self.kill_shard_after_ns.is_some()
+    }
+
+    /// Parse a `--chaos` spec: comma-separated `kill-worker:<n|mid>` /
+    /// `kill-shard:<ms|mid>` entries. `stream_ns` is the paced stream
+    /// duration (`tuples × interarrival`), which anchors `mid`; 0 means
+    /// unpaced and `kill-shard:mid` falls back to a fixed early delay.
+    pub fn parse(spec: &str, stream_ns: u64) -> Result<ChaosPlan, String> {
+        let mut plan = ChaosPlan::default();
+        for entry in spec.split(',').filter(|e| !e.is_empty()) {
+            let (kind, val) = entry
+                .split_once(':')
+                .ok_or_else(|| format!("chaos entry `{entry}` is not kind:value"))?;
+            match kind {
+                "kill-worker" => {
+                    let n = if val == "mid" {
+                        KILL_WORKER_MID_FLUSHES
+                    } else {
+                        val.parse::<u64>()
+                            .map_err(|e| format!("bad kill-worker count `{val}`: {e}"))?
+                    };
+                    plan.kill_worker_after_flushes = Some(n.max(1));
+                }
+                "kill-shard" => {
+                    let ns = if val == "mid" {
+                        if stream_ns > 0 {
+                            stream_ns / 2
+                        } else {
+                            KILL_SHARD_FALLBACK_NS
+                        }
+                    } else {
+                        val.parse::<u64>()
+                            .map_err(|e| format!("bad kill-shard delay `{val}`: {e}"))?
+                            .saturating_mul(1_000_000)
+                    };
+                    plan.kill_shard_after_ns = Some(ns);
+                }
+                other => return Err(format!("unknown chaos kind `{other}`")),
+            }
+        }
+        Ok(plan)
+    }
 }
 
 // ---- Done-payload serialization -------------------------------------
@@ -188,12 +299,64 @@ fn get_wire_stats(r: &mut Reader) -> Result<WireStats, WireError> {
     })
 }
 
+fn put_recovery_stats(s: &RecoveryStats, buf: &mut Vec<u8>) {
+    for v in [
+        s.replayed_batches,
+        s.deduped_batches,
+        s.buffered_batches,
+        s.replayed_tuples,
+        s.snapshots,
+        s.snapshot_bytes,
+        s.restores,
+        s.worker_restarts,
+        s.shard_restarts,
+        s.recovery_wall_ns,
+    ] {
+        wire::put_u64(buf, v);
+    }
+}
+
+fn get_recovery_stats(r: &mut Reader) -> Result<RecoveryStats, WireError> {
+    Ok(RecoveryStats {
+        replayed_batches: r.u64()?,
+        deduped_batches: r.u64()?,
+        buffered_batches: r.u64()?,
+        replayed_tuples: r.u64()?,
+        snapshots: r.u64()?,
+        snapshot_bytes: r.u64()?,
+        restores: r.u64()?,
+        worker_restarts: r.u64()?,
+        shard_restarts: r.u64()?,
+        recovery_wall_ns: r.u64()?,
+    })
+}
+
+fn put_u64s(v: &[u64], buf: &mut Vec<u8>) {
+    wire::put_u32(buf, v.len() as u32);
+    for &x in v {
+        wire::put_u64(buf, x);
+    }
+}
+
+fn get_u64s(r: &mut Reader) -> Result<Vec<u64>, WireError> {
+    let n = r.u32()? as usize;
+    if r.remaining() < n.saturating_mul(8) {
+        return Err(WireError::Truncated);
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(r.u64()?);
+    }
+    Ok(out)
+}
+
 /// What one worker child reports back.
 struct WorkerDone {
     latency: Histogram,
     count: u64,
     state_len: usize,
     wire: WireStats,
+    recovery: RecoveryStats,
 }
 
 fn put_worker_done(d: &WorkerDone, buf: &mut Vec<u8>) {
@@ -201,6 +364,7 @@ fn put_worker_done(d: &WorkerDone, buf: &mut Vec<u8>) {
     wire::put_u64(buf, d.state_len as u64);
     put_histogram(&d.latency, buf);
     put_wire_stats(&d.wire, buf);
+    put_recovery_stats(&d.recovery, buf);
 }
 
 fn get_worker_done(payload: &[u8]) -> Result<WorkerDone, WireError> {
@@ -209,15 +373,18 @@ fn get_worker_done(payload: &[u8]) -> Result<WorkerDone, WireError> {
     let state_len = r.u64()? as usize;
     let latency = get_histogram(&mut r)?;
     let wire = get_wire_stats(&mut r)?;
-    Ok(WorkerDone { latency, count, state_len, wire })
+    let recovery = get_recovery_stats(&mut r)?;
+    Ok(WorkerDone { latency, count, state_len, wire, recovery })
 }
 
-/// What one shard child reports back: the exact triple
-/// [`rt::shard_loop`] returns, plus the child's wire ledger.
+/// What one shard child reports back: the exact [`rt::shard_loop`]
+/// output, plus the child's wire ledger.
 struct ShardDone {
     out: WindowedOutput,
     sketch: TopKSketch,
     lat: Histogram,
+    absorbed: Vec<u64>,
+    recovery: RecoveryStats,
     wire: WireStats,
 }
 
@@ -273,6 +440,8 @@ fn put_shard_done(d: &ShardDone, buf: &mut Vec<u8>) {
     put_window_stats(&d.out.window_stats, buf);
     put_sketch(&d.sketch, buf);
     put_histogram(&d.lat, buf);
+    put_u64s(&d.absorbed, buf);
+    put_recovery_stats(&d.recovery, buf);
     put_wire_stats(&d.wire, buf);
 }
 
@@ -291,11 +460,15 @@ fn get_shard_done(payload: &[u8]) -> Result<ShardDone, WireError> {
     let window_stats = get_window_stats(&mut r)?;
     let sketch = get_sketch(&mut r)?;
     let lat = get_histogram(&mut r)?;
+    let absorbed = get_u64s(&mut r)?;
+    let recovery = get_recovery_stats(&mut r)?;
     let wire = get_wire_stats(&mut r)?;
     Ok(ShardDone {
         out: WindowedOutput { windows, all_time, stats, window_stats },
         sketch,
         lat,
+        absorbed,
+        recovery,
         wire,
     })
 }
@@ -336,9 +509,32 @@ fn send_done(conn: &mut Duplex, payload: &[u8]) -> io::Result<()> {
 
 // ---- child entry points ----------------------------------------------
 
+/// Forward coordinator announcements of respawned shards into the
+/// worker's shard [`AddrCell`]s: each `Hello { role: 2, index, addr }`
+/// on the control stream bumps cell `index`, and the flush lanes'
+/// reconnect loops pick the fresh address up mid-retry. Exits when the
+/// coordinator closes the control connection.
+fn shard_addr_relay(mut conn: Duplex, cells: Vec<AddrCell>) {
+    let mut scratch = Vec::new();
+    loop {
+        match wire::read_frame(&mut conn, &mut scratch) {
+            Ok(Some(Frame::Hello { role: 2, index, addr })) => {
+                if let Some(cell) = cells.get(index as usize) {
+                    cell.set(&addr);
+                }
+            }
+            Ok(Some(_)) => continue,
+            Ok(None) | Err(_) => return,
+        }
+    }
+}
+
 /// Entry point for the hidden `__worker` subcommand (argv after the
 /// subcommand name). Runs [`rt::worker_loop`] against socket lanes and
-/// reports a `Done` frame on the control connection.
+/// reports a `Done` frame on the control connection. With `--recover 1`
+/// the flush lanes are restart-aware (seq logs + [`AddrCell`] re-dial)
+/// and a relay thread tracks shard respawns; `--crash-after-flushes N`
+/// scripts the chaos victim's cooperative crash.
 pub fn worker_child(args: &[String]) -> io::Result<()> {
     let control = arg(args, "--control")?.to_string();
     let index = arg_u64(args, "--index")? as usize;
@@ -349,6 +545,8 @@ pub fn worker_child(args: &[String]) -> io::Result<()> {
     let queue_depth = arg_u64(args, "--queue")? as usize;
     let epoch = arg_u64(args, "--epoch")?;
     let shard_addrs: Vec<&str> = arg(args, "--shards")?.split(',').collect();
+    let recover = arg_opt_u64(args, "--recover")?.unwrap_or(0) == 1;
+    let crash_after_flushes = arg_opt_u64(args, "--crash-after-flushes")?;
 
     let kind = kind_of_addr(&control);
     let (listener, addr) = socket::listen(kind, &format!("w{index}"))?;
@@ -356,10 +554,29 @@ pub fn worker_child(args: &[String]) -> io::Result<()> {
     send_hello(&mut control, 1, index, &addr)?;
 
     let ledger = Arc::new(WireLedger::new());
+    let recovery = Arc::new(RecoveryLedger::new());
     let mut flush_txs: Vec<Box<dyn FlushTx>> = Vec::with_capacity(shard_addrs.len());
-    for sa in &shard_addrs {
-        let conn = Duplex::connect(sa)?;
-        flush_txs.push(Box::new(SocketFlushTx::new(conn, Arc::clone(&ledger))));
+    if recover {
+        let cells: Vec<AddrCell> = shard_addrs.iter().map(|sa| AddrCell::new(sa)).collect();
+        for cell in &cells {
+            flush_txs.push(Box::new(SocketFlushTx::connect(
+                cell,
+                index as u64,
+                Arc::clone(&ledger),
+                Arc::clone(&recovery),
+            )?));
+        }
+        let relay = control.try_clone()?;
+        thread::spawn(move || shard_addr_relay(relay, cells));
+    } else {
+        for sa in &shard_addrs {
+            let conn = Duplex::connect(sa)?;
+            flush_txs.push(Box::new(SocketFlushTx::handshake(
+                conn,
+                index as u64,
+                Arc::clone(&ledger),
+            )?));
+        }
     }
     let mut conns = Vec::with_capacity(n_sources);
     for _ in 0..n_sources {
@@ -369,10 +586,25 @@ pub fn worker_child(args: &[String]) -> io::Result<()> {
 
     let router = ShardRouter::new(shard_addrs.len());
     let clock = Clock::unix(epoch);
-    let (latency, count, state_len) =
-        rt::worker_loop(index, cost, agg_flush_ns, agg_window_ns, clock, &router, rx, flush_txs);
+    let (latency, count, state_len) = rt::worker_loop(
+        index,
+        cost,
+        agg_flush_ns,
+        agg_window_ns,
+        clock,
+        &router,
+        rx,
+        flush_txs,
+        crash_after_flushes,
+    );
 
-    let done = WorkerDone { latency, count, state_len, wire: ledger.snapshot() };
+    let done = WorkerDone {
+        latency,
+        count,
+        state_len,
+        wire: ledger.snapshot(),
+        recovery: recovery.snapshot(),
+    };
     let mut payload = Vec::new();
     put_worker_done(&done, &mut payload);
     send_done(&mut control, &payload)
@@ -380,7 +612,12 @@ pub fn worker_child(args: &[String]) -> io::Result<()> {
 
 /// Entry point for the hidden `__shard` subcommand. Runs
 /// [`rt::shard_loop`] against a socket flush lane and reports a `Done`
-/// frame on the control connection.
+/// frame on the control connection. With `--snapshot-every N` /
+/// `--snapshot-path P` the shard persists [`ShardSnapshot`]s on a
+/// cadence; with `--resume 1` it loads the snapshot at `P` first (a
+/// respawned victim rejoining the mesh) and answers the workers'
+/// handshakes from the restored sequencer cursors, so every lane
+/// replays exactly the `seq >= next_seq` suffix.
 pub fn shard_child(args: &[String]) -> io::Result<()> {
     let control = arg(args, "--control")?.to_string();
     let index = arg_u64(args, "--index")? as usize;
@@ -388,6 +625,23 @@ pub fn shard_child(args: &[String]) -> io::Result<()> {
     let agg_window_ns = arg_u64(args, "--window-ns")?;
     let agg_lateness_ns = arg_u64(args, "--lateness-ns")?;
     let epoch = arg_u64(args, "--epoch")?;
+    let snapshot_every = arg_opt_u64(args, "--snapshot-every")?.unwrap_or(0);
+    let snapshot_path = arg_opt(args, "--snapshot-path").map(PathBuf::from);
+    let resume = arg_opt_u64(args, "--resume")?.unwrap_or(0) == 1;
+
+    // a respawned victim restores from its last persisted snapshot; a
+    // victim killed before its first snapshot cold-starts (the workers
+    // then replay their full logs — still exactly-once, just slower)
+    let resume_snap: Option<ShardSnapshot> = if resume {
+        match snapshot_path.as_ref().map(std::fs::read) {
+            Some(Ok(bytes)) => ShardSnapshot::from_bytes(&bytes).ok(),
+            _ => None,
+        }
+    } else {
+        None
+    };
+    let resume_seqs =
+        resume_snap.as_ref().map(|s| s.expected_seq.clone()).unwrap_or_else(|| vec![0; n_workers]);
 
     let kind = kind_of_addr(&control);
     let (listener, addr) = socket::listen(kind, &format!("s{index}"))?;
@@ -399,12 +653,27 @@ pub fn shard_child(args: &[String]) -> io::Result<()> {
     for _ in 0..n_workers {
         conns.push(listener.accept()?);
     }
-    let rx = Box::new(socket::SocketFlushRx::new(conns, &ledger)?);
+    let rx = Box::new(socket::SocketFlushRx::new(conns, resume_seqs, &ledger)?);
 
     let clock = Clock::unix(epoch);
-    let (out, sketch, lat) = rt::shard_loop(n_workers, agg_window_ns, agg_lateness_ns, clock, rx);
+    let recovery = Arc::new(RecoveryLedger::new());
+    let ctl = rt::ShardControl {
+        shard: index as u64,
+        ledger: Arc::clone(&recovery),
+        snapshot_every,
+        snapshot_path,
+        resume: resume_snap,
+    };
+    let out = rt::shard_loop(n_workers, agg_window_ns, agg_lateness_ns, clock, rx, ctl);
 
-    let done = ShardDone { out, sketch, lat, wire: ledger.snapshot() };
+    let done = ShardDone {
+        out: out.out,
+        sketch: out.sketch,
+        lat: out.latency,
+        absorbed: out.absorbed,
+        recovery: out.recovery,
+        wire: ledger.snapshot(),
+    };
     let mut payload = Vec::new();
     put_shard_done(&done, &mut payload);
     send_done(&mut control, &payload)
@@ -420,17 +689,111 @@ fn spawn_child(bin: &std::path::Path, subcmd: &str, args: &[String]) -> io::Resu
         .spawn()
 }
 
+/// What the chaos supervisor hands back after its scripted kills: the
+/// respawned children (joined with the originals at shutdown), the
+/// fresh control connections to swap in for the victims' dangling
+/// ones, and the coordinator-side recovery ledger (restart counts +
+/// kill→rejoin wall time).
+#[derive(Default)]
+struct Supervision {
+    children: Vec<Child>,
+    worker_swap: Option<(usize, Duplex)>,
+    shard_swap: Option<(usize, Duplex)>,
+    stats: RecoveryStats,
+}
+
+/// Execute a [`ChaosPlan`] against live victims. Runs on its own
+/// thread while the sources pump: waits out the worker victim's
+/// cooperative crash (then respawns it and bumps its [`AddrCell`] so
+/// the source lanes re-dial and replay), then hard-kills the shard
+/// victim at its deadline (respawning it with `--resume 1` and
+/// relaying the fresh address to every worker over the cloned control
+/// connections). Kill→`Hello` wall time lands in
+/// [`RecoveryStats::recovery_wall_ns`].
+fn supervise(
+    listener: Listener,
+    bin: std::path::PathBuf,
+    plan: ChaosPlan,
+    worker_victim: Option<(Child, Vec<String>)>,
+    shard_victim: Option<(Child, Vec<String>)>,
+    worker_cells: Vec<AddrCell>,
+    mut worker_controls: Vec<Duplex>,
+) -> io::Result<Supervision> {
+    let begun = Instant::now();
+    let mut sup = Supervision::default();
+
+    if let Some((mut child, respawn_args)) = worker_victim {
+        // cooperative crash: the victim exits at a flush boundary on
+        // its own schedule — just reap it
+        let _ = child.wait();
+        let clock = Instant::now();
+        sup.stats.worker_restarts += 1;
+        sup.children.push(spawn_child(&bin, "__worker", &respawn_args)?);
+        let mut conn = listener.accept()?;
+        let (role, index, addr) = read_hello(&mut conn)?;
+        if role != 1 {
+            return Err(proto_err(format!("expected respawned worker hello, got role {role}")));
+        }
+        if let Some(cell) = worker_cells.get(index) {
+            cell.set(&addr);
+        }
+        // a later shard respawn must be announced on the NEW control
+        // conn — the original's relay thread died with the victim
+        if index < worker_controls.len() {
+            if let Ok(fresh) = conn.try_clone() {
+                worker_controls[index] = fresh;
+            }
+        }
+        sup.stats.recovery_wall_ns += clock.elapsed().as_nanos() as u64;
+        sup.worker_swap = Some((index, conn));
+    }
+
+    if let Some((mut child, respawn_args)) = shard_victim {
+        let deadline = Duration::from_nanos(plan.kill_shard_after_ns.unwrap_or(0));
+        if let Some(rest) = deadline.checked_sub(begun.elapsed()) {
+            thread::sleep(rest);
+        }
+        let _ = child.kill();
+        let _ = child.wait();
+        let clock = Instant::now();
+        sup.stats.shard_restarts += 1;
+        sup.children.push(spawn_child(&bin, "__shard", &respawn_args)?);
+        let mut conn = listener.accept()?;
+        let (role, index, addr) = read_hello(&mut conn)?;
+        if role != 2 {
+            return Err(proto_err(format!("expected respawned shard hello, got role {role}")));
+        }
+        // announce the respawn; a worker that already finished may have
+        // closed its control stream, which is fine — ignore the error
+        for wc in worker_controls.iter_mut() {
+            let _ = send_hello(wc, 2, index, &addr);
+        }
+        sup.stats.recovery_wall_ns += clock.elapsed().as_nanos() as u64;
+        sup.shard_swap = Some((index, conn));
+    }
+
+    Ok(sup)
+}
+
 /// Run the topology as `n_workers + agg_shards` child processes plus
 /// source threads in this one: the multi-process counterpart of
 /// [`rt::run`], returning the same [`RtResult`]. The transport is
 /// [`RtOptions::transport`] with `loopback` promoted to a socket kind
 /// via [`process_kind`]. Merged counts, per-window snapshots and
 /// exact top-k match the in-process engine for the same trace.
+///
+/// An armed [`ChaosPlan`] scripts mid-run kills: every worker gets
+/// restart-aware lanes (`--recover 1`), shards snapshot on the
+/// [`CHAOS_SNAPSHOT_EVERY`] cadence, and a supervisor thread executes
+/// the kills and re-splices the respawned victims while the stream
+/// keeps flowing. The result must still verify byte-identically
+/// against the fault-free reference — that is the point.
 pub fn run_multiprocess(
     trace: &Arc<Trace>,
     mut sources: Vec<Box<dyn Grouper>>,
     n_workers: usize,
     opts: &RtOptions,
+    chaos: &ChaosPlan,
 ) -> io::Result<RtResult> {
     assert!(!sources.is_empty() && n_workers > 0);
     let kind = process_kind(opts.transport);
@@ -445,10 +808,27 @@ pub fn run_multiprocess(
     let clock = Clock::unix(epoch);
     let (control_listener, control_addr) = socket::listen(kind, "ctl")?;
 
+    // chaos wiring: victim indices are fixed (worker 0 / shard 0) so
+    // runs are reproducible; all shards snapshot when a shard kill is
+    // armed, and all workers get restart-aware lanes under any plan
+    let kill_worker = chaos.kill_worker_after_flushes;
+    let kill_shard = chaos.kill_shard_after_ns;
+    let recover = chaos.armed();
+    let snap_paths: Vec<std::path::PathBuf> = if kill_shard.is_some() {
+        (0..n_shards)
+            .map(|i| {
+                std::env::temp_dir().join(format!("fish-snap-{}-s{i}.bin", std::process::id()))
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+
     // 1. shard children: spawn, then collect their Hello { addr }s
-    let mut children: Vec<Child> = Vec::with_capacity(n_shards + n_workers);
+    let mut shard_children: Vec<Child> = Vec::with_capacity(n_shards);
+    let mut shard_respawn: Vec<String> = Vec::new();
     for i in 0..n_shards {
-        let args = vec![
+        let mut args = vec![
             "--control".into(),
             control_addr.clone(),
             "--index".into(),
@@ -462,7 +842,18 @@ pub fn run_multiprocess(
             "--epoch".into(),
             epoch.to_string(),
         ];
-        children.push(spawn_child(&bin, "__shard", &args)?);
+        if let Some(path) = snap_paths.get(i) {
+            args.push("--snapshot-every".into());
+            args.push(CHAOS_SNAPSHOT_EVERY.to_string());
+            args.push("--snapshot-path".into());
+            args.push(path.to_string_lossy().into_owned());
+        }
+        if i == 0 && kill_shard.is_some() {
+            shard_respawn = args.clone();
+            shard_respawn.push("--resume".into());
+            shard_respawn.push("1".into());
+        }
+        shard_children.push(spawn_child(&bin, "__shard", &args)?);
     }
     let mut shard_conns: Vec<Option<Duplex>> = (0..n_shards).map(|_| None).collect();
     let mut shard_addrs: Vec<String> = vec![String::new(); n_shards];
@@ -480,8 +871,10 @@ pub fn run_multiprocess(
     }
 
     // 2. worker children: spawn with the shard addresses, collect Hellos
+    let mut worker_children: Vec<Child> = Vec::with_capacity(n_workers);
+    let mut worker_respawn: Vec<String> = Vec::new();
     for w in 0..n_workers {
-        let args = vec![
+        let mut args = vec![
             "--control".into(),
             control_addr.clone(),
             "--index".into(),
@@ -501,7 +894,19 @@ pub fn run_multiprocess(
             "--shards".into(),
             shard_addrs.join(","),
         ];
-        children.push(spawn_child(&bin, "__worker", &args)?);
+        if recover {
+            args.push("--recover".into());
+            args.push("1".into());
+        }
+        if w == 0 {
+            if let Some(n) = kill_worker {
+                // the respawn must NOT crash again
+                worker_respawn = args.clone();
+                args.push("--crash-after-flushes".into());
+                args.push(n.to_string());
+            }
+        }
+        worker_children.push(spawn_child(&bin, "__worker", &args)?);
     }
     let mut worker_conns: Vec<Option<Duplex>> = (0..n_workers).map(|_| None).collect();
     let mut worker_addrs: Vec<String> = vec![String::new(); n_workers];
@@ -518,15 +923,67 @@ pub fn run_multiprocess(
         worker_conns[index] = Some(conn);
     }
 
-    // 3. sources stay home: one tuple stream per (source, worker) pair,
+    // 3. hand the victims (index 0 each) and the control listener to
+    // the supervisor; it executes the plan while the stream flows
+    let coord_recovery = Arc::new(RecoveryLedger::new());
+    let worker_cells: Vec<AddrCell> =
+        worker_addrs.iter().map(|a| AddrCell::new(a)).collect();
+    let supervisor = if recover {
+        let worker_victim = if kill_worker.is_some() {
+            Some((worker_children.remove(0), std::mem::take(&mut worker_respawn)))
+        } else {
+            None
+        };
+        let shard_victim = if kill_shard.is_some() {
+            Some((shard_children.remove(0), std::mem::take(&mut shard_respawn)))
+        } else {
+            None
+        };
+        let mut worker_controls = Vec::with_capacity(n_workers);
+        if shard_victim.is_some() {
+            for (w, conn) in worker_conns.iter().enumerate() {
+                let conn =
+                    conn.as_ref().ok_or_else(|| proto_err(format!("worker {w} has no conn")))?;
+                worker_controls.push(conn.try_clone()?);
+            }
+        }
+        let plan = chaos.clone();
+        let cells = worker_cells.clone();
+        let bin = bin.clone();
+        Some(thread::spawn(move || {
+            supervise(
+                control_listener,
+                bin,
+                plan,
+                worker_victim,
+                shard_victim,
+                cells,
+                worker_controls,
+            )
+        }))
+    } else {
+        None
+    };
+
+    // 4. sources stay home: one tuple stream per (source, worker) pair,
     // then the exact source_loop the threaded engine runs
     let ledger = Arc::new(WireLedger::new());
     let mut source_handles = Vec::with_capacity(n_sources);
     for (s, grouper) in sources.drain(..).enumerate() {
         let mut txs: Vec<Box<dyn TupleTx>> = Vec::with_capacity(n_workers);
-        for addr in &worker_addrs {
+        for (w, addr) in worker_addrs.iter().enumerate() {
             let conn = Duplex::connect(addr)?;
-            txs.push(Box::new(SocketTupleTx::new(conn, queue_depth, Arc::clone(&ledger))));
+            if kill_worker.is_some() {
+                txs.push(Box::new(SocketTupleTx::with_recovery(
+                    conn,
+                    queue_depth,
+                    Arc::clone(&ledger),
+                    worker_cells[w].clone(),
+                    Arc::clone(&coord_recovery),
+                )));
+            } else {
+                txs.push(Box::new(SocketTupleTx::new(conn, queue_depth, Arc::clone(&ledger))));
+            }
         }
         let trace = Arc::clone(trace);
         let per_tuple = per_tuple.clone();
@@ -551,9 +1008,25 @@ pub fn run_multiprocess(
         h.join().expect("source thread panicked");
     }
 
-    // 4. harvest: workers finish once the sources close, shards once
+    // 5. the supervisor has finished its plan by now (kills land
+    // mid-stream); splice the respawned victims' control conns in so
+    // the harvest reads their Done frames, not the dead originals'
+    let mut sup = Supervision::default();
+    if let Some(handle) = supervisor {
+        sup = handle.join().map_err(|_| proto_err("supervisor thread panicked"))??;
+    }
+    if let Some((w, conn)) = sup.worker_swap.take() {
+        worker_conns[w] = Some(conn);
+    }
+    if let Some((s, conn)) = sup.shard_swap.take() {
+        shard_conns[s] = Some(conn);
+    }
+
+    // 6. harvest: workers finish once the sources close, shards once
     // the workers drop their flush streams — read in causal order
     let mut wire = ledger.snapshot();
+    let mut recovery = coord_recovery.snapshot();
+    recovery.absorb(&sup.stats);
     let mut latency = Histogram::new();
     let mut counts = Vec::with_capacity(n_workers);
     let mut states = Vec::with_capacity(n_workers);
@@ -566,6 +1039,7 @@ pub fn run_multiprocess(
         counts.push(done.count);
         states.push(done.state_len);
         wire.absorb(&done.wire);
+        recovery.absorb(&done.recovery);
     }
     let mut shard_outs = Vec::with_capacity(n_shards);
     for (s, conn) in shard_conns.iter_mut().enumerate() {
@@ -574,15 +1048,32 @@ pub fn run_multiprocess(
             .ok_or_else(|| proto_err(format!("shard {s} never said hello")))?;
         let done = get_shard_done(&read_done(conn)?).map_err(wire_io)?;
         wire.absorb(&done.wire);
-        shard_outs.push((done.out, done.sketch, done.lat));
+        shard_outs.push(rt::ShardOutput {
+            out: done.out,
+            sketch: done.sketch,
+            latency: done.lat,
+            absorbed: done.absorbed,
+            recovery: done.recovery,
+        });
     }
-    for child in children.iter_mut() {
+    for child in shard_children.iter_mut().chain(&mut worker_children).chain(&mut sup.children) {
         let _ = child.wait();
     }
+    for path in &snap_paths {
+        let _ = std::fs::remove_file(path);
+    }
 
-    let (merged, shard_agg, windows, window_stats, gather, agg_latency) =
-        rt::assemble_shards(opts.agg_window_ns, shard_outs);
-    let agg = shard_agg.total();
+    let assembled = rt::assemble_shards(opts.agg_window_ns, shard_outs);
+    recovery.absorb(&assembled.recovery);
+    if kill_worker.is_some() {
+        // the victim's first incarnation died without reporting; its
+        // Count partials make shard-side absorbed mass exactly the
+        // tuples it processed across both lives (replays deduped)
+        if let Some(&mass) = assembled.absorbed.first() {
+            counts[0] = mass;
+        }
+    }
+    let agg = assembled.shard_agg.total();
     let wall_ns = clock.now_ns();
     let total: u64 = counts.iter().sum();
     let entries: usize = states.iter().sum();
@@ -599,14 +1090,15 @@ pub fn run_multiprocess(
         throughput: total as f64 / (wall_ns as f64 / 1e9),
         entries,
         distinct_keys: seen.len(),
-        merged,
+        merged: assembled.merged,
         agg,
-        shard_agg,
-        agg_latency,
-        gather,
-        windows,
-        window_stats,
+        shard_agg: assembled.shard_agg,
+        agg_latency: assembled.agg_latency,
+        gather: assembled.gather,
+        windows: assembled.windows,
+        window_stats: assembled.window_stats,
         wire,
+        recovery,
     })
 }
 
@@ -663,7 +1155,21 @@ mod tests {
             encode_ns: 7_000,
             ..Default::default()
         };
-        let done = WorkerDone { latency: lat.clone(), count: 1234, state_len: 99, wire: wire_stats };
+        let recovery = RecoveryStats {
+            replayed_batches: 3,
+            deduped_batches: 2,
+            replayed_tuples: 41,
+            worker_restarts: 1,
+            recovery_wall_ns: 5_000_000,
+            ..Default::default()
+        };
+        let done = WorkerDone {
+            latency: lat.clone(),
+            count: 1234,
+            state_len: 99,
+            wire: wire_stats,
+            recovery: recovery.clone(),
+        };
         let mut payload = Vec::new();
         put_worker_done(&done, &mut payload);
         let back = get_worker_done(&payload).expect("round trip");
@@ -672,6 +1178,9 @@ mod tests {
         assert_eq!(back.latency.count(), 4);
         assert_eq!(back.wire.frames_out, 7);
         assert_eq!(back.wire.bytes_out, 700);
+        assert_eq!(back.recovery.replayed_batches, 3);
+        assert_eq!(back.recovery.replayed_tuples, 41);
+        assert_eq!(back.recovery.recovery_wall_ns, 5_000_000);
 
         let mut sketch = TopKSketch::new(8);
         sketch.absorb(5, 50);
@@ -699,7 +1208,14 @@ mod tests {
                 max_open_entries: 30,
             },
         };
-        let done = ShardDone { out, sketch, lat, wire: WireStats::default() };
+        let done = ShardDone {
+            out,
+            sketch,
+            lat,
+            absorbed: vec![70, 0, 2],
+            recovery,
+            wire: WireStats::default(),
+        };
         let mut payload = Vec::new();
         put_shard_done(&done, &mut payload);
         let back = get_shard_done(&payload).expect("round trip");
@@ -711,10 +1227,39 @@ mod tests {
         assert_eq!(back.out.window_stats.late_reopen_mass, 17);
         assert_eq!(back.sketch.capacity(), 8);
         assert_eq!(back.lat.count(), 4);
+        assert_eq!(back.absorbed, vec![70, 0, 2]);
+        assert_eq!(back.recovery.deduped_batches, 2);
+        assert_eq!(back.recovery.worker_restarts, 1);
 
         // corrupting the payload surfaces as an error, not a panic
         assert!(get_shard_done(&payload[..payload.len() - 3]).is_err());
         assert!(get_worker_done(&payload[..2]).is_err());
+    }
+
+    #[test]
+    fn chaos_plan_parses_kill_specs() {
+        assert_eq!(ChaosPlan::parse("", 1_000_000_000), Ok(ChaosPlan::default()));
+        assert!(!ChaosPlan::default().armed());
+
+        let plan = ChaosPlan::parse("kill-worker:mid", 0).expect("parse");
+        assert_eq!(plan.kill_worker_after_flushes, Some(KILL_WORKER_MID_FLUSHES));
+        assert!(plan.armed());
+
+        let plan = ChaosPlan::parse("kill-worker:0", 0).expect("parse");
+        assert_eq!(plan.kill_worker_after_flushes, Some(1), "clamped to at least one flush");
+
+        let plan = ChaosPlan::parse("kill-shard:mid", 2_000_000_000).expect("parse");
+        assert_eq!(plan.kill_shard_after_ns, Some(1_000_000_000));
+        let plan = ChaosPlan::parse("kill-shard:mid", 0).expect("parse");
+        assert_eq!(plan.kill_shard_after_ns, Some(KILL_SHARD_FALLBACK_NS), "unpaced fallback");
+
+        let plan =
+            ChaosPlan::parse("kill-worker:3,kill-shard:25", 1_000_000_000).expect("parse");
+        assert_eq!(plan.kill_worker_after_flushes, Some(3));
+        assert_eq!(plan.kill_shard_after_ns, Some(25_000_000), "ms scaled to ns");
+
+        assert!(ChaosPlan::parse("kill-gather:5", 0).is_err());
+        assert!(ChaosPlan::parse("kill-worker:soon", 0).is_err());
     }
 
     #[test]

@@ -201,7 +201,7 @@ mod tests {
     #[test]
     fn flush_lanes_close_when_all_workers_drop() {
         let (mut txs, mut rxs) = flush_lanes(2, 1);
-        let flush = FlushMsg { worker: 0, emit_ns: 1, watermark: 2, panes: vec![] };
+        let flush = FlushMsg { worker: 0, seq: 0, emit_ns: 1, watermark: 2, panes: vec![] };
         assert!(txs[0][0].send(flush.clone()).is_ok());
         assert!(txs[1][0].send(flush).is_ok());
         drop(txs);

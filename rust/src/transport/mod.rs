@@ -212,6 +212,19 @@ pub trait TupleRx: Send {
 pub trait FlushTx: Send {
     /// Send one flush batch; errs when the shard is gone.
     fn send(&mut self, msg: FlushMsg) -> Result<(), LaneError>;
+
+    /// Sequence number the first flush on this lane must carry. 0 on a
+    /// fresh stream (loopback always); socket lanes report the shard's
+    /// `Resume` answer, so a respawned worker continues exactly where
+    /// its predecessor's stream left off.
+    fn resume_from(&self) -> u64 {
+        0
+    }
+
+    /// Flush any recovery/replay state and signal end-of-stream
+    /// (socket lanes reconnect-and-replay if the shard died, then
+    /// write `Eof`; loopback lanes rely on channel drop).
+    fn close(&mut self) {}
 }
 
 /// Shard-side flush lane endpoint (every worker merged).

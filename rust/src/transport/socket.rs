@@ -10,13 +10,23 @@
 //! protocol deadlock-free. Worker→shard flush lanes are plain streams
 //! without credits: flush traffic is low-rate and bounded by cadence.
 //!
+//! Flush lanes open with a `Hello`/`Resume` handshake: the worker
+//! identifies itself, the shard answers with the next flush sequence
+//! number it expects (0 on a fresh mesh, its snapshot cursor on a
+//! recovered one). Endpoints built from an [`AddrCell`] are
+//! restart-aware — they log what they send and, when the peer's
+//! address generation moves or a write fails, re-dial and replay the
+//! unacked suffix so a respawned peer converges on the exact stream
+//! its predecessor was owed (docs/RECOVERY.md).
+//!
 //! Each receive side runs one reader thread per peer stream and
 //! merges decoded frames into a single in-process queue, mirroring
 //! timely-dataflow's per-peer recv threads.
 
 use super::wire::{self, FlushMsg, Frame, Msg, WireError};
 use super::{FlushRx, FlushTx, LaneError, TransportKind, TupleRecv, TupleRx, TupleTx};
-use crate::metrics::WireLedger;
+use crate::metrics::{RecoveryLedger, WireLedger};
+use std::collections::VecDeque;
 use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
 #[cfg(unix)]
@@ -25,9 +35,16 @@ use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
+
+/// Reconnect dial attempts before a restart-aware lane gives up on its
+/// peer coming back (attempts × backoff ≈ the recovery deadline).
+const RECONNECT_ATTEMPTS: u32 = 1_500;
+
+/// Pause between reconnect dial attempts.
+const RECONNECT_BACKOFF: Duration = Duration::from_millis(10);
 
 /// A bidirectional byte stream over TCP or UDS.
 #[derive(Debug)]
@@ -204,14 +221,79 @@ fn read_frame_timed(
     Ok(Some(frame))
 }
 
+fn wire_to_io(e: WireError) -> io::Error {
+    match e {
+        WireError::Io(e) => e,
+        other => io::Error::new(io::ErrorKind::InvalidData, format!("{other:?}")),
+    }
+}
+
+/// A shared, restart-aware peer address. The coordinator (or a relay
+/// thread fed by it) publishes a respawned peer's fresh listen address
+/// with [`AddrCell::set`], which also bumps a generation counter; lane
+/// endpoints compare the generation they connected under against the
+/// cell's to learn — deterministically, without waiting for a socket
+/// error — that the peer restarted and a reconnect/replay is due.
+#[derive(Clone, Debug)]
+pub struct AddrCell {
+    inner: Arc<Mutex<(String, u64)>>,
+}
+
+impl AddrCell {
+    /// Cell holding `addr` at generation 0.
+    pub fn new(addr: &str) -> AddrCell {
+        AddrCell { inner: Arc::new(Mutex::new((addr.to_string(), 0))) }
+    }
+
+    /// Publish a replacement address and bump the generation.
+    pub fn set(&self, addr: &str) {
+        let mut inner = self.lock();
+        inner.0 = addr.to_string();
+        inner.1 += 1;
+    }
+
+    /// Current address.
+    pub fn get(&self) -> String {
+        self.lock().0.clone()
+    }
+
+    /// Current generation (bumped once per [`AddrCell::set`]).
+    pub fn generation(&self) -> u64 {
+        self.lock().1
+    }
+
+    /// Address and generation, read together.
+    pub fn snapshot(&self) -> (String, u64) {
+        self.lock().clone()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, (String, u64)> {
+        // a poisoned cell still holds a usable (addr, generation) pair
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
 /// Source-side socket endpoint for one source→worker stream.
+///
+/// Built with [`SocketTupleTx::with_recovery`] the lane survives a
+/// worker respawn: every sent tuple is held in an unacked window until
+/// the worker's credit (which acks processed tuples in FIFO order)
+/// retires it, and when the worker's [`AddrCell`] generation moves or
+/// the stream dies, the lane drains the old stream's final credits,
+/// re-dials, and replays the unacked window into the fresh worker's
+/// credit window.
 pub struct SocketTupleTx {
     conn: Duplex,
     credit: usize,
+    queue_depth: usize,
     buf: Vec<u8>,
     scratch: Vec<u8>,
     ledger: Arc<WireLedger>,
     closed: bool,
+    addr: Option<AddrCell>,
+    gen: u64,
+    unacked: VecDeque<Msg>,
+    recovery: Option<Arc<RecoveryLedger>>,
 }
 
 impl SocketTupleTx {
@@ -223,27 +305,60 @@ impl SocketTupleTx {
         SocketTupleTx {
             conn,
             credit: queue_depth.max(1),
+            queue_depth,
             buf: Vec::new(),
             scratch: Vec::new(),
             ledger,
             closed: false,
+            addr: None,
+            gen: 0,
+            unacked: VecDeque::new(),
+            recovery: None,
         }
     }
-}
 
-impl TupleTx for SocketTupleTx {
-    fn send(&mut self, chunk: Vec<Msg>) -> Result<(), LaneError> {
-        if self.closed {
-            return Err(LaneError::Closed);
+    /// Like [`SocketTupleTx::new`], but restart-aware: `addr` is the
+    /// worker's published address cell and `recovery` meters replays.
+    pub fn with_recovery(
+        conn: Duplex,
+        queue_depth: usize,
+        ledger: Arc<WireLedger>,
+        addr: AddrCell,
+        recovery: Arc<RecoveryLedger>,
+    ) -> Self {
+        let gen = addr.generation();
+        let mut tx = SocketTupleTx::new(conn, queue_depth, ledger);
+        tx.addr = Some(addr);
+        tx.gen = gen;
+        tx.recovery = Some(recovery);
+        tx
+    }
+
+    /// The peer respawned since this lane last (re)connected.
+    fn stale(&self) -> bool {
+        match &self.addr {
+            Some(cell) => cell.generation() != self.gen,
+            None => false,
         }
-        if chunk.is_empty() {
-            return Ok(());
+    }
+
+    /// Credit return: open the window and retire the acked prefix of
+    /// the unacked replay window (credits ack processed tuples FIFO).
+    fn grant(&mut self, n: u64) {
+        self.credit += n as usize;
+        let retire = (n as usize).min(self.unacked.len());
+        for _ in 0..retire {
+            self.unacked.pop_front();
         }
+    }
+
+    /// Credit-gated write of one chunk (no replay bookkeeping).
+    fn transmit(&mut self, chunk: &[Msg]) -> Result<(), LaneError> {
         // window exhausted: block on the upstream credit channel
         // until the worker acknowledges enough processed tuples
         while self.credit < chunk.len() {
             match wire::read_frame(&mut self.conn, &mut self.scratch) {
-                Ok(Some(Frame::Credit(n))) => self.credit += n as usize,
+                Ok(Some(Frame::Credit(n))) => self.grant(n),
                 // the worker hung up before granting enough credit —
                 // clean close either way, no more tuples can be sent
                 Ok(Some(Frame::Eof)) | Ok(None) => {
@@ -253,7 +368,8 @@ impl TupleTx for SocketTupleTx {
                 // only Credit ever travels worker→source on this
                 // stream; anything else is a peer bug
                 Ok(Some(
-                    Frame::Data(_) | Frame::Flush(_) | Frame::Hello { .. } | Frame::Done(_),
+                    Frame::Data(_) | Frame::Flush(_) | Frame::Hello { .. } | Frame::Done(_)
+                    | Frame::Resume { .. },
                 )) => {
                     self.closed = true;
                     return Err(LaneError::Protocol("non-credit frame on credit channel"));
@@ -266,7 +382,7 @@ impl TupleTx for SocketTupleTx {
         }
         let t0 = Instant::now();
         self.buf.clear();
-        wire::encode_data(&chunk, &mut self.buf);
+        wire::encode_data(chunk, &mut self.buf);
         let encode_ns = t0.elapsed().as_nanos() as u64;
         self.ledger
             .record_out(self.buf.len() as u64, chunk.len() as u64, encode_ns);
@@ -278,13 +394,119 @@ impl TupleTx for SocketTupleTx {
         Ok(())
     }
 
+    /// Drain the dying stream's last credit grants. Tuples the old
+    /// worker processed at a flush boundary were already flushed
+    /// downstream; their credits retire them from the unacked window
+    /// so the replay cannot double-count them.
+    fn drain_final_credits(&mut self) {
+        loop {
+            match wire::read_frame(&mut self.conn, &mut self.scratch) {
+                Ok(Some(Frame::Credit(n))) => self.grant(n),
+                Ok(Some(Frame::Eof)) | Ok(None) | Err(_) => break,
+                Ok(Some(
+                    Frame::Data(_) | Frame::Flush(_) | Frame::Hello { .. } | Frame::Done(_)
+                    | Frame::Resume { .. },
+                )) => break,
+            }
+        }
+    }
+
+    /// Re-dial the (possibly still respawning) worker and replay the
+    /// unacked window into its fresh credit window.
+    fn reconnect_and_replay(&mut self) -> Result<(), LaneError> {
+        let cell = match &self.addr {
+            Some(cell) => cell.clone(),
+            None => return Err(LaneError::Closed),
+        };
+        self.drain_final_credits();
+        let mut attempts = 0u32;
+        loop {
+            // re-read the cell every attempt: the coordinator may still
+            // be respawning the worker, and the fresh address lands
+            // mid-loop
+            let (target, gen) = cell.snapshot();
+            match Duplex::connect(&target) {
+                Ok(conn) => {
+                    self.conn = conn;
+                    self.gen = gen;
+                    break;
+                }
+                Err(e) => {
+                    attempts += 1;
+                    if attempts >= RECONNECT_ATTEMPTS {
+                        return Err(LaneError::Io(e));
+                    }
+                    thread::sleep(RECONNECT_BACKOFF);
+                }
+            }
+        }
+        self.closed = false;
+        self.credit = self.queue_depth.max(1);
+        if let Some(r) = &self.recovery {
+            r.record_replayed_tuples(self.unacked.len() as u64);
+        }
+        let backlog: Vec<Msg> = self.unacked.drain(..).collect();
+        let step = self.queue_depth.max(1);
+        let mut idx = 0;
+        while idx < backlog.len() {
+            let end = (idx + step).min(backlog.len());
+            self.unacked.extend(backlog[idx..end].iter().cloned());
+            if let Err(e) = self.transmit(&backlog[idx..end]) {
+                // keep the unreplayed tail queued, in order, for the
+                // next recovery round
+                self.unacked.extend(backlog[end..].iter().cloned());
+                return Err(e);
+            }
+            idx = end;
+        }
+        Ok(())
+    }
+}
+
+impl TupleTx for SocketTupleTx {
+    fn send(&mut self, chunk: Vec<Msg>) -> Result<(), LaneError> {
+        if chunk.is_empty() {
+            return Ok(());
+        }
+        if self.recovery.is_none() {
+            if self.closed {
+                return Err(LaneError::Closed);
+            }
+            return self.transmit(&chunk);
+        }
+        // restart-aware: remember the chunk until credit acks it, and
+        // fail over to the respawned worker instead of erroring
+        self.unacked.extend(chunk.iter().cloned());
+        if self.closed || self.stale() {
+            return self.reconnect_and_replay();
+        }
+        match self.transmit(&chunk) {
+            Ok(()) => Ok(()),
+            Err(_) => self.reconnect_and_replay(),
+        }
+    }
+
     fn close(&mut self) {
+        if (self.closed || self.stale())
+            && self.recovery.is_some()
+            && self.reconnect_and_replay().is_err()
+        {
+            return;
+        }
         if self.closed {
             return;
         }
         self.buf.clear();
         wire::encode_eof(&mut self.buf);
-        let _ = self.conn.write_all(&self.buf);
+        if self.conn.write_all(&self.buf).is_err()
+            && self.recovery.is_some()
+            && self.reconnect_and_replay().is_ok()
+        {
+            // a respawned worker needs this source's end-of-stream too
+            self.buf.clear();
+            wire::encode_eof(&mut self.buf);
+            let _ = self.conn.write_all(&self.buf);
+        }
         let _ = self.conn.flush();
         self.closed = true;
     }
@@ -334,7 +556,7 @@ impl SocketTupleRx {
                         // peer is confused — stop reading from it
                         Ok(Some(
                             Frame::Flush(_) | Frame::Credit(_) | Frame::Hello { .. }
-                            | Frame::Done(_),
+                            | Frame::Done(_) | Frame::Resume { .. },
                         )) => break,
                         // decode or i/o failure: the stream is dead
                         Err(_) => break,
@@ -401,48 +623,253 @@ impl TupleRx for SocketTupleRx {
 }
 
 /// Worker-side socket endpoint for one worker→shard stream.
+///
+/// Every lane opens with a handshake: the worker identifies itself
+/// with `Hello{role: 1, index}` and the shard answers
+/// `Resume{next_seq}` — 0 on a fresh mesh, its snapshot cursor on a
+/// recovered one. Lanes built with [`SocketFlushTx::connect`] are
+/// restart-aware: each flush is appended to a replay log, and when the
+/// shard's [`AddrCell`] generation moves or a write fails, the lane
+/// re-dials, repeats the handshake, and replays exactly the
+/// `seq >= next_seq` suffix of the log. The shard-side sequencer drops
+/// anything it already absorbed, so over-replay is safe.
 pub struct SocketFlushTx {
     conn: Duplex,
     buf: Vec<u8>,
+    scratch: Vec<u8>,
     ledger: Arc<WireLedger>,
+    worker: u64,
+    /// The shard's `Resume` answer from the most recent handshake.
+    next_seq: u64,
+    addr: Option<AddrCell>,
+    gen: u64,
+    log: Vec<FlushMsg>,
+    recovery: Option<Arc<RecoveryLedger>>,
 }
 
 impl SocketFlushTx {
-    /// Wrap a connected stream.
-    pub fn new(conn: Duplex, ledger: Arc<WireLedger>) -> Self {
-        SocketFlushTx { conn, buf: Vec::new(), ledger }
+    /// Wrap an already-connected stream as worker `worker` and run the
+    /// handshake. The lane does not survive a shard restart.
+    pub fn handshake(conn: Duplex, worker: u64, ledger: Arc<WireLedger>) -> io::Result<Self> {
+        let mut tx = SocketFlushTx {
+            conn,
+            buf: Vec::new(),
+            scratch: Vec::new(),
+            ledger,
+            worker,
+            next_seq: 0,
+            addr: None,
+            gen: 0,
+            log: Vec::new(),
+            recovery: None,
+        };
+        tx.handshake_conn()?;
+        Ok(tx)
     }
-}
 
-impl FlushTx for SocketFlushTx {
-    fn send(&mut self, msg: FlushMsg) -> Result<(), LaneError> {
+    /// Dial the shard through its [`AddrCell`], run the handshake, and
+    /// arm restart recovery: flushes are logged and replayed across
+    /// shard respawns, metered through `recovery`.
+    pub fn connect(
+        addr: &AddrCell,
+        worker: u64,
+        ledger: Arc<WireLedger>,
+        recovery: Arc<RecoveryLedger>,
+    ) -> io::Result<Self> {
+        let (target, gen) = addr.snapshot();
+        let conn = Duplex::connect(&target)?;
+        let mut tx = SocketFlushTx {
+            conn,
+            buf: Vec::new(),
+            scratch: Vec::new(),
+            ledger,
+            worker,
+            next_seq: 0,
+            addr: Some(addr.clone()),
+            gen,
+            log: Vec::new(),
+            recovery: Some(recovery),
+        };
+        tx.handshake_conn()?;
+        Ok(tx)
+    }
+
+    /// Identify this worker with a `Hello`, then read the shard's
+    /// `Resume` answer into `next_seq`.
+    fn handshake_conn(&mut self) -> io::Result<()> {
+        self.buf.clear();
+        // role 1 = worker: the shard must know which resume cursor this
+        // stream belongs to before any flush arrives
+        wire::encode_hello(1, self.worker, "", &mut self.buf);
+        self.conn.write_all(&self.buf)?;
+        self.conn.flush()?;
+        match wire::read_frame(&mut self.conn, &mut self.scratch) {
+            Ok(Some(Frame::Resume { worker, next_seq })) if worker == self.worker => {
+                self.next_seq = next_seq;
+                Ok(())
+            }
+            Ok(Some(
+                Frame::Resume { .. } | Frame::Data(_) | Frame::Flush(_) | Frame::Credit(_)
+                | Frame::Hello { .. } | Frame::Eof | Frame::Done(_),
+            ))
+            | Ok(None) => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "flush lane expected this worker's Resume handshake answer",
+            )),
+            Err(e) => Err(wire_to_io(e)),
+        }
+    }
+
+    /// The shard respawned since this lane last (re)connected.
+    fn stale(&self) -> bool {
+        match &self.addr {
+            Some(cell) => cell.generation() != self.gen,
+            None => false,
+        }
+    }
+
+    fn write_flush(&mut self, msg: &FlushMsg) -> Result<(), LaneError> {
         let t0 = Instant::now();
         self.buf.clear();
-        wire::encode_flush(&msg, &mut self.buf);
+        wire::encode_flush(msg, &mut self.buf);
         let encode_ns = t0.elapsed().as_nanos() as u64;
         let tuples: usize = msg.panes.iter().map(|(_, e)| e.len()).sum();
         self.ledger
             .record_out(self.buf.len() as u64, tuples as u64, encode_ns);
         self.conn.write_all(&self.buf).map_err(LaneError::Io)
     }
+
+    /// Re-dial the (possibly still respawning) shard, repeat the
+    /// handshake, and replay the `seq >= next_seq` suffix of the log.
+    fn reconnect_and_replay(&mut self) -> Result<(), LaneError> {
+        let cell = match &self.addr {
+            Some(cell) => cell.clone(),
+            None => return Err(LaneError::Closed),
+        };
+        let mut attempts = 0u32;
+        loop {
+            // re-read the cell every attempt: the coordinator may still
+            // be respawning the shard, and the fresh address lands
+            // mid-loop
+            let (target, gen) = cell.snapshot();
+            match Duplex::connect(&target) {
+                Ok(conn) => {
+                    self.conn = conn;
+                    self.gen = gen;
+                    break;
+                }
+                Err(e) => {
+                    attempts += 1;
+                    if attempts >= RECONNECT_ATTEMPTS {
+                        return Err(LaneError::Io(e));
+                    }
+                    thread::sleep(RECONNECT_BACKOFF);
+                }
+            }
+        }
+        self.handshake_conn().map_err(LaneError::Io)?;
+        for i in 0..self.log.len() {
+            if self.log[i].seq < self.next_seq {
+                continue;
+            }
+            let msg = self.log[i].clone();
+            self.write_flush(&msg)?;
+            if let Some(r) = &self.recovery {
+                r.record_replayed_batch();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl FlushTx for SocketFlushTx {
+    fn send(&mut self, msg: FlushMsg) -> Result<(), LaneError> {
+        if self.recovery.is_none() {
+            return self.write_flush(&msg);
+        }
+        self.log.push(msg);
+        if self.stale() {
+            return self.reconnect_and_replay();
+        }
+        let msg = self.log[self.log.len() - 1].clone();
+        match self.write_flush(&msg) {
+            Ok(()) => Ok(()),
+            Err(_) => self.reconnect_and_replay(),
+        }
+    }
+
+    fn resume_from(&self) -> u64 {
+        self.next_seq
+    }
+
+    fn close(&mut self) {
+        if self.stale() && self.reconnect_and_replay().is_err() {
+            return;
+        }
+        self.buf.clear();
+        wire::encode_eof(&mut self.buf);
+        if self.conn.write_all(&self.buf).is_err()
+            && self.recovery.is_some()
+            && self.reconnect_and_replay().is_ok()
+        {
+            // a respawned shard needs this worker's end-of-stream too
+            self.buf.clear();
+            wire::encode_eof(&mut self.buf);
+            let _ = self.conn.write_all(&self.buf);
+        }
+        let _ = self.conn.flush();
+    }
 }
 
 /// Shard-side socket endpoint merging every worker stream.
+///
+/// Each accepted stream opens with the worker's `Hello`; the reader
+/// thread answers `Resume{next_seq}` from `resume` (all zeros on a
+/// fresh mesh; a recovered shard passes its snapshot's sequencer
+/// cursors) before entering the flush loop. Workers may connect in any
+/// order — the `Hello` index, not the accept order, selects the
+/// cursor.
 pub struct SocketFlushRx {
     rx: Receiver<FlushMsg>,
 }
 
 impl SocketFlushRx {
     /// Build from accepted per-worker streams, spawning one reader
-    /// thread per stream.
-    pub fn new(conns: Vec<Duplex>, ledger: &Arc<WireLedger>) -> io::Result<SocketFlushRx> {
+    /// thread per stream. `resume[w]` is the next flush sequence
+    /// number expected from worker `w`.
+    pub fn new(
+        conns: Vec<Duplex>,
+        resume: Vec<u64>,
+        ledger: &Arc<WireLedger>,
+    ) -> io::Result<SocketFlushRx> {
         let (tx, rx) = channel::<FlushMsg>();
         for conn in conns {
             let tx = tx.clone();
             let ledger = Arc::clone(ledger);
+            let resume = resume.clone();
             thread::spawn(move || {
                 let mut conn = conn;
                 let mut scratch = Vec::new();
+                // handshake: the worker identifies itself; answer with
+                // its resume cursor (handshake frames stay off the
+                // wire ledger on both sides)
+                let worker = match wire::read_frame(&mut conn, &mut scratch) {
+                    Ok(Some(Frame::Hello { role: 1, index, .. })) => index,
+                    // anything else is not a worker flush stream
+                    Ok(Some(
+                        Frame::Hello { .. } | Frame::Data(_) | Frame::Flush(_)
+                        | Frame::Credit(_) | Frame::Eof | Frame::Done(_)
+                        | Frame::Resume { .. },
+                    ))
+                    | Ok(None)
+                    | Err(_) => return,
+                };
+                let next = resume.get(worker as usize).copied().unwrap_or(0);
+                let mut buf = Vec::new();
+                wire::encode_resume(worker, next, &mut buf);
+                if conn.write_all(&buf).is_err() {
+                    return;
+                }
                 loop {
                     match read_frame_timed(&mut conn, &mut scratch, &ledger) {
                         Ok(Some(Frame::Flush(f))) => {
@@ -456,7 +883,7 @@ impl SocketFlushRx {
                         // frames that never travel worker→shard
                         Ok(Some(
                             Frame::Data(_) | Frame::Credit(_) | Frame::Hello { .. }
-                            | Frame::Done(_),
+                            | Frame::Done(_) | Frame::Resume { .. },
                         )) => break,
                         Err(_) => break,
                     }
@@ -512,13 +939,22 @@ pub fn flush_mesh(
     let mut rxs: Vec<Box<dyn FlushRx>> = Vec::with_capacity(n_shards);
     for s in 0..n_shards {
         let (listener, addr) = listen(kind, &format!("fl{s}"))?;
+        let mut clients = Vec::with_capacity(n_workers);
         let mut accepted = Vec::with_capacity(n_workers);
-        for w in txs.iter_mut() {
-            let client = Duplex::connect(&addr)?;
+        for _ in 0..n_workers {
+            clients.push(Duplex::connect(&addr)?);
             accepted.push(listener.accept()?);
-            w.push(Box::new(SocketFlushTx::new(client, Arc::clone(ledger))));
         }
-        rxs.push(Box::new(SocketFlushRx::new(accepted, ledger)?));
+        // build the Rx first: its reader threads answer the blocking
+        // Tx-side handshakes below, so this cannot deadlock
+        rxs.push(Box::new(SocketFlushRx::new(accepted, vec![0; n_workers], ledger)?));
+        for (w, client) in clients.into_iter().enumerate() {
+            txs[w].push(Box::new(SocketFlushTx::handshake(
+                client,
+                w as u64,
+                Arc::clone(ledger),
+            )?));
+        }
     }
     Ok((txs, rxs))
 }
@@ -582,8 +1018,12 @@ mod tests {
         for kind in kinds() {
             let ledger = Arc::new(WireLedger::new());
             let (mut txs, mut rxs) = flush_mesh(kind, 2, 1, &ledger).unwrap();
+            // fresh mesh: every lane's handshake resumes from 0
+            assert_eq!(txs[0][0].resume_from(), 0);
+            assert_eq!(txs[1][0].resume_from(), 0);
             let flush = FlushMsg {
                 worker: 1,
+                seq: 0,
                 emit_ns: 5,
                 watermark: 10,
                 panes: vec![(0, vec![(7, 3)])],
@@ -597,6 +1037,127 @@ mod tests {
             assert_eq!(a.panes, flush.panes);
             assert_eq!(b.panes, flush.panes);
             assert!(rx.recv().is_none(), "{kind} flush lane failed to close");
+        }
+    }
+
+    fn seq_flush(seq: u64) -> FlushMsg {
+        FlushMsg {
+            worker: 0,
+            seq,
+            emit_ns: seq,
+            watermark: seq,
+            panes: vec![(0, vec![(1, 1)])],
+        }
+    }
+
+    #[test]
+    fn flush_lane_replays_suffix_after_shard_restart() {
+        for kind in kinds() {
+            let ledger = Arc::new(WireLedger::new());
+            let recovery = Arc::new(RecoveryLedger::new());
+            let (listener, addr) = listen(kind, "fchaos").unwrap();
+            let cell = AddrCell::new(&addr);
+            let c_cell = cell.clone();
+            let c_ledger = Arc::clone(&ledger);
+            let c_recovery = Arc::clone(&recovery);
+            let client = thread::spawn(move || {
+                let mut tx =
+                    SocketFlushTx::connect(&c_cell, 0, c_ledger, c_recovery).unwrap();
+                assert_eq!(tx.resume_from(), 0);
+                for seq in 0..3 {
+                    tx.send(seq_flush(seq)).unwrap();
+                }
+                // the "coordinator" (main thread) respawns the shard
+                while c_cell.generation() == 0 {
+                    thread::sleep(Duration::from_millis(2));
+                }
+                // stale generation → reconnect, handshake, replay
+                tx.send(seq_flush(3)).unwrap();
+                tx.close();
+            });
+            let conn = listener.accept().unwrap();
+            let mut rx = SocketFlushRx::new(vec![conn], vec![0], &ledger).unwrap();
+            for want in 0..3 {
+                assert_eq!(rx.recv().unwrap().seq, want, "{kind}");
+            }
+            // shard "dies" having durably absorbed only seq 0: the
+            // respawn hands out resume cursor 1, so the worker must
+            // replay 1 and 2 before delivering 3
+            drop(rx);
+            drop(listener);
+            let (listener2, addr2) = listen(kind, "fchaos2").unwrap();
+            cell.set(&addr2);
+            let conn2 = listener2.accept().unwrap();
+            let mut rx2 = SocketFlushRx::new(vec![conn2], vec![1], &ledger).unwrap();
+            let mut seqs = Vec::new();
+            while let Some(m) = rx2.recv() {
+                seqs.push(m.seq);
+            }
+            assert_eq!(seqs, vec![1, 2, 3], "{kind} replayed the wrong suffix");
+            client.join().unwrap();
+            assert_eq!(recovery.snapshot().replayed_batches, 3);
+        }
+    }
+
+    #[test]
+    fn tuple_lane_replays_unacked_after_worker_restart() {
+        for kind in kinds() {
+            let ledger = Arc::new(WireLedger::new());
+            let recovery = Arc::new(RecoveryLedger::new());
+            let (listener, addr) = listen(kind, "tchaos").unwrap();
+            let cell = AddrCell::new(&addr);
+            let client = Duplex::connect(&cell.get()).unwrap();
+            let server = listener.accept().unwrap();
+            drop(listener);
+            let mut tx = SocketTupleTx::with_recovery(
+                client,
+                8,
+                Arc::clone(&ledger),
+                cell.clone(),
+                Arc::clone(&recovery),
+            );
+            // worker v1: absorb (and credit-ack) one chunk, then die
+            let srv = thread::spawn(move || {
+                let mut conn = server;
+                let mut scratch = Vec::new();
+                match wire::read_frame(&mut conn, &mut scratch) {
+                    Ok(Some(Frame::Data(msgs))) => {
+                        let mut buf = Vec::new();
+                        wire::encode_credit(msgs.len() as u64, &mut buf);
+                        conn.write_all(&buf).unwrap();
+                        msgs.len()
+                    }
+                    other => panic!("expected data, got {other:?}"),
+                }
+            });
+            let chunk = |lo: u64, hi: u64| -> Vec<Msg> {
+                (lo..hi).map(|key| Msg { key, emit_ns: 0, ts: 0 }).collect()
+            };
+            tx.send(chunk(0, 3)).unwrap();
+            assert_eq!(srv.join().unwrap(), 3);
+            // worker v2 on a fresh address; the acked chunk must not be
+            // replayed, the unacked one must
+            let (listener2, addr2) = listen(kind, "tchaos2").unwrap();
+            cell.set(&addr2);
+            let srv2 = thread::spawn(move || {
+                let mut conn = listener2.accept().unwrap();
+                let mut scratch = Vec::new();
+                let mut keys = Vec::new();
+                loop {
+                    match wire::read_frame(&mut conn, &mut scratch) {
+                        Ok(Some(Frame::Data(msgs))) => {
+                            keys.extend(msgs.iter().map(|m| m.key));
+                        }
+                        Ok(Some(Frame::Eof)) | Ok(None) => break,
+                        other => panic!("unexpected frame: {other:?}"),
+                    }
+                }
+                keys
+            });
+            tx.send(chunk(3, 6)).unwrap();
+            tx.close();
+            assert_eq!(srv2.join().unwrap(), vec![3, 4, 5], "{kind}");
+            assert_eq!(recovery.snapshot().replayed_tuples, 3);
         }
     }
 }

@@ -38,6 +38,7 @@ const KIND_CREDIT: u8 = 3;
 const KIND_HELLO: u8 = 4;
 const KIND_EOF: u8 = 5;
 const KIND_DONE: u8 = 6;
+const KIND_RESUME: u8 = 7;
 
 /// One routed tuple in flight from a source to a worker.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -56,6 +57,12 @@ pub struct Msg {
 pub struct FlushMsg {
     /// Originating worker index.
     pub worker: usize,
+    /// Per-(worker, shard) monotonic sequence number (0-based). Each
+    /// worker numbers the flushes it sends to each shard independently;
+    /// the shard's merge path accepts exactly seq == expected, buffers
+    /// ahead-of-expected frames, and drops replayed ones — the dedup
+    /// half of the exactly-once guarantee (docs/RECOVERY.md).
+    pub seq: u64,
     /// Flush emit time in ns (flush→merge transit latency baseline).
     pub emit_ns: u64,
     /// The worker's event-time watermark at flush time (`u64::MAX` on
@@ -91,6 +98,17 @@ pub enum Frame {
     Eof,
     /// Opaque result blob a child returns to the coordinator.
     Done(Vec<u8>),
+    /// Flush-stream resume point (shard → worker, sent once right
+    /// after a flush connection is accepted): the next flush sequence
+    /// number the shard expects from `worker`. 0 on a fresh stream; a
+    /// recovered shard answers with its snapshot's acked seq + 1 so the
+    /// worker replays exactly the lost suffix of its flush log.
+    Resume {
+        /// Worker index the shard is addressing.
+        worker: u64,
+        /// Next expected flush sequence number on this stream.
+        next_seq: u64,
+    },
 }
 
 /// Wire decode / IO error.
@@ -188,6 +206,7 @@ pub fn encode_data(msgs: &[Msg], buf: &mut Vec<u8>) {
 pub fn encode_flush(msg: &FlushMsg, buf: &mut Vec<u8>) {
     let start = begin_frame(KIND_FLUSH, buf);
     put_u64(buf, msg.worker as u64);
+    put_u64(buf, msg.seq);
     put_u64(buf, msg.emit_ns);
     put_u64(buf, msg.watermark);
     put_u32(buf, msg.panes.len() as u32);
@@ -222,6 +241,15 @@ pub fn encode_hello(role: u8, index: u64, addr: &str, buf: &mut Vec<u8>) {
 /// Append an `Eof` frame.
 pub fn encode_eof(buf: &mut Vec<u8>) {
     let start = begin_frame(KIND_EOF, buf);
+    end_frame(start, buf);
+}
+
+/// Append a `Resume` frame telling `worker` the next flush sequence
+/// number this shard expects.
+pub fn encode_resume(worker: u64, next_seq: u64, buf: &mut Vec<u8>) {
+    let start = begin_frame(KIND_RESUME, buf);
+    put_u64(buf, worker);
+    put_u64(buf, next_seq);
     end_frame(start, buf);
 }
 
@@ -330,6 +358,7 @@ pub(crate) fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame, WireErro
         }
         KIND_FLUSH => {
             let worker = r.u64()? as usize;
+            let seq = r.u64()?;
             let emit_ns = r.u64()?;
             let watermark = r.u64()?;
             let n_panes = r.u32()? as usize;
@@ -352,7 +381,7 @@ pub(crate) fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame, WireErro
                 }
                 panes.push((window, entries));
             }
-            Ok(Frame::Flush(FlushMsg { worker, emit_ns, watermark, panes }))
+            Ok(Frame::Flush(FlushMsg { worker, seq, emit_ns, watermark, panes }))
         }
         KIND_CREDIT => Ok(Frame::Credit(r.u64()?)),
         KIND_HELLO => {
@@ -363,6 +392,11 @@ pub(crate) fn decode_payload(kind: u8, payload: &[u8]) -> Result<Frame, WireErro
         }
         KIND_EOF => Ok(Frame::Eof),
         KIND_DONE => Ok(Frame::Done(payload.to_vec())),
+        KIND_RESUME => {
+            let worker = r.u64()?;
+            let next_seq = r.u64()?;
+            Ok(Frame::Resume { worker, next_seq })
+        }
         other => Err(WireError::BadKind(other)),
     }
 }
@@ -410,7 +444,11 @@ pub fn frame_tuples(frame: &Frame) -> usize {
         Frame::Flush(f) => f.panes.iter().map(|(_, entries)| entries.len()).sum(),
         // control frames carry no stream tuples; a new frame kind must
         // decide its tuple accounting here explicitly
-        Frame::Credit(_) | Frame::Hello { .. } | Frame::Eof | Frame::Done(_) => 0,
+        Frame::Credit(_)
+        | Frame::Hello { .. }
+        | Frame::Eof
+        | Frame::Done(_)
+        | Frame::Resume { .. } => 0,
     }
 }
 
@@ -446,6 +484,7 @@ mod tests {
     fn flush_frame_round_trips_including_watermark_only() {
         let full = FlushMsg {
             worker: 3,
+            seq: 41,
             emit_ns: 1_234_567,
             watermark: 999,
             panes: vec![(0, vec![(1, 5), (9, 2)]), (2, vec![(4, 1)])],
@@ -454,7 +493,8 @@ mod tests {
             Frame::Flush(back) => assert_eq!(back, full),
             other => panic!("wrong frame: {other:?}"),
         }
-        let wm_only = FlushMsg { worker: 0, emit_ns: 7, watermark: u64::MAX, panes: vec![] };
+        let wm_only =
+            FlushMsg { worker: 0, seq: u64::MAX, emit_ns: 7, watermark: u64::MAX, panes: vec![] };
         match roundtrip(|b| encode_flush(&wm_only, b)) {
             Frame::Flush(back) => assert_eq!(back, wm_only),
             other => panic!("wrong frame: {other:?}"),
@@ -472,6 +512,10 @@ mod tests {
         assert_eq!(
             roundtrip(|b| encode_done(&[9, 8, 7], b)),
             Frame::Done(vec![9, 8, 7])
+        );
+        assert_eq!(
+            roundtrip(|b| encode_resume(4, 129, b)),
+            Frame::Resume { worker: 4, next_seq: 129 }
         );
     }
 
@@ -551,11 +595,13 @@ mod tests {
         assert_eq!(frame_tuples(&data), 4);
         let flush = Frame::Flush(FlushMsg {
             worker: 0,
+            seq: 0,
             emit_ns: 0,
             watermark: 0,
             panes: vec![(0, vec![(1, 2), (2, 3)]), (1, vec![(1, 1)])],
         });
         assert_eq!(frame_tuples(&flush), 3);
         assert_eq!(frame_tuples(&Frame::Credit(10)), 0);
+        assert_eq!(frame_tuples(&Frame::Resume { worker: 0, next_seq: 5 }), 0);
     }
 }

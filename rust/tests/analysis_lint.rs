@@ -18,12 +18,12 @@ fn repo_path(rel: &str) -> PathBuf {
 #[test]
 fn seeded_regressions_are_flagged() {
     let report = lint_tree(&repo_path("rust/tests/fixtures/lint")).expect("scan fixtures");
-    assert_eq!(report.files_scanned, 2, "fixture set changed without updating this test");
+    assert_eq!(report.files_scanned, 3, "fixture set changed without updating this test");
     assert_eq!(report.suppressions, 0);
     assert_eq!(
         report.findings.len(),
-        2,
-        "expected exactly the two seeded findings, got: {:#?}",
+        3,
+        "expected exactly the three seeded findings, got: {:#?}",
         report.findings
     );
     // findings are sorted by (file, line, rule)
@@ -37,6 +37,11 @@ fn seeded_regressions_are_flagged() {
     assert_eq!(credit.file, "transport/bad_credit.rs");
     assert_eq!(credit.line, 15);
     assert!(credit.snippet.contains("Ordering::Relaxed"), "{credit:?}");
+    let seq = &report.findings[2];
+    assert_eq!(seq.rule, "frame-exhaustive");
+    assert_eq!(seq.file, "transport/bad_flush_seq.rs");
+    assert_eq!(seq.line, 11);
+    assert!(seq.snippet.contains("FlushMsg"), "{seq:?}");
 }
 
 #[test]
@@ -67,7 +72,8 @@ fn real_tree_scans_clean() {
 fn json_report_round_trips_the_counts() {
     let report = lint_tree(&repo_path("rust/tests/fixtures/lint")).expect("scan fixtures");
     let json = report.to_json();
-    assert!(json.contains("\"files_scanned\":2"), "{json}");
+    assert!(json.contains("\"files_scanned\":3"), "{json}");
     assert!(json.contains("\"rule\":\"unsorted-map-iteration\""), "{json}");
     assert!(json.contains("\"rule\":\"relaxed-credit-atomic\""), "{json}");
+    assert!(json.contains("\"rule\":\"frame-exhaustive\""), "{json}");
 }

@@ -1,0 +1,154 @@
+//! Exactly-once crash-recovery oracle (docs/RECOVERY.md): scripted
+//! kills through the deterministic simulator must leave every
+//! transport-invariant output byte-identical to the fault-free run,
+//! and the recovery building blocks — the flush sequencer and the
+//! shard snapshot — must replay a crashed shard back to the exact
+//! pre-crash state through the public API alone. The multi-process
+//! half of the story (real SIGKILLs, socket re-dials) runs in CI's
+//! chaos-smoke lane via `fish deploy --chaos ... --verify`.
+
+use fish::aggregate::{Count, FlushSequencer, SeqDecision, WindowedMerge};
+use fish::config::Config;
+use fish::coordinator::{make_scheme, Grouper, SchemeKind};
+use fish::engine::{FaultPoint, SimResult, Simulator, Topology};
+use fish::transport::FlushMsg;
+use fish::workload::by_name;
+
+fn sim_run(scheme: SchemeKind, faults: Vec<FaultPoint>, snapshot_every: u64) -> SimResult {
+    let mut cfg = Config::default();
+    cfg.scheme = scheme;
+    cfg.workers = 8;
+    cfg.tuples = 24_000;
+    cfg.sources = 2;
+    cfg.interarrival_ns = 500;
+    let topology = Topology::from_config(&cfg);
+    let sources: Vec<Box<dyn Grouper>> =
+        (0..cfg.sources).map(|s| make_scheme(&cfg, s)).collect();
+    let mut sim = Simulator::new(topology, sources, cfg.interarrival_ns)
+        .with_agg_shards(3)
+        .with_agg_window(2_000_000)
+        .with_faults(faults)
+        .with_snapshot_every(snapshot_every);
+    let mut gen = by_name("zf", cfg.tuples, 1.5, cfg.seed);
+    sim.run(gen.as_mut())
+}
+
+#[test]
+fn scripted_kills_leave_every_output_byte_identical() {
+    for scheme in [SchemeKind::Fish, SchemeKind::Pkg] {
+        let clean = sim_run(scheme, Vec::new(), 0);
+        assert!(!clean.recovery.any(), "{scheme}: fault-free run must report zero recovery");
+        let chaos = sim_run(
+            scheme,
+            vec![
+                FaultPoint::KillWorker { worker: 1, at_tuple: 1_000 },
+                FaultPoint::KillShard { shard: 2, at_flush: 4 },
+            ],
+            4,
+        );
+        assert_eq!(chaos.merged_counts, clean.merged_counts, "{scheme}: merged counts");
+        assert_eq!(chaos.top_k(10), clean.top_k(10), "{scheme}: top-k");
+        assert_eq!(chaos.windows.len(), clean.windows.len(), "{scheme}: window count");
+        for (a, b) in chaos.windows.iter().zip(&clean.windows) {
+            assert_eq!(a.window, b.window, "{scheme}");
+            assert_eq!(a.counts, b.counts, "{scheme}: pane {}", b.window);
+        }
+        assert_eq!(
+            chaos.window_stats.panes_retired, clean.window_stats.panes_retired,
+            "{scheme}: pane retirements"
+        );
+        assert_eq!(chaos.worker_counts, clean.worker_counts, "{scheme}: per-worker tuples");
+        assert_eq!(chaos.makespan, clean.makespan, "{scheme}: virtual makespan");
+        assert!(chaos.recovery.worker_restarts == 1, "{scheme}");
+        assert!(chaos.recovery.shard_restarts == 1, "{scheme}");
+        assert!(chaos.recovery.replayed_batches > 0, "{scheme}: replay happened");
+    }
+}
+
+#[test]
+fn sequencer_restored_from_snapshot_dedups_the_replayed_log() {
+    // a shard's whole life as the protocol sees it: absorb a prefix,
+    // snapshot, crash, restore, then receive the FULL log again — the
+    // restored cursor must accept exactly the unseen suffix
+    let flush = |worker: usize, seq: u64| FlushMsg {
+        worker,
+        seq,
+        emit_ns: seq * 10,
+        watermark: seq * 10,
+        panes: vec![(0, vec![(worker as u64 + 1, seq + 1)])],
+    };
+    let log: Vec<FlushMsg> = (0..6u64).map(|s| flush(0, s)).collect();
+
+    let mut first = FlushSequencer::new(1);
+    let mut absorbed_before = 0u64;
+    for msg in log.iter().take(4) {
+        if let SeqDecision::Accept(batch) = first.offer(msg.worker, msg.seq, msg.clone()) {
+            absorbed_before += batch.len() as u64;
+        }
+    }
+    assert_eq!(absorbed_before, 4);
+    let expected = first.expected_all().to_vec();
+    assert_eq!(expected, vec![4]);
+
+    // crash; restore from the snapshot's cursors; replay everything
+    let mut second: FlushSequencer<FlushMsg> = FlushSequencer::restore(expected);
+    let mut accepted = Vec::new();
+    let mut deduped = 0;
+    for msg in &log {
+        match second.offer(msg.worker, msg.seq, msg.clone()) {
+            SeqDecision::Accept(batch) => accepted.extend(batch.into_iter().map(|m| m.seq)),
+            SeqDecision::Replayed => deduped += 1,
+            SeqDecision::Buffered => panic!("in-order replay never parks"),
+        }
+    }
+    assert_eq!(deduped, 4, "the snapshotted prefix is deduped, not re-applied");
+    assert_eq!(accepted, vec![4, 5], "exactly the unseen suffix is absorbed");
+}
+
+#[test]
+fn merge_state_restored_from_snapshot_replays_to_identical_output() {
+    let feed: Vec<(u64, Vec<(u64, u64)>)> = vec![
+        (0, vec![(1, 5), (9, 2)]),
+        (1, vec![(3, 1), (1, 1)]),
+        (2, vec![(7, 4)]),
+        (3, vec![(1, 2), (9, 9)]),
+    ];
+    // the uninterrupted reference
+    let mut clean = WindowedMerge::new(Count, 1_000, 8).with_lateness(250);
+    for (w, sub) in feed.clone() {
+        clean.absorb(w, sub);
+        clean.advance(w * 1_000 + 900);
+    }
+    let reference = clean.finish();
+
+    // crash after two rounds: snapshot, restore into a fresh stage,
+    // replay the suffix — retired panes, ledgers and open panes must
+    // all converge on the same bytes
+    let mut victim = WindowedMerge::new(Count, 1_000, 8).with_lateness(250);
+    for (w, sub) in feed.iter().take(2).cloned() {
+        victim.absorb(w, sub);
+        victim.advance(w * 1_000 + 900);
+    }
+    let snap = victim.snapshot();
+    let mut restored = WindowedMerge::new(Count, 1_000, 8).with_lateness(250);
+    restored.restore(snap);
+    for (w, sub) in feed.iter().skip(2).cloned() {
+        restored.absorb(w, sub);
+        restored.advance(w * 1_000 + 900);
+    }
+    let replayed = restored.finish();
+
+    assert_eq!(replayed.all_time, reference.all_time);
+    assert_eq!(replayed.windows.len(), reference.windows.len());
+    for (a, b) in replayed.windows.iter().zip(&reference.windows) {
+        assert_eq!(a.window, b.window);
+        assert_eq!(a.counts, b.counts, "pane {}", b.window);
+    }
+    assert_eq!(replayed.window_stats.panes_opened, reference.window_stats.panes_opened);
+    assert_eq!(replayed.window_stats.panes_retired, reference.window_stats.panes_retired);
+    assert_eq!(replayed.window_stats.late_reopens, reference.window_stats.late_reopens);
+    assert_eq!(
+        replayed.window_stats.late_reopen_mass,
+        reference.window_stats.late_reopen_mass
+    );
+}

@@ -1,0 +1,18 @@
+//! Seeded regression for `fish lint`: a `FlushMsg` literal that hides
+//! its exactly-once `seq` behind struct update — the frame ships with
+//! a silently-defaulted sequence number and the shard sequencer
+//! dedups or parks it (see `docs/RECOVERY.md`). This file is a lint
+//! fixture, never compiled; the self-test in
+//! `rust/tests/analysis_lint.rs` asserts the engine flags line 11.
+
+use crate::transport::wire::FlushMsg;
+
+pub fn resend(worker: usize, emit_ns: u64) -> FlushMsg {
+    FlushMsg {
+        worker,
+        emit_ns,
+        watermark: emit_ns,
+        panes: Vec::new(),
+        ..Default::default()
+    }
+}

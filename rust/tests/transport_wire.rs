@@ -27,6 +27,7 @@ fn random_flush(rng: &mut Rng) -> FlushMsg {
     let n_panes = rng.gen_range(4) as usize;
     FlushMsg {
         worker: rng.gen_range(64) as usize,
+        seq: rng.gen_range(1 << 32),
         emit_ns: rng.gen_range(1 << 60),
         watermark: rng.gen_range(1 << 60),
         panes: (0..n_panes)
@@ -66,7 +67,7 @@ fn randomized_frames_round_trip() {
     // it must survive the wire like any data-bearing frame
     buf.clear();
     let keepalive =
-        FlushMsg { worker: 3, emit_ns: 17, watermark: u64::MAX, panes: Vec::new() };
+        FlushMsg { worker: 3, seq: 41, emit_ns: 17, watermark: u64::MAX, panes: Vec::new() };
     wire::encode_flush(&keepalive, &mut buf);
     let (frame, _) = wire::decode_frame(&buf).expect("keep-alive");
     assert_eq!(frame, Frame::Flush(keepalive));
@@ -75,6 +76,7 @@ fn randomized_frames_round_trip() {
     buf.clear();
     wire::encode_credit(77, &mut buf);
     wire::encode_hello(2, 5, "tcp:127.0.0.1:4099", &mut buf);
+    wire::encode_resume(3, 42, &mut buf);
     wire::encode_eof(&mut buf);
     wire::encode_done(&[1, 2, 3], &mut buf);
     let mut off = 0;
@@ -89,6 +91,7 @@ fn randomized_frames_round_trip() {
         vec![
             Frame::Credit(77),
             Frame::Hello { role: 2, index: 5, addr: "tcp:127.0.0.1:4099".into() },
+            Frame::Resume { worker: 3, next_seq: 42 },
             Frame::Eof,
             Frame::Done(vec![1, 2, 3]),
         ]
@@ -109,7 +112,7 @@ fn truncated_frames_error_cleanly() {
     specimens.push(("flush", buf));
     let mut buf = Vec::new();
     wire::encode_flush(
-        &FlushMsg { worker: 1, emit_ns: 9, watermark: u64::MAX, panes: Vec::new() },
+        &FlushMsg { worker: 1, seq: 8, emit_ns: 9, watermark: u64::MAX, panes: Vec::new() },
         &mut buf,
     );
     specimens.push(("flush-keepalive", buf));
@@ -125,7 +128,10 @@ fn truncated_frames_error_cleanly() {
     let mut buf = Vec::new();
     wire::encode_done(&[1, 2, 3, 4], &mut buf);
     specimens.push(("done", buf));
-    assert_eq!(specimens.len(), 7, "cover every frame kind (incl. the pane-less flush)");
+    let mut buf = Vec::new();
+    wire::encode_resume(5, 97, &mut buf);
+    specimens.push(("resume", buf));
+    assert_eq!(specimens.len(), 8, "cover every frame kind (incl. the pane-less flush)");
 
     let mut scratch = Vec::new();
     for (kind, buf) in &specimens {
@@ -156,6 +162,40 @@ fn truncated_frames_error_cleanly() {
         let (_, used) = wire::decode_frame(buf).expect(kind);
         assert_eq!(used, buf.len(), "{kind}: trailing bytes after decode");
     }
+}
+
+#[test]
+fn snapshot_codec_rejects_every_truncation() {
+    // the shard-snapshot codec shares the wire's primitives and its
+    // contract: every strict prefix of a persisted snapshot must come
+    // back as Truncated — a crash mid-write can never half-restore
+    let mut rng = Rng::new(0x5AFE);
+    let mut merge = fish::aggregate::WindowedMerge::new(fish::aggregate::Count, 1_000, 4)
+        .with_lateness(500);
+    merge.absorb(0, vec![(11, 3), (29, 1)]);
+    merge.advance(2_700);
+    merge.absorb(2, vec![(11, 2)]);
+    let snap = fish::state::ShardSnapshot {
+        shard: 2,
+        expected_seq: vec![4, 9, 0, 1],
+        worker_wm: vec![2_700, 1_000, 0, 2_000],
+        merge: merge.snapshot(),
+        sketch_entries: vec![(11, 5.0), (29, 1.0)],
+        sketch_error: 0.5,
+        buffered: vec![random_flush(&mut rng), random_flush(&mut rng)],
+        latency: fish::metrics::Histogram::new(),
+        recovery: Default::default(),
+    };
+    let bytes = snap.to_bytes();
+    for cut in 0..bytes.len() {
+        match fish::state::ShardSnapshot::from_bytes(&bytes[..cut]) {
+            Err(WireError::Truncated) => {}
+            other => panic!("snapshot prefix {cut}/{}: expected Truncated, got {other:?}",
+                bytes.len()),
+        }
+    }
+    let back = fish::state::ShardSnapshot::from_bytes(&bytes).expect("full decode");
+    assert_eq!(back.to_bytes(), bytes, "decode → re-encode must be byte-identical");
 }
 
 #[test]

@@ -4,6 +4,9 @@
 Usage:
     check_perf.py CURRENT_JSON BASELINE_JSON [--threshold 0.25]
     check_perf.py --lint LINT_JSON --lint-baseline scripts/lint_baseline.json
+    check_perf.py --recovery RECOVERY_JSON \
+        --recovery-baseline benches/baselines/recovery_smoke.json \
+        [--recovery-threshold 0.5]
 
 CURRENT_JSON is the `BENCH_hotpath.json` a `cargo bench --bench hotpath`
 run just emitted; BASELINE_JSON is `benches/baselines/hotpath_smoke.json`.
@@ -33,6 +36,19 @@ the current report but absent from the baseline fails the gate. The
 baseline is empty — the tree lints clean — so in practice any new
 finding fails; the indirection exists so a finding can be temporarily
 baselined during a multi-PR refactor without disabling the job.
+
+With --recovery, the gate reads the `--recovery-json` metrics a chaos
+deploy run (`fish deploy --chaos ... --recovery-json PATH`) just wrote
+and holds them against `benches/baselines/recovery_smoke.json`. Two
+kinds of checks: the baseline's require{} minimums prove the kill
+actually fired and recovery actually ran (restarts, snapshot restores,
+replayed batches), and its max_* ceilings bound how expensive that
+recovery was — wall-clock nanoseconds from kill to rejoin, and the
+replayed-batch ratio (replayed / absorbed flush batches, the
+wasted-work fraction). RECOVERY-THRESHOLD is multiplicative headroom
+on the ceilings (0.5 = 50% over baseline) so a noisy CI runner does
+not flake the lane while a real regression — a snapshot cadence bug
+inflating replay, a reconnect stall — still fails.
 
 Exit status: 0 = within threshold, 1 = regression, 2 = bad input.
 """
@@ -91,6 +107,56 @@ def check_lint(current_path, baseline_path):
           f"{suppressed} documented suppression(s)")
 
 
+def check_recovery(current_path, baseline_path, threshold):
+    """Gate chaos-lane recovery metrics against the checked-in bounds."""
+    current = load(current_path)
+    baseline = load(baseline_path)
+    failures = []
+
+    require = baseline.get("require") or {}
+    ceilings = baseline.get("ceilings") or {}
+    if not require and not ceilings:
+        print(f"error: {baseline_path} has neither require{{}} nor ceilings{{}}",
+              file=sys.stderr)
+        sys.exit(2)
+
+    print(f"{'metric':>18} {'current':>14} {'bound':>14}  status")
+    for key, want in sorted(require.items()):
+        got = current.get(key)
+        if got is None:
+            failures.append(f"{key}: missing from {current_path}")
+            print(f"{key:>18} {'—':>14} {f'>= {want}':>14}  MISSING")
+            continue
+        ok = got >= want
+        print(f"{key:>18} {got:>14} {f'>= {want}':>14}  {'ok' if ok else 'FAILED'}")
+        if not ok:
+            failures.append(
+                f"{key} = {got}, chaos lane requires at least {want} — "
+                "did the scripted kill fire and recovery run?")
+
+    for key, base in sorted(ceilings.items()):
+        ceiling = base * (1.0 + threshold)
+        got = current.get(key)
+        if got is None:
+            failures.append(f"{key}: missing from {current_path}")
+            print(f"{key:>18} {'—':>14} {ceiling:>14.3f}  MISSING")
+            continue
+        ok = got <= ceiling
+        print(f"{key:>18} {got:>14.3f} {ceiling:>14.3f}  {'ok' if ok else 'EXCEEDED'}")
+        if not ok:
+            failures.append(
+                f"{key} = {got:.3f} exceeded ceiling {ceiling:.3f} "
+                f"(baseline {base:.3f}, headroom {threshold:.0%})")
+
+    if failures:
+        print("\nrecovery gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print(f"\nrecovery gate ok: {len(require)} liveness minimum(s) met, "
+          f"{len(ceilings)} cost ceiling(s) within {threshold:.0%} headroom")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", nargs="?")
@@ -107,13 +173,28 @@ def main():
                     default="scripts/lint_baseline.json",
                     help="checked-in lint findings baseline "
                          "(default scripts/lint_baseline.json)")
+    ap.add_argument("--recovery", metavar="RECOVERY_JSON",
+                    help="gate `fish deploy --recovery-json` output "
+                         "instead of perf")
+    ap.add_argument("--recovery-baseline", metavar="BASELINE_JSON",
+                    default="benches/baselines/recovery_smoke.json",
+                    help="checked-in recovery bounds "
+                         "(default benches/baselines/recovery_smoke.json)")
+    ap.add_argument("--recovery-threshold", type=float, default=0.5,
+                    help="multiplicative headroom over the baseline "
+                         "ceilings (default 0.5 = 50%%)")
     args = ap.parse_args()
 
     if args.lint:
         check_lint(args.lint, args.lint_baseline)
         return
+    if args.recovery:
+        check_recovery(args.recovery, args.recovery_baseline,
+                       args.recovery_threshold)
+        return
     if not args.current or not args.baseline:
-        ap.error("CURRENT_JSON and BASELINE_JSON are required without --lint")
+        ap.error("CURRENT_JSON and BASELINE_JSON are required "
+                 "without --lint/--recovery")
 
     current_doc = load(args.current)
     baseline_doc = load(args.baseline)
