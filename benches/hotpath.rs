@@ -12,6 +12,11 @@
 //!   size) — gated in CI as *ratios* against the observe cost, so the
 //!   two-stage path and the serialize/deserialize hot loop can't
 //!   silently regress relative to their own stage one.
+//! * obs overhead: the same fold with `obs::span!` hooks disabled
+//!   (`span_off` — must stay at ~parity with plain observe, the
+//!   zero-cost-when-disabled gate), enabled (`span_on` — the real
+//!   record-path price of `--trace-out`), and the merge loop with
+//!   disabled per-flush hooks (`absorb_span_off`).
 //! * identifier throughput: native Alg. 1 vs the XLA count-min path
 //!   (AOT Pallas kernel via PJRT), amortised per tuple.
 //!
@@ -33,6 +38,7 @@ use fish::aggregate::{Count, MergeStage, PartialAgg, ShardRouter, WindowedMerge,
 use fish::config::Config;
 use fish::coordinator::fish::{EpochIdentifier, Identifier};
 use fish::coordinator::{make_kind, ClusterView, SchemeKind};
+use fish::obs::{ClockDomain, TraceBuf};
 use fish::report::{f2, Table};
 use std::time::Instant;
 
@@ -258,6 +264,89 @@ fn bench_wire_decode(keys: &[u64], batch: usize) -> f64 {
     start.elapsed().as_nanos() as f64 / msgs.len() as f64
 }
 
+/// Disabled-instrumentation cost: the stage-one fold with an
+/// `obs::span!` per op against a disabled [`TraceBuf`] — prices the
+/// one `is_active()` branch the tracing hooks leave in hot loops when
+/// no `--trace-out` is armed. The buffer reference goes through
+/// `black_box` so the branch reads memory like the engine's does
+/// instead of constant-folding away. Gated vs plain observe: this
+/// ratio rising past ~parity means the zero-cost-when-disabled
+/// contract broke.
+fn bench_span_off(keys: &[u64]) -> f64 {
+    let mut p = PartialAgg::new(Count);
+    let mut buf = TraceBuf::disabled();
+    let obs = std::hint::black_box(&mut buf);
+    for (i, &k) in keys.iter().take(keys.len() / 10).enumerate() {
+        p.observe(k, 1);
+        fish::obs::span!(obs, "fold", i as u64, i as u64 + 1);
+    }
+    let start = Instant::now();
+    for (i, &k) in keys.iter().enumerate() {
+        p.observe(k, 1);
+        fish::obs::span!(obs, "fold", i as u64, i as u64 + 1);
+    }
+    let ns = start.elapsed().as_nanos() as f64 / keys.len() as f64;
+    std::hint::black_box((p.len(), buf.dropped()));
+    ns
+}
+
+/// Enabled-instrumentation cost: the same fold against an *active*
+/// buffer with capacity for the whole stream, so every op pays the
+/// real record path (branch + `Event` push), not the ring-full drop
+/// path. Informational ceiling for what `--trace-out` costs a hot
+/// loop; gated loosely since it is expected to be several observes.
+fn bench_span_on(keys: &[u64]) -> f64 {
+    let mut p = PartialAgg::new(Count);
+    let mut buf = TraceBuf::with_cap(0, 0, ClockDomain::Virtual, keys.len() * 2);
+    let obs = std::hint::black_box(&mut buf);
+    for (i, &k) in keys.iter().take(keys.len() / 10).enumerate() {
+        p.observe(k, 1);
+        fish::obs::span!(obs, "fold", i as u64, i as u64 + 1);
+    }
+    let start = Instant::now();
+    for (i, &k) in keys.iter().enumerate() {
+        p.observe(k, 1);
+        fish::obs::span!(obs, "fold", i as u64, i as u64 + 1);
+    }
+    let ns = start.elapsed().as_nanos() as f64 / keys.len() as f64;
+    std::hint::black_box((p.len(), buf.events().len()));
+    ns
+}
+
+/// Disabled-instrumentation cost on the merge path: the
+/// [`bench_merge_absorb`] loop with the shard loop's per-flush span +
+/// counter hooks compiled in but disabled, amortised per merged entry.
+/// Gated against the plain `merge_absorb` ratio: per-batch hooks must
+/// stay invisible at flush granularity when tracing is off.
+fn bench_absorb_span_off(keys: &[u64], flush_every: usize) -> f64 {
+    let mut batches = Vec::new();
+    let mut p = PartialAgg::new(Count);
+    for (i, &k) in keys.iter().enumerate() {
+        p.observe(k, 1);
+        if (i + 1) % flush_every == 0 {
+            batches.push(p.flush());
+        }
+    }
+    if !p.is_empty() {
+        batches.push(p.flush());
+    }
+    let entries: usize = batches.iter().map(|b| b.len()).sum();
+    let mut m = MergeStage::new(Count);
+    let mut buf = TraceBuf::disabled();
+    let obs = std::hint::black_box(&mut buf);
+    let start = Instant::now();
+    for (seq, b) in batches.into_iter().enumerate() {
+        let t0 = seq as u64 * 1_000;
+        let n = b.len() as u64;
+        m.absorb(b);
+        fish::obs::span!(obs, "merge_absorb", t0, t0 + 1, seq = seq as u64);
+        fish::obs::count!(obs, "absorb_entries", t0 + 1, n);
+    }
+    let ns = start.elapsed().as_nanos() as f64 / entries.max(1) as f64;
+    std::hint::black_box((m.len(), buf.dropped()));
+    ns
+}
+
 fn bench_identifier_native(keys: &[u64], epoch: usize, cap: usize) -> f64 {
     let mut id = EpochIdentifier::new(cap, epoch, 0.2);
     let start = Instant::now();
@@ -328,8 +417,11 @@ fn main() {
     let window_retire_ns = bench_window_retire(&keys, 4096);
     let wire_encode_ns = bench_wire_encode(&keys, 1024);
     let wire_decode_ns = bench_wire_decode(&keys, 1024);
+    let span_off_ns = bench_span_off(&keys);
+    let span_on_ns = bench_span_on(&keys);
+    let absorb_span_off_ns = bench_absorb_span_off(&keys, 4096);
     let mut ta = Table::new(
-        "aggregation path: two-stage fold + shard dispatch + window panes + wire codec",
+        "aggregation path: two-stage fold + shard dispatch + window panes + wire codec + obs hooks",
         &["op", "ns/op", "ratio vs observe"],
     );
     let mut agg_json_rows: Vec<String> = Vec::new();
@@ -341,6 +433,9 @@ fn main() {
         ("window_retire", window_retire_ns),
         ("wire_encode", wire_encode_ns),
         ("wire_decode", wire_decode_ns),
+        ("span_off", span_off_ns),
+        ("span_on", span_on_ns),
+        ("absorb_span_off", absorb_span_off_ns),
     ] {
         let ratio = ns_op / partial_ns.max(1e-9);
         ta.row(&[op.into(), f2(ns_op), format!("{ratio:.2}x")]);

@@ -11,6 +11,7 @@
 //! | `relaxed-credit-atomic`  | `transport/`                   | `Ordering::Relaxed` on credit/watermark/ack atomics |
 //! | `raw-clock`              | everywhere but the `Clock` home| `SystemTime::now()` bypassing the shared clock |
 //! | `frame-exhaustive`       | everywhere                     | wire-frame `match`es with a bare `_` arm that would swallow a new frame kind; `FlushMsg` literals that don't name their exactly-once `seq` explicitly |
+//! | `obs-clock`              | `obs/`                         | `Instant::now()`/`SystemTime::now()` inside the tracing layer — timestamps must be passed in from the engine clock (virtual ticks or `transport::Clock`), or traces lose cross-process alignment and sim determinism |
 //!
 //! The only escape hatch is `// lint: sorted-ok` on (or immediately
 //! above) a flagged line of the map-iteration rule, for sites that
@@ -631,6 +632,46 @@ fn rule_flush_seq(relpath: &str, lines: &[LineInfo]) -> Vec<Finding> {
     findings
 }
 
+/// Rule 6: no raw clock reads inside the observability layer. The
+/// recorder is clock-agnostic by contract — timestamps are passed in
+/// by the engines (virtual ticks in sim, `transport::Clock` epoch
+/// nanoseconds in rt/deploy). An `Instant::now()` hiding inside
+/// `obs/` would silently break sim trace determinism and
+/// cross-process timeline alignment.
+fn rule_obs_clock(relpath: &str, lines: &[LineInfo]) -> Vec<Finding> {
+    if !in_dirs(relpath, &["obs"]) {
+        return Vec::new();
+    }
+    let mut findings = Vec::new();
+    for (idx, info) in lines.iter().enumerate() {
+        if info.in_test {
+            continue;
+        }
+        let hit = if info.code.contains("Instant::now") {
+            Some("Instant::now()")
+        } else if info.code.contains("SystemTime::now") {
+            Some("SystemTime::now()")
+        } else {
+            None
+        };
+        if let Some(what) = hit {
+            findings.push(Finding {
+                rule: "obs-clock",
+                file: relpath.to_string(),
+                line: idx + 1,
+                message: format!(
+                    "`{what}` inside the tracing layer: `obs` never reads a clock — \
+                     take the timestamp as a parameter from the engine (virtual ticks \
+                     in sim, `transport::Clock` in rt/deploy) so traces stay \
+                     deterministic and cross-process timelines align"
+                ),
+                snippet: info.raw.trim().to_string(),
+            });
+        }
+    }
+    findings
+}
+
 /// Byte offset of `word` in `code` as a standalone identifier (not a
 /// substring of a longer one), if present.
 fn find_token(code: &str, word: &str) -> Option<usize> {
@@ -675,6 +716,7 @@ pub fn lint_source(relpath: &str, text: &str) -> (Vec<Finding>, usize) {
     findings.extend(rule_unwrap_in_io(relpath, &lines));
     findings.extend(rule_relaxed_credit(relpath, &lines));
     findings.extend(rule_raw_clock(relpath, &lines));
+    findings.extend(rule_obs_clock(relpath, &lines));
     findings.extend(rule_frame_exhaustive(relpath, &lines));
     findings.extend(rule_flush_seq(relpath, &lines));
     (findings, suppressions)
@@ -822,6 +864,29 @@ mod tests {
         let src = "fn now() -> std::time::SystemTime { std::time::SystemTime::now() }\n";
         assert_eq!(findings_for("engine/sim.rs", src).len(), 1);
         assert!(findings_for("transport/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn obs_clock_rule_scopes_to_obs() {
+        let src = "fn stamp() -> std::time::Instant { std::time::Instant::now() }\n";
+        let f = findings_for("obs/mod.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "obs-clock");
+        assert_eq!(f[0].line, 1);
+        // Instant::now elsewhere is allowed (wall timing in main, benches)
+        assert!(findings_for("engine/rt.rs", src).is_empty());
+        // SystemTime in obs/ trips this rule *and* raw-clock: both contracts hold
+        let st = "fn t() { let _ = std::time::SystemTime::now(); }\n";
+        let f = findings_for("obs/sample.rs", st);
+        assert!(f.iter().any(|x| x.rule == "obs-clock"), "{f:?}");
+        assert!(f.iter().any(|x| x.rule == "raw-clock"), "{f:?}");
+        // test regions are exempt, comments are stripped
+        let test_src = "// Instant::now() discussed in a comment\n\
+                        #[cfg(test)]\n\
+                        mod tests {\n\
+                            fn g() { let _ = std::time::Instant::now(); }\n\
+                        }\n";
+        assert!(findings_for("obs/mod.rs", test_src).is_empty());
     }
 
     #[test]

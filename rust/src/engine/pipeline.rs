@@ -271,7 +271,8 @@ impl PipelineBuilder {
             .with_agg_flush(cfg.agg_flush_ms.saturating_mul(1_000_000))
             .with_agg_shards(cfg.agg_shards)
             .with_agg_window(cfg.agg_window_ms.saturating_mul(1_000_000))
-            .with_agg_lateness(cfg.agg_lateness_ms.saturating_mul(1_000_000));
+            .with_agg_lateness(cfg.agg_lateness_ms.saturating_mul(1_000_000))
+            .with_trace(crate::obs::enabled());
         let gen = by_name(&cfg.workload, cfg.tuples, cfg.zipf_z, cfg.seed);
         SimJob { sim, gen }
     }

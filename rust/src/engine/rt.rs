@@ -60,6 +60,9 @@ use crate::metrics::{
     AggStats, Histogram, RecoveryLedger, RecoveryStats, ShardAggStats, WindowStats, WireLedger,
     WireStats,
 };
+use crate::obs::{
+    chain_id, ClockDomain, Sample, Sampler, TraceBlob, TraceBuf, DEFAULT_INTERVAL_NS, NO_SEQ,
+};
 use crate::state::ShardSnapshot;
 use crate::transport::wire::{FlushMsg, Msg};
 use crate::transport::{
@@ -126,6 +129,14 @@ pub struct RtResult {
     /// snapshots, restores, restarts (docs/RECOVERY.md). All zeros on a
     /// fault-free run, so [`RecoveryStats::any`] gates the report rows.
     pub recovery: RecoveryStats,
+    /// Wall-clock trace buffers, one per engine thread (sources,
+    /// workers, shards — plus, multi-process, every child's buffers
+    /// shipped home in its `Done` payload). Empty unless tracing was
+    /// enabled (`obs::set_enabled` / `--trace-out`).
+    pub trace_blobs: Vec<TraceBlob>,
+    /// Per-epoch telemetry rows from every actor (same gate; empty when
+    /// tracing is off).
+    pub samples: Vec<Sample>,
 }
 
 impl RtResult {
@@ -233,6 +244,7 @@ fn send_flush(
     watermark: u64,
     flushed: Vec<(u64, Vec<(Key, u64)>)>,
     windowed: bool,
+    obs: &mut TraceBuf,
 ) {
     let mut per_shard: Vec<Vec<(u64, Vec<(Key, u64)>)>> =
         (0..shard_txs.len()).map(|_| Vec::new()).collect();
@@ -245,6 +257,9 @@ fn send_flush(
     }
     for (s, panes) in per_shard.into_iter().enumerate() {
         if windowed || !panes.is_empty() {
+            if obs.is_active() {
+                obs.instant_seq("flush_send", emit_ns, chain_id(worker as u64, s as u64, seqs[s]));
+            }
             let _ = shard_txs[s].send(FlushMsg {
                 worker,
                 seq: seqs[s],
@@ -274,6 +289,7 @@ pub(crate) fn source_loop(
     per_tuple: &[f64],
     workers_list: &[usize],
     mut txs: Vec<Box<dyn TupleTx>>,
+    obs: &mut TraceBuf,
 ) {
     let n = trace.len();
     // pace relative to when this source actually starts (≈0 in-process;
@@ -321,6 +337,10 @@ pub(crate) fn source_loop(
         };
         let m = keys.len();
         grouper.route_batch(&keys, &mut routed[..m], &view);
+        if obs.is_active() && m > 0 {
+            obs.span_full("route_batch", now, clock.now_ns(), NO_SEQ, m as u64);
+            obs.instant_full("source_emit", emits[0], NO_SEQ, m as u64);
+        }
 
         // one chunk send per destination worker (vs one send per
         // tuple): this is the lane-contention win
@@ -335,8 +355,15 @@ pub(crate) fn source_loop(
             // worker's unprocessed count to leave room, and reports a
             // vanished worker as an error so the source stops
             // streaming instead of blocking forever
+            let t0 = if obs.is_active() { clock.now_ns() } else { 0 };
+            let len = chunk.len() as u64;
             if txs[w].send(std::mem::take(chunk)).is_err() {
                 break 'stream; // worker gone (shutdown)
+            }
+            if obs.is_active() {
+                // the span's length is the backpressure stall: a send
+                // that found credit returns in nanoseconds
+                obs.span_full("credit_wait", t0, clock.now_ns(), NO_SEQ, len);
             }
         }
     }
@@ -374,9 +401,11 @@ pub(crate) fn worker_loop(
     mut rx: Box<dyn TupleRx>,
     mut flush_txs: Vec<Box<dyn FlushTx>>,
     crash_after_flushes: Option<u64>,
+    obs: &mut TraceBuf,
+    sampler: &mut Sampler,
 ) -> (Histogram, u64, usize) {
     let windowed = agg_window_ns > 0;
-    let mut hist = Histogram::new();
+    let mut hist = Histogram::wall();
     let mut count = 0u64;
     let mut state: std::collections::HashMap<Key, u64> = std::collections::HashMap::new();
     let mut delta = WindowedPartial::new(Count, agg_window_ns);
@@ -396,6 +425,8 @@ pub(crate) fn worker_loop(
             TupleRecv::Timeout => None,
             TupleRecv::Closed => break,
         };
+        let t0 = if obs.is_active() && chunk.is_some() { clock.now_ns() } else { 0 };
+        let before = count;
         for msg in chunk.into_iter().flatten() {
             // the actual operator: word count
             *state.entry(msg.key).or_insert(0) += 1;
@@ -410,6 +441,9 @@ pub(crate) fn worker_loop(
             // release one backpressure credit per processed tuple
             rx.ack(1);
         }
+        if obs.is_active() && count > before {
+            obs.span_full("worker_absorb", t0, clock.now_ns(), NO_SEQ, count - before);
+        }
         // partial flush: scatter the delta across the shard
         // fabric once per interval (checked at chunk granularity
         // — the flush itself is off the per-tuple path). The
@@ -423,7 +457,9 @@ pub(crate) fn worker_loop(
             if now >= next_flush {
                 if windowed || !delta.is_empty() {
                     let batch = delta.flush();
-                    send_flush(router, &mut flush_txs, &mut seqs, w, now, watermark, batch, windowed);
+                    send_flush(
+                        router, &mut flush_txs, &mut seqs, w, now, watermark, batch, windowed, obs,
+                    );
                     flush_rounds += 1;
                     // cooperative crash point: die exactly at a flush
                     // boundary, where every acked tuple is flushed.
@@ -436,6 +472,9 @@ pub(crate) fn worker_loop(
                     }
                 }
                 next_flush = aggregate::next_boundary(now, agg_flush_ns);
+                if sampler.due(now) {
+                    sampler.record(Sample { ts_ns: now, tuples: count, ..Sample::default() });
+                }
             }
         }
     }
@@ -444,7 +483,8 @@ pub(crate) fn worker_loop(
     // can never hold a pane back again
     if windowed || !delta.is_empty() {
         let now = clock.now_ns();
-        send_flush(router, &mut flush_txs, &mut seqs, w, now, u64::MAX, delta.flush(), windowed);
+        let batch = delta.flush();
+        send_flush(router, &mut flush_txs, &mut seqs, w, now, u64::MAX, batch, windowed, obs);
     }
     // explicit close: a recovering lane whose shard restarted under the
     // drain re-dials and replays before Eof, so the drain above cannot
@@ -557,11 +597,13 @@ pub(crate) fn shard_loop(
     clock: Clock,
     mut rx: Box<dyn FlushRx>,
     ctl: ShardControl,
+    obs: &mut TraceBuf,
+    sampler: &mut Sampler,
 ) -> ShardOutput {
     let mut stage = WindowedMerge::new(Count, agg_window_ns, aggregate::DEFAULT_GATHER_CAPACITY)
         .with_lateness(agg_lateness_ns);
     let mut sketch = TopKSketch::new(aggregate::DEFAULT_GATHER_CAPACITY);
-    let mut lat = Histogram::new();
+    let mut lat = Histogram::wall();
     // per-worker event-time high-water marks; panes retire when
     // the min across workers passes their end (plus lateness slack)
     let mut worker_wm = vec![0u64; n_workers];
@@ -573,6 +615,9 @@ pub(crate) fn shard_loop(
     let mut accepted_since_snapshot = 0u64;
     if let Some(snap) = ctl.resume {
         ctl.ledger.record_restore();
+        if obs.is_active() {
+            obs.instant_full("restore", clock.now_ns(), NO_SEQ, ctl.shard);
+        }
         sequencer = FlushSequencer::restore(snap.expected_seq);
         for (dst, src) in worker_wm.iter_mut().zip(&snap.worker_wm) {
             *dst = *src;
@@ -614,6 +659,13 @@ pub(crate) fn shard_loop(
         match sequencer.offer(worker, seq, flush) {
             SeqDecision::Accept(batch) => {
                 for msg in batch {
+                    if obs.is_active() {
+                        // the flush chain's receive half: emit → absorb,
+                        // keyed by the same (worker, shard, seq) as the
+                        // sender's flush_send instant
+                        let cid = chain_id(msg.worker as u64, ctl.shard, msg.seq);
+                        obs.span_seq("merge_absorb", msg.emit_ns, clock.now_ns(), cid);
+                    }
                     absorb_flush(
                         &mut stage, &mut sketch, &mut lat, &mut worker_wm, &mut absorbed,
                         clock, msg,
@@ -626,10 +678,18 @@ pub(crate) fn shard_loop(
                 // dropping it here is the double count exactly-once
                 // promises never happens
                 ctl.ledger.record_deduped_batch();
+                if obs.is_active() {
+                    let cid = chain_id(worker as u64, ctl.shard, seq);
+                    obs.instant_seq("flush_dedup", clock.now_ns(), cid);
+                }
                 continue;
             }
             SeqDecision::Buffered => {
                 ctl.ledger.record_buffered_batch();
+                if obs.is_active() {
+                    let cid = chain_id(worker as u64, ctl.shard, seq);
+                    obs.instant_seq("flush_buffered", clock.now_ns(), cid);
+                }
                 continue;
             }
         }
@@ -641,7 +701,34 @@ pub(crate) fn shard_loop(
         // and re-merge exactly — the heuristic moves retirement
         // timing, never the final counts.
         let wm = worker_wm.iter().copied().filter(|&w| w > 0).min().unwrap_or(0);
+        let before = if obs.is_active() { Some(stage.window_stats()) } else { None };
         stage.advance(wm);
+        if let Some(before) = before {
+            let after = stage.window_stats();
+            let now = clock.now_ns();
+            let retired = after.panes_retired - before.panes_retired;
+            if retired > 0 {
+                obs.instant_full("pane_retire", now, NO_SEQ, retired);
+            }
+            let reopened = after.late_reopens - before.late_reopens;
+            if reopened > 0 {
+                obs.instant_full("pane_late_reopen", now, NO_SEQ, reopened);
+            }
+            obs.count("open_panes", now, stage.open_panes() as u64);
+        }
+        if sampler.is_active() {
+            let now = clock.now_ns();
+            if sampler.due(now) {
+                let stats = stage.window_stats();
+                sampler.record(Sample {
+                    ts_ns: now,
+                    absorbed: absorbed.iter().sum(),
+                    open_panes: stage.open_panes() as u64,
+                    open_entries: stats.max_open_entries,
+                    ..Sample::default()
+                });
+            }
+        }
         if ctl.snapshot_every > 0 && accepted_since_snapshot >= ctl.snapshot_every {
             accepted_since_snapshot = 0;
             let snap = ShardSnapshot {
@@ -659,16 +746,20 @@ pub(crate) fn shard_loop(
                     r
                 },
             };
-            match &ctl.snapshot_path {
+            let persisted = match &ctl.snapshot_path {
                 Some(path) => {
                     // persist errors are survivable: the shard keeps
                     // merging, recovery just falls back to the previous
                     // snapshot plus a longer replay
-                    if let Ok(bytes) = snap.persist(path) {
-                        ctl.ledger.record_snapshot(bytes);
-                    }
+                    snap.persist(path).ok()
                 }
-                None => ctl.ledger.record_snapshot(snap.to_bytes().len() as u64),
+                None => Some(snap.to_bytes().len() as u64),
+            };
+            if let Some(bytes) = persisted {
+                ctl.ledger.record_snapshot(bytes);
+                if obs.is_active() {
+                    obs.instant_full("snapshot", clock.now_ns(), NO_SEQ, bytes);
+                }
             }
         }
     }
@@ -714,7 +805,7 @@ pub(crate) fn assemble_shards(agg_window_ns: u64, shard_outs: Vec<ShardOutput>) 
     let mut per_shard_windows: Vec<Vec<aggregate::WindowResult>> = Vec::with_capacity(n_shards);
     let mut window_stats = WindowStats::default();
     let mut sketches: Vec<TopKSketch> = Vec::with_capacity(n_shards);
-    let mut agg_latency = Histogram::new();
+    let mut agg_latency = Histogram::wall();
     let mut absorbed: Vec<u64> = Vec::new();
     let mut recovery = RecoveryStats::default();
     for so in shard_outs {
@@ -834,7 +925,21 @@ pub fn try_run(
     for (s, rx) in flush_rxs.into_iter().enumerate() {
         let ctl = ShardControl::fresh(s as u64);
         shard_handles.push(thread::spawn(move || {
-            shard_loop(n_workers, agg_window_ns, agg_lateness_ns, clock, rx, ctl)
+            // in-process actors share pid 0; tids follow the deploy id
+            // scheme (200+shard) so merged timelines read the same way
+            let mut obs = TraceBuf::for_cli(0, 200 + s as u32, ClockDomain::Wall);
+            let mut sampler = Sampler::for_cli(200 + s as u32, DEFAULT_INTERVAL_NS);
+            let out = shard_loop(
+                n_workers,
+                agg_window_ns,
+                agg_lateness_ns,
+                clock,
+                rx,
+                ctl,
+                &mut obs,
+                &mut sampler,
+            );
+            (out, obs, sampler)
         }));
     }
 
@@ -844,7 +949,22 @@ pub fn try_run(
         let cost = per_tuple[w];
         let router = Arc::clone(&router);
         worker_handles.push(thread::spawn(move || {
-            worker_loop(w, cost, agg_flush_ns, agg_window_ns, clock, &router, rx, txs, None)
+            let mut obs = TraceBuf::for_cli(0, 100 + w as u32, ClockDomain::Wall);
+            let mut sampler = Sampler::for_cli(100 + w as u32, DEFAULT_INTERVAL_NS);
+            let out = worker_loop(
+                w,
+                cost,
+                agg_flush_ns,
+                agg_window_ns,
+                clock,
+                &router,
+                rx,
+                txs,
+                None,
+                &mut obs,
+                &mut sampler,
+            );
+            (out, obs, sampler)
         }));
     }
 
@@ -857,6 +977,7 @@ pub fn try_run(
         let per_tuple = per_tuple.clone();
         let gap = opts.interarrival_ns * n_sources as u64;
         source_handles.push(thread::spawn(move || {
+            let mut obs = TraceBuf::for_cli(0, 10 + s as u32, ClockDomain::Wall);
             source_loop(
                 s,
                 n_sources,
@@ -868,29 +989,46 @@ pub fn try_run(
                 &per_tuple,
                 &workers_list,
                 txs,
+                &mut obs,
             );
+            obs
         }));
     }
 
+    let mut trace_blobs: Vec<TraceBlob> = Vec::new();
+    let mut samples: Vec<Sample> = Vec::new();
     for h in source_handles {
-        h.join().expect("source thread panicked");
+        let obs = h.join().expect("source thread panicked");
+        if obs.is_active() {
+            trace_blobs.push(obs.to_blob());
+        }
     }
 
-    let mut latency = Histogram::new();
+    let mut latency = Histogram::wall();
     let mut counts = Vec::with_capacity(n_workers);
     let mut states = Vec::with_capacity(n_workers);
     for h in worker_handles {
-        let (hist, count, state_len) = h.join().expect("worker thread panicked");
+        let ((hist, count, state_len), obs, sampler) =
+            h.join().expect("worker thread panicked");
         latency.merge(&hist);
         counts.push(count);
         states.push(state_len);
+        if obs.is_active() {
+            trace_blobs.push(obs.to_blob());
+        }
+        samples.extend(sampler.samples());
     }
     // gather the fabric: shard results arrive in shard-id order, keys
     // are disjoint across shards, so concat + sort reproduces the
     // single-aggregator ordering byte for byte
     let mut shard_outs = Vec::with_capacity(n_shards);
     for h in shard_handles {
-        shard_outs.push(h.join().expect("aggregator shard thread panicked"));
+        let (out, obs, sampler) = h.join().expect("aggregator shard thread panicked");
+        shard_outs.push(out);
+        if obs.is_active() {
+            trace_blobs.push(obs.to_blob());
+        }
+        samples.extend(sampler.samples());
     }
     let assembled = assemble_shards(agg_window_ns, shard_outs);
     let agg = assembled.shard_agg.total();
@@ -920,6 +1058,8 @@ pub fn try_run(
         window_stats: assembled.window_stats,
         wire: ledger.snapshot(),
         recovery: assembled.recovery,
+        trace_blobs,
+        samples,
     })
 }
 
@@ -1002,7 +1142,11 @@ mod tests {
             let rx = rxs.remove(0);
             let mut tx = txs.remove(0).remove(0);
             let clock = Clock::mono();
-            let h = thread::spawn(move || shard_loop(1, 200, 0, clock, rx, ctl));
+            let h = thread::spawn(move || {
+                let mut obs = TraceBuf::disabled();
+                let mut sam = Sampler::disabled();
+                shard_loop(1, 200, 0, clock, rx, ctl, &mut obs, &mut sam)
+            });
             for m in feed {
                 tx.send(m).expect("loopback send");
             }
@@ -1071,7 +1215,11 @@ mod tests {
         let rx = rxs.remove(0);
         let mut tx = txs.remove(0).remove(0);
         let clock = Clock::mono();
-        let h = thread::spawn(move || shard_loop(1, 0, 0, clock, rx, ShardControl::fresh(0)));
+        let h = thread::spawn(move || {
+            let mut obs = TraceBuf::disabled();
+            let mut sam = Sampler::disabled();
+            shard_loop(1, 0, 0, clock, rx, ShardControl::fresh(0), &mut obs, &mut sam)
+        });
         for m in feed {
             tx.send(m).expect("loopback send");
         }

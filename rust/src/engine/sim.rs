@@ -58,6 +58,9 @@ use crate::coordinator::{ClusterView, Grouper};
 use crate::metrics::{
     AggStats, Histogram, Imbalance, MemoryTracker, RecoveryStats, ShardAggStats, WindowStats,
 };
+use crate::obs::{
+    chain_id, ClockDomain, Sample, Sampler, TraceBlob, TraceBuf, DEFAULT_INTERVAL_NS, NO_SEQ,
+};
 use crate::state::ShardSnapshot;
 use crate::transport::wire::FlushMsg;
 use crate::workload::Generator;
@@ -124,6 +127,13 @@ pub struct SimResult {
     /// serialized and restores performed. All zeros on a fault-free run
     /// ([`crate::metrics::RecoveryStats::any`] gates report rows).
     pub recovery: RecoveryStats,
+    /// Virtual-time trace buffers ([`Simulator::with_trace`]; empty when
+    /// tracing is off): the main-loop thread plus the merge fabric,
+    /// renderable via [`crate::obs::chrome_trace_json`]. Byte-identical
+    /// run-to-run — the trace itself is oracle-testable.
+    pub trace_blobs: Vec<TraceBlob>,
+    /// Per-epoch telemetry rows (same flag; empty when tracing is off).
+    pub samples: Vec<Sample>,
 }
 
 /// One scripted crash in the simulated topology. Faults fire at
@@ -259,6 +269,11 @@ struct StageTwo {
     /// Shard chaos armed at run start — gates replay-log retention.
     chaos: bool,
     recovery: RecoveryStats,
+    /// Virtual-time trace of the merge fabric (pid 0, tid 1): flush
+    /// sends, absorbs, dedups, pane lifecycle, snapshots, kills.
+    trace: TraceBuf,
+    /// Per-epoch telemetry, sampled at watermark advances.
+    sampler: Sampler,
 }
 
 impl StageTwo {
@@ -269,6 +284,7 @@ impl StageTwo {
         lateness_ns: u64,
         snapshot_every: u64,
         shard_faults: Vec<(usize, u64)>,
+        observe: bool,
     ) -> Self {
         let chaos = !shard_faults.is_empty();
         StageTwo {
@@ -284,6 +300,16 @@ impl StageTwo {
             shard_faults,
             chaos,
             recovery: RecoveryStats::default(),
+            trace: if observe {
+                TraceBuf::active(0, 1, ClockDomain::Virtual)
+            } else {
+                TraceBuf::disabled()
+            },
+            sampler: if observe {
+                Sampler::active(0, DEFAULT_INTERVAL_NS)
+            } else {
+                Sampler::disabled()
+            },
         }
     }
 
@@ -296,6 +322,8 @@ impl StageTwo {
             return;
         }
         self.staleness.record(now.saturating_sub(self.last_flush[w]));
+        // one span per flush: the interval this delta accumulated over
+        crate::obs::span!(self.trace, "flush", self.last_flush[w], now);
         self.last_flush[w] = now;
         let mut per_shard: Vec<Vec<(u64, Vec<(Key, u64)>)>> =
             (0..self.shards.len()).map(|_| Vec::new()).collect();
@@ -312,6 +340,9 @@ impl StageTwo {
             }
             let msg =
                 FlushMsg { worker: w, seq: self.seqs[w][s], emit_ns: now, watermark: now, panes };
+            if self.trace.is_active() {
+                self.trace.instant_seq("flush_send", now, chain_id(w as u64, s as u64, msg.seq));
+            }
             self.seqs[w][s] += 1;
             self.deliver(s, msg);
         }
@@ -321,12 +352,13 @@ impl StageTwo {
     /// armed), sequence it, snapshot on cadence, then fire any scripted
     /// kill that has come due.
     fn deliver(&mut self, s: usize, msg: FlushMsg) {
+        let now = msg.emit_ns;
         if self.chaos {
             self.shards[s].log.push(msg.clone());
         }
         self.offer(s, msg);
         if self.snapshot_every > 0 && self.shards[s].since_snapshot >= self.snapshot_every {
-            self.snapshot(s);
+            self.snapshot(s, now);
         }
         if let Some(pos) = self
             .shard_faults
@@ -334,7 +366,7 @@ impl StageTwo {
             .position(|&(fs, at)| fs == s && self.shards[s].accepted >= at)
         {
             self.shard_faults.swap_remove(pos);
-            self.kill_shard(s);
+            self.kill_shard(s, now);
         }
     }
 
@@ -342,22 +374,38 @@ impl StageTwo {
     /// batches (plus any parked successors they unblock), meter
     /// duplicates and reorders.
     fn offer(&mut self, s: usize, msg: FlushMsg) {
-        let (worker, seq) = (msg.worker, msg.seq);
+        let (worker, seq, emit) = (msg.worker, msg.seq, msg.emit_ns);
         match self.shards[s].sequencer.offer(worker, seq, msg) {
             SeqDecision::Accept(batch) => {
                 for m in batch {
+                    if self.trace.is_active() {
+                        let cid = chain_id(m.worker as u64, s as u64, m.seq);
+                        self.trace.instant_seq("merge_absorb", m.emit_ns, cid);
+                    }
                     self.shards[s].absorb(m);
                 }
             }
-            SeqDecision::Replayed => self.recovery.deduped_batches += 1,
-            SeqDecision::Buffered => self.recovery.buffered_batches += 1,
+            SeqDecision::Replayed => {
+                self.recovery.deduped_batches += 1;
+                if self.trace.is_active() {
+                    let cid = chain_id(worker as u64, s as u64, seq);
+                    self.trace.instant_seq("flush_dedup", emit, cid);
+                }
+            }
+            SeqDecision::Buffered => {
+                self.recovery.buffered_batches += 1;
+                if self.trace.is_active() {
+                    let cid = chain_id(worker as u64, s as u64, seq);
+                    self.trace.instant_seq("flush_buffered", emit, cid);
+                }
+            }
         }
     }
 
     /// Serialize shard `s` through the real [`ShardSnapshot`] codec —
     /// the exact bytes a deployed shard would persist — and retain them
     /// for the next kill.
-    fn snapshot(&mut self, s: usize) {
+    fn snapshot(&mut self, s: usize, now: u64) {
         let shard = &mut self.shards[s];
         shard.since_snapshot = 0;
         let snap = ShardSnapshot {
@@ -374,6 +422,9 @@ impl StageTwo {
         let bytes = snap.to_bytes();
         self.recovery.snapshots += 1;
         self.recovery.snapshot_bytes += bytes.len() as u64;
+        if self.trace.is_active() {
+            self.trace.instant_full("snapshot", now, NO_SEQ, bytes.len() as u64);
+        }
         shard.last_snapshot = Some(bytes);
     }
 
@@ -381,8 +432,11 @@ impl StageTwo {
     /// last snapshot bytes (none → cold start), then replay every logged
     /// message at or above the restored Resume cursors — exactly the
     /// socket lanes' reconnect protocol, in virtual time.
-    fn kill_shard(&mut self, s: usize) {
+    fn kill_shard(&mut self, s: usize, now: u64) {
         self.recovery.shard_restarts += 1;
+        if self.trace.is_active() {
+            self.trace.instant_full("kill_shard", now, NO_SEQ, s as u64);
+        }
         let log = std::mem::take(&mut self.shards[s].log);
         let snap_bytes = self.shards[s].last_snapshot.take();
         self.shards[s] = SimShard::new(self.window_ns, self.lateness_ns, self.n_slots);
@@ -391,6 +445,9 @@ impl StageTwo {
             let snap = ShardSnapshot::from_bytes(bytes)
                 .expect("in-memory snapshot bytes round-trip through the codec");
             self.recovery.restores += 1;
+            if self.trace.is_active() {
+                self.trace.instant_full("restore", now, NO_SEQ, s as u64);
+            }
             resume = snap.expected_seq.clone();
             let shard = &mut self.shards[s];
             shard.sequencer = FlushSequencer::restore(snap.expected_seq);
@@ -416,24 +473,74 @@ impl StageTwo {
             }
         }
         self.shards[s].last_snapshot = snap_bytes;
+        let mut replayed = 0u64;
         for msg in log {
             if msg.seq < resume[msg.worker] {
                 // below the shard's Resume answer: the lane never re-sends
                 continue;
             }
             self.recovery.replayed_batches += 1;
+            replayed += 1;
             self.shards[s].log.push(msg.clone());
             self.offer(s, msg);
         }
+        if replayed > 0 && self.trace.is_active() {
+            self.trace.instant_full("replay_batches", now, NO_SEQ, replayed);
+        }
+    }
+
+    /// Fold the per-shard pane-lifecycle ledgers (trace/sampling only —
+    /// the report-facing fold happens in [`StageTwo::into_results`]).
+    fn fold_stats(&self) -> WindowStats {
+        let mut w = WindowStats::default();
+        for shard in &self.shards {
+            w.absorb(&shard.stage.window_stats());
+        }
+        w
     }
 
     /// Advance the fabric watermark to virtual time `now`, retiring
     /// closed panes. Exact in the simulator: every tuple arriving
     /// before `now` has been serviced and flushed by the time this is
     /// called, so no late deltas (and no pane reopens) are possible.
-    fn advance(&mut self, now: u64) {
+    /// `tuples` = tuples serviced so far, for the telemetry sampler.
+    fn advance(&mut self, now: u64, tuples: u64) {
+        let before = if self.trace.is_active() { Some(self.fold_stats()) } else { None };
         for shard in self.shards.iter_mut() {
             shard.stage.advance(now);
+        }
+        if let Some(before) = before {
+            let after = self.fold_stats();
+            let retired = after.panes_retired - before.panes_retired;
+            if retired > 0 {
+                self.trace.instant_full("pane_retire", now, NO_SEQ, retired);
+            }
+            let reopened = after.late_reopens - before.late_reopens;
+            if reopened > 0 {
+                self.trace.instant_full("pane_late_reopen", now, NO_SEQ, reopened);
+            }
+            let open: usize = self.shards.iter().map(|s| s.stage.open_panes()).sum();
+            self.trace.count("open_panes", now, open as u64);
+        }
+        if self.sampler.due(now) {
+            let sum: u64 = self.shards.iter().map(|s| s.accepted).sum();
+            let max = self.shards.iter().map(|s| s.accepted).max().unwrap_or(0);
+            let stats = self.fold_stats();
+            self.sampler.record(Sample {
+                ts_ns: now,
+                tuples,
+                open_panes: self.shards.iter().map(|s| s.stage.open_panes() as u64).sum(),
+                open_entries: stats.max_open_entries,
+                absorbed: sum,
+                // integer max/mean ratio x1000 keeps the row deterministic
+                imbalance_x1000: if sum > 0 {
+                    max * 1000 * self.shards.len() as u64 / sum
+                } else {
+                    0
+                },
+                replay_backlog: self.shards.iter().map(|s| s.log.len() as u64).sum(),
+                ..Sample::default()
+            });
         }
     }
 
@@ -451,8 +558,10 @@ impl StageTwo {
         TopKGather,
         Histogram,
         RecoveryStats,
+        TraceBuf,
+        Sampler,
     ) {
-        let StageTwo { shards, staleness, window_ns, recovery, .. } = self;
+        let StageTwo { shards, staleness, window_ns, recovery, trace, sampler, .. } = self;
         let n_shards = shards.len();
         let mut merged_counts: Vec<(Key, u64)> = Vec::new();
         let mut per_shard = Vec::with_capacity(n_shards);
@@ -491,6 +600,8 @@ impl StageTwo {
             gather,
             staleness,
             recovery,
+            trace,
+            sampler,
         )
     }
 }
@@ -518,6 +629,9 @@ pub struct Simulator {
     /// Shard-snapshot cadence in accepted batches (0 = never snapshot;
     /// a kill then recovers by full log replay).
     snapshot_every: u64,
+    /// Record virtual-time traces + telemetry samples into
+    /// [`SimResult::trace_blobs`] / [`SimResult::samples`].
+    trace: bool,
 }
 
 impl Simulator {
@@ -539,6 +653,7 @@ impl Simulator {
             agg_lateness_ns: 0,
             faults: Vec::new(),
             snapshot_every: 0,
+            trace: false,
         }
     }
 
@@ -600,6 +715,14 @@ impl Simulator {
         self
     }
 
+    /// Record virtual-time traces and telemetry samples (`--trace-out` /
+    /// `--metrics-out`). Off by default; tracing never changes any other
+    /// output, and the trace itself is byte-identical run-to-run.
+    pub fn with_trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
+
     /// Run `gen` to completion.
     ///
     /// Tuples are drained in batches: each batch shares one
@@ -651,8 +774,16 @@ impl Simulator {
             self.agg_lateness_ns,
             self.snapshot_every,
             shard_faults,
+            self.trace,
         );
         let mut next_flush = self.agg_flush_ns;
+        // main-loop trace (pid 0, tid 0): routing, service, source-side
+        // recovery; the merge fabric records on its own tid-1 buffer
+        let mut trace = if self.trace {
+            TraceBuf::active(0, 0, ClockDomain::Virtual)
+        } else {
+            TraceBuf::disabled()
+        };
 
         let mut keys: Vec<crate::Key> = Vec::with_capacity(self.batch);
         let mut assigned: Vec<WorkerId> = vec![0; self.batch];
@@ -724,6 +855,9 @@ impl Simulator {
                     assigned[first + j * n_sources - start] = w;
                 }
             }
+            if trace.is_active() {
+                trace.instant_full("route_batch", view.now, NO_SEQ, (end - start) as u64);
+            }
 
             // service in arrival order: the queueing model is untouched
             for i in start..end {
@@ -754,6 +888,11 @@ impl Simulator {
                         worker_faults.swap_remove(pos);
                         worker_recovery.worker_restarts += 1;
                         worker_recovery.replayed_tuples += since_flush[w].len() as u64;
+                        if trace.is_active() {
+                            trace.instant_full("kill_worker", arrival, NO_SEQ, w as u64);
+                            let n_replay = since_flush[w].len() as u64;
+                            trace.instant_full("replay_tuples", arrival, NO_SEQ, n_replay);
+                        }
                         let buf = std::mem::take(&mut since_flush[w]);
                         partials[w] = WindowedPartial::new(Count, self.agg_window_ns);
                         for &(k, t) in &buf {
@@ -762,6 +901,11 @@ impl Simulator {
                         since_flush[w] = buf;
                     }
                 }
+            }
+            if trace.is_active() {
+                // service of this batch, spanning its arrival interval
+                let last = (end - 1) as u64 * self.interarrival_ns;
+                trace.span_full("worker_absorb", view.now, last, NO_SEQ, (end - start) as u64);
             }
 
             // periodic partial flush when virtual time crosses a flush
@@ -776,7 +920,7 @@ impl Simulator {
                     }
                     // every arrival before `now` is now flushed, so the
                     // watermark is exact: closed panes retire here
-                    stage2.advance(now);
+                    stage2.advance(now, end as u64);
                     next_flush = aggregate::next_boundary(now, self.agg_flush_ns);
                 }
             }
@@ -786,12 +930,35 @@ impl Simulator {
 
         // end-of-stream drain: every remaining partial reaches the merge
         let end_of_stream = n as u64 * self.interarrival_ns;
+        if trace.is_active() {
+            trace.instant_full("end_of_stream_drain", end_of_stream, NO_SEQ, n as u64);
+        }
         for (w, p) in partials.iter_mut().enumerate() {
             stage2.flush(w, end_of_stream, p);
         }
-        let (merged_counts, shard_agg, windows, window_stats, gather, staleness, mut recovery) =
-            stage2.into_results();
+        let (
+            merged_counts,
+            shard_agg,
+            windows,
+            window_stats,
+            gather,
+            staleness,
+            mut recovery,
+            s2_trace,
+            sampler,
+        ) = stage2.into_results();
         recovery.absorb(&worker_recovery);
+        if trace.is_active() {
+            trace.instant_full("gather", end_of_stream, NO_SEQ, self.agg_shards as u64);
+        }
+        let mut trace_blobs = Vec::new();
+        if trace.is_active() {
+            trace_blobs.push(trace.to_blob());
+        }
+        if s2_trace.is_active() {
+            trace_blobs.push(s2_trace.to_blob());
+        }
+        let samples = sampler.into_samples();
 
         let makespan = done.iter().copied().max().unwrap_or(0);
         SimResult {
@@ -813,6 +980,8 @@ impl Simulator {
             windows,
             window_stats,
             recovery,
+            trace_blobs,
+            samples,
         }
     }
 }

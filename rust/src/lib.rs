@@ -59,6 +59,12 @@
 //!   over in-process loopback, UDS and TCP backends carrying a
 //!   length-prefixed binary wire format with credit-based flow
 //!   control, plus the `deploy --processes N` multi-process launcher.
+//! * [`obs`] — lock-light tracing + telemetry: per-thread ring-buffered
+//!   span/event recorders (virtual time in the sim, shared
+//!   `transport::Clock` epoch time in rt/deploy), cross-process
+//!   Chrome-trace timeline export (`--trace-out`, Perfetto-openable)
+//!   and a per-epoch telemetry sampler (`--metrics-out` JSONL); see
+//!   `docs/OBSERVABILITY.md`.
 //! * [`analysis`] — the determinism & concurrency analysis suite:
 //!   the `fish lint` source-level rule engine (unsorted map drains on
 //!   flush paths, unwrap in transport I/O, relaxed credit atomics,
@@ -79,6 +85,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod hashring;
 pub mod metrics;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod sketch;

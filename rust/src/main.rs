@@ -28,6 +28,39 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
     Ok(cfg)
 }
 
+/// `--trace-out FILE` / `--metrics-out FILE`: arm the span recorder /
+/// sampler registry before the pipeline is built (engines consult the
+/// flag when they construct their buffers). Returns the two paths.
+fn obs_outputs(args: &Args) -> (Option<String>, Option<String>) {
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let metrics_out = args.get("metrics-out").map(str::to_string);
+    if trace_out.is_some() || metrics_out.is_some() {
+        fish::obs::set_enabled(true);
+    }
+    (trace_out, metrics_out)
+}
+
+/// Write the merged Chrome-trace timeline and/or the telemetry JSONL
+/// a run produced (no-ops for paths that weren't requested).
+fn write_obs(
+    trace_out: &Option<String>,
+    metrics_out: &Option<String>,
+    blobs: &[fish::obs::TraceBlob],
+    samples: &[fish::obs::Sample],
+) -> anyhow::Result<()> {
+    if let Some(path) = trace_out {
+        std::fs::write(path, fish::obs::chrome_trace_json(blobs))
+            .map_err(|e| anyhow::anyhow!("--trace-out {path}: {e}"))?;
+        println!("trace written to {path} ({} thread timelines)", blobs.len());
+    }
+    if let Some(path) = metrics_out {
+        std::fs::write(path, fish::obs::sample::jsonl(samples))
+            .map_err(|e| anyhow::anyhow!("--metrics-out {path}: {e}"))?;
+        println!("metrics written to {path} ({} samples)", samples.len());
+    }
+    Ok(())
+}
+
 /// Build per-source groupers, honouring `--identifier xla-cms` for FISH.
 fn build_sources(cfg: &Config) -> anyhow::Result<Vec<Box<dyn Grouper>>> {
     if cfg.scheme == SchemeKind::Fish && cfg.identifier == "xla-cms" {
@@ -44,6 +77,7 @@ fn build_sources(cfg: &Config) -> anyhow::Result<Vec<Box<dyn Grouper>>> {
 
 fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
+    let (trace_out, metrics_out) = obs_outputs(args);
     let sources = build_sources(&cfg)?;
     let mut job = Pipeline::builder()
         .config(cfg.clone())
@@ -77,8 +111,13 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     t.row(&["agg merge time (wall)".into(), ns(r.agg.merge_ns)]);
     t.row(&["agg shards".into(), r.shard_agg.n_shards().to_string()]);
     t.row(&["shard imbalance max/mean-1".into(), f2(r.shard_agg.imbalance().relative)]);
-    // sim flush latency is *virtual* delta staleness, not wall transit
-    t.row(&["agg staleness p99 (virtual)".into(), ns(r.agg_latency.quantile(0.99))]);
+    // sim flush latency is *virtual* delta staleness, not wall transit;
+    // the unit tag comes from the histogram itself (satellite: no more
+    // hardcoded clock-domain labels)
+    t.row(&[
+        format!("agg staleness p99 ({})", r.agg_latency.unit_label()),
+        ns(r.agg_latency.quantile(0.99)),
+    ]);
     if cfg.agg_window_ms > 0 {
         t.row(&["agg window".into(), format!("{} ms", cfg.agg_window_ms)]);
         t.row(&["windows retired".into(), r.windows.len().to_string()]);
@@ -88,8 +127,14 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
         t.row(&["peak open panes/shard".into(), r.window_stats.max_open_panes.to_string()]);
         t.row(&["peak open-pane entries".into(), r.window_stats.max_open_entries.to_string()]);
     }
+    // per-epoch telemetry (only sampled when --metrics-out/--trace-out
+    // armed the registry): sparkline-style min/avg/max per series
+    for (name, row) in fish::obs::sample::summary_rows(&r.samples) {
+        t.row(&[name, row]);
+    }
     t.row(&["wall time".into(), format!("{wall:.2?}")]);
     t.print();
+    write_obs(&trace_out, &metrics_out, &r.trace_blobs, &r.samples)?;
     let top = r.top_k(5);
     if !top.is_empty() {
         let mut tt = Table::new("hottest keys (exact merged counts, all time)", &["key", "count"]);
@@ -117,6 +162,7 @@ fn cmd_deploy(args: &Args) -> anyhow::Result<()> {
     if cfg.processes > 0 {
         cfg.workers = cfg.processes;
     }
+    let (trace_out, metrics_out) = obs_outputs(args);
     let sources = build_sources(&cfg)?;
     let job = Pipeline::builder()
         .config(cfg.clone())
@@ -181,8 +227,12 @@ fn cmd_deploy(args: &Args) -> anyhow::Result<()> {
     t.row(&["agg payload".into(), format!("{} B", r.agg.bytes)]);
     t.row(&["agg shards".into(), r.shard_agg.n_shards().to_string()]);
     t.row(&["shard imbalance max/mean-1".into(), f2(r.shard_agg.imbalance().relative)]);
-    // rt flush latency is wall-clock flush→merge transit per shard batch
-    t.row(&["agg flush p99 (wall)".into(), ns(r.agg_latency.quantile(0.99))]);
+    // rt flush latency is wall-clock flush→merge transit per shard
+    // batch; the unit tag comes from the histogram itself
+    t.row(&[
+        format!("agg flush p99 ({})", r.agg_latency.unit_label()),
+        ns(r.agg_latency.quantile(0.99)),
+    ]);
     if r.wire.any() {
         // socket / multi-process lanes: what the wire actually carried
         t.row(&["wire frames out/in".into(), format!("{}/{}", r.wire.frames_out, r.wire.frames_in)]);
@@ -224,8 +274,14 @@ fn cmd_deploy(args: &Args) -> anyhow::Result<()> {
         )]);
         t.row(&["snapshot restores".into(), r.recovery.restores.to_string()]);
     }
+    // per-epoch telemetry (only sampled when --metrics-out/--trace-out
+    // armed the registry): sparkline-style min/avg/max per series
+    for (name, row) in fish::obs::sample::summary_rows(&r.samples) {
+        t.row(&[name, row]);
+    }
     t.row(&["wall time".into(), ns(r.wall_ns)]);
     t.print();
+    write_obs(&trace_out, &metrics_out, &r.trace_blobs, &r.samples)?;
 
     // --recovery-json PATH: machine-readable recovery metrics (the CI
     // chaos lane uploads this and gates on it via scripts/check_perf.py)
@@ -393,6 +449,9 @@ fn usage() -> ! {
          [--agg_flush_ms N] [--agg_shards N] [--agg_window_ms N] [--agg_lateness_ms N] \
          [--transport loopback|uds|tcp] [--rebalance_threshold F] \
          [--identifier native|xla-cms] [--seed N] ...\n       \
+         sim and deploy take [--trace-out FILE] (merged Chrome-trace timeline — open \
+         in Perfetto) and [--metrics-out FILE] (per-epoch telemetry JSONL; also adds \
+         min/avg/max rows to the report) — see docs/OBSERVABILITY.md\n       \
          deploy also takes [--processes N] (N worker processes + one per merge \
          shard), [--verify] (check against the in-process reference), \
          [--chaos kill-worker:<n|mid>,kill-shard:<ms|mid>] (scripted mid-run kills; \

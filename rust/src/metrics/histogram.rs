@@ -5,6 +5,29 @@
 //! per power of two, so percentile queries are accurate enough for the
 //! p50/p95/p99 figures while the recorder is a branch-free O(1) insert.
 
+/// Which clock the recorded values came from. Carried *by the
+/// histogram* (and through its byte codec) so report tables derive
+/// their "(virtual)"/"(wall)" labels from the data instead of
+/// per-call-site strings that can silently mislabel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TimeUnit {
+    /// Simulator virtual nanoseconds (deterministic ticks).
+    #[default]
+    VirtualNs,
+    /// Wall-clock nanoseconds from `transport::Clock`.
+    WallNs,
+}
+
+impl TimeUnit {
+    /// Stable lowercase label for report rows.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TimeUnit::VirtualNs => "virtual",
+            TimeUnit::WallNs => "wall",
+        }
+    }
+}
+
 /// Log-bucketed histogram of non-negative u64 samples.
 #[derive(Debug, Clone)]
 pub struct Histogram {
@@ -13,6 +36,7 @@ pub struct Histogram {
     sum: u128,
     max: u64,
     min: u64,
+    unit: TimeUnit,
 }
 
 const SUB_BITS: u32 = 6; // 64 sub-buckets per octave
@@ -41,15 +65,36 @@ fn bucket_low(b: usize) -> u64 {
 }
 
 impl Histogram {
-    /// Empty histogram.
+    /// Empty histogram of virtual-time samples (the sim default).
     pub fn new() -> Self {
+        Self::with_unit(TimeUnit::VirtualNs)
+    }
+
+    /// Empty histogram of wall-clock samples (the rt/deploy default).
+    pub fn wall() -> Self {
+        Self::with_unit(TimeUnit::WallNs)
+    }
+
+    /// Empty histogram with an explicit unit tag.
+    pub fn with_unit(unit: TimeUnit) -> Self {
         Histogram {
             counts: vec![0; ((64 - SUB_BITS as usize) + 1) * SUB as usize],
             total: 0,
             sum: 0,
             max: 0,
             min: u64::MAX,
+            unit,
         }
+    }
+
+    /// The clock domain the samples came from.
+    pub fn unit(&self) -> TimeUnit {
+        self.unit
+    }
+
+    /// Report label for the unit ("virtual" / "wall").
+    pub fn unit_label(&self) -> &'static str {
+        self.unit.label()
     }
 
     /// Record one sample.
@@ -62,8 +107,19 @@ impl Histogram {
         self.min = self.min.min(v);
     }
 
-    /// Merge another histogram into this one.
+    /// Merge another histogram into this one. An empty accumulator
+    /// adopts the other side's unit; merging two non-empty histograms
+    /// from different clock domains is a caller bug.
     pub fn merge(&mut self, other: &Histogram) {
+        if self.total == 0 {
+            self.unit = other.unit;
+        }
+        debug_assert!(
+            other.total == 0 || self.unit == other.unit,
+            "merging {:?} samples into a {:?} histogram",
+            other.unit,
+            self.unit
+        );
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;
         }
@@ -135,6 +191,10 @@ impl Histogram {
         buf.extend_from_slice(&((self.sum >> 64) as u64).to_le_bytes());
         buf.extend_from_slice(&self.max.to_le_bytes());
         buf.extend_from_slice(&self.min.to_le_bytes());
+        buf.push(match self.unit {
+            TimeUnit::VirtualNs => 0,
+            TimeUnit::WallNs => 1,
+        });
     }
 
     /// Rebuild from [`Histogram::to_bytes`] output; `None` on any
@@ -154,6 +214,11 @@ impl Histogram {
         h.sum = (hi << 64) | lo;
         h.max = r.u64().ok()?;
         h.min = r.u64().ok()?;
+        h.unit = match r.u8().ok()? {
+            0 => TimeUnit::VirtualNs,
+            1 => TimeUnit::WallNs,
+            _ => return None,
+        };
         Some(h)
     }
 }
@@ -254,6 +319,29 @@ mod tests {
         // truncated input is rejected, never a panic
         assert!(Histogram::from_bytes(&buf[..buf.len() - 1]).is_none());
         assert!(Histogram::from_bytes(&[]).is_none());
+    }
+
+    #[test]
+    fn unit_tag_survives_codec_and_merge() {
+        assert_eq!(Histogram::new().unit_label(), "virtual");
+        let mut w = Histogram::wall();
+        assert_eq!(w.unit(), TimeUnit::WallNs);
+        w.record(42);
+        let mut buf = Vec::new();
+        w.to_bytes(&mut buf);
+        let back = Histogram::from_bytes(&buf).expect("round trip");
+        assert_eq!(back.unit(), TimeUnit::WallNs);
+        // a bad tag byte is rejected, not misread
+        *buf.last_mut().unwrap() = 9;
+        assert!(Histogram::from_bytes(&buf).is_none());
+        // empty accumulators adopt the first merged unit
+        let mut acc = Histogram::new();
+        acc.merge(&back);
+        assert_eq!(acc.unit(), TimeUnit::WallNs);
+        assert_eq!(acc.unit_label(), "wall");
+        // merging an empty histogram never flips a tagged one
+        acc.merge(&Histogram::new());
+        assert_eq!(acc.unit(), TimeUnit::WallNs);
     }
 
     #[test]

@@ -9,7 +9,7 @@ pub mod recovery;
 pub mod wire;
 
 pub use agg::{AggStats, ShardAggStats, WindowStats};
-pub use histogram::Histogram;
+pub use histogram::{Histogram, TimeUnit};
 pub use imbalance::Imbalance;
 pub use memory::MemoryTracker;
 pub use recovery::{RecoveryLedger, RecoveryStats};

@@ -1,0 +1,351 @@
+//! Trace shipping and Chrome-trace-event export.
+//!
+//! [`TraceBlob`] is the owned mirror of a [`TraceBuf`]: event names
+//! become `String`s so blobs can cross process boundaries (appended to
+//! the existing `Done` payloads by `transport::launch`) and be merged by
+//! the coordinator. [`chrome_trace_json`] renders merged blobs as one
+//! Chrome trace (the JSON-array-of-events format Perfetto and
+//! `chrome://tracing` open directly).
+//!
+//! Determinism: the renderer uses integer-only math and formatting —
+//! timestamps are nanoseconds rendered as fixed-point microseconds
+//! (`ns/1000.ns%1000`), never floats — and blobs/events are fully
+//! sorted, so a deterministic run produces byte-identical JSON
+//! (oracle-tested in `rust/tests/trace_oracle.rs`).
+
+use super::{ClockDomain, Event, EventKind, TraceBuf, NO_SEQ};
+use crate::transport::wire::Reader;
+
+/// Owned mirror of [`Event`] (name is a `String`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OwnedEvent {
+    pub kind: EventKind,
+    pub name: String,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    pub seq: u64,
+    pub val: u64,
+}
+
+/// One thread's trace, detached from its buffer: the unit of shipping
+/// and merging.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceBlob {
+    pub pid: u32,
+    pub tid: u32,
+    pub domain: ClockDomain,
+    pub dropped: u64,
+    pub events: Vec<OwnedEvent>,
+}
+
+impl TraceBlob {
+    /// Snapshot a buffer (empty blob for a disabled buffer).
+    pub fn from_buf(buf: &TraceBuf) -> TraceBlob {
+        TraceBlob {
+            pid: buf.pid(),
+            tid: buf.tid(),
+            domain: buf.domain(),
+            dropped: buf.dropped(),
+            events: buf
+                .events()
+                .iter()
+                .map(|e: &Event| OwnedEvent {
+                    kind: e.kind,
+                    name: e.name.to_string(),
+                    ts_ns: e.ts_ns,
+                    dur_ns: e.dur_ns,
+                    seq: e.seq,
+                    val: e.val,
+                })
+                .collect(),
+        }
+    }
+
+    /// Serialize (little-endian, length-prefixed strings); the inverse
+    /// is [`TraceBlob::from_bytes`].
+    pub fn to_bytes(&self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(&self.pid.to_le_bytes());
+        buf.extend_from_slice(&self.tid.to_le_bytes());
+        buf.push(match self.domain {
+            ClockDomain::Virtual => 0,
+            ClockDomain::Wall => 1,
+        });
+        buf.extend_from_slice(&self.dropped.to_le_bytes());
+        buf.extend_from_slice(&(self.events.len() as u32).to_le_bytes());
+        for e in &self.events {
+            buf.push(match e.kind {
+                EventKind::Span => 0,
+                EventKind::Instant => 1,
+                EventKind::Counter => 2,
+            });
+            buf.extend_from_slice(&(e.name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(e.name.as_bytes());
+            buf.extend_from_slice(&e.ts_ns.to_le_bytes());
+            buf.extend_from_slice(&e.dur_ns.to_le_bytes());
+            buf.extend_from_slice(&e.seq.to_le_bytes());
+            buf.extend_from_slice(&e.val.to_le_bytes());
+        }
+    }
+
+    /// Rebuild from [`TraceBlob::to_bytes`]; `None` on truncation or a
+    /// bad tag, never a panic.
+    pub fn from_bytes(bytes: &[u8]) -> Option<TraceBlob> {
+        let mut r = Reader::new(bytes);
+        let blob = Self::read_from(&mut r)?;
+        if r.remaining() != 0 {
+            return None;
+        }
+        Some(blob)
+    }
+
+    fn read_from(r: &mut Reader) -> Option<TraceBlob> {
+        let pid = r.u32().ok()?;
+        let tid = r.u32().ok()?;
+        let domain = match r.u8().ok()? {
+            0 => ClockDomain::Virtual,
+            1 => ClockDomain::Wall,
+            _ => return None,
+        };
+        let dropped = r.u64().ok()?;
+        let n = r.u32().ok()? as usize;
+        let mut events = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            let kind = match r.u8().ok()? {
+                0 => EventKind::Span,
+                1 => EventKind::Instant,
+                2 => EventKind::Counter,
+                _ => return None,
+            };
+            let name = r.str_u32().ok()?;
+            events.push(OwnedEvent {
+                kind,
+                name,
+                ts_ns: r.u64().ok()?,
+                dur_ns: r.u64().ok()?,
+                seq: r.u64().ok()?,
+                val: r.u64().ok()?,
+            });
+        }
+        Some(TraceBlob { pid, tid, domain, dropped, events })
+    }
+}
+
+/// Serialize a set of blobs (count-prefixed) — the form appended to
+/// `Done` payloads.
+pub fn blobs_to_bytes(blobs: &[TraceBlob], buf: &mut Vec<u8>) {
+    buf.extend_from_slice(&(blobs.len() as u32).to_le_bytes());
+    for b in blobs {
+        b.to_bytes(buf);
+    }
+}
+
+/// Inverse of [`blobs_to_bytes`], consuming from an in-progress reader.
+pub fn blobs_read_from(r: &mut Reader) -> Option<Vec<TraceBlob>> {
+    let n = r.u32().ok()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 10));
+    for _ in 0..n {
+        out.push(TraceBlob::read_from(r)?);
+    }
+    Some(out)
+}
+
+/// Human name for a process id under the engine's pid scheme:
+/// 0 = coordinator (and the whole sim), 100+i = worker i, 200+i =
+/// merge shard i.
+pub fn process_name(pid: u32) -> String {
+    match pid {
+        0 => "coordinator".to_string(),
+        100..=199 => format!("worker {}", pid - 100),
+        200..=299 => format!("shard {}", pid - 200),
+        other => format!("process {other}"),
+    }
+}
+
+/// Nanoseconds as a fixed-point microsecond JSON number ("12.345"):
+/// integer math only, so rendering is byte-deterministic.
+fn us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+fn esc(s: &str) -> String {
+    // event names are engine-chosen identifiers; escape defensively
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Render merged blobs as Chrome-trace-event JSON (object form, one
+/// event per line). Blobs are sorted by (pid, tid) and events within a
+/// blob by (ts, name, kind, seq, val, dur), so per-(pid,tid) timestamps
+/// are monotonically non-decreasing and the output is byte-identical
+/// for identical inputs regardless of merge order.
+pub fn chrome_trace_json(blobs: &[TraceBlob]) -> String {
+    let mut blobs: Vec<&TraceBlob> = blobs.iter().collect();
+    blobs.sort_by_key(|b| (b.pid, b.tid));
+
+    let mut lines: Vec<String> = Vec::new();
+    let mut named_pids: Vec<u32> = Vec::new();
+    for b in &blobs {
+        if !named_pids.contains(&b.pid) {
+            named_pids.push(b.pid);
+            lines.push(format!(
+                "{{\"ph\":\"M\",\"pid\":{},\"tid\":0,\"name\":\"process_name\",\
+                 \"args\":{{\"name\":\"{}\",\"clock\":\"{}\"}}}}",
+                b.pid,
+                esc(&process_name(b.pid)),
+                b.domain.label()
+            ));
+        }
+        let mut evs: Vec<&OwnedEvent> = b.events.iter().collect();
+        evs.sort_by(|a, z| {
+            (a.ts_ns, &a.name, a.kind, a.seq, a.val, a.dur_ns)
+                .cmp(&(z.ts_ns, &z.name, z.kind, z.seq, z.val, z.dur_ns))
+        });
+        for e in evs {
+            let mut args = String::new();
+            if e.seq != NO_SEQ {
+                args.push_str(&format!("\"seq\":{}", e.seq));
+            }
+            match e.kind {
+                EventKind::Span => {
+                    if e.val != 0 {
+                        if !args.is_empty() {
+                            args.push(',');
+                        }
+                        args.push_str(&format!("\"val\":{}", e.val));
+                    }
+                    lines.push(format!(
+                        "{{\"ph\":\"X\",\"pid\":{},\"tid\":{},\"name\":\"{}\",\
+                         \"ts\":{},\"dur\":{},\"args\":{{{}}}}}",
+                        b.pid,
+                        b.tid,
+                        esc(&e.name),
+                        us(e.ts_ns),
+                        us(e.dur_ns),
+                        args
+                    ));
+                }
+                EventKind::Instant => {
+                    if e.val != 0 {
+                        if !args.is_empty() {
+                            args.push(',');
+                        }
+                        args.push_str(&format!("\"val\":{}", e.val));
+                    }
+                    lines.push(format!(
+                        "{{\"ph\":\"i\",\"pid\":{},\"tid\":{},\"name\":\"{}\",\
+                         \"ts\":{},\"s\":\"t\",\"args\":{{{}}}}}",
+                        b.pid,
+                        b.tid,
+                        esc(&e.name),
+                        us(e.ts_ns),
+                        args
+                    ));
+                }
+                EventKind::Counter => {
+                    lines.push(format!(
+                        "{{\"ph\":\"C\",\"pid\":{},\"tid\":{},\"name\":\"{}\",\
+                         \"ts\":{},\"args\":{{\"v\":{}}}}}",
+                        b.pid,
+                        b.tid,
+                        esc(&e.name),
+                        us(e.ts_ns),
+                        e.val
+                    ));
+                }
+            }
+        }
+    }
+
+    let mut out = String::from("{\"traceEvents\":[\n");
+    out.push_str(&lines.join(",\n"));
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::TraceBuf;
+
+    fn sample_blob() -> TraceBlob {
+        let mut b = TraceBuf::active(100, 100, ClockDomain::Wall);
+        b.span("route_batch", 1_000, 2_500);
+        b.span_seq("flush_send", 3_000, 3_700, 42);
+        b.instant("snapshot", 4_000);
+        b.instant_full("panes_retired", 4_500, NO_SEQ, 3);
+        b.count("queue_depth", 5_000, 17);
+        b.to_blob()
+    }
+
+    #[test]
+    fn blob_bytes_round_trip() {
+        let blob = sample_blob();
+        let mut bytes = Vec::new();
+        blob.to_bytes(&mut bytes);
+        let back = TraceBlob::from_bytes(&bytes).expect("round trip");
+        assert_eq!(back, blob);
+        // truncation is rejected at every cut point, never a panic
+        for cut in 0..bytes.len() {
+            assert!(TraceBlob::from_bytes(&bytes[..cut]).is_none(), "cut at {cut}");
+        }
+        // trailing garbage is rejected too
+        bytes.push(0);
+        assert!(TraceBlob::from_bytes(&bytes).is_none());
+    }
+
+    #[test]
+    fn blob_set_round_trips_through_reader() {
+        let a = sample_blob();
+        let mut empty = TraceBlob::from_buf(&TraceBuf::disabled());
+        empty.pid = 200;
+        empty.tid = 200;
+        let mut bytes = Vec::new();
+        blobs_to_bytes(&[a.clone(), empty.clone()], &mut bytes);
+        let mut r = Reader::new(&bytes);
+        let back = blobs_read_from(&mut r).expect("round trip");
+        assert_eq!(back, vec![a, empty]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn chrome_json_is_merge_order_invariant_and_valid_shape() {
+        let mut w = TraceBuf::active(100, 100, ClockDomain::Wall);
+        w.span("flush_send", 10_000, 11_000);
+        let mut s = TraceBuf::active(200, 200, ClockDomain::Wall);
+        s.span_seq("merge_absorb", 12_000, 13_000, 9);
+        let ab = chrome_trace_json(&[w.to_blob(), s.to_blob()]);
+        let ba = chrome_trace_json(&[s.to_blob(), w.to_blob()]);
+        assert_eq!(ab, ba, "render must not depend on merge order");
+        assert!(ab.starts_with("{\"traceEvents\":[\n"));
+        assert!(ab.ends_with("\n]}\n"));
+        assert!(ab.contains("\"name\":\"process_name\""));
+        assert!(ab.contains("\"name\":\"worker 0\""));
+        assert!(ab.contains("\"name\":\"shard 0\""));
+        assert!(ab.contains("\"ts\":10.000"));
+        assert!(ab.contains("\"dur\":1.000"));
+        assert!(ab.contains("\"seq\":9"));
+        assert!(!ab.contains("NaN"));
+    }
+
+    #[test]
+    fn events_sort_monotonically_within_a_thread() {
+        let mut b = TraceBuf::active(0, 1, ClockDomain::Virtual);
+        // recorded out of order (spans are pushed at end time)
+        b.span("outer", 100, 900);
+        b.span("inner", 200, 300);
+        b.instant("mark", 50);
+        let json = chrome_trace_json(&[b.to_blob()]);
+        let ts: Vec<f64> = json
+            .lines()
+            .filter(|l| l.contains("\"ts\":"))
+            .map(|l| {
+                let i = l.find("\"ts\":").unwrap() + 5;
+                let rest = &l[i..];
+                let end = rest.find(',').unwrap();
+                rest[..end].parse::<f64>().unwrap()
+            })
+            .collect();
+        for pair in ts.windows(2) {
+            assert!(pair[0] <= pair[1], "timestamps must be sorted: {ts:?}");
+        }
+    }
+}

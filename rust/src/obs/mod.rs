@@ -1,0 +1,451 @@
+//! Lock-light tracing + telemetry: per-thread span/event recorder.
+//!
+//! Every engine thread (sim main loop, rt sources/workers/shards, and the
+//! multi-process children) owns a private [`TraceBuf`] — a fixed-capacity
+//! ring of [`Event`]s with nanosecond timestamps. There are no locks and
+//! no shared state on the record path: buffers are merged only after the
+//! run, into [`export::TraceBlob`]s and one Chrome-trace-event JSON
+//! (`--trace-out`, openable in Perfetto — see `docs/OBSERVABILITY.md`).
+//!
+//! Clock discipline: this module never reads a clock. Timestamps are
+//! *passed in* by the caller — virtual ticks in the simulator
+//! ([`ClockDomain::Virtual`]), shared-epoch wall nanoseconds from
+//! `transport::Clock` in rt/deploy ([`ClockDomain::Wall`]) so
+//! multi-process timelines align. The `fish lint` `obs-clock` rule
+//! enforces that nothing under `rust/src/obs/` calls `Instant::now` or
+//! `SystemTime::now` directly.
+//!
+//! Overhead discipline: every recording call starts with an `#[inline]`
+//! branch on the buffer's `active` flag, and the [`span!`]/[`count!`]
+//! macros evaluate their arguments only under that branch — a disabled
+//! buffer costs one predictable branch per call site. The disabled-path
+//! cost on the routing and merge-absorb hot paths is measured in
+//! `benches/hotpath.rs` and gated by `scripts/check_perf.py`.
+
+pub mod export;
+pub mod sample;
+
+pub use export::{chrome_trace_json, TraceBlob};
+pub use sample::{Sample, Sampler, DEFAULT_INTERVAL_NS};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Process-wide default for *newly constructed* CLI-path buffers.
+///
+/// Flipped once by `main` when `--trace-out`/`--metrics-out` is given,
+/// *before* any engine threads start; it is consulted only at
+/// [`TraceBuf`] construction time, never on the record path, so parallel
+/// tests that build their buffers explicitly are unaffected by it.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Set the process-wide default for newly constructed buffers.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Read the process-wide default (see [`set_enabled`]).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::SeqCst)
+}
+
+/// Which clock a buffer's timestamps come from. Traces from the two
+/// domains are never merged into one timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClockDomain {
+    /// Simulator virtual time (`i * interarrival_ns`): deterministic,
+    /// byte-identical run-to-run.
+    Virtual,
+    /// `transport::Clock` epoch nanoseconds: one epoch is chosen by the
+    /// coordinator and shared with every child process.
+    Wall,
+}
+
+impl ClockDomain {
+    /// Stable lowercase label used in exports and reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ClockDomain::Virtual => "virtual",
+            ClockDomain::Wall => "wall",
+        }
+    }
+}
+
+/// Event flavor, mirroring the Chrome trace phases we emit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// Complete span (`ph:"X"`): `ts_ns` start, `dur_ns` length.
+    Span,
+    /// Point-in-time marker (`ph:"i"`).
+    Instant,
+    /// Counter sample (`ph:"C"`): `val` is the series value at `ts_ns`.
+    Counter,
+}
+
+/// `seq` value meaning "this event is not part of a causal chain".
+pub const NO_SEQ: u64 = u64::MAX;
+
+/// One recorded event. `name` stays `&'static str` on the hot path;
+/// the owned mirror for serialization is [`export::OwnedEvent`].
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub kind: EventKind,
+    pub name: &'static str,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    /// Causal-chain key ([`chain_id`]) or [`NO_SEQ`].
+    pub seq: u64,
+    /// Counter value / span payload size; 0 when unused.
+    pub val: u64,
+}
+
+/// Pack a flush chain key: `FlushMsg.seq` is only monotonic per
+/// (worker, shard) lane, so the cross-process chain id is the triple.
+/// Layout: worker in the top 20 bits, shard in 12, seq in the low 32.
+#[inline]
+pub fn chain_id(worker: u64, shard: u64, seq: u64) -> u64 {
+    debug_assert!(worker < (1 << 20) && shard < (1 << 12) && seq < (1 << 32));
+    (worker << 44) | ((shard & 0xfff) << 32) | (seq & 0xffff_ffff)
+}
+
+/// Default ring capacity per buffer (events, not bytes). At ~56 bytes an
+/// event this is ~3.5 MiB per thread fully loaded; overflow drops the
+/// *newest* events and counts them, so the recorded prefix stays causal.
+pub const DEFAULT_CAP: usize = 1 << 16;
+
+/// Per-thread ring-buffered event recorder. Not `Sync` — one owner.
+#[derive(Debug)]
+pub struct TraceBuf {
+    pid: u32,
+    tid: u32,
+    domain: ClockDomain,
+    events: Vec<Event>,
+    /// LIFO stack for [`TraceBuf::begin`]/[`TraceBuf::end`] pairing.
+    open: Vec<(&'static str, u64)>,
+    dropped: u64,
+    cap: usize,
+    active: bool,
+}
+
+impl TraceBuf {
+    /// Inert buffer: every record call is a single branch, nothing is
+    /// stored, `to_blob` yields an empty blob.
+    pub fn disabled() -> Self {
+        TraceBuf {
+            pid: 0,
+            tid: 0,
+            domain: ClockDomain::Virtual,
+            events: Vec::new(),
+            open: Vec::new(),
+            dropped: 0,
+            cap: 0,
+            active: false,
+        }
+    }
+
+    /// Recording buffer with the default ring capacity.
+    pub fn active(pid: u32, tid: u32, domain: ClockDomain) -> Self {
+        Self::with_cap(pid, tid, domain, DEFAULT_CAP)
+    }
+
+    /// Recording buffer with an explicit ring capacity.
+    pub fn with_cap(pid: u32, tid: u32, domain: ClockDomain, cap: usize) -> Self {
+        TraceBuf {
+            pid,
+            tid,
+            domain,
+            events: Vec::with_capacity(cap.min(1 << 12)),
+            open: Vec::new(),
+            dropped: 0,
+            cap,
+            active: true,
+        }
+    }
+
+    /// Recording iff the process-wide default ([`set_enabled`]) is on:
+    /// the constructor used by the engine/CLI plumbing.
+    pub fn for_cli(pid: u32, tid: u32, domain: ClockDomain) -> Self {
+        if enabled() {
+            Self::active(pid, tid, domain)
+        } else {
+            Self::disabled()
+        }
+    }
+
+    /// The branch every record call and macro site takes first.
+    #[inline(always)]
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    #[inline]
+    fn push(&mut self, ev: Event) {
+        if self.events.len() >= self.cap {
+            self.dropped += 1;
+        } else {
+            self.events.push(ev);
+        }
+    }
+
+    /// Record a complete span. `end < start` clamps to zero duration —
+    /// durations are never negative.
+    #[inline]
+    pub fn span(&mut self, name: &'static str, start_ns: u64, end_ns: u64) {
+        self.span_full(name, start_ns, end_ns, NO_SEQ, 0);
+    }
+
+    /// Complete span carrying a causal-chain key (see [`chain_id`]).
+    #[inline]
+    pub fn span_seq(&mut self, name: &'static str, start_ns: u64, end_ns: u64, seq: u64) {
+        self.span_full(name, start_ns, end_ns, seq, 0);
+    }
+
+    /// Complete span with both chain key and payload value.
+    #[inline]
+    pub fn span_full(&mut self, name: &'static str, start_ns: u64, end_ns: u64, seq: u64, val: u64) {
+        if !self.active {
+            return;
+        }
+        self.push(Event {
+            kind: EventKind::Span,
+            name,
+            ts_ns: start_ns,
+            dur_ns: end_ns.saturating_sub(start_ns),
+            seq,
+            val,
+        });
+    }
+
+    /// Point-in-time marker.
+    #[inline]
+    pub fn instant(&mut self, name: &'static str, ts_ns: u64) {
+        self.instant_full(name, ts_ns, NO_SEQ, 0);
+    }
+
+    /// Marker carrying a causal-chain key.
+    #[inline]
+    pub fn instant_seq(&mut self, name: &'static str, ts_ns: u64, seq: u64) {
+        self.instant_full(name, ts_ns, seq, 0);
+    }
+
+    /// Marker with chain key and value (e.g. "panes_retired", val = n).
+    #[inline]
+    pub fn instant_full(&mut self, name: &'static str, ts_ns: u64, seq: u64, val: u64) {
+        if !self.active {
+            return;
+        }
+        self.push(Event { kind: EventKind::Instant, name, ts_ns, dur_ns: 0, seq, val });
+    }
+
+    /// Counter sample: the series `name` has value `val` at `ts_ns`.
+    #[inline]
+    pub fn count(&mut self, name: &'static str, ts_ns: u64, val: u64) {
+        if !self.active {
+            return;
+        }
+        self.push(Event { kind: EventKind::Counter, name, ts_ns, dur_ns: 0, seq: NO_SEQ, val });
+    }
+
+    /// Open a span; every `begin` must be closed by a matching
+    /// [`TraceBuf::end`] with the same name (LIFO nesting).
+    #[inline]
+    pub fn begin(&mut self, name: &'static str, ts_ns: u64) {
+        if !self.active {
+            return;
+        }
+        self.open.push((name, ts_ns));
+    }
+
+    /// Close the innermost open span. A name mismatch or an `end`
+    /// without a `begin` records nothing and counts as a drop (the
+    /// span-pairing test pins both counters to zero).
+    #[inline]
+    pub fn end(&mut self, name: &'static str, ts_ns: u64) {
+        if !self.active {
+            return;
+        }
+        match self.open.pop() {
+            Some((open_name, start)) if open_name == name => self.span(name, start, ts_ns),
+            Some(other) => {
+                self.open.push(other);
+                self.dropped += 1;
+            }
+            None => self.dropped += 1,
+        }
+    }
+
+    /// Number of spans currently open (begun, not ended).
+    pub fn open_spans(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Events dropped on ring overflow or begin/end mispairing.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Recorded events, in record order.
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn pid(&self) -> u32 {
+        self.pid
+    }
+
+    pub fn tid(&self) -> u32 {
+        self.tid
+    }
+
+    pub fn domain(&self) -> ClockDomain {
+        self.domain
+    }
+
+    /// Owned snapshot for shipping/merging (empty for disabled buffers).
+    pub fn to_blob(&self) -> TraceBlob {
+        TraceBlob::from_buf(self)
+    }
+}
+
+/// `obs::span!(buf, "name", start, end)` / with `seq = k` — records a
+/// complete span; arguments are evaluated only when the buffer is
+/// active, so a disabled buffer costs exactly one branch.
+#[macro_export]
+macro_rules! obs_span {
+    ($buf:expr, $name:expr, $start:expr, $end:expr) => {
+        if $buf.is_active() {
+            $buf.span($name, $start, $end);
+        }
+    };
+    ($buf:expr, $name:expr, $start:expr, $end:expr, seq = $seq:expr) => {
+        if $buf.is_active() {
+            $buf.span_seq($name, $start, $end, $seq);
+        }
+    };
+}
+
+/// `obs::count!(buf, "name", ts, val)` — records a counter sample;
+/// arguments are evaluated only when the buffer is active.
+#[macro_export]
+macro_rules! obs_count {
+    ($buf:expr, $name:expr, $ts:expr, $val:expr) => {
+        if $buf.is_active() {
+            $buf.count($name, $ts, $val);
+        }
+    };
+}
+
+// Make the crate-root macros callable as `obs::span!` / `obs::count!`.
+pub use crate::obs_count as count;
+pub use crate::obs_span as span;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_buffer_records_nothing() {
+        let mut b = TraceBuf::disabled();
+        assert!(!b.is_active());
+        b.span("x", 0, 10);
+        b.instant("y", 5);
+        b.count("z", 5, 1);
+        b.begin("w", 0);
+        b.end("w", 1);
+        assert!(b.events().is_empty());
+        assert_eq!(b.dropped(), 0);
+        assert!(b.to_blob().events.is_empty());
+    }
+
+    #[test]
+    fn spans_never_have_negative_durations() {
+        let mut b = TraceBuf::active(0, 0, ClockDomain::Virtual);
+        b.span("backwards", 100, 40); // end < start clamps to 0
+        b.span("ok", 40, 100);
+        assert_eq!(b.events()[0].dur_ns, 0);
+        assert_eq!(b.events()[1].dur_ns, 60);
+    }
+
+    #[test]
+    fn begin_end_pairs_and_counts_mispairs() {
+        let mut b = TraceBuf::active(1, 2, ClockDomain::Wall);
+        b.begin("outer", 10);
+        b.begin("inner", 20);
+        b.end("inner", 30);
+        b.end("outer", 50);
+        assert_eq!(b.open_spans(), 0);
+        assert_eq!(b.dropped(), 0);
+        let names: Vec<_> = b.events().iter().map(|e| e.name).collect();
+        assert_eq!(names, vec!["inner", "outer"]);
+        assert_eq!(b.events()[0].dur_ns, 10);
+        assert_eq!(b.events()[1].dur_ns, 40);
+        // mispaired end: recorded as a drop, stack untouched
+        b.begin("a", 60);
+        b.end("b", 70);
+        assert_eq!(b.open_spans(), 1);
+        assert_eq!(b.dropped(), 1);
+        // end with empty stack
+        b.end("a", 80);
+        b.end("a", 90);
+        assert_eq!(b.open_spans(), 0);
+        assert_eq!(b.dropped(), 2);
+    }
+
+    #[test]
+    fn ring_overflow_drops_newest_and_counts() {
+        let mut b = TraceBuf::with_cap(0, 0, ClockDomain::Virtual, 4);
+        for i in 0..10u64 {
+            b.instant("tick", i);
+        }
+        assert_eq!(b.events().len(), 4);
+        assert_eq!(b.dropped(), 6);
+        // the *oldest* events survived (causal prefix)
+        assert_eq!(b.events()[0].ts_ns, 0);
+        assert_eq!(b.events()[3].ts_ns, 3);
+        assert_eq!(b.to_blob().dropped, 6);
+    }
+
+    #[test]
+    fn macros_skip_argument_evaluation_when_disabled() {
+        let hits = std::cell::Cell::new(0u32);
+        let tick = |n: u64| {
+            hits.set(hits.get() + 1);
+            n
+        };
+        let mut b = TraceBuf::disabled();
+        span!(b, "s", tick(1), tick(2));
+        count!(b, "c", tick(3), 1);
+        assert_eq!(hits.get(), 0, "disabled macro sites must not evaluate args");
+        let mut b = TraceBuf::active(0, 0, ClockDomain::Virtual);
+        span!(b, "s", tick(1), tick(2));
+        span!(b, "s2", tick(3), tick(4), seq = 7);
+        count!(b, "c", tick(5), 9);
+        assert_eq!(hits.get(), 5);
+        assert_eq!(b.events().len(), 3);
+        assert_eq!(b.events()[1].seq, 7);
+        assert_eq!(b.events()[2].val, 9);
+    }
+
+    #[test]
+    fn chain_id_is_injective_over_engine_ranges() {
+        let mut seen = std::collections::HashSet::new();
+        for w in [0u64, 1, 7, 127] {
+            for s in [0u64, 1, 3] {
+                for q in [0u64, 1, 1000, 0xffff_ffff - 1] {
+                    assert!(seen.insert(chain_id(w, s, q)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn global_flag_gates_cli_construction_only() {
+        // never toggled concurrently with other tests' record paths:
+        // for_cli reads it once at construction.
+        set_enabled(true);
+        let b = TraceBuf::for_cli(0, 0, ClockDomain::Virtual);
+        set_enabled(false);
+        assert!(b.is_active(), "flag is latched at construction");
+        let b2 = TraceBuf::for_cli(0, 0, ClockDomain::Virtual);
+        assert!(!b2.is_active());
+    }
+}

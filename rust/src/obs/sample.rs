@@ -1,0 +1,364 @@
+//! Per-epoch time series: the periodic telemetry sampler.
+//!
+//! Each engine actor (sim main loop, rt workers/shards, multi-process
+//! children) owns a [`Sampler`] that records a [`Sample`] row at its
+//! flush/absorb boundaries once `interval_ns` has elapsed. Counters
+//! (`tuples`, `wire_bytes`, `absorbed`) are *cumulative* totals at the
+//! sample timestamp — rates are derived from consecutive deltas at
+//! render time; the gauge fields (`queue_depth`, `open_panes`,
+//! `open_entries`, `imbalance_x1000`, `replay_backlog`) are
+//! point-in-time readings. Everything is integer-valued so JSONL output
+//! is byte-deterministic in the sim's virtual clock domain.
+//!
+//! `src` uses the same id scheme as trace pids: 0 = coordinator/sim,
+//! 100+i = worker i, 200+i = merge shard i.
+
+use crate::transport::wire::Reader;
+
+/// One telemetry row (see module docs for counter-vs-gauge semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Sample {
+    pub src: u32,
+    pub ts_ns: u64,
+    /// Cumulative tuples processed by this actor.
+    pub tuples: u64,
+    /// Cumulative wire bytes sent + received by this actor.
+    pub wire_bytes: u64,
+    /// Gauge: tuples queued and unacknowledged toward this actor.
+    pub queue_depth: u64,
+    /// Gauge: open event-time panes held by this actor.
+    pub open_panes: u64,
+    /// Gauge: live aggregation entries (keys across open panes).
+    pub open_entries: u64,
+    /// Cumulative flush batches absorbed (merge shards).
+    pub absorbed: u64,
+    /// Gauge: max/mean absorb-mass imbalance across shards, x1000
+    /// (coordinator only; 1000 = perfectly balanced).
+    pub imbalance_x1000: u64,
+    /// Gauge: flush batches logged but not yet re-deliverable (recovery).
+    pub replay_backlog: u64,
+}
+
+impl Sample {
+    fn to_bytes(&self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(&self.src.to_le_bytes());
+        for v in [
+            self.ts_ns,
+            self.tuples,
+            self.wire_bytes,
+            self.queue_depth,
+            self.open_panes,
+            self.open_entries,
+            self.absorbed,
+            self.imbalance_x1000,
+            self.replay_backlog,
+        ] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn read_from(r: &mut Reader) -> Option<Sample> {
+        Some(Sample {
+            src: r.u32().ok()?,
+            ts_ns: r.u64().ok()?,
+            tuples: r.u64().ok()?,
+            wire_bytes: r.u64().ok()?,
+            queue_depth: r.u64().ok()?,
+            open_panes: r.u64().ok()?,
+            open_entries: r.u64().ok()?,
+            absorbed: r.u64().ok()?,
+            imbalance_x1000: r.u64().ok()?,
+            replay_backlog: r.u64().ok()?,
+        })
+    }
+
+    /// One JSONL line (fixed key order, integers only).
+    pub fn jsonl_line(&self) -> String {
+        format!(
+            "{{\"src\":{},\"ts_ns\":{},\"tuples\":{},\"wire_bytes\":{},\
+             \"queue_depth\":{},\"open_panes\":{},\"open_entries\":{},\
+             \"absorbed\":{},\"imbalance_x1000\":{},\"replay_backlog\":{}}}",
+            self.src,
+            self.ts_ns,
+            self.tuples,
+            self.wire_bytes,
+            self.queue_depth,
+            self.open_panes,
+            self.open_entries,
+            self.absorbed,
+            self.imbalance_x1000,
+            self.replay_backlog
+        )
+    }
+}
+
+/// Serialize a sample set (count-prefixed) — appended to `Done`
+/// payloads next to the trace blobs.
+pub fn samples_to_bytes(samples: &[Sample], buf: &mut Vec<u8>) {
+    buf.extend_from_slice(&(samples.len() as u32).to_le_bytes());
+    for s in samples {
+        s.to_bytes(buf);
+    }
+}
+
+/// Inverse of [`samples_to_bytes`], consuming from an in-progress reader.
+pub fn samples_read_from(r: &mut Reader) -> Option<Vec<Sample>> {
+    let n = r.u32().ok()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 12));
+    for _ in 0..n {
+        out.push(Sample::read_from(r)?);
+    }
+    Some(out)
+}
+
+/// Render merged samples as JSONL, sorted by (ts_ns, src) so the output
+/// does not depend on merge order.
+pub fn jsonl(samples: &[Sample]) -> String {
+    let mut rows: Vec<&Sample> = samples.iter().collect();
+    rows.sort_by_key(|s| (s.ts_ns, s.src));
+    let mut out = String::new();
+    for s in rows {
+        out.push_str(&s.jsonl_line());
+        out.push('\n');
+    }
+    out
+}
+
+/// Periodic sampler: `due` at flush/absorb boundaries, `record` pushes
+/// a row and re-arms. Disabled samplers cost one branch per `due`.
+#[derive(Debug)]
+pub struct Sampler {
+    src: u32,
+    interval_ns: u64,
+    next_ns: u64,
+    samples: Vec<Sample>,
+    active: bool,
+}
+
+/// Default sampling interval: 10ms of engine time (virtual or wall).
+pub const DEFAULT_INTERVAL_NS: u64 = 10_000_000;
+
+impl Sampler {
+    /// Inert sampler: `due` is always false, `record` is ignored.
+    pub fn disabled() -> Self {
+        Sampler {
+            src: 0,
+            interval_ns: u64::MAX,
+            next_ns: u64::MAX,
+            samples: Vec::new(),
+            active: false,
+        }
+    }
+
+    /// Recording sampler for actor `src`, firing every `interval_ns`.
+    pub fn active(src: u32, interval_ns: u64) -> Self {
+        Sampler {
+            src,
+            interval_ns: interval_ns.max(1),
+            next_ns: 0,
+            samples: Vec::new(),
+            active: true,
+        }
+    }
+
+    /// Recording iff the process-wide default (`obs::set_enabled`) is on.
+    pub fn for_cli(src: u32, interval_ns: u64) -> Self {
+        if super::enabled() {
+            Self::active(src, interval_ns)
+        } else {
+            Self::disabled()
+        }
+    }
+
+    #[inline(always)]
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// Has the sampling interval elapsed at `now`?
+    #[inline(always)]
+    pub fn due(&self, now_ns: u64) -> bool {
+        self.active && now_ns >= self.next_ns
+    }
+
+    /// Actor id under the pid scheme, for filling [`Sample::src`].
+    pub fn src(&self) -> u32 {
+        self.src
+    }
+
+    /// Push one row (caller fills the fields; `src` is overwritten) and
+    /// re-arm the interval past the row's timestamp.
+    pub fn record(&mut self, mut s: Sample) {
+        if !self.active {
+            return;
+        }
+        s.src = self.src;
+        // re-arm on the interval grid so a late sample doesn't fire a
+        // burst of catch-up rows
+        let next = self.next_ns.max(s.ts_ns.saturating_add(1));
+        let rem = next % self.interval_ns;
+        self.next_ns =
+            if rem == 0 { next } else { next.saturating_add(self.interval_ns - rem) };
+        self.samples.push(s);
+    }
+
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
+    pub fn into_samples(self) -> Vec<Sample> {
+        self.samples
+    }
+}
+
+/// Format an integer rate with a compact suffix (k/M) for report rows.
+fn fmt_rate(v: f64) -> String {
+    if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.1}k", v / 1e3)
+    } else {
+        format!("{v:.0}")
+    }
+}
+
+fn min_avg_max(vals: &[f64]) -> Option<(f64, f64, f64)> {
+    if vals.is_empty() {
+        return None;
+    }
+    let mut min = f64::INFINITY;
+    let mut max = f64::NEG_INFINITY;
+    let mut sum = 0.0;
+    for &v in vals {
+        min = min.min(v);
+        max = max.max(v);
+        sum += v;
+    }
+    Some((min, sum / vals.len() as f64, max))
+}
+
+/// Sparkline-style min/avg/max summary rows for the report tables.
+///
+/// Rates come from consecutive same-`src` deltas of the cumulative
+/// counters; gauges are summarized directly. Rows whose series is all
+/// zero are omitted, so non-windowed or single-process runs don't print
+/// dead rows.
+pub fn summary_rows(samples: &[Sample]) -> Vec<(String, String)> {
+    let mut rows: Vec<&Sample> = samples.iter().collect();
+    rows.sort_by_key(|s| (s.src, s.ts_ns));
+
+    let mut tuple_rates = Vec::new();
+    let mut byte_rates = Vec::new();
+    for pair in rows.windows(2) {
+        let (a, b) = (pair[0], pair[1]);
+        if a.src != b.src || b.ts_ns <= a.ts_ns {
+            continue;
+        }
+        let dt = (b.ts_ns - a.ts_ns) as f64 / 1e9;
+        tuple_rates.push(b.tuples.saturating_sub(a.tuples) as f64 / dt);
+        byte_rates.push(b.wire_bytes.saturating_sub(a.wire_bytes) as f64 / dt);
+    }
+
+    let gauge = |f: fn(&Sample) -> u64| -> Vec<f64> { rows.iter().map(|s| f(s) as f64).collect() };
+
+    let mut out: Vec<(String, String)> = Vec::new();
+    let mut push_rate = |label: &str, vals: &[f64]| {
+        if let Some((min, avg, max)) = min_avg_max(vals) {
+            if max > 0.0 {
+                out.push((
+                    label.to_string(),
+                    format!("{} / {} / {}", fmt_rate(min), fmt_rate(avg), fmt_rate(max)),
+                ));
+            }
+        }
+    };
+    push_rate("tuples/s (min/avg/max)", &tuple_rates);
+    push_rate("wire bytes/s (min/avg/max)", &byte_rates);
+    for (label, f) in [
+        ("queue depth (min/avg/max)", (|s| s.queue_depth) as fn(&Sample) -> u64),
+        ("open panes (min/avg/max)", |s| s.open_panes),
+        ("open entries (min/avg/max)", |s| s.open_entries),
+        ("shard imbalance x1000 (min/avg/max)", |s| s.imbalance_x1000),
+        ("replay backlog (min/avg/max)", |s| s.replay_backlog),
+    ] {
+        push_rate(label, &gauge(f));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sampler_is_inert() {
+        let mut s = Sampler::disabled();
+        assert!(!s.due(u64::MAX - 1));
+        s.record(Sample { ts_ns: 5, tuples: 1, ..Sample::default() });
+        assert!(s.samples().is_empty());
+    }
+
+    #[test]
+    fn sampler_fires_on_the_interval_grid() {
+        let mut s = Sampler::active(100, 10);
+        assert!(s.due(0));
+        s.record(Sample { ts_ns: 0, tuples: 10, ..Sample::default() });
+        assert!(!s.due(5));
+        assert!(s.due(10));
+        s.record(Sample { ts_ns: 13, tuples: 25, ..Sample::default() });
+        // re-armed past 13 on the grid: next fire at 20
+        assert!(!s.due(19));
+        assert!(s.due(20));
+        assert_eq!(s.samples().len(), 2);
+        assert_eq!(s.samples()[0].src, 100, "src is stamped by the sampler");
+    }
+
+    #[test]
+    fn bytes_round_trip_and_reject_truncation() {
+        let rows = vec![
+            Sample { src: 0, ts_ns: 10, tuples: 100, wire_bytes: 5000, ..Sample::default() },
+            Sample { src: 200, ts_ns: 20, absorbed: 7, open_panes: 3, ..Sample::default() },
+        ];
+        let mut bytes = Vec::new();
+        samples_to_bytes(&rows, &mut bytes);
+        let mut r = Reader::new(&bytes);
+        let back = samples_read_from(&mut r).expect("round trip");
+        assert_eq!(back, rows);
+        assert_eq!(r.remaining(), 0);
+        for cut in 0..bytes.len() {
+            let mut r = Reader::new(&bytes[..cut]);
+            assert!(samples_read_from(&mut r).is_none(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn jsonl_is_sorted_and_integer_only() {
+        let rows = vec![
+            Sample { src: 200, ts_ns: 20, absorbed: 7, ..Sample::default() },
+            Sample { src: 100, ts_ns: 20, tuples: 50, ..Sample::default() },
+            Sample { src: 0, ts_ns: 10, tuples: 100, ..Sample::default() },
+        ];
+        let text = jsonl(&rows);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("\"ts_ns\":10"));
+        assert!(lines[1].contains("\"src\":100"), "ties broken by src");
+        assert!(lines[2].contains("\"src\":200"));
+        assert!(!text.contains('.'), "virtual-domain JSONL must be integer-only");
+    }
+
+    #[test]
+    fn summary_rates_use_consecutive_deltas_per_src() {
+        let rows = vec![
+            Sample { src: 0, ts_ns: 1_000_000_000, tuples: 1000, ..Sample::default() },
+            Sample { src: 0, ts_ns: 2_000_000_000, tuples: 3000, ..Sample::default() },
+            Sample { src: 0, ts_ns: 3_000_000_000, tuples: 9000, ..Sample::default() },
+        ];
+        let out = summary_rows(&rows);
+        let rate = out.iter().find(|(l, _)| l.starts_with("tuples/s")).expect("rate row");
+        // deltas: 2000/s and 6000/s -> min 2.0k avg 4.0k max 6.0k
+        assert_eq!(rate.1, "2.0k / 4.0k / 6.0k");
+        // all-zero series are omitted
+        assert!(!out.iter().any(|(l, _)| l.starts_with("replay backlog")));
+    }
+}

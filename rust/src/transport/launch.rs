@@ -52,6 +52,9 @@ use crate::engine::rt::{self, RtOptions, RtResult};
 use crate::metrics::{
     AggStats, Histogram, RecoveryLedger, RecoveryStats, WindowStats, WireLedger, WireStats,
 };
+use crate::obs::export::{blobs_read_from, blobs_to_bytes};
+use crate::obs::sample::{samples_read_from, samples_to_bytes};
+use crate::obs::{self, ClockDomain, Sample, Sampler, TraceBlob, TraceBuf, DEFAULT_INTERVAL_NS};
 use crate::state::ShardSnapshot;
 use crate::workload::Trace;
 use std::io::{self, Write};
@@ -357,6 +360,8 @@ struct WorkerDone {
     state_len: usize,
     wire: WireStats,
     recovery: RecoveryStats,
+    trace: Vec<TraceBlob>,
+    samples: Vec<Sample>,
 }
 
 fn put_worker_done(d: &WorkerDone, buf: &mut Vec<u8>) {
@@ -365,6 +370,10 @@ fn put_worker_done(d: &WorkerDone, buf: &mut Vec<u8>) {
     put_histogram(&d.latency, buf);
     put_wire_stats(&d.wire, buf);
     put_recovery_stats(&d.recovery, buf);
+    // trace + telemetry ride last, unconditionally (empty vecs encode
+    // as a zero count), so truncation detection stays byte-precise
+    blobs_to_bytes(&d.trace, buf);
+    samples_to_bytes(&d.samples, buf);
 }
 
 fn get_worker_done(payload: &[u8]) -> Result<WorkerDone, WireError> {
@@ -374,7 +383,9 @@ fn get_worker_done(payload: &[u8]) -> Result<WorkerDone, WireError> {
     let latency = get_histogram(&mut r)?;
     let wire = get_wire_stats(&mut r)?;
     let recovery = get_recovery_stats(&mut r)?;
-    Ok(WorkerDone { latency, count, state_len, wire, recovery })
+    let trace = blobs_read_from(&mut r).ok_or(WireError::Truncated)?;
+    let samples = samples_read_from(&mut r).ok_or(WireError::Truncated)?;
+    Ok(WorkerDone { latency, count, state_len, wire, recovery, trace, samples })
 }
 
 /// What one shard child reports back: the exact [`rt::shard_loop`]
@@ -386,6 +397,8 @@ struct ShardDone {
     absorbed: Vec<u64>,
     recovery: RecoveryStats,
     wire: WireStats,
+    trace: Vec<TraceBlob>,
+    samples: Vec<Sample>,
 }
 
 fn put_agg_stats(s: &AggStats, buf: &mut Vec<u8>) {
@@ -443,6 +456,8 @@ fn put_shard_done(d: &ShardDone, buf: &mut Vec<u8>) {
     put_u64s(&d.absorbed, buf);
     put_recovery_stats(&d.recovery, buf);
     put_wire_stats(&d.wire, buf);
+    blobs_to_bytes(&d.trace, buf);
+    samples_to_bytes(&d.samples, buf);
 }
 
 fn get_shard_done(payload: &[u8]) -> Result<ShardDone, WireError> {
@@ -463,6 +478,8 @@ fn get_shard_done(payload: &[u8]) -> Result<ShardDone, WireError> {
     let absorbed = get_u64s(&mut r)?;
     let recovery = get_recovery_stats(&mut r)?;
     let wire = get_wire_stats(&mut r)?;
+    let trace = blobs_read_from(&mut r).ok_or(WireError::Truncated)?;
+    let samples = samples_read_from(&mut r).ok_or(WireError::Truncated)?;
     Ok(ShardDone {
         out: WindowedOutput { windows, all_time, stats, window_stats },
         sketch,
@@ -470,6 +487,8 @@ fn get_shard_done(payload: &[u8]) -> Result<ShardDone, WireError> {
         absorbed,
         recovery,
         wire,
+        trace,
+        samples,
     })
 }
 
@@ -547,6 +566,7 @@ pub fn worker_child(args: &[String]) -> io::Result<()> {
     let shard_addrs: Vec<&str> = arg(args, "--shards")?.split(',').collect();
     let recover = arg_opt_u64(args, "--recover")?.unwrap_or(0) == 1;
     let crash_after_flushes = arg_opt_u64(args, "--crash-after-flushes")?;
+    let traced = arg_opt_u64(args, "--trace")?.unwrap_or(0) == 1;
 
     let kind = kind_of_addr(&control);
     let (listener, addr) = socket::listen(kind, &format!("w{index}"))?;
@@ -586,6 +606,19 @@ pub fn worker_child(args: &[String]) -> io::Result<()> {
 
     let router = ShardRouter::new(shard_addrs.len());
     let clock = Clock::unix(epoch);
+    // pid 100+i mirrors the in-process engine's worker tid scheme, so
+    // merged timelines read the same whichever engine produced them
+    let pid = 100 + index as u32;
+    let mut obs_buf = if traced {
+        TraceBuf::active(pid, pid, ClockDomain::Wall)
+    } else {
+        TraceBuf::disabled()
+    };
+    let mut sampler = if traced {
+        Sampler::active(pid, DEFAULT_INTERVAL_NS)
+    } else {
+        Sampler::disabled()
+    };
     let (latency, count, state_len) = rt::worker_loop(
         index,
         cost,
@@ -596,6 +629,8 @@ pub fn worker_child(args: &[String]) -> io::Result<()> {
         rx,
         flush_txs,
         crash_after_flushes,
+        &mut obs_buf,
+        &mut sampler,
     );
 
     let done = WorkerDone {
@@ -604,6 +639,8 @@ pub fn worker_child(args: &[String]) -> io::Result<()> {
         state_len,
         wire: ledger.snapshot(),
         recovery: recovery.snapshot(),
+        trace: if obs_buf.is_active() { vec![obs_buf.to_blob()] } else { Vec::new() },
+        samples: sampler.into_samples(),
     };
     let mut payload = Vec::new();
     put_worker_done(&done, &mut payload);
@@ -628,6 +665,7 @@ pub fn shard_child(args: &[String]) -> io::Result<()> {
     let snapshot_every = arg_opt_u64(args, "--snapshot-every")?.unwrap_or(0);
     let snapshot_path = arg_opt(args, "--snapshot-path").map(PathBuf::from);
     let resume = arg_opt_u64(args, "--resume")?.unwrap_or(0) == 1;
+    let traced = arg_opt_u64(args, "--trace")?.unwrap_or(0) == 1;
 
     // a respawned victim restores from its last persisted snapshot; a
     // victim killed before its first snapshot cold-starts (the workers
@@ -664,7 +702,27 @@ pub fn shard_child(args: &[String]) -> io::Result<()> {
         snapshot_path,
         resume: resume_snap,
     };
-    let out = rt::shard_loop(n_workers, agg_window_ns, agg_lateness_ns, clock, rx, ctl);
+    let pid = 200 + index as u32;
+    let mut obs_buf = if traced {
+        TraceBuf::active(pid, pid, ClockDomain::Wall)
+    } else {
+        TraceBuf::disabled()
+    };
+    let mut sampler = if traced {
+        Sampler::active(pid, DEFAULT_INTERVAL_NS)
+    } else {
+        Sampler::disabled()
+    };
+    let out = rt::shard_loop(
+        n_workers,
+        agg_window_ns,
+        agg_lateness_ns,
+        clock,
+        rx,
+        ctl,
+        &mut obs_buf,
+        &mut sampler,
+    );
 
     let done = ShardDone {
         out: out.out,
@@ -673,6 +731,8 @@ pub fn shard_child(args: &[String]) -> io::Result<()> {
         absorbed: out.absorbed,
         recovery: out.recovery,
         wire: ledger.snapshot(),
+        trace: if obs_buf.is_active() { vec![obs_buf.to_blob()] } else { Vec::new() },
+        samples: sampler.into_samples(),
     };
     let mut payload = Vec::new();
     put_shard_done(&done, &mut payload);
@@ -700,6 +760,7 @@ struct Supervision {
     worker_swap: Option<(usize, Duplex)>,
     shard_swap: Option<(usize, Duplex)>,
     stats: RecoveryStats,
+    blobs: Vec<TraceBlob>,
 }
 
 /// Execute a [`ChaosPlan`] against live victims. Runs on its own
@@ -718,15 +779,24 @@ fn supervise(
     shard_victim: Option<(Child, Vec<String>)>,
     worker_cells: Vec<AddrCell>,
     mut worker_controls: Vec<Duplex>,
+    epoch_clock: Clock,
+    traced: bool,
 ) -> io::Result<Supervision> {
     let begun = Instant::now();
     let mut sup = Supervision::default();
+    // supervisor thread = coordinator pid 0, tid 1 (sources are 10+s)
+    let mut obs_buf = if traced {
+        TraceBuf::active(0, 1, ClockDomain::Wall)
+    } else {
+        TraceBuf::disabled()
+    };
 
     if let Some((mut child, respawn_args)) = worker_victim {
         // cooperative crash: the victim exits at a flush boundary on
         // its own schedule — just reap it
         let _ = child.wait();
         let clock = Instant::now();
+        obs_buf.instant("kill_worker", epoch_clock.now_ns());
         sup.stats.worker_restarts += 1;
         sup.children.push(spawn_child(&bin, "__worker", &respawn_args)?);
         let mut conn = listener.accept()?;
@@ -744,6 +814,7 @@ fn supervise(
                 worker_controls[index] = fresh;
             }
         }
+        obs_buf.instant("worker_respawned", epoch_clock.now_ns());
         sup.stats.recovery_wall_ns += clock.elapsed().as_nanos() as u64;
         sup.worker_swap = Some((index, conn));
     }
@@ -756,6 +827,7 @@ fn supervise(
         let _ = child.kill();
         let _ = child.wait();
         let clock = Instant::now();
+        obs_buf.instant("kill_shard", epoch_clock.now_ns());
         sup.stats.shard_restarts += 1;
         sup.children.push(spawn_child(&bin, "__shard", &respawn_args)?);
         let mut conn = listener.accept()?;
@@ -768,10 +840,14 @@ fn supervise(
         for wc in worker_controls.iter_mut() {
             let _ = send_hello(wc, 2, index, &addr);
         }
+        obs_buf.instant("shard_respawned", epoch_clock.now_ns());
         sup.stats.recovery_wall_ns += clock.elapsed().as_nanos() as u64;
         sup.shard_swap = Some((index, conn));
     }
 
+    if obs_buf.is_active() {
+        sup.blobs.push(obs_buf.to_blob());
+    }
     Ok(sup)
 }
 
@@ -806,6 +882,10 @@ pub fn run_multiprocess(
 
     let epoch = Clock::now_unix_ns();
     let clock = Clock::unix(epoch);
+    // one flag decides tracing for the whole fabric: children inherit
+    // it via `--trace 1` and stamp against the shared epoch clock, so
+    // the merged timeline is one aligned wall-clock domain
+    let traced = obs::enabled();
     let (control_listener, control_addr) = socket::listen(kind, "ctl")?;
 
     // chaos wiring: victim indices are fixed (worker 0 / shard 0) so
@@ -842,6 +922,10 @@ pub fn run_multiprocess(
             "--epoch".into(),
             epoch.to_string(),
         ];
+        if traced {
+            args.push("--trace".into());
+            args.push("1".into());
+        }
         if let Some(path) = snap_paths.get(i) {
             args.push("--snapshot-every".into());
             args.push(CHAOS_SNAPSHOT_EVERY.to_string());
@@ -894,6 +978,10 @@ pub fn run_multiprocess(
             "--shards".into(),
             shard_addrs.join(","),
         ];
+        if traced {
+            args.push("--trace".into());
+            args.push("1".into());
+        }
         if recover {
             args.push("--recover".into());
             args.push("1".into());
@@ -959,6 +1047,8 @@ pub fn run_multiprocess(
                 shard_victim,
                 cells,
                 worker_controls,
+                clock,
+                traced,
             )
         }))
     } else {
@@ -990,6 +1080,13 @@ pub fn run_multiprocess(
         let workers_list: Vec<usize> = (0..n_workers).collect();
         let gap = opts.interarrival_ns * n_sources as u64;
         source_handles.push(thread::spawn(move || {
+            // coordinator pid 0; source tids 10+s match the in-process
+            // engine's thread-id scheme
+            let mut obs_buf = if traced {
+                TraceBuf::active(0, 10 + s as u32, ClockDomain::Wall)
+            } else {
+                TraceBuf::disabled()
+            };
             rt::source_loop(
                 s,
                 n_sources,
@@ -1001,11 +1098,18 @@ pub fn run_multiprocess(
                 &per_tuple,
                 &workers_list,
                 txs,
+                &mut obs_buf,
             );
+            obs_buf
         }));
     }
+    let mut trace_blobs: Vec<TraceBlob> = Vec::new();
+    let mut samples: Vec<Sample> = Vec::new();
     for h in source_handles {
-        h.join().expect("source thread panicked");
+        let obs_buf = h.join().expect("source thread panicked");
+        if obs_buf.is_active() {
+            trace_blobs.push(obs_buf.to_blob());
+        }
     }
 
     // 5. the supervisor has finished its plan by now (kills land
@@ -1021,6 +1125,7 @@ pub fn run_multiprocess(
     if let Some((s, conn)) = sup.shard_swap.take() {
         shard_conns[s] = Some(conn);
     }
+    trace_blobs.append(&mut sup.blobs);
 
     // 6. harvest: workers finish once the sources close, shards once
     // the workers drop their flush streams — read in causal order
@@ -1040,6 +1145,8 @@ pub fn run_multiprocess(
         states.push(done.state_len);
         wire.absorb(&done.wire);
         recovery.absorb(&done.recovery);
+        trace_blobs.extend(done.trace);
+        samples.extend(done.samples);
     }
     let mut shard_outs = Vec::with_capacity(n_shards);
     for (s, conn) in shard_conns.iter_mut().enumerate() {
@@ -1048,6 +1155,8 @@ pub fn run_multiprocess(
             .ok_or_else(|| proto_err(format!("shard {s} never said hello")))?;
         let done = get_shard_done(&read_done(conn)?).map_err(wire_io)?;
         wire.absorb(&done.wire);
+        trace_blobs.extend(done.trace);
+        samples.extend(done.samples);
         shard_outs.push(rt::ShardOutput {
             out: done.out,
             sketch: done.sketch,
@@ -1099,6 +1208,8 @@ pub fn run_multiprocess(
         window_stats: assembled.window_stats,
         wire,
         recovery,
+        trace_blobs,
+        samples,
     })
 }
 
@@ -1163,12 +1274,18 @@ mod tests {
             recovery_wall_ns: 5_000_000,
             ..Default::default()
         };
+        let mut obs_buf = TraceBuf::active(100, 100, ClockDomain::Wall);
+        obs_buf.span_seq("flush_send", 1_000, 2_000, 7);
+        let blob = obs_buf.to_blob();
+        let sample = Sample { src: 100, ts_ns: 5_000, tuples: 42, ..Sample::default() };
         let done = WorkerDone {
             latency: lat.clone(),
             count: 1234,
             state_len: 99,
             wire: wire_stats,
             recovery: recovery.clone(),
+            trace: vec![blob.clone()],
+            samples: vec![sample],
         };
         let mut payload = Vec::new();
         put_worker_done(&done, &mut payload);
@@ -1181,6 +1298,11 @@ mod tests {
         assert_eq!(back.recovery.replayed_batches, 3);
         assert_eq!(back.recovery.replayed_tuples, 41);
         assert_eq!(back.recovery.recovery_wall_ns, 5_000_000);
+        assert_eq!(back.trace, vec![blob]);
+        assert_eq!(back.samples.len(), 1);
+        assert_eq!(back.samples[0].src, 100);
+        assert_eq!(back.samples[0].ts_ns, 5_000);
+        assert_eq!(back.samples[0].tuples, 42);
 
         let mut sketch = TopKSketch::new(8);
         sketch.absorb(5, 50);
@@ -1215,6 +1337,8 @@ mod tests {
             absorbed: vec![70, 0, 2],
             recovery,
             wire: WireStats::default(),
+            trace: Vec::new(),
+            samples: Vec::new(),
         };
         let mut payload = Vec::new();
         put_shard_done(&done, &mut payload);
@@ -1230,6 +1354,8 @@ mod tests {
         assert_eq!(back.absorbed, vec![70, 0, 2]);
         assert_eq!(back.recovery.deduped_batches, 2);
         assert_eq!(back.recovery.worker_restarts, 1);
+        assert!(back.trace.is_empty());
+        assert!(back.samples.is_empty());
 
         // corrupting the payload surfaces as an error, not a panic
         assert!(get_shard_done(&payload[..payload.len() - 3]).is_err());

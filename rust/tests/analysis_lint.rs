@@ -18,12 +18,12 @@ fn repo_path(rel: &str) -> PathBuf {
 #[test]
 fn seeded_regressions_are_flagged() {
     let report = lint_tree(&repo_path("rust/tests/fixtures/lint")).expect("scan fixtures");
-    assert_eq!(report.files_scanned, 3, "fixture set changed without updating this test");
+    assert_eq!(report.files_scanned, 4, "fixture set changed without updating this test");
     assert_eq!(report.suppressions, 0);
     assert_eq!(
         report.findings.len(),
-        3,
-        "expected exactly the three seeded findings, got: {:#?}",
+        4,
+        "expected exactly the four seeded findings, got: {:#?}",
         report.findings
     );
     // findings are sorted by (file, line, rule)
@@ -32,12 +32,17 @@ fn seeded_regressions_are_flagged() {
     assert_eq!(flush.file, "aggregate/bad_flush.rs");
     assert_eq!(flush.line, 16);
     assert!(flush.snippet.contains("drain"), "{flush:?}");
-    let credit = &report.findings[1];
+    let obs = &report.findings[1];
+    assert_eq!(obs.rule, "obs-clock");
+    assert_eq!(obs.file, "obs/bad_instant.rs");
+    assert_eq!(obs.line, 13);
+    assert!(obs.snippet.contains("Instant::now"), "{obs:?}");
+    let credit = &report.findings[2];
     assert_eq!(credit.rule, "relaxed-credit-atomic");
     assert_eq!(credit.file, "transport/bad_credit.rs");
     assert_eq!(credit.line, 15);
     assert!(credit.snippet.contains("Ordering::Relaxed"), "{credit:?}");
-    let seq = &report.findings[2];
+    let seq = &report.findings[3];
     assert_eq!(seq.rule, "frame-exhaustive");
     assert_eq!(seq.file, "transport/bad_flush_seq.rs");
     assert_eq!(seq.line, 11);
@@ -72,8 +77,9 @@ fn real_tree_scans_clean() {
 fn json_report_round_trips_the_counts() {
     let report = lint_tree(&repo_path("rust/tests/fixtures/lint")).expect("scan fixtures");
     let json = report.to_json();
-    assert!(json.contains("\"files_scanned\":3"), "{json}");
+    assert!(json.contains("\"files_scanned\":4"), "{json}");
     assert!(json.contains("\"rule\":\"unsorted-map-iteration\""), "{json}");
+    assert!(json.contains("\"rule\":\"obs-clock\""), "{json}");
     assert!(json.contains("\"rule\":\"relaxed-credit-atomic\""), "{json}");
     assert!(json.contains("\"rule\":\"frame-exhaustive\""), "{json}");
 }

@@ -1,0 +1,14 @@
+//! Seeded regression for `fish lint`: a raw `Instant::now()` inside
+//! the tracing layer. The recorder is clock-agnostic by contract —
+//! timestamps are passed in by the engines (virtual ticks in sim,
+//! `transport::Clock` epoch ns in rt/deploy); a hidden clock read here
+//! breaks sim trace determinism and cross-process timeline alignment.
+//! This file is a lint fixture, never compiled; the self-test in
+//! `rust/tests/analysis_lint.rs` asserts the engine flags line 13.
+
+use std::time::Instant;
+
+pub fn stamp_event(buf: &mut Vec<(Instant, &'static str)>, name: &'static str) {
+    // self-stamping instead of taking `ts_ns: u64` from the caller
+    buf.push((Instant::now(), name));
+}

@@ -1,0 +1,127 @@
+//! Trace-determinism oracle for the `obs` subsystem (ISSUE 9).
+//!
+//! The simulator's timeline is *virtual-time*: every span and instant
+//! is stamped from the discrete-event clock, so two runs of the same
+//! config must render byte-identical Chrome-trace JSON — across shard
+//! counts, and even under scripted chaos (`FaultPoint` kills). The
+//! tests here are the repo-side counterpart of the CI lane that diffs
+//! `fish sim --trace-out` outputs (`scripts/check_trace.py` validates
+//! the schema; this file pins the semantics).
+
+use fish::config::Config;
+use fish::coordinator::{make_scheme, Grouper, SchemeKind};
+use fish::engine::{FaultPoint, SimResult, Simulator, Topology};
+use fish::obs::{chrome_trace_json, sample};
+
+/// One windowed, traced sim run: PKG over 8 workers, 2ms panes over
+/// 15ms of virtual time (mirrors the chaos oracle in `engine::sim`).
+fn traced_run(agg_shards: usize, faults: Vec<FaultPoint>, snapshot_every: u64) -> SimResult {
+    let mut cfg = Config::default();
+    cfg.scheme = SchemeKind::Pkg;
+    cfg.workers = 8;
+    cfg.tuples = 30_000;
+    cfg.sources = 2;
+    cfg.interarrival_ns = 500;
+    let topology = Topology::from_config(&cfg);
+    let sources: Vec<Box<dyn Grouper>> =
+        (0..cfg.sources).map(|s| make_scheme(&cfg, s)).collect();
+    let mut sim = Simulator::new(topology, sources, cfg.interarrival_ns)
+        .with_agg_shards(agg_shards)
+        .with_agg_window(2_000_000)
+        .with_faults(faults)
+        .with_snapshot_every(snapshot_every)
+        .with_trace(true);
+    let mut gen = fish::workload::by_name("zf", cfg.tuples, 1.5, cfg.seed);
+    sim.run(gen.as_mut())
+}
+
+#[test]
+fn sim_trace_is_byte_identical_across_runs() {
+    for shards in [1usize, 2] {
+        let a = traced_run(shards, Vec::new(), 0);
+        let b = traced_run(shards, Vec::new(), 0);
+        let (ja, jb) = (chrome_trace_json(&a.trace_blobs), chrome_trace_json(&b.trace_blobs));
+        assert_eq!(ja, jb, "virtual-time trace must be byte-identical (shards={shards})");
+        assert!(ja.starts_with("{\"traceEvents\":[\n"), "Chrome-trace shape");
+        // both timelines present: main loop (tid 0) and stage two (tid 1)
+        assert!(a.trace_blobs.iter().any(|b| b.tid == 0), "main-loop blob missing");
+        assert!(a.trace_blobs.iter().any(|b| b.tid == 1), "stage-two blob missing");
+        for name in ["route_batch", "worker_absorb", "flush_send", "merge_absorb", "gather"] {
+            assert!(ja.contains(&format!("\"name\":\"{name}\"")), "missing event {name}");
+        }
+        // telemetry sampled on the virtual grid is deterministic too
+        assert!(!a.samples.is_empty(), "sampler never fired");
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(sample::jsonl(&a.samples), sample::jsonl(&b.samples));
+    }
+}
+
+#[test]
+fn chaos_trace_is_byte_identical_and_records_recovery() {
+    let faults = || {
+        vec![
+            FaultPoint::KillWorker { worker: 2, at_tuple: 1_000 },
+            FaultPoint::KillShard { shard: 1, at_flush: 3 },
+            FaultPoint::KillShard { shard: 0, at_flush: 5 },
+        ]
+    };
+    let a = traced_run(3, faults(), 4);
+    let b = traced_run(3, faults(), 4);
+    let (ja, jb) = (chrome_trace_json(&a.trace_blobs), chrome_trace_json(&b.trace_blobs));
+    assert_eq!(ja, jb, "chaos trace must still be byte-identical");
+    // every recovery event class shows up on the timeline
+    for name in ["kill_worker", "replay_tuples", "kill_shard", "snapshot", "restore"] {
+        assert!(ja.contains(&format!("\"name\":\"{name}\"")), "missing recovery event {name}");
+    }
+}
+
+#[test]
+fn flush_chain_is_complete() {
+    // causal chain keyed by (worker, shard, seq): every flush_send must
+    // land as exactly one merge_absorb — or flush_dedup under chaos
+    let r = traced_run(2, Vec::new(), 0);
+    let mut sent: Vec<u64> = Vec::new();
+    let mut landed: Vec<u64> = Vec::new();
+    for blob in &r.trace_blobs {
+        for e in &blob.events {
+            match e.name.as_str() {
+                "flush_send" => sent.push(e.seq),
+                "merge_absorb" | "flush_dedup" => landed.push(e.seq),
+                _ => {}
+            }
+        }
+    }
+    assert!(!sent.is_empty(), "no flush_send events recorded");
+    sent.sort_unstable();
+    landed.sort_unstable();
+    assert_eq!(sent, landed, "flush_send chain ids must pair with merge_absorb/flush_dedup");
+    sent.dedup();
+    assert_eq!(sent.len(), landed.len(), "chain ids must be unique per (worker, shard, seq)");
+}
+
+#[test]
+fn tracing_never_changes_results_and_is_off_by_default() {
+    let traced = traced_run(2, Vec::new(), 0);
+    let mut cfg = Config::default();
+    cfg.scheme = SchemeKind::Pkg;
+    cfg.workers = 8;
+    cfg.tuples = 30_000;
+    cfg.sources = 2;
+    cfg.interarrival_ns = 500;
+    let topology = Topology::from_config(&cfg);
+    let sources: Vec<Box<dyn Grouper>> =
+        (0..cfg.sources).map(|s| make_scheme(&cfg, s)).collect();
+    let mut sim = Simulator::new(topology, sources, cfg.interarrival_ns)
+        .with_agg_shards(2)
+        .with_agg_window(2_000_000);
+    let mut gen = fish::workload::by_name("zf", cfg.tuples, 1.5, cfg.seed);
+    let plain = sim.run(gen.as_mut());
+
+    assert_eq!(traced.merged_counts, plain.merged_counts);
+    assert_eq!(traced.worker_counts, plain.worker_counts);
+    assert_eq!(traced.makespan, plain.makespan);
+    assert_eq!(traced.windows.len(), plain.windows.len());
+    // zero-cost-when-disabled contract: a default run records nothing
+    assert!(plain.trace_blobs.is_empty());
+    assert!(plain.samples.is_empty());
+}

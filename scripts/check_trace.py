@@ -1,0 +1,244 @@
+#!/usr/bin/env python3
+"""Validate a merged Chrome-trace timeline (`fish sim/deploy --trace-out`).
+
+Usage:
+    check_trace.py TRACE_JSON [--chain]
+        [--expect-workers N] [--expect-shards N]
+        [--metrics METRICS_JSONL]
+
+Structural checks (always on):
+  * the file is a Chrome-trace object (`traceEvents` list, non-empty);
+  * every event's phase is one of M (metadata), X (complete span),
+    i (instant), C (counter);
+  * spans have a non-negative `dur`, instants carry `"s":"t"`,
+    counters carry an integer `args.v`;
+  * every (pid, tid) lane's timestamps are monotonically
+    non-decreasing in file order — the exporter sorts per-thread
+    events, so a regression here means a clock-domain mix-up;
+  * every pid that emits events also emits exactly one `process_name`
+    metadata line, and all events in one process agree on its clock
+    label (virtual vs wall — mixing domains in a pid would render as
+    nonsense in Perfetto).
+
+With --expect-workers / --expect-shards, the merged timeline must
+contain events from the coordinator (pid 0), from every worker child
+(pid 100+i) and every shard child (pid 200+i) — the cross-process
+export actually shipped each child's buffer home at Done time.
+
+With --chain, the flush causal chain must be complete: the multiset of
+`seq` keys on `flush_send` spans equals the multiset on
+`merge_absorb`/`flush_dedup` events, and each key appears exactly once
+on each side. Only sound on fault-free runs — chaos replay legitimately
+dedups — so the CI chaos lane omits it.
+
+With --metrics, the telemetry JSONL next to the trace is also checked:
+every line parses, carries the fixed key set, and rows are sorted by
+(ts_ns, src).
+
+Exit status: 0 = valid, 1 = validation failure, 2 = bad input.
+"""
+
+import argparse
+import json
+import sys
+
+PHASES = {"M", "X", "i", "C"}
+METRIC_KEYS = [
+    "src", "ts_ns", "tuples", "wire_bytes", "queue_depth", "open_panes",
+    "open_entries", "absorbed", "imbalance_x1000", "replay_backlog",
+]
+
+
+def load_trace(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    events = doc.get("traceEvents") if isinstance(doc, dict) else None
+    if not isinstance(events, list) or not events:
+        print(f"error: {path} has no traceEvents[]", file=sys.stderr)
+        sys.exit(2)
+    return events
+
+
+def check_events(events, failures):
+    """Per-event shape + per-lane monotonicity + metadata coverage."""
+    last_ts = {}          # (pid, tid) -> last seen ts
+    event_pids = set()    # pids with at least one non-metadata event
+    named = {}            # pid -> count of process_name metadata lines
+    clocks = {}           # pid -> clock label from metadata
+    spans = instants = counters = 0
+    for i, e in enumerate(events):
+        ph = e.get("ph")
+        if ph not in PHASES:
+            failures.append(f"event {i}: unknown phase {ph!r}")
+            continue
+        pid, tid = e.get("pid"), e.get("tid")
+        if not isinstance(pid, int) or not isinstance(tid, int):
+            failures.append(f"event {i}: non-integer pid/tid ({pid!r}, {tid!r})")
+            continue
+        if ph == "M":
+            if e.get("name") == "process_name":
+                named[pid] = named.get(pid, 0) + 1
+                args = e.get("args") or {}
+                if not args.get("name"):
+                    failures.append(f"event {i}: process_name for pid {pid} "
+                                    "has no args.name")
+                clocks[pid] = args.get("clock")
+            continue
+        event_pids.add(pid)
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            failures.append(f"event {i}: bad ts {ts!r}")
+            continue
+        lane = (pid, tid)
+        if ts < last_ts.get(lane, float("-inf")):
+            failures.append(f"event {i}: ts {ts} regresses on lane "
+                            f"pid={pid} tid={tid} (last {last_ts[lane]})")
+        last_ts[lane] = ts
+        if ph == "X":
+            spans += 1
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                failures.append(f"event {i}: span {e.get('name')!r} has "
+                                f"bad dur {dur!r}")
+        elif ph == "i":
+            instants += 1
+            if e.get("s") != "t":
+                failures.append(f"event {i}: instant {e.get('name')!r} "
+                                f"missing thread scope (s={e.get('s')!r})")
+        elif ph == "C":
+            counters += 1
+            v = (e.get("args") or {}).get("v")
+            if not isinstance(v, int):
+                failures.append(f"event {i}: counter {e.get('name')!r} has "
+                                f"non-integer args.v {v!r}")
+
+    for pid in sorted(event_pids):
+        n = named.get(pid, 0)
+        if n != 1:
+            failures.append(f"pid {pid}: {n} process_name metadata lines "
+                            "(want exactly 1)")
+        elif not clocks.get(pid):
+            failures.append(f"pid {pid}: process_name carries no clock label")
+    for pid in sorted(named):
+        if pid not in event_pids:
+            failures.append(f"pid {pid}: metadata but no events")
+    return event_pids, len(last_ts), spans, instants, counters
+
+
+def check_processes(event_pids, workers, shards, failures):
+    """Coordinator + every expected child contributed to the merge."""
+    if 0 not in event_pids:
+        failures.append("coordinator (pid 0) absent from the merged timeline")
+    for i in range(workers):
+        if 100 + i not in event_pids:
+            failures.append(f"worker {i} (pid {100 + i}) absent — "
+                            "its Done payload never shipped a trace blob?")
+    for i in range(shards):
+        if 200 + i not in event_pids:
+            failures.append(f"shard {i} (pid {200 + i}) absent — "
+                            "its Done payload never shipped a trace blob?")
+
+
+def check_chain(events, failures):
+    """flush_send seq keys must pair 1:1 with merge_absorb/flush_dedup."""
+    sent, landed = {}, {}
+    for e in events:
+        seq = (e.get("args") or {}).get("seq")
+        if seq is None:
+            continue
+        name = e.get("name")
+        if name == "flush_send":
+            sent[seq] = sent.get(seq, 0) + 1
+        elif name in ("merge_absorb", "flush_dedup"):
+            landed[seq] = landed.get(seq, 0) + 1
+    if not sent:
+        failures.append("--chain: no flush_send events with seq keys")
+        return 0
+    for seq, n in sorted(sent.items()):
+        if n != 1:
+            failures.append(f"--chain: flush seq {seq} sent {n} times")
+        got = landed.pop(seq, 0)
+        if got != 1:
+            failures.append(f"--chain: flush seq {seq} sent once, "
+                            f"landed {got} times")
+    for seq, n in sorted(landed.items()):
+        failures.append(f"--chain: seq {seq} landed {n} times but was "
+                        "never sent")
+    return len(sent)
+
+
+def check_metrics(path, failures):
+    """Telemetry JSONL: fixed key set, (ts_ns, src)-sorted rows."""
+    try:
+        with open(path) as f:
+            lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    except OSError as e:
+        print(f"error: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    if not lines:
+        failures.append(f"--metrics: {path} is empty — sampler never fired")
+        return 0
+    prev = None
+    for i, ln in enumerate(lines):
+        try:
+            row = json.loads(ln)
+        except ValueError as e:
+            failures.append(f"--metrics: line {i + 1} is not JSON: {e}")
+            continue
+        missing = [k for k in METRIC_KEYS if not isinstance(row.get(k), int)]
+        if missing:
+            failures.append(f"--metrics: line {i + 1} missing integer "
+                            f"key(s) {missing}")
+            continue
+        key = (row["ts_ns"], row["src"])
+        if prev is not None and key < prev:
+            failures.append(f"--metrics: line {i + 1} out of (ts_ns, src) "
+                            f"order: {key} after {prev}")
+        prev = key
+    return len(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace")
+    ap.add_argument("--chain", action="store_true",
+                    help="require a complete flush_send ↔ merge_absorb "
+                         "chain (fault-free runs only)")
+    ap.add_argument("--expect-workers", type=int, default=0,
+                    help="require events from worker pids 100..100+N-1")
+    ap.add_argument("--expect-shards", type=int, default=0,
+                    help="require events from shard pids 200..200+N-1")
+    ap.add_argument("--metrics", metavar="JSONL",
+                    help="also validate the --metrics-out JSONL")
+    args = ap.parse_args()
+
+    events = load_trace(args.trace)
+    failures = []
+    event_pids, lanes, spans, instants, counters = check_events(events, failures)
+    if args.expect_workers or args.expect_shards:
+        check_processes(event_pids, args.expect_workers, args.expect_shards,
+                        failures)
+    chained = check_chain(events, failures) if args.chain else 0
+    metric_rows = check_metrics(args.metrics, failures) if args.metrics else 0
+
+    if failures:
+        print(f"trace gate FAILED for {args.trace}:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    parts = [f"{len(events)} events ({spans} spans, {instants} instants, "
+             f"{counters} counter samples) across {len(event_pids)} "
+             f"process(es), {lanes} thread lane(s)"]
+    if args.chain:
+        parts.append(f"{chained} flush chains complete")
+    if args.metrics:
+        parts.append(f"{metric_rows} telemetry rows")
+    print(f"trace gate ok: {', '.join(parts)}")
+
+
+if __name__ == "__main__":
+    main()
