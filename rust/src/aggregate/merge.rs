@@ -166,6 +166,44 @@ impl<C: Combiner> MergeStage<C> {
     }
 }
 
+/// Where one arriving sequence number falls relative to a stream's
+/// `expected` cursor: the pure cursor-advance rule behind
+/// [`FlushSequencer::offer`], shared verbatim with the recovery model
+/// in [`crate::analysis::recovery`] so code and model cannot drift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqClass {
+    /// `seq < expected`: already accepted once — a replay, drop it.
+    Replay,
+    /// `seq > expected`: ahead of a sequence gap — park it.
+    Ahead,
+    /// `seq == expected`: next in sequence — accept and advance.
+    Next,
+}
+
+/// Classify `seq` against a stream's `expected` cursor.
+#[inline]
+pub fn classify_seq(expected: u64, seq: u64) -> SeqClass {
+    if seq < expected {
+        SeqClass::Replay
+    } else if seq > expected {
+        SeqClass::Ahead
+    } else {
+        SeqClass::Next
+    }
+}
+
+/// The shard's `Resume` answer for `worker`: the first sequence number
+/// it has not absorbed, from the restored per-worker cursor vector. A
+/// worker the vector does not cover (topology grew since the snapshot)
+/// replays from 0 — nothing of its stream was ever absorbed.
+///
+/// Shared verbatim by the socket `Resume` handshake, the simulator's
+/// replay filter, and [`crate::analysis::recovery`].
+#[inline]
+pub fn resume_cursor(expected: &[u64], worker: usize) -> u64 {
+    expected.get(worker).copied().unwrap_or(0)
+}
+
 /// What [`FlushSequencer::offer`] decided about one flush batch.
 #[derive(Debug, PartialEq, Eq)]
 pub enum SeqDecision<T> {
@@ -193,6 +231,12 @@ pub enum SeqDecision<T> {
 /// and `seq < expected` is dropped as a replay. Absorb-side state plus
 /// the `expected` vector are snapshotted together, so a restored shard
 /// answers `Resume` with exactly the first seq it has not absorbed.
+///
+/// The derives matter beyond convenience: the recovery model checker
+/// ([`crate::analysis::recovery`]) embeds `FlushSequencer` directly
+/// inside its hashed protocol states, so the *production* cursor logic
+/// is what gets exhaustively explored.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct FlushSequencer<T> {
     expected: Vec<u64>,
     ahead: Vec<BTreeMap<u64, T>>,
@@ -252,23 +296,54 @@ impl<T> FlushSequencer<T> {
 
     /// Classify one arriving batch from `worker` carrying `seq`.
     pub fn offer(&mut self, worker: usize, seq: u64, msg: T) -> SeqDecision<T> {
-        let exp = self.expected[worker];
-        if seq < exp {
-            return SeqDecision::Replayed;
+        match classify_seq(self.expected[worker], seq) {
+            SeqClass::Replay => SeqDecision::Replayed,
+            SeqClass::Ahead => {
+                // a replayed duplicate of an already-parked seq just
+                // overwrites its twin — same payload, absorbed once
+                // either way
+                self.ahead[worker].insert(seq, msg);
+                SeqDecision::Buffered
+            }
+            SeqClass::Next => {
+                self.expected[worker] = seq + 1;
+                let mut out = vec![msg];
+                while let Some(next) = self.ahead[worker].remove(&self.expected[worker]) {
+                    self.expected[worker] += 1;
+                    out.push(next);
+                }
+                SeqDecision::Accept(out)
+            }
         }
-        if seq > exp {
-            // a replayed duplicate of an already-parked seq just
-            // overwrites its twin — same payload, absorbed once either way
-            self.ahead[worker].insert(seq, msg);
-            return SeqDecision::Buffered;
+    }
+
+    /// Rebuild a sequencer from a snapshot's cursor vector and re-offer
+    /// the batches the previous incarnation had parked ahead of a gap,
+    /// in ascending `(worker, seq)` order (the order [`Self::parked`]
+    /// serializes). Returns the restored sequencer plus every batch the
+    /// re-offer accepted, in absorb order: a parked batch the restored
+    /// cursors no longer block absorbs immediately, a stale one drops
+    /// silently, and entries for workers outside the cursor vector
+    /// (topology shrank) are skipped.
+    ///
+    /// This is the shard-restore rule — shared verbatim by the rt shard
+    /// loop, the simulator's `kill_shard`, and the recovery model.
+    pub fn restore_replaying(
+        expected: Vec<u64>,
+        parked: impl IntoIterator<Item = (usize, u64, T)>,
+    ) -> (Self, Vec<T>) {
+        let n = expected.len();
+        let mut seq = Self::restore(expected);
+        let mut accepted = Vec::new();
+        for (worker, s, msg) in parked {
+            if worker >= n {
+                continue;
+            }
+            if let SeqDecision::Accept(batch) = seq.offer(worker, s, msg) {
+                accepted.extend(batch);
+            }
         }
-        self.expected[worker] = exp + 1;
-        let mut out = vec![msg];
-        while let Some(next) = self.ahead[worker].remove(&self.expected[worker]) {
-            self.expected[worker] += 1;
-            out.push(next);
-        }
-        SeqDecision::Accept(out)
+        (seq, accepted)
     }
 }
 
@@ -429,6 +504,41 @@ mod tests {
         assert_eq!(s.offer(1, 1, 91), SeqDecision::Buffered);
         assert_eq!(s.drain_buffered(), vec![(1, 1, 91), (1, 2, 92)]);
         assert_eq!(s.buffered(), 0);
+    }
+
+    #[test]
+    fn classify_seq_is_the_cursor_advance_rule() {
+        assert_eq!(classify_seq(3, 2), SeqClass::Replay);
+        assert_eq!(classify_seq(3, 3), SeqClass::Next);
+        assert_eq!(classify_seq(3, 4), SeqClass::Ahead);
+        assert_eq!(classify_seq(0, 0), SeqClass::Next);
+    }
+
+    #[test]
+    fn resume_cursor_answers_from_the_vector_and_zero_beyond_it() {
+        let expected = vec![5u64, 0, 2];
+        assert_eq!(resume_cursor(&expected, 0), 5);
+        assert_eq!(resume_cursor(&expected, 1), 0);
+        assert_eq!(resume_cursor(&expected, 2), 2);
+        // a worker the snapshot never saw replays from scratch
+        assert_eq!(resume_cursor(&expected, 3), 0);
+        assert_eq!(resume_cursor(&[], 0), 0);
+    }
+
+    #[test]
+    fn restore_replaying_reoffers_parked_batches() {
+        let parked = vec![
+            (0usize, 1u64, "stale"), // below the restored cursor: dropped
+            (0, 2, "next"),          // exactly the cursor: absorbs
+            (0, 4, "gap"),           // still ahead of a gap: re-parked
+            (1, 0, "w1"),            // other stream, next-in-seq
+            (5, 0, "oob"),           // worker outside the vector: skipped
+        ];
+        let (seq, accepted) = FlushSequencer::restore_replaying(vec![2, 0], parked);
+        assert_eq!(accepted, vec!["next", "w1"]);
+        assert_eq!(seq.expected_all(), &[3, 1]);
+        assert_eq!(seq.buffered(), 1);
+        assert_eq!(seq.parked(), vec![(0, 4, &"gap")]);
     }
 
     #[test]

@@ -47,7 +47,10 @@ pub mod shard;
 pub mod window;
 
 pub use combiner::{Combiner, Count, Sum, TopKSketch};
-pub use merge::{top_k, FlushSequencer, MergeStage, PartialAgg, SeqDecision};
+pub use merge::{
+    classify_seq, resume_cursor, top_k, FlushSequencer, MergeStage, PartialAgg, SeqClass,
+    SeqDecision,
+};
 pub use shard::{GatherResult, ShardRouter, ShardedMerge, TopKGather, DEFAULT_GATHER_CAPACITY};
 pub use window::{
     assemble_windows, next_boundary, sliding, window_of, MergeSnapshot, PaneState, WindowId,

@@ -373,6 +373,8 @@ impl<C: Combiner<Acc = u64> + Clone> WindowedMerge<C> {
                     self.stats.late_reopens += 1;
                 }
                 v.insert(WindowPane {
+                    // pane open happens once per window, not per batch —
+                    // the combiner clone is amortized. lint: alloc-ok
                     merge: MergeStage::new(self.combiner.clone()),
                     sketch: TopKSketch::new(self.sketch_capacity),
                 })

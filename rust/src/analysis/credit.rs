@@ -1,0 +1,305 @@
+//! The credit-based flow-control protocol as a [`Protocol`]
+//! implementation for the model checker in [`super::model`].
+//!
+//! The protocol under check (see `transport/socket.rs` and
+//! `docs/DETERMINISM.md`):
+//!
+//! * each sender starts with `window` credits and spends them on
+//!   fixed-size data chunks (a chunk is atomic — a sender with credit
+//!   left over but less than one chunk is *blocked*, exactly like the
+//!   real sender that must ship `opts.chunk` tuples per frame);
+//! * the receiver acks consumed tuples in quanta of
+//!   `window.max(2) / 2`, returning credit in whole quanta and holding
+//!   the sub-quantum remainder;
+//! * before the receiver would block waiting for data it **flushes all
+//!   owed credit**, remainder included. This rule makes the protocol
+//!   deadlock-free — quantized acks alone can strand up to
+//!   `quantum - 1` credits while the sender is blocked needing a full
+//!   chunk.
+//!
+//! Invariants checked on every reachable state:
+//!
+//! * `credit-overflow` — sender credit never exceeds the window;
+//! * `credit-conservation` — per stream, `sender credit + in-flight
+//!   data + receiver-owed + grants in flight == window` (no leak, no
+//!   double grant);
+//! * `fifo-delivery` — chunks arrive in sequence order per stream
+//!   (an out-of-order pop poisons the lane, which the invariant then
+//!   reports — delivery otherwise proceeds so credit conservation
+//!   stays observable).
+//!
+//! Deadlock freedom and liveness-to-quiescence come from the framework
+//! ([`Violation::Deadlock`] on stuck non-final states). [`CreditMutation`]
+//! deliberately breaks one rule at a time so `rust/tests/credit_model.rs`
+//! can prove the checker *detects* each violation class rather than
+//! vacuously passing.
+//!
+//! [`Violation::Deadlock`]: super::model::Violation::Deadlock
+
+use std::collections::VecDeque;
+
+use super::model::{
+    explore, CheckOptions, Counterexample, ModelStats, PropertyViolation, Protocol,
+};
+
+/// A bounded credit-protocol configuration to exhaustively check.
+#[derive(Debug, Clone)]
+pub struct CreditConfig {
+    /// Concurrent senders feeding one receiver (streams are
+    /// credit-independent; interleavings are shared).
+    pub n_senders: usize,
+    /// Credit window per stream (the receiver-side queue depth).
+    pub window: u32,
+    /// Tuples each sender must deliver for the run to terminate.
+    pub tuples_per_sender: u32,
+    /// Fixed data-chunk size (the final chunk may be smaller). Must be
+    /// ≤ `window` or even the honest protocol cannot make progress.
+    pub chunk: u32,
+    /// Protocol rule to deliberately break ([`CreditMutation::None`]
+    /// checks the honest protocol).
+    pub mutation: CreditMutation,
+}
+
+/// A deliberate protocol bug, used to prove the checker catches each
+/// violation class (mutation testing for the model itself).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CreditMutation {
+    /// The protocol as implemented.
+    None,
+    /// Receiver never flushes sub-quantum credit remainders before
+    /// blocking — the bug class the `flush_all_credits()` rule
+    /// prevents. Expected: deadlock.
+    SkipCreditFlush,
+    /// Receiver grants every ack twice. Expected: `credit-conservation`
+    /// (or `credit-overflow`) violation.
+    DoubleGrant,
+    /// Receiver drops one credit from every grant. Expected:
+    /// `credit-conservation` violation (accounting breaks low).
+    DropCredit,
+    /// Network delivers the newest in-flight chunk first. Expected:
+    /// `fifo-delivery` violation.
+    ReorderData,
+}
+
+/// Per-stream protocol state: small unsigned counters plus FIFO
+/// queues, so whole states hash cheaply.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct Lane {
+    /// Credits the sender may spend.
+    credit: u32,
+    /// Tuples the sender has not yet put on the wire.
+    to_send: u32,
+    /// In-flight data chunks: `(size, first_seq)`, FIFO.
+    channel: VecDeque<(u32, u32)>,
+    /// Next sequence number the receiver expects (== tuples delivered).
+    delivered: u32,
+    /// Tuples consumed but not yet acked (credit the receiver owes).
+    pending: u32,
+    /// Credit grants in flight back to the sender, FIFO.
+    grants: VecDeque<u32>,
+    /// `(expected_seq, got_seq)` of an out-of-order delivery observed
+    /// on this lane; `None` in every honest reachable state.
+    reorder_fault: Option<(u32, u32)>,
+}
+
+/// The credit protocol over a bounded config.
+pub struct CreditProtocol {
+    cfg: CreditConfig,
+    quantum: u32,
+}
+
+impl CreditProtocol {
+    /// Wrap `cfg`, validating the bounds that make exploration
+    /// meaningful.
+    pub fn new(cfg: CreditConfig) -> CreditProtocol {
+        assert!(cfg.n_senders > 0, "need at least one sender");
+        assert!(cfg.window > 0 && cfg.chunk > 0, "window and chunk must be positive");
+        assert!(cfg.chunk <= cfg.window, "chunk > window cannot make progress even unmutated");
+        let quantum = cfg.window.max(2) / 2;
+        CreditProtocol { cfg, quantum }
+    }
+
+    fn push_grant(&self, lane: &mut Lane, granted: u32) {
+        let granted = match self.cfg.mutation {
+            CreditMutation::DoubleGrant => granted * 2,
+            CreditMutation::DropCredit => granted.saturating_sub(1),
+            _ => granted,
+        };
+        if granted > 0 {
+            lane.grants.push_back(granted);
+        }
+    }
+}
+
+impl Protocol for CreditProtocol {
+    type State = Vec<Lane>;
+
+    fn name(&self) -> String {
+        let mut n = format!(
+            "credit n={} window={} tuples={} chunk={}",
+            self.cfg.n_senders, self.cfg.window, self.cfg.tuples_per_sender, self.cfg.chunk
+        );
+        if self.cfg.mutation != CreditMutation::None {
+            n.push_str(&format!(" mutation={:?}", self.cfg.mutation));
+        }
+        n
+    }
+
+    fn initial(&self) -> Vec<Lane> {
+        vec![
+            Lane {
+                credit: self.cfg.window,
+                to_send: self.cfg.tuples_per_sender,
+                channel: VecDeque::new(),
+                delivered: 0,
+                pending: 0,
+                grants: VecDeque::new(),
+                reorder_fault: None,
+            };
+            self.cfg.n_senders
+        ]
+    }
+
+    fn successors(&self, state: &Vec<Lane>, out: &mut Vec<(String, Vec<Lane>)>) {
+        for i in 0..state.len() {
+            let lane = &state[i];
+
+            // send: one fixed-size chunk, atomically, if credit covers it
+            if lane.to_send > 0 {
+                let size = self.cfg.chunk.min(lane.to_send);
+                if lane.credit >= size {
+                    let mut next = state.clone();
+                    let l = &mut next[i];
+                    let first_seq = self.cfg.tuples_per_sender - l.to_send;
+                    l.credit -= size;
+                    l.to_send -= size;
+                    l.channel.push_back((size, first_seq));
+                    out.push((format!("send {i}"), next));
+                }
+            }
+
+            // deliver: receiver consumes one in-flight chunk and acks
+            // in whole quanta, holding the remainder
+            if !lane.channel.is_empty() {
+                let mut next = state.clone();
+                let l = &mut next[i];
+                let (size, first_seq) =
+                    if self.cfg.mutation == CreditMutation::ReorderData && l.channel.len() > 1 {
+                        l.channel.pop_back().expect("checked non-empty")
+                    } else {
+                        l.channel.pop_front().expect("checked non-empty")
+                    };
+                if first_seq != l.delivered {
+                    l.reorder_fault = Some((l.delivered, first_seq));
+                }
+                l.delivered += size;
+                l.pending += size;
+                let quantized = (l.pending / self.quantum) * self.quantum;
+                if quantized > 0 {
+                    l.pending -= quantized;
+                    self.push_grant(&mut next[i], quantized);
+                }
+                out.push((format!("deliver {i}"), next));
+            }
+
+            // flush: receiver returns ALL owed credit (the
+            // before-blocking rule); removed under SkipCreditFlush
+            if lane.pending > 0 && self.cfg.mutation != CreditMutation::SkipCreditFlush {
+                let mut next = state.clone();
+                let owed = next[i].pending;
+                next[i].pending = 0;
+                self.push_grant(&mut next[i], owed);
+                out.push((format!("flush {i}"), next));
+            }
+
+            // grant arrival: a credit frame reaches the sender
+            if !lane.grants.is_empty() {
+                let mut next = state.clone();
+                let l = &mut next[i];
+                let g = l.grants.pop_front().expect("checked non-empty");
+                l.credit += g;
+                out.push((format!("grant {i}"), next));
+            }
+        }
+    }
+
+    fn invariants(&self, state: &Vec<Lane>) -> Result<(), PropertyViolation> {
+        for (i, lane) in state.iter().enumerate() {
+            if let Some((expected, got)) = lane.reorder_fault {
+                return Err(PropertyViolation {
+                    property: "fifo-delivery",
+                    detail: format!("stream {i}: expected seq {expected}, got {got}"),
+                });
+            }
+            if lane.credit > self.cfg.window {
+                return Err(PropertyViolation {
+                    property: "credit-overflow",
+                    detail: format!(
+                        "stream {i}: credit {} > window {}",
+                        lane.credit, self.cfg.window
+                    ),
+                });
+            }
+            let inflight: u32 = lane.channel.iter().map(|&(size, _)| size).sum();
+            let grants: u32 = lane.grants.iter().sum();
+            let accounted = lane.credit + inflight + lane.pending + grants;
+            if accounted != self.cfg.window {
+                return Err(PropertyViolation {
+                    property: "credit-conservation",
+                    detail: format!(
+                        "stream {i}: window {}, accounted {accounted}",
+                        self.cfg.window
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    fn is_final(&self, state: &Vec<Lane>) -> bool {
+        state.iter().all(|l| l.delivered == self.cfg.tuples_per_sender)
+    }
+}
+
+/// Exhaustively check one credit configuration. Deterministic: same
+/// config + options ⇒ same stats, byte-identical counterexample.
+pub fn check_credit(cfg: &CreditConfig, opts: &CheckOptions) -> Result<ModelStats, Counterexample> {
+    explore(&CreditProtocol::new(cfg.clone()), opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::model::Violation;
+
+    fn cfg(n: usize, window: u32, tuples: u32, chunk: u32, mutation: CreditMutation) -> CreditConfig {
+        CreditConfig { n_senders: n, window, tuples_per_sender: tuples, chunk, mutation }
+    }
+
+    #[test]
+    fn honest_single_stream_has_pinned_stats() {
+        let stats =
+            check_credit(&cfg(1, 2, 4, 1, CreditMutation::None), &CheckOptions::default())
+                .expect("honest run");
+        assert_eq!(stats, ModelStats { states: 22, transitions: 30, depth: 12, finals: 3 });
+    }
+
+    #[test]
+    fn honest_protocol_terminates() {
+        let opts = CheckOptions { check_termination: true, ..Default::default() };
+        check_credit(&cfg(1, 2, 4, 1, CreditMutation::None), &opts).expect("acyclic");
+        check_credit(&cfg(2, 3, 4, 2, CreditMutation::None), &opts).expect("acyclic");
+    }
+
+    #[test]
+    fn reorder_poisons_and_is_reported_with_the_delivering_edge() {
+        let err =
+            check_credit(&cfg(1, 4, 8, 2, CreditMutation::ReorderData), &CheckOptions::default())
+                .unwrap_err();
+        match &err.violation {
+            Violation::Property(p) => assert_eq!(p.property, "fifo-delivery"),
+            v => panic!("expected fifo violation, got {v:?}"),
+        }
+        assert_eq!(err.trace, vec!["send 0", "send 0", "deliver 0"]);
+    }
+}

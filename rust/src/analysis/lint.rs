@@ -12,13 +12,17 @@
 //! | `raw-clock`              | everywhere but the `Clock` home| `SystemTime::now()` bypassing the shared clock |
 //! | `frame-exhaustive`       | everywhere                     | wire-frame `match`es with a bare `_` arm that would swallow a new frame kind; `FlushMsg` literals that don't name their exactly-once `seq` explicitly |
 //! | `obs-clock`              | `obs/`                         | `Instant::now()`/`SystemTime::now()` inside the tracing layer — timestamps must be passed in from the engine clock (virtual ticks or `transport::Clock`), or traces lose cross-process alignment and sim determinism |
+//! | `hotpath-alloc`          | `coordinator/ aggregate/`      | allocation inside the per-batch hot functions (`route_batch`, the absorb family): `String` clones, `to_string()`/`to_owned()`, `format!`, fresh `Vec`/`HashMap` construction, `collect()` — at millions of tuples/sec allocator traffic dominates (the ROADMAP "allocation-free hot path" inventory) |
+//! | `snapshot-exhaustive`    | everywhere                     | `ShardSnapshot` construction or destructuring that hides fields behind `..` — a new piece of shard state must not silently skip serialization (the failure class the `FlushMsg` seq rule caught on the wire) |
 //!
-//! The only escape hatch is `// lint: sorted-ok` on (or immediately
-//! above) a flagged line of the map-iteration rule, for sites that
+//! Two rules have escape hatches, both comment markers on (or
+//! immediately above) the flagged line, and both counted and reported:
+//! `// lint: sorted-ok` waives a map-iteration finding at sites that
 //! sort the drained batch before it crosses a stage boundary or fold
-//! it through an order-independent operation. Every escape is counted
-//! and reported; the other rules have none — their findings are fixed,
-//! not waived.
+//! it through an order-independent operation; `// lint: alloc-ok`
+//! waives a hot-path allocation at sites that are genuinely amortized
+//! (e.g. a once-per-window pane open). The other rules have none —
+//! their findings are fixed, not waived.
 //!
 //! Test regions (`#[cfg(test)]` items), comments and string literals
 //! are ignored. The engine favours zero false positives on the idioms
@@ -42,8 +46,39 @@ const UNORDERED_METHODS: &[&str] = &["drain", "iter", "iter_mut", "keys", "value
 /// protocol for the relaxed-ordering rule.
 const CREDIT_WORDS: &[&str] = &["credit", "inflight", "watermark", "grant", "ack", "pending"];
 
-/// The escape-comment marker (map-iteration rule only).
+/// The escape-comment marker for the map-iteration rule.
 const ESCAPE_MARK: &str = "lint: sorted-ok";
+
+/// Directory components whose files carry the per-batch routing and
+/// absorb hot path for the allocation rule.
+const HOT_DIRS: &[&str] = &["coordinator", "aggregate"];
+
+/// Hot-path function names: the per-batch routing and absorb entry
+/// points that run once per batch (or once per tuple) at full rate.
+/// The rule scans only these function bodies — cold paths (setup,
+/// snapshot, report) allocate freely.
+const HOT_FNS: &[&str] = &["route_batch", "absorb", "absorb_batch", "absorb_on"];
+
+/// Allocation-site tokens flagged inside hot functions, with a short
+/// human label for the message.
+const ALLOC_TOKENS: &[(&str, &str)] = &[
+    (".to_string(", "String allocation"),
+    (".to_owned(", "String allocation"),
+    ("String::from(", "String allocation"),
+    ("format!(", "String allocation"),
+    (".clone()", "clone"),
+    ("Vec::new(", "fresh Vec"),
+    ("Vec::with_capacity(", "fresh Vec"),
+    ("vec![", "fresh Vec"),
+    ("HashMap::new(", "fresh map"),
+    ("HashMap::with_capacity(", "fresh map"),
+    ("HashSet::new(", "fresh set"),
+    ("BTreeMap::new(", "fresh map"),
+    (".collect(", "collecting allocation"),
+];
+
+/// The escape-comment marker for the hot-path allocation rule.
+const ALLOC_MARK: &str = "lint: alloc-ok";
 
 /// One rule violation at one source line.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -73,7 +108,9 @@ pub struct LintReport {
     pub findings: Vec<Finding>,
     /// `.rs` files scanned.
     pub files_scanned: usize,
-    /// Would-be map-iteration findings waived by `// lint: sorted-ok`.
+    /// Would-be findings waived by an escape marker (`// lint:
+    /// sorted-ok` on the map-iteration rule, `// lint: alloc-ok` on
+    /// the hot-path allocation rule).
     pub suppressions: usize,
 }
 
@@ -130,10 +167,15 @@ struct LineInfo {
 }
 
 /// Strip comments and string/char-literal contents from one line,
-/// tracking block-comment state across lines. Quotes are kept (so
-/// `"x"` becomes `""`), which preserves tokenization without letting
-/// literal contents trip pattern rules.
-fn strip_line(line: &str, in_block_comment: &mut bool) -> String {
+/// tracking block-comment AND string-literal state across lines.
+/// Quotes are kept (so `"x"` becomes `""`), which preserves
+/// tokenization without letting literal contents trip pattern rules.
+/// A string left open at end of line (the `"...\` multi-line-literal
+/// idiom) keeps stripping on the following lines until its closing
+/// quote — otherwise continuation lines would leak literal contents
+/// (and their braces) into the code stream, corrupting both token
+/// rules and the `#[cfg(test)]` brace balance.
+fn strip_line(line: &str, in_block_comment: &mut bool, in_string: &mut bool) -> String {
     let bytes: Vec<char> = line.chars().collect();
     let mut out = String::with_capacity(line.len());
     let mut i = 0;
@@ -142,6 +184,18 @@ fn strip_line(line: &str, in_block_comment: &mut bool) -> String {
             if bytes[i] == '*' && i + 1 < bytes.len() && bytes[i + 1] == '/' {
                 *in_block_comment = false;
                 i += 2;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        if *in_string {
+            if bytes[i] == '\\' {
+                i += 2;
+            } else if bytes[i] == '"' {
+                *in_string = false;
+                out.push('"');
+                i += 1;
             } else {
                 i += 1;
             }
@@ -156,17 +210,23 @@ fn strip_line(line: &str, in_block_comment: &mut bool) -> String {
             '"' => {
                 out.push('"');
                 i += 1;
+                let mut closed = false;
                 while i < bytes.len() {
                     if bytes[i] == '\\' {
                         i += 2;
                     } else if bytes[i] == '"' {
+                        closed = true;
                         break;
                     } else {
                         i += 1;
                     }
                 }
-                out.push('"');
-                i += 1; // past the closing quote (or EOL on unterminated)
+                if closed {
+                    out.push('"');
+                    i += 1;
+                } else {
+                    *in_string = true; // continues on the next line
+                }
             }
             '\'' => {
                 // char literal vs lifetime: a literal is 'x' or '\x';
@@ -200,11 +260,12 @@ fn strip_line(line: &str, in_block_comment: &mut bool) -> String {
 fn preprocess(text: &str) -> Vec<LineInfo> {
     let mut lines = Vec::new();
     let mut in_block_comment = false;
+    let mut in_string = false;
     let mut depth: i64 = 0;
     let mut pending_test = false;
     let mut test_until_depth: Option<i64> = None;
     for raw in text.lines() {
-        let code = strip_line(raw, &mut in_block_comment);
+        let code = strip_line(raw, &mut in_block_comment, &mut in_string);
         let is_test_attr = code.contains("#[cfg(test)]");
         if is_test_attr {
             pending_test = true;
@@ -333,11 +394,15 @@ fn for_iterates(code: &str, name: &str) -> bool {
     false
 }
 
-/// The map-iteration escape: marker on the flagged line or the one
-/// above (checked on raw text — the marker lives in a comment).
+/// Escape check: `mark` on the flagged line or the one above (checked
+/// on raw text — the marker lives in a comment).
+fn escaped_by(lines: &[LineInfo], idx: usize, mark: &str) -> bool {
+    lines[idx].raw.contains(mark) || (idx > 0 && lines[idx - 1].raw.contains(mark))
+}
+
+/// The map-iteration escape.
 fn escaped(lines: &[LineInfo], idx: usize) -> bool {
-    lines[idx].raw.contains(ESCAPE_MARK)
-        || (idx > 0 && lines[idx - 1].raw.contains(ESCAPE_MARK))
+    escaped_by(lines, idx, ESCAPE_MARK)
 }
 
 fn in_dirs(relpath: &str, dirs: &[&str]) -> bool {
@@ -672,6 +737,219 @@ fn rule_obs_clock(relpath: &str, lines: &[LineInfo]) -> Vec<Finding> {
     findings
 }
 
+/// True when `code` declares one of the hot-path functions: the
+/// `fn` keyword directly followed by a [`HOT_FNS`] name and then `(`
+/// or `<`. Call sites (`self.absorb(..)`) and longer identifiers
+/// (`absorb_flush`) don't match.
+fn hot_fn_decl(code: &str) -> bool {
+    for &name in HOT_FNS {
+        let mut from = 0;
+        while let Some(rel) = code[from..].find(name) {
+            let at = from + rel;
+            from = at + name.len();
+            let before_ok =
+                at == 0 || !is_ident_char(code[..at].chars().next_back().unwrap_or(' '));
+            let after = code[at + name.len()..].chars().next();
+            if !before_ok || !matches!(after, Some('(') | Some('<')) {
+                continue;
+            }
+            let head = code[..at].trim_end();
+            if head.ends_with("fn")
+                && !head[..head.len() - 2].chars().next_back().is_some_and(is_ident_char)
+            {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Mark the lines belonging to hot-function bodies, by the same
+/// brace-balance walk [`preprocess`] uses for `#[cfg(test)]` regions:
+/// a hot signature arms `pending`; its opening `{` starts the region,
+/// which ends when depth returns to the level before that brace. A
+/// bodyless trait declaration (`fn absorb(..);`) has nothing to scan
+/// and disarms.
+fn mark_hot_fn_regions(lines: &[LineInfo]) -> Vec<bool> {
+    let mut hot = vec![false; lines.len()];
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut until: Option<i64> = None;
+    for (idx, info) in lines.iter().enumerate() {
+        let code = &info.code;
+        if until.is_none() && hot_fn_decl(code) {
+            pending = true;
+        }
+        if pending && until.is_none() {
+            match (code.find('{'), code.find(';')) {
+                (None, Some(_)) => pending = false,
+                (Some(b), Some(s)) if s < b => pending = false,
+                (Some(_), _) => {
+                    until = Some(depth);
+                    pending = false;
+                    hot[idx] = true;
+                }
+                (None, None) => hot[idx] = true,
+            }
+        } else {
+            hot[idx] = until.is_some();
+        }
+        depth += code.matches('{').count() as i64;
+        depth -= code.matches('}').count() as i64;
+        if let Some(d) = until {
+            if depth <= d {
+                until = None;
+            }
+        }
+    }
+    hot
+}
+
+/// Rule 7: no hidden allocation inside the routing/absorb hot path.
+/// `route_batch` and the absorb family run once per batch at full
+/// rate — at millions of tuples per second, a `String` clone or a
+/// fresh `Vec`/`HashMap` per call turns the allocator into the
+/// bottleneck (the ROADMAP "allocation-free hot path" item). Scoped
+/// to `coordinator/` and `aggregate/`, the dirs that own those entry
+/// points. Escape hatch: `// lint: alloc-ok` for genuinely amortized
+/// sites (e.g. a once-per-window pane open). Returns
+/// `(findings, suppressions)`.
+fn rule_hotpath_alloc(relpath: &str, lines: &[LineInfo]) -> (Vec<Finding>, usize) {
+    if !in_dirs(relpath, HOT_DIRS) {
+        return (Vec::new(), 0);
+    }
+    let hot = mark_hot_fn_regions(lines);
+    let mut findings = Vec::new();
+    let mut suppressions = 0;
+    for (idx, info) in lines.iter().enumerate() {
+        if info.in_test || !hot[idx] {
+            continue;
+        }
+        let Some(&(token, what)) = ALLOC_TOKENS.iter().find(|(t, _)| info.code.contains(t))
+        else {
+            continue;
+        };
+        if escaped_by(lines, idx, ALLOC_MARK) {
+            suppressions += 1;
+            continue;
+        }
+        findings.push(Finding {
+            rule: "hotpath-alloc",
+            file: relpath.to_string(),
+            line: idx + 1,
+            message: format!(
+                "`{token}` — {what} inside a hot-path function \
+                 (route_batch/absorb family): this runs once per batch at full \
+                 rate, so allocator traffic dominates; hoist the allocation out \
+                 of the per-batch path or reuse a buffer, or mark the line \
+                 `// lint: alloc-ok` with a justification if it is amortized"
+            ),
+            snippet: info.raw.trim().to_string(),
+        });
+    }
+    (findings, suppressions)
+}
+
+/// Rule 8: `ShardSnapshot` constructions and destructurings must name
+/// every field. A `..` rest pattern (or `..base` struct update) in a
+/// snapshot literal means a newly added piece of shard state compiles
+/// clean while silently skipping serialization — exactly the failure
+/// class the `FlushMsg` seq rule catches on the wire, applied to the
+/// recovery path. No escape hatch.
+fn rule_snapshot_exhaustive(relpath: &str, lines: &[LineInfo]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for (start, info) in lines.iter().enumerate() {
+        if info.in_test {
+            continue;
+        }
+        // find `ShardSnapshot {` on this line, skipping type positions
+        let mut at = None;
+        let mut search = 0;
+        while let Some(rel) = find_token(&info.code[search..], "ShardSnapshot") {
+            let site = search + rel;
+            search = site + "ShardSnapshot".len();
+            let before = info.code[..site].trim_end();
+            if before.ends_with("->")
+                || trailing_ident(before) == Some("struct")
+                || trailing_ident(before) == Some("impl")
+            {
+                continue;
+            }
+            if info.code[search..].trim_start().starts_with('{') {
+                at = Some(site);
+                break;
+            }
+        }
+        let Some(at) = at else { continue };
+        // collect only the literal's top-level body: nested blocks
+        // become spaces so a range inside a nested expression can't
+        // look like a rest pattern
+        let mut depth = 0i64;
+        let mut body = String::new();
+        let mut idx = start;
+        let mut from = at;
+        'walk: while idx < lines.len() {
+            for ch in lines[idx].code[from..].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        if depth > 1 {
+                            body.push(' ');
+                        }
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break 'walk;
+                        }
+                        body.push(' ');
+                    }
+                    c => {
+                        if depth == 1 {
+                            body.push(c);
+                        }
+                    }
+                }
+            }
+            body.push(' ');
+            idx += 1;
+            from = 0;
+        }
+        // a rest pattern / struct update is `..` at the start of the
+        // body or right after a field separator; ranges like `0..n`
+        // have a value character before them
+        let chars: Vec<char> = body.chars().collect();
+        let mut hidden = false;
+        let mut i = 0;
+        while i + 1 < chars.len() {
+            if chars[i] == '.' && chars[i + 1] == '.' {
+                let prev = chars[..i].iter().rev().find(|c| !c.is_whitespace());
+                if matches!(prev, None | Some(',')) {
+                    hidden = true;
+                    break;
+                }
+                i += 2;
+            } else {
+                i += 1;
+            }
+        }
+        if hidden {
+            findings.push(Finding {
+                rule: "snapshot-exhaustive",
+                file: relpath.to_string(),
+                line: start + 1,
+                message: "`ShardSnapshot` with fields hidden behind `..` — a newly \
+                          added piece of shard state would compile clean while \
+                          silently skipping serialization and recovery; name every \
+                          field so adding one forces this site to be revisited"
+                    .to_string(),
+                snippet: lines[start].raw.trim().to_string(),
+            });
+        }
+    }
+    findings
+}
+
 /// Byte offset of `word` in `code` as a standalone identifier (not a
 /// substring of a longer one), if present.
 fn find_token(code: &str, word: &str) -> Option<usize> {
@@ -712,13 +990,17 @@ fn has_match_keyword(code: &str) -> bool {
 /// findings.
 pub fn lint_source(relpath: &str, text: &str) -> (Vec<Finding>, usize) {
     let lines = preprocess(text);
-    let (mut findings, suppressions) = rule_unsorted_map(relpath, &lines);
+    let (mut findings, mut suppressions) = rule_unsorted_map(relpath, &lines);
+    let (alloc_findings, alloc_suppressions) = rule_hotpath_alloc(relpath, &lines);
+    findings.extend(alloc_findings);
+    suppressions += alloc_suppressions;
     findings.extend(rule_unwrap_in_io(relpath, &lines));
     findings.extend(rule_relaxed_credit(relpath, &lines));
     findings.extend(rule_raw_clock(relpath, &lines));
     findings.extend(rule_obs_clock(relpath, &lines));
     findings.extend(rule_frame_exhaustive(relpath, &lines));
     findings.extend(rule_flush_seq(relpath, &lines));
+    findings.extend(rule_snapshot_exhaustive(relpath, &lines));
     (findings, suppressions)
 }
 
@@ -969,6 +1251,86 @@ mod tests {
                        fn g() { let _ = std::time::SystemTime::now(); }\n\
                    }\n";
         assert!(findings_for("engine/sim.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hotpath_alloc_flags_only_hot_fn_bodies_in_hot_dirs() {
+        let src = "fn setup() -> Vec<u64> { (0..4).collect() }\n\
+                   fn absorb(&mut self, batch: &[u64]) {\n\
+                       let tag = batch.len().to_string();\n\
+                       drop(tag);\n\
+                   }\n\
+                   fn report_line(&self) -> String { format!(\"ok\") }\n";
+        let f = findings_for("aggregate/x.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "hotpath-alloc");
+        assert_eq!(f[0].line, 3);
+        // the same source outside the hot dirs is not scanned
+        assert!(findings_for("engine/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn alloc_ok_escape_waives_and_counts() {
+        let src = "fn route_batch(&mut self, batch: &[u64]) {\n\
+                       // pane open: once per window, amortized. lint: alloc-ok\n\
+                       let fresh: Vec<u64> = Vec::new();\n\
+                       drop(fresh);\n\
+                   }\n";
+        let (findings, suppressions) = lint_source("coordinator/x.rs", src);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert_eq!(suppressions, 1);
+        // without the marker the same line is a finding
+        let bare = src.replace(" lint: alloc-ok", "");
+        let (findings, suppressions) = lint_source("coordinator/x.rs", &bare);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].rule, "hotpath-alloc");
+        assert_eq!(suppressions, 0);
+    }
+
+    #[test]
+    fn bodyless_trait_absorb_decl_does_not_open_a_hot_region() {
+        let src = "trait Sink {\n\
+                       fn absorb(&mut self, batch: &[u64]);\n\
+                   }\n\
+                   fn cold() -> Vec<u64> { Vec::new() }\n";
+        assert!(findings_for("aggregate/x.rs", src).is_empty());
+        // call sites and longer identifiers are not declarations
+        let calls = "fn drive(&mut self) {\n\
+                         self.inner.absorb(&[1]);\n\
+                         let v: Vec<u64> = Vec::new();\n\
+                         drop(v);\n\
+                     }\n\
+                     fn absorb_flush_cold() -> Vec<u64> { Vec::new() }\n";
+        assert!(findings_for("aggregate/x.rs", calls).is_empty());
+    }
+
+    #[test]
+    fn snapshot_literal_hiding_fields_is_flagged() {
+        let bad = "fn f(base: ShardSnapshot) -> ShardSnapshot {\n\
+                       ShardSnapshot { shard: 0, ..base }\n\
+                   }\n";
+        let f = findings_for("state/x.rs", bad);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "snapshot-exhaustive");
+        assert_eq!(f[0].line, 2);
+
+        // a destructuring rest pattern is the same hazard
+        let pat = "fn g(s: ShardSnapshot) -> usize {\n\
+                       let ShardSnapshot { expected_seq, .. } = s;\n\
+                       expected_seq.len()\n\
+                   }\n";
+        let f = findings_for("engine/x.rs", pat);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "snapshot-exhaustive");
+
+        // naming every field is clean; a range in a field value is not
+        // a rest pattern; type positions are skipped
+        let ok = "struct ShardSnapshot { shard: u64, expected_seq: Vec<u64> }\n\
+                  impl ShardSnapshot { fn n(&self) -> u64 { self.shard } }\n\
+                  fn h(xs: &[u64]) -> ShardSnapshot {\n\
+                      ShardSnapshot { shard: xs[0], expected_seq: xs[1..].to_vec() }\n\
+                  }\n";
+        assert!(findings_for("state/x.rs", ok).is_empty());
     }
 
     #[test]

@@ -16,25 +16,45 @@
 //!   `unwrap()`/`expect()` in transport + rt I/O paths, no
 //!   `Ordering::Relaxed` on credit/watermark atomics, no raw
 //!   `SystemTime::now()` outside the shared [`crate::transport::Clock`],
-//!   and exhaustive `Frame` matches at every decode site.
-//! * [`model`] — an explicit-state model checker for the credit-based
-//!   flow-control protocol the socket and loopback lanes implement
-//!   (grant/consume/ack with half-window quanta and
-//!   flush-all-credits-before-blocking). It exhaustively enumerates
-//!   bounded interleavings of senders, receiver and credit returns,
-//!   asserting deadlock freedom, credit conservation (no leak, no
-//!   double grant) and per-stream FIFO delivery — and it detects the
-//!   violation when any of those protocol rules is deliberately
-//!   broken (see `rust/tests/credit_model.rs`).
+//!   exhaustive `Frame` matches at every decode site, no hidden
+//!   allocation in the routing/absorb hot paths (escape hatch:
+//!   `// lint: alloc-ok`), and no `ShardSnapshot` literal or pattern
+//!   that hides fields behind `..`.
+//! * [`model`] — an explicit-state model-checking framework (`fish
+//!   model`): pluggable [`model::Protocol`] trait, exhaustive BFS over
+//!   every bounded interleaving with invariant checks on each state,
+//!   liveness-to-quiescence, optional termination proofs, and
+//!   shortest-trace counterexamples rendered as readable
+//!   interleavings.
+//! * [`credit`] — the credit-based flow-control protocol the socket
+//!   and loopback lanes implement (grant/consume/ack with half-window
+//!   quanta, flush-all-credits-before-blocking), proved deadlock-free
+//!   and credit-conserving over bounded configs
+//!   (`rust/tests/credit_model.rs`).
+//! * [`recovery`] — the exactly-once flush/recovery protocol: workers
+//!   × shards with seq-numbered flush lanes, the production
+//!   [`crate::aggregate::FlushSequencer`] embedded in the model states,
+//!   snapshot-every-K persistence, crash transitions at every protocol
+//!   step, `Resume` + unacked-suffix replay — proved exactly-once and
+//!   lossless over bounded configs (`rust/tests/recovery_model.rs`,
+//!   docs/MODEL.md).
 //!
 //! Everything here is `std`-only and runs offline — the lint engine is
 //! a line-oriented analyzer, not a full parser; its rules are written
 //! to have zero false positives on idioms this repo actually uses, and
 //! it is self-tested against seeded-regression fixtures in
-//! `rust/tests/fixtures/lint/`.
+//! `rust/tests/fixtures/lint/`. Both protocol models are seeded with
+//! deliberate bugs (mutation testing for the checker itself): every
+//! mutation must produce a deterministic counterexample trace.
 
+pub mod credit;
 pub mod lint;
 pub mod model;
+pub mod recovery;
 
+pub use credit::{check_credit, CreditConfig, CreditMutation};
 pub use lint::{lint_source, lint_tree, Finding, LintReport};
-pub use model::{check, Mutation, ModelConfig, ModelStats, Violation};
+pub use model::{
+    explore, CheckOptions, Counterexample, ModelStats, PropertyViolation, Protocol, Violation,
+};
+pub use recovery::{check_recovery, RecoveryConfig, RecoveryMutation};

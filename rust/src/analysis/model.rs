@@ -1,135 +1,123 @@
-//! Explicit-state model checker for the credit-based flow-control
-//! protocol the transport lanes implement.
+//! Explicit-state model-checking framework for the repo's protocols.
 //!
-//! The protocol under check (see `transport/socket.rs` and
-//! `docs/DETERMINISM.md`):
+//! The checker grew out of the single-purpose credit-flow model: the
+//! exploration engine (BFS over every reachable interleaving, invariant
+//! checks on every generated state, counterexample traces, deterministic
+//! stats) is protocol-agnostic, so it now lives here behind the
+//! [`Protocol`] trait and the protocols plug in:
 //!
-//! * each sender starts with `window` credits and spends them on
-//!   fixed-size data chunks (a chunk is atomic — a sender with credit
-//!   left over but less than one chunk is *blocked*, exactly like the
-//!   real sender that must ship `opts.chunk` tuples per frame);
-//! * the receiver acks consumed tuples in quanta of
-//!   `window.max(2) / 2`, returning credit in whole quanta and
-//!   holding the sub-quantum remainder;
-//! * before the receiver would block waiting for data it **flushes
-//!   all owed credit**, remainder included. This is the rule that
-//!   makes the protocol deadlock-free — quantized acks alone can
-//!   strand up to `quantum - 1` credits while the sender is blocked
-//!   needing a full chunk.
+//! * [`crate::analysis::credit`] — the credit-based flow control the
+//!   socket and loopback lanes implement (grant/consume/ack with
+//!   half-window quanta, flush-all-credits-before-blocking);
+//! * [`crate::analysis::recovery`] — the exactly-once flush/recovery
+//!   protocol (`FlushSequencer` dedup cursors, snapshot-every-K
+//!   persistence, crash + `Resume` + replay), built directly on the
+//!   production cursor/restore rules so model and code cannot drift.
 //!
-//! [`check`] enumerates *every* interleaving of send / deliver /
-//! credit-flush / grant-arrival transitions over a bounded
-//! configuration (breadth-first over the state graph with a visited
-//! set), asserting at each reachable state:
+//! A protocol supplies its state type, initial state, enabled
+//! transitions (each with a human-readable label), state invariants and
+//! a quiescence predicate. Within the bounded configuration the checker
+//! proves:
 //!
-//! * **deadlock freedom** — a state with no enabled transition has
-//!   delivered every tuple;
-//! * **credit conservation** — per stream, `sender credit + in-flight
-//!   data + receiver-owed + grants in flight == window` (no leak, no
-//!   double grant);
-//! * **no overflow** — sender credit never exceeds the window;
-//! * **FIFO delivery** — tuples arrive in sequence order per stream.
+//! * **safety** — every reachable state satisfies every invariant;
+//! * **liveness-to-quiescence** — no reachable state is stuck: a state
+//!   with no enabled transition must be quiescent
+//!   ([`Protocol::is_final`]), otherwise it is a
+//!   [`Violation::Deadlock`];
+//! * **termination** (optional) — the transition graph is acyclic, so
+//!   every run reaches quiescence in finitely many steps
+//!   ([`CheckOptions::check_termination`]).
 //!
-//! [`Mutation`] deliberately breaks one protocol rule at a time so
-//! tests can prove the checker *detects* each violation class rather
-//! than vacuously passing: `rust/tests/credit_model.rs` runs the
-//! honest protocol exhaustively and asserts every mutation is caught.
+//! Violations come back as a [`Counterexample`]: the shortest trace
+//! (BFS ⇒ minimal length) of transition labels from the initial state
+//! to the violation, printable as a readable interleaving via
+//! [`Counterexample::render`] and re-parseable via
+//! [`Counterexample::parse`] (byte-stable round trip — pinned by
+//! `rust/tests/recovery_model.rs`).
 //!
-//! The checker is pure `std`, deterministic (fixed exploration order,
-//! no time, no randomness) and small: states are a few `u32`s per
-//! stream, so bounded configs in the tens of thousands of states
-//! check in milliseconds even in debug builds.
+//! [`ModelStats`] are exploration-order-independent graph properties
+//! (reachable states, sum of out-degrees, BFS radius, quiescent-state
+//! count), so exact per-config values are pinned in the self-tests: a
+//! silently-shrunk state space — a broken enabled-transition guard —
+//! fails loudly instead of vacuously passing.
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::{HashMap, VecDeque};
 use std::fmt;
+use std::hash::Hash;
 
-/// A bounded protocol configuration to exhaustively check.
-#[derive(Debug, Clone)]
-pub struct ModelConfig {
-    /// Concurrent senders feeding one receiver (streams are
-    /// credit-independent; interleavings are shared).
-    pub n_senders: usize,
-    /// Credit window per stream (the receiver-side queue depth).
-    pub window: u32,
-    /// Tuples each sender must deliver for the run to terminate.
-    pub tuples_per_sender: u32,
-    /// Fixed data-chunk size (the final chunk may be smaller). Must
-    /// be ≤ `window` or even the honest protocol cannot make progress.
-    pub chunk: u32,
-    /// Protocol rule to deliberately break ([`Mutation::None`] checks
-    /// the honest protocol).
-    pub mutation: Mutation,
-    /// Abort with [`Violation::StateSpaceExceeded`] past this many
-    /// distinct states — a misconfiguration guard, not a soundness
-    /// limit (within the bound the search is exhaustive).
-    pub max_states: usize,
+/// A protocol specified as an explicit-state transition system.
+///
+/// Implementations must be deterministic: `successors` must push the
+/// same labelled transitions in the same order for equal states, and
+/// labels must be stable — they are the counterexample vocabulary.
+pub trait Protocol {
+    /// One global protocol state. `Eq + Hash` give the visited set;
+    /// `Clone` lets the checker fan a state out to its successors.
+    type State: Clone + Eq + Hash + fmt::Debug;
+
+    /// Protocol name plus bounded-config summary, for reports
+    /// (e.g. `credit n=2 window=3 tuples=4 chunk=2`).
+    fn name(&self) -> String;
+
+    /// The single initial state.
+    fn initial(&self) -> Self::State;
+
+    /// Push every enabled transition from `state` as `(label, next)`.
+    /// An empty set means the state is terminal — a deadlock unless
+    /// [`Protocol::is_final`] holds.
+    fn successors(&self, state: &Self::State, out: &mut Vec<(String, Self::State)>);
+
+    /// Check every state invariant; the first broken property becomes
+    /// the counterexample's verdict.
+    fn invariants(&self, state: &Self::State) -> Result<(), PropertyViolation>;
+
+    /// Quiescence: the protocol has finished everything it set out to
+    /// do. Terminal non-final states are deadlocks; final states may
+    /// still have successors (e.g. an unspent crash budget).
+    fn is_final(&self, state: &Self::State) -> bool;
 }
 
-/// A deliberate protocol bug, used to prove the checker catches each
-/// violation class (mutation testing for the model itself).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Mutation {
-    /// The protocol as implemented.
-    None,
-    /// Receiver never flushes sub-quantum credit remainders before
-    /// blocking — the bug class the `flush_all_credits()` rule
-    /// prevents. Expected: [`Violation::Deadlock`].
-    SkipCreditFlush,
-    /// Receiver grants every ack twice. Expected:
-    /// [`Violation::CreditLost`] (conservation breaks high) or
-    /// [`Violation::CreditOverflow`].
-    DoubleGrant,
-    /// Receiver drops one credit from every grant. Expected:
-    /// [`Violation::CreditLost`] (conservation breaks low).
-    DropCredit,
-    /// Network delivers the newest in-flight chunk first. Expected:
-    /// [`Violation::OutOfOrder`].
-    ReorderData,
+/// One broken state invariant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PropertyViolation {
+    /// Stable property identifier (kebab-case), e.g. `no-lost-flush`.
+    pub property: &'static str,
+    /// What exactly is wrong in the violating state.
+    pub detail: String,
 }
 
-/// Aggregate counts from an exhaustive run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct ModelStats {
-    /// Distinct reachable states.
-    pub states: usize,
-    /// Explored transitions (edges, including ones to already-visited
-    /// states).
-    pub transitions: usize,
-}
-
-/// A protocol property violated in some reachable state.
+/// Why a check failed.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Violation {
-    /// No transition enabled, tuples still undelivered.
-    Deadlock { state: String },
-    /// Per-stream credit accounting no longer sums to the window.
-    CreditLost { sender: usize, window: u32, accounted: u32 },
-    /// Sender credit exceeds the window.
-    CreditOverflow { sender: usize, credit: u32, window: u32 },
-    /// A chunk arrived out of sequence order.
-    OutOfOrder { sender: usize, expected_seq: u32, got_seq: u32 },
-    /// `max_states` exceeded before the frontier emptied.
-    StateSpaceExceeded { explored: usize },
+    /// A non-final state with no enabled transition.
+    Deadlock,
+    /// A reachable state breaks a protocol invariant.
+    Property(PropertyViolation),
+    /// The transition graph has a cycle — a run exists that never
+    /// reaches quiescence (termination check only).
+    Cycle,
+    /// Exploration hit [`CheckOptions::max_states`] before finishing;
+    /// nothing proven either way.
+    StateSpaceExceeded {
+        /// States explored before giving up.
+        explored: u64,
+    },
 }
 
 impl fmt::Display for Violation {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            Violation::Deadlock { state } => write!(f, "deadlock: no enabled transition in {state}"),
-            Violation::CreditLost { sender, window, accounted } => write!(
-                f,
-                "credit conservation broken on stream {sender}: window {window}, accounted {accounted}"
-            ),
-            Violation::CreditOverflow { sender, credit, window } => write!(
-                f,
-                "credit overflow on stream {sender}: credit {credit} > window {window}"
-            ),
-            Violation::OutOfOrder { sender, expected_seq, got_seq } => write!(
-                f,
-                "out-of-order delivery on stream {sender}: expected seq {expected_seq}, got {got_seq}"
-            ),
+            Violation::Deadlock => {
+                write!(f, "deadlock: no enabled transition in a non-quiescent state")
+            }
+            Violation::Property(p) => {
+                write!(f, "property {} violated: {}", p.property, p.detail)
+            }
+            Violation::Cycle => {
+                write!(f, "cycle: a run exists that never reaches quiescence")
+            }
             Violation::StateSpaceExceeded { explored } => {
-                write!(f, "state space exceeded the configured bound after {explored} states")
+                write!(f, "state space exceeded after {explored} states")
             }
         }
     }
@@ -137,271 +125,363 @@ impl fmt::Display for Violation {
 
 impl std::error::Error for Violation {}
 
-/// Per-stream protocol state. Everything is small unsigned counters,
-/// so a whole state hashes as a short `Vec<u32>`.
+/// A violation plus the shortest interleaving that reaches it.
 #[derive(Debug, Clone, PartialEq, Eq)]
-struct Lane {
-    /// Credits the sender may spend.
-    credit: u32,
-    /// Tuples the sender has not yet put on the wire.
-    to_send: u32,
-    /// In-flight data chunks: `(size, first_seq)`, FIFO.
-    channel: VecDeque<(u32, u32)>,
-    /// Next sequence number the receiver expects (== tuples
-    /// delivered).
-    delivered: u32,
-    /// Tuples consumed but not yet acked (credit the receiver owes).
-    pending: u32,
-    /// Credit grants in flight back to the sender, FIFO.
-    grants: VecDeque<u32>,
+pub struct Counterexample {
+    /// What broke.
+    pub violation: Violation,
+    /// Transition labels from the initial state to the violating
+    /// state, in order. Empty when the initial state itself violates.
+    pub trace: Vec<String>,
 }
 
-#[derive(Debug, Clone, PartialEq, Eq)]
-struct State {
-    lanes: Vec<Lane>,
+impl Counterexample {
+    /// Render as a readable numbered interleaving. The output is
+    /// byte-stable (same counterexample ⇒ same bytes) and round-trips
+    /// through [`Counterexample::parse`].
+    pub fn render(&self) -> String {
+        let mut out = format!("counterexample: {}\n", self.violation);
+        for (i, step) in self.trace.iter().enumerate() {
+            out.push_str(&format!("  {:>3}. {}\n", i + 1, step));
+        }
+        out
+    }
+
+    /// Parse a [`Counterexample::render`]ing back into its parts:
+    /// `(violation line, trace labels)`. Returns `None` for anything
+    /// that is not a rendered counterexample (wrong header, broken
+    /// numbering).
+    pub fn parse(text: &str) -> Option<(String, Vec<String>)> {
+        let mut lines = text.lines();
+        let head = lines.next()?.strip_prefix("counterexample: ")?.to_string();
+        let mut trace = Vec::new();
+        for line in lines {
+            let body = line.trim_start();
+            let (num, label) = body.split_once(". ")?;
+            if num.parse::<usize>().ok()? != trace.len() + 1 {
+                return None;
+            }
+            trace.push(label.to_string());
+        }
+        Some((head, trace))
+    }
 }
 
-impl State {
-    fn initial(cfg: &ModelConfig) -> State {
-        State {
-            lanes: vec![
-                Lane {
-                    credit: cfg.window,
-                    to_send: cfg.tuples_per_sender,
-                    channel: VecDeque::new(),
-                    delivered: 0,
-                    pending: 0,
-                    grants: VecDeque::new(),
-                };
-                cfg.n_senders
-            ],
+impl fmt::Display for Counterexample {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+/// Exploration-order-independent statistics of one exhaustive check.
+///
+/// All four are graph properties of the reachable transition system —
+/// independent of visitation order — so exact values are pinned
+/// per-config in the self-tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ModelStats {
+    /// Distinct reachable states.
+    pub states: u64,
+    /// Transitions examined (sum of out-degrees over reachable states;
+    /// counts edges into already-visited states too).
+    pub transitions: u64,
+    /// BFS radius: the longest shortest-path from the initial state.
+    pub depth: u64,
+    /// Reachable quiescent ([`Protocol::is_final`]) states.
+    pub finals: u64,
+}
+
+/// Exploration bounds and optional extra proofs.
+#[derive(Debug, Clone, Copy)]
+pub struct CheckOptions {
+    /// Abort with [`Violation::StateSpaceExceeded`] beyond this many
+    /// distinct states — a misconfiguration guard, not a soundness
+    /// limit (within the bound the search is exhaustive).
+    pub max_states: u64,
+    /// Additionally prove the transition graph acyclic (every run
+    /// terminates). Costs a second full traversal; reserve it for the
+    /// smaller configs.
+    pub check_termination: bool,
+}
+
+impl Default for CheckOptions {
+    fn default() -> Self {
+        CheckOptions { max_states: 5_000_000, check_termination: false }
+    }
+}
+
+/// Exhaustively check `protocol` within `opts`.
+///
+/// Breadth-first over every reachable state: invariants are checked on
+/// each state as it is generated (so a reported trace is a
+/// shortest-length interleaving), terminal non-final states are
+/// deadlocks, and — when requested — a depth-first pass proves the
+/// graph acyclic. Fully deterministic: same protocol, same options ⇒
+/// same stats and byte-identical counterexample.
+pub fn explore<P: Protocol>(
+    protocol: &P,
+    opts: &CheckOptions,
+) -> Result<ModelStats, Counterexample> {
+    let init = protocol.initial();
+    if let Err(p) = protocol.invariants(&init) {
+        return Err(Counterexample { violation: Violation::Property(p), trace: Vec::new() });
+    }
+
+    // parent[id] = (parent id, label of the edge in), for trace
+    // reconstruction; id 0 is the initial state
+    let mut seen: HashMap<P::State, usize> = HashMap::new();
+    let mut parent: Vec<(usize, String)> = vec![(usize::MAX, String::new())];
+    let mut depth_of: Vec<u64> = vec![0];
+    let mut frontier: VecDeque<P::State> = VecDeque::new();
+
+    fn trace_to(parent: &[(usize, String)], mut id: usize) -> Vec<String> {
+        let mut steps = Vec::new();
+        while id != 0 {
+            let (pid, label) = &parent[id];
+            steps.push(label.clone());
+            id = *pid;
         }
+        steps.reverse();
+        steps
     }
 
-    /// Canonical hashable encoding.
-    fn key(&self) -> Vec<u32> {
-        let mut k = Vec::with_capacity(self.lanes.len() * 8);
-        for lane in &self.lanes {
-            k.push(lane.credit);
-            k.push(lane.to_send);
-            k.push(lane.delivered);
-            k.push(lane.pending);
-            k.push(lane.channel.len() as u32);
-            for &(size, seq) in &lane.channel {
-                k.push(size);
-                k.push(seq);
-            }
-            k.push(lane.grants.len() as u32);
-            for &g in &lane.grants {
-                k.push(g);
-            }
+    let mut stats = ModelStats { states: 1, transitions: 0, depth: 0, finals: 0 };
+    if protocol.is_final(&init) {
+        stats.finals += 1;
+    }
+    seen.insert(init.clone(), 0);
+    frontier.push_back(init);
+
+    let mut succ: Vec<(String, P::State)> = Vec::new();
+    while let Some(state) = frontier.pop_front() {
+        let sid = seen[&state];
+        succ.clear();
+        protocol.successors(&state, &mut succ);
+        if succ.is_empty() && !protocol.is_final(&state) {
+            return Err(Counterexample {
+                violation: Violation::Deadlock,
+                trace: trace_to(&parent, sid),
+            });
         }
-        k
-    }
-
-    fn all_delivered(&self, cfg: &ModelConfig) -> bool {
-        self.lanes.iter().all(|l| l.delivered == cfg.tuples_per_sender)
-    }
-
-    fn describe(&self) -> String {
-        let mut s = String::new();
-        for (i, lane) in self.lanes.iter().enumerate() {
-            if i > 0 {
-                s.push_str("; ");
+        for (label, next) in succ.drain(..) {
+            stats.transitions += 1;
+            if let Err(p) = protocol.invariants(&next) {
+                let mut trace = trace_to(&parent, sid);
+                trace.push(label);
+                return Err(Counterexample { violation: Violation::Property(p), trace });
             }
-            s.push_str(&format!(
-                "stream {i}: credit={} to_send={} inflight={:?} delivered={} pending={} grants={:?}",
-                lane.credit, lane.to_send, lane.channel, lane.delivered, lane.pending, lane.grants
-            ));
-        }
-        s
-    }
-
-    /// Every state reachable in one transition. Errors on a FIFO
-    /// violation observed while delivering.
-    fn successors(&self, cfg: &ModelConfig, quantum: u32) -> Result<Vec<State>, Violation> {
-        let mut out = Vec::new();
-        for i in 0..self.lanes.len() {
-            let lane = &self.lanes[i];
-
-            // send: one fixed-size chunk, atomically, if credit covers it
-            if lane.to_send > 0 {
-                let size = cfg.chunk.min(lane.to_send);
-                if lane.credit >= size {
-                    let mut next = self.clone();
-                    let l = &mut next.lanes[i];
-                    let first_seq = cfg.tuples_per_sender - l.to_send;
-                    l.credit -= size;
-                    l.to_send -= size;
-                    l.channel.push_back((size, first_seq));
-                    out.push(next);
+            if !seen.contains_key(&next) {
+                let nid = parent.len();
+                parent.push((sid, label));
+                let d = depth_of[sid] + 1;
+                depth_of.push(d);
+                stats.depth = stats.depth.max(d);
+                if protocol.is_final(&next) {
+                    stats.finals += 1;
                 }
-            }
-
-            // deliver: receiver consumes one in-flight chunk and acks
-            // in whole quanta, holding the remainder
-            if !lane.channel.is_empty() {
-                let mut next = self.clone();
-                let l = &mut next.lanes[i];
-                let (size, first_seq) = if cfg.mutation == Mutation::ReorderData && l.channel.len() > 1
-                {
-                    l.channel.pop_back().expect("checked non-empty")
-                } else {
-                    l.channel.pop_front().expect("checked non-empty")
-                };
-                if first_seq != l.delivered {
-                    return Err(Violation::OutOfOrder {
-                        sender: i,
-                        expected_seq: l.delivered,
-                        got_seq: first_seq,
+                stats.states += 1;
+                if stats.states > opts.max_states {
+                    return Err(Counterexample {
+                        violation: Violation::StateSpaceExceeded { explored: stats.states },
+                        trace: Vec::new(),
                     });
                 }
-                l.delivered += size;
-                l.pending += size;
-                let quantized = (l.pending / quantum) * quantum;
-                if quantized > 0 {
-                    l.pending -= quantized;
-                    push_grant(l, quantized, cfg.mutation);
-                }
-                out.push(next);
-            }
-
-            // flush: receiver returns ALL owed credit (the
-            // before-blocking rule); removed under SkipCreditFlush
-            if lane.pending > 0 && cfg.mutation != Mutation::SkipCreditFlush {
-                let mut next = self.clone();
-                let l = &mut next.lanes[i];
-                let owed = l.pending;
-                l.pending = 0;
-                push_grant(l, owed, cfg.mutation);
-                out.push(next);
-            }
-
-            // grant arrival: a credit frame reaches the sender
-            if !lane.grants.is_empty() {
-                let mut next = self.clone();
-                let l = &mut next.lanes[i];
-                let g = l.grants.pop_front().expect("checked non-empty");
-                l.credit += g;
-                out.push(next);
-            }
-        }
-        Ok(out)
-    }
-
-    fn check_invariants(&self, cfg: &ModelConfig) -> Result<(), Violation> {
-        for (i, lane) in self.lanes.iter().enumerate() {
-            if lane.credit > cfg.window {
-                return Err(Violation::CreditOverflow {
-                    sender: i,
-                    credit: lane.credit,
-                    window: cfg.window,
-                });
-            }
-            let inflight: u32 = lane.channel.iter().map(|&(size, _)| size).sum();
-            let grants: u32 = lane.grants.iter().sum();
-            let accounted = lane.credit + inflight + lane.pending + grants;
-            if accounted != cfg.window {
-                return Err(Violation::CreditLost { sender: i, window: cfg.window, accounted });
-            }
-        }
-        Ok(())
-    }
-}
-
-fn push_grant(lane: &mut Lane, granted: u32, mutation: Mutation) {
-    let granted = match mutation {
-        Mutation::DoubleGrant => granted * 2,
-        Mutation::DropCredit => granted.saturating_sub(1),
-        _ => granted,
-    };
-    if granted > 0 {
-        lane.grants.push_back(granted);
-    }
-}
-
-/// Exhaustively explore every interleaving of `cfg`, checking the
-/// protocol invariants at each reachable state. Deterministic: same
-/// config, same result, same [`ModelStats`].
-pub fn check(cfg: &ModelConfig) -> Result<ModelStats, Violation> {
-    assert!(cfg.n_senders > 0, "need at least one sender");
-    assert!(cfg.window > 0 && cfg.chunk > 0, "window and chunk must be positive");
-    assert!(
-        cfg.chunk <= cfg.window,
-        "chunk > window cannot make progress even unmutated"
-    );
-    let quantum = cfg.window.max(2) / 2;
-    let init = State::initial(cfg);
-    init.check_invariants(cfg)?;
-    let mut visited: HashSet<Vec<u32>> = HashSet::new();
-    visited.insert(init.key());
-    let mut frontier = VecDeque::new();
-    frontier.push_back(init);
-    let mut stats = ModelStats { states: 1, transitions: 0 };
-    while let Some(state) = frontier.pop_front() {
-        let successors = state.successors(cfg, quantum)?;
-        if successors.is_empty() && !state.all_delivered(cfg) {
-            return Err(Violation::Deadlock { state: state.describe() });
-        }
-        for next in successors {
-            stats.transitions += 1;
-            next.check_invariants(cfg)?;
-            if visited.insert(next.key()) {
-                stats.states += 1;
-                if stats.states > cfg.max_states {
-                    return Err(Violation::StateSpaceExceeded { explored: stats.states });
-                }
+                seen.insert(next.clone(), nid);
                 frontier.push_back(next);
             }
         }
     }
+
+    if opts.check_termination {
+        assert_acyclic(protocol)?;
+    }
     Ok(stats)
+}
+
+/// Prove the reachable transition graph is a DAG by iterative
+/// three-color DFS; a back edge yields [`Violation::Cycle`] with the
+/// DFS path into the cycle as the trace.
+fn assert_acyclic<P: Protocol>(protocol: &P) -> Result<(), Counterexample> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum Color {
+        Grey,
+        Black,
+    }
+    let mut color: HashMap<P::State, Color> = HashMap::new();
+    // each frame: (state, its successors, next successor index, label in)
+    #[allow(clippy::type_complexity)]
+    let mut stack: Vec<(P::State, Vec<(String, P::State)>, usize, String)> = Vec::new();
+    let init = protocol.initial();
+    let mut succ = Vec::new();
+    protocol.successors(&init, &mut succ);
+    color.insert(init.clone(), Color::Grey);
+    stack.push((init, succ, 0, String::new()));
+    while let Some(frame) = stack.last_mut() {
+        if frame.2 >= frame.1.len() {
+            color.insert(frame.0.clone(), Color::Black);
+            stack.pop();
+            continue;
+        }
+        let (label, next) = frame.1[frame.2].clone();
+        frame.2 += 1;
+        match color.get(&next) {
+            Some(Color::Grey) => {
+                // back edge: the grey target is on the stack — the
+                // trace is the DFS path so far plus the closing edge
+                let mut trace: Vec<String> = stack.iter().skip(1).map(|f| f.3.clone()).collect();
+                trace.push(label);
+                return Err(Counterexample { violation: Violation::Cycle, trace });
+            }
+            Some(Color::Black) => continue,
+            None => {
+                let mut succ = Vec::new();
+                protocol.successors(&next, &mut succ);
+                color.insert(next.clone(), Color::Grey);
+                stack.push((next, succ, 0, label));
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn cfg(n_senders: usize, window: u32, tuples: u32, chunk: u32, mutation: Mutation) -> ModelConfig {
-        ModelConfig {
-            n_senders,
-            window,
-            tuples_per_sender: tuples,
-            chunk,
-            mutation,
-            max_states: 2_000_000,
+    /// Toy protocol: a counter walks 0..=n; invariant `counter <= n`;
+    /// final at n. `stuck_at` gives that value no successors;
+    /// `loop_at` makes it step to itself; `overflow` walks past n.
+    struct Walk {
+        n: u32,
+        stuck_at: Option<u32>,
+        loop_at: Option<u32>,
+        overflow: bool,
+    }
+
+    impl Protocol for Walk {
+        type State = u32;
+        fn name(&self) -> String {
+            format!("walk n={}", self.n)
+        }
+        fn initial(&self) -> u32 {
+            0
+        }
+        fn successors(&self, s: &u32, out: &mut Vec<(String, u32)>) {
+            if Some(*s) == self.stuck_at {
+                return;
+            }
+            if Some(*s) == self.loop_at {
+                out.push((format!("loop at {s}"), *s));
+                return;
+            }
+            let top = if self.overflow { self.n + 1 } else { self.n };
+            if *s < top {
+                out.push((format!("step to {}", s + 1), s + 1));
+            }
+        }
+        fn invariants(&self, s: &u32) -> Result<(), PropertyViolation> {
+            if *s > self.n {
+                return Err(PropertyViolation {
+                    property: "bounded-counter",
+                    detail: format!("counter reached {s}, bound is {}", self.n),
+                });
+            }
+            Ok(())
+        }
+        fn is_final(&self, s: &u32) -> bool {
+            *s == self.n
         }
     }
 
-    #[test]
-    fn honest_protocol_small_config_passes() {
-        let stats = check(&cfg(1, 2, 4, 1, Mutation::None)).expect("honest run");
-        assert!(stats.states > 1);
-        assert!(stats.transitions >= stats.states - 1);
+    fn walk(n: u32) -> Walk {
+        Walk { n, stuck_at: None, loop_at: None, overflow: false }
     }
 
     #[test]
-    fn skip_credit_flush_deadlocks() {
-        // window 5, chunk 5: the quantized ack returns 4, stranding 1
-        // credit at the receiver while the sender needs a full chunk
-        let err = check(&cfg(1, 5, 10, 5, Mutation::SkipCreditFlush)).unwrap_err();
-        assert!(matches!(err, Violation::Deadlock { .. }), "{err}");
-        // the honest protocol flushes the remainder and completes
-        check(&cfg(1, 5, 10, 5, Mutation::None)).expect("flush saves it");
+    fn clean_walk_has_pinned_stats() {
+        let stats = explore(&walk(5), &CheckOptions::default()).expect("clean");
+        assert_eq!(stats, ModelStats { states: 6, transitions: 5, depth: 5, finals: 1 });
+        // the termination pass changes nothing on an acyclic graph
+        let opts = CheckOptions { check_termination: true, ..Default::default() };
+        assert_eq!(explore(&walk(5), &opts).expect("acyclic"), stats);
     }
 
     #[test]
-    fn determinism_same_config_same_stats() {
-        let a = check(&cfg(2, 3, 4, 2, Mutation::None)).expect("run a");
-        let b = check(&cfg(2, 3, 4, 2, Mutation::None)).expect("run b");
-        assert_eq!(a, b);
+    fn deadlock_is_reported_with_shortest_trace() {
+        let err = explore(&Walk { stuck_at: Some(3), ..walk(5) }, &CheckOptions::default())
+            .unwrap_err();
+        assert_eq!(err.violation, Violation::Deadlock);
+        assert_eq!(err.trace, vec!["step to 1", "step to 2", "step to 3"]);
+    }
+
+    #[test]
+    fn property_violation_carries_the_edge_that_broke_it() {
+        let err =
+            explore(&Walk { overflow: true, ..walk(3) }, &CheckOptions::default()).unwrap_err();
+        match &err.violation {
+            Violation::Property(p) => {
+                assert_eq!(p.property, "bounded-counter");
+                assert!(p.detail.contains("counter reached 4"), "{}", p.detail);
+            }
+            v => panic!("expected property violation, got {v:?}"),
+        }
+        assert_eq!(err.trace.last().map(String::as_str), Some("step to 4"));
+    }
+
+    #[test]
+    fn cycle_detection_fires_only_under_termination_check() {
+        let looping = Walk { loop_at: Some(2), ..walk(5) };
+        // plain BFS dedups the self-loop and terminates cleanly: the
+        // states past the loop are simply unreachable, never final
+        let stats = explore(&looping, &CheckOptions::default()).expect("bfs tolerates loop");
+        assert_eq!(stats, ModelStats { states: 3, transitions: 3, depth: 2, finals: 0 });
+        // the termination pass proves the non-quiescent run exists
+        let opts = CheckOptions { check_termination: true, ..Default::default() };
+        let err = explore(&looping, &opts).unwrap_err();
+        assert_eq!(err.violation, Violation::Cycle);
+        assert_eq!(err.trace.last().map(String::as_str), Some("loop at 2"));
     }
 
     #[test]
     fn state_space_guard_trips() {
-        let mut c = cfg(2, 3, 6, 1, Mutation::None);
-        c.max_states = 10;
-        let err = check(&c).unwrap_err();
-        assert!(matches!(err, Violation::StateSpaceExceeded { .. }), "{err}");
+        let opts = CheckOptions { max_states: 3, ..Default::default() };
+        let err = explore(&walk(10), &opts).unwrap_err();
+        assert!(matches!(err.violation, Violation::StateSpaceExceeded { explored: 4 }));
+    }
+
+    #[test]
+    fn render_parse_round_trip_is_byte_stable() {
+        let ce = Counterexample {
+            violation: Violation::Property(PropertyViolation {
+                property: "no-lost-flush",
+                detail: "shard 0 cursor for worker 1 is 2 but seq 0 was never absorbed".into(),
+            }),
+            trace: vec![
+                "w1 flushes seq 0 to s0".into(),
+                "s0 crashes and restores cold".into(),
+            ],
+        };
+        let rendered = ce.render();
+        let (head, labels) = Counterexample::parse(&rendered).expect("parses");
+        assert_eq!(head, ce.violation.to_string());
+        assert_eq!(labels, ce.trace);
+        // reassembling from the parsed parts reproduces the exact bytes
+        let mut again = format!("counterexample: {head}\n");
+        for (i, l) in labels.iter().enumerate() {
+            again.push_str(&format!("  {:>3}. {}\n", i + 1, l));
+        }
+        assert_eq!(again, rendered);
+    }
+
+    #[test]
+    fn empty_trace_renders_header_only() {
+        let ce = Counterexample {
+            violation: Violation::StateSpaceExceeded { explored: 11 },
+            trace: Vec::new(),
+        };
+        assert_eq!(ce.render(), "counterexample: state space exceeded after 11 states\n");
+        let (head, labels) = Counterexample::parse(&ce.render()).expect("parses");
+        assert_eq!(head, ce.violation.to_string());
+        assert!(labels.is_empty());
     }
 }

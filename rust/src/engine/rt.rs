@@ -63,7 +63,7 @@ use crate::metrics::{
 use crate::obs::{
     chain_id, ClockDomain, Sample, Sampler, TraceBlob, TraceBuf, DEFAULT_INTERVAL_NS, NO_SEQ,
 };
-use crate::state::ShardSnapshot;
+use crate::state::{snapshot_due, ShardSnapshot};
 use crate::transport::wire::{FlushMsg, Msg};
 use crate::transport::{
     loopback, socket, Clock, FlushRx, FlushTx, LaneError, TransportKind, TupleRecv, TupleRx,
@@ -618,7 +618,16 @@ pub(crate) fn shard_loop(
         if obs.is_active() {
             obs.instant_full("restore", clock.now_ns(), NO_SEQ, ctl.shard);
         }
-        sequencer = FlushSequencer::restore(snap.expected_seq);
+        // restore the sequencer cursors and re-offer the batches the
+        // predecessor had parked ahead of a sequence gap (a batch the
+        // restored cursors no longer block absorbs below, once the
+        // stage itself is restored; a stale one drops silently) — the
+        // shared shard-restore rule the recovery model checks
+        let (restored, replay_accepted) = FlushSequencer::restore_replaying(
+            snap.expected_seq,
+            snap.buffered.into_iter().map(|m| (m.worker, m.seq, m)),
+        );
+        sequencer = restored;
         for (dst, src) in worker_wm.iter_mut().zip(&snap.worker_wm) {
             *dst = *src;
         }
@@ -633,22 +642,10 @@ pub(crate) fn shard_loop(
         lat = snap.latency;
         carried = snap.recovery;
         stage.restore(snap.merge);
-        // re-offer the batches the predecessor had parked ahead of a
-        // sequence gap (a batch the restored cursors no longer block
-        // absorbs immediately; a stale one drops silently)
-        for msg in snap.buffered {
-            let (worker, seq) = (msg.worker, msg.seq);
-            if worker >= n_workers {
-                continue;
-            }
-            if let SeqDecision::Accept(batch) = sequencer.offer(worker, seq, msg) {
-                for m in batch {
-                    absorb_flush(
-                        &mut stage, &mut sketch, &mut lat, &mut worker_wm, &mut absorbed,
-                        clock, m,
-                    );
-                }
-            }
+        for m in replay_accepted {
+            absorb_flush(
+                &mut stage, &mut sketch, &mut lat, &mut worker_wm, &mut absorbed, clock, m,
+            );
         }
     }
     while let Some(flush) = rx.recv() {
@@ -729,7 +726,7 @@ pub(crate) fn shard_loop(
                 });
             }
         }
-        if ctl.snapshot_every > 0 && accepted_since_snapshot >= ctl.snapshot_every {
+        if snapshot_due(accepted_since_snapshot, ctl.snapshot_every) {
             accepted_since_snapshot = 0;
             let snap = ShardSnapshot {
                 shard: ctl.shard,

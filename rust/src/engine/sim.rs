@@ -51,8 +51,8 @@
 
 use super::topology::Topology;
 use crate::aggregate::{
-    self, Count, FlushSequencer, SeqDecision, ShardRouter, TopKGather, TopKSketch, WindowSnapshot,
-    WindowedMerge, WindowedPartial,
+    self, resume_cursor, Count, FlushSequencer, SeqDecision, ShardRouter, TopKGather, TopKSketch,
+    WindowSnapshot, WindowedMerge, WindowedPartial,
 };
 use crate::coordinator::{ClusterView, Grouper};
 use crate::metrics::{
@@ -61,7 +61,7 @@ use crate::metrics::{
 use crate::obs::{
     chain_id, ClockDomain, Sample, Sampler, TraceBlob, TraceBuf, DEFAULT_INTERVAL_NS, NO_SEQ,
 };
-use crate::state::ShardSnapshot;
+use crate::state::{snapshot_due, ShardSnapshot};
 use crate::transport::wire::FlushMsg;
 use crate::workload::Generator;
 use crate::{Key, WorkerId};
@@ -357,7 +357,7 @@ impl StageTwo {
             self.shards[s].log.push(msg.clone());
         }
         self.offer(s, msg);
-        if self.snapshot_every > 0 && self.shards[s].since_snapshot >= self.snapshot_every {
+        if snapshot_due(self.shards[s].since_snapshot, self.snapshot_every) {
             self.snapshot(s, now);
         }
         if let Some(pos) = self
@@ -450,7 +450,15 @@ impl StageTwo {
             }
             resume = snap.expected_seq.clone();
             let shard = &mut self.shards[s];
-            shard.sequencer = FlushSequencer::restore(snap.expected_seq);
+            // parked-ahead batches from the snapshot re-enter through
+            // the shared restore rule (the in-order sim never parks
+            // any, but the restore path is protocol-complete and is
+            // exactly what the recovery model explores)
+            let (restored, replay_accepted) = FlushSequencer::restore_replaying(
+                snap.expected_seq,
+                snap.buffered.into_iter().map(|m| (m.worker, m.seq, m)),
+            );
+            shard.sequencer = restored;
             for (dst, src) in shard.worker_wm.iter_mut().zip(&snap.worker_wm) {
                 *dst = *src;
             }
@@ -460,22 +468,14 @@ impl StageTwo {
                 snap.sketch_error,
             );
             shard.stage.restore(snap.merge);
-            // parked-ahead batches from the snapshot re-enter through the
-            // sequencer (the in-order sim never parks any, but the
-            // restore path is protocol-complete)
-            for m in snap.buffered {
-                let (worker, seq) = (m.worker, m.seq);
-                if let SeqDecision::Accept(batch) = shard.sequencer.offer(worker, seq, m) {
-                    for mm in batch {
-                        shard.absorb(mm);
-                    }
-                }
+            for m in replay_accepted {
+                shard.absorb(m);
             }
         }
         self.shards[s].last_snapshot = snap_bytes;
         let mut replayed = 0u64;
         for msg in log {
-            if msg.seq < resume[msg.worker] {
+            if msg.seq < resume_cursor(&resume, msg.worker) {
                 // below the shard's Resume answer: the lane never re-sends
                 continue;
             }

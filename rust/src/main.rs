@@ -422,6 +422,269 @@ fn cmd_lint(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// One `fish model` run: a protocol config checked exhaustively,
+/// either honest (must be clean; counts are pinned in the tier-1
+/// tests) or seeded with a mutation (must produce a counterexample).
+struct ModelRun {
+    protocol: &'static str,
+    config: String,
+    mutation: Option<&'static str>,
+    ok: bool,
+    states: u64,
+    transitions: u64,
+    depth: u64,
+    finals: u64,
+    violation: Option<String>,
+    trace_len: usize,
+}
+
+fn model_run(
+    protocol: &'static str,
+    config: String,
+    mutation: Option<&'static str>,
+    res: Result<fish::analysis::ModelStats, fish::analysis::Counterexample>,
+) -> ModelRun {
+    match res {
+        Ok(stats) => ModelRun {
+            protocol,
+            config,
+            mutation,
+            // an honest run must be clean; a mutated run that scans
+            // clean means the checker missed the seeded bug
+            ok: mutation.is_none(),
+            states: stats.states,
+            transitions: stats.transitions,
+            depth: stats.depth,
+            finals: stats.finals,
+            violation: None,
+            trace_len: 0,
+        },
+        Err(cx) => ModelRun {
+            protocol,
+            config,
+            mutation,
+            ok: mutation.is_some(),
+            states: 0,
+            transitions: 0,
+            depth: 0,
+            finals: 0,
+            violation: Some(cx.violation.to_string()),
+            trace_len: cx.trace.len(),
+        },
+    }
+}
+
+fn cmd_model(args: &Args) -> anyhow::Result<()> {
+    use fish::analysis::{
+        check_credit, check_recovery, CheckOptions, CreditConfig, CreditMutation,
+        RecoveryConfig, RecoveryMutation,
+    };
+
+    let which = args.get("protocol").unwrap_or("all");
+    if !matches!(which, "all" | "credit" | "recovery") {
+        anyhow::bail!("model: unknown --protocol {which} (expected credit or recovery)");
+    }
+    let with_mutations = args.has("all");
+    let opts = CheckOptions::default();
+    let started = std::time::Instant::now();
+    let mut runs: Vec<ModelRun> = Vec::new();
+
+    // Honest sweeps. Exact state/transition counts for every config
+    // here are pinned in rust/tests/credit_model.rs and
+    // rust/tests/recovery_model.rs — this command re-proves them and
+    // CI gates on the totals (scripts/check_perf.py --model).
+    const CREDIT: &[(usize, u32, u32, u32)] = &[
+        (1, 2, 6, 1),
+        (1, 4, 8, 2),
+        (1, 5, 10, 5),
+        (2, 2, 3, 1),
+        (2, 3, 4, 2),
+        (2, 4, 4, 2),
+        (3, 2, 3, 1),
+        (3, 2, 4, 1),
+    ];
+    const RECOVERY: &[(usize, usize, u64, u64, u32, u32)] = &[
+        (2, 2, 2, 1, 1, 1),
+        (2, 2, 3, 2, 1, 1),
+        (2, 2, 3, 3, 1, 1),
+        (3, 2, 2, 2, 1, 0),
+    ];
+
+    if which != "recovery" {
+        for &(n, w, t, c) in CREDIT {
+            let cfg = CreditConfig {
+                n_senders: n,
+                window: w,
+                tuples_per_sender: t,
+                chunk: c,
+                mutation: CreditMutation::None,
+            };
+            runs.push(model_run(
+                "credit",
+                format!("n{n} w{w} t{t} c{c}"),
+                None,
+                check_credit(&cfg, &opts),
+            ));
+        }
+        if with_mutations {
+            let seeded: &[(&'static str, CreditMutation, (usize, u32, u32, u32))] = &[
+                ("skip-credit-flush", CreditMutation::SkipCreditFlush, (1, 5, 10, 5)),
+                ("double-grant", CreditMutation::DoubleGrant, (1, 4, 8, 2)),
+                ("drop-credit", CreditMutation::DropCredit, (1, 4, 8, 2)),
+                ("reorder-data", CreditMutation::ReorderData, (1, 4, 8, 2)),
+            ];
+            for &(name, mutation, (n, w, t, c)) in seeded {
+                let cfg = CreditConfig {
+                    n_senders: n,
+                    window: w,
+                    tuples_per_sender: t,
+                    chunk: c,
+                    mutation,
+                };
+                runs.push(model_run(
+                    "credit",
+                    format!("n{n} w{w} t{t} c{c}"),
+                    Some(name),
+                    check_credit(&cfg, &opts),
+                ));
+            }
+        }
+    }
+    if which != "credit" {
+        for &(w, s, t, k, wk, sk) in RECOVERY {
+            let cfg = RecoveryConfig {
+                n_workers: w,
+                n_shards: s,
+                tuples_per_worker: t,
+                snapshot_every: k,
+                worker_kills: wk,
+                shard_kills: sk,
+                mutation: RecoveryMutation::None,
+            };
+            runs.push(model_run(
+                "recovery",
+                format!("w{w} s{s} t{t} k{k} wk{wk} sk{sk}"),
+                None,
+                check_recovery(&cfg, &opts),
+            ));
+        }
+        if with_mutations {
+            let seeded: &[(&'static str, RecoveryMutation, (usize, usize, u64, u64, u32, u32))] = &[
+                ("skip-snapshot-fsync", RecoveryMutation::SkipSnapshotFsync, (2, 2, 2, 1, 1, 1)),
+                ("resume-off-by-one", RecoveryMutation::ResumeOffByOne, (2, 2, 2, 1, 1, 1)),
+                (
+                    "replay-from-wrong-cursor",
+                    RecoveryMutation::ReplayFromWrongCursor,
+                    (2, 2, 2, 1, 1, 1),
+                ),
+                (
+                    "dedup-window-truncation",
+                    RecoveryMutation::DedupWindowTruncation,
+                    (2, 2, 3, 1, 1, 1),
+                ),
+            ];
+            for &(name, mutation, (w, s, t, k, wk, sk)) in seeded {
+                let cfg = RecoveryConfig {
+                    n_workers: w,
+                    n_shards: s,
+                    tuples_per_worker: t,
+                    snapshot_every: k,
+                    worker_kills: wk,
+                    shard_kills: sk,
+                    mutation,
+                };
+                runs.push(model_run(
+                    "recovery",
+                    format!("w{w} s{s} t{t} k{k} wk{wk} sk{sk}"),
+                    Some(name),
+                    check_recovery(&cfg, &opts),
+                ));
+            }
+        }
+    }
+
+    let wall_ms = started.elapsed().as_millis() as u64;
+    let ok = runs.iter().all(|r| r.ok);
+    // totals cover the honest sweeps only — mutation runs stop at
+    // their counterexample, so their partial counts are not meaningful
+    let total_states: u64 = runs.iter().filter(|r| r.mutation.is_none()).map(|r| r.states).sum();
+    let total_transitions: u64 =
+        runs.iter().filter(|r| r.mutation.is_none()).map(|r| r.transitions).sum();
+
+    if args.has("json") {
+        fn jesc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+        }
+        let mut out = String::from("{\"runs\":[");
+        for (i, r) in runs.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let mutation = match r.mutation {
+                Some(m) => format!("\"{}\"", jesc(m)),
+                None => "null".to_string(),
+            };
+            let violation = match &r.violation {
+                Some(v) => format!("\"{}\"", jesc(v)),
+                None => "null".to_string(),
+            };
+            out.push_str(&format!(
+                "{{\"protocol\":\"{}\",\"config\":\"{}\",\"mutation\":{},\"ok\":{},\
+                 \"states\":{},\"transitions\":{},\"depth\":{},\"finals\":{},\
+                 \"violation\":{},\"trace_len\":{}}}",
+                r.protocol,
+                jesc(&r.config),
+                mutation,
+                r.ok,
+                r.states,
+                r.transitions,
+                r.depth,
+                r.finals,
+                violation,
+                r.trace_len
+            ));
+        }
+        out.push_str(&format!(
+            "],\"total_states\":{total_states},\"total_transitions\":{total_transitions},\
+             \"wall_ms\":{wall_ms},\"ok\":{ok}}}"
+        ));
+        println!("{out}");
+    } else {
+        for r in &runs {
+            match (r.mutation, &r.violation) {
+                (None, None) => println!(
+                    "model {:<8} {:<22} ok: {} states, {} transitions, depth {}, {} finals",
+                    r.protocol, r.config, r.states, r.transitions, r.depth, r.finals
+                ),
+                (None, Some(v)) => println!(
+                    "model {:<8} {:<22} VIOLATION: {} ({} steps)",
+                    r.protocol, r.config, v, r.trace_len
+                ),
+                (Some(m), Some(v)) => println!(
+                    "model {:<8} {:<22} [{m}] counterexample as expected: {} ({} steps)",
+                    r.protocol, r.config, v, r.trace_len
+                ),
+                (Some(m), None) => println!(
+                    "model {:<8} {:<22} [{m}] MISSED: mutated protocol scanned clean",
+                    r.protocol, r.config
+                ),
+            }
+        }
+        println!(
+            "fish model: {} run(s), {} honest states, {} honest transitions, {} ms{}",
+            runs.len(),
+            total_states,
+            total_transitions,
+            wall_ms,
+            if ok { "" } else { " — FAILED" }
+        );
+    }
+    if !ok {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     println!("fish {} — FISH grouping for time-evolving streams", env!("CARGO_PKG_VERSION"));
@@ -444,7 +707,7 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: fish <sim|deploy|compare|lint|info> [--config file.toml] [--scheme S] \
+        "usage: fish <sim|deploy|compare|lint|model|info> [--config file.toml] [--scheme S] \
          [--workload zf|mt|am] [--tuples N] [--workers N] [--zipf_z Z] [--batch N] \
          [--agg_flush_ms N] [--agg_shards N] [--agg_window_ms N] [--agg_lateness_ms N] \
          [--transport loopback|uds|tcp] [--rebalance_threshold F] \
@@ -456,7 +719,10 @@ fn usage() -> ! {
          shard), [--verify] (check against the in-process reference), \
          [--chaos kill-worker:<n|mid>,kill-shard:<ms|mid>] (scripted mid-run kills; \
          recovery must still verify exactly) and [--recovery-json PATH]\n       \
-         lint takes [--src DIR] (default rust/src) and [--json]; exits 1 on findings"
+         lint takes [--src DIR] (default rust/src) and [--json]; exits 1 on findings\n       \
+         model takes [--all] (also run the seeded-mutation suite), [--json] and \
+         [--protocol credit|recovery]; exhaustively checks the flow-control and \
+         exactly-once recovery protocols (docs/MODEL.md); exits 1 on any violation"
     );
     std::process::exit(2);
 }
@@ -478,6 +744,7 @@ fn main() -> anyhow::Result<()> {
         Some("deploy") => cmd_deploy(&args),
         Some("compare") => cmd_compare(&args),
         Some("lint") => cmd_lint(&args),
+        Some("model") => cmd_model(&args),
         Some("info") => cmd_info(&args),
         _ => usage(),
     }

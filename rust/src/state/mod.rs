@@ -14,7 +14,7 @@
 
 pub mod snapshot;
 
-pub use snapshot::ShardSnapshot;
+pub use snapshot::{snapshot_due, ShardSnapshot};
 
 use crate::{Key, WorkerId};
 use std::collections::HashMap;

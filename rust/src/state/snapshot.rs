@@ -39,6 +39,21 @@ pub const SNAP_MAGIC: [u8; 4] = *b"FSHS";
 /// Current snapshot-format version.
 pub const SNAP_VERSION: u8 = 1;
 
+/// The snapshot cadence rule: a shard that has accepted
+/// `accepted_since` flush batches since its last snapshot is due for
+/// the next one when the count reaches `every`; `every == 0` disables
+/// snapshotting entirely.
+///
+/// A one-line rule, but it is the *persistence trigger* of the
+/// exactly-once protocol, so it is shared verbatim by the rt shard
+/// loop, the simulator, and the recovery model checker
+/// ([`crate::analysis::recovery`]) — the model explores exactly the
+/// cadence the engines run.
+#[inline]
+pub fn snapshot_due(accepted_since: u64, every: u64) -> bool {
+    every > 0 && accepted_since >= every
+}
+
 /// Everything one merge shard persists per snapshot.
 #[derive(Debug, Clone)]
 pub struct ShardSnapshot {

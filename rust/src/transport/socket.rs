@@ -25,6 +25,7 @@
 
 use super::wire::{self, FlushMsg, Frame, Msg, WireError};
 use super::{FlushRx, FlushTx, LaneError, TransportKind, TupleRecv, TupleRx, TupleTx};
+use crate::aggregate::resume_cursor;
 use crate::metrics::{RecoveryLedger, WireLedger};
 use std::collections::VecDeque;
 use std::io::{self, Read, Write};
@@ -864,7 +865,9 @@ impl SocketFlushRx {
                     | Ok(None)
                     | Err(_) => return,
                 };
-                let next = resume.get(worker as usize).copied().unwrap_or(0);
+                // the shared Resume rule: first seq this shard has not
+                // absorbed, 0 for workers the cursors never covered
+                let next = resume_cursor(&resume, worker as usize);
                 let mut buf = Vec::new();
                 wire::encode_resume(worker, next, &mut buf);
                 if conn.write_all(&buf).is_err() {

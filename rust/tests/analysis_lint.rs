@@ -18,12 +18,12 @@ fn repo_path(rel: &str) -> PathBuf {
 #[test]
 fn seeded_regressions_are_flagged() {
     let report = lint_tree(&repo_path("rust/tests/fixtures/lint")).expect("scan fixtures");
-    assert_eq!(report.files_scanned, 4, "fixture set changed without updating this test");
+    assert_eq!(report.files_scanned, 6, "fixture set changed without updating this test");
     assert_eq!(report.suppressions, 0);
     assert_eq!(
         report.findings.len(),
-        4,
-        "expected exactly the four seeded findings, got: {:#?}",
+        6,
+        "expected exactly the six seeded findings, got: {:#?}",
         report.findings
     );
     // findings are sorted by (file, line, rule)
@@ -32,17 +32,27 @@ fn seeded_regressions_are_flagged() {
     assert_eq!(flush.file, "aggregate/bad_flush.rs");
     assert_eq!(flush.line, 16);
     assert!(flush.snippet.contains("drain"), "{flush:?}");
-    let obs = &report.findings[1];
+    let alloc = &report.findings[1];
+    assert_eq!(alloc.rule, "hotpath-alloc");
+    assert_eq!(alloc.file, "aggregate/bad_hotpath.rs");
+    assert_eq!(alloc.line, 17);
+    assert!(alloc.snippet.contains("to_string"), "{alloc:?}");
+    let obs = &report.findings[2];
     assert_eq!(obs.rule, "obs-clock");
     assert_eq!(obs.file, "obs/bad_instant.rs");
     assert_eq!(obs.line, 13);
     assert!(obs.snippet.contains("Instant::now"), "{obs:?}");
-    let credit = &report.findings[2];
+    let snap = &report.findings[3];
+    assert_eq!(snap.rule, "snapshot-exhaustive");
+    assert_eq!(snap.file, "state/bad_snapshot.rs");
+    assert_eq!(snap.line, 14);
+    assert!(snap.snippet.contains("Default::default"), "{snap:?}");
+    let credit = &report.findings[4];
     assert_eq!(credit.rule, "relaxed-credit-atomic");
     assert_eq!(credit.file, "transport/bad_credit.rs");
     assert_eq!(credit.line, 15);
     assert!(credit.snippet.contains("Ordering::Relaxed"), "{credit:?}");
-    let seq = &report.findings[3];
+    let seq = &report.findings[5];
     assert_eq!(seq.rule, "frame-exhaustive");
     assert_eq!(seq.file, "transport/bad_flush_seq.rs");
     assert_eq!(seq.line, 11);
@@ -63,13 +73,15 @@ fn real_tree_scans_clean() {
             .collect::<Vec<_>>()
             .join("\n")
     );
-    // the documented `// lint: sorted-ok` sites: PartialAgg::flush,
-    // windowed all-time + rolling snapshots, ShardedAgg::into_sorted,
-    // sketch-window top_count. A new suppression needs a justification
+    // the documented escape sites — `// lint: sorted-ok` at
+    // PartialAgg::flush, windowed all-time + rolling snapshots,
+    // ShardedAgg::into_sorted, sketch-window top_count; plus
+    // `// lint: alloc-ok` at the windowed pane open (combiner clone,
+    // once per window). A new suppression needs a justification
     // comment at the site AND a bump here.
     assert_eq!(
-        report.suppressions, 5,
-        "suppression count changed — audit the new/removed `lint: sorted-ok` site"
+        report.suppressions, 6,
+        "suppression count changed — audit the new/removed `lint: sorted-ok` / `lint: alloc-ok` site"
     );
 }
 
@@ -77,9 +89,11 @@ fn real_tree_scans_clean() {
 fn json_report_round_trips_the_counts() {
     let report = lint_tree(&repo_path("rust/tests/fixtures/lint")).expect("scan fixtures");
     let json = report.to_json();
-    assert!(json.contains("\"files_scanned\":4"), "{json}");
+    assert!(json.contains("\"files_scanned\":6"), "{json}");
     assert!(json.contains("\"rule\":\"unsorted-map-iteration\""), "{json}");
+    assert!(json.contains("\"rule\":\"hotpath-alloc\""), "{json}");
     assert!(json.contains("\"rule\":\"obs-clock\""), "{json}");
+    assert!(json.contains("\"rule\":\"snapshot-exhaustive\""), "{json}");
     assert!(json.contains("\"rule\":\"relaxed-credit-atomic\""), "{json}");
     assert!(json.contains("\"rule\":\"frame-exhaustive\""), "{json}");
 }

@@ -3,47 +3,69 @@
 //! each violation class (a model checker that cannot fail its
 //! invariants verifies nothing).
 //!
-//! See `rust/src/analysis/model.rs` for the protocol model and
-//! `docs/DETERMINISM.md` for the rules under check.
+//! The state/transition/depth/final counts asserted here are exact
+//! graph properties of each bounded configuration — independent of
+//! exploration order — so any change to the protocol model or the
+//! framework that alters the reachable state space fails loudly.
+//!
+//! See `rust/src/analysis/credit.rs` for the protocol model,
+//! `rust/src/analysis/model.rs` for the framework, and `docs/MODEL.md`
+//! for what is proved and within which bounds.
 
-use fish::analysis::{check, ModelConfig, ModelStats, Mutation, Violation};
+use fish::analysis::{check_credit, CheckOptions, CreditConfig, CreditMutation, Violation};
 
-fn cfg(n_senders: usize, window: u32, tuples: u32, chunk: u32, mutation: Mutation) -> ModelConfig {
-    ModelConfig { n_senders, window, tuples_per_sender: tuples, chunk, mutation, max_states: 2_000_000 }
+fn cfg(n_senders: usize, window: u32, tuples: u32, chunk: u32, mutation: CreditMutation) -> CreditConfig {
+    CreditConfig { n_senders, window, tuples_per_sender: tuples, chunk, mutation }
 }
 
-/// The bounded configurations the honest protocol must pass. Two
-/// concurrent senders cover cross-stream interleavings; the deeper
-/// single-sender runs cover long grant/flush chains; window==chunk
-/// exercises the sub-quantum-remainder case the flush rule exists for.
-fn honest_configs() -> Vec<ModelConfig> {
-    vec![
-        cfg(1, 2, 6, 1, Mutation::None),
-        cfg(1, 4, 8, 2, Mutation::None),
-        cfg(1, 5, 10, 5, Mutation::None),
-        cfg(2, 2, 3, 1, Mutation::None),
-        cfg(2, 3, 4, 2, Mutation::None),
-        cfg(2, 4, 4, 2, Mutation::None),
-    ]
+/// The bounded configurations the honest protocol must pass, with
+/// their exact (states, transitions, depth, finals). Multi-sender
+/// configs cover cross-stream interleavings; the deeper single-sender
+/// runs cover long grant/flush chains; window==chunk exercises the
+/// sub-quantum-remainder case the flush rule exists for.
+const HONEST: &[(usize, u32, u32, u32, (u64, u64, u64, u64))] = &[
+    (1, 2, 6, 1, (34, 48, 18, 3)),
+    (1, 4, 8, 2, (22, 30, 12, 3)),
+    (1, 5, 10, 5, (13, 14, 10, 5)),
+    (2, 2, 3, 1, (256, 672, 18, 9)),
+    (2, 3, 4, 2, (49, 84, 12, 4)),
+    (2, 4, 4, 2, (100, 240, 12, 9)),
+    (3, 2, 3, 1, (4096, 16128, 27, 27)),
+    (3, 2, 4, 1, (10648, 43560, 36, 27)),
+];
+
+#[test]
+fn honest_protocol_is_exhaustively_clean_with_pinned_state_spaces() {
+    let opts = CheckOptions::default();
+    let mut total_transitions = 0u64;
+    for &(n, w, t, c, (states, transitions, depth, finals)) in HONEST {
+        let config = cfg(n, w, t, c, CreditMutation::None);
+        let stats = check_credit(&config, &opts)
+            .unwrap_or_else(|cx| panic!("violation under {config:?}:\n{}", cx.render()));
+        assert_eq!(
+            (stats.states, stats.transitions, stats.depth, stats.finals),
+            (states, transitions, depth, finals),
+            "state space changed for {config:?}"
+        );
+        total_transitions += stats.transitions;
+    }
+    // the acceptance bar: a bounded run of meaningful size, checked
+    // exhaustively (every reached state passed every invariant)
+    assert!(
+        total_transitions >= 60_000,
+        "bounded run too small to mean anything: {total_transitions} transitions"
+    );
 }
 
 #[test]
-fn honest_protocol_is_exhaustively_clean() {
-    let mut total = ModelStats { states: 0, transitions: 0 };
-    for c in honest_configs() {
-        let stats = check(&c).unwrap_or_else(|v| panic!("violation under {c:?}: {v}"));
-        assert!(stats.states > 1, "trivial state space for {c:?}");
-        total.states += stats.states;
-        total.transitions += stats.transitions;
+fn honest_protocol_terminates() {
+    // second traversal proves the transition graph acyclic on the
+    // small configs — every run reaches quiescence
+    let opts = CheckOptions { check_termination: true, ..CheckOptions::default() };
+    for &(n, w, t, c) in &[(1, 2, 6, 1), (2, 3, 4, 2)] {
+        check_credit(&cfg(n, w, t, c, CreditMutation::None), &opts)
+            .unwrap_or_else(|cx| panic!("termination check failed:\n{}", cx.render()));
     }
-    // the acceptance bar: a bounded run of meaningful size, checked
-    // exhaustively (every transition's target state passed every
-    // invariant)
-    assert!(
-        total.transitions >= 10_000,
-        "bounded run too small to mean anything: {} transitions",
-        total.transitions
-    );
 }
 
 #[test]
@@ -53,43 +75,83 @@ fn skipping_the_credit_flush_deadlocks() {
     // flush-before-blocking rule the sender waits forever for a full
     // chunk of credit. This is the exact bug class
     // `flush_all_credits()` in transport/socket.rs prevents.
-    let err = check(&cfg(1, 5, 10, 5, Mutation::SkipCreditFlush))
+    let opts = CheckOptions::default();
+    let cx = check_credit(&cfg(1, 5, 10, 5, CreditMutation::SkipCreditFlush), &opts)
         .expect_err("missing flush must deadlock");
-    assert!(matches!(err, Violation::Deadlock { .. }), "wrong violation: {err}");
+    assert!(matches!(cx.violation, Violation::Deadlock), "wrong violation: {}", cx.violation);
+    assert_eq!(cx.trace.len(), 3, "shortest deadlock trace changed:\n{}", cx.render());
     // two-sender variant: the deadlock survives interleaving noise
-    let err = check(&cfg(2, 5, 10, 5, Mutation::SkipCreditFlush))
+    let cx = check_credit(&cfg(2, 5, 10, 5, CreditMutation::SkipCreditFlush), &opts)
         .expect_err("missing flush must deadlock with two streams too");
-    assert!(matches!(err, Violation::Deadlock { .. }), "wrong violation: {err}");
+    assert!(matches!(cx.violation, Violation::Deadlock), "wrong violation: {}", cx.violation);
 }
 
 #[test]
 fn double_grant_breaks_conservation() {
-    let err = check(&cfg(1, 2, 4, 1, Mutation::DoubleGrant)).expect_err("double grant must be caught");
-    assert!(
-        matches!(err, Violation::CreditLost { .. } | Violation::CreditOverflow { .. }),
-        "wrong violation: {err}"
-    );
+    let cx = check_credit(&cfg(1, 4, 8, 2, CreditMutation::DoubleGrant), &CheckOptions::default())
+        .expect_err("double grant must be caught");
+    match &cx.violation {
+        Violation::Property(p) => {
+            assert!(
+                p.property == "credit-conservation" || p.property == "credit-overflow",
+                "wrong property: {p:?}"
+            );
+        }
+        other => panic!("wrong violation: {other}"),
+    }
+    assert_eq!(cx.trace.len(), 2, "shortest counterexample changed:\n{}", cx.render());
 }
 
 #[test]
 fn dropped_credit_breaks_conservation() {
-    let err = check(&cfg(1, 2, 4, 1, Mutation::DropCredit)).expect_err("credit leak must be caught");
-    assert!(matches!(err, Violation::CreditLost { .. }), "wrong violation: {err}");
+    let cx = check_credit(&cfg(1, 4, 8, 2, CreditMutation::DropCredit), &CheckOptions::default())
+        .expect_err("credit leak must be caught");
+    match &cx.violation {
+        Violation::Property(p) => assert_eq!(p.property, "credit-conservation", "{p:?}"),
+        other => panic!("wrong violation: {other}"),
+    }
+    assert_eq!(cx.trace.len(), 2, "shortest counterexample changed:\n{}", cx.render());
 }
 
 #[test]
 fn reordered_delivery_breaks_fifo() {
     // window 4 / chunk 2 lets two chunks be in flight at once, so the
     // mutated network can deliver the newer one first
-    let err = check(&cfg(1, 4, 6, 2, Mutation::ReorderData)).expect_err("reorder must be caught");
-    assert!(matches!(err, Violation::OutOfOrder { .. }), "wrong violation: {err}");
+    let cx = check_credit(&cfg(1, 4, 8, 2, CreditMutation::ReorderData), &CheckOptions::default())
+        .expect_err("reorder must be caught");
+    match &cx.violation {
+        Violation::Property(p) => assert_eq!(p.property, "fifo-delivery", "{p:?}"),
+        other => panic!("wrong violation: {other}"),
+    }
+    // shortest path: fill the 2-chunk pipeline, then the poisoned
+    // delivery surfaces on the very next receive
+    assert_eq!(cx.trace, vec!["send 0", "send 0", "deliver 0"], "trace changed:\n{}", cx.render());
+}
+
+#[test]
+fn state_space_guard_reports_exceeded() {
+    let opts = CheckOptions { max_states: 10, ..CheckOptions::default() };
+    let cx = check_credit(&cfg(2, 2, 3, 1, CreditMutation::None), &opts)
+        .expect_err("256-state config cannot fit in 10");
+    assert!(
+        matches!(cx.violation, Violation::StateSpaceExceeded { explored: 11 }),
+        "wrong violation: {}",
+        cx.violation
+    );
 }
 
 #[test]
 fn checker_is_deterministic() {
-    for c in honest_configs() {
-        let a = check(&c).expect("run a");
-        let b = check(&c).expect("run b");
-        assert_eq!(a, b, "nondeterministic stats for {c:?}");
+    let opts = CheckOptions::default();
+    for &(n, w, t, c, _) in HONEST {
+        let config = cfg(n, w, t, c, CreditMutation::None);
+        let a = check_credit(&config, &opts).expect("run a");
+        let b = check_credit(&config, &opts).expect("run b");
+        assert_eq!(a, b, "nondeterministic stats for {config:?}");
     }
+    // counterexamples are byte-stable too
+    let config = cfg(1, 4, 8, 2, CreditMutation::DropCredit);
+    let a = check_credit(&config, &opts).expect_err("a");
+    let b = check_credit(&config, &opts).expect_err("b");
+    assert_eq!(a.render(), b.render(), "nondeterministic counterexample");
 }

@@ -1,0 +1,24 @@
+//! Seeded regression for `fish lint`: a per-batch `String` allocation
+//! inside a hot-path absorb function — at millions of tuples per
+//! second the allocator becomes the bottleneck (the ROADMAP
+//! "allocation-free hot path" inventory). This file is a lint
+//! fixture, never compiled; the self-test in
+//! `rust/tests/analysis_lint.rs` asserts the engine flags line 17.
+
+pub struct BadHotpath {
+    tags: Vec<String>,
+}
+
+impl BadHotpath {
+    /// Allocates a fresh `String` for every batch absorbed.
+    pub fn absorb(&mut self, batch: &[u64]) {
+        // building a label per call is pure allocator churn — compute
+        // it once at construction or pass a &str through
+        self.tags.push(batch.len().to_string());
+    }
+
+    /// Cold path: allocation here is fine, the rule must not fire.
+    pub fn report(&self) -> String {
+        format!("{} tags", self.tags.len())
+    }
+}

@@ -1,0 +1,16 @@
+//! Seeded regression for `fish lint`: a `ShardSnapshot` construction
+//! that hides fields behind `..` — a newly added piece of shard state
+//! would compile clean while silently skipping serialization, exactly
+//! the failure mode the recovery tests exist to prevent. This file is
+//! a lint fixture, never compiled; the self-test in
+//! `rust/tests/analysis_lint.rs` asserts the engine flags line 14.
+
+use crate::state::ShardSnapshot;
+
+impl BadSnapshot {
+    /// Carries only the cursors forward and defaults the rest — the
+    /// merge state and buffered batches silently vanish on restore.
+    pub fn checkpoint(&self) -> ShardSnapshot {
+        ShardSnapshot { shard: self.shard, expected_seq: self.expected.clone(), ..Default::default() }
+    }
+}

@@ -1,0 +1,218 @@
+//! Exhaustive bounded model check of the exactly-once flush/recovery
+//! protocol: N workers × M shards, per-lane sequence numbers, the
+//! production `FlushSequencer` embedded verbatim in the model states,
+//! snapshot-every-K persistence, crash transitions at every protocol
+//! step, and the `Resume` + unacked-suffix replay handshake.
+//!
+//! Proves, over the bounded configs below: exactly-once absorb, no
+//! lost flushes, monotone sequencer cursors, snapshot-restore
+//! convergence, and quiescence reachability. Each seeded mutation
+//! (rust/src/analysis/recovery.rs) must produce its pinned
+//! deterministic counterexample — a recovery checker that cannot
+//! catch a broken snapshot verifies nothing.
+//!
+//! The state/transition/depth/final counts are exact graph properties
+//! of each configuration, independent of exploration order. See
+//! `docs/MODEL.md` for the protocol walkthrough and the bounds.
+
+use fish::analysis::{
+    check_recovery, CheckOptions, Counterexample, RecoveryConfig, RecoveryMutation, Violation,
+};
+
+fn cfg(
+    n_workers: usize,
+    n_shards: usize,
+    tuples: u64,
+    every: u64,
+    worker_kills: u32,
+    shard_kills: u32,
+    mutation: RecoveryMutation,
+) -> RecoveryConfig {
+    RecoveryConfig {
+        n_workers,
+        n_shards,
+        tuples_per_worker: tuples,
+        snapshot_every: every,
+        worker_kills,
+        shard_kills,
+        mutation,
+    }
+}
+
+/// The bounded configurations the honest protocol must pass, with
+/// their exact (states, transitions, depth, finals). Together they
+/// cover ≥2 workers × ≥2 shards, snapshot cadences 1, 2 and 3, and a
+/// crash budget that lets a worker and a shard die at every protocol
+/// step (the 3-worker config trades the shard kill for a wider
+/// interleaving fan-out).
+const HONEST: &[(usize, usize, u64, u64, u32, u32, (u64, u64, u64, u64))] = &[
+    (2, 2, 2, 1, 1, 1, (42_244, 204_476, 26, 576)),
+    (2, 2, 3, 2, 1, 1, (71_328, 362_952, 31, 480)),
+    (2, 2, 3, 3, 1, 1, (35_508, 186_996, 28, 96)),
+    (3, 2, 2, 2, 1, 0, (28_320, 138_064, 25, 512)),
+];
+
+#[test]
+fn honest_recovery_is_exhaustively_clean_with_pinned_state_spaces() {
+    let opts = CheckOptions::default();
+    for &(w, s, t, k, wk, sk, (states, transitions, depth, finals)) in HONEST {
+        let config = cfg(w, s, t, k, wk, sk, RecoveryMutation::None);
+        let stats = check_recovery(&config, &opts)
+            .unwrap_or_else(|cx| panic!("violation under {config:?}:\n{}", cx.render()));
+        assert_eq!(
+            (stats.states, stats.transitions, stats.depth, stats.finals),
+            (states, transitions, depth, finals),
+            "state space changed for {config:?}"
+        );
+    }
+}
+
+#[test]
+fn honest_recovery_terminates() {
+    // acyclicity on the full crashy config: every quantity a cycle
+    // would need to restore (input, lane cursors, absorb ledgers, the
+    // crash budgets) moves monotonically, so every run quiesces
+    let opts = CheckOptions { check_termination: true, ..CheckOptions::default() };
+    check_recovery(&cfg(2, 2, 2, 1, 1, 1, RecoveryMutation::None), &opts)
+        .unwrap_or_else(|cx| panic!("termination check failed:\n{}", cx.render()));
+}
+
+/// The four seeded mutations with their pinned counterexamples. Both
+/// the violated property and the full shortest trace are asserted —
+/// the trace doubles as documentation of how each bug plays out.
+fn expect_property(cx: &Counterexample, property: &str, detail: &str) {
+    match &cx.violation {
+        Violation::Property(p) => {
+            assert_eq!(p.property, property, "wrong property:\n{}", cx.render());
+            assert_eq!(p.detail, detail, "wrong detail:\n{}", cx.render());
+        }
+        other => panic!("wrong violation kind: {other}"),
+    }
+}
+
+#[test]
+fn unsynced_snapshot_loses_absorbed_flushes() {
+    // the snapshot rename lands but the body never hit disk: the
+    // restored shard has the cursors and none of the absorbed state
+    let cx = check_recovery(
+        &cfg(2, 2, 2, 1, 1, 1, RecoveryMutation::SkipSnapshotFsync),
+        &CheckOptions::default(),
+    )
+    .expect_err("unsynced snapshot must be caught");
+    expect_property(
+        &cx,
+        "no-lost-flush",
+        "shard 0 cursor for worker 0 is 1 but seqs 0.. were never absorbed",
+    );
+    assert_eq!(
+        cx.trace,
+        vec![
+            "w0 folds a tuple",
+            "w0 flushes seq 0 to s0",
+            "s0 absorbs w0 seq 0",
+            "s0 begins snapshot at cursors [1, 0]",
+            "s0 commits snapshot",
+            "s0 crashes and restores from snapshot",
+        ],
+        "trace changed:\n{}",
+        cx.render()
+    );
+}
+
+#[test]
+fn resume_off_by_one_drops_the_first_unacked_batch() {
+    let cx = check_recovery(
+        &cfg(2, 2, 2, 1, 1, 1, RecoveryMutation::ResumeOffByOne),
+        &CheckOptions::default(),
+    )
+    .expect_err("off-by-one resume must be caught");
+    expect_property(
+        &cx,
+        "no-lost-flush",
+        "quiescent but shard 1 absorbed 0 of 1 batches from worker 0",
+    );
+    assert_eq!(
+        cx.trace,
+        vec![
+            "w0 folds a tuple",
+            "w0 folds a tuple",
+            "w0 flushes seq 0 to s0",
+            "w0 flushes seq 0 to s1",
+            "w1 folds a tuple",
+            "w1 folds a tuple",
+            "w1 flushes seq 0 to s0",
+            "w1 flushes seq 0 to s1",
+            "s0 absorbs w0 seq 0",
+            "s0 absorbs w1 seq 0",
+            "s1 crashes and restores cold",
+            "w0 resumes lane to s1, replays from seq 1",
+            "w1 resumes lane to s1, replays from seq 1",
+        ],
+        "trace changed:\n{}",
+        cx.render()
+    );
+}
+
+#[test]
+fn replaying_from_the_send_cursor_replays_nothing() {
+    // ignoring the Resume answer and trusting the sender's own cursor
+    // is indistinguishable from the off-by-one bug at these bounds:
+    // both skip exactly the unacked suffix
+    let cx = check_recovery(
+        &cfg(2, 2, 2, 1, 1, 1, RecoveryMutation::ReplayFromWrongCursor),
+        &CheckOptions::default(),
+    )
+    .expect_err("wrong-cursor replay must be caught");
+    expect_property(
+        &cx,
+        "no-lost-flush",
+        "quiescent but shard 1 absorbed 0 of 1 batches from worker 0",
+    );
+    assert_eq!(cx.trace.len(), 13, "trace changed:\n{}", cx.render());
+}
+
+#[test]
+fn truncated_dedup_window_double_absorbs_a_replay() {
+    // a snapshot that truncates the per-worker cursor vector forgets
+    // how far worker 0 got; the replayed seq 1 is absorbed again
+    let cx = check_recovery(
+        &cfg(2, 2, 3, 1, 1, 1, RecoveryMutation::DedupWindowTruncation),
+        &CheckOptions::default(),
+    )
+    .expect_err("truncated dedup window must be caught");
+    expect_property(&cx, "exactly-once-absorb", "shard 0 absorbed worker 0 seq 1 2 times");
+    assert_eq!(
+        cx.trace,
+        vec![
+            "w0 folds a tuple",
+            "w0 folds a tuple",
+            "w0 folds a tuple",
+            "w0 flushes seq 0 to s0",
+            "w0 flushes seq 0 to s1",
+            "w0 flushes seq 1 to s0",
+            "s0 absorbs w0 seq 0",
+            "s0 absorbs w0 seq 1",
+            "s0 begins snapshot at cursors [2, 0]",
+            "s0 commits snapshot",
+            "s0 crashes and restores from snapshot",
+            "w0 resumes lane to s0, replays from seq 1",
+            "s0 absorbs w0 seq 1",
+        ],
+        "trace changed:\n{}",
+        cx.render()
+    );
+}
+
+#[test]
+fn counterexamples_are_deterministic_and_round_trip_the_formatter() {
+    let opts = CheckOptions::default();
+    let config = cfg(2, 2, 2, 1, 1, 1, RecoveryMutation::SkipSnapshotFsync);
+    let a = check_recovery(&config, &opts).expect_err("run a");
+    let b = check_recovery(&config, &opts).expect_err("run b");
+    // byte-stable across runs
+    assert_eq!(a.render(), b.render(), "nondeterministic counterexample");
+    // and the rendering parses back into exactly its parts
+    let (head, trace) = Counterexample::parse(&a.render()).expect("rendered form must parse");
+    assert_eq!(head, a.violation.to_string());
+    assert_eq!(trace, a.trace);
+}

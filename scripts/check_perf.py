@@ -7,6 +7,7 @@ Usage:
     check_perf.py --recovery RECOVERY_JSON \
         --recovery-baseline benches/baselines/recovery_smoke.json \
         [--recovery-threshold 0.5]
+    check_perf.py --model MODEL_JSON --model-baseline scripts/model_baseline.json
 
 CURRENT_JSON is the `BENCH_hotpath.json` a `cargo bench --bench hotpath`
 run just emitted; BASELINE_JSON is `benches/baselines/hotpath_smoke.json`.
@@ -36,6 +37,15 @@ the current report but absent from the baseline fails the gate. The
 baseline is empty — the tree lints clean — so in practice any new
 finding fails; the indirection exists so a finding can be temporarily
 baselined during a multi-PR refactor without disabling the job.
+
+With --model, the gate reads `fish model --all --json` output: every
+run must be ok (honest configs clean, every seeded mutation caught
+with a counterexample), the honest sweeps must have explored at least
+min_states distinct states (so the exhaustive check cannot silently
+shrink to a trivial bound), and the whole suite must finish under
+max_wall_ms (explicit-state checking is exponential in the bounds — a
+model change that blows the state space out should be a deliberate
+decision, not a CI slowdown nobody notices).
 
 With --recovery, the gate reads the `--recovery-json` metrics a chaos
 deploy run (`fish deploy --chaos ... --recovery-json PATH`) just wrote
@@ -157,6 +167,62 @@ def check_recovery(current_path, baseline_path, threshold):
           f"{len(ceilings)} cost ceiling(s) within {threshold:.0%} headroom")
 
 
+def check_model(current_path, baseline_path):
+    """Gate `fish model --all --json` output against the model bounds."""
+    current = load(current_path)
+    baseline = load(baseline_path)
+    runs = current.get("runs")
+    if not isinstance(runs, list) or not runs:
+        print(f"error: {current_path} has no runs[]", file=sys.stderr)
+        sys.exit(2)
+    min_states = baseline.get("min_states")
+    max_wall_ms = baseline.get("max_wall_ms")
+    if min_states is None or max_wall_ms is None:
+        print(f"error: {baseline_path} needs min_states and max_wall_ms",
+              file=sys.stderr)
+        sys.exit(2)
+
+    failures = []
+    honest = [r for r in runs if r.get("mutation") is None]
+    mutated = [r for r in runs if r.get("mutation") is not None]
+    for r in runs:
+        if r.get("ok"):
+            continue
+        if r.get("mutation") is None:
+            failures.append(
+                f"{r['protocol']} {r['config']}: honest run found a violation: "
+                f"{r.get('violation')}")
+        else:
+            failures.append(
+                f"{r['protocol']} {r['config']} [{r['mutation']}]: seeded "
+                "mutation scanned clean — the checker missed the bug")
+    if not mutated:
+        failures.append("no mutation runs in the report — was --all passed?")
+
+    total_states = current.get("total_states", 0)
+    wall_ms = current.get("wall_ms")
+    if total_states < min_states:
+        failures.append(
+            f"honest sweeps explored {total_states} states, below the "
+            f"{min_states} floor — the exhaustive check shrank")
+    if wall_ms is None:
+        failures.append(f"wall_ms missing from {current_path}")
+    elif wall_ms > max_wall_ms:
+        failures.append(
+            f"model suite took {wall_ms} ms, over the {max_wall_ms} ms "
+            "ceiling — a state-space blow-up should be a deliberate choice")
+
+    if failures:
+        print("model gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print(f"model gate ok: {len(honest)} honest run(s) clean "
+          f"({total_states} states explored, floor {min_states}), "
+          f"{len(mutated)} seeded mutation(s) caught, "
+          f"{wall_ms} ms (ceiling {max_wall_ms})")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", nargs="?")
@@ -173,6 +239,13 @@ def main():
                     default="scripts/lint_baseline.json",
                     help="checked-in lint findings baseline "
                          "(default scripts/lint_baseline.json)")
+    ap.add_argument("--model", metavar="MODEL_JSON",
+                    help="gate `fish model --all --json` output instead "
+                         "of perf")
+    ap.add_argument("--model-baseline", metavar="BASELINE_JSON",
+                    default="scripts/model_baseline.json",
+                    help="checked-in model-check bounds "
+                         "(default scripts/model_baseline.json)")
     ap.add_argument("--recovery", metavar="RECOVERY_JSON",
                     help="gate `fish deploy --recovery-json` output "
                          "instead of perf")
@@ -187,6 +260,9 @@ def main():
 
     if args.lint:
         check_lint(args.lint, args.lint_baseline)
+        return
+    if args.model:
+        check_model(args.model, args.model_baseline)
         return
     if args.recovery:
         check_recovery(args.recovery, args.recovery_baseline,
